@@ -1,0 +1,154 @@
+"""AOT compiler: lower every Layer-2 entrypoint to HLO *text* + manifest.json.
+
+Interchange format is HLO text, NOT a serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids which the rust side's xla_extension
+0.5.1 rejects (``proto.id() <= INT_MAX``).  The HLO text parser reassigns ids
+and round-trips cleanly (see /opt/xla-example/README.md).
+
+Run once via ``make artifacts``:
+
+    cd python && python -m compile.aot --out-dir ../artifacts
+
+The shape grid below mirrors ``rust/src/data/registry.rs`` — one (batch,
+features) combo per dataset/batch-size pair actually used by the experiment
+harness.  ``manifest.json`` maps entrypoint x shape -> file + parameter
+shapes so the rust runtime can load and type-check executables without
+parsing HLO itself.
+"""
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# ---------------------------------------------------------------------------
+# Shape grid — keep in sync with rust/src/data/registry.rs
+# ---------------------------------------------------------------------------
+
+#: feature dimensions of the scaled dataset stand-ins (DESIGN.md §3)
+FEATURE_DIMS = (18, 22, 28, 54, 100, 128, 256, 512)
+
+#: mini-batch sizes used by the tables (200/1000) and figures (500/1000);
+#: 1000 doubles as the chunk size for full-dataset objective/gradient sweeps
+BATCH_SIZES = (200, 500, 1000)
+
+F32 = jnp.float32
+
+
+def _vec(n):
+    return jax.ShapeDtypeStruct((n,), F32)
+
+
+def _mat(b, n):
+    return jax.ShapeDtypeStruct((b, n), F32)
+
+
+S1 = jax.ShapeDtypeStruct((1,), F32)
+
+
+def entrypoints(b: int, n: int):
+    """(name, fn, example_args) for every module lowered at shape (b, n)."""
+    w, x, y, m = _vec(n), _mat(b, n), _vec(b), _vec(b)
+    return [
+        ("grad", model.batch_grad, (w, x, y, m, S1, S1)),
+        ("obj", model.batch_obj, (w, x, y, m, S1, S1)),
+        ("loss_sum", model.loss_sum, (w, x, y, m)),
+        ("mbsgd", model.mbsgd_step, (w, x, y, m, S1, S1, S1)),
+        ("sag", model.sag_step, (w, x, y, m, S1, S1, S1, w, w, S1)),
+        ("saga", model.saga_step, (w, x, y, m, S1, S1, S1, w, w, S1)),
+        ("svrg", model.svrg_step, (w, w, w, x, y, m, S1, S1, S1)),
+        ("saag2", model.saag2_step, (w, x, y, m, S1, S1, S1, w, S1, S1)),
+    ]
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def shape_list(args):
+    return [list(a.shape) for a in args]
+
+
+def lower_all(out_dir: str, dims, batches, quiet: bool = False) -> dict:
+    manifest = {"format": "hlo-text", "dtype": "f32", "return_tuple": True,
+                "entries": {}}
+    todo = [(b, n) for n in dims for b in batches]
+    t0 = time.time()
+    for idx, (b, n) in enumerate(todo):
+        for name, fn, args in entrypoints(b, n):
+            key = f"{name}_B{b}_n{n}"
+            fname = f"{key}.hlo.txt"
+            lowered = jax.jit(fn).lower(*args)
+            text = to_hlo_text(lowered)
+            with open(os.path.join(out_dir, fname), "w") as f:
+                f.write(text)
+            manifest["entries"][key] = {
+                "entrypoint": name,
+                "batch": b,
+                "features": n,
+                "file": fname,
+                "param_shapes": shape_list(args),
+                "sha256": hashlib.sha256(text.encode()).hexdigest()[:16],
+            }
+        if not quiet:
+            print(f"[aot] ({idx + 1}/{len(todo)}) B={b} n={n} "
+                  f"({time.time() - t0:.1f}s elapsed)", file=sys.stderr)
+    return manifest
+
+
+def write_tsv(manifest: dict, out_dir: str) -> None:
+    """The rust-side manifest: 6-column TSV (see rust/src/runtime/manifest.rs).
+
+    Kept alongside manifest.json because the rust build is offline and
+    dependency-minimal (no JSON parser); a TSV is the honest minimum.
+    """
+    lines = ["# samplex-manifest v1 format=hlo-text dtype=f32 return_tuple=1"]
+    for key in sorted(manifest["entries"]):
+        e = manifest["entries"][key]
+        shapes = ",".join("x".join(str(d) for d in s) if s else "1"
+                          for s in e["param_shapes"])
+        lines.append(
+            f"{key}\t{e['entrypoint']}\t{e['batch']}\t{e['features']}\t"
+            f"{e['file']}\t{shapes}"
+        )
+    with open(os.path.join(out_dir, "manifest.tsv"), "w") as f:
+        f.write("\n".join(lines) + "\n")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--dims", default=",".join(map(str, FEATURE_DIMS)),
+                    help="comma-separated feature dims to lower")
+    ap.add_argument("--batches", default=",".join(map(str, BATCH_SIZES)))
+    ap.add_argument("--quiet", action="store_true")
+    args = ap.parse_args()
+
+    dims = [int(d) for d in args.dims.split(",") if d]
+    batches = [int(b) for b in args.batches.split(",") if b]
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest = lower_all(args.out_dir, dims, batches, quiet=args.quiet)
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1, sort_keys=True)
+    write_tsv(manifest, args.out_dir)
+    print(f"[aot] wrote {len(manifest['entries'])} modules + manifest.{{json,tsv}} "
+          f"to {args.out_dir}", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,142 @@
+"""Layer-1 Pallas kernels: the compute hot-spot of l2-regularized logistic ERM.
+
+Two kernels, both tiled over the mini-batch (row) dimension so each row tile of
+``X`` streams through VMEM exactly once per call — the TPU analogue of the
+paper's "access each datum once, contiguously":
+
+* ``logreg_grad_data``  — data term of the mini-batch gradient,
+  ``g = X^T ( sigmoid(-y * (X @ w)) * (-y) * mask ) * scale``.
+* ``logreg_loss_sum``   — masked logistic loss sum,
+  ``L = sum_i mask_i * log(1 + exp(-y_i * x_i . w))``.
+
+The regularization term ``C * w`` (an O(n) axpy) is applied by the Layer-2
+model so the kernels stay pure data-term reductions.
+
+Kernels MUST run with ``interpret=True``: this session's PJRT plugin is
+CPU-only and real TPU lowering would emit a Mosaic custom-call it cannot
+execute.  Interpret mode lowers the grid to plain HLO, which round-trips
+through the HLO-text AOT path (see ``aot.py``).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Row-tile size.  100 divides every batch size used by the dataset registry
+# (200/500/1000); odd batch sizes fall back to a single tile.
+DEFAULT_TILE = 100
+
+
+def _pick_tile(batch: int) -> int:
+    """Largest row tile that exactly divides ``batch`` (no remainder blocks)."""
+    if batch <= 0:
+        raise ValueError(f"batch must be positive, got {batch}")
+    for tile in (256, 200, 128, DEFAULT_TILE, 64, 50, 32, 25, 16, 10, 8, 5, 4, 2):
+        if batch % tile == 0 and tile <= batch:
+            return tile
+    return batch
+
+
+def _grad_kernel(x_ref, y_ref, mask_ref, w_ref, scale_ref, o_ref):
+    """One row tile: z = X@w; r = sigmoid(-y z) * (-y) * mask * scale; g += X^T r."""
+    i = pl.program_id(0)
+    x = x_ref[...]                      # (T, n) VMEM-resident row tile
+    w = w_ref[...]                      # (n,)   resident across the grid
+    z = x @ w                           # (T,)   first matvec (MXU)
+    y = y_ref[...]
+    m = mask_ref[...]
+    s = jax.nn.sigmoid(-y * z)          # fused elementwise (VPU)
+    r = (-y) * s * m * scale_ref[0]     # (T,)
+    g = r @ x                           # (n,)   second matvec, same tile of X
+
+    @pl.when(i == 0)
+    def _init():
+        o_ref[...] = g
+
+    @pl.when(i > 0)
+    def _acc():
+        o_ref[...] += g
+
+
+def _loss_kernel(x_ref, y_ref, mask_ref, w_ref, o_ref):
+    """One row tile of the masked logistic loss sum (numerically stable)."""
+    i = pl.program_id(0)
+    x = x_ref[...]
+    w = w_ref[...]
+    z = x @ w
+    y = y_ref[...]
+    m = mask_ref[...]
+    # log(1 + exp(-yz)) == logaddexp(0, -yz): stable for large |yz|.
+    loss = jnp.sum(jnp.logaddexp(0.0, -y * z) * m)
+
+    @pl.when(i == 0)
+    def _init():
+        o_ref[...] = loss[None]
+
+    @pl.when(i > 0)
+    def _acc():
+        o_ref[...] += loss[None]
+
+
+@functools.partial(jax.jit, static_argnames=("tile",))
+def logreg_grad_data(x, y, mask, w, scale, tile: int | None = None):
+    """Data term of the mini-batch logistic gradient via the Pallas kernel.
+
+    Args:
+      x:     (B, n) f32 mini-batch rows.
+      y:     (B,)   f32 labels in {-1, +1} (padded rows: value irrelevant).
+      mask:  (B,)   f32 1.0 for real rows, 0.0 for padding.
+      w:     (n,)   f32 parameter vector.
+      scale: (1,)   f32 normalization, typically 1/sum(mask).
+      tile:  row-tile override (must divide B).
+
+    Returns: (n,) f32 gradient data term (no regularization).
+    """
+    b, n = x.shape
+    t = tile if tile is not None else _pick_tile(b)
+    if b % t != 0:
+        raise ValueError(f"tile {t} does not divide batch {b}")
+    grid = (b // t,)
+    return pl.pallas_call(
+        _grad_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((t, n), lambda i: (i, 0)),
+            pl.BlockSpec((t,), lambda i: (i,)),
+            pl.BlockSpec((t,), lambda i: (i,)),
+            pl.BlockSpec((n,), lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((n,), lambda i: (0,)),
+        out_shape=jax.ShapeDtypeStruct((n,), x.dtype),
+        interpret=True,
+    )(x, y, mask, w, scale)
+
+
+@functools.partial(jax.jit, static_argnames=("tile",))
+def logreg_loss_sum(x, y, mask, w, tile: int | None = None):
+    """Masked logistic loss sum over a mini-batch via the Pallas kernel.
+
+    Returns: (1,) f32 — sum_i mask_i * log(1 + exp(-y_i x_i.w)).
+    """
+    b, n = x.shape
+    t = tile if tile is not None else _pick_tile(b)
+    if b % t != 0:
+        raise ValueError(f"tile {t} does not divide batch {b}")
+    grid = (b // t,)
+    return pl.pallas_call(
+        _loss_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((t, n), lambda i: (i, 0)),
+            pl.BlockSpec((t,), lambda i: (i,)),
+            pl.BlockSpec((t,), lambda i: (i,)),
+            pl.BlockSpec((n,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((1,), lambda i: (0,)),
+        out_shape=jax.ShapeDtypeStruct((1,), x.dtype),
+        interpret=True,
+    )(x, y, mask, w)

@@ -1,0 +1,36 @@
+"""Pure-jnp oracles for the Pallas kernels — the CORE correctness signal.
+
+Every kernel in ``logreg.py`` must match these references (pytest +
+hypothesis sweeps in ``python/tests/test_kernel.py``).  The rust native math
+backend (``rust/src/math``) implements the same formulas and is cross-checked
+against the AOT artifacts in rust integration tests, closing the loop:
+
+    pallas kernel  ==  ref.py  ==  rust/src/math  ==  artifacts/*.hlo.txt
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def logreg_grad_data_ref(x, y, mask, w, scale):
+    """(n,) data term: X^T( sigmoid(-y Xw) * (-y) * mask ) * scale."""
+    z = x @ w
+    s = 1.0 / (1.0 + jnp.exp(y * z))          # sigmoid(-y z)
+    r = (-y) * s * mask * scale[0]
+    return r @ x
+
+
+def logreg_loss_sum_ref(x, y, mask, w):
+    """(1,) masked logistic loss sum."""
+    z = x @ w
+    return jnp.sum(jnp.logaddexp(0.0, -y * z) * mask)[None]
+
+
+def batch_grad_ref(w, x, y, mask, inv_cnt, c):
+    """Full mini-batch gradient incl. l2 term: data_term + C w."""
+    return logreg_grad_data_ref(x, y, mask, w, inv_cnt) + c[0] * w
+
+
+def batch_obj_ref(w, x, y, mask, inv_cnt, c):
+    """Mini-batch objective: mean masked loss + (C/2)||w||^2."""
+    return logreg_loss_sum_ref(x, y, mask, w)[0] * inv_cnt[0] + 0.5 * c[0] * jnp.dot(w, w)

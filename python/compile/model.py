@@ -1,0 +1,142 @@
+"""Layer-2 JAX model: l2-regularized logistic ERM + fused solver update steps.
+
+Every public function here is a pure, shape-static jax function suitable for
+``jax.jit(...).lower(...)`` — ``aot.py`` lowers each one to HLO text per
+(batch, features) shape used by the rust dataset registry, and the rust
+coordinator executes them through PJRT.  Python never runs at training time.
+
+Conventions (all f32):
+  w        (n,)   parameter vector
+  x        (B, n) mini-batch rows (padded to the static batch size)
+  y        (B,)   labels in {-1, +1}
+  mask     (B,)   1.0 real row / 0.0 padding — padding is *exact*, not
+                  approximate: padded rows contribute zero loss and gradient
+  inv_cnt  (1,)   1 / (number of real rows)   == 1/sum(mask)
+  c        (1,)   l2 regularization coefficient C
+  lr       (1,)   step size alpha
+  inv_m    (1,)   1/m where m = number of mini-batches (SAG/SAGA/SAAG-II)
+
+Solver state vectors (SAG/SAGA ``yj``/``avg``, SVRG ``mu``/``w_snap``,
+SAAG-II ``acc``) are all (n,) and owned by the rust coordinator; the fused
+steps return the refreshed state so the round trip is one PJRT call per
+inner iteration.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .kernels.logreg import logreg_grad_data, logreg_loss_sum
+
+__all__ = [
+    "batch_grad",
+    "batch_obj",
+    "loss_sum",
+    "mbsgd_step",
+    "sag_step",
+    "saga_step",
+    "svrg_step",
+    "saag2_step",
+]
+
+
+# --------------------------------------------------------------------------
+# Core quantities
+# --------------------------------------------------------------------------
+
+def batch_grad(w, x, y, mask, inv_cnt, c):
+    """Mini-batch gradient of eq.(3): (1/|B|) sum_i grad f_i(w) + C w."""
+    return (logreg_grad_data(x, y, mask, w, inv_cnt) + c[0] * w,)
+
+
+def batch_obj(w, x, y, mask, inv_cnt, c):
+    """Mini-batch objective of eq.(3): mean masked logistic loss + (C/2)||w||^2.
+
+    This is what the backtracking line search evaluates (paper §4.1: the
+    line search is performed "approximately only using the selected
+    mini-batch").
+    """
+    data = logreg_loss_sum(x, y, mask, w)[0] * inv_cnt[0]
+    return (data + 0.5 * c[0] * jnp.dot(w, w),)
+
+
+def loss_sum(w, x, y, mask):
+    """Raw masked loss sum — rust chunks the full dataset through this to
+    evaluate the eq.(2) objective (adds C/2||w||^2 and divides by l itself)."""
+    return (logreg_loss_sum(x, y, mask, w)[0],)
+
+
+def _g(w, x, y, mask, inv_cnt, c):
+    return logreg_grad_data(x, y, mask, w, inv_cnt) + c[0] * w
+
+
+# --------------------------------------------------------------------------
+# Fused solver steps (one PJRT call per inner iteration)
+# --------------------------------------------------------------------------
+
+def mbsgd_step(w, x, y, mask, inv_cnt, c, lr):
+    """MBSGD: w <- w - alpha * g_j(w)."""
+    g = _g(w, x, y, mask, inv_cnt, c)
+    return (w - lr[0] * g,)
+
+
+def sag_step(w, x, y, mask, inv_cnt, c, lr, yj, avg, inv_m):
+    """Mini-batch SAG (Schmidt et al. 2016, per-batch gradient memory):
+
+        avg' = avg + (g_j(w) - y_j) / m
+        y_j' = g_j(w)
+        w'   = w - alpha * avg'
+
+    Returns (w', y_j', avg').
+    """
+    g = _g(w, x, y, mask, inv_cnt, c)
+    avg_new = avg + (g - yj) * inv_m[0]
+    return (w - lr[0] * avg_new, g, avg_new)
+
+
+def saga_step(w, x, y, mask, inv_cnt, c, lr, yj, avg, inv_m):
+    """Mini-batch SAGA (Defazio et al. 2014):
+
+        w'   = w - alpha * (g_j(w) - y_j + avg)
+        avg' = avg + (g_j(w) - y_j) / m
+        y_j' = g_j(w)
+
+    Returns (w', y_j', avg').
+    """
+    g = _g(w, x, y, mask, inv_cnt, c)
+    w_new = w - lr[0] * (g - yj + avg)
+    avg_new = avg + (g - yj) * inv_m[0]
+    return (w_new, g, avg_new)
+
+
+def svrg_step(w, w_snap, mu, x, y, mask, inv_cnt, c, lr):
+    """SVRG inner step (Johnson & Zhang 2013):
+
+        w' = w - alpha * (g_j(w) - g_j(w_snap) + mu)
+
+    ``mu`` is the full gradient at the snapshot, maintained by rust via the
+    chunked ``batch_grad`` entrypoint.  Reads the same X tile twice through
+    the kernel — still one HBM pass per matvec pair, fused in one module.
+    """
+    g = _g(w, x, y, mask, inv_cnt, c)
+    g_snap = _g(w_snap, x, y, mask, inv_cnt, c)
+    return (w - lr[0] * (g - g_snap + mu),)
+
+
+def saag2_step(w, x, y, mask, inv_cnt, c, lr, acc, coeff, inv_m):
+    """SAAG-II (reconstruction of Chauhan et al., ACML 2017 — paper ref [3]).
+
+    Epoch-accumulated adjusted average: with ``acc = sum_{k<j} g_k(w^k)`` over
+    the current epoch and ``coeff = (m - j)/m``:
+
+        d_j  = acc/m + coeff * g_j(w)        (biased epoch average, the
+                                              remaining m-j batches proxied
+                                              by the current gradient)
+        acc' = acc + g_j(w)
+        w'   = w - alpha * d_j
+
+    Returns (w', acc').  Rust resets ``acc`` to zero at each epoch start.
+    See DESIGN.md §6 for why a faithful-behaviour reconstruction suffices.
+    """
+    g = _g(w, x, y, mask, inv_cnt, c)
+    d = acc * inv_m[0] + coeff[0] * g
+    return (w - lr[0] * d, acc + g)

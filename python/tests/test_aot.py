@@ -1,0 +1,57 @@
+"""AOT lowering: manifest structure, HLO-text validity, shape bookkeeping."""
+import json
+import os
+
+import pytest
+
+from compile import aot
+
+
+@pytest.fixture(scope="module")
+def small_grid(tmp_path_factory):
+    out = str(tmp_path_factory.mktemp("artifacts"))
+    manifest = aot.lower_all(out, dims=[6], batches=[20], quiet=True)
+    with open(os.path.join(out, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    return out, manifest
+
+
+EXPECTED_ENTRYPOINTS = {"grad", "obj", "loss_sum", "mbsgd", "sag", "saga",
+                        "svrg", "saag2"}
+
+
+def test_manifest_covers_all_entrypoints(small_grid):
+    _, manifest = small_grid
+    names = {e["entrypoint"] for e in manifest["entries"].values()}
+    assert names == EXPECTED_ENTRYPOINTS
+    assert len(manifest["entries"]) == len(EXPECTED_ENTRYPOINTS)
+
+
+def test_hlo_text_is_parseable_entry(small_grid):
+    out, manifest = small_grid
+    for e in manifest["entries"].values():
+        text = open(os.path.join(out, e["file"])).read()
+        assert "ENTRY" in text and "ROOT" in text, e["file"]
+        # interchange must be text, never a serialized proto blob
+        assert text.isprintable() or "\n" in text
+
+
+def test_param_shapes_match_convention(small_grid):
+    _, manifest = small_grid
+    g = manifest["entries"]["grad_B20_n6"]
+    assert g["param_shapes"] == [[6], [20, 6], [20], [20], [1], [1]]
+    s = manifest["entries"]["saga_B20_n6"]
+    assert s["param_shapes"][-3:] == [[6], [6], [1]]
+
+
+def test_keys_encode_shape(small_grid):
+    _, manifest = small_grid
+    for key, e in manifest["entries"].items():
+        assert key == f"{e['entrypoint']}_B{e['batch']}_n{e['features']}"
+
+
+def test_format_fields(small_grid):
+    _, manifest = small_grid
+    assert manifest["format"] == "hlo-text"
+    assert manifest["dtype"] == "f32"
+    assert manifest["return_tuple"] is True

@@ -1,0 +1,188 @@
+"""Pallas kernel vs pure-jnp oracle — the CORE correctness signal.
+
+Hypothesis sweeps shapes, masks, tiles and value ranges; every property
+asserts allclose against ``kernels.ref``.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+from compile.kernels import ref
+from compile.kernels.logreg import (
+    DEFAULT_TILE,
+    _pick_tile,
+    logreg_grad_data,
+    logreg_loss_sum,
+)
+
+RTOL = 2e-5
+ATOL = 1e-5
+
+
+def _mk(rng, b, n, mask_kind="full"):
+    x = rng.normal(size=(b, n)).astype(np.float32)
+    y = rng.choice([-1.0, 1.0], size=b).astype(np.float32)
+    if mask_kind == "full":
+        mask = np.ones(b, np.float32)
+    elif mask_kind == "tail":
+        keep = max(1, b - rng.integers(0, b))
+        mask = np.zeros(b, np.float32)
+        mask[:keep] = 1.0
+    else:  # random
+        mask = rng.choice([0.0, 1.0], size=b).astype(np.float32)
+        if mask.sum() == 0:
+            mask[0] = 1.0
+    w = rng.normal(size=n).astype(np.float32)
+    scale = np.array([1.0 / mask.sum()], np.float32)
+    return map(jnp.asarray, (x, y, mask, w, scale))
+
+
+# ---------------------------------------------------------------------------
+# Deterministic spot checks
+# ---------------------------------------------------------------------------
+
+class TestGradKernel:
+    @pytest.mark.parametrize("b,n", [(200, 28), (500, 18), (1000, 54), (100, 512)])
+    def test_matches_ref_registry_shapes(self, b, n):
+        x, y, mask, w, scale = _mk(np.random.default_rng(b * n), b, n)
+        got = logreg_grad_data(x, y, mask, w, scale)
+        want = ref.logreg_grad_data_ref(x, y, mask, w, scale)
+        assert_allclose(got, want, rtol=RTOL, atol=ATOL)
+
+    @pytest.mark.parametrize("mask_kind", ["tail", "random"])
+    def test_masked_rows_contribute_nothing(self, mask_kind):
+        rng = np.random.default_rng(7)
+        x, y, mask, w, scale = _mk(rng, 200, 22, mask_kind)
+        got = logreg_grad_data(x, y, mask, w, scale)
+        # corrupting masked rows must not change the gradient
+        x2 = np.asarray(x).copy()
+        x2[np.asarray(mask) == 0.0] = 1e6
+        got2 = logreg_grad_data(jnp.asarray(x2), y, mask, w, scale)
+        assert_allclose(got, got2, rtol=0, atol=0)
+
+    def test_explicit_tile_equals_default(self):
+        x, y, mask, w, scale = _mk(np.random.default_rng(3), 200, 28)
+        a = logreg_grad_data(x, y, mask, w, scale)
+        b = logreg_grad_data(x, y, mask, w, scale, tile=200)
+        c = logreg_grad_data(x, y, mask, w, scale, tile=50)
+        assert_allclose(a, b, rtol=RTOL, atol=ATOL)
+        assert_allclose(a, c, rtol=RTOL, atol=ATOL)
+
+    def test_non_dividing_tile_raises(self):
+        x, y, mask, w, scale = _mk(np.random.default_rng(3), 200, 8)
+        with pytest.raises(ValueError):
+            logreg_grad_data(x, y, mask, w, scale, tile=3)
+
+    def test_zero_w_gives_half_sigmoid_gradient(self):
+        # at w=0, sigmoid(-y*0)=0.5, so g = -0.5 * mean(y_i x_i)
+        rng = np.random.default_rng(11)
+        x, y, mask, w, scale = _mk(rng, 100, 10)
+        w = jnp.zeros_like(w)
+        got = logreg_grad_data(x, y, mask, w, scale)
+        want = -(0.5 * np.asarray(y)[:, None] * np.asarray(x)).mean(axis=0)
+        assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+class TestLossKernel:
+    @pytest.mark.parametrize("b,n", [(200, 28), (500, 100), (1000, 18)])
+    def test_matches_ref(self, b, n):
+        x, y, mask, w, _ = _mk(np.random.default_rng(b + n), b, n)
+        got = logreg_loss_sum(x, y, mask, w)
+        want = ref.logreg_loss_sum_ref(x, y, mask, w)
+        assert_allclose(got, want, rtol=RTOL, atol=ATOL)
+
+    def test_numerical_stability_large_margin(self):
+        # |y z| huge: naive log(1+exp(.)) overflows; logaddexp must not
+        n = 8
+        x = jnp.full((100, n), 100.0, jnp.float32)
+        w = jnp.full((n,), 100.0, jnp.float32)
+        y = jnp.concatenate([jnp.ones(50), -jnp.ones(50)]).astype(jnp.float32)
+        mask = jnp.ones(100, jnp.float32)
+        got = np.asarray(logreg_loss_sum(x, y, mask, w))
+        assert np.isfinite(got).all()
+        want = np.asarray(ref.logreg_loss_sum_ref(x, y, mask, w))
+        assert_allclose(got, want, rtol=1e-6)
+
+    def test_loss_at_zero_w_is_log2(self):
+        x, y, mask, w, _ = _mk(np.random.default_rng(5), 100, 12)
+        got = logreg_loss_sum(x, y, mask, jnp.zeros_like(w))
+        assert_allclose(got, [100 * np.log(2.0)], rtol=1e-6)
+
+
+class TestTilePicker:
+    @pytest.mark.parametrize("b", [1, 2, 7, 100, 200, 500, 737, 1000, 4096])
+    def test_tile_divides(self, b):
+        t = _pick_tile(b)
+        assert b % t == 0 and 1 <= t <= max(b, 1)
+
+    def test_registry_batches_use_big_tiles(self):
+        assert _pick_tile(200) == 200
+        assert _pick_tile(500) == 100
+        assert _pick_tile(1000) == 200
+        assert DEFAULT_TILE == 100
+
+    def test_rejects_nonpositive(self):
+        with pytest.raises(ValueError):
+            _pick_tile(0)
+
+
+# ---------------------------------------------------------------------------
+# Hypothesis property sweeps
+# ---------------------------------------------------------------------------
+
+@st.composite
+def problem(draw, max_b=64, max_n=48):
+    b = draw(st.integers(1, max_b))
+    n = draw(st.integers(1, max_n))
+    seed = draw(st.integers(0, 2**31 - 1))
+    mask_kind = draw(st.sampled_from(["full", "tail", "random"]))
+    return b, n, seed, mask_kind
+
+
+@settings(max_examples=40, deadline=None)
+@given(problem())
+def test_grad_property_sweep(p):
+    b, n, seed, mask_kind = p
+    x, y, mask, w, scale = _mk(np.random.default_rng(seed), b, n, mask_kind)
+    got = logreg_grad_data(x, y, mask, w, scale)
+    want = ref.logreg_grad_data_ref(x, y, mask, w, scale)
+    assert_allclose(got, want, rtol=5e-5, atol=5e-5)
+
+
+@settings(max_examples=40, deadline=None)
+@given(problem())
+def test_loss_property_sweep(p):
+    b, n, seed, mask_kind = p
+    x, y, mask, w, _ = _mk(np.random.default_rng(seed), b, n, mask_kind)
+    got = logreg_loss_sum(x, y, mask, w)
+    want = ref.logreg_loss_sum_ref(x, y, mask, w)
+    assert_allclose(got, want, rtol=5e-5, atol=5e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(problem(max_b=32, max_n=24), st.floats(1e-4, 10.0))
+def test_grad_is_gradient_of_obj(p, c_val):
+    """Finite-difference check: batch_grad is d(batch_obj)/dw."""
+    from compile import model
+
+    b, n, seed, _ = p
+    x, y, mask, w, scale = _mk(np.random.default_rng(seed), b, n, "full")
+    c = jnp.array([c_val], jnp.float32)
+
+    def obj64(wv):
+        z = np.asarray(x, np.float64) @ wv
+        yv = np.asarray(y, np.float64)
+        return (np.logaddexp(0, -yv * z).mean()
+                + 0.5 * float(c[0]) * wv @ wv)
+
+    g = np.asarray(model.batch_grad(w, x, y, mask, scale, c)[0], np.float64)
+    w64 = np.asarray(w, np.float64)
+    eps = 1e-6
+    for k in range(min(n, 4)):
+        e = np.zeros(n)
+        e[k] = eps
+        fd = (obj64(w64 + e) - obj64(w64 - e)) / (2 * eps)
+        assert abs(fd - g[k]) < 5e-3 * max(1.0, abs(fd))

@@ -1,0 +1,169 @@
+"""Layer-2 solver-step algebra vs independent numpy references.
+
+The fused steps in ``model.py`` are the exact update rules of DESIGN.md §6;
+each is re-derived here in plain numpy from the ``ref`` gradient oracle.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from numpy.testing import assert_allclose
+
+from compile import model
+from compile.kernels import ref
+
+RTOL, ATOL = 2e-5, 2e-5
+
+
+@pytest.fixture
+def prob():
+    rng = np.random.default_rng(42)
+    b, n = 100, 16
+    x = jnp.asarray(rng.normal(size=(b, n)).astype(np.float32))
+    y = jnp.asarray(rng.choice([-1.0, 1.0], b).astype(np.float32))
+    mask = jnp.ones(b, jnp.float32)
+    w = jnp.asarray(rng.normal(size=n).astype(np.float32))
+    ic = jnp.array([1.0 / b], jnp.float32)
+    c = jnp.array([0.1], jnp.float32)
+    lr = jnp.array([0.05], jnp.float32)
+    return x, y, mask, w, ic, c, lr, rng
+
+
+def _gref(w, x, y, mask, ic, c):
+    return np.asarray(ref.batch_grad_ref(w, x, y, mask, ic, c))
+
+
+class TestMbsgd:
+    def test_update(self, prob):
+        x, y, mask, w, ic, c, lr, _ = prob
+        (w2,) = model.mbsgd_step(w, x, y, mask, ic, c, lr)
+        want = np.asarray(w) - 0.05 * _gref(w, x, y, mask, ic, c)
+        assert_allclose(w2, want, rtol=RTOL, atol=ATOL)
+
+    def test_zero_lr_is_identity(self, prob):
+        x, y, mask, w, ic, c, _, _ = prob
+        (w2,) = model.mbsgd_step(w, x, y, mask, ic, c, jnp.zeros(1))
+        assert_allclose(w2, w, rtol=0, atol=0)
+
+    def test_descends_objective(self, prob):
+        x, y, mask, w, ic, c, _, _ = prob
+        lr = jnp.array([0.01], jnp.float32)
+        (o0,) = model.batch_obj(w, x, y, mask, ic, c)
+        (w2,) = model.mbsgd_step(w, x, y, mask, ic, c, lr)
+        (o1,) = model.batch_obj(w2, x, y, mask, ic, c)
+        assert float(o1) < float(o0)
+
+
+class TestSag:
+    def test_update(self, prob):
+        x, y, mask, w, ic, c, lr, rng = prob
+        n = w.shape[0]
+        yj = jnp.asarray(rng.normal(size=n).astype(np.float32))
+        avg = jnp.asarray(rng.normal(size=n).astype(np.float32))
+        inv_m = jnp.array([1.0 / 8], jnp.float32)
+        w2, yj2, avg2 = model.sag_step(w, x, y, mask, ic, c, lr, yj, avg, inv_m)
+        g = _gref(w, x, y, mask, ic, c)
+        avg_want = np.asarray(avg) + (g - np.asarray(yj)) / 8
+        assert_allclose(avg2, avg_want, rtol=RTOL, atol=ATOL)
+        assert_allclose(yj2, g, rtol=RTOL, atol=ATOL)
+        assert_allclose(w2, np.asarray(w) - 0.05 * avg_want, rtol=RTOL, atol=ATOL)
+
+
+class TestSaga:
+    def test_update(self, prob):
+        x, y, mask, w, ic, c, lr, rng = prob
+        n = w.shape[0]
+        yj = jnp.asarray(rng.normal(size=n).astype(np.float32))
+        avg = jnp.asarray(rng.normal(size=n).astype(np.float32))
+        inv_m = jnp.array([0.125], jnp.float32)
+        w2, yj2, avg2 = model.saga_step(w, x, y, mask, ic, c, lr, yj, avg, inv_m)
+        g = _gref(w, x, y, mask, ic, c)
+        assert_allclose(w2, np.asarray(w) - 0.05 * (g - np.asarray(yj) + np.asarray(avg)),
+                        rtol=RTOL, atol=ATOL)
+        assert_allclose(avg2, np.asarray(avg) + 0.125 * (g - np.asarray(yj)),
+                        rtol=RTOL, atol=ATOL)
+        assert_allclose(yj2, g, rtol=RTOL, atol=ATOL)
+
+    def test_unbiased_at_memory_equals_gradient(self, prob):
+        # if y_j == g_j(w) and avg == g_j(w), SAGA step == MBSGD step
+        x, y, mask, w, ic, c, lr, _ = prob
+        g = jnp.asarray(_gref(w, x, y, mask, ic, c))
+        w_saga, _, _ = model.saga_step(w, x, y, mask, ic, c, lr, g, g,
+                                       jnp.array([0.1], jnp.float32))
+        (w_sgd,) = model.mbsgd_step(w, x, y, mask, ic, c, lr)
+        assert_allclose(w_saga, w_sgd, rtol=RTOL, atol=ATOL)
+
+
+class TestSvrg:
+    def test_update(self, prob):
+        x, y, mask, w, ic, c, lr, rng = prob
+        n = w.shape[0]
+        w_snap = jnp.asarray(rng.normal(size=n).astype(np.float32))
+        mu = jnp.asarray(rng.normal(size=n).astype(np.float32))
+        (w2,) = model.svrg_step(w, w_snap, mu, x, y, mask, ic, c, lr)
+        g = _gref(w, x, y, mask, ic, c)
+        gs = _gref(w_snap, x, y, mask, ic, c)
+        assert_allclose(w2, np.asarray(w) - 0.05 * (g - gs + np.asarray(mu)),
+                        rtol=RTOL, atol=ATOL)
+
+    def test_at_snapshot_uses_full_gradient(self, prob):
+        # w == w_snap: correction cancels, step follows mu exactly
+        x, y, mask, w, ic, c, lr, rng = prob
+        mu = jnp.asarray(rng.normal(size=w.shape[0]).astype(np.float32))
+        (w2,) = model.svrg_step(w, w, mu, x, y, mask, ic, c, lr)
+        assert_allclose(w2, np.asarray(w) - 0.05 * np.asarray(mu),
+                        rtol=RTOL, atol=ATOL)
+
+
+class TestSaag2:
+    def test_update_and_accumulator(self, prob):
+        x, y, mask, w, ic, c, lr, rng = prob
+        n = w.shape[0]
+        acc = jnp.asarray(rng.normal(size=n).astype(np.float32))
+        m, j = 8, 3
+        coeff = jnp.array([(m - j) / m], jnp.float32)
+        inv_m = jnp.array([1.0 / m], jnp.float32)
+        w2, acc2 = model.saag2_step(w, x, y, mask, ic, c, lr, acc, coeff, inv_m)
+        g = _gref(w, x, y, mask, ic, c)
+        d = np.asarray(acc) / m + (m - j) / m * g
+        assert_allclose(w2, np.asarray(w) - 0.05 * d, rtol=RTOL, atol=ATOL)
+        assert_allclose(acc2, np.asarray(acc) + g, rtol=RTOL, atol=ATOL)
+
+    def test_first_batch_of_epoch_is_mbsgd(self, prob):
+        # j=0, acc=0: d = g, identical to MBSGD
+        x, y, mask, w, ic, c, lr, _ = prob
+        n = w.shape[0]
+        w2, _ = model.saag2_step(w, x, y, mask, ic, c, lr, jnp.zeros(n),
+                                 jnp.ones(1), jnp.array([0.125], jnp.float32))
+        (w_sgd,) = model.mbsgd_step(w, x, y, mask, ic, c, lr)
+        assert_allclose(w2, w_sgd, rtol=RTOL, atol=ATOL)
+
+
+class TestPaddingExactness:
+    def test_padded_equals_unpadded(self):
+        """A batch padded to a larger static shape gives bit-equal results."""
+        rng = np.random.default_rng(9)
+        b_real, b_pad, n = 60, 100, 12
+        x = rng.normal(size=(b_real, n)).astype(np.float32)
+        y = rng.choice([-1.0, 1.0], b_real).astype(np.float32)
+        w = jnp.asarray(rng.normal(size=n).astype(np.float32))
+        c = jnp.array([0.3], jnp.float32)
+        ic = jnp.array([1.0 / b_real], jnp.float32)
+
+        xp = np.zeros((b_pad, n), np.float32)
+        xp[:b_real] = x
+        yp = np.ones(b_pad, np.float32)
+        yp[:b_real] = y
+        mp = np.zeros(b_pad, np.float32)
+        mp[:b_real] = 1.0
+
+        (g_small,) = model.batch_grad(w, jnp.asarray(x), jnp.asarray(y),
+                                      jnp.ones(b_real), ic, c)
+        (g_pad,) = model.batch_grad(w, jnp.asarray(xp), jnp.asarray(yp),
+                                    jnp.asarray(mp), ic, c)
+        assert_allclose(g_pad, g_small, rtol=1e-6, atol=1e-7)
+
+        (o_small,) = model.batch_obj(w, jnp.asarray(x), jnp.asarray(y),
+                                     jnp.ones(b_real), ic, c)
+        (o_pad,) = model.batch_obj(w, jnp.asarray(xp), jnp.asarray(yp),
+                                   jnp.asarray(mp), ic, c)
+        assert_allclose(o_pad, o_small, rtol=1e-6, atol=1e-7)

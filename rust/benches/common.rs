@@ -1,0 +1,35 @@
+//! Shared driver for the paper-table benches (tables 2–4).
+//!
+//! Each bench regenerates one paper table end-to-end: the full
+//! 5 solvers × {RS,CS,SS} × {200,1000} × {const,LS} grid at
+//! `SAMPLEX_BENCH_EPOCHS` epochs (default 30, the paper's setting), then
+//! prints the table, the speedup summary, and wall-clock accounting.
+
+use samplex::bench_harness::{render_table, run_table, speedup_summary, timing};
+use samplex::config::GridConfig;
+
+/// Run one paper table; `fast_solvers=None` keeps the full five-solver grid.
+pub fn run_table_bench(dataset: &str) {
+    let epochs = timing::bench_epochs();
+    eprintln!("== table bench: {dataset}, {epochs} epochs ==");
+    std::fs::create_dir_all("data").ok();
+    let ds = samplex::data::registry::resolve(dataset, "data", 42)
+        .expect("dataset resolution");
+    eprintln!("   {} rows x {} cols", ds.rows(), ds.cols());
+
+    let mut grid = GridConfig::paper_table(dataset);
+    grid.base.epochs = epochs;
+
+    let wall = std::time::Instant::now();
+    let mut done = 0usize;
+    let mut progress = |r: &samplex::train::TrainReport| {
+        done += 1;
+        eprintln!("   [{done:>2}/60] {}", r.summary());
+    };
+    let rows = run_table(&grid, &ds, Some(&mut progress)).expect("table run");
+    let wall_s = wall.elapsed().as_secs_f64();
+
+    println!("{}", render_table(dataset, epochs, &rows));
+    println!("{}", speedup_summary(&rows));
+    println!("bench wall-clock: {:.1}s for {} arms", wall_s, rows.len());
+}

@@ -1,0 +1,150 @@
+//! Paper Figures 1–4 — convergence curves `f(w) − p*` vs training time for
+//! RS/CS/SS across the eight datasets (figure pairs per the paper):
+//!
+//! * Fig. 1: susy-mini, rcv1-mini
+//! * Fig. 2: ijcnn1-mini, protein-mini
+//! * Fig. 3: higgs-mini, sensit-mini
+//! * Fig. 4: mnist-mini, covtype-mini
+//!
+//! For each dataset this runs the paper's figure grid (5 solvers ×
+//! batch {500,1000} × {const,LS} × {RS,CS,SS}) at `SAMPLEX_BENCH_EPOCHS`
+//! epochs, prints the empirical linear-rate fits (Theorem 1 check) and a
+//! compact table of series endpoints, and drops per-series CSVs under
+//! `bench_out/figures/`.
+//!
+//! ```bash
+//! cargo bench --bench figure_curves                       # all 4 figures
+//! SAMPLEX_FIGURE=1 cargo bench --bench figure_curves     # one figure
+//! SAMPLEX_FIGURE_SOLVER=mbsgd ...                         # restrict solver
+//! ```
+
+use samplex::backend::NativeBackend;
+use samplex::bench_harness::{run_figure, timing};
+use samplex::config::GridConfig;
+use samplex::sampling::SamplingKind;
+use samplex::solvers::SolverKind;
+use samplex::train::estimate_optimum;
+
+const FIGURES: &[(usize, [&str; 2])] = &[
+    (1, ["susy-mini", "rcv1-mini"]),
+    (2, ["ijcnn1-mini", "protein-mini"]),
+    (3, ["higgs-mini", "sensit-mini"]),
+    (4, ["mnist-mini", "covtype-mini"]),
+];
+
+fn main() {
+    let epochs = timing::bench_epochs();
+    let only: Option<usize> = std::env::var("SAMPLEX_FIGURE").ok().and_then(|s| s.parse().ok());
+    let solver: Option<SolverKind> = std::env::var("SAMPLEX_FIGURE_SOLVER")
+        .ok()
+        .map(|s| SolverKind::parse(&s).expect("SAMPLEX_FIGURE_SOLVER"));
+    std::fs::create_dir_all("data").ok();
+    std::fs::create_dir_all("bench_out/figures").ok();
+
+    for (fig, datasets) in FIGURES {
+        if let Some(f) = only {
+            if f != *fig {
+                continue;
+            }
+        }
+        for dataset in datasets {
+            run_one(*fig, dataset, epochs, solver);
+        }
+    }
+}
+
+fn run_one(fig: usize, dataset: &str, epochs: usize, solver: Option<SolverKind>) {
+    eprintln!("== figure {fig} bench: {dataset}, {epochs} epochs ==");
+    let ds = match samplex::data::registry::resolve(dataset, "data", 42) {
+        Ok(d) => d,
+        Err(e) => {
+            eprintln!("   skipping {dataset}: {e}");
+            return;
+        }
+    };
+    let mut grid = GridConfig::paper_figure(dataset);
+    grid.base.epochs = epochs;
+    if let Some(s) = solver {
+        grid.solvers = vec![s];
+    }
+    let c = samplex::train::reg_for(&grid.base);
+    let mut be = NativeBackend::new();
+    let p_star = estimate_optimum(&mut be, &ds, c, 2000).expect("p*");
+    eprintln!("   p* = {p_star:.12}");
+
+    let wall = std::time::Instant::now();
+    let mut done = 0usize;
+    let total = grid.arms().len();
+    let mut progress = |r: &samplex::train::TrainReport| {
+        done += 1;
+        eprintln!("   [{done:>3}/{total}] {}", r.summary());
+    };
+    let series = run_figure(&grid, &ds, p_star, Some(&mut progress)).expect("figure run");
+
+    println!("\nFigure {fig} — {dataset} (p* = {p_star:.10}, {epochs} epochs)");
+    println!(
+        "{:<38} {:>10} {:>14} {:>14} {:>12}",
+        "series", "time_s", "final f-p*", "start f-p*", "rate/epoch"
+    );
+    for s in &series {
+        let first = s.trace.points.first().unwrap();
+        let last = s.trace.points.last().unwrap();
+        println!(
+            "{:<38} {:>10.4} {:>14.3e} {:>14.3e} {:>12}",
+            s.label,
+            last.train_time_s,
+            (last.objective - p_star).max(0.0),
+            (first.objective - p_star).max(0.0),
+            s.rate.map(|r| format!("{r:+.4}")).unwrap_or_else(|| "-".into()),
+        );
+        let path = format!("bench_out/figures/{}.csv", s.label);
+        samplex::metrics::csv::write_trace(&path, &s.label, &s.trace).ok();
+    }
+
+    // the figure's visual claim, condensed: time for RS vs CS vs SS to reach
+    // the RS arm's final gap
+    summarize_crossover(&series, p_star);
+    println!("figure bench wall-clock: {:.1}s", wall.elapsed().as_secs_f64());
+}
+
+/// For each (solver,batch,step) setting: when did CS/SS reach the objective
+/// RS only reached at its final time? (the "who wins and by how much" shape)
+fn summarize_crossover(series: &[samplex::bench_harness::FigureSeries], _p_star: f64) {
+    use std::collections::BTreeMap;
+    let mut by_setting: BTreeMap<String, Vec<&samplex::bench_harness::FigureSeries>> =
+        BTreeMap::new();
+    for s in series {
+        let setting = s.label.replace(&format!("-{}-", s.sampling.label()), "-*-");
+        by_setting.entry(setting).or_default().push(s);
+    }
+    println!("\ntime-to-RS-final-objective (smaller is better):");
+    for (setting, group) in by_setting {
+        let Some(rs) = group.iter().find(|s| s.sampling == SamplingKind::Rs) else {
+            continue;
+        };
+        let target = rs.trace.points.last().unwrap().objective;
+        let rs_time = rs.trace.points.last().unwrap().train_time_s;
+        let mut parts = vec![format!("RS {:.3}s", rs_time)];
+        for s in &group {
+            if s.sampling == SamplingKind::Rs {
+                continue;
+            }
+            let t = s
+                .trace
+                .points
+                .iter()
+                .find(|p| p.objective <= target)
+                .map(|p| p.train_time_s);
+            match t {
+                Some(t) => parts.push(format!(
+                    "{} {:.3}s ({:.1}x)",
+                    s.sampling.label(),
+                    t,
+                    rs_time / t.max(1e-12)
+                )),
+                None => parts.push(format!("{} n/a", s.sampling.label())),
+            }
+        }
+        println!("  {:<36} {}", setting, parts.join("  "));
+    }
+}

@@ -1,0 +1,150 @@
+//! Micro-benchmarks for the §Perf pass: per-component hot-path costs.
+//!
+//! * sampler epoch generation (RS/CS/SS)
+//! * storage-simulator fetch costing (contiguous vs scattered)
+//! * LRU cache touch throughput
+//! * batch assembly: borrow (CS/SS) vs gather (RS)
+//! * native gradient (several shapes)
+//! * PJRT gradient + fused step dispatch (when artifacts exist)
+//! * prefetch pipeline end-to-end epoch
+//!
+//! ```bash
+//! cargo bench --bench micro
+//! ```
+
+use samplex::backend::{ComputeBackend, FusedStep, NativeBackend, PjrtBackend};
+use samplex::bench_harness::timing::{bench, header};
+use samplex::data::batch::{BatchAssembler, BatchView, RowSelection};
+use samplex::data::dense::DenseDataset;
+use samplex::rng::Rng;
+use samplex::sampling::SamplingKind;
+use samplex::storage::cache::LruCache;
+use samplex::storage::profile::DeviceProfile;
+use samplex::storage::simulator::AccessSimulator;
+
+fn dataset(rows: usize, cols: usize) -> DenseDataset {
+    let mut rng = Rng::seed_from(1);
+    let x: Vec<f32> = (0..rows * cols).map(|_| rng.normal() as f32).collect();
+    let y: Vec<f32> = (0..rows)
+        .map(|_| if rng.uniform() < 0.5 { -1.0 } else { 1.0 })
+        .collect();
+    DenseDataset::new("bench", cols, x, y).unwrap()
+}
+
+fn main() {
+    println!("{}", header());
+    let mut results = Vec::new();
+
+    // --- samplers ---------------------------------------------------------
+    let (rows, batch) = (120_000, 500);
+    for kind in [SamplingKind::Rs, SamplingKind::Cs, SamplingKind::Ss] {
+        let mut s = kind.build(rows, batch, 7, None).unwrap();
+        let mut e = 0usize;
+        results.push(bench(
+            &format!("sampler/{}/epoch 120k rows b=500", kind.label()),
+            2,
+            7,
+            5,
+            || {
+                e += 1;
+                std::hint::black_box(s.epoch(e));
+            },
+        ));
+        println!("{}", results.last().unwrap().row());
+    }
+
+    // --- storage simulator -------------------------------------------------
+    let ds = dataset(50_000, 28);
+    let mut sim = AccessSimulator::for_dataset(DeviceProfile::hdd(), &ds, 0);
+    let contiguous = RowSelection::Contiguous { start: 1000, end: 1500 };
+    results.push(bench("sim/fetch contiguous 500 rows", 5, 9, 200, || {
+        std::hint::black_box(sim.fetch(&contiguous));
+    }));
+    println!("{}", results.last().unwrap().row());
+
+    let mut rng = Rng::seed_from(3);
+    let scattered =
+        RowSelection::Scattered((0..500).map(|_| rng.below(50_000) as u32).collect());
+    results.push(bench("sim/fetch scattered 500 rows", 5, 9, 200, || {
+        std::hint::black_box(sim.fetch(&scattered));
+    }));
+    println!("{}", results.last().unwrap().row());
+
+    // --- LRU ---------------------------------------------------------------
+    let mut lru = LruCache::new(4096);
+    let mut key = 0u64;
+    results.push(bench("cache/lru touch (miss-heavy)", 3, 9, 100_000, || {
+        key = key.wrapping_add(1) % 16_384;
+        std::hint::black_box(lru.touch(key));
+    }));
+    println!("{}", results.last().unwrap().row());
+
+    // --- batch assembly ------------------------------------------------------
+    let mut asm = BatchAssembler::new();
+    results.push(bench("assemble/borrow contiguous b=500 n=28", 5, 9, 2000, || {
+        std::hint::black_box(asm.assemble(&ds, &contiguous));
+    }));
+    println!("{}", results.last().unwrap().row());
+    results.push(bench("assemble/gather scattered b=500 n=28", 5, 9, 500, || {
+        std::hint::black_box(asm.assemble(&ds, &scattered));
+    }));
+    println!("{}", results.last().unwrap().row());
+
+    // --- native math ---------------------------------------------------------
+    for (b, n) in [(200usize, 28usize), (1000, 28), (1000, 256)] {
+        let dsn = dataset(b, n);
+        let w = vec![0.1f32; n];
+        let mut g = vec![0f32; n];
+        let mut be = NativeBackend::new();
+        let view = BatchView { x: dsn.x(), y: dsn.y(), rows: b, cols: n };
+        results.push(bench(&format!("native/grad b={b} n={n}"), 3, 9, 200, || {
+            be.grad_into(&w, &view, 1e-4, &mut g).unwrap();
+            std::hint::black_box(&g);
+        }));
+        println!("{}", results.last().unwrap().row());
+    }
+
+    // --- PJRT dispatch --------------------------------------------------------
+    let artifacts = std::path::Path::new("artifacts").join("manifest.tsv");
+    if artifacts.is_file() {
+        for (b, n) in [(200usize, 28usize), (1000, 28), (1000, 256)] {
+            let dsn = dataset(b, n);
+            let mut pjrt = PjrtBackend::new("artifacts", n, b).unwrap();
+            let w = vec![0.1f32; n];
+            let mut g = vec![0f32; n];
+            let view = BatchView { x: dsn.x(), y: dsn.y(), rows: b, cols: n };
+            results.push(bench(&format!("pjrt/grad b={b} n={n}"), 3, 9, 50, || {
+                pjrt.grad_into(&w, &view, 1e-4, &mut g).unwrap();
+                std::hint::black_box(&g);
+            }));
+            println!("{}", results.last().unwrap().row());
+
+            let mut wmut = vec![0.1f32; n];
+            results.push(bench(&format!("pjrt/fused mbsgd b={b} n={n}"), 3, 9, 50, || {
+                pjrt.fused(FusedStep::Mbsgd { w: &mut wmut, lr: 1e-3 }, &view, 1e-4)
+                    .unwrap();
+            }));
+            println!("{}", results.last().unwrap().row());
+        }
+    } else {
+        eprintln!("(skipping pjrt benches: run `make artifacts`)");
+    }
+
+    // --- prefetch pipeline ------------------------------------------------------
+    let big = std::sync::Arc::new(dataset(50_000, 28));
+    results.push(bench("pipeline/prefetch epoch 100 batches", 1, 5, 1, || {
+        let sels: Vec<RowSelection> = (0..100)
+            .map(|j| RowSelection::Contiguous { start: j * 500, end: (j + 1) * 500 })
+            .collect();
+        let sim = AccessSimulator::for_dataset(DeviceProfile::hdd(), &big, 0);
+        let mut pf =
+            samplex::pipeline::prefetch::Prefetcher::spawn(big.clone(), sels, sim, 2);
+        while let Some(b) = pf.next_batch() {
+            std::hint::black_box(&b.x);
+        }
+        pf.join();
+    }));
+    println!("{}", results.last().unwrap().row());
+
+    println!("\n(perf targets + before/after log: EXPERIMENTS.md §Perf)");
+}

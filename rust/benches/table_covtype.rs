@@ -1,0 +1,13 @@
+//! Paper Table 4 — covtype.binary (scaled stand-in `covtype-mini`,
+//! DESIGN.md §3): same grid as Table 2.
+//!
+//! ```bash
+//! cargo bench --bench table_covtype
+//! ```
+
+#[path = "common.rs"]
+mod common;
+
+fn main() {
+    common::run_table_bench("covtype-mini");
+}

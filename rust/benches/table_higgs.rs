@@ -1,0 +1,16 @@
+//! Paper Table 2 — HIGGS (scaled stand-in `higgs-mini`, DESIGN.md §3):
+//! training time and objective after 30 epochs for
+//! SAG/SAGA/SVRG/SAAG-II/MBSGD × {RS,CS,SS} × batch {200,1000} ×
+//! {constant step, line search}.
+//!
+//! ```bash
+//! cargo bench --bench table_higgs
+//! SAMPLEX_BENCH_EPOCHS=10 cargo bench --bench table_higgs   # faster pass
+//! ```
+
+#[path = "common.rs"]
+mod common;
+
+fn main() {
+    common::run_table_bench("higgs-mini");
+}

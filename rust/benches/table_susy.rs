@@ -1,0 +1,13 @@
+//! Paper Table 3 — SUSY (scaled stand-in `susy-mini`, DESIGN.md §3):
+//! same grid as Table 2.
+//!
+//! ```bash
+//! cargo bench --bench table_susy
+//! ```
+
+#[path = "common.rs"]
+mod common;
+
+fn main() {
+    common::run_table_bench("susy-mini");
+}

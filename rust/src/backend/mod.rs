@@ -1,0 +1,86 @@
+//! Compute backends: where the per-iteration ERM math runs.
+//!
+//! * [`NativeBackend`] — hand-rolled Rust hot loop (`crate::math`), the
+//!   portable fallback and cross-check oracle.
+//! * [`PjrtBackend`] — executes the AOT-compiled Layer-2 JAX/Pallas modules
+//!   through the PJRT C API (`crate::runtime`); the production path.
+//!
+//! Solvers call [`ComputeBackend::grad_into`] / [`ComputeBackend::batch_obj`]
+//! and do their O(n) state algebra in Rust. Backends that can fuse a whole
+//! solver update into one device call (PJRT, via the `mbsgd`/`sag`/`saga`/
+//! `svrg`/`saag2` artifacts) advertise it through [`ComputeBackend::fused`],
+//! which the solvers try first — one call per inner iteration instead of
+//! gradient + host algebra.
+
+pub mod native;
+pub mod pjrt;
+
+use crate::data::batch::BatchView;
+use crate::error::Result;
+
+pub use native::NativeBackend;
+pub use pjrt::PjrtBackend;
+
+/// A fused solver-step request (state slices owned by the solver).
+#[derive(Debug)]
+pub enum FusedStep<'a> {
+    /// `w -= lr * g(w)`.
+    Mbsgd { w: &'a mut [f32], lr: f32 },
+    /// SAG: `avg += (g - yj)/m; yj = g; w -= lr*avg`.
+    Sag { w: &'a mut [f32], yj: &'a mut [f32], avg: &'a mut [f32], lr: f32, inv_m: f32 },
+    /// SAGA: `w -= lr*(g - yj + avg); avg += (g - yj)/m; yj = g`.
+    Saga { w: &'a mut [f32], yj: &'a mut [f32], avg: &'a mut [f32], lr: f32, inv_m: f32 },
+    /// SVRG inner: `w -= lr*(g(w) - g(w_snap) + mu)`.
+    Svrg { w: &'a mut [f32], w_snap: &'a [f32], mu: &'a [f32], lr: f32 },
+    /// SAAG-II: `d = acc/m + coeff*g; acc += g; w -= lr*d`.
+    Saag2 { w: &'a mut [f32], acc: &'a mut [f32], lr: f32, coeff: f32, inv_m: f32 },
+}
+
+/// Per-iteration compute interface shared by all solvers.
+pub trait ComputeBackend {
+    /// Backend label for reports ("native", "pjrt").
+    fn name(&self) -> &'static str;
+
+    /// Mini-batch gradient of eq.(3) into `out` (length = cols).
+    fn grad_into(
+        &mut self,
+        w: &[f32],
+        batch: &BatchView<'_>,
+        c: f32,
+        out: &mut [f32],
+    ) -> Result<()>;
+
+    /// Mini-batch objective of eq.(3) (mean loss + (C/2)||w||²) — what the
+    /// backtracking line search evaluates.
+    fn batch_obj(&mut self, w: &[f32], batch: &BatchView<'_>, c: f32) -> Result<f64>;
+
+    /// Raw loss sum over the batch (no mean, no regularizer) — used by the
+    /// chunked full-objective sweep.
+    fn loss_sum(&mut self, w: &[f32], batch: &BatchView<'_>) -> Result<f64>;
+
+    /// Try to run a whole solver update as one fused device call.
+    /// `Ok(false)` means "not supported here — compose it yourself".
+    fn fused(&mut self, _step: FusedStep<'_>, _batch: &BatchView<'_>, _c: f32) -> Result<bool> {
+        Ok(false)
+    }
+
+    /// Full-dataset objective of eq.(2), chunked through `loss_sum`.
+    fn full_objective(
+        &mut self,
+        w: &[f32],
+        ds: &crate::data::dense::DenseDataset,
+        c: f32,
+    ) -> Result<f64> {
+        let chunk = 4096.min(ds.rows());
+        let mut total = 0f64;
+        let mut start = 0;
+        while start < ds.rows() {
+            let end = (start + chunk).min(ds.rows());
+            let (x, y) = ds.rows_slice(start, end);
+            let view = BatchView { x, y, rows: end - start, cols: ds.cols() };
+            total += self.loss_sum(w, &view)?;
+            start = end;
+        }
+        Ok(total / ds.rows() as f64 + 0.5 * c as f64 * crate::math::nrm2_sq(w))
+    }
+}

@@ -1,0 +1,98 @@
+//! Native Rust compute backend — `crate::math` behind the backend trait.
+
+use crate::backend::ComputeBackend;
+use crate::data::batch::BatchView;
+use crate::error::Result;
+
+/// Allocation-free native backend.
+#[derive(Debug, Default)]
+pub struct NativeBackend;
+
+impl NativeBackend {
+    /// Construct the native backend.
+    pub fn new() -> Self {
+        NativeBackend
+    }
+}
+
+impl ComputeBackend for NativeBackend {
+    fn name(&self) -> &'static str {
+        "native"
+    }
+
+    fn grad_into(
+        &mut self,
+        w: &[f32],
+        batch: &BatchView<'_>,
+        c: f32,
+        out: &mut [f32],
+    ) -> Result<()> {
+        crate::math::grad_into(w, batch.x, batch.y, batch.cols, c, out);
+        Ok(())
+    }
+
+    fn batch_obj(&mut self, w: &[f32], batch: &BatchView<'_>, c: f32) -> Result<f64> {
+        Ok(crate::math::objective_batch(w, batch.x, batch.y, batch.cols, c))
+    }
+
+    fn loss_sum(&mut self, w: &[f32], batch: &BatchView<'_>) -> Result<f64> {
+        Ok(crate::math::loss_sum(w, batch.x, batch.y, batch.cols))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    fn toy(rows: usize, cols: usize) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+        let mut rng = Rng::seed_from(1);
+        let x: Vec<f32> = (0..rows * cols).map(|_| rng.normal() as f32).collect();
+        let y: Vec<f32> = (0..rows)
+            .map(|_| if rng.uniform() < 0.5 { -1.0 } else { 1.0 })
+            .collect();
+        let w: Vec<f32> = (0..cols).map(|_| rng.normal() as f32).collect();
+        (x, y, w)
+    }
+
+    #[test]
+    fn matches_math_module() {
+        let (x, y, w) = toy(32, 8);
+        let view = BatchView { x: &x, y: &y, rows: 32, cols: 8 };
+        let mut be = NativeBackend::new();
+        let mut g = vec![0f32; 8];
+        be.grad_into(&w, &view, 0.1, &mut g).unwrap();
+        let mut want = vec![0f32; 8];
+        crate::math::grad_into(&w, &x, &y, 8, 0.1, &mut want);
+        assert_eq!(g, want);
+        assert_eq!(
+            be.batch_obj(&w, &view, 0.1).unwrap(),
+            crate::math::objective_batch(&w, &x, &y, 8, 0.1)
+        );
+    }
+
+    #[test]
+    fn full_objective_equals_single_batch_objective() {
+        let (x, y, w) = toy(100, 5);
+        let ds = crate::data::dense::DenseDataset::new("t", 5, x.clone(), y.clone()).unwrap();
+        let mut be = NativeBackend::new();
+        let full = be.full_objective(&w, &ds, 0.2).unwrap();
+        let whole = crate::math::objective_full(&w, &x, &y, 5, 0.2);
+        assert!((full - whole).abs() < 1e-9, "{full} vs {whole}");
+    }
+
+    #[test]
+    fn fused_unsupported() {
+        let (x, y, mut w) = toy(8, 3);
+        let view = BatchView { x: &x, y: &y, rows: 8, cols: 3 };
+        let mut be = NativeBackend::new();
+        let handled = be
+            .fused(
+                crate::backend::FusedStep::Mbsgd { w: &mut w, lr: 0.1 },
+                &view,
+                0.0,
+            )
+            .unwrap();
+        assert!(!handled);
+    }
+}

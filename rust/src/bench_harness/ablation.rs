@@ -1,0 +1,163 @@
+//! Ablations over the storage-model design choices (DESIGN.md §8).
+//!
+//! Two sweeps, both answering "when does the paper's effect appear/vanish?":
+//!
+//! * **Block size** — the paper's §1 observation is that data is read
+//!   block-wise, never content-wise. Larger blocks amortize RS's
+//!   positioning cost over more (wasted) bytes and shrink CS/SS's run
+//!   count; the speedup is maximal when a block holds few rows.
+//! * **Page-cache size** — once the cache holds the whole dataset, every
+//!   sampling is a cache hit after the first epoch and the speedup
+//!   collapses toward the compute ratio: the honest boundary of the
+//!   paper's claim (it targets *big data*, i.e. data ≫ memory).
+
+use crate::config::ExperimentConfig;
+use crate::data::dense::DenseDataset;
+use crate::error::Result;
+use crate::sampling::SamplingKind;
+use crate::train::run_experiment;
+
+/// One ablation point.
+#[derive(Debug, Clone)]
+pub struct AblationPoint {
+    /// Swept parameter value (block KiB or cache MiB).
+    pub value: u64,
+    /// Training time per sampling, seconds.
+    pub rs_s: f64,
+    pub cs_s: f64,
+    pub ss_s: f64,
+}
+
+impl AblationPoint {
+    /// RS/SS speedup at this point.
+    pub fn speedup_ss(&self) -> f64 {
+        self.rs_s / self.ss_s.max(1e-12)
+    }
+}
+
+fn run_point(base: &ExperimentConfig, ds: &DenseDataset, value: u64) -> Result<AblationPoint> {
+    let mut times = [0f64; 3];
+    for (i, kind) in SamplingKind::paper_kinds().iter().enumerate() {
+        let mut cfg = base.clone();
+        cfg.sampling = *kind;
+        let r = run_experiment(&cfg, ds)?;
+        times[i] = r.time.training_time_s();
+    }
+    Ok(AblationPoint { value, rs_s: times[0], cs_s: times[1], ss_s: times[2] })
+}
+
+/// Sweep the device block size (KiB) at a fixed profile.
+pub fn block_size_sweep(
+    base: &ExperimentConfig,
+    ds: &DenseDataset,
+    block_kibs: &[u64],
+) -> Result<Vec<AblationPoint>> {
+    let mut out = Vec::with_capacity(block_kibs.len());
+    for &kib in block_kibs {
+        let mut cfg = base.clone();
+        cfg.storage.block_kib = Some(kib);
+        out.push(run_point(&cfg, ds, kib)?);
+    }
+    Ok(out)
+}
+
+/// Sweep the page-cache size (MiB) at a fixed profile (hdd/ssd make the
+/// collapse visible; the ram profile has no L2 cache model).
+pub fn cache_size_sweep(
+    base: &ExperimentConfig,
+    ds: &DenseDataset,
+    cache_mibs: &[u64],
+) -> Result<Vec<AblationPoint>> {
+    let mut out = Vec::with_capacity(cache_mibs.len());
+    for &mib in cache_mibs {
+        let mut cfg = base.clone();
+        cfg.storage.cache_mib = mib;
+        out.push(run_point(&cfg, ds, mib)?);
+    }
+    Ok(out)
+}
+
+/// Render a sweep as a fixed-width table.
+pub fn render(points: &[AblationPoint], unit: &str) -> String {
+    let mut s = format!(
+        "{:<10} {:>12} {:>12} {:>12} {:>10}\n",
+        unit, "RS time/s", "CS time/s", "SS time/s", "RS/SS"
+    );
+    for p in points {
+        s.push_str(&format!(
+            "{:<10} {:>12.4} {:>12.4} {:>12.4} {:>9.2}x\n",
+            p.value,
+            p.rs_s,
+            p.cs_s,
+            p.ss_s,
+            p.speedup_ss()
+        ));
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::solvers::SolverKind;
+
+    fn setup() -> (ExperimentConfig, DenseDataset) {
+        let ds = crate::data::synth::generate(
+            &crate::data::synth::SynthSpec {
+                name: "abl",
+                rows: 2000,
+                cols: 16,
+                dist: crate::data::synth::FeatureDist::Gaussian,
+                flip_prob: 0.05,
+                margin_noise: 0.3,
+                pos_fraction: 0.5,
+            },
+            31,
+        )
+        .unwrap();
+        let mut cfg = ExperimentConfig::quick("abl", SolverKind::Mbsgd, SamplingKind::Ss, 100);
+        cfg.epochs = 2;
+        cfg.reg_c = Some(1e-3);
+        cfg.storage.profile = "hdd".into();
+        cfg.storage.cache_mib = 0;
+        (cfg, ds)
+    }
+
+    #[test]
+    fn block_sweep_speedup_decreases_with_block_size() {
+        // bigger blocks -> fewer rows per positioning for RS -> smaller gap
+        let (cfg, ds) = setup();
+        let pts = block_size_sweep(&cfg, &ds, &[1, 16, 256]).unwrap();
+        assert_eq!(pts.len(), 3);
+        assert!(
+            pts[0].speedup_ss() > pts[2].speedup_ss(),
+            "1KiB {:.1}x should beat 256KiB {:.1}x",
+            pts[0].speedup_ss(),
+            pts[2].speedup_ss()
+        );
+        for p in &pts {
+            assert!(p.speedup_ss() > 1.0, "SS must win at block {}KiB", p.value);
+        }
+    }
+
+    #[test]
+    fn cache_sweep_collapses_when_dataset_fits() {
+        // dataset = 2000*16*4B = 125 KiB -> a 64 MiB cache swallows it
+        let (cfg, ds) = setup();
+        let pts = cache_size_sweep(&cfg, &ds, &[0, 64]).unwrap();
+        let cold = pts[0].speedup_ss();
+        let cached = pts[1].speedup_ss();
+        assert!(
+            cached < cold * 0.6,
+            "cache-resident speedup {cached:.1}x should collapse vs cold {cold:.1}x"
+        );
+    }
+
+    #[test]
+    fn render_formats_rows() {
+        let pts = vec![AblationPoint { value: 4, rs_s: 2.0, cs_s: 1.0, ss_s: 0.5 }];
+        let s = render(&pts, "block_kib");
+        assert!(s.contains("block_kib"));
+        assert!(s.contains("4.00x"));
+    }
+}

@@ -1,0 +1,289 @@
+//! Experiment harness: regenerates every table and figure of the paper.
+//!
+//! * [`run_table`] — Tables 2/3/4: training time + final objective after
+//!   `epochs` epochs for each (solver, sampling, batch, step) arm.
+//! * [`run_figure`] — Figs. 1–4: convergence traces `f(w) − p*` vs training
+//!   time for each arm.
+//! * [`speedup_summary`] — the headline claim ("up to six times faster"):
+//!   per-setting RS/CS and RS/SS training-time ratios.
+//!
+//! Arms that differ only in sampling share a seed, so the solver/step/batch
+//! are identical and the *only* independent variable is the sampling
+//! technique — the paper's experimental design.
+
+pub mod ablation;
+pub mod timing;
+
+use std::collections::BTreeMap;
+
+use crate::config::{ExperimentConfig, GridConfig};
+use crate::data::dense::DenseDataset;
+use crate::error::Result;
+use crate::metrics::Trace;
+use crate::sampling::SamplingKind;
+use crate::train::{run_experiment, TrainReport};
+
+/// One row of a paper table.
+#[derive(Debug, Clone)]
+pub struct TableRow {
+    /// Solver label (SAG/SAGA/...).
+    pub solver: String,
+    /// Sampling label (RS/CS/SS).
+    pub sampling: String,
+    /// Mini-batch size.
+    pub batch: usize,
+    /// Step rule label.
+    pub step: String,
+    /// Training time in (simulated + measured) seconds.
+    pub time_s: f64,
+    /// Final full-dataset objective.
+    pub objective: f64,
+}
+
+impl From<&TrainReport> for TableRow {
+    fn from(r: &TrainReport) -> Self {
+        TableRow {
+            solver: r.solver.to_string(),
+            sampling: r.sampling.to_string(),
+            batch: r.batch_size,
+            step: r.step.to_string(),
+            time_s: r.time.training_time_s(),
+            objective: r.final_objective,
+        }
+    }
+}
+
+/// Run every arm of `grid` over `ds`; optional progress callback.
+pub fn run_table(
+    grid: &GridConfig,
+    ds: &DenseDataset,
+    mut progress: Option<&mut dyn FnMut(&TrainReport)>,
+) -> Result<Vec<TableRow>> {
+    let mut rows = Vec::new();
+    for cfg in grid.arms() {
+        let report = run_experiment(&cfg, ds)?;
+        if let Some(cb) = progress.as_deref_mut() {
+            cb(&report);
+        }
+        rows.push(TableRow::from(&report));
+    }
+    Ok(rows)
+}
+
+/// Render rows in the paper's table layout (cf. Tables 2–4).
+pub fn render_table(dataset: &str, epochs: usize, rows: &[TableRow]) -> String {
+    let mut out = String::new();
+    out.push_str(&format!(
+        "Comparison of Training Time (s) and objective after {epochs} epochs — {dataset}\n"
+    ));
+    out.push_str(&format!(
+        "{:<9} {:<9} {:<6} | {:>12} {:>16} | {:>12} {:>16}\n",
+        "Method", "Sampling", "Batch", "Const Time", "Const Objective", "LS Time", "LS Objective"
+    ));
+    out.push_str(&"-".repeat(92));
+    out.push('\n');
+    // group rows: (solver, batch, sampling) -> (const, ls)
+    let mut grouped: BTreeMap<(String, usize, String), (Option<&TableRow>, Option<&TableRow>)> =
+        BTreeMap::new();
+    for r in rows {
+        let key = (r.solver.clone(), r.batch, r.sampling.clone());
+        let slot = grouped.entry(key).or_default();
+        if r.step.starts_with("Constant") {
+            slot.0 = Some(r);
+        } else {
+            slot.1 = Some(r);
+        }
+    }
+    for ((solver, batch, sampling), (c, l)) in grouped {
+        let fmt = |r: Option<&TableRow>| match r {
+            Some(r) => format!("{:>12.6} {:>16.10}", r.time_s, r.objective),
+            None => format!("{:>12} {:>16}", "-", "-"),
+        };
+        out.push_str(&format!(
+            "{solver:<9} {sampling:<9} {batch:<6} | {} | {}\n",
+            fmt(c),
+            fmt(l)
+        ));
+    }
+    out
+}
+
+/// Per-setting speedups of CS/SS over RS — the paper's headline metric.
+#[derive(Debug, Clone)]
+pub struct Speedup {
+    /// Setting label `solver/B{batch}/{step}`.
+    pub setting: String,
+    /// `time(RS) / time(CS)`.
+    pub cs: f64,
+    /// `time(RS) / time(SS)`.
+    pub ss: f64,
+}
+
+/// Compute speedups from table rows.
+pub fn speedups(rows: &[TableRow]) -> Vec<Speedup> {
+    let mut by_setting: BTreeMap<String, BTreeMap<String, f64>> = BTreeMap::new();
+    for r in rows {
+        by_setting
+            .entry(format!("{}/B{}/{}", r.solver, r.batch, r.step))
+            .or_default()
+            .insert(r.sampling.clone(), r.time_s);
+    }
+    let mut out = Vec::new();
+    for (setting, m) in by_setting {
+        if let (Some(&rs), Some(&cs), Some(&ss)) = (m.get("RS"), m.get("CS"), m.get("SS")) {
+            out.push(Speedup { setting, cs: rs / cs, ss: rs / ss });
+        }
+    }
+    out
+}
+
+/// Render the headline summary.
+pub fn speedup_summary(rows: &[TableRow]) -> String {
+    let sp = speedups(rows);
+    let mut out = String::new();
+    out.push_str(&format!(
+        "{:<28} {:>10} {:>10}\n",
+        "Setting", "RS/CS", "RS/SS"
+    ));
+    let (mut max_cs, mut max_ss, mut min_cs, mut min_ss) =
+        (f64::MIN, f64::MIN, f64::MAX, f64::MAX);
+    for s in &sp {
+        out.push_str(&format!("{:<28} {:>10.2} {:>10.2}\n", s.setting, s.cs, s.ss));
+        max_cs = max_cs.max(s.cs);
+        max_ss = max_ss.max(s.ss);
+        min_cs = min_cs.min(s.cs);
+        min_ss = min_ss.min(s.ss);
+    }
+    if !sp.is_empty() {
+        out.push_str(&format!(
+            "speedup range: CS {min_cs:.2}–{max_cs:.2}x, SS {min_ss:.2}–{max_ss:.2}x \
+             (paper: ~1.5–6x)\n"
+        ));
+    }
+    out
+}
+
+/// One labelled convergence series of a figure.
+#[derive(Debug)]
+pub struct FigureSeries {
+    /// Arm label, e.g. "SAG/SS/B500/const".
+    pub label: String,
+    /// Sampling of this arm (for glyph selection).
+    pub sampling: SamplingKind,
+    /// The trace.
+    pub trace: Trace,
+    /// Empirical linear rate (slope of log-gap per epoch), if fittable.
+    pub rate: Option<f64>,
+}
+
+/// Run the figure arms for one dataset: each (solver, batch, step) yields
+/// three series (RS/CS/SS). `p_star` anchors the rate fit.
+pub fn run_figure(
+    grid: &GridConfig,
+    ds: &DenseDataset,
+    p_star: f64,
+    mut progress: Option<&mut dyn FnMut(&TrainReport)>,
+) -> Result<Vec<FigureSeries>> {
+    let mut out = Vec::new();
+    for cfg in grid.arms() {
+        let report = run_experiment(&cfg, ds)?;
+        if let Some(cb) = progress.as_deref_mut() {
+            cb(&report);
+        }
+        let rate = report.trace.rate_fit(p_star);
+        out.push(FigureSeries {
+            label: cfg.name.clone(),
+            sampling: cfg.sampling,
+            trace: report.trace,
+            rate,
+        });
+    }
+    Ok(out)
+}
+
+/// Quick single-arm convenience used by examples.
+pub fn run_arm(cfg: &ExperimentConfig, ds: &DenseDataset) -> Result<TrainReport> {
+    run_experiment(cfg, ds)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::StepKind;
+    use crate::solvers::SolverKind;
+
+    fn tiny() -> DenseDataset {
+        crate::data::synth::generate(
+            &crate::data::synth::SynthSpec {
+                name: "tiny",
+                rows: 300,
+                cols: 6,
+                dist: crate::data::synth::FeatureDist::Gaussian,
+                flip_prob: 0.05,
+                margin_noise: 0.3,
+                pos_fraction: 0.5,
+            },
+            5,
+        )
+        .unwrap()
+    }
+
+    fn tiny_grid() -> GridConfig {
+        let mut g = GridConfig::paper_table("tiny");
+        g.base.epochs = 2;
+        g.base.reg_c = Some(1e-3);
+        // hdd profile: the access-cost ordering is largest there, making
+        // the shape assertion robust at this tiny test scale
+        g.base.storage.profile = "hdd".into();
+        g.base.storage.cache_mib = 0;
+        g.solvers = vec![SolverKind::Mbsgd, SolverKind::Sag];
+        g.batch_sizes = vec![50];
+        g.steps = vec![StepKind::Constant];
+        g
+    }
+
+    #[test]
+    fn table_runs_and_orders_cs_ss_faster_than_rs() {
+        let ds = tiny();
+        let rows = run_table(&tiny_grid(), &ds, None).unwrap();
+        assert_eq!(rows.len(), 6); // 2 solvers x 3 samplings
+        let sp = speedups(&rows);
+        assert_eq!(sp.len(), 2);
+        for s in &sp {
+            assert!(s.cs > 1.5, "{}: cs speedup {}", s.setting, s.cs);
+            assert!(s.ss > 1.5, "{}: ss speedup {}", s.setting, s.ss);
+        }
+        let rendered = render_table("tiny", 2, &rows);
+        assert!(rendered.contains("MBSGD"));
+        assert!(rendered.contains("SS"));
+        let summary = speedup_summary(&rows);
+        assert!(summary.contains("RS/CS"));
+    }
+
+    #[test]
+    fn figure_series_have_traces_and_rates() {
+        let ds = tiny();
+        let mut g = tiny_grid();
+        g.base.epochs = 4;
+        g.solvers = vec![SolverKind::Mbsgd];
+        let mut be = crate::backend::NativeBackend::new();
+        let p_star = crate::train::estimate_optimum(&mut be, &ds, 1e-3, 400).unwrap();
+        let series = run_figure(&g, &ds, p_star, None).unwrap();
+        assert_eq!(series.len(), 3);
+        for s in &series {
+            assert!(s.trace.points.len() >= 4);
+            if let Some(rate) = s.rate {
+                assert!(rate < 0.0, "{}: gap should shrink (rate={rate})", s.label);
+            }
+        }
+    }
+
+    #[test]
+    fn progress_callback_fires_per_arm() {
+        let ds = tiny();
+        let mut count = 0;
+        let mut cb = |_r: &TrainReport| count += 1;
+        run_table(&tiny_grid(), &ds, Some(&mut cb)).unwrap();
+        assert_eq!(count, 6);
+    }
+}

@@ -1,0 +1,117 @@
+//! In-tree micro-benchmark timing (offline build: no criterion).
+//!
+//! Median-of-samples methodology: warmup runs, then `samples` timed runs of
+//! `iters` iterations each; reports median/mean/min per iteration. Results
+//! print in a fixed-width table consumed by EXPERIMENTS.md §Perf.
+
+/// One benchmark measurement.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    /// Benchmark id.
+    pub name: String,
+    /// Median seconds per iteration.
+    pub median_s: f64,
+    /// Mean seconds per iteration.
+    pub mean_s: f64,
+    /// Fastest sample, seconds per iteration.
+    pub min_s: f64,
+    /// Iterations per timed sample.
+    pub iters: usize,
+}
+
+impl BenchResult {
+    /// Render one table row.
+    pub fn row(&self) -> String {
+        format!(
+            "{:<44} {:>12} {:>12} {:>12}",
+            self.name,
+            human(self.median_s),
+            human(self.mean_s),
+            human(self.min_s)
+        )
+    }
+}
+
+/// Pretty seconds.
+pub fn human(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.3}s")
+    } else if s >= 1e-3 {
+        format!("{:.3}ms", s * 1e3)
+    } else if s >= 1e-6 {
+        format!("{:.3}us", s * 1e6)
+    } else {
+        format!("{:.1}ns", s * 1e9)
+    }
+}
+
+/// Table header matching [`BenchResult::row`].
+pub fn header() -> String {
+    format!(
+        "{:<44} {:>12} {:>12} {:>12}",
+        "benchmark", "median/iter", "mean/iter", "min/iter"
+    )
+}
+
+/// Run one benchmark: `warmup` untimed runs, then `samples` samples of
+/// `iters` iterations.
+pub fn bench(name: &str, warmup: usize, samples: usize, iters: usize, mut f: impl FnMut()) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut per_iter: Vec<f64> = Vec::with_capacity(samples);
+    for _ in 0..samples.max(1) {
+        let t0 = std::time::Instant::now();
+        for _ in 0..iters.max(1) {
+            f();
+        }
+        per_iter.push(t0.elapsed().as_secs_f64() / iters.max(1) as f64);
+    }
+    per_iter.sort_by(|a, b| a.total_cmp(b));
+    let median_s = per_iter[per_iter.len() / 2];
+    let mean_s = per_iter.iter().sum::<f64>() / per_iter.len() as f64;
+    let min_s = per_iter[0];
+    BenchResult { name: name.into(), median_s, mean_s, min_s, iters }
+}
+
+/// Epochs knob shared by the table/figure benches
+/// (`SAMPLEX_BENCH_EPOCHS`, default 30 — the paper's setting).
+pub fn bench_epochs() -> usize {
+    std::env::var("SAMPLEX_BENCH_EPOCHS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(30)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_work() {
+        let mut acc = 0u64;
+        let r = bench("spin", 1, 3, 10, || {
+            for i in 0..1000 {
+                acc = acc.wrapping_add(i);
+            }
+        });
+        assert!(r.median_s >= 0.0);
+        assert!(r.min_s <= r.median_s);
+        assert!(r.row().contains("spin"));
+        assert!(acc > 0 || acc == 0); // keep the side effect alive
+    }
+
+    #[test]
+    fn human_units() {
+        assert!(human(2.5).ends_with('s'));
+        assert!(human(2.5e-3).ends_with("ms"));
+        assert!(human(2.5e-6).ends_with("us"));
+        assert!(human(2.5e-9).ends_with("ns"));
+    }
+
+    #[test]
+    fn epochs_default_is_paper_setting() {
+        std::env::remove_var("SAMPLEX_BENCH_EPOCHS");
+        assert_eq!(bench_epochs(), 30);
+    }
+}

@@ -1,0 +1,491 @@
+//! Experiment configuration: TOML-subset-loadable, CLI-overridable, validated.
+//!
+//! Two levels:
+//! * [`ExperimentConfig`] — one (dataset, solver, sampling, step, batch)
+//!   arm: what `samplex train` runs.
+//! * [`GridConfig`] — the cross-product the paper's tables/figures sweep:
+//!   what `samplex table` / `samplex figure` run (§4.1: "for one dataset,
+//!   three sampling techniques are compared on 20 different settings").
+
+pub mod parse;
+
+use std::path::Path;
+
+use crate::error::{Error, Result};
+use crate::sampling::SamplingKind;
+use crate::solvers::SolverKind;
+use crate::storage::profile::DeviceProfile;
+
+pub use parse::TomlDoc;
+
+/// Which compute backend executes the per-iteration math.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum BackendKind {
+    /// Hand-rolled Rust hot loop (default: no artifacts needed).
+    #[default]
+    Native,
+    /// AOT JAX/Pallas modules through PJRT.
+    Pjrt,
+}
+
+impl BackendKind {
+    /// Parse a CLI/config token.
+    pub fn parse(s: &str) -> Result<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "native" => Ok(BackendKind::Native),
+            "pjrt" | "xla" => Ok(BackendKind::Pjrt),
+            other => Err(Error::Config(format!("unknown backend '{other}'"))),
+        }
+    }
+
+    /// Token used in configs and reports.
+    pub fn label(&self) -> &'static str {
+        match self {
+            BackendKind::Native => "native",
+            BackendKind::Pjrt => "pjrt",
+        }
+    }
+}
+
+/// Step-size rule (paper §4.1: constant `1/L` vs backtracking).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum StepKind {
+    /// `α = 1/L` with `L = max_i ||x_i||²/4 + C`.
+    #[default]
+    Constant,
+    /// Armijo backtracking on the selected mini-batch.
+    LineSearch,
+}
+
+impl StepKind {
+    /// Parse a CLI/config token.
+    pub fn parse(s: &str) -> Result<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "constant" | "const" => Ok(StepKind::Constant),
+            "linesearch" | "ls" => Ok(StepKind::LineSearch),
+            other => Err(Error::Config(format!("unknown step rule '{other}'"))),
+        }
+    }
+
+    /// Paper-style label.
+    pub fn label(&self) -> &'static str {
+        match self {
+            StepKind::Constant => "Constant Step",
+            StepKind::LineSearch => "Line Search",
+        }
+    }
+
+    /// Short token (arm names, CSV).
+    pub fn token(&self) -> &'static str {
+        match self {
+            StepKind::Constant => "const",
+            StepKind::LineSearch => "ls",
+        }
+    }
+}
+
+/// Storage model settings.
+#[derive(Debug, Clone)]
+pub struct StorageConfig {
+    /// Device profile name: hdd | ssd | ram.
+    pub profile: String,
+    /// Page-cache model size in MiB (0 disables caching).
+    pub cache_mib: u64,
+    /// Block size override in KiB (None = profile default).
+    pub block_kib: Option<u64>,
+}
+
+impl Default for StorageConfig {
+    fn default() -> Self {
+        // Default device model: `ram`. The paper's own testbed is a MacBook
+        // whose datasets are memory-resident after the first pass, so the
+        // 1.5–6x speedups it reports come from *memory-level* contiguity
+        // (block/cache-line transfers); the ram profile reproduces exactly
+        // that band (EXPERIMENTS.md). `hdd`/`ssd` reproduce the paper's §1
+        // argument that the gap grows with positioning cost — run the
+        // `storage_profiles` example or set [storage] profile explicitly.
+        // cache_mib = 0 because the ram profile *is* the memory level
+        // (an L2 page-cache model only makes sense for hdd/ssd).
+        StorageConfig { profile: "ram".into(), cache_mib: 0, block_kib: None }
+    }
+}
+
+impl StorageConfig {
+    /// Materialize the device profile (with block-size override applied).
+    pub fn device(&self) -> Result<DeviceProfile> {
+        let mut p = DeviceProfile::by_name(&self.profile)?;
+        if let Some(kib) = self.block_kib {
+            if kib == 0 {
+                return Err(Error::Config("block_kib must be > 0".into()));
+            }
+            p.block_bytes = kib * 1024;
+        }
+        p.validate()?;
+        Ok(p)
+    }
+
+    /// Cache size in bytes.
+    pub fn cache_bytes(&self) -> u64 {
+        self.cache_mib * 1024 * 1024
+    }
+}
+
+/// One experiment arm.
+#[derive(Debug, Clone)]
+pub struct ExperimentConfig {
+    /// Report label.
+    pub name: String,
+    /// Registry dataset name (e.g. "higgs-mini").
+    pub dataset: String,
+    /// Directory with `.sxb` / LIBSVM files (searched before synth).
+    pub data_dir: String,
+    /// Epochs (paper tables: 30).
+    pub epochs: usize,
+    /// Mini-batch size (paper: 200/500/1000).
+    pub batch_size: usize,
+    /// Solver under test.
+    pub solver: SolverKind,
+    /// Sampling technique under test.
+    pub sampling: SamplingKind,
+    /// Step-size rule.
+    pub step: StepKind,
+    /// Master seed (drives data generation and samplers).
+    pub seed: u64,
+    /// l2 coefficient C; None = dataset profile default.
+    pub reg_c: Option<f32>,
+    /// Compute backend.
+    pub backend: BackendKind,
+    /// Artifacts dir for the PJRT backend.
+    pub artifacts_dir: String,
+    /// Storage model.
+    pub storage: StorageConfig,
+    /// Record the full objective every `record_every` epochs (0 = only at
+    /// the end). Full-objective sweeps are *not* charged to training time,
+    /// matching the paper's measurement protocol.
+    pub record_every: usize,
+    /// Prefetch pipeline depth (0 = synchronous fetch).
+    pub prefetch_depth: usize,
+    /// One-time random row shuffle before training (paper §5: recommended
+    /// for CS/SS when similar points are grouped together on disk).
+    pub pre_shuffle: bool,
+}
+
+impl Default for ExperimentConfig {
+    fn default() -> Self {
+        ExperimentConfig {
+            name: "experiment".into(),
+            dataset: "covtype-mini".into(),
+            data_dir: "data".into(),
+            epochs: 30,
+            batch_size: 500,
+            solver: SolverKind::Mbsgd,
+            sampling: SamplingKind::Ss,
+            step: StepKind::Constant,
+            seed: 42,
+            reg_c: None,
+            backend: BackendKind::Native,
+            artifacts_dir: "artifacts".into(),
+            storage: StorageConfig::default(),
+            record_every: 1,
+            prefetch_depth: 0,
+            pre_shuffle: false,
+        }
+    }
+}
+
+impl ExperimentConfig {
+    /// Minimal config for examples/tests.
+    pub fn quick(
+        dataset: &str,
+        solver: SolverKind,
+        sampling: SamplingKind,
+        batch_size: usize,
+    ) -> Self {
+        ExperimentConfig {
+            name: format!("{dataset}-{}-{}", solver.label(), sampling.label()),
+            dataset: dataset.into(),
+            batch_size,
+            solver,
+            sampling,
+            epochs: 5,
+            ..Default::default()
+        }
+    }
+
+    /// Load from a TOML-subset file (every key optional; defaults apply).
+    pub fn from_toml_file(path: impl AsRef<Path>) -> Result<Self> {
+        let raw = std::fs::read_to_string(path)?;
+        Self::from_toml_str(&raw)
+    }
+
+    /// Parse from a TOML-subset string.
+    pub fn from_toml_str(raw: &str) -> Result<Self> {
+        let doc = TomlDoc::parse(raw)?;
+        let mut cfg = ExperimentConfig::default();
+        if let Some(v) = doc.get_str("", "name")? {
+            cfg.name = v;
+        }
+        if let Some(v) = doc.get_str("", "dataset")? {
+            cfg.dataset = v;
+        }
+        if let Some(v) = doc.get_str("", "data_dir")? {
+            cfg.data_dir = v;
+        }
+        if let Some(v) = doc.get_usize("", "epochs")? {
+            cfg.epochs = v;
+        }
+        if let Some(v) = doc.get_usize("", "batch_size")? {
+            cfg.batch_size = v;
+        }
+        if let Some(v) = doc.get_str("", "solver")? {
+            cfg.solver = SolverKind::parse(&v)?;
+        }
+        if let Some(v) = doc.get_str("", "sampling")? {
+            cfg.sampling = SamplingKind::parse(&v)?;
+        }
+        if let Some(v) = doc.get_str("", "step")? {
+            cfg.step = StepKind::parse(&v)?;
+        }
+        if let Some(v) = doc.get_int("", "seed")? {
+            cfg.seed = v as u64;
+        }
+        if let Some(v) = doc.get_f64("", "reg_c")? {
+            cfg.reg_c = Some(v as f32);
+        }
+        if let Some(v) = doc.get_str("", "backend")? {
+            cfg.backend = BackendKind::parse(&v)?;
+        }
+        if let Some(v) = doc.get_str("", "artifacts_dir")? {
+            cfg.artifacts_dir = v;
+        }
+        if let Some(v) = doc.get_usize("", "record_every")? {
+            cfg.record_every = v;
+        }
+        if let Some(v) = doc.get_usize("", "prefetch_depth")? {
+            cfg.prefetch_depth = v;
+        }
+        if let Some(v) = doc.get_bool("", "pre_shuffle")? {
+            cfg.pre_shuffle = v;
+        }
+        if let Some(v) = doc.get_str("storage", "profile")? {
+            cfg.storage.profile = v;
+        }
+        if let Some(v) = doc.get_usize("storage", "cache_mib")? {
+            cfg.storage.cache_mib = v as u64;
+        }
+        if let Some(v) = doc.get_usize("storage", "block_kib")? {
+            cfg.storage.block_kib = Some(v as u64);
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// Serialize back to the TOML subset (round-trip for provenance dumps).
+    pub fn to_toml_string(&self) -> String {
+        let mut s = String::new();
+        s.push_str(&format!("name = \"{}\"\n", self.name));
+        s.push_str(&format!("dataset = \"{}\"\n", self.dataset));
+        s.push_str(&format!("data_dir = \"{}\"\n", self.data_dir));
+        s.push_str(&format!("epochs = {}\n", self.epochs));
+        s.push_str(&format!("batch_size = {}\n", self.batch_size));
+        s.push_str(&format!("solver = \"{}\"\n", self.solver.label().to_lowercase()));
+        s.push_str(&format!(
+            "sampling = \"{}\"\n",
+            self.sampling.label().to_lowercase().replace("-wr", "wr")
+        ));
+        s.push_str(&format!("step = \"{}\"\n", self.step.token()));
+        s.push_str(&format!("seed = {}\n", self.seed));
+        if let Some(c) = self.reg_c {
+            s.push_str(&format!("reg_c = {c}\n"));
+        }
+        s.push_str(&format!("backend = \"{}\"\n", self.backend.label()));
+        s.push_str(&format!("artifacts_dir = \"{}\"\n", self.artifacts_dir));
+        s.push_str(&format!("record_every = {}\n", self.record_every));
+        s.push_str(&format!("prefetch_depth = {}\n", self.prefetch_depth));
+        s.push_str(&format!("pre_shuffle = {}\n", self.pre_shuffle));
+        s.push_str("\n[storage]\n");
+        s.push_str(&format!("profile = \"{}\"\n", self.storage.profile));
+        s.push_str(&format!("cache_mib = {}\n", self.storage.cache_mib));
+        if let Some(b) = self.storage.block_kib {
+            s.push_str(&format!("block_kib = {b}\n"));
+        }
+        s
+    }
+
+    /// Sanity-check the settings.
+    pub fn validate(&self) -> Result<()> {
+        if self.epochs == 0 {
+            return Err(Error::Config("epochs must be > 0".into()));
+        }
+        if self.batch_size == 0 {
+            return Err(Error::Config("batch_size must be > 0".into()));
+        }
+        if let Some(c) = self.reg_c {
+            if !(c > 0.0) || !c.is_finite() {
+                return Err(Error::Config(format!("reg_c must be positive, got {c}")));
+            }
+        }
+        self.storage.device()?;
+        Ok(())
+    }
+}
+
+/// The sweep grid of a paper table/figure.
+#[derive(Debug, Clone)]
+pub struct GridConfig {
+    /// Base settings applied to every arm.
+    pub base: ExperimentConfig,
+    /// Solvers to sweep (paper: all five).
+    pub solvers: Vec<SolverKind>,
+    /// Sampling techniques to sweep (paper: RS, CS, SS).
+    pub samplings: Vec<SamplingKind>,
+    /// Batch sizes to sweep (tables: 200/1000; figures: 500/1000).
+    pub batch_sizes: Vec<usize>,
+    /// Step rules to sweep (constant + line search).
+    pub steps: Vec<StepKind>,
+}
+
+impl GridConfig {
+    /// The paper's table grid for one dataset (5×3×2×2 = 60 arms).
+    pub fn paper_table(dataset: &str) -> Self {
+        GridConfig {
+            base: ExperimentConfig {
+                dataset: dataset.into(),
+                name: format!("table-{dataset}"),
+                ..Default::default()
+            },
+            solvers: SolverKind::all().to_vec(),
+            samplings: SamplingKind::paper_kinds().to_vec(),
+            batch_sizes: vec![200, 1000],
+            steps: vec![StepKind::Constant, StepKind::LineSearch],
+        }
+    }
+
+    /// The paper's figure grid (batch 500/1000).
+    pub fn paper_figure(dataset: &str) -> Self {
+        let mut g = Self::paper_table(dataset);
+        g.base.name = format!("figure-{dataset}");
+        g.batch_sizes = vec![500, 1000];
+        g
+    }
+
+    /// Materialize every arm in deterministic order.
+    pub fn arms(&self) -> Vec<ExperimentConfig> {
+        let mut out = Vec::new();
+        for &solver in &self.solvers {
+            for &batch in &self.batch_sizes {
+                for &step in &self.steps {
+                    for &sampling in &self.samplings {
+                        let mut cfg = self.base.clone();
+                        cfg.solver = solver;
+                        cfg.sampling = sampling;
+                        cfg.batch_size = batch;
+                        cfg.step = step;
+                        cfg.name = format!(
+                            "{}-{}-{}-B{}-{}",
+                            self.base.dataset,
+                            solver.label(),
+                            sampling.label(),
+                            batch,
+                            step.token()
+                        );
+                        out.push(cfg);
+                    }
+                }
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_validate() {
+        ExperimentConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn bad_configs_rejected() {
+        let mut c = ExperimentConfig::default();
+        c.epochs = 0;
+        assert!(c.validate().is_err());
+        let mut c = ExperimentConfig::default();
+        c.batch_size = 0;
+        assert!(c.validate().is_err());
+        let mut c = ExperimentConfig::default();
+        c.reg_c = Some(-1.0);
+        assert!(c.validate().is_err());
+        let mut c = ExperimentConfig::default();
+        c.storage.profile = "tape".into();
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn toml_roundtrip() {
+        let mut cfg = ExperimentConfig::default();
+        cfg.solver = SolverKind::Sag;
+        cfg.sampling = SamplingKind::Cs;
+        cfg.step = StepKind::LineSearch;
+        cfg.reg_c = Some(0.001);
+        cfg.storage.block_kib = Some(64);
+        let s = cfg.to_toml_string();
+        let back = ExperimentConfig::from_toml_str(&s).unwrap();
+        assert_eq!(back.dataset, cfg.dataset);
+        assert_eq!(back.solver, cfg.solver);
+        assert_eq!(back.sampling, cfg.sampling);
+        assert_eq!(back.step, cfg.step);
+        assert_eq!(back.storage.profile, cfg.storage.profile);
+        assert_eq!(back.storage.block_kib, Some(64));
+        assert!((back.reg_c.unwrap() - 0.001).abs() < 1e-9);
+    }
+
+    #[test]
+    fn toml_partial_file() {
+        let p = std::env::temp_dir().join(format!("sx_cfg_{}.toml", std::process::id()));
+        std::fs::write(
+            &p,
+            r#"
+dataset = "susy-mini"
+epochs = 3
+batch_size = 200
+solver = "sag"
+sampling = "ss"
+step = "linesearch"
+
+[storage]
+profile = "ssd"
+cache_mib = 16
+"#,
+        )
+        .unwrap();
+        let cfg = ExperimentConfig::from_toml_file(&p).unwrap();
+        assert_eq!(cfg.solver, SolverKind::Sag);
+        assert_eq!(cfg.step, StepKind::LineSearch);
+        assert_eq!(cfg.storage.profile, "ssd");
+        assert_eq!(cfg.seed, 42, "unspecified keys keep defaults");
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn grid_has_paper_counts() {
+        // §4.1: "for one dataset, three sampling techniques are compared on
+        // 20 different settings" = 5 solvers × 2 batches × 2 steps; full
+        // arm count = 60 with the 3 samplings
+        let g = GridConfig::paper_table("higgs-mini");
+        let arms = g.arms();
+        assert_eq!(arms.len(), 60);
+        let unique: std::collections::HashSet<_> = arms.iter().map(|a| a.name.clone()).collect();
+        assert_eq!(unique.len(), 60, "arm names must be unique");
+    }
+
+    #[test]
+    fn storage_block_override() {
+        let s = StorageConfig { profile: "hdd".into(), cache_mib: 1, block_kib: Some(64) };
+        assert_eq!(s.device().unwrap().block_bytes, 64 * 1024);
+        let s = StorageConfig { profile: "hdd".into(), cache_mib: 1, block_kib: Some(0) };
+        assert!(s.device().is_err());
+    }
+}

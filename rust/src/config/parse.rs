@@ -1,0 +1,241 @@
+//! Minimal TOML-subset parser (offline build: no external TOML crate).
+//!
+//! Supports exactly what experiment configs need:
+//! * `# comments` and blank lines
+//! * `[section]` headers (one level)
+//! * `key = "string"` | integer | float | `true`/`false`
+//!
+//! Arrays, dates, nested tables and multi-line strings are rejected with a
+//! clear error — configs stay deliberately flat.
+
+use std::collections::HashMap;
+
+use crate::error::{Error, Result};
+
+/// A parsed scalar value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    /// Quoted string.
+    Str(String),
+    /// Integer literal.
+    Int(i64),
+    /// Float literal.
+    Float(f64),
+    /// Boolean literal.
+    Bool(bool),
+}
+
+/// Parsed document: section → key → value. Root keys live under `""`.
+#[derive(Debug, Default)]
+pub struct TomlDoc {
+    sections: HashMap<String, HashMap<String, Value>>,
+}
+
+impl TomlDoc {
+    /// Parse a TOML-subset document.
+    pub fn parse(text: &str) -> Result<Self> {
+        let mut doc = TomlDoc::default();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(rest) = line.strip_prefix('[') {
+                let name = rest.strip_suffix(']').ok_or_else(|| {
+                    Error::Config(format!("line {}: unterminated section", lineno + 1))
+                })?;
+                if name.contains('[') || name.contains('.') {
+                    return Err(Error::Config(format!(
+                        "line {}: nested sections unsupported",
+                        lineno + 1
+                    )));
+                }
+                section = name.trim().to_string();
+                doc.sections.entry(section.clone()).or_default();
+                continue;
+            }
+            let (key, val) = line.split_once('=').ok_or_else(|| {
+                Error::Config(format!("line {}: expected key = value", lineno + 1))
+            })?;
+            let value = parse_value(val.trim())
+                .map_err(|m| Error::Config(format!("line {}: {m}", lineno + 1)))?;
+            doc.sections
+                .entry(section.clone())
+                .or_default()
+                .insert(key.trim().to_string(), value);
+        }
+        Ok(doc)
+    }
+
+    /// Raw value lookup.
+    pub fn get(&self, section: &str, key: &str) -> Option<&Value> {
+        self.sections.get(section)?.get(key)
+    }
+
+    /// String value (errors if present with another type).
+    pub fn get_str(&self, section: &str, key: &str) -> Result<Option<String>> {
+        match self.get(section, key) {
+            None => Ok(None),
+            Some(Value::Str(s)) => Ok(Some(s.clone())),
+            Some(v) => Err(type_err(section, key, "string", v)),
+        }
+    }
+
+    /// Integer value.
+    pub fn get_int(&self, section: &str, key: &str) -> Result<Option<i64>> {
+        match self.get(section, key) {
+            None => Ok(None),
+            Some(Value::Int(i)) => Ok(Some(*i)),
+            Some(v) => Err(type_err(section, key, "integer", v)),
+        }
+    }
+
+    /// Non-negative integer as usize.
+    pub fn get_usize(&self, section: &str, key: &str) -> Result<Option<usize>> {
+        match self.get_int(section, key)? {
+            None => Ok(None),
+            Some(i) if i >= 0 => Ok(Some(i as usize)),
+            Some(i) => Err(Error::Config(format!("{section}.{key}: negative value {i}"))),
+        }
+    }
+
+    /// Float value (integers widen).
+    pub fn get_f64(&self, section: &str, key: &str) -> Result<Option<f64>> {
+        match self.get(section, key) {
+            None => Ok(None),
+            Some(Value::Float(f)) => Ok(Some(*f)),
+            Some(Value::Int(i)) => Ok(Some(*i as f64)),
+            Some(v) => Err(type_err(section, key, "float", v)),
+        }
+    }
+
+    /// Boolean value.
+    pub fn get_bool(&self, section: &str, key: &str) -> Result<Option<bool>> {
+        match self.get(section, key) {
+            None => Ok(None),
+            Some(Value::Bool(b)) => Ok(Some(*b)),
+            Some(v) => Err(type_err(section, key, "bool", v)),
+        }
+    }
+}
+
+fn type_err(section: &str, key: &str, want: &str, got: &Value) -> Error {
+    Error::Config(format!("{section}.{key}: expected {want}, got {got:?}"))
+}
+
+fn strip_comment(line: &str) -> &str {
+    // respect '#' inside quoted strings
+    let mut in_str = false;
+    for (i, ch) in line.char_indices() {
+        match ch {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(tok: &str) -> std::result::Result<Value, String> {
+    if tok.is_empty() {
+        return Err("empty value".into());
+    }
+    if let Some(rest) = tok.strip_prefix('"') {
+        let inner = rest.strip_suffix('"').ok_or("unterminated string")?;
+        if inner.contains('"') {
+            return Err("embedded quotes unsupported".into());
+        }
+        return Ok(Value::Str(inner.to_string()));
+    }
+    if tok == "true" {
+        return Ok(Value::Bool(true));
+    }
+    if tok == "false" {
+        return Ok(Value::Bool(false));
+    }
+    if tok.starts_with('[') {
+        return Err("arrays unsupported (keep configs flat)".into());
+    }
+    let clean = tok.replace('_', "");
+    if let Ok(i) = clean.parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    if let Ok(f) = clean.parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    Err(format!("cannot parse value {tok:?}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_full_document() {
+        let doc = TomlDoc::parse(
+            r#"
+# top comment
+name = "exp"   # trailing comment
+epochs = 30
+alpha = 0.5
+flag = true
+big = 1_000_000
+
+[storage]
+profile = "hdd"
+cache_mib = 64
+"#,
+        )
+        .unwrap();
+        assert_eq!(doc.get_str("", "name").unwrap(), Some("exp".into()));
+        assert_eq!(doc.get_int("", "epochs").unwrap(), Some(30));
+        assert_eq!(doc.get_f64("", "alpha").unwrap(), Some(0.5));
+        assert_eq!(doc.get_bool("", "flag").unwrap(), Some(true));
+        assert_eq!(doc.get_int("", "big").unwrap(), Some(1_000_000));
+        assert_eq!(doc.get_str("storage", "profile").unwrap(), Some("hdd".into()));
+        assert_eq!(doc.get_usize("storage", "cache_mib").unwrap(), Some(64));
+    }
+
+    #[test]
+    fn missing_keys_are_none() {
+        let doc = TomlDoc::parse("a = 1\n").unwrap();
+        assert_eq!(doc.get_str("", "missing").unwrap(), None);
+        assert_eq!(doc.get_int("nosec", "a").unwrap(), None);
+    }
+
+    #[test]
+    fn type_mismatch_is_error() {
+        let doc = TomlDoc::parse("a = 1\n").unwrap();
+        assert!(doc.get_str("", "a").is_err());
+        assert!(doc.get_bool("", "a").is_err());
+    }
+
+    #[test]
+    fn int_widens_to_float() {
+        let doc = TomlDoc::parse("a = 3\n").unwrap();
+        assert_eq!(doc.get_f64("", "a").unwrap(), Some(3.0));
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(TomlDoc::parse("[unterminated\n").is_err());
+        assert!(TomlDoc::parse("novalue\n").is_err());
+        assert!(TomlDoc::parse("a = [1,2]\n").is_err());
+        assert!(TomlDoc::parse("a = \"open\n").is_err());
+        assert!(TomlDoc::parse("[a.b]\n").is_err());
+        assert!(TomlDoc::parse("a = zzz\n").is_err());
+    }
+
+    #[test]
+    fn hash_inside_string_is_not_comment() {
+        let doc = TomlDoc::parse("a = \"x # y\"\n").unwrap();
+        assert_eq!(doc.get_str("", "a").unwrap(), Some("x # y".into()));
+    }
+
+    #[test]
+    fn negative_usize_rejected() {
+        let doc = TomlDoc::parse("a = -4\n").unwrap();
+        assert!(doc.get_usize("", "a").is_err());
+    }
+}

@@ -1,0 +1,285 @@
+//! Dense row-major dataset store + the `.sxb` on-disk binary layout.
+//!
+//! The `.sxb` layout is deliberately *row-contiguous* — the paper's whole
+//! point is that mini-batches of contiguous rows cost one seek + a minimal
+//! number of block transfers. Layout (little-endian):
+//!
+//! ```text
+//! offset 0   : magic  b"SXB1"
+//! offset 4   : u32    version (1)
+//! offset 8   : u64    rows
+//! offset 16  : u64    cols
+//! offset 24  : f32[rows]        labels  (y, in {-1,+1})
+//! offset 24 + 4*rows : f32[rows*cols]  features, row-major
+//! ```
+//!
+//! [`DenseDataset::row_extent`] exposes the byte extent of each row of X for
+//! the storage block-map, so the access-time simulator costs *exactly* the
+//! bytes a given sampling technique touches.
+
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+use crate::error::{Error, Result};
+
+const MAGIC: &[u8; 4] = b"SXB1";
+const VERSION: u32 = 1;
+/// Fixed header bytes before the label block.
+pub const HEADER_BYTES: u64 = 24;
+
+/// In-memory dense dataset: `rows x cols` f32 features + ±1 labels.
+#[derive(Debug, Clone)]
+pub struct DenseDataset {
+    /// Dataset name (registry key or file stem).
+    pub name: String,
+    rows: usize,
+    cols: usize,
+    /// Row-major features, `rows * cols`.
+    x: Vec<f32>,
+    /// Labels in {-1, +1}, length `rows`.
+    y: Vec<f32>,
+}
+
+impl DenseDataset {
+    /// Build from parts, validating dimensions and labels.
+    pub fn new(name: impl Into<String>, cols: usize, x: Vec<f32>, y: Vec<f32>) -> Result<Self> {
+        let rows = y.len();
+        if cols == 0 || rows == 0 {
+            return Err(Error::Config("dataset must be non-empty".into()));
+        }
+        if x.len() != rows * cols {
+            return Err(Error::ShapeMismatch {
+                expected: format!("{} ({} rows x {} cols)", rows * cols, rows, cols),
+                got: x.len().to_string(),
+                context: "DenseDataset::new".into(),
+            });
+        }
+        if let Some(bad) = y.iter().find(|v| **v != 1.0 && **v != -1.0) {
+            return Err(Error::Config(format!("label not in {{-1,+1}}: {bad}")));
+        }
+        Ok(DenseDataset { name: name.into(), rows, cols, x, y })
+    }
+
+    /// Number of data points `l`.
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    /// Feature dimension `n`.
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// Full row-major feature block.
+    #[inline]
+    pub fn x(&self) -> &[f32] {
+        &self.x
+    }
+
+    /// Full label vector.
+    #[inline]
+    pub fn y(&self) -> &[f32] {
+        &self.y
+    }
+
+    /// Feature row `r`.
+    #[inline]
+    pub fn row(&self, r: usize) -> &[f32] {
+        &self.x[r * self.cols..(r + 1) * self.cols]
+    }
+
+    /// Contiguous feature slice for rows `[start, end)` — the zero-copy path
+    /// used by cyclic/systematic sampling.
+    #[inline]
+    pub fn rows_slice(&self, start: usize, end: usize) -> (&[f32], &[f32]) {
+        (&self.x[start * self.cols..end * self.cols], &self.y[start..end])
+    }
+
+    /// Mutable feature access (synthetic generators, scaling, shuffling).
+    pub(crate) fn x_mut(&mut self) -> &mut [f32] {
+        &mut self.x
+    }
+
+    /// Mutable label access (row shuffling).
+    pub(crate) fn y_mut(&mut self) -> &mut [f32] {
+        &mut self.y
+    }
+
+    /// Byte extent `[lo, hi)` of feature row `r` in the `.sxb` layout.
+    #[inline]
+    pub fn row_extent(&self, r: usize) -> (u64, u64) {
+        let x_base = HEADER_BYTES + 4 * self.rows as u64;
+        let lo = x_base + (r * self.cols) as u64 * 4;
+        (lo, lo + self.cols as u64 * 4)
+    }
+
+    /// Total size of the `.sxb` encoding in bytes.
+    pub fn file_bytes(&self) -> u64 {
+        HEADER_BYTES + 4 * self.rows as u64 + 4 * (self.rows * self.cols) as u64
+    }
+
+    /// Upper bound on the per-sample gradient Lipschitz constant for the
+    /// logistic loss: `max_i ||x_i||^2 / 4 + C`. Used for the paper's
+    /// constant step size `alpha = 1/L`.
+    pub fn lipschitz(&self, c: f32) -> f64 {
+        let mut max_sq = 0f64;
+        for r in 0..self.rows {
+            let s = crate::math::nrm2_sq(self.row(r));
+            if s > max_sq {
+                max_sq = s;
+            }
+        }
+        max_sq / 4.0 + c as f64
+    }
+
+    // ---------------------------------------------------------------------
+    // .sxb serialization
+    // ---------------------------------------------------------------------
+
+    /// Write the `.sxb` binary encoding.
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        let f = std::fs::File::create(path)?;
+        let mut w = BufWriter::new(f);
+        w.write_all(MAGIC)?;
+        w.write_all(&VERSION.to_le_bytes())?;
+        w.write_all(&(self.rows as u64).to_le_bytes())?;
+        w.write_all(&(self.cols as u64).to_le_bytes())?;
+        write_f32s(&mut w, &self.y)?;
+        write_f32s(&mut w, &self.x)?;
+        w.flush()?;
+        Ok(())
+    }
+
+    /// Load a `.sxb` file fully into memory.
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let name = path
+            .as_ref()
+            .file_stem()
+            .map(|s| s.to_string_lossy().into_owned())
+            .unwrap_or_else(|| "dataset".into());
+        let f = std::fs::File::open(path.as_ref())?;
+        let mut r = BufReader::new(f);
+        let mut magic = [0u8; 4];
+        r.read_exact(&mut magic)?;
+        if &magic != MAGIC {
+            return Err(Error::DatasetParse { line: 0, msg: "bad .sxb magic".into() });
+        }
+        let mut b4 = [0u8; 4];
+        r.read_exact(&mut b4)?;
+        let version = u32::from_le_bytes(b4);
+        if version != VERSION {
+            return Err(Error::DatasetParse {
+                line: 0,
+                msg: format!("unsupported .sxb version {version}"),
+            });
+        }
+        let mut b8 = [0u8; 8];
+        r.read_exact(&mut b8)?;
+        let rows = u64::from_le_bytes(b8) as usize;
+        r.read_exact(&mut b8)?;
+        let cols = u64::from_le_bytes(b8) as usize;
+        if rows == 0 || cols == 0 || rows.checked_mul(cols).is_none() {
+            return Err(Error::DatasetParse { line: 0, msg: "bad .sxb dims".into() });
+        }
+        let y = read_f32s(&mut r, rows)?;
+        let x = read_f32s(&mut r, rows * cols)?;
+        DenseDataset::new(name, cols, x, y)
+    }
+}
+
+fn write_f32s<W: Write>(w: &mut W, xs: &[f32]) -> Result<()> {
+    // bulk little-endian write; f32::to_le_bytes per element is the portable
+    // form and BufWriter coalesces it
+    for v in xs {
+        w.write_all(&v.to_le_bytes())?;
+    }
+    Ok(())
+}
+
+fn read_f32s<R: Read>(r: &mut R, count: usize) -> Result<Vec<f32>> {
+    let mut raw = vec![0u8; count * 4];
+    r.read_exact(&mut raw)?;
+    let mut out = Vec::with_capacity(count);
+    for ch in raw.chunks_exact(4) {
+        out.push(f32::from_le_bytes([ch[0], ch[1], ch[2], ch[3]]));
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy() -> DenseDataset {
+        let x = vec![
+            1.0, 2.0, //
+            3.0, 4.0, //
+            5.0, 6.0, //
+        ];
+        DenseDataset::new("toy", 2, x, vec![1.0, -1.0, 1.0]).unwrap()
+    }
+
+    #[test]
+    fn accessors() {
+        let d = toy();
+        assert_eq!((d.rows(), d.cols()), (3, 2));
+        assert_eq!(d.row(1), &[3.0, 4.0]);
+        let (xs, ys) = d.rows_slice(1, 3);
+        assert_eq!(xs, &[3.0, 4.0, 5.0, 6.0]);
+        assert_eq!(ys, &[-1.0, 1.0]);
+    }
+
+    #[test]
+    fn rejects_bad_shapes_and_labels() {
+        assert!(DenseDataset::new("t", 2, vec![1.0; 5], vec![1.0, -1.0]).is_err());
+        assert!(DenseDataset::new("t", 2, vec![1.0; 4], vec![1.0, 0.5]).is_err());
+        assert!(DenseDataset::new("t", 0, vec![], vec![]).is_err());
+    }
+
+    #[test]
+    fn row_extents_are_contiguous_and_disjoint() {
+        let d = toy();
+        let (lo0, hi0) = d.row_extent(0);
+        let (lo1, hi1) = d.row_extent(1);
+        assert_eq!(hi0 - lo0, 8); // 2 cols * 4 bytes
+        assert_eq!(hi0, lo1);
+        assert_eq!(hi1 - lo1, 8);
+        assert_eq!(lo0, HEADER_BYTES + 4 * 3);
+        assert_eq!(d.file_bytes(), HEADER_BYTES + 12 + 24);
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let d = toy();
+        let dir = std::env::temp_dir().join(format!("sxb_test_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("toy.sxb");
+        d.save(&p).unwrap();
+        let d2 = DenseDataset::load(&p).unwrap();
+        assert_eq!(d2.rows(), 3);
+        assert_eq!(d2.cols(), 2);
+        assert_eq!(d2.x(), d.x());
+        assert_eq!(d2.y(), d.y());
+        assert_eq!(std::fs::metadata(&p).unwrap().len(), d.file_bytes());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn load_rejects_garbage() {
+        let dir = std::env::temp_dir().join(format!("sxb_bad_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("bad.sxb");
+        std::fs::write(&p, b"NOPE").unwrap();
+        assert!(DenseDataset::load(&p).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn lipschitz_bounds_max_row_norm() {
+        let d = toy();
+        // max row norm^2 = 25+36 = 61
+        assert!((d.lipschitz(0.5) - (61.0 / 4.0 + 0.5)).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,13 @@
+//! Datasets: in-memory dense store, on-disk binary layout, LIBSVM ingestion,
+//! synthetic stand-ins for the paper's eight benchmark datasets, and the
+//! dataset registry that maps names to generation profiles.
+
+pub mod batch;
+pub mod dense;
+pub mod libsvm;
+pub mod registry;
+pub mod scaling;
+pub mod synth;
+
+pub use batch::{BatchAssembler, BatchView};
+pub use dense::DenseDataset;

@@ -1,0 +1,269 @@
+//! Dataset registry: the paper's eight benchmarks as scaled synthetic
+//! profiles (Table 1 → DESIGN.md §3), plus lookup of real LIBSVM files.
+//!
+//! Feature dims here MUST stay in sync with `python/compile/aot.py`
+//! (`FEATURE_DIMS`) — the AOT grid lowers one set of modules per dim.
+
+use std::path::Path;
+
+use crate::data::dense::DenseDataset;
+use crate::data::libsvm::{self, LabelMap};
+use crate::data::synth::{self, FeatureDist, SynthSpec};
+use crate::error::{Error, Result};
+
+/// One registry entry: scaled profile + pointer to the real dataset.
+#[derive(Debug, Clone)]
+pub struct DatasetProfile {
+    pub spec: SynthSpec,
+    /// Original (paper, Table 1): rows, features — for documentation and
+    /// scale-factor reporting.
+    pub paper_rows: usize,
+    pub paper_cols: usize,
+    /// LIBSVM file name to prefer when present under the data dir.
+    pub libsvm_file: &'static str,
+    pub label_map: LabelMap,
+    /// Regularization coefficient used by the experiments.
+    pub reg_c: f32,
+}
+
+/// All eight profiles (paper Table 1, scaled — DESIGN.md §3).
+pub fn profiles() -> Vec<DatasetProfile> {
+    vec![
+        DatasetProfile {
+            spec: SynthSpec {
+                name: "higgs-mini",
+                rows: 120_000,
+                cols: 28,
+                dist: FeatureDist::Gaussian,
+                flip_prob: 0.12,
+                margin_noise: 1.2,
+                pos_fraction: 0.53,
+            },
+            paper_rows: 11_000_000,
+            paper_cols: 28,
+            libsvm_file: "HIGGS",
+            label_map: LabelMap::Binary,
+            reg_c: 1e-4,
+        },
+        DatasetProfile {
+            spec: SynthSpec {
+                name: "susy-mini",
+                rows: 100_000,
+                cols: 18,
+                dist: FeatureDist::Gaussian,
+                flip_prob: 0.10,
+                margin_noise: 1.0,
+                pos_fraction: 0.46,
+            },
+            paper_rows: 5_000_000,
+            paper_cols: 18,
+            libsvm_file: "SUSY",
+            label_map: LabelMap::Binary,
+            reg_c: 1e-4,
+        },
+        DatasetProfile {
+            spec: SynthSpec {
+                name: "sensit-mini",
+                rows: 40_000,
+                cols: 100,
+                dist: FeatureDist::Correlated { rank: 12 },
+                flip_prob: 0.08,
+                margin_noise: 0.8,
+                pos_fraction: 0.5,
+            },
+            paper_rows: 78_823,
+            paper_cols: 100,
+            libsvm_file: "combined",
+            label_map: LabelMap::OneVsRest(3),
+            reg_c: 1e-4,
+        },
+        DatasetProfile {
+            spec: SynthSpec {
+                name: "mnist-mini",
+                rows: 20_000,
+                cols: 256,
+                dist: FeatureDist::SparseUniform { density: 0.25 },
+                flip_prob: 0.02,
+                margin_noise: 0.3,
+                pos_fraction: 0.49,
+            },
+            paper_rows: 60_000,
+            paper_cols: 780,
+            libsvm_file: "mnist",
+            label_map: LabelMap::OddEven,
+            reg_c: 1e-4,
+        },
+        DatasetProfile {
+            spec: SynthSpec {
+                name: "protein-mini",
+                rows: 18_000,
+                cols: 128,
+                dist: FeatureDist::Correlated { rank: 16 },
+                flip_prob: 0.15,
+                margin_noise: 1.0,
+                pos_fraction: 0.45,
+            },
+            paper_rows: 17_766,
+            paper_cols: 357,
+            libsvm_file: "protein",
+            label_map: LabelMap::OneVsRest(1),
+            reg_c: 1e-4,
+        },
+        DatasetProfile {
+            spec: SynthSpec {
+                name: "rcv1-mini",
+                rows: 20_000,
+                cols: 512,
+                dist: FeatureDist::SparseUniform { density: 0.02 },
+                flip_prob: 0.03,
+                margin_noise: 0.2,
+                pos_fraction: 0.52,
+            },
+            paper_rows: 20_242,
+            paper_cols: 47_236,
+            libsvm_file: "rcv1_train.binary",
+            label_map: LabelMap::Binary,
+            reg_c: 1e-4,
+        },
+        DatasetProfile {
+            spec: SynthSpec {
+                name: "covtype-mini",
+                rows: 80_000,
+                cols: 54,
+                dist: FeatureDist::SparseUniform { density: 0.4 },
+                flip_prob: 0.05,
+                margin_noise: 0.5,
+                pos_fraction: 0.51,
+            },
+            paper_rows: 581_012,
+            paper_cols: 54,
+            libsvm_file: "covtype.libsvm.binary",
+            label_map: LabelMap::Binary,
+            reg_c: 1e-4,
+        },
+        DatasetProfile {
+            spec: SynthSpec {
+                name: "ijcnn1-mini",
+                rows: 50_000,
+                cols: 22,
+                dist: FeatureDist::Gaussian,
+                flip_prob: 0.07,
+                margin_noise: 0.7,
+                pos_fraction: 0.10,
+            },
+            paper_rows: 49_990,
+            paper_cols: 22,
+            libsvm_file: "ijcnn1",
+            label_map: LabelMap::Binary,
+            reg_c: 1e-4,
+        },
+    ]
+}
+
+/// Names of every registered dataset.
+pub fn names() -> Vec<&'static str> {
+    profiles().iter().map(|p| p.spec.name).collect()
+}
+
+/// Look a profile up by name.
+pub fn profile(name: &str) -> Result<DatasetProfile> {
+    profiles()
+        .into_iter()
+        .find(|p| p.spec.name == name)
+        .ok_or_else(|| Error::Config(format!("unknown dataset '{name}' (known: {:?})", names())))
+}
+
+/// Generate the synthetic stand-in for `name`.
+pub fn generate(name: &str, seed: u64) -> Result<DenseDataset> {
+    let p = profile(name)?;
+    synth::generate(&p.spec, seed)
+}
+
+/// Resolve a dataset: prefer `<data_dir>/<name>.sxb`, then the real LIBSVM
+/// file, then generate the synthetic stand-in (and cache it as `.sxb`).
+pub fn resolve(name: &str, data_dir: impl AsRef<Path>, seed: u64) -> Result<DenseDataset> {
+    let p = profile(name)?;
+    let dir = data_dir.as_ref();
+    let sxb = dir.join(format!("{name}.sxb"));
+    if sxb.is_file() {
+        return DenseDataset::load(&sxb);
+    }
+    let raw = dir.join(p.libsvm_file);
+    if raw.is_file() {
+        let mut ds = libsvm::parse_libsvm(&raw, Some(p.spec.cols), p.label_map,
+                                          Some(p.spec.rows))?;
+        crate::data::scaling::standardize(&mut ds);
+        return Ok(ds);
+    }
+    let ds = synth::generate(&p.spec, seed)?;
+    if dir.is_dir() {
+        ds.save(&sxb).ok(); // cache is best-effort
+    }
+    Ok(ds)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn eight_profiles_matching_paper_dims() {
+        let ps = profiles();
+        assert_eq!(ps.len(), 8);
+        // paper Table 1 dims preserved where the stand-in is unscaled
+        let by_name = |n: &str| ps.iter().find(|p| p.spec.name == n).unwrap().clone();
+        assert_eq!(by_name("higgs-mini").paper_cols, 28);
+        assert_eq!(by_name("higgs-mini").spec.cols, 28);
+        assert_eq!(by_name("susy-mini").spec.cols, 18);
+        assert_eq!(by_name("covtype-mini").spec.cols, 54);
+        assert_eq!(by_name("ijcnn1-mini").spec.cols, 22);
+    }
+
+    #[test]
+    fn dims_match_aot_grid() {
+        // python/compile/aot.py FEATURE_DIMS = (18,22,28,54,100,128,256,512)
+        let aot_dims = [18, 22, 28, 54, 100, 128, 256, 512];
+        for p in profiles() {
+            assert!(
+                aot_dims.contains(&p.spec.cols),
+                "{} dim {} missing from AOT grid",
+                p.spec.name,
+                p.spec.cols
+            );
+        }
+    }
+
+    #[test]
+    fn unknown_name_errors() {
+        assert!(profile("nope").is_err());
+        assert!(generate("nope", 0).is_err());
+    }
+
+    #[test]
+    fn generate_small_profile() {
+        // trim a profile to keep the test fast
+        let mut p = profile("ijcnn1-mini").unwrap();
+        p.spec.rows = 2000;
+        let d = synth::generate(&p.spec, 42).unwrap();
+        assert_eq!(d.rows(), 2000);
+        assert_eq!(d.cols(), 22);
+        // ijcnn1 is ~10% positive
+        let pos = d.y().iter().filter(|&&v| v > 0.0).count() as f64 / 2000.0;
+        assert!(pos < 0.2, "pos={pos}");
+    }
+
+    #[test]
+    fn resolve_falls_back_to_synth_and_caches() {
+        let dir = std::env::temp_dir().join(format!("sx_reg_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        // use the smallest profile for speed: protein-mini is 18k rows; use
+        // resolve on a generated tiny spec instead via direct generate+save
+        let mut p = profile("ijcnn1-mini").unwrap();
+        p.spec.rows = 500;
+        let d = synth::generate(&p.spec, 1).unwrap();
+        d.save(dir.join("ijcnn1-mini.sxb")).unwrap();
+        let d2 = resolve("ijcnn1-mini", &dir, 1).unwrap();
+        assert_eq!(d2.rows(), 500);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,46 @@
+//! Crate-wide error type.
+
+/// Unified error for all samplex subsystems.
+#[derive(Debug, thiserror::Error)]
+pub enum Error {
+    /// I/O failures (dataset files, artifact files, reports).
+    #[error("io error: {0}")]
+    Io(#[from] std::io::Error),
+
+    /// XLA / PJRT runtime failures.
+    #[error("xla error: {0}")]
+    Xla(String),
+
+    /// Malformed dataset file (LIBSVM text or .sxb binary).
+    #[error("dataset parse error at line {line}: {msg}")]
+    DatasetParse { line: usize, msg: String },
+
+    /// Configuration validation failure.
+    #[error("config error: {0}")]
+    Config(String),
+
+    /// Manifest / artifact bookkeeping failure.
+    #[error("artifact error: {0}")]
+    Artifact(String),
+
+    /// Shape mismatch between coordinator and compiled executable.
+    #[error("shape mismatch: expected {expected}, got {got} ({context})")]
+    ShapeMismatch {
+        expected: String,
+        got: String,
+        context: String,
+    },
+
+    /// Anything else.
+    #[error("{0}")]
+    Other(String),
+}
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Xla(e.to_string())
+    }
+}
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, Error>;

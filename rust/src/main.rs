@@ -1,0 +1,464 @@
+//! `samplex` — launcher CLI for the paper-reproduction framework.
+//!
+//! ```text
+//! samplex generate-data [--all | --dataset NAME] [--out-dir data] [--seed 42]
+//! samplex train   [--config x.toml] [--dataset D] [--solver S] [--sampling K]
+//!                 [--step constant|ls] [--batch N] [--epochs N]
+//!                 [--backend native|pjrt] [--storage hdd|ssd|ram]
+//!                 [--data-dir data] [--seed N] [--trace-csv out.csv]
+//! samplex table   [--dataset D | --all] [--epochs N] [--backend B]
+//!                 [--storage P] [--data-dir data] [--summary] [--csv out.csv]
+//! samplex figure  [--datasets a,b] [--epochs N] [--solver S] [--rate-fit]
+//!                 [--backend B] [--storage P] [--data-dir data] [--csv-dir d]
+//! samplex estimate-optimum [--dataset D] [--iters N] [--data-dir data]
+//! samplex info    [--artifacts-dir artifacts]
+//! ```
+//!
+//! Argument parsing is hand-rolled: the workspace builds fully offline with
+//! only `xla` + `thiserror` as external dependencies (DESIGN.md §Dependencies).
+
+use std::collections::{HashMap, HashSet};
+
+use samplex::bench_harness;
+use samplex::config::{BackendKind, ExperimentConfig, GridConfig, StepKind};
+use samplex::data::registry;
+use samplex::error::{Error, Result};
+use samplex::metrics::ascii_plot;
+use samplex::sampling::SamplingKind;
+use samplex::solvers::SolverKind;
+use samplex::storage::profile::DeviceProfile;
+
+/// Minimal `--key value` / `--flag` parser.
+struct Flags {
+    values: HashMap<String, String>,
+    switches: HashSet<String>,
+}
+
+impl Flags {
+    fn parse(args: &[String], boolean: &[&str]) -> Result<Flags> {
+        let mut values = HashMap::new();
+        let mut switches = HashSet::new();
+        let mut i = 0;
+        while i < args.len() {
+            let a = &args[i];
+            let key = a
+                .strip_prefix("--")
+                .ok_or_else(|| Error::Config(format!("unexpected argument '{a}'")))?;
+            if boolean.contains(&key) {
+                switches.insert(key.to_string());
+                i += 1;
+            } else {
+                let v = args
+                    .get(i + 1)
+                    .ok_or_else(|| Error::Config(format!("--{key} needs a value")))?;
+                values.insert(key.to_string(), v.clone());
+                i += 2;
+            }
+        }
+        Ok(Flags { values, switches })
+    }
+
+    fn get(&self, k: &str) -> Option<&str> {
+        self.values.get(k).map(|s| s.as_str())
+    }
+
+    fn get_or(&self, k: &str, default: &str) -> String {
+        self.get(k).unwrap_or(default).to_string()
+    }
+
+    fn get_usize(&self, k: &str, default: usize) -> Result<usize> {
+        match self.get(k) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|e| Error::Config(format!("--{k}: {e}"))),
+        }
+    }
+
+    fn get_u64(&self, k: &str, default: u64) -> Result<u64> {
+        match self.get(k) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|e| Error::Config(format!("--{k}: {e}"))),
+        }
+    }
+
+    fn has(&self, k: &str) -> bool {
+        self.switches.contains(k)
+    }
+}
+
+const USAGE: &str = "samplex <generate-data|train|table|figure|sweep|estimate-optimum|info> [flags]
+  (see `samplex help` or README.md for flag reference)";
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = run(&args) {
+        eprintln!("error: {e}");
+        eprintln!("{USAGE}");
+        std::process::exit(1);
+    }
+}
+
+fn run(args: &[String]) -> Result<()> {
+    let Some(cmd) = args.first() else {
+        return Err(Error::Config("missing subcommand".into()));
+    };
+    let rest = &args[1..];
+    match cmd.as_str() {
+        "generate-data" => cmd_generate_data(rest),
+        "train" => cmd_train(rest),
+        "table" => cmd_table(rest),
+        "figure" => cmd_figure(rest),
+        "sweep" => cmd_sweep(rest),
+        "estimate-optimum" => cmd_estimate_optimum(rest),
+        "info" => cmd_info(rest),
+        "help" | "--help" | "-h" => {
+            println!("{USAGE}");
+            Ok(())
+        }
+        other => Err(Error::Config(format!("unknown subcommand '{other}'"))),
+    }
+}
+
+fn cmd_generate_data(args: &[String]) -> Result<()> {
+    let f = Flags::parse(args, &["all"])?;
+    let out_dir = f.get_or("out-dir", "data");
+    let seed = f.get_u64("seed", 42)?;
+    std::fs::create_dir_all(&out_dir)?;
+    let names: Vec<String> = if f.has("all") {
+        registry::names().into_iter().map(String::from).collect()
+    } else {
+        vec![f
+            .get("dataset")
+            .ok_or_else(|| Error::Config("need --dataset or --all".into()))?
+            .to_string()]
+    };
+    for name in names {
+        let ds = registry::generate(&name, seed)?;
+        let path = std::path::Path::new(&out_dir).join(format!("{name}.sxb"));
+        ds.save(&path)?;
+        println!(
+            "wrote {} ({} rows x {} cols, {:.1} MiB)",
+            path.display(),
+            ds.rows(),
+            ds.cols(),
+            ds.file_bytes() as f64 / (1024.0 * 1024.0)
+        );
+    }
+    Ok(())
+}
+
+fn cmd_train(args: &[String]) -> Result<()> {
+    let f = Flags::parse(args, &["pre-shuffle"])?;
+    let mut cfg = match f.get("config") {
+        Some(p) => ExperimentConfig::from_toml_file(p)?,
+        None => ExperimentConfig::default(),
+    };
+    if let Some(v) = f.get("dataset") {
+        cfg.dataset = v.to_string();
+    }
+    if let Some(v) = f.get("solver") {
+        cfg.solver = SolverKind::parse(v)?;
+    }
+    if let Some(v) = f.get("sampling") {
+        cfg.sampling = SamplingKind::parse(v)?;
+    }
+    if let Some(v) = f.get("step") {
+        cfg.step = StepKind::parse(v)?;
+    }
+    cfg.batch_size = f.get_usize("batch", cfg.batch_size)?;
+    cfg.epochs = f.get_usize("epochs", cfg.epochs)?;
+    if let Some(v) = f.get("backend") {
+        cfg.backend = BackendKind::parse(v)?;
+    }
+    if let Some(v) = f.get("storage") {
+        cfg.storage.profile = v.to_string();
+    }
+    if let Some(v) = f.get("data-dir") {
+        cfg.data_dir = v.to_string();
+    }
+    cfg.seed = f.get_u64("seed", cfg.seed)?;
+    cfg.prefetch_depth = f.get_usize("prefetch", cfg.prefetch_depth)?;
+    if f.has("pre-shuffle") {
+        cfg.pre_shuffle = true;
+    }
+    cfg.name = format!(
+        "{}-{}-{}",
+        cfg.dataset,
+        cfg.solver.label(),
+        cfg.sampling.label()
+    );
+    let ds = registry::resolve(&cfg.dataset, &cfg.data_dir, cfg.seed)?;
+    let report = samplex::train::run_experiment(&cfg, &ds)?;
+    println!("{}", report.summary());
+    println!(
+        "  breakdown: sim-access {:.4}s | assemble {:.4}s | compute {:.4}s | wall {:.4}s",
+        report.time.sim_access_s, report.time.assemble_s, report.time.compute_s, report.time.wall_s
+    );
+    println!(
+        "  device: {} seeks, {} blocks, {:.1} MiB transferred",
+        report.time.access.seeks,
+        report.time.access.blocks_transferred,
+        report.time.access.bytes_transferred as f64 / (1024.0 * 1024.0)
+    );
+    if let Some(p) = f.get("trace-csv") {
+        samplex::metrics::csv::write_trace(p, &report.name, &report.trace)?;
+        println!("  trace -> {p}");
+    }
+    Ok(())
+}
+
+fn cmd_table(args: &[String]) -> Result<()> {
+    let f = Flags::parse(args, &["all", "summary"])?;
+    let epochs = f.get_usize("epochs", 30)?;
+    let backend = BackendKind::parse(&f.get_or("backend", "native"))?;
+    let storage = f.get_or("storage", "hdd");
+    let data_dir = f.get_or("data-dir", "data");
+    let datasets: Vec<String> = if f.has("all") {
+        vec!["higgs-mini".into(), "susy-mini".into(), "covtype-mini".into()]
+    } else {
+        vec![f.get_or("dataset", "covtype-mini")]
+    };
+    for dsname in datasets {
+        let mut grid = GridConfig::paper_table(&dsname);
+        grid.base.epochs = epochs;
+        grid.base.backend = backend;
+        grid.base.storage.profile = storage.clone();
+        grid.base.data_dir = data_dir.clone();
+        let ds = registry::resolve(&dsname, &data_dir, grid.base.seed)?;
+        let mut progress = |r: &samplex::train::TrainReport| {
+            eprintln!("  done: {}", r.summary());
+        };
+        let rows = bench_harness::run_table(&grid, &ds, Some(&mut progress))?;
+        if !f.has("summary") {
+            println!("{}", bench_harness::render_table(&dsname, epochs, &rows));
+        }
+        println!("{}", bench_harness::speedup_summary(&rows));
+        if let Some(p) = f.get("csv") {
+            let rows_csv: Vec<Vec<String>> = rows
+                .iter()
+                .map(|r| {
+                    vec![
+                        r.solver.clone(),
+                        r.sampling.clone(),
+                        r.batch.to_string(),
+                        r.step.clone(),
+                        format!("{:.6}", r.time_s),
+                        format!("{:.12}", r.objective),
+                    ]
+                })
+                .collect();
+            samplex::metrics::csv::write_rows(
+                p,
+                &["solver", "sampling", "batch", "step", "time_s", "objective"],
+                &rows_csv,
+            )?;
+            println!("rows -> {p}");
+        }
+    }
+    Ok(())
+}
+
+fn cmd_figure(args: &[String]) -> Result<()> {
+    let f = Flags::parse(args, &["rate-fit"])?;
+    let epochs = f.get_usize("epochs", 30)?;
+    let backend = BackendKind::parse(&f.get_or("backend", "native"))?;
+    let storage = f.get_or("storage", "hdd");
+    let data_dir = f.get_or("data-dir", "data");
+    let datasets = f.get_or("datasets", "susy-mini");
+    for dsname in datasets.split(',').filter(|s| !s.is_empty()) {
+        let mut grid = GridConfig::paper_figure(dsname);
+        grid.base.epochs = epochs;
+        grid.base.backend = backend;
+        grid.base.storage.profile = storage.clone();
+        grid.base.data_dir = data_dir.clone();
+        if let Some(s) = f.get("solver") {
+            grid.solvers = vec![SolverKind::parse(s)?];
+        }
+        let ds = registry::resolve(dsname, &data_dir, grid.base.seed)?;
+        let mut be = samplex::backend::NativeBackend::new();
+        let c = samplex::train::reg_for(&grid.base);
+        eprintln!("estimating p* for {dsname}…");
+        let p_star = samplex::train::estimate_optimum(&mut be, &ds, c, 3000)?;
+        let mut progress = |r: &samplex::train::TrainReport| {
+            eprintln!("  done: {}", r.summary());
+        };
+        let series = bench_harness::run_figure(&grid, &ds, p_star, Some(&mut progress))?;
+        // group the three samplings of each setting into one plot
+        let mut by_setting: std::collections::BTreeMap<String, Vec<&bench_harness::FigureSeries>> =
+            Default::default();
+        for s in &series {
+            let setting = s.label.replace(&format!("-{}-", s.sampling.label()), "-*-");
+            by_setting.entry(setting).or_default().push(s);
+        }
+        println!("=== {dsname}: f(w) - p*  vs  training time (p*={p_star:.10}) ===");
+        for (setting, group) in by_setting {
+            let plot_series: Vec<ascii_plot::Series<'_>> = group
+                .iter()
+                .map(|s| ascii_plot::Series {
+                    label: s.sampling.label().into(),
+                    glyph: glyph_for(s.sampling),
+                    trace: &s.trace,
+                })
+                .collect();
+            println!("--- {setting} ---");
+            println!("{}", ascii_plot::render(&plot_series, p_star, 72, 14));
+            if f.has("rate-fit") {
+                for s in group {
+                    println!(
+                        "    rate[{}] = {:+.4}/epoch",
+                        s.sampling.label(),
+                        s.rate.unwrap_or(f64::NAN)
+                    );
+                }
+            }
+        }
+        if let Some(dir) = f.get("csv-dir") {
+            std::fs::create_dir_all(dir)?;
+            for s in &series {
+                let p = std::path::Path::new(dir).join(format!("{}.csv", s.label));
+                samplex::metrics::csv::write_trace(&p, &s.label, &s.trace)?;
+            }
+            println!("series CSVs -> {dir}/");
+        }
+    }
+    Ok(())
+}
+
+fn glyph_for(k: SamplingKind) -> char {
+    match k {
+        SamplingKind::Rs => 'r',
+        SamplingKind::Cs => 'c',
+        SamplingKind::Ss => 's',
+        SamplingKind::Rswr => 'w',
+        SamplingKind::Stratified => 't',
+    }
+}
+
+/// Storage-model ablations: `--param block|cache`, comma-separated values.
+fn cmd_sweep(args: &[String]) -> Result<()> {
+    let f = Flags::parse(args, &[])?;
+    let dataset = f.get_or("dataset", "covtype-mini");
+    let data_dir = f.get_or("data-dir", "data");
+    let param = f.get_or("param", "block");
+    let epochs = f.get_usize("epochs", 5)?;
+    let values: Vec<u64> = f
+        .get_or("values", if param == "block" { "1,4,16,64,256" } else { "0,1,4,16,64" })
+        .split(',')
+        .filter(|s| !s.is_empty())
+        .map(|s| s.parse().map_err(|e| Error::Config(format!("--values: {e}"))))
+        .collect::<Result<_>>()?;
+
+    let ds = registry::resolve(&dataset, &data_dir, 42)?;
+    let mut base = ExperimentConfig::quick(&dataset, SolverKind::Mbsgd, SamplingKind::Ss,
+                                           f.get_usize("batch", 500)?);
+    base.epochs = epochs;
+    base.storage.profile = f.get_or("storage", "hdd");
+    base.storage.cache_mib = 0;
+
+    match param.as_str() {
+        "block" => {
+            println!("block-size sweep — {dataset}, {} profile, {epochs} epochs",
+                     base.storage.profile);
+            let pts = samplex::bench_harness::ablation::block_size_sweep(&base, &ds, &values)?;
+            println!("{}", samplex::bench_harness::ablation::render(&pts, "block_kib"));
+        }
+        "cache" => {
+            println!("cache-size sweep — {dataset}, {} profile, {epochs} epochs",
+                     base.storage.profile);
+            let pts = samplex::bench_harness::ablation::cache_size_sweep(&base, &ds, &values)?;
+            println!("{}", samplex::bench_harness::ablation::render(&pts, "cache_mib"));
+        }
+        other => return Err(Error::Config(format!("--param must be block|cache, got {other}"))),
+    }
+    Ok(())
+}
+
+fn cmd_estimate_optimum(args: &[String]) -> Result<()> {
+    let f = Flags::parse(args, &[])?;
+    let dataset = f.get_or("dataset", "covtype-mini");
+    let iters = f.get_usize("iters", 5000)?;
+    let data_dir = f.get_or("data-dir", "data");
+    let seed = f.get_u64("seed", 42)?;
+    let ds = registry::resolve(&dataset, &data_dir, seed)?;
+    let mut be = samplex::backend::NativeBackend::new();
+    let c = registry::profile(&dataset).map(|p| p.reg_c).unwrap_or(1e-4);
+    let p_star = samplex::train::estimate_optimum(&mut be, &ds, c, iters)?;
+    println!("{dataset}: p* ≈ {p_star:.12} (C={c}, {iters} acc-GD iters)");
+    Ok(())
+}
+
+fn cmd_info(args: &[String]) -> Result<()> {
+    let f = Flags::parse(args, &[])?;
+    let artifacts_dir = f.get_or("artifacts-dir", "artifacts");
+    println!("datasets (paper Table 1 -> scaled stand-ins):");
+    for p in registry::profiles() {
+        println!(
+            "  {:<14} {:>8} x {:<4}  (paper: {:>9} x {:<5}) C={}",
+            p.spec.name, p.spec.rows, p.spec.cols, p.paper_rows, p.paper_cols, p.reg_c
+        );
+    }
+    println!("\ndevice profiles:");
+    for d in [DeviceProfile::hdd(), DeviceProfile::ssd(), DeviceProfile::ram()] {
+        println!(
+            "  {:<4} seek={:>9.2e}s rot={:>9.2e}s io={:>9.2e}s bw={:>10.3e}B/s block={}B",
+            d.name, d.avg_seek_s, d.avg_rotational_s, d.per_io_latency_s,
+            d.transfer_bytes_per_s, d.block_bytes
+        );
+    }
+    match samplex::runtime::Manifest::load(
+        std::path::Path::new(&artifacts_dir).join("manifest.tsv"),
+    ) {
+        Ok(m) => {
+            println!("\nartifacts: {} modules in {artifacts_dir}/", m.entries.len());
+            let mut eps: Vec<&String> = m.entries.values().map(|e| &e.entrypoint).collect();
+            eps.sort();
+            eps.dedup();
+            println!("  entrypoints: {eps:?}");
+        }
+        Err(e) => println!("\nartifacts: unavailable ({e})"),
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn s(v: &[&str]) -> Vec<String> {
+        v.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn flags_parse_values_and_switches() {
+        let f = Flags::parse(&s(&["--dataset", "susy-mini", "--all", "--epochs", "7"]),
+                             &["all"]).unwrap();
+        assert_eq!(f.get("dataset"), Some("susy-mini"));
+        assert!(f.has("all"));
+        assert_eq!(f.get_usize("epochs", 1).unwrap(), 7);
+        assert_eq!(f.get_or("missing", "dflt"), "dflt");
+        assert_eq!(f.get_u64("seed", 99).unwrap(), 99);
+    }
+
+    #[test]
+    fn flags_reject_malformed() {
+        assert!(Flags::parse(&s(&["notflag"]), &[]).is_err());
+        assert!(Flags::parse(&s(&["--key"]), &[]).is_err());
+        let f = Flags::parse(&s(&["--epochs", "abc"]), &[]).unwrap();
+        assert!(f.get_usize("epochs", 1).is_err());
+    }
+
+    #[test]
+    fn run_rejects_unknown_subcommand() {
+        assert!(run(&s(&["frobnicate"])).is_err());
+        assert!(run(&[]).is_err());
+        run(&s(&["help"])).unwrap();
+    }
+
+    #[test]
+    fn info_runs_without_artifacts() {
+        run(&s(&["info", "--artifacts-dir", "/nonexistent"])).unwrap();
+    }
+}

@@ -1,0 +1,201 @@
+//! Dense vector primitives (f32 storage, f64 accumulation for reductions).
+//!
+//! The solver algebra is O(n) per iteration — negligible next to the O(Bn)
+//! gradient — but it runs every inner iteration, so these are allocation-free
+//! and written to autovectorize.
+
+/// `y += a * x` (8-lane unrolled via chunks_exact so the bounds checks
+/// vanish and the loop vectorizes; see EXPERIMENTS.md §Perf).
+#[inline]
+pub fn axpy(a: f32, x: &[f32], y: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    let mut yc = y.chunks_exact_mut(8);
+    let mut xc = x.chunks_exact(8);
+    for (ys, xs) in (&mut yc).zip(&mut xc) {
+        for k in 0..8 {
+            ys[k] += a * xs[k];
+        }
+    }
+    for (yi, xi) in yc.into_remainder().iter_mut().zip(xc.remainder()) {
+        *yi += a * *xi;
+    }
+}
+
+/// `x *= a`.
+#[inline]
+pub fn scal(a: f32, x: &mut [f32]) {
+    for xi in x.iter_mut() {
+        *xi *= a;
+    }
+}
+
+/// Dot product with f64 accumulator.
+#[inline]
+pub fn dot(x: &[f32], y: &[f32]) -> f64 {
+    debug_assert_eq!(x.len(), y.len());
+    let mut acc = 0f64;
+    for (xi, yi) in x.iter().zip(y) {
+        acc += (*xi as f64) * (*yi as f64);
+    }
+    acc
+}
+
+/// Squared Euclidean norm with f64 accumulator.
+#[inline]
+pub fn nrm2_sq(x: &[f32]) -> f64 {
+    let mut acc = 0f64;
+    for xi in x {
+        acc += (*xi as f64) * (*xi as f64);
+    }
+    acc
+}
+
+/// f32 dot used in the row-major matvec hot loop.
+///
+/// Strict-IEEE f32 `acc += x*y` is a serial dependency chain the compiler
+/// must not reorder, so the naive loop runs at ~1 add per 4 cycles. Eight
+/// independent accumulators break the chain (≈4–5× on this hot path — see
+/// EXPERIMENTS.md §Perf); the final tree-sum changes association, which is
+/// fine at the f32 tolerance the backends are compared under.
+#[inline]
+pub fn dot_f32(x: &[f32], y: &[f32]) -> f32 {
+    debug_assert_eq!(x.len(), y.len());
+    let mut acc = [0f32; 8];
+    let mut xc = x.chunks_exact(8);
+    let mut yc = y.chunks_exact(8);
+    for (xs, ys) in (&mut xc).zip(&mut yc) {
+        for k in 0..8 {
+            acc[k] += xs[k] * ys[k];
+        }
+    }
+    let mut tail = 0f32;
+    for (xi, yi) in xc.remainder().iter().zip(yc.remainder()) {
+        tail += xi * yi;
+    }
+    (((acc[0] + acc[1]) + (acc[2] + acc[3])) + ((acc[4] + acc[5]) + (acc[6] + acc[7]))) + tail
+}
+
+/// Four simultaneous dot products against a shared `w`: `w` streams through
+/// registers once for four rows, and the four accumulator chains keep the
+/// FMA pipes full. Rows must all have length `w.len()`.
+#[inline]
+pub fn dot4_f32(x0: &[f32], x1: &[f32], x2: &[f32], x3: &[f32], w: &[f32]) -> [f32; 4] {
+    let n = w.len();
+    debug_assert!(x0.len() == n && x1.len() == n && x2.len() == n && x3.len() == n);
+    let mut a0 = 0f32;
+    let mut a1 = 0f32;
+    let mut a2 = 0f32;
+    let mut a3 = 0f32;
+    let mut b0 = 0f32;
+    let mut b1 = 0f32;
+    let mut b2 = 0f32;
+    let mut b3 = 0f32;
+    let mut k = 0;
+    while k + 2 <= n {
+        let (wk, wk1) = (w[k], w[k + 1]);
+        a0 += x0[k] * wk;
+        b0 += x0[k + 1] * wk1;
+        a1 += x1[k] * wk;
+        b1 += x1[k + 1] * wk1;
+        a2 += x2[k] * wk;
+        b2 += x2[k + 1] * wk1;
+        a3 += x3[k] * wk;
+        b3 += x3[k + 1] * wk1;
+        k += 2;
+    }
+    if k < n {
+        let wk = w[k];
+        a0 += x0[k] * wk;
+        a1 += x1[k] * wk;
+        a2 += x2[k] * wk;
+        a3 += x3[k] * wk;
+    }
+    [a0 + b0, a1 + b1, a2 + b2, a3 + b3]
+}
+
+/// Fused rank-4 update `y += c0 x0 + c1 x1 + c2 x2 + c3 x3`: one load+store
+/// of `y` per element instead of four (the dominant cost of the per-row
+/// axpy at larger feature dims — EXPERIMENTS.md §Perf).
+#[inline]
+#[allow(clippy::too_many_arguments)]
+pub fn axpy4(
+    c: [f32; 4],
+    x0: &[f32],
+    x1: &[f32],
+    x2: &[f32],
+    x3: &[f32],
+    y: &mut [f32],
+) {
+    let n = y.len();
+    debug_assert!(x0.len() == n && x1.len() == n && x2.len() == n && x3.len() == n);
+    for k in 0..n {
+        y[k] += c[0] * x0[k] + c[1] * x1[k] + c[2] * x2[k] + c[3] * x3[k];
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dot4_matches_four_dots() {
+        let rows: Vec<Vec<f32>> = (0..4)
+            .map(|r| (0..13).map(|k| (r * 13 + k) as f32 * 0.1).collect())
+            .collect();
+        let w: Vec<f32> = (0..13).map(|k| (k as f32 - 6.0) * 0.3).collect();
+        let got = dot4_f32(&rows[0], &rows[1], &rows[2], &rows[3], &w);
+        for r in 0..4 {
+            let want = dot_f32(&rows[r], &w);
+            assert!((got[r] - want).abs() < 1e-4, "row {r}: {} vs {want}", got[r]);
+        }
+    }
+
+    #[test]
+    fn axpy4_matches_four_axpys() {
+        let rows: Vec<Vec<f32>> = (0..4)
+            .map(|r| (0..11).map(|k| (r + k) as f32 * 0.2).collect())
+            .collect();
+        let c = [0.5f32, -1.0, 2.0, 0.25];
+        let mut y1 = vec![1.0f32; 11];
+        let mut y2 = y1.clone();
+        axpy4(c, &rows[0], &rows[1], &rows[2], &rows[3], &mut y1);
+        for r in 0..4 {
+            axpy(c[r], &rows[r], &mut y2);
+        }
+        for k in 0..11 {
+            assert!((y1[k] - y2[k]).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn axpy_matches_manual() {
+        let x = [1.0f32, 2.0, 3.0];
+        let mut y = [10.0f32, 20.0, 30.0];
+        axpy(2.0, &x, &mut y);
+        assert_eq!(y, [12.0, 24.0, 36.0]);
+    }
+
+    #[test]
+    fn scal_scales() {
+        let mut x = [1.0f32, -2.0, 4.0];
+        scal(0.5, &mut x);
+        assert_eq!(x, [0.5, -1.0, 2.0]);
+    }
+
+    #[test]
+    fn dot_and_norm() {
+        let x = [1.0f32, 2.0, 2.0];
+        assert_eq!(dot(&x, &x), 9.0);
+        assert_eq!(nrm2_sq(&x), 9.0);
+        assert_eq!(dot_f32(&x, &x), 9.0);
+    }
+
+    #[test]
+    fn empty_slices_are_fine() {
+        assert_eq!(dot(&[], &[]), 0.0);
+        assert_eq!(nrm2_sq(&[]), 0.0);
+        let mut e: [f32; 0] = [];
+        axpy(1.0, &[], &mut e);
+        scal(2.0, &mut e);
+    }
+}

@@ -1,0 +1,200 @@
+//! l2-regularized logistic ERM — native mirror of `python/compile/model.py`.
+//!
+//! All routines take row-major `x` (`rows * cols` f32) and labels `y` in
+//! {-1, +1}; `rows == y.len()`. No mask/padding here: the native path always
+//! works on exact row counts (padding exists only to keep AOT shapes static).
+
+/// Numerically safe logistic sigmoid.
+#[inline]
+pub fn sigmoid(t: f32) -> f32 {
+    if t >= 0.0 {
+        1.0 / (1.0 + (-t).exp())
+    } else {
+        let e = t.exp();
+        e / (1.0 + e)
+    }
+}
+
+/// `log(1 + exp(t))` without overflow (mirrors `jnp.logaddexp(0, t)`).
+#[inline]
+pub fn log1p_exp(t: f64) -> f64 {
+    if t > 0.0 {
+        t + (-t).exp().ln_1p()
+    } else {
+        t.exp().ln_1p()
+    }
+}
+
+/// Mini-batch gradient of eq.(3) into `out`:
+/// `out = (1/rows) * X^T( sigmoid(-y.*Xw) .* (-y) ) + c*w`.
+///
+/// Single pass over `x`: each row is read once and used for both the forward
+/// matvec and the rank-1 back-accumulation — the native analogue of the fused
+/// Pallas kernel's one-HBM-pass schedule.
+pub fn grad_into(w: &[f32], x: &[f32], y: &[f32], cols: usize, c: f32, out: &mut [f32]) {
+    let rows = y.len();
+    debug_assert_eq!(x.len(), rows * cols);
+    debug_assert_eq!(w.len(), cols);
+    debug_assert_eq!(out.len(), cols);
+    debug_assert!(rows > 0);
+
+    // out = c*w, then accumulate scaled residual rows.
+    for (o, wi) in out.iter_mut().zip(w) {
+        *o = c * *wi;
+    }
+    let scale = 1.0 / rows as f32;
+    // 4-row blocking: w streams once per 4 rows, `out` is loaded/stored once
+    // per 4 rows (rank-4 update) — see EXPERIMENTS.md §Perf
+    let mut r = 0;
+    while r + 4 <= rows {
+        let x0 = &x[r * cols..(r + 1) * cols];
+        let x1 = &x[(r + 1) * cols..(r + 2) * cols];
+        let x2 = &x[(r + 2) * cols..(r + 3) * cols];
+        let x3 = &x[(r + 3) * cols..(r + 4) * cols];
+        let z = super::dense::dot4_f32(x0, x1, x2, x3, w);
+        let mut coeff = [0f32; 4];
+        for k in 0..4 {
+            let yk = y[r + k];
+            coeff[k] = -yk * sigmoid(-yk * z[k]) * scale;
+        }
+        super::dense::axpy4(coeff, x0, x1, x2, x3, out);
+        r += 4;
+    }
+    while r < rows {
+        let yi = y[r];
+        let row = &x[r * cols..(r + 1) * cols];
+        let z = super::dense::dot_f32(row, w);
+        let coeff = -yi * sigmoid(-yi * z) * scale;
+        super::dense::axpy(coeff, row, out);
+        r += 1;
+    }
+}
+
+/// Masked-free logistic loss sum: `sum_i log(1 + exp(-y_i x_i.w))` (f64).
+pub fn loss_sum(w: &[f32], x: &[f32], y: &[f32], cols: usize) -> f64 {
+    let rows = y.len();
+    debug_assert_eq!(x.len(), rows * cols);
+    let mut acc = 0f64;
+    for (r, &yi) in y.iter().enumerate() {
+        let row = &x[r * cols..(r + 1) * cols];
+        let z = super::dense::dot_f32(row, w);
+        acc += log1p_exp((-yi * z) as f64);
+    }
+    acc
+}
+
+/// Mini-batch objective of eq.(3): mean loss + (C/2)||w||^2.
+pub fn objective_batch(w: &[f32], x: &[f32], y: &[f32], cols: usize, c: f32) -> f64 {
+    let rows = y.len();
+    loss_sum(w, x, y, cols) / rows as f64 + 0.5 * c as f64 * super::dense::nrm2_sq(w)
+}
+
+/// Full-dataset objective of eq.(2).
+pub fn objective_full(w: &[f32], x: &[f32], y: &[f32], cols: usize, c: f32) -> f64 {
+    objective_batch(w, x, y, cols, c)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    fn toy(rows: usize, cols: usize, seed: u64) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+        let mut rng = Rng::seed_from(seed);
+        let x: Vec<f32> = (0..rows * cols).map(|_| rng.normal() as f32).collect();
+        let y: Vec<f32> = (0..rows)
+            .map(|_| if rng.uniform() < 0.5 { -1.0 } else { 1.0 })
+            .collect();
+        let w: Vec<f32> = (0..cols).map(|_| rng.normal() as f32 * 0.3).collect();
+        (x, y, w)
+    }
+
+    #[test]
+    fn sigmoid_basics() {
+        assert!((sigmoid(0.0) - 0.5).abs() < 1e-7);
+        assert!(sigmoid(40.0) > 0.999_999);
+        assert!(sigmoid(-40.0) < 1e-6);
+        // symmetric: s(-t) = 1 - s(t)
+        for t in [-3.0f32, -0.5, 0.7, 2.2] {
+            assert!((sigmoid(-t) - (1.0 - sigmoid(t))).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn log1p_exp_stable_and_correct() {
+        assert!((log1p_exp(0.0) - 2f64.ln()).abs() < 1e-12);
+        assert!((log1p_exp(-700.0)).abs() < 1e-300 || log1p_exp(-700.0) >= 0.0);
+        assert!((log1p_exp(700.0) - 700.0).abs() < 1e-9);
+        assert!((log1p_exp(1.5) - (1.0 + 1.5f64.exp()).ln()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn grad_is_gradient_of_objective() {
+        // central finite differences on the full objective
+        let (x, y, w) = toy(40, 6, 3);
+        let c = 0.25f32;
+        let mut g = vec![0f32; 6];
+        grad_into(&w, &x, &y, 6, c, &mut g);
+        let eps = 1e-3f32;
+        for k in 0..6 {
+            let mut wp = w.clone();
+            wp[k] += eps;
+            let mut wm = w.clone();
+            wm[k] -= eps;
+            let fd = (objective_batch(&wp, &x, &y, 6, c)
+                - objective_batch(&wm, &x, &y, 6, c))
+                / (2.0 * eps as f64);
+            assert!(
+                (fd - g[k] as f64).abs() < 5e-3 * fd.abs().max(1.0),
+                "k={k} fd={fd} g={}",
+                g[k]
+            );
+        }
+    }
+
+    #[test]
+    fn grad_at_zero_w_is_mean_neg_half_yx() {
+        let (x, y, _) = toy(30, 4, 5);
+        let w = vec![0f32; 4];
+        let mut g = vec![0f32; 4];
+        grad_into(&w, &x, &y, 4, 0.0, &mut g);
+        for k in 0..4 {
+            let want: f32 = -(0..30)
+                .map(|r| 0.5 * y[r] * x[r * 4 + k])
+                .sum::<f32>()
+                / 30.0;
+            assert!((g[k] - want).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn objective_at_zero_is_log2_plus_reg() {
+        let (x, y, _) = toy(25, 3, 7);
+        let w = vec![0f32; 3];
+        let o = objective_batch(&w, &x, &y, 3, 1.0);
+        assert!((o - 2f64.ln()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn regularizer_pulls_gradient_toward_cw() {
+        let (x, y, w) = toy(10, 5, 9);
+        let mut g0 = vec![0f32; 5];
+        let mut g1 = vec![0f32; 5];
+        grad_into(&w, &x, &y, 5, 0.0, &mut g0);
+        grad_into(&w, &x, &y, 5, 2.0, &mut g1);
+        for k in 0..5 {
+            assert!((g1[k] - g0[k] - 2.0 * w[k]).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn loss_sum_huge_margins_finite() {
+        let x = vec![100.0f32; 8 * 2];
+        let y: Vec<f32> = (0..8).map(|i| if i % 2 == 0 { 1.0 } else { -1.0 }).collect();
+        let w = vec![100.0f32; 2];
+        let l = loss_sum(&w, &x, &y, 2);
+        assert!(l.is_finite());
+        // 4 correct rows contribute ~0; 4 wrong rows contribute ~|z| = 20000
+        assert!((l - 4.0 * 20_000.0).abs() < 1.0);
+    }
+}

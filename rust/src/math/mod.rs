@@ -1,0 +1,16 @@
+//! Native math backend: a bit-careful Rust mirror of the Layer-2 JAX model.
+//!
+//! Serves three roles:
+//! 1. **Oracle** — integration tests assert the PJRT-executed artifacts and
+//!    these routines agree to f32 tolerance, closing the
+//!    `pallas == ref.py == rust == artifacts` loop.
+//! 2. **Portable fallback** — experiments run without artifacts when
+//!    `backend.kind = "native"`.
+//! 3. **Baseline** — the §Perf comparison of PJRT dispatch overhead vs a
+//!    hand-rolled hot loop.
+
+pub mod dense;
+pub mod logistic;
+
+pub use dense::{axpy, dot, nrm2_sq, scal};
+pub use logistic::{grad_into, loss_sum, objective_batch, objective_full, sigmoid};

@@ -1,0 +1,100 @@
+//! Terminal convergence plots — the figures of the paper, in ASCII.
+//!
+//! Renders `log10(f(w) − p*)` against training time for several series
+//! (RS/CS/SS), which is exactly what Figs. 1–4 plot.
+
+use crate::metrics::Trace;
+
+/// One plotted series.
+#[derive(Debug, Clone)]
+pub struct Series<'a> {
+    /// Legend label (e.g. "SS").
+    pub label: String,
+    /// Glyph used for this series.
+    pub glyph: char,
+    /// The trace to plot.
+    pub trace: &'a Trace,
+}
+
+/// Render series into a `width x height` character grid.
+///
+/// X axis: cumulative training time (seconds). Y axis: `log10(obj − p*)`,
+/// clamped to a floor of 1e-15.
+pub fn render(series: &[Series<'_>], p_star: f64, width: usize, height: usize) -> String {
+    let width = width.max(20);
+    let height = height.max(5);
+    let mut pts: Vec<(usize, f64, f64)> = Vec::new(); // (series, t, logGap)
+    for (si, s) in series.iter().enumerate() {
+        for p in &s.trace.points {
+            let gap = (p.objective - p_star).max(1e-15);
+            pts.push((si, p.train_time_s, gap.log10()));
+        }
+    }
+    if pts.is_empty() {
+        return "(no data)\n".into();
+    }
+    let tmax = pts.iter().map(|p| p.1).fold(0.0, f64::max).max(1e-12);
+    let ymin = pts.iter().map(|p| p.2).fold(f64::INFINITY, f64::min);
+    let ymax = pts.iter().map(|p| p.2).fold(f64::NEG_INFINITY, f64::max);
+    let yspan = (ymax - ymin).max(1e-9);
+
+    let mut grid = vec![vec![' '; width]; height];
+    for (si, t, ly) in pts {
+        let col = ((t / tmax) * (width - 1) as f64).round() as usize;
+        let row = (((ymax - ly) / yspan) * (height - 1) as f64).round() as usize;
+        grid[row.min(height - 1)][col.min(width - 1)] = series[si].glyph;
+    }
+
+    let mut out = String::new();
+    out.push_str(&format!(
+        "log10(f-p*)  top={ymax:.2} bottom={ymin:.2}   (x: 0..{tmax:.3}s)\n"
+    ));
+    for row in grid {
+        out.push('|');
+        out.extend(row);
+        out.push('\n');
+    }
+    out.push('+');
+    out.extend(std::iter::repeat('-').take(width));
+    out.push('\n');
+    let legend: Vec<String> =
+        series.iter().map(|s| format!("{}={}", s.glyph, s.label)).collect();
+    out.push_str(&format!("  {}\n", legend.join("  ")));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_two_series_with_legend() {
+        let mut a = Trace::default();
+        let mut b = Trace::default();
+        for k in 0..10 {
+            a.push(k, k as f64, 1.0 + 0.5f64.powi(k as i32));
+            b.push(k, 2.0 * k as f64, 1.0 + 0.7f64.powi(k as i32));
+        }
+        let s = render(
+            &[
+                Series { label: "SS".into(), glyph: 's', trace: &a },
+                Series { label: "RS".into(), glyph: 'r', trace: &b },
+            ],
+            1.0,
+            60,
+            12,
+        );
+        assert!(s.contains("s=SS"));
+        assert!(s.contains("r=RS"));
+        assert!(s.contains('s'));
+        assert!(s.contains('r'));
+        assert!(s.lines().count() >= 12);
+    }
+
+    #[test]
+    fn empty_series_do_not_panic() {
+        let t = Trace::default();
+        let s = render(&[Series { label: "x".into(), glyph: 'x', trace: &t }], 0.0, 40, 8);
+        assert_eq!(s, "(no data)\n");
+    }
+}

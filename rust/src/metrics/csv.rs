@@ -1,0 +1,60 @@
+//! CSV export for traces and table rows (feeds external plotting).
+
+use std::io::Write;
+use std::path::Path;
+
+use crate::error::Result;
+use crate::metrics::Trace;
+
+/// Write a convergence trace as `epoch,train_time_s,objective`.
+pub fn write_trace(path: impl AsRef<Path>, label: &str, trace: &Trace) -> Result<()> {
+    let mut f = std::fs::File::create(path)?;
+    writeln!(f, "# {label}")?;
+    writeln!(f, "epoch,train_time_s,objective")?;
+    for p in &trace.points {
+        writeln!(f, "{},{:.9},{:.12}", p.epoch, p.train_time_s, p.objective)?;
+    }
+    Ok(())
+}
+
+/// Write generic rows with a header (used by the table harness).
+pub fn write_rows(
+    path: impl AsRef<Path>,
+    header: &[&str],
+    rows: &[Vec<String>],
+) -> Result<()> {
+    let mut f = std::fs::File::create(path)?;
+    writeln!(f, "{}", header.join(","))?;
+    for r in rows {
+        writeln!(f, "{}", r.join(","))?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn trace_csv_roundtrip_by_eye() {
+        let mut t = Trace::default();
+        t.push(0, 0.5, 0.25);
+        t.push(1, 1.0, 0.125);
+        let p = std::env::temp_dir().join(format!("trace_{}.csv", std::process::id()));
+        write_trace(&p, "unit", &t).unwrap();
+        let body = std::fs::read_to_string(&p).unwrap();
+        assert!(body.starts_with("# unit\n"));
+        assert!(body.contains("epoch,train_time_s,objective"));
+        assert!(body.contains("1,1.000000000,0.125000000000"));
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn rows_csv() {
+        let p = std::env::temp_dir().join(format!("rows_{}.csv", std::process::id()));
+        write_rows(&p, &["a", "b"], &[vec!["1".into(), "2".into()]]).unwrap();
+        let body = std::fs::read_to_string(&p).unwrap();
+        assert_eq!(body, "a,b\n1,2\n");
+        std::fs::remove_file(p).ok();
+    }
+}

@@ -1,0 +1,100 @@
+//! Metrics: the access/compute decomposition of eq.(1), convergence traces,
+//! CSV export and terminal rendering (tables + ASCII convergence plots).
+
+pub mod ascii_plot;
+pub mod csv;
+pub mod timer;
+
+pub use timer::TimeBreakdown;
+
+/// One recorded point on a convergence curve.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TracePoint {
+    /// Epochs completed when recorded.
+    pub epoch: usize,
+    /// Cumulative *training* time: simulated access + measured compute.
+    pub train_time_s: f64,
+    /// Full-dataset objective f(w) (eq. 2).
+    pub objective: f64,
+}
+
+/// A convergence trace for one experiment arm.
+#[derive(Debug, Clone, Default)]
+pub struct Trace {
+    /// Points in epoch order.
+    pub points: Vec<TracePoint>,
+}
+
+impl Trace {
+    /// Append a point (epochs must be non-decreasing).
+    pub fn push(&mut self, epoch: usize, train_time_s: f64, objective: f64) {
+        debug_assert!(
+            self.points.last().map_or(true, |p| epoch >= p.epoch),
+            "trace epochs must be monotonic"
+        );
+        self.points.push(TracePoint { epoch, train_time_s, objective });
+    }
+
+    /// Final objective, if any points were recorded.
+    pub fn final_objective(&self) -> Option<f64> {
+        self.points.last().map(|p| p.objective)
+    }
+
+    /// Empirical linear-convergence rate: least-squares slope of
+    /// `log(f(w_k) − p*)` against epoch. Theorem 1 predicts the same rate
+    /// for RS/CS/SS; `figure --rate-fit` checks it.
+    pub fn rate_fit(&self, p_star: f64) -> Option<f64> {
+        let pts: Vec<(f64, f64)> = self
+            .points
+            .iter()
+            .filter_map(|p| {
+                let gap = p.objective - p_star;
+                (gap > 1e-15).then(|| (p.epoch as f64, gap.ln()))
+            })
+            .collect();
+        if pts.len() < 3 {
+            return None;
+        }
+        let n = pts.len() as f64;
+        let sx: f64 = pts.iter().map(|p| p.0).sum();
+        let sy: f64 = pts.iter().map(|p| p.1).sum();
+        let sxx: f64 = pts.iter().map(|p| p.0 * p.0).sum();
+        let sxy: f64 = pts.iter().map(|p| p.0 * p.1).sum();
+        let denom = n * sxx - sx * sx;
+        (denom.abs() > 1e-12).then(|| (n * sxy - sx * sy) / denom)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn trace_push_and_final() {
+        let mut t = Trace::default();
+        assert_eq!(t.final_objective(), None);
+        t.push(0, 0.0, 1.0);
+        t.push(1, 2.0, 0.5);
+        assert_eq!(t.final_objective(), Some(0.5));
+        assert_eq!(t.points.len(), 2);
+    }
+
+    #[test]
+    fn rate_fit_recovers_linear_rate() {
+        // f_k - p* = 0.9^k  =>  slope = ln 0.9
+        let mut t = Trace::default();
+        for k in 0..20 {
+            t.push(k, k as f64, 1.0 + 0.9f64.powi(k as i32));
+        }
+        let slope = t.rate_fit(1.0).unwrap();
+        assert!((slope - 0.9f64.ln()).abs() < 1e-9, "slope={slope}");
+    }
+
+    #[test]
+    fn rate_fit_needs_enough_points_above_floor() {
+        let mut t = Trace::default();
+        t.push(0, 0.0, 1.0);
+        t.push(1, 1.0, 1.0);
+        assert!(t.rate_fit(1.0).is_none());
+    }
+}

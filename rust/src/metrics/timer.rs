@@ -1,0 +1,119 @@
+//! Training-time decomposition (paper eq. 1):
+//! `training time = time to access data + time to process data`.
+
+use crate::storage::simulator::AccessCost;
+
+/// Accumulated time breakdown for one experiment arm.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct TimeBreakdown {
+    /// Simulated device access time (storage simulator).
+    pub sim_access_s: f64,
+    /// Measured host time spent assembling batches (gather/copy) — the
+    /// real, non-simulated residual of the access pattern.
+    pub assemble_s: f64,
+    /// Measured compute time (backend calls: gradients, objectives, fused
+    /// steps, line-search evaluations).
+    pub compute_s: f64,
+    /// Measured wall-clock of the whole training loop (sanity envelope).
+    pub wall_s: f64,
+    /// Device access statistics.
+    pub access: AccessCost,
+}
+
+impl TimeBreakdown {
+    /// The paper's "training time": access + processing.
+    /// Simulated device time + measured assembly + measured compute.
+    pub fn training_time_s(&self) -> f64 {
+        self.sim_access_s + self.assemble_s + self.compute_s
+    }
+
+    /// Fraction of training time spent accessing data.
+    pub fn access_fraction(&self) -> f64 {
+        let t = self.training_time_s();
+        if t <= 0.0 {
+            0.0
+        } else {
+            (self.sim_access_s + self.assemble_s) / t
+        }
+    }
+
+    /// Merge another breakdown (e.g. across epochs).
+    pub fn merge(&mut self, other: &TimeBreakdown) {
+        self.sim_access_s += other.sim_access_s;
+        self.assemble_s += other.assemble_s;
+        self.compute_s += other.compute_s;
+        self.wall_s += other.wall_s;
+        self.access += other.access;
+    }
+}
+
+/// Monotonic stopwatch with f64 seconds.
+#[derive(Debug)]
+pub struct Stopwatch(std::time::Instant);
+
+impl Stopwatch {
+    /// Start now.
+    pub fn start() -> Self {
+        Stopwatch(std::time::Instant::now())
+    }
+
+    /// Seconds since start.
+    pub fn elapsed_s(&self) -> f64 {
+        self.0.elapsed().as_secs_f64()
+    }
+
+    /// Seconds since start, and restart.
+    pub fn lap_s(&mut self) -> f64 {
+        let e = self.0.elapsed().as_secs_f64();
+        self.0 = std::time::Instant::now();
+        e
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn training_time_sums_components() {
+        let t = TimeBreakdown {
+            sim_access_s: 2.0,
+            assemble_s: 0.5,
+            compute_s: 1.5,
+            wall_s: 2.1,
+            access: AccessCost::default(),
+        };
+        assert!((t.training_time_s() - 4.0).abs() < 1e-12);
+        assert!((t.access_fraction() - 2.5 / 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn merge_accumulates() {
+        let mut a = TimeBreakdown::default();
+        let b = TimeBreakdown {
+            sim_access_s: 1.0,
+            assemble_s: 0.25,
+            compute_s: 2.0,
+            wall_s: 2.5,
+            access: AccessCost { seeks: 3, ..Default::default() },
+        };
+        a.merge(&b);
+        a.merge(&b);
+        assert_eq!(a.access.seeks, 6);
+        assert!((a.training_time_s() - 6.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn zero_breakdown_has_zero_fraction() {
+        assert_eq!(TimeBreakdown::default().access_fraction(), 0.0);
+    }
+
+    #[test]
+    fn stopwatch_measures_time() {
+        let mut sw = Stopwatch::start();
+        std::thread::sleep(std::time::Duration::from_millis(10));
+        let lap = sw.lap_s();
+        assert!(lap >= 0.009, "lap={lap}");
+        assert!(sw.elapsed_s() < lap, "restarted");
+    }
+}

@@ -1,0 +1,10 @@
+//! Streaming data pipeline: bounded-channel prefetcher (reader runs ahead of
+//! the trainer under backpressure) and shard splitting for the paper's
+//! "parallel and distributed" extension (§5: "These sampling techniques can
+//! be extended to parallel and distributed learning algorithms").
+
+pub mod prefetch;
+pub mod shard;
+
+pub use prefetch::{PrefetchStats, PrefetchedBatch, Prefetcher};
+pub use shard::{rebalance, Shard};

@@ -1,0 +1,137 @@
+//! Row-range sharding for the parallel/distributed extension (paper §5).
+//!
+//! Shards are *contiguous* row ranges — the natural layout-preserving split:
+//! each worker keeps the CS/SS single-seek-per-batch property within its own
+//! shard. [`rebalance`] converts an uneven shard map back to an even one
+//! (workers joining/leaving a streaming ingestion job).
+
+use crate::error::{Error, Result};
+
+/// One worker's contiguous slice of the dataset.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Shard {
+    /// Worker id.
+    pub id: usize,
+    /// First row (inclusive).
+    pub start: usize,
+    /// Last row (exclusive).
+    pub end: usize,
+}
+
+impl Shard {
+    /// Rows in this shard.
+    pub fn len(&self) -> usize {
+        self.end - self.start
+    }
+
+    /// True when the shard is empty.
+    pub fn is_empty(&self) -> bool {
+        self.start >= self.end
+    }
+}
+
+/// Split `rows` into `k` contiguous shards whose sizes differ by ≤ 1.
+pub fn split(rows: usize, k: usize) -> Result<Vec<Shard>> {
+    if k == 0 {
+        return Err(Error::Config("shard count must be > 0".into()));
+    }
+    if rows < k {
+        return Err(Error::Config(format!("cannot split {rows} rows into {k} shards")));
+    }
+    let base = rows / k;
+    let extra = rows % k;
+    let mut out = Vec::with_capacity(k);
+    let mut start = 0;
+    for id in 0..k {
+        let len = base + usize::from(id < extra);
+        out.push(Shard { id, start, end: start + len });
+        start += len;
+    }
+    Ok(out)
+}
+
+/// Re-split the union of existing shards into `k` balanced shards
+/// (rebalancing after membership change). The union must be contiguous.
+pub fn rebalance(shards: &[Shard], k: usize) -> Result<Vec<Shard>> {
+    if shards.is_empty() {
+        return Err(Error::Config("rebalance: no shards".into()));
+    }
+    let mut sorted: Vec<Shard> = shards.to_vec();
+    sorted.sort_by_key(|s| s.start);
+    for w in sorted.windows(2) {
+        if w[0].end != w[1].start {
+            return Err(Error::Config(format!(
+                "rebalance: shards not contiguous at row {}",
+                w[0].end
+            )));
+        }
+    }
+    let lo = sorted.first().unwrap().start;
+    let hi = sorted.last().unwrap().end;
+    let mut out = split(hi - lo, k)?;
+    for s in out.iter_mut() {
+        s.start += lo;
+        s.end += lo;
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn split_is_even_partition() {
+        let s = split(10, 3).unwrap();
+        assert_eq!(s.len(), 3);
+        assert_eq!(s[0], Shard { id: 0, start: 0, end: 4 });
+        assert_eq!(s[1], Shard { id: 1, start: 4, end: 7 });
+        assert_eq!(s[2], Shard { id: 2, start: 7, end: 10 });
+        let total: usize = s.iter().map(|s| s.len()).sum();
+        assert_eq!(total, 10);
+        assert!(s.iter().all(|sh| !sh.is_empty()));
+    }
+
+    #[test]
+    fn split_sizes_differ_by_at_most_one() {
+        for rows in [7usize, 100, 1001] {
+            for k in [1usize, 2, 3, 7] {
+                let s = split(rows, k).unwrap();
+                let min = s.iter().map(Shard::len).min().unwrap();
+                let max = s.iter().map(Shard::len).max().unwrap();
+                assert!(max - min <= 1, "rows={rows} k={k}");
+            }
+        }
+    }
+
+    #[test]
+    fn split_rejects_bad_input() {
+        assert!(split(5, 0).is_err());
+        assert!(split(2, 3).is_err());
+    }
+
+    #[test]
+    fn rebalance_preserves_union() {
+        let s = split(100, 3).unwrap();
+        let r = rebalance(&s, 5).unwrap();
+        assert_eq!(r.len(), 5);
+        assert_eq!(r.first().unwrap().start, 0);
+        assert_eq!(r.last().unwrap().end, 100);
+    }
+
+    #[test]
+    fn rebalance_offset_union() {
+        let shards = vec![Shard { id: 0, start: 50, end: 80 }, Shard { id: 1, start: 80, end: 110 }];
+        let r = rebalance(&shards, 3).unwrap();
+        assert_eq!(r[0].start, 50);
+        assert_eq!(r.last().unwrap().end, 110);
+        assert_eq!(r.iter().map(Shard::len).sum::<usize>(), 60);
+    }
+
+    #[test]
+    fn rebalance_rejects_gaps() {
+        let shards = vec![Shard { id: 0, start: 0, end: 10 }, Shard { id: 1, start: 20, end: 30 }];
+        assert!(rebalance(&shards, 2).is_err());
+        assert!(rebalance(&[], 2).is_err());
+    }
+}

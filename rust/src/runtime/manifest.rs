@@ -1,0 +1,222 @@
+//! `manifest.tsv` bookkeeping — the contract between `python/compile/aot.py`
+//! and the rust runtime.
+//!
+//! aot.py writes two manifests: `manifest.json` (human/tooling) and
+//! `manifest.tsv` (consumed here — the offline build has no JSON dependency,
+//! and a five-column TSV is the honest minimum). Format:
+//!
+//! ```text
+//! # samplex-manifest v1 format=hlo-text dtype=f32 return_tuple=1
+//! <key>\t<entrypoint>\t<batch>\t<features>\t<file>\t<param_shapes>
+//! ```
+//!
+//! where `param_shapes` is comma-separated with `x` inside a shape, e.g.
+//! `28,1000x28,1000,1000,1,1`.
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use crate::error::{Error, Result};
+
+/// One lowered module.
+#[derive(Debug, Clone)]
+pub struct ManifestEntry {
+    /// Logical entrypoint name (grad, obj, loss_sum, mbsgd, sag, saga,
+    /// svrg, saag2).
+    pub entrypoint: String,
+    /// Static mini-batch dimension.
+    pub batch: usize,
+    /// Static feature dimension.
+    pub features: usize,
+    /// File name under the artifacts dir.
+    pub file: String,
+    /// Parameter shapes in call order (`[1]` = scalar-as-vec1).
+    pub param_shapes: Vec<Vec<usize>>,
+}
+
+/// Parsed manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    /// Key → entry; key format is `{entrypoint}_B{batch}_n{features}`.
+    pub entries: HashMap<String, ManifestEntry>,
+}
+
+impl Manifest {
+    /// Canonical cache/lookup key.
+    pub fn key(entrypoint: &str, batch: usize, features: usize) -> String {
+        format!("{entrypoint}_B{batch}_n{features}")
+    }
+
+    /// Load and validate `manifest.tsv`.
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let raw = std::fs::read_to_string(path.as_ref()).map_err(|e| {
+            Error::Artifact(format!(
+                "cannot read {} (run `make artifacts`): {e}",
+                path.as_ref().display()
+            ))
+        })?;
+        Self::parse(&raw)
+    }
+
+    /// Parse manifest text.
+    pub fn parse(raw: &str) -> Result<Self> {
+        let mut lines = raw.lines();
+        let header = lines.next().ok_or_else(|| Error::Artifact("empty manifest".into()))?;
+        if !header.starts_with("# samplex-manifest v1") {
+            return Err(Error::Artifact(format!("bad manifest header: {header:?}")));
+        }
+        for tag in ["format=hlo-text", "dtype=f32", "return_tuple=1"] {
+            if !header.contains(tag) {
+                return Err(Error::Artifact(format!("manifest missing '{tag}'")));
+            }
+        }
+        let mut entries = HashMap::new();
+        for (i, line) in lines.enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let cols: Vec<&str> = line.split('\t').collect();
+            if cols.len() != 6 {
+                return Err(Error::Artifact(format!(
+                    "manifest line {}: want 6 columns, got {}",
+                    i + 2,
+                    cols.len()
+                )));
+            }
+            let parse_usize = |s: &str, what: &str| -> Result<usize> {
+                s.parse().map_err(|e| {
+                    Error::Artifact(format!("manifest line {}: bad {what}: {e}", i + 2))
+                })
+            };
+            let batch = parse_usize(cols[2], "batch")?;
+            let features = parse_usize(cols[3], "features")?;
+            let mut param_shapes = Vec::new();
+            for shape in cols[5].split(',').filter(|s| !s.is_empty()) {
+                let dims: Result<Vec<usize>> =
+                    shape.split('x').map(|d| parse_usize(d, "shape dim")).collect();
+                param_shapes.push(dims?);
+            }
+            if param_shapes.is_empty() {
+                return Err(Error::Artifact(format!("manifest line {}: no params", i + 2)));
+            }
+            let entry = ManifestEntry {
+                entrypoint: cols[1].to_string(),
+                batch,
+                features,
+                file: cols[4].to_string(),
+                param_shapes,
+            };
+            let key = cols[0].to_string();
+            if key != Self::key(&entry.entrypoint, batch, features) {
+                return Err(Error::Artifact(format!(
+                    "manifest line {}: key '{key}' does not match entry",
+                    i + 2
+                )));
+            }
+            entries.insert(key, entry);
+        }
+        if entries.is_empty() {
+            return Err(Error::Artifact("manifest has no entries".into()));
+        }
+        Ok(Manifest { entries })
+    }
+
+    /// Look up one entry.
+    pub fn entry(&self, entrypoint: &str, batch: usize, features: usize) -> Result<&ManifestEntry> {
+        let key = Self::key(entrypoint, batch, features);
+        self.entries.get(&key).ok_or_else(|| {
+            Error::Artifact(format!(
+                "no artifact '{key}' — regenerate with `make artifacts` \
+                 (available batches for n={features}: {:?})",
+                self.batch_sizes_for(entrypoint, features)
+            ))
+        })
+    }
+
+    /// Ascending static batch sizes lowered for `(entrypoint, features)`.
+    pub fn batch_sizes_for(&self, entrypoint: &str, features: usize) -> Vec<usize> {
+        let mut v: Vec<usize> = self
+            .entries
+            .values()
+            .filter(|e| e.entrypoint == entrypoint && e.features == features)
+            .map(|e| e.batch)
+            .collect();
+        v.sort_unstable();
+        v
+    }
+
+    /// Smallest static batch ≥ `want`, or the largest available.
+    pub fn fit_batch(&self, entrypoint: &str, features: usize, want: usize) -> Result<usize> {
+        let sizes = self.batch_sizes_for(entrypoint, features);
+        if sizes.is_empty() {
+            return Err(Error::Artifact(format!(
+                "no artifacts for entrypoint '{entrypoint}' at n={features}"
+            )));
+        }
+        Ok(*sizes.iter().find(|&&b| b >= want).unwrap_or(sizes.last().unwrap()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const HEADER: &str = "# samplex-manifest v1 format=hlo-text dtype=f32 return_tuple=1\n";
+
+    fn line(ep: &str, b: usize, n: usize) -> String {
+        format!(
+            "{}\t{ep}\t{b}\t{n}\t{ep}_B{b}_n{n}.hlo.txt\t{n},{b}x{n},{b},{b},1,1\n",
+            Manifest::key(ep, b, n)
+        )
+    }
+
+    #[test]
+    fn parse_and_lookup() {
+        let raw = format!("{HEADER}{}{}", line("grad", 200, 28), line("grad", 1000, 28));
+        let m = Manifest::parse(&raw).unwrap();
+        assert_eq!(m.entries.len(), 2);
+        let e = m.entry("grad", 200, 28).unwrap();
+        assert_eq!(e.file, "grad_B200_n28.hlo.txt");
+        assert_eq!(e.param_shapes[1], vec![200, 28]);
+        assert_eq!(e.param_shapes[4], vec![1]);
+        assert!(m.entry("grad", 500, 28).is_err());
+        assert_eq!(m.batch_sizes_for("grad", 28), vec![200, 1000]);
+    }
+
+    #[test]
+    fn fit_batch_rounds_up_then_saturates() {
+        let raw = format!(
+            "{HEADER}{}{}{}",
+            line("grad", 200, 28),
+            line("grad", 500, 28),
+            line("grad", 1000, 28)
+        );
+        let m = Manifest::parse(&raw).unwrap();
+        assert_eq!(m.fit_batch("grad", 28, 100).unwrap(), 200);
+        assert_eq!(m.fit_batch("grad", 28, 200).unwrap(), 200);
+        assert_eq!(m.fit_batch("grad", 28, 501).unwrap(), 1000);
+        assert_eq!(m.fit_batch("grad", 28, 5000).unwrap(), 1000);
+        assert!(m.fit_batch("grad", 64, 100).is_err());
+    }
+
+    #[test]
+    fn rejects_bad_headers_and_rows() {
+        assert!(Manifest::parse("").is_err());
+        assert!(Manifest::parse("# wrong\n").is_err());
+        assert!(Manifest::parse(&format!("{HEADER}")).is_err()); // no entries
+        let bad_cols = format!("{HEADER}a\tb\tc\n");
+        assert!(Manifest::parse(&bad_cols).is_err());
+        let bad_key = format!("{HEADER}wrong\tgrad\t200\t28\tf.hlo.txt\t28\n");
+        assert!(Manifest::parse(&bad_key).is_err());
+        let bad_num = format!("{HEADER}grad_Bx_n28\tgrad\tx\t28\tf.hlo.txt\t28\n");
+        assert!(Manifest::parse(&bad_num).is_err());
+    }
+
+    #[test]
+    fn comments_and_blanks_skipped() {
+        let raw = format!("{HEADER}\n# comment\n{}", line("obj", 500, 18));
+        let m = Manifest::parse(&raw).unwrap();
+        assert_eq!(m.entries.len(), 1);
+    }
+}

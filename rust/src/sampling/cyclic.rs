@@ -1,0 +1,92 @@
+//! Cyclic/sequential sampling (paper §2.1b).
+//!
+//! "First mini-batch is selected by taking the first 1 to m points. Second
+//! mini-batch is selected by taking next m+1 to 2m points and so on until
+//! all data points are covered. Then again start with the first data point."
+//!
+//! The cheapest possible access pattern: one seek per batch, every batch a
+//! forward-moving contiguous run — and fully deterministic, which is also
+//! its convergence weakness (no diversity between epochs).
+
+use crate::data::batch::RowSelection;
+use crate::error::Result;
+use crate::sampling::{check_dims, num_batches, Sampler};
+
+/// Cyclic sampler: fixed contiguous partition, fixed order.
+#[derive(Debug, Clone)]
+pub struct CyclicSampler {
+    rows: usize,
+    batch: usize,
+    m: usize,
+}
+
+impl CyclicSampler {
+    /// New cyclic sampler over `rows` points with mini-batch size `batch`.
+    pub fn new(rows: usize, batch: usize) -> Result<Self> {
+        check_dims(rows, batch)?;
+        Ok(CyclicSampler { rows, batch, m: num_batches(rows, batch) })
+    }
+}
+
+impl Sampler for CyclicSampler {
+    fn name(&self) -> &'static str {
+        "CS"
+    }
+
+    fn batches_per_epoch(&self) -> usize {
+        self.m
+    }
+
+    fn epoch(&mut self, _epoch_idx: usize) -> Vec<RowSelection> {
+        (0..self.m)
+            .map(|j| RowSelection::Contiguous {
+                start: j * self.batch,
+                end: ((j + 1) * self.batch).min(self.rows),
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_partition_in_order() {
+        let mut s = CyclicSampler::new(10, 5).unwrap();
+        let e = s.epoch(0);
+        assert_eq!(
+            e,
+            vec![
+                RowSelection::Contiguous { start: 0, end: 5 },
+                RowSelection::Contiguous { start: 5, end: 10 },
+            ]
+        );
+    }
+
+    #[test]
+    fn ragged_last_batch() {
+        let mut s = CyclicSampler::new(10, 4).unwrap();
+        let e = s.epoch(3);
+        assert_eq!(e.len(), 3);
+        assert_eq!(e[2], RowSelection::Contiguous { start: 8, end: 10 });
+    }
+
+    #[test]
+    fn identical_every_epoch() {
+        let mut s = CyclicSampler::new(100, 7).unwrap();
+        assert_eq!(s.epoch(0), s.epoch(99));
+    }
+
+    #[test]
+    fn covers_every_row_once() {
+        let mut s = CyclicSampler::new(23, 5).unwrap();
+        let mut seen = vec![0u32; 23];
+        for sel in s.epoch(0) {
+            for r in sel.iter() {
+                seen[r] += 1;
+            }
+        }
+        assert!(seen.iter().all(|&c| c == 1));
+    }
+}

@@ -1,0 +1,181 @@
+//! Mini-batch sampling techniques — the paper's contribution (§2).
+//!
+//! A [`Sampler`] produces, per epoch, the sequence of [`RowSelection`]s the
+//! trainer will visit. The three techniques under study:
+//!
+//! * **RS** — random sampling, with or without replacement (§2.1a). The
+//!   without-replacement implementation follows the paper's §4.2 exactly: a
+//!   shuffled index array, consumed in mini-batch-sized chunks. Batches are
+//!   *scattered* — each row can live in its own device block.
+//! * **CS** — cyclic/sequential sampling (§2.1b): batch `j` is rows
+//!   `[j*b, (j+1)*b)`, in order. Fully contiguous, zero randomness.
+//! * **SS** — systematic sampling (§2.1c, Madow & Madow 1944): the *order of
+//!   mini-batches* is randomized each epoch but every batch is a contiguous
+//!   run (§4.2: "an array of size equal to the number of mini-batches …
+//!   contains the randomized indexes of mini-batches"). CS's access cost
+//!   with RS-like between-batch randomness.
+//!
+//! Plus two baselines used by the extension benches: RS with replacement and
+//! stratified sampling (Zhao & Zhang 2014).
+//!
+//! All samplers are deterministic in their seed, and all partition-based
+//! samplers (CS/SS and RS-without) cover every row exactly once per epoch —
+//! properties pinned by the proptest suite below.
+
+pub mod cyclic;
+pub mod random;
+pub mod stratified;
+pub mod systematic;
+
+use crate::data::batch::RowSelection;
+use crate::error::{Error, Result};
+
+pub use cyclic::CyclicSampler;
+pub use random::{RandomWithReplacement, RandomWithoutReplacement};
+pub use stratified::StratifiedSampler;
+pub use systematic::SystematicSampler;
+
+/// The sampling techniques known to the experiment harness.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum SamplingKind {
+    /// Random sampling without replacement (the paper's RS baseline).
+    Rs,
+    /// Random sampling *with* replacement (extension baseline).
+    Rswr,
+    /// Cyclic/sequential sampling.
+    Cs,
+    /// Systematic sampling.
+    Ss,
+    /// Stratified sampling (extension baseline).
+    Stratified,
+}
+
+impl SamplingKind {
+    /// Parse the CLI/config token.
+    pub fn parse(s: &str) -> Result<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "rs" | "random" => Ok(SamplingKind::Rs),
+            "rswr" | "random-wr" => Ok(SamplingKind::Rswr),
+            "cs" | "cyclic" => Ok(SamplingKind::Cs),
+            "ss" | "systematic" => Ok(SamplingKind::Ss),
+            "stratified" => Ok(SamplingKind::Stratified),
+            other => Err(Error::Config(format!("unknown sampling '{other}'"))),
+        }
+    }
+
+    /// Table/figure label used by the paper.
+    pub fn label(&self) -> &'static str {
+        match self {
+            SamplingKind::Rs => "RS",
+            SamplingKind::Rswr => "RS-WR",
+            SamplingKind::Cs => "CS",
+            SamplingKind::Ss => "SS",
+            SamplingKind::Stratified => "STRAT",
+        }
+    }
+
+    /// All kinds compared in the paper's tables.
+    pub fn paper_kinds() -> [SamplingKind; 3] {
+        [SamplingKind::Rs, SamplingKind::Cs, SamplingKind::Ss]
+    }
+
+    /// Construct the sampler (`labels` required only for stratified).
+    pub fn build(
+        &self,
+        rows: usize,
+        batch: usize,
+        seed: u64,
+        labels: Option<&[f32]>,
+    ) -> Result<Box<dyn Sampler>> {
+        Ok(match self {
+            SamplingKind::Rs => Box::new(RandomWithoutReplacement::new(rows, batch, seed)?),
+            SamplingKind::Rswr => Box::new(RandomWithReplacement::new(rows, batch, seed)?),
+            SamplingKind::Cs => Box::new(CyclicSampler::new(rows, batch)?),
+            SamplingKind::Ss => Box::new(SystematicSampler::new(rows, batch, seed)?),
+            SamplingKind::Stratified => {
+                let labels = labels.ok_or_else(|| {
+                    Error::Config("stratified sampling needs labels".into())
+                })?;
+                Box::new(StratifiedSampler::new(labels, batch, seed)?)
+            }
+        })
+    }
+}
+
+/// Per-epoch mini-batch selection sequence.
+pub trait Sampler: Send {
+    /// Technique label (RS/CS/SS/…).
+    fn name(&self) -> &'static str;
+
+    /// Number of mini-batches per epoch, `m = ceil(l / b)`.
+    fn batches_per_epoch(&self) -> usize;
+
+    /// The mini-batch sequence for epoch `epoch_idx`. Deterministic in
+    /// `(seed, epoch_idx)`.
+    fn epoch(&mut self, epoch_idx: usize) -> Vec<RowSelection>;
+}
+
+/// Shared validation for (rows, batch) pairs.
+pub(crate) fn check_dims(rows: usize, batch: usize) -> Result<()> {
+    if rows == 0 {
+        return Err(Error::Config("sampler: rows must be > 0".into()));
+    }
+    if batch == 0 || batch > rows {
+        return Err(Error::Config(format!(
+            "sampler: batch {batch} must be in [1, rows={rows}]"
+        )));
+    }
+    Ok(())
+}
+
+/// `m = ceil(rows / batch)` — the paper divides the dataset into equal-sized
+/// mini-batches "except the last mini-batch which might has data points less
+/// than or equal to other mini-batches" (§4.2).
+pub(crate) fn num_batches(rows: usize, batch: usize) -> usize {
+    rows.div_ceil(batch)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kind_parse_and_label() {
+        assert_eq!(SamplingKind::parse("rs").unwrap(), SamplingKind::Rs);
+        assert_eq!(SamplingKind::parse("CYCLIC").unwrap(), SamplingKind::Cs);
+        assert_eq!(SamplingKind::parse("ss").unwrap(), SamplingKind::Ss);
+        assert_eq!(SamplingKind::parse("stratified").unwrap(), SamplingKind::Stratified);
+        assert!(SamplingKind::parse("bogus").is_err());
+        assert_eq!(SamplingKind::Ss.label(), "SS");
+    }
+
+    #[test]
+    fn build_all_kinds() {
+        let labels = vec![1.0f32, -1.0, 1.0, -1.0, 1.0, -1.0, 1.0, -1.0];
+        for k in [
+            SamplingKind::Rs,
+            SamplingKind::Rswr,
+            SamplingKind::Cs,
+            SamplingKind::Ss,
+            SamplingKind::Stratified,
+        ] {
+            let s = k.build(8, 3, 42, Some(&labels)).unwrap();
+            assert_eq!(s.batches_per_epoch(), 3);
+        }
+    }
+
+    #[test]
+    fn stratified_requires_labels() {
+        assert!(SamplingKind::Stratified.build(8, 2, 0, None).is_err());
+    }
+
+    #[test]
+    fn dims_validation() {
+        assert!(check_dims(0, 1).is_err());
+        assert!(check_dims(10, 0).is_err());
+        assert!(check_dims(10, 11).is_err());
+        assert!(check_dims(10, 10).is_ok());
+        assert_eq!(num_batches(10, 3), 4);
+        assert_eq!(num_batches(9, 3), 3);
+    }
+}

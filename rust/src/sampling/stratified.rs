@@ -1,0 +1,163 @@
+//! Stratified sampling (Zhao & Zhang 2014) — extension baseline.
+//!
+//! The paper's related-work section (§1.2) discusses stratified sampling:
+//! "divides the dataset into clusters of similar data points and then
+//! mini-batch of data points are selected from the clusters." We stratify by
+//! label (the natural clustering for binary ERM) and fill every mini-batch
+//! with a class-proportional draw from each stratum, without replacement
+//! within an epoch. Access-wise it behaves like RS (scattered), so it is a
+//! useful ablation: diversity *better* than RS, access cost *equal* to RS.
+
+use crate::data::batch::RowSelection;
+use crate::error::{Error, Result};
+use crate::rng::Rng;
+use crate::sampling::{num_batches, Sampler};
+
+/// Label-stratified sampler with per-epoch without-replacement draws.
+#[derive(Debug, Clone)]
+pub struct StratifiedSampler {
+    strata: Vec<Vec<u32>>,
+    rows: usize,
+    batch: usize,
+    m: usize,
+    seed: u64,
+}
+
+impl StratifiedSampler {
+    /// Build strata from labels (one stratum per distinct label value).
+    pub fn new(labels: &[f32], batch: usize, seed: u64) -> Result<Self> {
+        let rows = labels.len();
+        if rows == 0 {
+            return Err(Error::Config("stratified: empty labels".into()));
+        }
+        if batch == 0 || batch > rows {
+            return Err(Error::Config(format!(
+                "stratified: batch {batch} must be in [1, rows={rows}]"
+            )));
+        }
+        let mut pos = Vec::new();
+        let mut neg = Vec::new();
+        for (i, &l) in labels.iter().enumerate() {
+            if l > 0.0 {
+                pos.push(i as u32);
+            } else {
+                neg.push(i as u32);
+            }
+        }
+        let strata: Vec<Vec<u32>> = [pos, neg].into_iter().filter(|s| !s.is_empty()).collect();
+        Ok(StratifiedSampler { strata, rows, batch, m: num_batches(rows, batch), seed })
+    }
+}
+
+impl Sampler for StratifiedSampler {
+    fn name(&self) -> &'static str {
+        "STRAT"
+    }
+
+    fn batches_per_epoch(&self) -> usize {
+        self.m
+    }
+
+    fn epoch(&mut self, epoch_idx: usize) -> Vec<RowSelection> {
+        let mut rng = Rng::seed_from(self.seed ^ (epoch_idx as u64).wrapping_mul(0xC2B2_AE3D));
+        // shuffle each stratum, then deal class-proportionally into batches
+        let mut shuffled: Vec<Vec<u32>> = self.strata.clone();
+        for s in shuffled.iter_mut() {
+            rng.shuffle(s);
+        }
+        let mut cursors = vec![0usize; shuffled.len()];
+        let mut batches = Vec::with_capacity(self.m);
+        for j in 0..self.m {
+            let size = if j + 1 == self.m && self.rows % self.batch != 0 {
+                self.rows % self.batch
+            } else {
+                self.batch
+            };
+            let mut sel = Vec::with_capacity(size);
+            // proportional allocation; remainder goes to the largest stratum
+            for (k, s) in shuffled.iter().enumerate() {
+                let take = (size * s.len()) / self.rows;
+                let take = take.min(s.len() - cursors[k]);
+                sel.extend_from_slice(&s[cursors[k]..cursors[k] + take]);
+                cursors[k] += take;
+            }
+            // fill any shortfall round-robin from strata with leftovers
+            let mut k = 0;
+            while sel.len() < size {
+                if cursors[k] < shuffled[k].len() {
+                    sel.push(shuffled[k][cursors[k]]);
+                    cursors[k] += 1;
+                }
+                k = (k + 1) % shuffled.len();
+            }
+            batches.push(RowSelection::Scattered(sel));
+        }
+        batches
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn labels(pos: usize, neg: usize) -> Vec<f32> {
+        let mut l = vec![1.0; pos];
+        l.extend(std::iter::repeat(-1.0).take(neg));
+        l
+    }
+
+    #[test]
+    fn covers_every_row_once() {
+        let l = labels(30, 70);
+        let mut s = StratifiedSampler::new(&l, 10, 1).unwrap();
+        let mut seen = vec![0u32; 100];
+        for sel in s.epoch(0) {
+            for r in sel.iter() {
+                seen[r] += 1;
+            }
+        }
+        assert!(seen.iter().all(|&c| c == 1));
+    }
+
+    #[test]
+    fn batches_are_class_balanced() {
+        let l = labels(50, 50);
+        let mut s = StratifiedSampler::new(&l, 10, 2).unwrap();
+        for sel in s.epoch(0) {
+            let pos = sel.iter().filter(|&r| l[r] > 0.0).count();
+            assert!((4..=6).contains(&pos), "pos={pos} in batch of 10");
+        }
+    }
+
+    #[test]
+    fn single_class_degenerates_gracefully() {
+        let l = labels(20, 0);
+        let mut s = StratifiedSampler::new(&l, 5, 0).unwrap();
+        let e = s.epoch(0);
+        assert_eq!(e.len(), 4);
+        let total: usize = e.iter().map(|b| b.len()).sum();
+        assert_eq!(total, 20);
+    }
+
+    #[test]
+    fn imbalanced_ragged_coverage() {
+        let l = labels(7, 18); // 25 rows, batch 10 -> 10,10,5
+        let mut s = StratifiedSampler::new(&l, 10, 3).unwrap();
+        let e = s.epoch(0);
+        let sizes: Vec<usize> = e.iter().map(|b| b.len()).collect();
+        assert_eq!(sizes, vec![10, 10, 5]);
+        let mut seen = vec![0u32; 25];
+        for sel in &e {
+            for r in sel.iter() {
+                seen[r] += 1;
+            }
+        }
+        assert!(seen.iter().all(|&c| c == 1));
+    }
+
+    #[test]
+    fn rejects_bad_input() {
+        assert!(StratifiedSampler::new(&[], 1, 0).is_err());
+        assert!(StratifiedSampler::new(&[1.0, -1.0], 3, 0).is_err());
+    }
+}

@@ -1,0 +1,148 @@
+//! Backtracking line search on the mini-batch (paper §4.1).
+//!
+//! "Backtracking line search is performed approximately only using the
+//! selected mini-batch of data points because performing backtracking line
+//! search on whole dataset could hurt the convergence … by taking huge
+//! time." Armijo condition along the steepest-descent direction of the
+//! mini-batch objective:
+//!
+//! ```text
+//! f_B(w − α g) ≤ f_B(w) − c1 · α · ||g||²,   α = α0 · β^k
+//! ```
+//!
+//! The resulting `α` is handed to the solver's own update (for MBSGD this
+//! *is* exact Armijo descent; for the variance-reduced solvers it is the
+//! paper's "approximate" step-size rule — DESIGN.md §6).
+
+use crate::backend::ComputeBackend;
+use crate::data::batch::BatchView;
+use crate::error::Result;
+
+/// Backtracking parameters (textbook defaults).
+#[derive(Debug, Clone, Copy)]
+pub struct LineSearchParams {
+    /// Initial trial step `α0`.
+    pub alpha0: f32,
+    /// Shrink factor `β ∈ (0,1)`.
+    pub beta: f32,
+    /// Sufficient-decrease constant `c1`.
+    pub c1: f32,
+    /// Maximum shrinks before giving up (returns the smallest trial).
+    pub max_iters: u32,
+}
+
+impl Default for LineSearchParams {
+    fn default() -> Self {
+        LineSearchParams { alpha0: 1.0, beta: 0.5, c1: 1e-4, max_iters: 25 }
+    }
+}
+
+/// Reusable scratch so the search is allocation-free after warmup.
+#[derive(Debug, Default)]
+pub struct LineSearchScratch {
+    g: Vec<f32>,
+    w_trial: Vec<f32>,
+    /// Backend objective evaluations performed (for perf accounting).
+    pub evals: u64,
+}
+
+/// Run the Armijo backtracking search at `w` on `batch`; returns the
+/// accepted step size.
+pub fn backtracking(
+    be: &mut dyn ComputeBackend,
+    w: &[f32],
+    batch: &BatchView<'_>,
+    c: f32,
+    params: &LineSearchParams,
+    scratch: &mut LineSearchScratch,
+) -> Result<f32> {
+    let n = w.len();
+    scratch.g.resize(n, 0.0);
+    scratch.w_trial.resize(n, 0.0);
+
+    be.grad_into(w, batch, c, &mut scratch.g)?;
+    let f0 = be.batch_obj(w, batch, c)?;
+    scratch.evals += 1;
+    let gnorm2 = crate::math::nrm2_sq(&scratch.g);
+    if gnorm2 <= f64::EPSILON {
+        return Ok(params.alpha0); // at a stationary point; any step is fine
+    }
+
+    let mut alpha = params.alpha0;
+    for _ in 0..params.max_iters {
+        for k in 0..n {
+            scratch.w_trial[k] = w[k] - alpha * scratch.g[k];
+        }
+        let f_trial = be.batch_obj(&scratch.w_trial, batch, c)?;
+        scratch.evals += 1;
+        if f_trial <= f0 - params.c1 as f64 * alpha as f64 * gnorm2 {
+            return Ok(alpha);
+        }
+        alpha *= params.beta;
+    }
+    Ok(alpha)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::NativeBackend;
+    use crate::rng::Rng;
+
+    fn toy(rows: usize, cols: usize) -> (Vec<f32>, Vec<f32>) {
+        let mut rng = Rng::seed_from(13);
+        let x: Vec<f32> = (0..rows * cols).map(|_| rng.normal() as f32).collect();
+        let y: Vec<f32> = (0..rows)
+            .map(|_| if rng.uniform() < 0.5 { -1.0 } else { 1.0 })
+            .collect();
+        (x, y)
+    }
+
+    #[test]
+    fn accepted_step_satisfies_armijo() {
+        let (x, y) = toy(64, 5);
+        let view = BatchView { x: &x, y: &y, rows: 64, cols: 5 };
+        let mut be = NativeBackend::new();
+        let w = vec![0.3f32; 5];
+        let params = LineSearchParams::default();
+        let mut scratch = LineSearchScratch::default();
+        let alpha = backtracking(&mut be, &w, &view, 0.1, &params, &mut scratch).unwrap();
+
+        let mut g = vec![0f32; 5];
+        be.grad_into(&w, &view, 0.1, &mut g).unwrap();
+        let f0 = be.batch_obj(&w, &view, 0.1).unwrap();
+        let wt: Vec<f32> = w.iter().zip(&g).map(|(wi, gi)| wi - alpha * gi).collect();
+        let ft = be.batch_obj(&wt, &view, 0.1).unwrap();
+        let gnorm2 = crate::math::nrm2_sq(&g);
+        assert!(ft <= f0 - 1e-4 * alpha as f64 * gnorm2 + 1e-12);
+    }
+
+    #[test]
+    fn step_shrinks_from_alpha0_when_needed() {
+        // steep, badly-scaled problem: alpha0=64 must backtrack
+        let (x, y) = toy(32, 4);
+        let x: Vec<f32> = x.iter().map(|v| v * 10.0).collect();
+        let view = BatchView { x: &x, y: &y, rows: 32, cols: 4 };
+        let mut be = NativeBackend::new();
+        let w = vec![0.5f32; 4];
+        let params = LineSearchParams { alpha0: 64.0, ..Default::default() };
+        let mut scratch = LineSearchScratch::default();
+        let alpha = backtracking(&mut be, &w, &view, 0.0, &params, &mut scratch).unwrap();
+        assert!(alpha < 64.0);
+        assert!(scratch.evals >= 2);
+    }
+
+    #[test]
+    fn stationary_point_returns_alpha0() {
+        // perfectly symmetric batch at w=0 with C=0: gradient ~ 0
+        let x = vec![1.0f32, -1.0, -1.0, 1.0]; // rows (1,-1) and (-1,1)
+        let y = vec![1.0f32, 1.0];
+        let view = BatchView { x: &x, y: &y, rows: 2, cols: 2 };
+        let mut be = NativeBackend::new();
+        let params = LineSearchParams::default();
+        let mut scratch = LineSearchScratch::default();
+        let alpha =
+            backtracking(&mut be, &[0.0, 0.0], &view, 0.0, &params, &mut scratch).unwrap();
+        assert_eq!(alpha, params.alpha0);
+    }
+}

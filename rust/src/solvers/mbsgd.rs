@@ -1,0 +1,110 @@
+//! Mini-Batch SGD (paper refs [3, 8, 23]): `w ← w − α g_j(w)`.
+//!
+//! The simplest solver and the one Theorem 1 is proved for; the paper's
+//! convergence analysis (§3) applies verbatim to this implementation.
+
+use crate::backend::{ComputeBackend, FusedStep};
+use crate::data::batch::BatchView;
+use crate::error::Result;
+use crate::solvers::{GradScratch, Solver};
+
+/// MBSGD state: just the iterate.
+#[derive(Debug, Clone)]
+pub struct Mbsgd {
+    w: Vec<f32>,
+    scratch: GradScratch,
+    c: f32,
+}
+
+impl Mbsgd {
+    /// `n` features, `m` batches per epoch (unused — kept for uniformity).
+    pub fn new(n: usize, _m: usize) -> Self {
+        Mbsgd { w: vec![0f32; n], scratch: GradScratch::new(n), c: 0.0 }
+    }
+
+    /// Set the regularization coefficient used in gradients.
+    pub fn with_reg(mut self, c: f32) -> Self {
+        self.c = c;
+        self
+    }
+
+    /// Regularization setter used by the driver.
+    pub fn set_reg(&mut self, c: f32) {
+        self.c = c;
+    }
+}
+
+impl Solver for Mbsgd {
+    fn name(&self) -> &'static str {
+        "MBSGD"
+    }
+
+    fn w(&self) -> &[f32] {
+        &self.w
+    }
+
+    fn set_reg(&mut self, c: f32) {
+        self.c = c;
+    }
+
+    fn epoch_start(&mut self, _epoch: usize) {}
+
+    fn step(
+        &mut self,
+        be: &mut dyn ComputeBackend,
+        batch: &BatchView<'_>,
+        _j: usize,
+        lr: f32,
+    ) -> Result<()> {
+        if be.fused(FusedStep::Mbsgd { w: &mut self.w, lr }, batch, self.c)? {
+            return Ok(());
+        }
+        be.grad_into(&self.w, batch, self.c, &mut self.scratch.g)?;
+        crate::math::axpy(-lr, &self.scratch.g, &mut self.w);
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::NativeBackend;
+    use crate::rng::Rng;
+
+    fn toy(rows: usize, cols: usize) -> (Vec<f32>, Vec<f32>) {
+        let mut rng = Rng::seed_from(2);
+        let x: Vec<f32> = (0..rows * cols).map(|_| rng.normal() as f32).collect();
+        let y: Vec<f32> = (0..rows)
+            .map(|_| if rng.uniform() < 0.5 { -1.0 } else { 1.0 })
+            .collect();
+        (x, y)
+    }
+
+    #[test]
+    fn one_step_equals_manual_update() {
+        let (x, y) = toy(16, 4);
+        let view = BatchView { x: &x, y: &y, rows: 16, cols: 4 };
+        let mut be = NativeBackend::new();
+        let mut s = Mbsgd::new(4, 1).with_reg(0.1);
+        s.step(&mut be, &view, 0, 0.2).unwrap();
+        let mut g = vec![0f32; 4];
+        crate::math::grad_into(&[0.0; 4], &x, &y, 4, 0.1, &mut g);
+        for k in 0..4 {
+            assert!((s.w()[k] + 0.2 * g[k]).abs() < 1e-7);
+        }
+    }
+
+    #[test]
+    fn descends_batch_objective() {
+        let (x, y) = toy(64, 6);
+        let view = BatchView { x: &x, y: &y, rows: 64, cols: 6 };
+        let mut be = NativeBackend::new();
+        let mut s = Mbsgd::new(6, 1).with_reg(0.01);
+        let o0 = be.batch_obj(s.w(), &view, 0.01).unwrap();
+        for _ in 0..20 {
+            s.step(&mut be, &view, 0, 0.1).unwrap();
+        }
+        let o1 = be.batch_obj(s.w(), &view, 0.01).unwrap();
+        assert!(o1 < o0 - 1e-3, "o0={o0} o1={o1}");
+    }
+}

@@ -1,0 +1,178 @@
+//! The five solvers of the paper's experiments (§4.1): SAG, SAGA, SVRG,
+//! SAAG-II and MBSGD, each usable with constant step `1/L` or backtracking
+//! line search on the mini-batch (§4.1), and each independent of the
+//! sampling technique — exactly the property the paper exploits
+//! ("[p]roposed ideas are independent of problem and method", §1.3c).
+//!
+//! Update rules are documented per solver and mirrored 1:1 by the fused
+//! Layer-2 modules (`python/compile/model.py`); every solver first offers
+//! the step to [`ComputeBackend::fused`] and falls back to
+//! gradient-plus-host-algebra when the backend declines.
+
+pub mod linesearch;
+pub mod mbsgd;
+pub mod saag2;
+pub mod sag;
+pub mod saga;
+pub mod svrg;
+
+use crate::backend::ComputeBackend;
+use crate::data::batch::BatchView;
+use crate::error::{Error, Result};
+
+pub use linesearch::backtracking;
+pub use mbsgd::Mbsgd;
+pub use saag2::Saag2;
+pub use sag::Sag;
+pub use saga::Saga;
+pub use svrg::Svrg;
+
+/// Solver selector used by configs, CLI and the harness.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum SolverKind {
+    /// Stochastic Average Gradient (Schmidt et al. 2016).
+    Sag,
+    /// SAGA (Defazio et al. 2014).
+    Saga,
+    /// Stochastic Variance Reduced Gradient (Johnson & Zhang 2013).
+    Svrg,
+    /// Stochastic Average Adjusted Gradient II (Chauhan et al. 2017).
+    Saag2,
+    /// Mini-batch SGD.
+    Mbsgd,
+}
+
+impl SolverKind {
+    /// Parse a CLI/config token.
+    pub fn parse(s: &str) -> Result<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "sag" => Ok(SolverKind::Sag),
+            "saga" => Ok(SolverKind::Saga),
+            "svrg" => Ok(SolverKind::Svrg),
+            "saag2" | "saag-ii" | "saagii" => Ok(SolverKind::Saag2),
+            "mbsgd" | "sgd" => Ok(SolverKind::Mbsgd),
+            other => Err(Error::Config(format!("unknown solver '{other}'"))),
+        }
+    }
+
+    /// Paper-style label.
+    pub fn label(&self) -> &'static str {
+        match self {
+            SolverKind::Sag => "SAG",
+            SolverKind::Saga => "SAGA",
+            SolverKind::Svrg => "SVRG",
+            SolverKind::Saag2 => "SAAG-II",
+            SolverKind::Mbsgd => "MBSGD",
+        }
+    }
+
+    /// The five solvers in the paper's table order.
+    pub fn all() -> [SolverKind; 5] {
+        [
+            SolverKind::Sag,
+            SolverKind::Saga,
+            SolverKind::Saag2,
+            SolverKind::Svrg,
+            SolverKind::Mbsgd,
+        ]
+    }
+
+    /// Instantiate for `n` features and `m` mini-batches per epoch, starting
+    /// from `w = 0` (the paper's initialization).
+    pub fn build(&self, n: usize, m: usize) -> Box<dyn Solver> {
+        match self {
+            SolverKind::Sag => Box::new(Sag::new(n, m)),
+            SolverKind::Saga => Box::new(Saga::new(n, m)),
+            SolverKind::Svrg => Box::new(Svrg::new(n, m)),
+            SolverKind::Saag2 => Box::new(Saag2::new(n, m)),
+            SolverKind::Mbsgd => Box::new(Mbsgd::new(n, m)),
+        }
+    }
+}
+
+/// One iterative ERM solver instance (owns `w` and any gradient memory).
+pub trait Solver: Send {
+    /// Paper label (SAG/SAGA/...).
+    fn name(&self) -> &'static str;
+
+    /// Current iterate.
+    fn w(&self) -> &[f32];
+
+    /// Set the l2 regularization coefficient `C` used in gradients.
+    fn set_reg(&mut self, c: f32);
+
+    /// Hook at the start of each epoch (SAAG-II resets its accumulator,
+    /// SVRG snapshots `w`).
+    fn epoch_start(&mut self, epoch: usize);
+
+    /// True if the solver needs a full-dataset gradient at the current
+    /// iterate before the epoch's inner steps can run (SVRG's `mu`).
+    /// The *driver* computes it — sequentially, through the storage
+    /// simulator, so its access cost is charged like any other read.
+    fn needs_full_grad(&self) -> bool {
+        false
+    }
+
+    /// Install the full gradient requested by [`Solver::needs_full_grad`].
+    fn install_full_grad(&mut self, _mu: &[f32]) {}
+
+    /// One inner iteration on mini-batch `j` (position within the epoch)
+    /// with step size `lr`.
+    fn step(
+        &mut self,
+        be: &mut dyn ComputeBackend,
+        batch: &BatchView<'_>,
+        j: usize,
+        lr: f32,
+    ) -> Result<()>;
+}
+
+/// Shared fallback: gradient + host algebra scratch.
+#[derive(Debug, Clone)]
+pub(crate) struct GradScratch {
+    pub g: Vec<f32>,
+}
+
+impl GradScratch {
+    pub fn new(n: usize) -> Self {
+        GradScratch { g: vec![0f32; n] }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_and_label() {
+        assert_eq!(SolverKind::parse("sag").unwrap(), SolverKind::Sag);
+        assert_eq!(SolverKind::parse("SAAG-II").unwrap(), SolverKind::Saag2);
+        assert_eq!(SolverKind::parse("sgd").unwrap(), SolverKind::Mbsgd);
+        assert!(SolverKind::parse("adam").is_err());
+        assert_eq!(SolverKind::Svrg.label(), "SVRG");
+        assert_eq!(SolverKind::all().len(), 5);
+    }
+
+    #[test]
+    fn build_starts_at_zero() {
+        for k in SolverKind::all() {
+            let s = k.build(4, 3);
+            assert_eq!(s.w(), &[0.0; 4]);
+            assert_eq!(s.name(), k.label());
+        }
+    }
+
+    #[test]
+    fn only_svrg_needs_full_grad() {
+        for k in SolverKind::all() {
+            let mut s = k.build(4, 3);
+            s.epoch_start(0);
+            assert_eq!(
+                s.needs_full_grad(),
+                k == SolverKind::Svrg,
+                "{}",
+                k.label()
+            );
+        }
+    }
+}

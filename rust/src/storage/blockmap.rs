@@ -1,0 +1,172 @@
+//! Row → block-extent geometry for the `.sxb` layout.
+//!
+//! Data is read block-wise, not content-wise (paper §1): a mini-batch's cost
+//! is determined by *which blocks* its rows live in. The block map converts
+//! a [`RowSelection`] into the ordered set of blocks touched, preserving the
+//! selection's access order so the simulator can detect contiguous runs.
+
+use crate::data::batch::RowSelection;
+
+/// Geometry of a row-major dataset on a blocked device.
+#[derive(Debug, Clone, Copy)]
+pub struct BlockMap {
+    /// Byte offset of feature row 0 (after header + labels in `.sxb`).
+    pub x_base: u64,
+    /// Bytes per feature row (`cols * 4`).
+    pub row_bytes: u64,
+    /// Device block size.
+    pub block_bytes: u64,
+}
+
+impl BlockMap {
+    /// Geometry for `ds` on a device with `block_bytes` blocks.
+    pub fn for_dataset(ds: &crate::data::dense::DenseDataset, block_bytes: u64) -> Self {
+        let (lo, hi) = ds.row_extent(0);
+        BlockMap { x_base: lo, row_bytes: hi - lo, block_bytes }
+    }
+
+    /// Inclusive block-id range `[lo, hi]` containing row `r`.
+    #[inline]
+    pub fn blocks_for_row(&self, r: usize) -> (u64, u64) {
+        let lo_byte = self.x_base + r as u64 * self.row_bytes;
+        let hi_byte = lo_byte + self.row_bytes - 1;
+        (lo_byte / self.block_bytes, hi_byte / self.block_bytes)
+    }
+
+    /// Inclusive block range for contiguous rows `[start, end)`.
+    #[inline]
+    pub fn blocks_for_range(&self, start: usize, end: usize) -> (u64, u64) {
+        debug_assert!(end > start);
+        let (lo, _) = self.blocks_for_row(start);
+        let (_, hi) = self.blocks_for_row(end - 1);
+        (lo, hi)
+    }
+
+    /// Ordered, batch-deduplicated list of blocks touched by `sel`.
+    ///
+    /// Order follows the selection's row order (the physical access order);
+    /// a block is listed once even if several selected rows share it — the
+    /// second row's bytes are already in the drive's track buffer / page.
+    pub fn blocks_for_selection(&self, sel: &RowSelection) -> Vec<u64> {
+        match sel {
+            RowSelection::Contiguous { start, end } => {
+                let (lo, hi) = self.blocks_for_range(*start, *end);
+                (lo..=hi).collect()
+            }
+            RowSelection::Scattered(rows) => {
+                let mut out = Vec::with_capacity(rows.len());
+                let mut seen = std::collections::HashSet::with_capacity(rows.len());
+                for &r in rows {
+                    let (lo, hi) = self.blocks_for_row(r as usize);
+                    for b in lo..=hi {
+                        if seen.insert(b) {
+                            out.push(b);
+                        }
+                    }
+                }
+                out
+            }
+        }
+    }
+
+    /// Group an *ordered* block list into maximal runs of consecutive ids.
+    /// Each run costs one positioning (seek + rotational + IO issue).
+    pub fn coalesce_runs(blocks: &[u64]) -> Vec<(u64, u64)> {
+        let mut runs = Vec::new();
+        let mut iter = blocks.iter().copied();
+        let Some(first) = iter.next() else {
+            return runs;
+        };
+        let (mut lo, mut hi) = (first, first);
+        for b in iter {
+            if b == hi + 1 {
+                hi = b;
+            } else {
+                runs.push((lo, hi));
+                lo = b;
+                hi = b;
+            }
+        }
+        runs.push((lo, hi));
+        runs
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::dense::DenseDataset;
+
+    fn map() -> BlockMap {
+        // 64-byte rows, 256-byte blocks -> 4 rows per block, x_base 0 for
+        // easy arithmetic
+        BlockMap { x_base: 0, row_bytes: 64, block_bytes: 256 }
+    }
+
+    #[test]
+    fn rows_share_blocks() {
+        let m = map();
+        assert_eq!(m.blocks_for_row(0), (0, 0));
+        assert_eq!(m.blocks_for_row(3), (0, 0));
+        assert_eq!(m.blocks_for_row(4), (1, 1));
+    }
+
+    #[test]
+    fn row_spanning_two_blocks() {
+        let m = BlockMap { x_base: 0, row_bytes: 100, block_bytes: 256 };
+        // row 2: bytes [200, 300) spans blocks 0 and 1
+        assert_eq!(m.blocks_for_row(2), (0, 1));
+    }
+
+    #[test]
+    fn x_base_offset_respected() {
+        let m = BlockMap { x_base: 250, row_bytes: 64, block_bytes: 256 };
+        // row 0: bytes [250, 314) spans blocks 0..=1
+        assert_eq!(m.blocks_for_row(0), (0, 1));
+    }
+
+    #[test]
+    fn contiguous_selection_is_one_run() {
+        let m = map();
+        let sel = RowSelection::Contiguous { start: 0, end: 16 };
+        let blocks = m.blocks_for_selection(&sel);
+        assert_eq!(blocks, vec![0, 1, 2, 3]);
+        assert_eq!(BlockMap::coalesce_runs(&blocks), vec![(0, 3)]);
+    }
+
+    #[test]
+    fn scattered_selection_many_runs() {
+        let m = map();
+        // rows 0, 8, 4 -> blocks 0, 2, 1 in that access order
+        let sel = RowSelection::Scattered(vec![0, 8, 4]);
+        let blocks = m.blocks_for_selection(&sel);
+        assert_eq!(blocks, vec![0, 2, 1]);
+        // order preserved: 0 | 2 | 1 -> three runs (head jumps back)
+        assert_eq!(BlockMap::coalesce_runs(&blocks), vec![(0, 0), (2, 2), (1, 1)]);
+    }
+
+    #[test]
+    fn duplicate_rows_dedupe_within_batch() {
+        let m = map();
+        let sel = RowSelection::Scattered(vec![1, 1, 2]);
+        // rows 1,2 share block 0
+        assert_eq!(m.blocks_for_selection(&sel), vec![0]);
+    }
+
+    #[test]
+    fn coalesce_handles_empty_and_single() {
+        assert!(BlockMap::coalesce_runs(&[]).is_empty());
+        assert_eq!(BlockMap::coalesce_runs(&[5]), vec![(5, 5)]);
+        assert_eq!(BlockMap::coalesce_runs(&[5, 6, 7, 9]), vec![(5, 7), (9, 9)]);
+    }
+
+    #[test]
+    fn for_dataset_uses_sxb_geometry() {
+        let d = DenseDataset::new("t", 2, vec![0.0; 20], vec![1.0; 10].iter()
+            .enumerate().map(|(i, _)| if i % 2 == 0 { 1.0 } else { -1.0 }).collect())
+            .unwrap();
+        let m = BlockMap::for_dataset(&d, 4096);
+        assert_eq!(m.row_bytes, 8);
+        assert_eq!(m.x_base, crate::data::dense::HEADER_BYTES + 40);
+    }
+}

@@ -1,0 +1,23 @@
+//! Storage substrate: block-device model, LRU page cache, access-time
+//! simulator, and a real `.sxb` file reader for out-of-core training.
+//!
+//! The paper's eq.(1) decomposes training time into access + processing
+//! time, and §1 gives the access model verbatim: *seek time* (head
+//! movement), *rotational latency* (sector arrival), *transfer time*
+//! (block-wise, never content-wise), with "contiguous data access … faster
+//! than dispersed data access in all the cases whether data is stored on
+//! RAM, SSD or HDD". This module implements exactly that model so every
+//! mini-batch fetch is costed from the *actual byte extents* a sampling
+//! technique touches — the substitution for the authors' physical MacBook
+//! (DESIGN.md §3).
+
+pub mod blockmap;
+pub mod cache;
+pub mod profile;
+pub mod reader;
+pub mod simulator;
+
+pub use blockmap::BlockMap;
+pub use cache::LruCache;
+pub use profile::DeviceProfile;
+pub use simulator::{AccessCost, AccessSimulator};

@@ -1,0 +1,166 @@
+//! Block-device timing profiles (paper §1's seek / rotational / transfer
+//! decomposition).
+
+use crate::error::{Error, Result};
+
+/// Timing model of one storage device.
+///
+/// Cost of fetching a maximal contiguous run of `k` blocks:
+///
+/// ```text
+/// cost(run) = avg_seek_s + avg_rotational_s     (mechanical positioning)
+///           + per_io_latency_s                  (command issue; SSD/RAM too)
+///           + k * block_bytes / transfer_bytes_per_s
+/// ```
+///
+/// A dispersed (random-sampling) batch decomposes into many runs and pays
+/// the positioning terms per run; a contiguous (cyclic/systematic) batch is
+/// one run. This is the paper's model, stated in §1 and §2.1.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DeviceProfile {
+    /// Human-readable name ("hdd", "ssd", "ram", or custom).
+    pub name: String,
+    /// Average head-seek time in seconds (0 for SSD/RAM).
+    pub avg_seek_s: f64,
+    /// Average rotational latency in seconds (0 for SSD/RAM).
+    pub avg_rotational_s: f64,
+    /// Fixed per-IO command latency (dominant on SSD; tiny on RAM).
+    pub per_io_latency_s: f64,
+    /// Sustained sequential transfer bandwidth, bytes/second.
+    pub transfer_bytes_per_s: f64,
+    /// Device block size in bytes — data is read block-wise, never
+    /// content-wise (paper §1).
+    pub block_bytes: u64,
+}
+
+impl DeviceProfile {
+    /// 7200 rpm consumer HDD: 8.5 ms seek, 4.17 ms avg rotational latency
+    /// (half a revolution), 150 MB/s sequential, 4 KiB blocks.
+    pub fn hdd() -> Self {
+        DeviceProfile {
+            name: "hdd".into(),
+            avg_seek_s: 8.5e-3,
+            avg_rotational_s: 4.17e-3,
+            per_io_latency_s: 50e-6,
+            transfer_bytes_per_s: 150e6,
+            block_bytes: 4096,
+        }
+    }
+
+    /// SATA SSD (the paper's MacBook Air testbed): no mechanical parts,
+    /// ~60 µs per IO, 500 MB/s, 4 KiB pages.
+    pub fn ssd() -> Self {
+        DeviceProfile {
+            name: "ssd".into(),
+            avg_seek_s: 0.0,
+            avg_rotational_s: 0.0,
+            per_io_latency_s: 60e-6,
+            transfer_bytes_per_s: 500e6,
+            block_bytes: 4096,
+        }
+    }
+
+    /// DRAM: ~100 ns access, ~20 GB/s, cache-line-ish 4 KiB "blocks"
+    /// (the paper notes cache strategies still favour contiguity).
+    pub fn ram() -> Self {
+        DeviceProfile {
+            name: "ram".into(),
+            avg_seek_s: 0.0,
+            avg_rotational_s: 0.0,
+            per_io_latency_s: 100e-9,
+            transfer_bytes_per_s: 20e9,
+            block_bytes: 4096,
+        }
+    }
+
+    /// Look up a built-in profile by name.
+    pub fn by_name(name: &str) -> Result<Self> {
+        match name {
+            "hdd" => Ok(Self::hdd()),
+            "ssd" => Ok(Self::ssd()),
+            "ram" => Ok(Self::ram()),
+            other => Err(Error::Config(format!(
+                "unknown device profile '{other}' (hdd|ssd|ram)"
+            ))),
+        }
+    }
+
+    /// Positioning cost paid once per contiguous run.
+    #[inline]
+    pub fn positioning_s(&self) -> f64 {
+        self.avg_seek_s + self.avg_rotational_s + self.per_io_latency_s
+    }
+
+    /// Transfer cost of `k` blocks.
+    #[inline]
+    pub fn transfer_s(&self, blocks: u64) -> f64 {
+        blocks as f64 * self.block_bytes as f64 / self.transfer_bytes_per_s
+    }
+
+    /// Validate physical sanity.
+    pub fn validate(&self) -> Result<()> {
+        if self.block_bytes == 0 {
+            return Err(Error::Config("block_bytes must be > 0".into()));
+        }
+        if self.transfer_bytes_per_s <= 0.0 {
+            return Err(Error::Config("transfer_bytes_per_s must be > 0".into()));
+        }
+        if self.avg_seek_s < 0.0 || self.avg_rotational_s < 0.0 || self.per_io_latency_s < 0.0 {
+            return Err(Error::Config("latencies must be >= 0".into()));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builtin_profiles_validate() {
+        for p in [DeviceProfile::hdd(), DeviceProfile::ssd(), DeviceProfile::ram()] {
+            p.validate().unwrap();
+        }
+    }
+
+    #[test]
+    fn by_name_roundtrip() {
+        assert_eq!(DeviceProfile::by_name("hdd").unwrap(), DeviceProfile::hdd());
+        assert_eq!(DeviceProfile::by_name("ssd").unwrap(), DeviceProfile::ssd());
+        assert_eq!(DeviceProfile::by_name("ram").unwrap(), DeviceProfile::ram());
+        assert!(DeviceProfile::by_name("floppy").is_err());
+    }
+
+    #[test]
+    fn hdd_positioning_dominates_small_transfers() {
+        let p = DeviceProfile::hdd();
+        // one 4K block transfer ~27 µs, positioning ~12.7 ms
+        assert!(p.positioning_s() > 100.0 * p.transfer_s(1));
+    }
+
+    #[test]
+    fn ram_positioning_negligible() {
+        let p = DeviceProfile::ram();
+        assert!(p.positioning_s() < p.transfer_s(1));
+    }
+
+    #[test]
+    fn ordering_hdd_ssd_ram() {
+        let (h, s, r) = (DeviceProfile::hdd(), DeviceProfile::ssd(), DeviceProfile::ram());
+        assert!(h.positioning_s() > s.positioning_s());
+        assert!(s.positioning_s() > r.positioning_s());
+    }
+
+    #[test]
+    fn invalid_profiles_rejected() {
+        let mut p = DeviceProfile::hdd();
+        p.block_bytes = 0;
+        assert!(p.validate().is_err());
+        let mut p = DeviceProfile::hdd();
+        p.transfer_bytes_per_s = 0.0;
+        assert!(p.validate().is_err());
+        let mut p = DeviceProfile::hdd();
+        p.avg_seek_s = -1.0;
+        assert!(p.validate().is_err());
+    }
+}

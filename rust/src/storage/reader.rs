@@ -1,0 +1,215 @@
+//! Real `.sxb` file reader — out-of-core batch source.
+//!
+//! Where the simulator *models* device time, this reader *performs* the
+//! reads, so (a) datasets larger than RAM can be trained on directly, and
+//! (b) the real syscall/copy cost of scattered vs contiguous access on this
+//! machine can be measured (EXPERIMENTS.md reports both). Labels are tiny
+//! (4 bytes/row) and kept resident; feature rows are read per batch.
+
+use std::fs::File;
+use std::io::{Read, Seek, SeekFrom};
+use std::path::Path;
+
+use crate::data::batch::RowSelection;
+use crate::data::dense::HEADER_BYTES;
+use crate::error::{Error, Result};
+
+/// Disk-backed feature source over one `.sxb` file.
+#[derive(Debug)]
+pub struct DiskSource {
+    file: File,
+    rows: usize,
+    cols: usize,
+    x_base: u64,
+    /// Resident label vector.
+    y: Vec<f32>,
+    /// Bytes actually read from the file (lifetime).
+    pub bytes_read: u64,
+    /// Read syscalls issued (lifetime) — the real-IO analogue of "seeks".
+    pub read_calls: u64,
+}
+
+impl DiskSource {
+    /// Open an `.sxb` file, validating the header and loading labels.
+    pub fn open(path: impl AsRef<Path>) -> Result<Self> {
+        let mut file = File::open(path)?;
+        let mut hdr = [0u8; 24];
+        file.read_exact(&mut hdr)?;
+        if &hdr[0..4] != b"SXB1" {
+            return Err(Error::DatasetParse { line: 0, msg: "bad .sxb magic".into() });
+        }
+        let rows = u64::from_le_bytes(hdr[8..16].try_into().unwrap()) as usize;
+        let cols = u64::from_le_bytes(hdr[16..24].try_into().unwrap()) as usize;
+        if rows == 0 || cols == 0 {
+            return Err(Error::DatasetParse { line: 0, msg: "bad .sxb dims".into() });
+        }
+        let mut yraw = vec![0u8; rows * 4];
+        file.read_exact(&mut yraw)?;
+        let y = yraw
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        Ok(DiskSource {
+            file,
+            rows,
+            cols,
+            x_base: HEADER_BYTES + rows as u64 * 4,
+            y,
+            bytes_read: 0,
+            read_calls: 0,
+        })
+    }
+
+    /// Number of data points.
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    /// Feature dimension.
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// Resident labels.
+    pub fn labels(&self) -> &[f32] {
+        &self.y
+    }
+
+    /// Read the selected feature rows into `x_out` (cleared first) and the
+    /// matching labels into `y_out`. Contiguous selections issue **one**
+    /// read; scattered selections issue one seek+read per row — the physical
+    /// difference the paper exploits.
+    pub fn read_selection(
+        &mut self,
+        sel: &RowSelection,
+        x_out: &mut Vec<f32>,
+        y_out: &mut Vec<f32>,
+    ) -> Result<()> {
+        let row_bytes = self.cols * 4;
+        x_out.clear();
+        y_out.clear();
+        match sel {
+            RowSelection::Contiguous { start, end } => {
+                if *end > self.rows || start >= end {
+                    return Err(Error::Other(format!(
+                        "selection [{start},{end}) out of bounds ({} rows)",
+                        self.rows
+                    )));
+                }
+                let nrows = end - start;
+                let mut raw = vec![0u8; nrows * row_bytes];
+                self.file
+                    .seek(SeekFrom::Start(self.x_base + (*start * row_bytes) as u64))?;
+                self.file.read_exact(&mut raw)?;
+                self.read_calls += 1;
+                self.bytes_read += raw.len() as u64;
+                push_f32s(&raw, x_out);
+                y_out.extend_from_slice(&self.y[*start..*end]);
+            }
+            RowSelection::Scattered(rows) => {
+                let mut raw = vec![0u8; row_bytes];
+                for &r in rows {
+                    let r = r as usize;
+                    if r >= self.rows {
+                        return Err(Error::Other(format!("row {r} out of bounds")));
+                    }
+                    self.file
+                        .seek(SeekFrom::Start(self.x_base + (r * row_bytes) as u64))?;
+                    self.file.read_exact(&mut raw)?;
+                    self.read_calls += 1;
+                    self.bytes_read += raw.len() as u64;
+                    push_f32s(&raw, x_out);
+                    y_out.push(self.y[r]);
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+fn push_f32s(raw: &[u8], out: &mut Vec<f32>) {
+    out.reserve(raw.len() / 4);
+    for c in raw.chunks_exact(4) {
+        out.push(f32::from_le_bytes([c[0], c[1], c[2], c[3]]));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::dense::DenseDataset;
+
+    fn setup() -> (std::path::PathBuf, DenseDataset) {
+        let x: Vec<f32> = (0..60).map(|v| v as f32).collect(); // 20 rows x 3
+        let y: Vec<f32> = (0..20).map(|r| if r % 3 == 0 { 1.0 } else { -1.0 }).collect();
+        let ds = DenseDataset::new("t", 3, x, y).unwrap();
+        let p = std::env::temp_dir().join(format!("reader_test_{}.sxb", std::process::id()));
+        ds.save(&p).unwrap();
+        (p, ds)
+    }
+
+    #[test]
+    fn open_reads_header_and_labels() {
+        let (p, ds) = setup();
+        let src = DiskSource::open(&p).unwrap();
+        assert_eq!(src.rows(), 20);
+        assert_eq!(src.cols(), 3);
+        assert_eq!(src.labels(), ds.y());
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn contiguous_read_matches_memory_one_syscall() {
+        let (p, ds) = setup();
+        let mut src = DiskSource::open(&p).unwrap();
+        let mut x = Vec::new();
+        let mut y = Vec::new();
+        src.read_selection(&RowSelection::Contiguous { start: 5, end: 9 }, &mut x, &mut y)
+            .unwrap();
+        let (want_x, want_y) = ds.rows_slice(5, 9);
+        assert_eq!(x, want_x);
+        assert_eq!(y, want_y);
+        assert_eq!(src.read_calls, 1);
+        assert_eq!(src.bytes_read, 4 * 3 * 4);
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn scattered_read_matches_memory_per_row_syscalls() {
+        let (p, ds) = setup();
+        let mut src = DiskSource::open(&p).unwrap();
+        let mut x = Vec::new();
+        let mut y = Vec::new();
+        src.read_selection(&RowSelection::Scattered(vec![19, 0, 7]), &mut x, &mut y)
+            .unwrap();
+        assert_eq!(&x[0..3], ds.row(19));
+        assert_eq!(&x[3..6], ds.row(0));
+        assert_eq!(&x[6..9], ds.row(7));
+        assert_eq!(y, vec![ds.y()[19], ds.y()[0], ds.y()[7]]);
+        assert_eq!(src.read_calls, 3);
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn out_of_bounds_selection_errors() {
+        let (p, _) = setup();
+        let mut src = DiskSource::open(&p).unwrap();
+        let mut x = Vec::new();
+        let mut y = Vec::new();
+        assert!(src
+            .read_selection(&RowSelection::Contiguous { start: 10, end: 25 }, &mut x, &mut y)
+            .is_err());
+        assert!(src
+            .read_selection(&RowSelection::Scattered(vec![20]), &mut x, &mut y)
+            .is_err());
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn rejects_non_sxb_file() {
+        let p = std::env::temp_dir().join(format!("reader_bad_{}.sxb", std::process::id()));
+        std::fs::write(&p, b"not an sxb file at all........").unwrap();
+        assert!(DiskSource::open(&p).is_err());
+        std::fs::remove_file(p).ok();
+    }
+}

@@ -1,0 +1,410 @@
+//! Training driver: sampler → storage simulator → batch assembly → solver,
+//! with the eq.(1) time decomposition recorded per epoch.
+//!
+//! Measurement protocol (matches the paper §4):
+//! * *training time* = simulated device access time + measured batch
+//!   assembly time + measured compute time;
+//! * the full-dataset objective used for traces/tables is evaluated
+//!   **outside** the clock, like the paper's reporting;
+//! * SVRG's per-epoch full gradient *is* charged (it reads the data).
+
+pub mod optimum;
+pub mod parallel;
+
+use std::sync::Arc;
+
+use crate::backend::{ComputeBackend, NativeBackend, PjrtBackend};
+use crate::config::{BackendKind, ExperimentConfig, StepKind};
+use crate::data::batch::{BatchAssembler, BatchView};
+use crate::data::dense::DenseDataset;
+use crate::error::Result;
+use crate::metrics::timer::{Stopwatch, TimeBreakdown};
+use crate::metrics::Trace;
+use crate::pipeline::prefetch::Prefetcher;
+use crate::solvers::linesearch::{backtracking, LineSearchParams, LineSearchScratch};
+use crate::storage::simulator::AccessSimulator;
+
+pub use optimum::estimate_optimum;
+
+/// Result of one experiment arm.
+#[derive(Debug)]
+pub struct TrainReport {
+    /// Arm label (config name).
+    pub name: String,
+    /// Dataset name.
+    pub dataset: String,
+    /// Solver label.
+    pub solver: &'static str,
+    /// Sampling label.
+    pub sampling: &'static str,
+    /// Step rule label.
+    pub step: &'static str,
+    /// Batch size.
+    pub batch_size: usize,
+    /// Epochs completed.
+    pub epochs: usize,
+    /// Convergence trace (objective vs cumulative training time).
+    pub trace: Trace,
+    /// Time decomposition.
+    pub time: TimeBreakdown,
+    /// Final full-dataset objective.
+    pub final_objective: f64,
+    /// The constant step size used (1/L), even under line search (reported
+    /// for diagnostics).
+    pub alpha_const: f32,
+    /// Final iterate.
+    pub w: Vec<f32>,
+}
+
+impl TrainReport {
+    /// One-line human summary.
+    pub fn summary(&self) -> String {
+        format!(
+            "{:<12} {:<8} {:<6} {:<14} B={:<5} epochs={:<3} time={:>10.4}s \
+             (access {:>6.1}%) obj={:.10}",
+            self.dataset,
+            self.solver,
+            self.sampling,
+            self.step,
+            self.batch_size,
+            self.epochs,
+            self.time.training_time_s(),
+            100.0 * self.time.access_fraction(),
+            self.final_objective
+        )
+    }
+}
+
+/// Build the configured compute backend.
+pub fn build_backend(cfg: &ExperimentConfig, ds: &DenseDataset) -> Result<Box<dyn ComputeBackend>> {
+    Ok(match cfg.backend {
+        BackendKind::Native => Box::new(NativeBackend::new()),
+        BackendKind::Pjrt => {
+            Box::new(PjrtBackend::new(&cfg.artifacts_dir, ds.cols(), cfg.batch_size)?)
+        }
+    })
+}
+
+/// Regularization coefficient for the arm: explicit config value, else the
+/// dataset profile default, else 1e-4.
+pub fn reg_for(cfg: &ExperimentConfig) -> f32 {
+    cfg.reg_c.unwrap_or_else(|| {
+        crate::data::registry::profile(&cfg.dataset)
+            .map(|p| p.reg_c)
+            .unwrap_or(1e-4)
+    })
+}
+
+/// Run one experiment arm over an already-resolved dataset.
+pub fn run_experiment(cfg: &ExperimentConfig, ds: &DenseDataset) -> Result<TrainReport> {
+    cfg.validate()?;
+    let mut backend = build_backend(cfg, ds)?;
+    if cfg.pre_shuffle {
+        // paper §5 extension: one-time layout shuffle so CS/SS keep
+        // contiguous access over a de-clustered row order
+        let mut shuffled = ds.clone();
+        crate::data::scaling::shuffle_rows(&mut shuffled, cfg.seed ^ 0x9E37);
+        return run_experiment_with_backend(cfg, &shuffled, backend.as_mut());
+    }
+    run_experiment_with_backend(cfg, ds, backend.as_mut())
+}
+
+/// Like [`run_experiment`] but with a caller-provided backend (lets the
+/// harness share one PJRT runtime across arms).
+pub fn run_experiment_with_backend(
+    cfg: &ExperimentConfig,
+    ds: &DenseDataset,
+    be: &mut dyn ComputeBackend,
+) -> Result<TrainReport> {
+    let c = reg_for(cfg);
+    let l = ds.lipschitz(c);
+    let alpha_const = (1.0 / l) as f32;
+    let rows = ds.rows();
+    let n = ds.cols();
+    let batch = cfg.batch_size.min(rows);
+    let m = rows.div_ceil(batch);
+
+    let mut sampler = cfg.sampling.build(rows, batch, cfg.seed, Some(ds.y()))?;
+    let mut solver = cfg.solver.build(n, m);
+    solver.set_reg(c);
+    let mut sim = AccessSimulator::for_dataset(cfg.storage.device()?, ds, cfg.storage.cache_bytes());
+    let mut assembler = BatchAssembler::new();
+    let mut time = TimeBreakdown::default();
+    let mut trace = Trace::default();
+    let ls_params = LineSearchParams { alpha0: 1.0, ..Default::default() };
+    let mut ls_scratch = LineSearchScratch::default();
+    let mut mu_scratch = vec![0f32; n];
+    let mut mu_chunk = vec![0f32; n];
+
+    // initial objective (outside the clock)
+    let obj0 = be.full_objective(solver.w(), ds, c)?;
+    trace.push(0, 0.0, obj0);
+
+    let wall = Stopwatch::start();
+    let arc_ds = (cfg.prefetch_depth > 0).then(|| Arc::new(ds.clone()));
+
+    for epoch in 0..cfg.epochs {
+        solver.epoch_start(epoch);
+
+        // SVRG: full gradient at the snapshot — a sequential, charged sweep
+        if solver.needs_full_grad() {
+            full_gradient_sweep(
+                be,
+                ds,
+                solver.w(),
+                c,
+                batch,
+                &mut sim,
+                &mut time,
+                &mut mu_scratch,
+                &mut mu_chunk,
+            )?;
+            solver.install_full_grad(&mu_scratch);
+        }
+
+        if let Some(arc) = &arc_ds {
+            // pipelined path: reader thread overlaps gather with compute
+            let selections = sampler.epoch(epoch);
+            let sim_moved = std::mem::replace(
+                &mut sim,
+                AccessSimulator::for_dataset(cfg.storage.device()?, ds, 0),
+            );
+            let mut pf =
+                Prefetcher::spawn(arc.clone(), selections, sim_moved, cfg.prefetch_depth);
+            while let Some(b) = pf.next_batch() {
+                let view = BatchView { x: &b.x, y: &b.y, rows: b.rows, cols: n };
+                let sw = Stopwatch::start();
+                let lr = step_size(cfg, be, solver.w(), &view, c, alpha_const,
+                                   &ls_params, &mut ls_scratch)?;
+                solver.step(be, &view, b.j, lr)?;
+                time.compute_s += sw.elapsed_s();
+            }
+            let (sim_back, stats) = pf.join();
+            sim = sim_back;
+            time.sim_access_s += stats.sim_access_s;
+            time.assemble_s += stats.assemble_s;
+        } else {
+            // synchronous path: fetch → assemble → step
+            for (j, sel) in sampler.epoch(epoch).into_iter().enumerate() {
+                let cost = sim.fetch(&sel);
+                time.sim_access_s += cost.time_s;
+                let mut sw = Stopwatch::start();
+                let view = assembler.assemble(ds, &sel);
+                time.assemble_s += sw.lap_s();
+                let lr = step_size(cfg, be, solver.w(), &view, c, alpha_const,
+                                   &ls_params, &mut ls_scratch)?;
+                solver.step(be, &view, j, lr)?;
+                time.compute_s += sw.lap_s();
+            }
+        }
+
+        // record (outside the clock)
+        let last = epoch + 1 == cfg.epochs;
+        if last || (cfg.record_every > 0 && (epoch + 1) % cfg.record_every == 0) {
+            let obj = be.full_objective(solver.w(), ds, c)?;
+            trace.push(epoch + 1, time.training_time_s(), obj);
+        }
+    }
+    time.wall_s = wall.elapsed_s();
+    time.access = sim.total;
+
+    let final_objective = trace.final_objective().unwrap_or(obj0);
+    Ok(TrainReport {
+        name: cfg.name.clone(),
+        dataset: cfg.dataset.clone(),
+        solver: cfg.solver.label(),
+        sampling: cfg.sampling.label(),
+        step: cfg.step.label(),
+        batch_size: batch,
+        epochs: cfg.epochs,
+        trace,
+        time,
+        final_objective,
+        alpha_const,
+        w: solver.w().to_vec(),
+    })
+}
+
+/// Pick the step size for this batch according to the configured rule.
+#[allow(clippy::too_many_arguments)]
+fn step_size(
+    cfg: &ExperimentConfig,
+    be: &mut dyn ComputeBackend,
+    w: &[f32],
+    view: &BatchView<'_>,
+    c: f32,
+    alpha_const: f32,
+    ls_params: &LineSearchParams,
+    ls_scratch: &mut LineSearchScratch,
+) -> Result<f32> {
+    match cfg.step {
+        StepKind::Constant => Ok(alpha_const),
+        StepKind::LineSearch => backtracking(be, w, view, c, ls_params, ls_scratch),
+    }
+}
+
+/// Full-dataset gradient at `w` via a sequential chunked sweep, charged to
+/// the simulator and the compute clock. Result in `out`.
+#[allow(clippy::too_many_arguments)]
+fn full_gradient_sweep(
+    be: &mut dyn ComputeBackend,
+    ds: &DenseDataset,
+    w: &[f32],
+    c: f32,
+    chunk: usize,
+    sim: &mut AccessSimulator,
+    time: &mut TimeBreakdown,
+    out: &mut [f32],
+    scratch: &mut [f32],
+) -> Result<()> {
+    let rows = ds.rows();
+    out.fill(0.0);
+    let mut start = 0;
+    while start < rows {
+        let end = (start + chunk).min(rows);
+        let sel = crate::data::batch::RowSelection::Contiguous { start, end };
+        let cost = sim.fetch(&sel);
+        time.sim_access_s += cost.time_s;
+        let sw = Stopwatch::start();
+        let (x, y) = ds.rows_slice(start, end);
+        let view = BatchView { x, y, rows: end - start, cols: ds.cols() };
+        // pure data term of this chunk (c = 0), weighted by chunk mass
+        be.grad_into(w, &view, 0.0, scratch)?;
+        let weight = (end - start) as f32 / rows as f32;
+        crate::math::axpy(weight, scratch, out);
+        time.compute_s += sw.elapsed_s();
+        start = end;
+    }
+    // add the regularizer once
+    crate::math::axpy(c, w, out);
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::StorageConfig;
+    use crate::sampling::SamplingKind;
+    use crate::solvers::SolverKind;
+
+    fn tiny_ds() -> DenseDataset {
+        crate::data::synth::generate(
+            &crate::data::synth::SynthSpec {
+                name: "tiny",
+                rows: 600,
+                cols: 8,
+                dist: crate::data::synth::FeatureDist::Gaussian,
+                flip_prob: 0.05,
+                margin_noise: 0.3,
+                pos_fraction: 0.5,
+            },
+            7,
+        )
+        .unwrap()
+    }
+
+    fn quick_cfg(solver: SolverKind, sampling: SamplingKind) -> ExperimentConfig {
+        ExperimentConfig {
+            epochs: 4,
+            batch_size: 100,
+            solver,
+            sampling,
+            dataset: "tiny".into(),
+            reg_c: Some(1e-3),
+            storage: StorageConfig { profile: "hdd".into(), cache_mib: 0, block_kib: None },
+            prefetch_depth: 0,
+            ..ExperimentConfig::default()
+        }
+    }
+
+    #[test]
+    fn every_solver_reduces_objective_with_every_paper_sampling() {
+        let ds = tiny_ds();
+        for solver in SolverKind::all() {
+            for sampling in SamplingKind::paper_kinds() {
+                let cfg = quick_cfg(solver, sampling);
+                let r = run_experiment(&cfg, &ds).unwrap();
+                let first = r.trace.points.first().unwrap().objective;
+                assert!(
+                    r.final_objective < first,
+                    "{}/{}: {} !< {}",
+                    solver.label(),
+                    sampling.label(),
+                    r.final_objective,
+                    first
+                );
+                assert_eq!(r.epochs, 4);
+                assert!(r.time.training_time_s() > 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn cs_and_ss_access_time_beats_rs() {
+        let ds = tiny_ds();
+        let t = |s: SamplingKind| {
+            let cfg = quick_cfg(SolverKind::Mbsgd, s);
+            let r = run_experiment(&cfg, &ds).unwrap();
+            r.time.sim_access_s
+        };
+        let (rs, cs, ss) = (t(SamplingKind::Rs), t(SamplingKind::Cs), t(SamplingKind::Ss));
+        assert!(cs < rs / 2.0, "cs={cs} rs={rs}");
+        assert!(ss < rs / 2.0, "ss={ss} rs={rs}");
+        assert!(cs <= ss * 1.01, "cs={cs} should be <= ss={ss}");
+    }
+
+    #[test]
+    fn line_search_runs_and_descends() {
+        let ds = tiny_ds();
+        let mut cfg = quick_cfg(SolverKind::Mbsgd, SamplingKind::Ss);
+        cfg.step = StepKind::LineSearch;
+        let r = run_experiment(&cfg, &ds).unwrap();
+        assert!(r.final_objective < r.trace.points[0].objective);
+    }
+
+    #[test]
+    fn prefetch_path_matches_sync_path_objective() {
+        let ds = tiny_ds();
+        let mut sync_cfg = quick_cfg(SolverKind::Saga, SamplingKind::Ss);
+        sync_cfg.prefetch_depth = 0;
+        let mut pf_cfg = sync_cfg.clone();
+        pf_cfg.prefetch_depth = 3;
+        let a = run_experiment(&sync_cfg, &ds).unwrap();
+        let b = run_experiment(&pf_cfg, &ds).unwrap();
+        // identical selections + identical math ⇒ identical iterates
+        assert_eq!(a.w, b.w);
+        assert!((a.final_objective - b.final_objective).abs() < 1e-12);
+    }
+
+    #[test]
+    fn svrg_full_sweep_is_charged() {
+        let ds = tiny_ds();
+        let svrg = run_experiment(&quick_cfg(SolverKind::Svrg, SamplingKind::Cs), &ds).unwrap();
+        let sgd = run_experiment(&quick_cfg(SolverKind::Mbsgd, SamplingKind::Cs), &ds).unwrap();
+        // SVRG reads the dataset twice per epoch (sweep + batches)
+        assert!(
+            svrg.time.access.bytes_transferred > sgd.time.access.bytes_transferred,
+            "svrg={} sgd={}",
+            svrg.time.access.bytes_transferred,
+            sgd.time.access.bytes_transferred
+        );
+    }
+
+    #[test]
+    fn trace_is_monotone_in_time() {
+        let ds = tiny_ds();
+        let r = run_experiment(&quick_cfg(SolverKind::Sag, SamplingKind::Rs), &ds).unwrap();
+        for w in r.trace.points.windows(2) {
+            assert!(w[1].train_time_s >= w[0].train_time_s);
+            assert!(w[1].epoch > w[0].epoch);
+        }
+    }
+
+    #[test]
+    fn summary_is_informative() {
+        let ds = tiny_ds();
+        let r = run_experiment(&quick_cfg(SolverKind::Mbsgd, SamplingKind::Ss), &ds).unwrap();
+        let s = r.summary();
+        assert!(s.contains("MBSGD") && s.contains("SS") && s.contains("tiny"));
+    }
+}

@@ -1,0 +1,216 @@
+//! End-to-end harness tests: small-scale versions of the paper's tables and
+//! figures must reproduce the paper's qualitative *shape*:
+//!
+//! * CS/SS train faster than RS at equal epochs (Tables 2–4 shape);
+//! * objectives agree between samplings to several decimals (the paper:
+//!   "values are same up to certain decimal places");
+//! * speedup grows with the storage profile's positioning cost
+//!   (HDD > SSD > RAM — paper §1: "more prominent for HDD");
+//! * Theorem 1 shape: all three samplings converge linearly at comparable
+//!   empirical rates.
+
+use samplex::backend::NativeBackend;
+use samplex::bench_harness::{run_figure, run_table, speedups};
+use samplex::config::{ExperimentConfig, GridConfig, StepKind};
+use samplex::data::synth::{generate, FeatureDist, SynthSpec};
+use samplex::sampling::SamplingKind;
+use samplex::solvers::SolverKind;
+use samplex::train::estimate_optimum;
+
+fn dataset(rows: usize, cols: usize, seed: u64) -> samplex::data::dense::DenseDataset {
+    generate(
+        &SynthSpec {
+            name: "e2e",
+            rows,
+            cols,
+            dist: FeatureDist::Gaussian,
+            flip_prob: 0.08,
+            margin_noise: 0.5,
+            pos_fraction: 0.5,
+        },
+        seed,
+    )
+    .unwrap()
+}
+
+fn small_grid(epochs: usize) -> GridConfig {
+    let mut g = GridConfig::paper_table("e2e");
+    g.base.epochs = epochs;
+    g.base.reg_c = Some(1e-3);
+    // test datasets are tiny (≪ any real cache); model the paper's
+    // data-larger-than-cache regime with a cold hdd, where the access-cost
+    // ordering is most pronounced and the shape assertion is robust
+    g.base.storage.profile = "hdd".into();
+    g.base.storage.cache_mib = 0;
+    g.solvers = vec![SolverKind::Mbsgd, SolverKind::Sag, SolverKind::Svrg];
+    g.batch_sizes = vec![100];
+    g.steps = vec![StepKind::Constant];
+    g
+}
+
+#[test]
+fn table_shape_cs_ss_faster_same_objective() {
+    let ds = dataset(3000, 12, 3);
+    let rows = run_table(&small_grid(3), &ds, None).unwrap();
+    assert_eq!(rows.len(), 9); // 3 solvers x 3 samplings
+
+    for sp in speedups(&rows) {
+        assert!(sp.cs > 1.5, "{}: RS/CS = {:.2} (want > 1.5)", sp.setting, sp.cs);
+        assert!(sp.ss > 1.5, "{}: RS/SS = {:.2} (want > 1.5)", sp.setting, sp.ss);
+    }
+
+    // objectives agree across samplings to ~2+ decimals per solver
+    let mut by_solver: std::collections::HashMap<&str, Vec<f64>> = Default::default();
+    for r in &rows {
+        by_solver.entry(r.solver.as_str()).or_default().push(r.objective);
+    }
+    for (solver, objs) in by_solver {
+        let min = objs.iter().cloned().fold(f64::MAX, f64::min);
+        let max = objs.iter().cloned().fold(f64::MIN, f64::max);
+        assert!(
+            max - min < 0.05 * (1.0 + min.abs()),
+            "{solver}: objective spread {min}..{max} too wide"
+        );
+    }
+}
+
+#[test]
+fn speedup_is_most_prominent_on_hdd() {
+    // paper §1: "the difference in access time would be more prominent for
+    // HDD" — the RS/SS time ratio must be ordered hdd > ssd >= ram
+    let ds = dataset(3000, 12, 5);
+    let mut ratios = Vec::new();
+    for profile in ["hdd", "ssd", "ram"] {
+        let mut g = small_grid(2);
+        g.solvers = vec![SolverKind::Mbsgd];
+        g.base.storage.profile = profile.into();
+        let rows = run_table(&g, &ds, None).unwrap();
+        let sp = speedups(&rows);
+        assert_eq!(sp.len(), 1);
+        ratios.push((profile, sp[0].ss));
+    }
+    assert!(
+        ratios[0].1 > ratios[1].1,
+        "hdd speedup {} should exceed ssd {}",
+        ratios[0].1,
+        ratios[1].1
+    );
+    assert!(
+        ratios[1].1 >= ratios[2].1 * 0.9,
+        "ssd speedup {} should be >= ram {}",
+        ratios[1].1,
+        ratios[2].1
+    );
+}
+
+#[test]
+fn theorem1_shape_linear_convergence_all_samplings() {
+    let ds = dataset(2000, 10, 7);
+    let mut be = NativeBackend::new();
+    let p_star = estimate_optimum(&mut be, &ds, 1e-3, 1500).unwrap();
+
+    let mut g = small_grid(8);
+    g.solvers = vec![SolverKind::Mbsgd];
+    let series = run_figure(&g, &ds, p_star, None).unwrap();
+    assert_eq!(series.len(), 3);
+
+    let mut rates = std::collections::HashMap::new();
+    for s in &series {
+        let rate = s.rate.unwrap_or(0.0);
+        assert!(
+            rate < -0.01,
+            "{}: expected clearly negative log-gap slope, got {rate}",
+            s.label
+        );
+        rates.insert(s.sampling, rate);
+    }
+    // same order of magnitude across samplings (Theorem 1: same rate in
+    // expectation)
+    let rs = rates[&SamplingKind::Rs];
+    let cs = rates[&SamplingKind::Cs];
+    let ss = rates[&SamplingKind::Ss];
+    for (name, r) in [("cs", cs), ("ss", ss)] {
+        let ratio = r / rs;
+        assert!(
+            (0.2..5.0).contains(&ratio),
+            "{name} rate {r} vs rs rate {rs}: ratio {ratio} out of family"
+        );
+    }
+}
+
+#[test]
+fn line_search_arms_run_and_cost_more_compute() {
+    let ds = dataset(1500, 8, 9);
+    let mk = |step: StepKind| {
+        let mut cfg = ExperimentConfig::quick("e2e", SolverKind::Mbsgd, SamplingKind::Ss, 100);
+        cfg.epochs = 2;
+        cfg.reg_c = Some(1e-3);
+        cfg.step = step;
+        samplex::train::run_experiment(&cfg, &ds).unwrap()
+    };
+    let constant = mk(StepKind::Constant);
+    let ls = mk(StepKind::LineSearch);
+    assert!(
+        ls.time.compute_s > constant.time.compute_s,
+        "line search must pay extra objective evaluations ({} !> {})",
+        ls.time.compute_s,
+        constant.time.compute_s
+    );
+    // both still descend
+    assert!(constant.final_objective < constant.trace.points[0].objective);
+    assert!(ls.final_objective < ls.trace.points[0].objective);
+}
+
+#[test]
+fn rswr_and_stratified_extension_arms_run() {
+    let ds = dataset(1000, 8, 13);
+    for kind in [SamplingKind::Rswr, SamplingKind::Stratified] {
+        let mut cfg = ExperimentConfig::quick("e2e", SolverKind::Mbsgd, kind, 100);
+        cfg.epochs = 2;
+        cfg.reg_c = Some(1e-3);
+        let r = samplex::train::run_experiment(&cfg, &ds).unwrap();
+        assert!(
+            r.final_objective < r.trace.points[0].objective,
+            "{} should descend",
+            kind.label()
+        );
+    }
+}
+
+#[test]
+fn out_of_core_disk_training_matches_in_memory() {
+    // train out-of-core through DiskSource + prefetcher-style owned batches
+    // by resolving from a saved .sxb, and compare with in-memory training
+    let ds = dataset(1200, 8, 17);
+    let dir = std::env::temp_dir().join(format!("sx_e2e_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("e2e.sxb");
+    ds.save(&path).unwrap();
+
+    let mut src = samplex::storage::reader::DiskSource::open(&path).unwrap();
+    assert_eq!(src.rows(), 1200);
+
+    // read a full epoch of SS batches from disk; gradient-descend natively
+    let mut sampler = SamplingKind::Ss.build(1200, 100, 1, None).unwrap();
+    let mut w_disk = vec![0f32; 8];
+    let mut g = vec![0f32; 8];
+    let mut xbuf = Vec::new();
+    let mut ybuf = Vec::new();
+    for sel in sampler.epoch(0) {
+        src.read_selection(&sel, &mut xbuf, &mut ybuf).unwrap();
+        samplex::math::grad_into(&w_disk, &xbuf, &ybuf, 8, 1e-3, &mut g);
+        samplex::math::axpy(-0.1, &g, &mut w_disk);
+    }
+
+    // identical updates from memory
+    let mut sampler2 = SamplingKind::Ss.build(1200, 100, 1, None).unwrap();
+    let mut w_mem = vec![0f32; 8];
+    let mut asm = samplex::data::batch::BatchAssembler::new();
+    for sel in sampler2.epoch(0) {
+        let view = asm.assemble(&ds, &sel);
+        samplex::math::grad_into(&w_mem, view.x, view.y, 8, 1e-3, &mut g);
+        samplex::math::axpy(-0.1, &g, &mut w_mem);
+    }
+    assert_eq!(w_disk, w_mem, "disk-backed epoch must be bit-identical");
+    std::fs::remove_dir_all(&dir).ok();
+}

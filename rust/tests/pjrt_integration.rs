@@ -1,0 +1,235 @@
+//! Integration: the AOT JAX/Pallas artifacts executed through PJRT must
+//! agree with the native Rust math to f32 tolerance — this closes the
+//! `pallas == ref.py == rust == artifacts` correctness loop from the rust
+//! side (the python side is closed by pytest).
+//!
+//! All tests no-op with a note if `artifacts/` is absent (run
+//! `make artifacts` first); CI always builds artifacts before `cargo test`.
+
+use samplex::backend::{ComputeBackend, FusedStep, NativeBackend, PjrtBackend};
+use samplex::data::batch::BatchView;
+use samplex::rng::Rng;
+
+fn artifacts() -> Option<std::path::PathBuf> {
+    let p = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    p.join("manifest.tsv").is_file().then_some(p)
+}
+
+fn toy(rows: usize, cols: usize, seed: u64) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    let mut rng = Rng::seed_from(seed);
+    let x: Vec<f32> = (0..rows * cols).map(|_| rng.normal() as f32 * 0.7).collect();
+    let y: Vec<f32> = (0..rows)
+        .map(|r| {
+            let z: f32 = (0..cols).map(|k| x[r * cols + k]).sum();
+            if z >= 0.0 {
+                1.0
+            } else {
+                -1.0
+            }
+        })
+        .collect();
+    let w: Vec<f32> = (0..cols).map(|_| rng.normal() as f32 * 0.2).collect();
+    (x, y, w)
+}
+
+const N: usize = 28; // higgs-mini feature dim — present in the AOT grid
+
+#[test]
+fn pjrt_grad_matches_native() {
+    let Some(dir) = artifacts() else {
+        eprintln!("skipping (no artifacts)");
+        return;
+    };
+    let mut pjrt = PjrtBackend::new(&dir, N, 200).unwrap();
+    let mut native = NativeBackend::new();
+    for rows in [200usize, 137, 1] {
+        let (x, y, w) = toy(rows, N, rows as u64);
+        let view = BatchView { x: &x, y: &y, rows, cols: N };
+        let mut g_p = vec![0f32; N];
+        let mut g_n = vec![0f32; N];
+        pjrt.grad_into(&w, &view, 0.01, &mut g_p).unwrap();
+        native.grad_into(&w, &view, 0.01, &mut g_n).unwrap();
+        for k in 0..N {
+            assert!(
+                (g_p[k] - g_n[k]).abs() < 1e-4 * (1.0 + g_n[k].abs()),
+                "rows={rows} k={k}: pjrt={} native={}",
+                g_p[k],
+                g_n[k]
+            );
+        }
+    }
+}
+
+#[test]
+fn pjrt_objective_and_loss_match_native() {
+    let Some(dir) = artifacts() else {
+        return;
+    };
+    let mut pjrt = PjrtBackend::new(&dir, N, 200).unwrap();
+    let mut native = NativeBackend::new();
+    let (x, y, w) = toy(450, N, 9); // forces loss_sum chunking (450 > 200)
+    let view = BatchView { x: &x, y: &y, rows: 450, cols: N };
+    let o_p = pjrt.batch_obj(&w, &BatchView { x: &x[..200 * N], y: &y[..200], rows: 200, cols: N }, 0.05).unwrap();
+    let o_n = native.batch_obj(&w, &BatchView { x: &x[..200 * N], y: &y[..200], rows: 200, cols: N }, 0.05).unwrap();
+    assert!((o_p - o_n).abs() < 1e-4 * (1.0 + o_n.abs()), "obj: {o_p} vs {o_n}");
+    let l_p = pjrt.loss_sum(&w, &view).unwrap();
+    let l_n = native.loss_sum(&w, &view).unwrap();
+    assert!((l_p - l_n).abs() < 1e-3 * (1.0 + l_n.abs()), "loss: {l_p} vs {l_n}");
+}
+
+#[test]
+fn pjrt_full_objective_matches_native() {
+    let Some(dir) = artifacts() else {
+        return;
+    };
+    let (x, y, w) = toy(1500, N, 4);
+    let ds = samplex::data::dense::DenseDataset::new("t", N, x, y).unwrap();
+    let mut pjrt = PjrtBackend::new(&dir, N, 1000).unwrap();
+    let mut native = NativeBackend::new();
+    let a = pjrt.full_objective(&w, &ds, 1e-3).unwrap();
+    let b = native.full_objective(&w, &ds, 1e-3).unwrap();
+    assert!((a - b).abs() < 1e-4 * (1.0 + b.abs()), "{a} vs {b}");
+}
+
+#[test]
+fn fused_steps_match_composed_updates() {
+    let Some(dir) = artifacts() else {
+        return;
+    };
+    let mut pjrt = PjrtBackend::new(&dir, N, 200).unwrap();
+    let mut native = NativeBackend::new();
+    let (x, y, w0) = toy(200, N, 77);
+    let view = BatchView { x: &x, y: &y, rows: 200, cols: N };
+    let c = 0.01f32;
+    let lr = 0.05f32;
+    let tol = |a: f32, b: f32| (a - b).abs() < 2e-4 * (1.0 + b.abs());
+
+    // MBSGD
+    let mut w = w0.clone();
+    assert!(pjrt.fused(FusedStep::Mbsgd { w: &mut w, lr }, &view, c).unwrap());
+    let mut g = vec![0f32; N];
+    native.grad_into(&w0, &view, c, &mut g).unwrap();
+    for k in 0..N {
+        assert!(tol(w[k], w0[k] - lr * g[k]), "mbsgd k={k}");
+    }
+
+    // SAG
+    let mut rng = Rng::seed_from(5);
+    let yj0: Vec<f32> = (0..N).map(|_| rng.normal() as f32 * 0.1).collect();
+    let avg0: Vec<f32> = (0..N).map(|_| rng.normal() as f32 * 0.1).collect();
+    let (mut w, mut yj, mut avg) = (w0.clone(), yj0.clone(), avg0.clone());
+    assert!(pjrt
+        .fused(FusedStep::Sag { w: &mut w, yj: &mut yj, avg: &mut avg, lr, inv_m: 0.25 }, &view, c)
+        .unwrap());
+    for k in 0..N {
+        let avg_want = avg0[k] + (g[k] - yj0[k]) * 0.25;
+        assert!(tol(avg[k], avg_want), "sag avg k={k}");
+        assert!(tol(yj[k], g[k]), "sag yj k={k}");
+        assert!(tol(w[k], w0[k] - lr * avg_want), "sag w k={k}");
+    }
+
+    // SAGA
+    let (mut w, mut yj, mut avg) = (w0.clone(), yj0.clone(), avg0.clone());
+    assert!(pjrt
+        .fused(FusedStep::Saga { w: &mut w, yj: &mut yj, avg: &mut avg, lr, inv_m: 0.25 }, &view, c)
+        .unwrap());
+    for k in 0..N {
+        assert!(tol(w[k], w0[k] - lr * (g[k] - yj0[k] + avg0[k])), "saga w k={k}");
+        assert!(tol(avg[k], avg0[k] + (g[k] - yj0[k]) * 0.25), "saga avg k={k}");
+    }
+
+    // SVRG
+    let w_snap: Vec<f32> = (0..N).map(|k| w0[k] * 0.5).collect();
+    let mu: Vec<f32> = (0..N).map(|k| yj0[k] * 0.3).collect();
+    let mut w = w0.clone();
+    assert!(pjrt
+        .fused(FusedStep::Svrg { w: &mut w, w_snap: &w_snap, mu: &mu, lr }, &view, c)
+        .unwrap());
+    let mut g_snap = vec![0f32; N];
+    native.grad_into(&w_snap, &view, c, &mut g_snap).unwrap();
+    for k in 0..N {
+        assert!(tol(w[k], w0[k] - lr * (g[k] - g_snap[k] + mu[k])), "svrg k={k}");
+    }
+
+    // SAAG-II
+    let acc0 = yj0.clone();
+    let (mut w, mut acc) = (w0.clone(), acc0.clone());
+    assert!(pjrt
+        .fused(
+            FusedStep::Saag2 { w: &mut w, acc: &mut acc, lr, coeff: 0.75, inv_m: 0.25 },
+            &view,
+            c
+        )
+        .unwrap());
+    for k in 0..N {
+        let d = acc0[k] * 0.25 + 0.75 * g[k];
+        assert!(tol(w[k], w0[k] - lr * d), "saag2 w k={k}");
+        assert!(tol(acc[k], acc0[k] + g[k]), "saag2 acc k={k}");
+    }
+}
+
+#[test]
+fn ragged_batch_padding_is_exact() {
+    let Some(dir) = artifacts() else {
+        return;
+    };
+    // rows < static batch: the masked artifacts must equal native math on
+    // the un-padded rows exactly (same formula, same data)
+    let mut pjrt = PjrtBackend::new(&dir, N, 200).unwrap();
+    let mut native = NativeBackend::new();
+    let (x, y, w) = toy(73, N, 21);
+    let view = BatchView { x: &x, y: &y, rows: 73, cols: N };
+    let mut g_p = vec![0f32; N];
+    let mut g_n = vec![0f32; N];
+    pjrt.grad_into(&w, &view, 0.1, &mut g_p).unwrap();
+    native.grad_into(&w, &view, 0.1, &mut g_n).unwrap();
+    for k in 0..N {
+        assert!((g_p[k] - g_n[k]).abs() < 1e-4 * (1.0 + g_n[k].abs()), "k={k}");
+    }
+}
+
+#[test]
+fn end_to_end_train_pjrt_vs_native_same_trajectory() {
+    let Some(_dir) = artifacts() else {
+        return;
+    };
+    use samplex::config::{BackendKind, ExperimentConfig};
+    use samplex::sampling::SamplingKind;
+    use samplex::solvers::SolverKind;
+
+    let ds = samplex::data::synth::generate(
+        &samplex::data::synth::SynthSpec {
+            name: "it",
+            rows: 1000,
+            cols: N,
+            dist: samplex::data::synth::FeatureDist::Gaussian,
+            flip_prob: 0.05,
+            margin_noise: 0.3,
+            pos_fraction: 0.5,
+        },
+        11,
+    )
+    .unwrap();
+
+    let mut cfg = ExperimentConfig::quick("it", SolverKind::Saga, SamplingKind::Ss, 200);
+    cfg.epochs = 2;
+    cfg.reg_c = Some(1e-3);
+    cfg.artifacts_dir =
+        std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts").display().to_string();
+
+    cfg.backend = BackendKind::Native;
+    let r_native = samplex::train::run_experiment(&cfg, &ds).unwrap();
+    cfg.backend = BackendKind::Pjrt;
+    let r_pjrt = samplex::train::run_experiment(&cfg, &ds).unwrap();
+
+    // same selections, numerics within f32 dispatch noise
+    assert!(
+        (r_native.final_objective - r_pjrt.final_objective).abs()
+            < 1e-3 * (1.0 + r_native.final_objective.abs()),
+        "native={} pjrt={}",
+        r_native.final_objective,
+        r_pjrt.final_objective
+    );
+    // both must actually have descended
+    assert!(r_pjrt.final_objective < r_pjrt.trace.points[0].objective);
+}

@@ -1,0 +1,294 @@
+//! Property-based tests over randomized inputs (in-tree harness: the build
+//! is offline, so instead of proptest we sweep seeded random cases — same
+//! invariants, deterministic shrink-free reporting of the failing seed).
+
+use samplex::data::batch::RowSelection;
+use samplex::rng::Rng;
+use samplex::sampling::{Sampler, SamplingKind};
+use samplex::storage::blockmap::BlockMap;
+use samplex::storage::profile::DeviceProfile;
+use samplex::storage::simulator::AccessSimulator;
+
+/// Deterministic case sweep helper: calls `f(case_rng, case_idx)`.
+fn sweep(cases: usize, seed: u64, mut f: impl FnMut(&mut Rng, usize)) {
+    for i in 0..cases {
+        let mut rng = Rng::seed_from(seed.wrapping_add(i as u64 * 7919));
+        f(&mut rng, i);
+    }
+}
+
+fn random_dims(rng: &mut Rng) -> (usize, usize) {
+    let rows = 2 + rng.below(600);
+    let batch = 1 + rng.below(rows);
+    (rows, batch)
+}
+
+// ---------------------------------------------------------------------------
+// Sampler invariants (the paper's §2.1 definitions)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_partition_samplers_cover_each_row_exactly_once() {
+    // RS-without, CS, SS and STRAT partition the dataset every epoch
+    sweep(60, 0xA11CE, |rng, i| {
+        let (rows, batch) = random_dims(rng);
+        let labels: Vec<f32> = (0..rows)
+            .map(|_| if rng.uniform() < 0.4 { 1.0 } else { -1.0 })
+            .collect();
+        for kind in [SamplingKind::Rs, SamplingKind::Cs, SamplingKind::Ss, SamplingKind::Stratified]
+        {
+            let mut s = kind.build(rows, batch, i as u64, Some(&labels)).unwrap();
+            for epoch in [0usize, 3] {
+                let mut seen = vec![0u32; rows];
+                for sel in s.epoch(epoch) {
+                    for r in sel.iter() {
+                        seen[r] += 1;
+                    }
+                }
+                assert!(
+                    seen.iter().all(|&c| c == 1),
+                    "case {i}: {} rows={rows} batch={batch} epoch={epoch}",
+                    kind.label()
+                );
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_batch_sizes_match_paper_partition_rule() {
+    // all batches equal `batch` except a ragged last one (§4.2)
+    sweep(60, 0xB0B, |rng, i| {
+        let (rows, batch) = random_dims(rng);
+        for kind in [SamplingKind::Rs, SamplingKind::Rswr, SamplingKind::Cs, SamplingKind::Ss] {
+            let mut s = kind.build(rows, batch, i as u64, None).unwrap();
+            let mut sizes: Vec<usize> = s.epoch(1).iter().map(|b| b.len()).collect();
+            let m = rows.div_ceil(batch);
+            assert_eq!(sizes.len(), m, "{}", kind.label());
+            // SS visits the partition in shuffled order, so the ragged
+            // batch may appear anywhere — compare as a multiset
+            sizes.sort_unstable();
+            let mut want = vec![batch; m];
+            if rows % batch != 0 {
+                want[0] = rows % batch;
+                want[1..].fill(batch);
+            }
+            want.sort_unstable();
+            assert_eq!(sizes, want, "{} case {i}", kind.label());
+        }
+    });
+}
+
+#[test]
+fn prop_cs_ss_batches_always_contiguous_rs_scattered() {
+    sweep(40, 0xC5, |rng, i| {
+        let (rows, batch) = random_dims(rng);
+        let mut cs = SamplingKind::Cs.build(rows, batch, i as u64, None).unwrap();
+        let mut ss = SamplingKind::Ss.build(rows, batch, i as u64, None).unwrap();
+        let mut rs = SamplingKind::Rs.build(rows, batch, i as u64, None).unwrap();
+        assert!(cs.epoch(i).iter().all(|b| b.is_contiguous()));
+        assert!(ss.epoch(i).iter().all(|b| b.is_contiguous()));
+        assert!(rs.epoch(i).iter().all(|b| !b.is_contiguous()));
+    });
+}
+
+#[test]
+fn prop_ss_is_permutation_of_cs_batches() {
+    // SS = CS partition in randomized order (the paper's definition)
+    sweep(40, 0x55, |rng, i| {
+        let (rows, batch) = random_dims(rng);
+        let mut cs = SamplingKind::Cs.build(rows, batch, 1, None).unwrap();
+        let mut ss = SamplingKind::Ss.build(rows, batch, i as u64, None).unwrap();
+        let norm = |v: Vec<RowSelection>| {
+            let mut k: Vec<(usize, usize)> = v
+                .iter()
+                .map(|s| match s {
+                    RowSelection::Contiguous { start, end } => (*start, *end),
+                    _ => panic!("not contiguous"),
+                })
+                .collect();
+            k.sort_unstable();
+            k
+        };
+        assert_eq!(norm(cs.epoch(i)), norm(ss.epoch(i)), "case {i}");
+        let _ = rng;
+    });
+}
+
+#[test]
+fn prop_samplers_deterministic_in_seed() {
+    sweep(20, 0xD371, |rng, i| {
+        let (rows, batch) = random_dims(rng);
+        for kind in [SamplingKind::Rs, SamplingKind::Rswr, SamplingKind::Ss] {
+            let mut a = kind.build(rows, batch, 99, None).unwrap();
+            let mut b = kind.build(rows, batch, 99, None).unwrap();
+            assert_eq!(a.epoch(i), b.epoch(i), "{} case {i}", kind.label());
+        }
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Storage model invariants (the paper's §1/§2.1 access-cost reasoning)
+// ---------------------------------------------------------------------------
+
+fn sim_for(rows: usize, cols: usize, profile: DeviceProfile, cache_blocks: usize) -> AccessSimulator {
+    let map = BlockMap {
+        x_base: 24 + rows as u64 * 4,
+        row_bytes: cols as u64 * 4,
+        block_bytes: profile.block_bytes,
+    };
+    AccessSimulator::new(profile, map, cache_blocks)
+}
+
+#[test]
+fn prop_access_cost_ordering_cs_le_ss_le_rs() {
+    // Theorem-level invariant of the model: per epoch,
+    // access(CS) <= access(SS) (equal partitions, order irrelevant w/o cache)
+    // and both << access(RS) when rows are block-dispersed
+    sweep(30, 0x0FD1234, |rng, i| {
+        let rows = 200 + rng.below(2000);
+        let cols = 4 + rng.below(60);
+        let batch = 10 + rng.below(rows / 2);
+        let mut sims: Vec<AccessSimulator> =
+            (0..3).map(|_| sim_for(rows, cols, DeviceProfile::hdd(), 0)).collect();
+        let mut totals = Vec::new();
+        for (kind, sim) in
+            [SamplingKind::Cs, SamplingKind::Ss, SamplingKind::Rs].iter().zip(sims.iter_mut())
+        {
+            let mut s = kind.build(rows, batch, i as u64, None).unwrap();
+            for sel in s.epoch(0) {
+                sim.fetch(&sel);
+            }
+            totals.push(sim.total.time_s);
+        }
+        let (cs, ss, rs) = (totals[0], totals[1], totals[2]);
+        assert!(cs <= ss + 1e-12, "case {i}: cs={cs} ss={ss}");
+        assert!(ss < rs, "case {i}: ss={ss} rs={rs}");
+    });
+}
+
+#[test]
+fn prop_rs_transfers_at_least_as_many_bytes() {
+    // dispersed access can only touch more blocks than contiguous
+    sweep(30, 0xBEEF, |rng, i| {
+        let rows = 100 + rng.below(1500);
+        let cols = 2 + rng.below(40);
+        let batch = 5 + rng.below(rows / 2);
+        let mut sim_cs = sim_for(rows, cols, DeviceProfile::ssd(), 0);
+        let mut sim_rs = sim_for(rows, cols, DeviceProfile::ssd(), 0);
+        let mut cs = SamplingKind::Cs.build(rows, batch, i as u64, None).unwrap();
+        let mut rs = SamplingKind::Rs.build(rows, batch, i as u64, None).unwrap();
+        for sel in cs.epoch(0) {
+            sim_cs.fetch(&sel);
+        }
+        for sel in rs.epoch(0) {
+            sim_rs.fetch(&sel);
+        }
+        assert!(
+            sim_rs.total.bytes_transferred >= sim_cs.total.bytes_transferred,
+            "case {i}"
+        );
+    });
+}
+
+#[test]
+fn prop_cache_never_increases_cost() {
+    sweep(20, 0xCACE, |rng, i| {
+        let rows = 100 + rng.below(800);
+        let cols = 4 + rng.below(30);
+        let batch = 5 + rng.below(rows / 2);
+        for kind in [SamplingKind::Cs, SamplingKind::Rs] {
+            let mut cold = sim_for(rows, cols, DeviceProfile::hdd(), 0);
+            let mut warm = sim_for(rows, cols, DeviceProfile::hdd(), 1 << 16);
+            let mut s1 = kind.build(rows, batch, i as u64, None).unwrap();
+            let mut s2 = kind.build(rows, batch, i as u64, None).unwrap();
+            for e in 0..3 {
+                for sel in s1.epoch(e) {
+                    cold.fetch(&sel);
+                }
+                for sel in s2.epoch(e) {
+                    warm.fetch(&sel);
+                }
+            }
+            assert!(
+                warm.total.time_s <= cold.total.time_s + 1e-12,
+                "{} case {i}: warm={} cold={}",
+                kind.label(),
+                warm.total.time_s,
+                cold.total.time_s
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_seeks_bounded_by_rows_plus_one() {
+    // a batch of b rows can never need more than b positioning events
+    // (one per row) plus block-split slop
+    sweep(25, 0x5EEC, |rng, i| {
+        let rows = 50 + rng.below(500);
+        let cols = 2 + rng.below(50);
+        let batch = 1 + rng.below(rows);
+        let mut sim = sim_for(rows, cols, DeviceProfile::hdd(), 0);
+        let mut rs = SamplingKind::Rs.build(rows, batch, i as u64, None).unwrap();
+        for sel in rs.epoch(0) {
+            let cost = sim.fetch(&sel);
+            assert!(
+                cost.seeks <= sel.len() as u64 + 1,
+                "case {i}: {} seeks for {} rows",
+                cost.seeks,
+                sel.len()
+            );
+        }
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Math invariants
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_gradient_descent_direction_decreases_objective() {
+    // for small steps, f(w - t g) < f(w): grad_into really is a gradient
+    sweep(30, 0x6E4D, |rng, i| {
+        let rows = 10 + rng.below(100);
+        let cols = 1 + rng.below(20);
+        let x: Vec<f32> = (0..rows * cols).map(|_| rng.normal() as f32).collect();
+        let y: Vec<f32> = (0..rows)
+            .map(|_| if rng.uniform() < 0.5 { -1.0 } else { 1.0 })
+            .collect();
+        let w: Vec<f32> = (0..cols).map(|_| rng.normal() as f32 * 0.5).collect();
+        let c = 0.01f32;
+        let mut g = vec![0f32; cols];
+        samplex::math::grad_into(&w, &x, &y, cols, c, &mut g);
+        let gnorm = samplex::math::nrm2_sq(&g);
+        if gnorm < 1e-10 {
+            return; // stationary — nothing to check
+        }
+        let f0 = samplex::math::objective_batch(&w, &x, &y, cols, c);
+        let t = 1e-3f32 / (1.0 + gnorm as f32);
+        let wt: Vec<f32> = w.iter().zip(&g).map(|(wi, gi)| wi - t * gi).collect();
+        let ft = samplex::math::objective_batch(&wt, &x, &y, cols, c);
+        assert!(ft < f0, "case {i}: {ft} !< {f0}");
+    });
+}
+
+#[test]
+fn prop_objective_strongly_convex_lower_bound() {
+    // f(w) >= (C/2)||w - w_reg_opt||^2 sanity: objective with larger C at
+    // the same w is larger
+    sweep(20, 0xCC, |rng, i| {
+        let rows = 10 + rng.below(50);
+        let cols = 1 + rng.below(10);
+        let x: Vec<f32> = (0..rows * cols).map(|_| rng.normal() as f32).collect();
+        let y: Vec<f32> = (0..rows)
+            .map(|_| if rng.uniform() < 0.5 { -1.0 } else { 1.0 })
+            .collect();
+        let w: Vec<f32> = (0..cols).map(|_| rng.normal() as f32).collect();
+        let f1 = samplex::math::objective_batch(&w, &x, &y, cols, 0.01);
+        let f2 = samplex::math::objective_batch(&w, &x, &y, cols, 1.0);
+        if samplex::math::nrm2_sq(&w) > 1e-9 {
+            assert!(f2 > f1, "case {i}");
+        }
+    });
+}
