@@ -17,7 +17,7 @@ use samplex::bench_harness::timing::{bench, header};
 use samplex::data::batch::{BatchAssembler, BatchView, RowSelection};
 use samplex::data::dense::DenseDataset;
 use samplex::rng::Rng;
-use samplex::sampling::SamplingKind;
+use samplex::sampling::{Sampler, SamplingKind};
 use samplex::storage::cache::LruCache;
 use samplex::storage::profile::DeviceProfile;
 use samplex::storage::simulator::AccessSimulator;
@@ -38,7 +38,7 @@ fn main() {
     // --- samplers ---------------------------------------------------------
     let (rows, batch) = (120_000, 500);
     for kind in [SamplingKind::Rs, SamplingKind::Cs, SamplingKind::Ss] {
-        let mut s = kind.build(rows, batch, 7, None).unwrap();
+        let mut s: Box<dyn Sampler> = kind.build(rows, batch, 7, None).unwrap();
         let mut e = 0usize;
         results.push(bench(
             &format!("sampler/{}/epoch 120k rows b=500", kind.label()),
@@ -132,19 +132,60 @@ fn main() {
 
     // --- prefetch pipeline ------------------------------------------------------
     let big = std::sync::Arc::new(dataset(50_000, 28));
-    results.push(bench("pipeline/prefetch epoch 100 batches", 1, 5, 1, || {
+    results.push(bench("pipeline/prefetch epoch 100 batches (spawn+run)", 1, 5, 1, || {
         let sels: Vec<RowSelection> = (0..100)
             .map(|j| RowSelection::Contiguous { start: j * 500, end: (j + 1) * 500 })
             .collect();
         let sim = AccessSimulator::for_dataset(DeviceProfile::hdd(), &big, 0);
-        let mut pf =
-            samplex::pipeline::prefetch::Prefetcher::spawn(big.clone(), sels, sim, 2);
+        let mut pf = samplex::pipeline::prefetch::Prefetcher::spawn(big.clone(), sim, 2);
+        pf.start_epoch(sels);
         while let Some(b) = pf.next_batch() {
-            std::hint::black_box(&b.x);
+            std::hint::black_box(b.view(28).x);
         }
-        pf.join();
+        pf.finish();
     }));
     println!("{}", results.last().unwrap().row());
+
+    // persistent reader: epoch turnaround without a thread spawn
+    {
+        let sim = AccessSimulator::for_dataset(DeviceProfile::hdd(), &big, 0);
+        let mut pf = samplex::pipeline::prefetch::Prefetcher::spawn(big.clone(), sim, 2);
+        results.push(bench("pipeline/prefetch epoch 100 batches (persistent)", 1, 5, 1, || {
+            let sels: Vec<RowSelection> = (0..100)
+                .map(|j| RowSelection::Contiguous { start: j * 500, end: (j + 1) * 500 })
+                .collect();
+            pf.start_epoch(sels);
+            while let Some(b) = pf.next_batch() {
+                std::hint::black_box(b.view(28).x);
+            }
+        }));
+        println!("{}", results.last().unwrap().row());
+        pf.finish();
+    }
+
+    // --- copy traffic by sampling technique -------------------------------------
+    // The zero-copy acceptance check: contiguous CS/SS epochs must report
+    // bytes_copied == 0 (range views into the dataset), while RS pays a real
+    // gather for every batch.
+    println!("\ncopy traffic per epoch (50k rows x 28 cols, batch 500):");
+    for kind in [SamplingKind::Rs, SamplingKind::Cs, SamplingKind::Ss] {
+        let mut s: Box<dyn Sampler> = kind.build(50_000, 500, 7, None).unwrap();
+        let sim = AccessSimulator::for_dataset(DeviceProfile::hdd(), &big, 0);
+        let mut pf = samplex::pipeline::prefetch::Prefetcher::spawn(big.clone(), sim, 2);
+        pf.start_epoch(s.epoch(0));
+        while let Some(b) = pf.next_batch() {
+            std::hint::black_box(b.view(28).rows);
+        }
+        let es = pf.last_epoch_stats();
+        pf.finish();
+        println!(
+            "  {:<5} bytes_copied={:>12}  bytes_borrowed={:>12}  stalls={}",
+            kind.label(),
+            es.bytes_copied,
+            es.bytes_borrowed,
+            es.stalls
+        );
+    }
 
     println!("\n(perf targets + before/after log: EXPERIMENTS.md §Perf)");
 }

@@ -1,6 +1,11 @@
 //! PJRT compute backend: executes the AOT JAX/Pallas artifacts on the
 //! solver hot path.
 //!
+//! Compiled only under the `pjrt` cargo feature (which requires the `xla`
+//! crate); the default offline build gets a stub whose constructor returns a
+//! descriptive error, so every call site can keep a single code path and the
+//! native backend remains the portable default.
+//!
 //! Shapes are static (one module per (batch, features)); ragged batches are
 //! padded to the static batch with a zero mask — numerically exact, see
 //! `python/compile/model.py`. Scalars travel as `f32[1]` buffers matching
@@ -15,314 +20,399 @@
 //! * outputs come back through one `to_literal_sync` + `copy_raw_to` into
 //!   the solver's own state vectors.
 
-use crate::backend::{ComputeBackend, FusedStep};
-use crate::data::batch::BatchView;
-use crate::error::{Error, Result};
-use crate::runtime::Runtime;
+#[cfg(feature = "pjrt")]
+mod real {
+    use crate::backend::{ComputeBackend, FusedStep};
+    use crate::data::batch::BatchView;
+    use crate::error::{Error, Result};
+    use crate::runtime::Runtime;
 
-/// Backend executing `artifacts/*.hlo.txt` through PJRT.
-pub struct PjrtBackend {
-    rt: Runtime,
-    features: usize,
-    static_batch: usize,
-    /// Scratch for padded features / labels.
-    x_pad: Vec<f32>,
-    y_pad: Vec<f32>,
-    mask_scratch: Vec<f32>,
-    /// Executions issued (for reports).
-    pub executions: u64,
-}
-
-impl std::fmt::Debug for PjrtBackend {
-    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
-        f.debug_struct("PjrtBackend")
-            .field("features", &self.features)
-            .field("static_batch", &self.static_batch)
-            .field("executions", &self.executions)
-            .finish()
-    }
-}
-
-impl PjrtBackend {
-    /// Build over `artifacts_dir` for feature dim `features`, sized for
-    /// mini-batches up to `batch_hint` rows (static batch = smallest
-    /// artifact shape ≥ hint). Compiles the solver entrypoints eagerly.
-    pub fn new(
-        artifacts_dir: impl AsRef<std::path::Path>,
+    /// Backend executing `artifacts/*.hlo.txt` through PJRT.
+    pub struct PjrtBackend {
+        rt: Runtime,
         features: usize,
-        batch_hint: usize,
-    ) -> Result<Self> {
-        let mut rt = Runtime::load(artifacts_dir)?;
-        let static_batch = rt.manifest().fit_batch("grad", features, batch_hint)?;
-        rt.warmup(
-            &["grad", "obj", "loss_sum", "mbsgd", "sag", "saga", "svrg", "saag2"],
-            static_batch,
-            features,
-        )?;
-        Ok(PjrtBackend {
-            rt,
-            features,
-            static_batch,
-            x_pad: vec![0f32; static_batch * features],
-            y_pad: vec![1f32; static_batch],
-            mask_scratch: vec![0f32; static_batch],
-            executions: 0,
-        })
+        static_batch: usize,
+        /// Scratch for padded features / labels.
+        x_pad: Vec<f32>,
+        y_pad: Vec<f32>,
+        mask_scratch: Vec<f32>,
+        /// Executions issued (for reports).
+        pub executions: u64,
     }
 
-    /// The static batch dimension every module was lowered with.
-    pub fn static_batch(&self) -> usize {
-        self.static_batch
-    }
-
-    /// Feature dimension.
-    pub fn features(&self) -> usize {
-        self.features
-    }
-
-    /// Borrow the underlying runtime (tests/diagnostics).
-    pub fn runtime(&self) -> &Runtime {
-        &self.rt
-    }
-
-    /// Upload a host slice as a device buffer.
-    fn buf(&self, xs: &[f32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
-        self.rt
-            .client()
-            .buffer_from_host_buffer(xs, dims, None)
-            .map_err(|e| Error::Xla(e.to_string()))
-    }
-
-    /// Device buffer for a scalar-as-`f32[1]`.
-    fn scalar(&mut self, v: f32) -> Result<xla::PjRtBuffer> {
-        self.buf(&[v], &[1])
-    }
-
-    /// Device mask buffer for `rows` real rows (scratch reused host-side).
-    fn mask(&mut self, rows: usize) -> Result<xla::PjRtBuffer> {
-        for (i, m) in self.mask_scratch.iter_mut().enumerate() {
-            *m = if i < rows { 1.0 } else { 0.0 };
+    impl std::fmt::Debug for PjrtBackend {
+        fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+            f.debug_struct("PjrtBackend")
+                .field("features", &self.features)
+                .field("static_batch", &self.static_batch)
+                .field("executions", &self.executions)
+                .finish()
         }
-        self.rt
-            .client()
-            .buffer_from_host_buffer(&self.mask_scratch, &[self.static_batch], None)
-            .map_err(|e| Error::Xla(e.to_string()))
     }
 
-    /// Upload the (x, y) pair, padding if ragged.
-    fn data_buffers(
-        &mut self,
-        batch: &BatchView<'_>,
-    ) -> Result<(xla::PjRtBuffer, xla::PjRtBuffer)> {
-        if batch.cols != self.features {
-            return Err(Error::ShapeMismatch {
-                expected: self.features.to_string(),
-                got: batch.cols.to_string(),
-                context: "PjrtBackend features".into(),
-            });
+    impl PjrtBackend {
+        /// Build over `artifacts_dir` for feature dim `features`, sized for
+        /// mini-batches up to `batch_hint` rows (static batch = smallest
+        /// artifact shape ≥ hint). Compiles the solver entrypoints eagerly.
+        pub fn new(
+            artifacts_dir: impl AsRef<std::path::Path>,
+            features: usize,
+            batch_hint: usize,
+        ) -> Result<Self> {
+            let mut rt = Runtime::load(artifacts_dir)?;
+            let static_batch = rt.manifest().fit_batch("grad", features, batch_hint)?;
+            rt.warmup(
+                &["grad", "obj", "loss_sum", "mbsgd", "sag", "saga", "svrg", "saag2"],
+                static_batch,
+                features,
+            )?;
+            Ok(PjrtBackend {
+                rt,
+                features,
+                static_batch,
+                x_pad: vec![0f32; static_batch * features],
+                y_pad: vec![1f32; static_batch],
+                mask_scratch: vec![0f32; static_batch],
+                executions: 0,
+            })
         }
-        if batch.rows > self.static_batch {
-            return Err(Error::ShapeMismatch {
-                expected: format!("<= {}", self.static_batch),
-                got: batch.rows.to_string(),
-                context: "PjrtBackend batch rows".into(),
-            });
+
+        /// The static batch dimension every module was lowered with.
+        pub fn static_batch(&self) -> usize {
+            self.static_batch
         }
-        let b = self.static_batch;
-        let n = self.features;
-        if batch.rows == b {
-            Ok((self.buf(batch.x, &[b, n])?, self.buf(batch.y, &[b])?))
-        } else {
-            self.x_pad[..batch.rows * n].copy_from_slice(batch.x);
-            self.x_pad[batch.rows * n..].fill(0.0);
-            self.y_pad[..batch.rows].copy_from_slice(batch.y);
-            self.y_pad[batch.rows..].fill(1.0);
-            let x = self
-                .rt
+
+        /// Feature dimension.
+        pub fn features(&self) -> usize {
+            self.features
+        }
+
+        /// Borrow the underlying runtime (tests/diagnostics).
+        pub fn runtime(&self) -> &Runtime {
+            &self.rt
+        }
+
+        /// Upload a host slice as a device buffer.
+        fn buf(&self, xs: &[f32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
+            self.rt
                 .client()
-                .buffer_from_host_buffer(&self.x_pad, &[b, n], None)
-                .map_err(|e| Error::Xla(e.to_string()))?;
-            let y = self
-                .rt
+                .buffer_from_host_buffer(xs, dims, None)
+                .map_err(|e| Error::Xla(e.to_string()))
+        }
+
+        /// Device buffer for a scalar-as-`f32[1]`.
+        fn scalar(&mut self, v: f32) -> Result<xla::PjRtBuffer> {
+            self.buf(&[v], &[1])
+        }
+
+        /// Device mask buffer for `rows` real rows (scratch reused host-side).
+        fn mask(&mut self, rows: usize) -> Result<xla::PjRtBuffer> {
+            for (i, m) in self.mask_scratch.iter_mut().enumerate() {
+                *m = if i < rows { 1.0 } else { 0.0 };
+            }
+            self.rt
                 .client()
-                .buffer_from_host_buffer(&self.y_pad, &[b], None)
-                .map_err(|e| Error::Xla(e.to_string()))?;
-            Ok((x, y))
+                .buffer_from_host_buffer(&self.mask_scratch, &[self.static_batch], None)
+                .map_err(|e| Error::Xla(e.to_string()))
+        }
+
+        /// Upload the (x, y) pair, padding if ragged.
+        fn data_buffers(
+            &mut self,
+            batch: &BatchView<'_>,
+        ) -> Result<(xla::PjRtBuffer, xla::PjRtBuffer)> {
+            if batch.cols != self.features {
+                return Err(Error::ShapeMismatch {
+                    expected: self.features.to_string(),
+                    got: batch.cols.to_string(),
+                    context: "PjrtBackend features".into(),
+                });
+            }
+            if batch.rows > self.static_batch {
+                return Err(Error::ShapeMismatch {
+                    expected: format!("<= {}", self.static_batch),
+                    got: batch.rows.to_string(),
+                    context: "PjrtBackend batch rows".into(),
+                });
+            }
+            let b = self.static_batch;
+            let n = self.features;
+            if batch.rows == b {
+                Ok((self.buf(batch.x, &[b, n])?, self.buf(batch.y, &[b])?))
+            } else {
+                self.x_pad[..batch.rows * n].copy_from_slice(batch.x);
+                self.x_pad[batch.rows * n..].fill(0.0);
+                self.y_pad[..batch.rows].copy_from_slice(batch.y);
+                self.y_pad[batch.rows..].fill(1.0);
+                let x = self
+                    .rt
+                    .client()
+                    .buffer_from_host_buffer(&self.x_pad, &[b, n], None)
+                    .map_err(|e| Error::Xla(e.to_string()))?;
+                let y = self
+                    .rt
+                    .client()
+                    .buffer_from_host_buffer(&self.y_pad, &[b], None)
+                    .map_err(|e| Error::Xla(e.to_string()))?;
+                Ok((x, y))
+            }
+        }
+
+        /// Execute `entrypoint` over device buffers; returns the output tuple.
+        fn run(
+            &mut self,
+            entrypoint: &str,
+            params: &[xla::PjRtBuffer],
+        ) -> Result<Vec<xla::Literal>> {
+            let exe = self.rt.executable(entrypoint, self.static_batch, self.features)?;
+            let bufs = exe.execute_b::<&xla::PjRtBuffer>(
+                &params.iter().collect::<Vec<_>>(),
+            )?;
+            self.executions += 1;
+            let lit = bufs[0][0].to_literal_sync()?;
+            Ok(lit.to_tuple()?)
+        }
+
+        fn copy_out(lit: &xla::Literal, out: &mut [f32]) -> Result<()> {
+            lit.copy_raw_to(out).map_err(|e| Error::Xla(e.to_string()))
         }
     }
 
-    /// Execute `entrypoint` over device buffers; returns the output tuple.
-    fn run(
-        &mut self,
-        entrypoint: &str,
-        params: &[xla::PjRtBuffer],
-    ) -> Result<Vec<xla::Literal>> {
-        let exe = self.rt.executable(entrypoint, self.static_batch, self.features)?;
-        let bufs = exe.execute_b::<&xla::PjRtBuffer>(
-            &params.iter().collect::<Vec<_>>(),
-        )?;
-        self.executions += 1;
-        let lit = bufs[0][0].to_literal_sync()?;
-        Ok(lit.to_tuple()?)
-    }
+    impl ComputeBackend for PjrtBackend {
+        fn name(&self) -> &'static str {
+            "pjrt"
+        }
 
-    fn copy_out(lit: &xla::Literal, out: &mut [f32]) -> Result<()> {
-        lit.copy_raw_to(out).map_err(|e| Error::Xla(e.to_string()))
+        fn grad_into(
+            &mut self,
+            w: &[f32],
+            batch: &BatchView<'_>,
+            c: f32,
+            out: &mut [f32],
+        ) -> Result<()> {
+            let inv = 1.0 / batch.rows as f32;
+            let (x, y) = self.data_buffers(batch)?;
+            let params = [
+                self.buf(w, &[self.features])?,
+                x,
+                y,
+                self.mask(batch.rows)?,
+                self.scalar(inv)?,
+                self.scalar(c)?,
+            ];
+            let outs = self.run("grad", &params)?;
+            Self::copy_out(&outs[0], out)
+        }
+
+        fn batch_obj(&mut self, w: &[f32], batch: &BatchView<'_>, c: f32) -> Result<f64> {
+            let inv = 1.0 / batch.rows as f32;
+            let (x, y) = self.data_buffers(batch)?;
+            let params = [
+                self.buf(w, &[self.features])?,
+                x,
+                y,
+                self.mask(batch.rows)?,
+                self.scalar(inv)?,
+                self.scalar(c)?,
+            ];
+            let outs = self.run("obj", &params)?;
+            Ok(outs[0].get_first_element::<f32>()? as f64)
+        }
+
+        fn loss_sum(&mut self, w: &[f32], batch: &BatchView<'_>) -> Result<f64> {
+            // arbitrary row counts: chunk through the static batch
+            let b = self.static_batch;
+            let n = self.features;
+            let mut total = 0f64;
+            let mut start = 0;
+            while start < batch.rows {
+                let end = (start + b).min(batch.rows);
+                let view = BatchView {
+                    x: &batch.x[start * n..end * n],
+                    y: &batch.y[start..end],
+                    rows: end - start,
+                    cols: n,
+                };
+                let (x, y) = self.data_buffers(&view)?;
+                let params = [self.buf(w, &[n])?, x, y, self.mask(view.rows)?];
+                let outs = self.run("loss_sum", &params)?;
+                total += outs[0].get_first_element::<f32>()? as f64;
+                start = end;
+            }
+            Ok(total)
+        }
+
+        fn fused(&mut self, step: FusedStep<'_>, batch: &BatchView<'_>, c: f32) -> Result<bool> {
+            let n = self.features;
+            let inv = 1.0 / batch.rows as f32;
+            let (x, y) = self.data_buffers(batch)?;
+            let mask = self.mask(batch.rows)?;
+            match step {
+                FusedStep::Mbsgd { w, lr } => {
+                    let params = [
+                        self.buf(w, &[n])?,
+                        x,
+                        y,
+                        mask,
+                        self.scalar(inv)?,
+                        self.scalar(c)?,
+                        self.scalar(lr)?,
+                    ];
+                    let outs = self.run("mbsgd", &params)?;
+                    Self::copy_out(&outs[0], w)?;
+                }
+                FusedStep::Sag { w, yj, avg, lr, inv_m } => {
+                    let params = [
+                        self.buf(w, &[n])?,
+                        x,
+                        y,
+                        mask,
+                        self.scalar(inv)?,
+                        self.scalar(c)?,
+                        self.scalar(lr)?,
+                        self.buf(yj, &[n])?,
+                        self.buf(avg, &[n])?,
+                        self.scalar(inv_m)?,
+                    ];
+                    let outs = self.run("sag", &params)?;
+                    Self::copy_out(&outs[0], w)?;
+                    Self::copy_out(&outs[1], yj)?;
+                    Self::copy_out(&outs[2], avg)?;
+                }
+                FusedStep::Saga { w, yj, avg, lr, inv_m } => {
+                    let params = [
+                        self.buf(w, &[n])?,
+                        x,
+                        y,
+                        mask,
+                        self.scalar(inv)?,
+                        self.scalar(c)?,
+                        self.scalar(lr)?,
+                        self.buf(yj, &[n])?,
+                        self.buf(avg, &[n])?,
+                        self.scalar(inv_m)?,
+                    ];
+                    let outs = self.run("saga", &params)?;
+                    Self::copy_out(&outs[0], w)?;
+                    Self::copy_out(&outs[1], yj)?;
+                    Self::copy_out(&outs[2], avg)?;
+                }
+                FusedStep::Svrg { w, w_snap, mu, lr } => {
+                    let params = [
+                        self.buf(w, &[n])?,
+                        self.buf(w_snap, &[n])?,
+                        self.buf(mu, &[n])?,
+                        x,
+                        y,
+                        mask,
+                        self.scalar(inv)?,
+                        self.scalar(c)?,
+                        self.scalar(lr)?,
+                    ];
+                    let outs = self.run("svrg", &params)?;
+                    Self::copy_out(&outs[0], w)?;
+                }
+                FusedStep::Saag2 { w, acc, lr, coeff, inv_m } => {
+                    let params = [
+                        self.buf(w, &[n])?,
+                        x,
+                        y,
+                        mask,
+                        self.scalar(inv)?,
+                        self.scalar(c)?,
+                        self.scalar(lr)?,
+                        self.buf(acc, &[n])?,
+                        self.scalar(coeff)?,
+                        self.scalar(inv_m)?,
+                    ];
+                    let outs = self.run("saag2", &params)?;
+                    Self::copy_out(&outs[0], w)?;
+                    Self::copy_out(&outs[1], acc)?;
+                }
+            }
+            Ok(true)
+        }
     }
 }
 
-impl ComputeBackend for PjrtBackend {
-    fn name(&self) -> &'static str {
-        "pjrt"
+#[cfg(feature = "pjrt")]
+pub use real::PjrtBackend;
+
+#[cfg(not(feature = "pjrt"))]
+mod stub {
+    use crate::backend::ComputeBackend;
+    use crate::data::batch::BatchView;
+    use crate::error::{Error, Result};
+
+    const UNAVAILABLE: &str =
+        "samplex was built without the 'pjrt' feature; to enable it, vendor \
+         the `xla` crate, add it as a dependency of the `pjrt` feature in \
+         rust/Cargo.toml, and rebuild with `--features pjrt` — or use the \
+         native backend";
+
+    /// Stub compiled when the `pjrt` feature is off. The constructor always
+    /// errors, so it can never reach the trait methods in practice.
+    #[derive(Debug)]
+    pub struct PjrtBackend {
+        _private: (),
     }
 
-    fn grad_into(
-        &mut self,
-        w: &[f32],
-        batch: &BatchView<'_>,
-        c: f32,
-        out: &mut [f32],
-    ) -> Result<()> {
-        let inv = 1.0 / batch.rows as f32;
-        let (x, y) = self.data_buffers(batch)?;
-        let params = [
-            self.buf(w, &[self.features])?,
-            x,
-            y,
-            self.mask(batch.rows)?,
-            self.scalar(inv)?,
-            self.scalar(c)?,
-        ];
-        let outs = self.run("grad", &params)?;
-        Self::copy_out(&outs[0], out)
-    }
-
-    fn batch_obj(&mut self, w: &[f32], batch: &BatchView<'_>, c: f32) -> Result<f64> {
-        let inv = 1.0 / batch.rows as f32;
-        let (x, y) = self.data_buffers(batch)?;
-        let params = [
-            self.buf(w, &[self.features])?,
-            x,
-            y,
-            self.mask(batch.rows)?,
-            self.scalar(inv)?,
-            self.scalar(c)?,
-        ];
-        let outs = self.run("obj", &params)?;
-        Ok(outs[0].get_first_element::<f32>()? as f64)
-    }
-
-    fn loss_sum(&mut self, w: &[f32], batch: &BatchView<'_>) -> Result<f64> {
-        // arbitrary row counts: chunk through the static batch
-        let b = self.static_batch;
-        let n = self.features;
-        let mut total = 0f64;
-        let mut start = 0;
-        while start < batch.rows {
-            let end = (start + b).min(batch.rows);
-            let view = BatchView {
-                x: &batch.x[start * n..end * n],
-                y: &batch.y[start..end],
-                rows: end - start,
-                cols: n,
-            };
-            let (x, y) = self.data_buffers(&view)?;
-            let params = [self.buf(w, &[n])?, x, y, self.mask(view.rows)?];
-            let outs = self.run("loss_sum", &params)?;
-            total += outs[0].get_first_element::<f32>()? as f64;
-            start = end;
+    impl PjrtBackend {
+        /// Always fails: the PJRT runtime is not compiled in.
+        pub fn new(
+            _artifacts_dir: impl AsRef<std::path::Path>,
+            _features: usize,
+            _batch_hint: usize,
+        ) -> Result<Self> {
+            Err(Error::Xla(UNAVAILABLE.into()))
         }
-        Ok(total)
+
+        /// Static batch dim (stub: 0).
+        pub fn static_batch(&self) -> usize {
+            0
+        }
+
+        /// Feature dim (stub: 0).
+        pub fn features(&self) -> usize {
+            0
+        }
     }
 
-    fn fused(&mut self, step: FusedStep<'_>, batch: &BatchView<'_>, c: f32) -> Result<bool> {
-        let n = self.features;
-        let inv = 1.0 / batch.rows as f32;
-        let (x, y) = self.data_buffers(batch)?;
-        let mask = self.mask(batch.rows)?;
-        match step {
-            FusedStep::Mbsgd { w, lr } => {
-                let params = [
-                    self.buf(w, &[n])?,
-                    x,
-                    y,
-                    mask,
-                    self.scalar(inv)?,
-                    self.scalar(c)?,
-                    self.scalar(lr)?,
-                ];
-                let outs = self.run("mbsgd", &params)?;
-                Self::copy_out(&outs[0], w)?;
-            }
-            FusedStep::Sag { w, yj, avg, lr, inv_m } => {
-                let params = [
-                    self.buf(w, &[n])?,
-                    x,
-                    y,
-                    mask,
-                    self.scalar(inv)?,
-                    self.scalar(c)?,
-                    self.scalar(lr)?,
-                    self.buf(yj, &[n])?,
-                    self.buf(avg, &[n])?,
-                    self.scalar(inv_m)?,
-                ];
-                let outs = self.run("sag", &params)?;
-                Self::copy_out(&outs[0], w)?;
-                Self::copy_out(&outs[1], yj)?;
-                Self::copy_out(&outs[2], avg)?;
-            }
-            FusedStep::Saga { w, yj, avg, lr, inv_m } => {
-                let params = [
-                    self.buf(w, &[n])?,
-                    x,
-                    y,
-                    mask,
-                    self.scalar(inv)?,
-                    self.scalar(c)?,
-                    self.scalar(lr)?,
-                    self.buf(yj, &[n])?,
-                    self.buf(avg, &[n])?,
-                    self.scalar(inv_m)?,
-                ];
-                let outs = self.run("saga", &params)?;
-                Self::copy_out(&outs[0], w)?;
-                Self::copy_out(&outs[1], yj)?;
-                Self::copy_out(&outs[2], avg)?;
-            }
-            FusedStep::Svrg { w, w_snap, mu, lr } => {
-                let params = [
-                    self.buf(w, &[n])?,
-                    self.buf(w_snap, &[n])?,
-                    self.buf(mu, &[n])?,
-                    x,
-                    y,
-                    mask,
-                    self.scalar(inv)?,
-                    self.scalar(c)?,
-                    self.scalar(lr)?,
-                ];
-                let outs = self.run("svrg", &params)?;
-                Self::copy_out(&outs[0], w)?;
-            }
-            FusedStep::Saag2 { w, acc, lr, coeff, inv_m } => {
-                let params = [
-                    self.buf(w, &[n])?,
-                    x,
-                    y,
-                    mask,
-                    self.scalar(inv)?,
-                    self.scalar(c)?,
-                    self.scalar(lr)?,
-                    self.buf(acc, &[n])?,
-                    self.scalar(coeff)?,
-                    self.scalar(inv_m)?,
-                ];
-                let outs = self.run("saag2", &params)?;
-                Self::copy_out(&outs[0], w)?;
-                Self::copy_out(&outs[1], acc)?;
-            }
+    impl ComputeBackend for PjrtBackend {
+        fn name(&self) -> &'static str {
+            "pjrt-stub"
         }
-        Ok(true)
+
+        fn grad_into(
+            &mut self,
+            _w: &[f32],
+            _batch: &BatchView<'_>,
+            _c: f32,
+            _out: &mut [f32],
+        ) -> Result<()> {
+            Err(Error::Xla(UNAVAILABLE.into()))
+        }
+
+        fn batch_obj(&mut self, _w: &[f32], _batch: &BatchView<'_>, _c: f32) -> Result<f64> {
+            Err(Error::Xla(UNAVAILABLE.into()))
+        }
+
+        fn loss_sum(&mut self, _w: &[f32], _batch: &BatchView<'_>) -> Result<f64> {
+            Err(Error::Xla(UNAVAILABLE.into()))
+        }
+    }
+
+    #[cfg(test)]
+    mod tests {
+        use super::*;
+
+        #[test]
+        fn stub_constructor_reports_missing_feature() {
+            let err = PjrtBackend::new("artifacts", 8, 100).unwrap_err();
+            assert!(err.to_string().contains("pjrt"), "{err}");
+        }
     }
 }
+
+#[cfg(not(feature = "pjrt"))]
+pub use stub::PjrtBackend;

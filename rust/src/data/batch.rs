@@ -58,6 +58,35 @@ pub struct BatchView<'a> {
     pub cols: usize,
 }
 
+/// Gather `sel` from `ds` into fresh owned buffers, regardless of whether
+/// the selection is contiguous.
+///
+/// This is the *copying* path: the prefetch reader uses it for scattered
+/// (RS) selections, and the property tests use it to force an owned copy of
+/// a contiguous selection so the zero-copy `Borrowed` payload can be checked
+/// bit-for-bit against a materialized gather.
+pub fn gather_owned(ds: &DenseDataset, sel: &RowSelection) -> (Vec<f32>, Vec<f32>) {
+    let cols = ds.cols();
+    let rows = sel.len();
+    let mut x = Vec::with_capacity(rows * cols);
+    let mut y = Vec::with_capacity(rows);
+    match sel {
+        RowSelection::Contiguous { start, end } => {
+            let (xs, ys) = ds.rows_slice(*start, *end);
+            x.extend_from_slice(xs);
+            y.extend_from_slice(ys);
+        }
+        RowSelection::Scattered(idx) => {
+            for &r in idx {
+                let r = r as usize;
+                x.extend_from_slice(ds.row(r));
+                y.push(ds.y()[r]);
+            }
+        }
+    }
+    (x, y)
+}
+
 /// Reusable gather buffer: assembles a [`BatchView`] from a [`RowSelection`],
 /// borrowing the dataset directly when the selection is contiguous.
 #[derive(Debug, Default)]
@@ -150,6 +179,19 @@ mod tests {
         assert_eq!(v.x, &[18.0, 19.0, 0.0, 1.0, 8.0, 9.0]);
         assert_eq!(v.y, &[-1.0, 1.0, 1.0]);
         assert_eq!(asm.gathered_rows, 3);
+    }
+
+    #[test]
+    fn gather_owned_copies_contiguous_and_scattered_identically() {
+        let d = ds();
+        let (cx, cy) = gather_owned(&d, &RowSelection::Contiguous { start: 3, end: 6 });
+        let (want_x, want_y) = d.rows_slice(3, 6);
+        assert_eq!(cx, want_x);
+        assert_eq!(cy, want_y);
+        assert_ne!(cx.as_ptr(), d.row(3).as_ptr(), "gather_owned must copy");
+        let (sx, sy) = gather_owned(&d, &RowSelection::Scattered(vec![9, 0, 4]));
+        assert_eq!(sx, &[18.0, 19.0, 0.0, 1.0, 8.0, 9.0]);
+        assert_eq!(sy, &[-1.0, 1.0, 1.0]);
     }
 
     #[test]

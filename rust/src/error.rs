@@ -1,30 +1,30 @@
 //! Crate-wide error type.
+//!
+//! Hand-written `Display`/`Error` impls (no `thiserror`): the crate builds
+//! fully offline with zero external dependencies.
+
+use std::fmt;
 
 /// Unified error for all samplex subsystems.
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum Error {
     /// I/O failures (dataset files, artifact files, reports).
-    #[error("io error: {0}")]
-    Io(#[from] std::io::Error),
+    Io(std::io::Error),
 
-    /// XLA / PJRT runtime failures.
-    #[error("xla error: {0}")]
+    /// XLA / PJRT runtime failures (or the stub telling you the `pjrt`
+    /// feature is disabled).
     Xla(String),
 
     /// Malformed dataset file (LIBSVM text or .sxb binary).
-    #[error("dataset parse error at line {line}: {msg}")]
     DatasetParse { line: usize, msg: String },
 
     /// Configuration validation failure.
-    #[error("config error: {0}")]
     Config(String),
 
     /// Manifest / artifact bookkeeping failure.
-    #[error("artifact error: {0}")]
     Artifact(String),
 
     /// Shape mismatch between coordinator and compiled executable.
-    #[error("shape mismatch: expected {expected}, got {got} ({context})")]
     ShapeMismatch {
         expected: String,
         got: String,
@@ -32,10 +32,43 @@ pub enum Error {
     },
 
     /// Anything else.
-    #[error("{0}")]
     Other(String),
 }
 
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Io(e) => write!(f, "io error: {e}"),
+            Error::Xla(msg) => write!(f, "xla error: {msg}"),
+            Error::DatasetParse { line, msg } => {
+                write!(f, "dataset parse error at line {line}: {msg}")
+            }
+            Error::Config(msg) => write!(f, "config error: {msg}"),
+            Error::Artifact(msg) => write!(f, "artifact error: {msg}"),
+            Error::ShapeMismatch { expected, got, context } => {
+                write!(f, "shape mismatch: expected {expected}, got {got} ({context})")
+            }
+            Error::Other(msg) => write!(f, "{msg}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
+}
+
+#[cfg(feature = "pjrt")]
 impl From<xla::Error> for Error {
     fn from(e: xla::Error) -> Self {
         Error::Xla(e.to_string())
@@ -44,3 +77,39 @@ impl From<xla::Error> for Error {
 
 /// Crate-wide result alias.
 pub type Result<T> = std::result::Result<T, Error>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_formats_every_variant() {
+        let io: Error = std::io::Error::new(std::io::ErrorKind::NotFound, "gone").into();
+        assert!(io.to_string().starts_with("io error:"));
+        assert_eq!(Error::Xla("boom".into()).to_string(), "xla error: boom");
+        assert_eq!(
+            Error::DatasetParse { line: 3, msg: "bad".into() }.to_string(),
+            "dataset parse error at line 3: bad"
+        );
+        assert_eq!(Error::Config("c".into()).to_string(), "config error: c");
+        assert_eq!(Error::Artifact("a".into()).to_string(), "artifact error: a");
+        assert_eq!(
+            Error::ShapeMismatch {
+                expected: "4".into(),
+                got: "5".into(),
+                context: "t".into()
+            }
+            .to_string(),
+            "shape mismatch: expected 4, got 5 (t)"
+        );
+        assert_eq!(Error::Other("x".into()).to_string(), "x");
+    }
+
+    #[test]
+    fn io_source_is_preserved() {
+        use std::error::Error as _;
+        let e: Error = std::io::Error::new(std::io::ErrorKind::Other, "inner").into();
+        assert!(e.source().is_some());
+        assert!(Error::Config("no source".into()).source().is_none());
+    }
+}

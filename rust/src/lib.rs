@@ -15,11 +15,16 @@
 //! ## Architecture (three layers, Python never on the training path)
 //!
 //! * **Layer 3 (this crate)** — the data-pipeline coordinator: samplers,
-//!   block-device storage model + access-time simulator, prefetch pipeline
-//!   with backpressure, the five solvers (SAG/SAGA/SVRG/SAAG-II/MBSGD) with
-//!   constant-step and backtracking line search, metrics that decompose
-//!   training time into access vs compute, and the experiment harness that
-//!   regenerates every table and figure of the paper.
+//!   block-device storage model + access-time simulator, a **zero-copy,
+//!   persistent batch engine** ([`pipeline::prefetch`]: one reader thread
+//!   per experiment; epochs arrive as messages; contiguous CS/SS batches
+//!   flow to the solvers as [`pipeline::BatchPayload::Borrowed`] range
+//!   views with zero feature bytes copied, scattered RS batches pay a real
+//!   gather counted in bytes), the five solvers (SAG/SAGA/SVRG/SAAG-II/
+//!   MBSGD) with constant-step and backtracking line search, metrics that
+//!   decompose training time into access vs compute (plus copied-vs-
+//!   borrowed byte traffic), and the experiment harness that regenerates
+//!   every table and figure of the paper.
 //! * **Layer 2** — JAX model (`python/compile/model.py`): mini-batch
 //!   gradient/objective and fused solver update steps, AOT-lowered once per
 //!   (batch, features) shape to HLO text under `artifacts/`.
@@ -28,9 +33,10 @@
 //!   through VMEM once.
 //!
 //! The [`runtime`] module loads the artifacts through the PJRT C API (`xla`
-//! crate) and [`backend::PjrtBackend`] executes them from the solver hot
-//! path; [`math`] is a bit-careful native mirror used as cross-check oracle
-//! and portable fallback.
+//! crate, behind the optional `pjrt` cargo feature — the default build is
+//! fully offline with zero dependencies) and [`backend::PjrtBackend`]
+//! executes them from the solver hot path; [`math`] is a bit-careful native
+//! mirror used as cross-check oracle and portable fallback.
 //!
 //! ## Quick start
 //!

@@ -15,7 +15,7 @@
 //! ```
 //!
 //! Argument parsing is hand-rolled: the workspace builds fully offline with
-//! only `xla` + `thiserror` as external dependencies (DESIGN.md §Dependencies).
+//! zero external dependencies (the optional `pjrt` feature adds `xla`).
 
 use std::collections::{HashMap, HashSet};
 

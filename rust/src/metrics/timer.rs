@@ -18,6 +18,12 @@ pub struct TimeBreakdown {
     pub wall_s: f64,
     /// Device access statistics.
     pub access: AccessCost,
+    /// Feature-matrix bytes physically copied when assembling batches
+    /// (scattered/RS gathers). Zero for pure CS/SS runs on the zero-copy
+    /// pipeline — the host-side half of the paper's access-cost story.
+    pub bytes_copied: u64,
+    /// Feature-matrix bytes served zero-copy as range views (CS/SS).
+    pub bytes_borrowed: u64,
 }
 
 impl TimeBreakdown {
@@ -37,6 +43,17 @@ impl TimeBreakdown {
         }
     }
 
+    /// Fraction of assembled feature bytes that had to be physically copied
+    /// (0.0 for pure CS/SS on the zero-copy pipeline, 1.0 for pure RS).
+    pub fn copy_fraction(&self) -> f64 {
+        let total = self.bytes_copied + self.bytes_borrowed;
+        if total == 0 {
+            0.0
+        } else {
+            self.bytes_copied as f64 / total as f64
+        }
+    }
+
     /// Merge another breakdown (e.g. across epochs).
     pub fn merge(&mut self, other: &TimeBreakdown) {
         self.sim_access_s += other.sim_access_s;
@@ -44,6 +61,8 @@ impl TimeBreakdown {
         self.compute_s += other.compute_s;
         self.wall_s += other.wall_s;
         self.access += other.access;
+        self.bytes_copied += other.bytes_copied;
+        self.bytes_borrowed += other.bytes_borrowed;
     }
 }
 
@@ -81,7 +100,7 @@ mod tests {
             assemble_s: 0.5,
             compute_s: 1.5,
             wall_s: 2.1,
-            access: AccessCost::default(),
+            ..Default::default()
         };
         assert!((t.training_time_s() - 4.0).abs() < 1e-12);
         assert!((t.access_fraction() - 2.5 / 4.0).abs() < 1e-12);
@@ -96,16 +115,29 @@ mod tests {
             compute_s: 2.0,
             wall_s: 2.5,
             access: AccessCost { seeks: 3, ..Default::default() },
+            bytes_copied: 100,
+            bytes_borrowed: 300,
         };
         a.merge(&b);
         a.merge(&b);
         assert_eq!(a.access.seeks, 6);
         assert!((a.training_time_s() - 6.5).abs() < 1e-12);
+        assert_eq!(a.bytes_copied, 200);
+        assert_eq!(a.bytes_borrowed, 600);
     }
 
     #[test]
-    fn zero_breakdown_has_zero_fraction() {
+    fn zero_breakdown_has_zero_fractions() {
         assert_eq!(TimeBreakdown::default().access_fraction(), 0.0);
+        assert_eq!(TimeBreakdown::default().copy_fraction(), 0.0);
+    }
+
+    #[test]
+    fn copy_fraction_is_copied_over_total() {
+        let t = TimeBreakdown { bytes_copied: 1, bytes_borrowed: 3, ..Default::default() };
+        assert!((t.copy_fraction() - 0.25).abs() < 1e-12);
+        let rs = TimeBreakdown { bytes_copied: 8, bytes_borrowed: 0, ..Default::default() };
+        assert_eq!(rs.copy_fraction(), 1.0);
     }
 
     #[test]

@@ -1,10 +1,12 @@
-//! Streaming data pipeline: bounded-channel prefetcher (reader runs ahead of
-//! the trainer under backpressure) and shard splitting for the paper's
-//! "parallel and distributed" extension (§5: "These sampling techniques can
-//! be extended to parallel and distributed learning algorithms").
+//! Streaming data pipeline: a persistent, zero-copy batch prefetch engine
+//! (one reader thread per experiment; contiguous CS/SS batches flow to the
+//! solvers as range views with zero bytes copied, scattered RS batches pay a
+//! real gather) and shard splitting for the paper's "parallel and
+//! distributed" extension (§5: "These sampling techniques can be extended to
+//! parallel and distributed learning algorithms").
 
 pub mod prefetch;
 pub mod shard;
 
-pub use prefetch::{PrefetchStats, PrefetchedBatch, Prefetcher};
+pub use prefetch::{BatchPayload, PrefetchStats, PrefetchedBatch, Prefetcher};
 pub use shard::{rebalance, Shard};

@@ -1,131 +1,317 @@
-//! Bounded-channel batch prefetcher.
+//! Persistent, zero-copy batch prefetch engine.
 //!
-//! A reader thread walks one epoch's [`RowSelection`]s, charges the access
-//! simulator, gathers rows into owned buffers, and sends them through a
-//! `sync_channel(depth)` — the channel bound *is* the backpressure: the
-//! reader blocks once it is `depth` batches ahead of the trainer, so memory
-//! stays bounded at `depth * batch_bytes` while real gather time overlaps
-//! solver compute.
+//! One reader thread is spawned **per experiment** (not per epoch). The
+//! trainer hands it whole epochs as messages; the reader walks each epoch's
+//! [`RowSelection`]s, charges the access simulator, assembles a
+//! [`BatchPayload`] per batch and sends it through a `sync_channel(depth)` —
+//! the channel bound *is* the backpressure: the reader blocks once it is
+//! `depth` batches ahead of the trainer, so memory stays bounded at
+//! `depth * batch_bytes` while real gather time overlaps solver compute.
+//!
+//! The payload is where the paper's claim becomes real on the host path:
+//!
+//! * contiguous selections (CS/SS) ship as [`BatchPayload::Borrowed`] — a
+//!   `(Arc<DenseDataset>, start, end)` range view. **Zero feature-matrix
+//!   bytes are copied**; the solver reads the dataset's own memory.
+//! * scattered selections (RS) must be gathered row-by-row into owned
+//!   buffers ([`BatchPayload::Owned`]) — real memory traffic on every
+//!   iteration, reported through the `bytes_copied` counter.
+//!
+//! Because the reader owns the [`AccessSimulator`] for the whole experiment,
+//! its page-cache state persists across epochs for free and the driver never
+//! rebuilds a block map mid-run.
 
-use std::sync::mpsc::{sync_channel, Receiver};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver, Sender, SyncSender, TrySendError};
 use std::sync::Arc;
 use std::thread::JoinHandle;
 
-use crate::data::batch::RowSelection;
+use crate::data::batch::{gather_owned, BatchView, RowSelection};
 use crate::data::dense::DenseDataset;
 use crate::storage::simulator::{AccessCost, AccessSimulator};
 
-/// An owned, assembled mini-batch produced by the reader thread.
+thread_local! {
+    static READER_SPAWNS: std::cell::Cell<u64> = const { std::cell::Cell::new(0) };
+}
+
+/// Number of prefetch reader threads spawned *from the calling thread* so
+/// far. Thread-local so concurrent tests cannot interfere; the driver tests
+/// use it to pin "exactly one reader per experiment".
+pub fn reader_spawns_on_this_thread() -> u64 {
+    READER_SPAWNS.with(|c| c.get())
+}
+
+/// The data of one mini-batch: either a zero-copy range view into the shared
+/// dataset (contiguous CS/SS selections) or an owned gather (scattered RS).
+#[derive(Debug, Clone)]
+pub enum BatchPayload {
+    /// Rows `[start, end)` of `ds`, borrowed in place — zero bytes copied.
+    Borrowed {
+        /// Shared dataset the range points into.
+        ds: Arc<DenseDataset>,
+        /// First row (inclusive).
+        start: usize,
+        /// Last row (exclusive).
+        end: usize,
+    },
+    /// Row-by-row gather into owned buffers (scattered selections).
+    Owned {
+        /// Row-major features.
+        x: Vec<f32>,
+        /// Labels.
+        y: Vec<f32>,
+    },
+}
+
+impl BatchPayload {
+    /// Materialize the [`BatchView`] the solvers consume. For `Borrowed`
+    /// payloads the view aliases the dataset's own storage.
+    pub fn view(&self, cols: usize) -> BatchView<'_> {
+        match self {
+            BatchPayload::Borrowed { ds, start, end } => {
+                let (x, y) = ds.rows_slice(*start, *end);
+                BatchView { x, y, rows: end - start, cols }
+            }
+            BatchPayload::Owned { x, y } => BatchView { x, y, rows: y.len(), cols },
+        }
+    }
+
+    /// True when this payload is a zero-copy range view.
+    pub fn is_borrowed(&self) -> bool {
+        matches!(self, BatchPayload::Borrowed { .. })
+    }
+}
+
+/// An assembled mini-batch produced by the reader thread.
 #[derive(Debug)]
 pub struct PrefetchedBatch {
-    /// Row-major features.
-    pub x: Vec<f32>,
-    /// Labels.
-    pub y: Vec<f32>,
+    /// The batch data (zero-copy view or owned gather).
+    pub payload: BatchPayload,
     /// Row count.
     pub rows: usize,
     /// Position of this batch within the epoch.
     pub j: usize,
     /// Simulated device cost of this fetch.
     pub sim: AccessCost,
-    /// Measured host seconds spent gathering.
+    /// Measured host seconds spent assembling (≈0 for borrowed payloads).
     pub assemble_s: f64,
 }
 
-/// Reader-side totals returned when the epoch finishes.
+impl PrefetchedBatch {
+    /// View for the compute backend (`cols` = feature dimension).
+    pub fn view(&self, cols: usize) -> BatchView<'_> {
+        self.payload.view(cols)
+    }
+}
+
+/// Reader-side totals, per epoch and accumulated over the reader's lifetime.
 #[derive(Debug, Clone, Copy, Default)]
 pub struct PrefetchStats {
     /// Total simulated access seconds.
     pub sim_access_s: f64,
-    /// Total measured gather seconds.
+    /// Total measured assembly seconds.
     pub assemble_s: f64,
     /// Batches produced.
     pub batches: usize,
     /// Times the reader blocked on a full channel (backpressure events).
     pub stalls: u64,
+    /// Feature-matrix bytes physically copied into owned gathers (RS).
+    pub bytes_copied: u64,
+    /// Feature-matrix bytes served as zero-copy borrows (CS/SS).
+    pub bytes_borrowed: u64,
 }
 
-/// Handle to one epoch's prefetch run.
+impl PrefetchStats {
+    /// Accumulate another stats block (epoch → lifetime totals).
+    pub fn merge(&mut self, other: &PrefetchStats) {
+        self.sim_access_s += other.sim_access_s;
+        self.assemble_s += other.assemble_s;
+        self.batches += other.batches;
+        self.stalls += other.stalls;
+        self.bytes_copied += other.bytes_copied;
+        self.bytes_borrowed += other.bytes_borrowed;
+    }
+}
+
+/// Commands the trainer sends to the persistent reader.
+enum ReaderMsg {
+    /// Produce one epoch's batches from these selections.
+    Epoch(Vec<RowSelection>),
+}
+
+/// What flows through the data channel.
+enum BatchMsg {
+    Batch(PrefetchedBatch),
+    /// Epoch boundary marker carrying that epoch's stats.
+    EpochEnd(PrefetchStats),
+}
+
+/// Handle to the experiment-lifetime prefetch engine.
+///
+/// Protocol: [`spawn`] once, then per epoch [`start_epoch`] followed by
+/// [`next_batch`] until it returns `None` (after which
+/// [`last_epoch_stats`] holds that epoch's totals), and finally [`finish`]
+/// to take back the simulator and the lifetime totals.
+///
+/// [`spawn`]: Prefetcher::spawn
+/// [`start_epoch`]: Prefetcher::start_epoch
+/// [`next_batch`]: Prefetcher::next_batch
+/// [`last_epoch_stats`]: Prefetcher::last_epoch_stats
+/// [`finish`]: Prefetcher::finish
 #[derive(Debug)]
 pub struct Prefetcher {
-    rx: Receiver<PrefetchedBatch>,
+    cmd_tx: Option<Sender<ReaderMsg>>,
+    rx: Receiver<BatchMsg>,
     handle: Option<JoinHandle<(AccessSimulator, PrefetchStats)>>,
+    stall_counter: Arc<AtomicU64>,
+    last_epoch: PrefetchStats,
+    epoch_open: bool,
 }
 
 impl Prefetcher {
-    /// Spawn the reader for `selections` over `ds`, with channel bound
-    /// `depth` (≥1). The simulator is moved in and returned by [`join`] so
-    /// its page-cache state persists across epochs.
-    ///
-    /// [`join`]: Prefetcher::join
-    pub fn spawn(
-        ds: Arc<DenseDataset>,
-        selections: Vec<RowSelection>,
-        mut sim: AccessSimulator,
-        depth: usize,
-    ) -> Self {
+    /// Spawn the persistent reader over `ds` with channel bound `depth`
+    /// (≥1). The simulator is moved in for the experiment's lifetime — its
+    /// page-cache state persists across epochs — and is returned by
+    /// [`finish`](Prefetcher::finish).
+    pub fn spawn(ds: Arc<DenseDataset>, sim: AccessSimulator, depth: usize) -> Self {
         let depth = depth.max(1);
-        let (tx, rx) = sync_channel::<PrefetchedBatch>(depth);
+        let (cmd_tx, cmd_rx) = std::sync::mpsc::channel::<ReaderMsg>();
+        let (tx, rx) = sync_channel::<BatchMsg>(depth);
+        let stall_counter = Arc::new(AtomicU64::new(0));
+        let live_stalls = Arc::clone(&stall_counter);
+        READER_SPAWNS.with(|c| c.set(c.get() + 1));
         let handle = std::thread::spawn(move || {
-            let mut stats = PrefetchStats::default();
-            let cols = ds.cols();
-            for (j, sel) in selections.into_iter().enumerate() {
-                let sim_cost = sim.fetch(&sel);
-                let t0 = std::time::Instant::now();
-                let rows = sel.len();
-                let mut x = Vec::with_capacity(rows * cols);
-                let mut y = Vec::with_capacity(rows);
-                match &sel {
-                    RowSelection::Contiguous { start, end } => {
-                        let (xs, ys) = ds.rows_slice(*start, *end);
-                        x.extend_from_slice(xs);
-                        y.extend_from_slice(ys);
-                    }
-                    RowSelection::Scattered(idx) => {
-                        for &r in idx {
-                            x.extend_from_slice(ds.row(r as usize));
-                            y.push(ds.y()[r as usize]);
-                        }
-                    }
-                }
-                let assemble_s = t0.elapsed().as_secs_f64();
-                stats.sim_access_s += sim_cost.time_s;
-                stats.assemble_s += assemble_s;
-                stats.batches += 1;
-                let batch = PrefetchedBatch { x, y, rows, j, sim: sim_cost, assemble_s };
-                // try_send first so we can count backpressure stalls
-                match tx.try_send(batch) {
-                    Ok(()) => {}
-                    Err(std::sync::mpsc::TrySendError::Full(b)) => {
-                        stats.stalls += 1;
-                        if tx.send(b).is_err() {
-                            break; // trainer dropped the receiver
-                        }
-                    }
-                    Err(std::sync::mpsc::TrySendError::Disconnected(_)) => break,
-                }
-            }
-            (sim, stats)
+            reader_loop(ds, sim, cmd_rx, tx, live_stalls)
         });
-        Prefetcher { rx, handle: Some(handle) }
+        Prefetcher {
+            cmd_tx: Some(cmd_tx),
+            rx,
+            handle: Some(handle),
+            stall_counter,
+            last_epoch: PrefetchStats::default(),
+            epoch_open: false,
+        }
     }
 
-    /// Receive the next batch (None when the epoch is exhausted).
+    /// Hand the reader one epoch's selections. Must not be called while a
+    /// previous epoch is still being drained.
+    pub fn start_epoch(&mut self, selections: Vec<RowSelection>) {
+        assert!(!self.epoch_open, "start_epoch before previous epoch was drained");
+        self.cmd_tx
+            .as_ref()
+            .expect("prefetcher already finished")
+            .send(ReaderMsg::Epoch(selections))
+            .expect("prefetch reader thread is gone");
+        self.epoch_open = true;
+    }
+
+    /// Receive the next batch of the current epoch; `None` once the epoch is
+    /// exhausted (its stats are then available via
+    /// [`last_epoch_stats`](Prefetcher::last_epoch_stats)).
     pub fn next_batch(&mut self) -> Option<PrefetchedBatch> {
-        self.rx.recv().ok()
+        if !self.epoch_open {
+            return None;
+        }
+        match self.rx.recv() {
+            Ok(BatchMsg::Batch(b)) => Some(b),
+            Ok(BatchMsg::EpochEnd(stats)) => {
+                self.last_epoch = stats;
+                self.epoch_open = false;
+                None
+            }
+            Err(_) => {
+                // reader died (only possible on panic); surface as epoch end
+                self.epoch_open = false;
+                None
+            }
+        }
     }
 
-    /// Wait for the reader and take back the simulator + stats.
-    pub fn join(mut self) -> (AccessSimulator, PrefetchStats) {
-        // drain anything left so the reader can finish
-        while self.rx.try_recv().is_ok() {}
-        drop(self.rx);
+    /// Stats of the most recently completed epoch.
+    pub fn last_epoch_stats(&self) -> PrefetchStats {
+        self.last_epoch
+    }
+
+    /// Live backpressure-stall count (reader-side, lock-free). Monotonic
+    /// over the reader's lifetime; lets tests and monitors observe a stall
+    /// the moment it happens instead of sleeping and hoping.
+    pub fn stalls_so_far(&self) -> u64 {
+        self.stall_counter.load(Ordering::Relaxed)
+    }
+
+    /// Shut the reader down and take back the simulator plus the lifetime
+    /// totals. Drains any in-flight batches first, so it is safe to call
+    /// mid-epoch.
+    pub fn finish(mut self) -> (AccessSimulator, PrefetchStats) {
+        drop(self.cmd_tx.take()); // reader exits its loop at the next recv
+        while self.rx.recv().is_ok() {} // unblock + drain a mid-send reader
         self.handle
             .take()
-            .expect("join called once")
+            .expect("finish called once")
             .join()
-            .expect("prefetch thread panicked")
+            .expect("prefetch reader panicked")
     }
+}
+
+/// Body of the persistent reader thread.
+fn reader_loop(
+    ds: Arc<DenseDataset>,
+    mut sim: AccessSimulator,
+    cmd_rx: Receiver<ReaderMsg>,
+    tx: SyncSender<BatchMsg>,
+    live_stalls: Arc<AtomicU64>,
+) -> (AccessSimulator, PrefetchStats) {
+    let mut totals = PrefetchStats::default();
+    let cols = ds.cols();
+    let row_bytes = cols as u64 * 4;
+    'serve: while let Ok(ReaderMsg::Epoch(selections)) = cmd_rx.recv() {
+        let mut es = PrefetchStats::default();
+        for (j, sel) in selections.into_iter().enumerate() {
+            let sim_cost = sim.fetch(&sel);
+            let t0 = std::time::Instant::now();
+            let rows = sel.len();
+            let payload = match &sel {
+                RowSelection::Contiguous { start, end } => {
+                    es.bytes_borrowed += (end - start) as u64 * row_bytes;
+                    BatchPayload::Borrowed { ds: Arc::clone(&ds), start: *start, end: *end }
+                }
+                RowSelection::Scattered(_) => {
+                    let (x, y) = gather_owned(&ds, &sel);
+                    es.bytes_copied += x.len() as u64 * 4;
+                    BatchPayload::Owned { x, y }
+                }
+            };
+            let assemble_s = t0.elapsed().as_secs_f64();
+            es.sim_access_s += sim_cost.time_s;
+            es.assemble_s += assemble_s;
+            es.batches += 1;
+            let msg = BatchMsg::Batch(PrefetchedBatch {
+                payload,
+                rows,
+                j,
+                sim: sim_cost,
+                assemble_s,
+            });
+            // try_send first so backpressure stalls are counted (and
+            // observable live through the shared counter)
+            match tx.try_send(msg) {
+                Ok(()) => {}
+                Err(TrySendError::Full(msg)) => {
+                    es.stalls += 1;
+                    live_stalls.fetch_add(1, Ordering::Relaxed);
+                    if tx.send(msg).is_err() {
+                        break 'serve; // trainer dropped the receiver
+                    }
+                }
+                Err(TrySendError::Disconnected(_)) => break 'serve,
+            }
+        }
+        totals.merge(&es);
+        if tx.send(BatchMsg::EpochEnd(es)).is_err() {
+            break 'serve;
+        }
+    }
+    (sim, totals)
 }
 
 #[cfg(test)]
@@ -143,82 +329,126 @@ mod tests {
         AccessSimulator::for_dataset(DeviceProfile::hdd(), ds, 1 << 20)
     }
 
+    fn contiguous_epoch(batches: usize, batch_rows: usize) -> Vec<RowSelection> {
+        (0..batches)
+            .map(|j| RowSelection::Contiguous {
+                start: j * batch_rows,
+                end: (j + 1) * batch_rows,
+            })
+            .collect()
+    }
+
     #[test]
-    fn delivers_all_batches_in_order_with_correct_content() {
+    fn delivers_all_batches_in_order_zero_copy() {
         let d = ds(40, 3);
-        let sels: Vec<RowSelection> = (0..4)
-            .map(|j| RowSelection::Contiguous { start: j * 10, end: (j + 1) * 10 })
-            .collect();
-        let mut pf = Prefetcher::spawn(d.clone(), sels, sim(&d), 2);
+        let mut pf = Prefetcher::spawn(d.clone(), sim(&d), 2);
+        pf.start_epoch(contiguous_epoch(4, 10));
         let mut seen = 0;
         while let Some(b) = pf.next_batch() {
             assert_eq!(b.j, seen);
             assert_eq!(b.rows, 10);
+            assert!(b.payload.is_borrowed(), "contiguous batches must borrow");
+            let v = b.view(3);
             let (want_x, want_y) = d.rows_slice(b.j * 10, (b.j + 1) * 10);
-            assert_eq!(b.x, want_x);
-            assert_eq!(b.y, want_y);
+            assert_eq!(v.x, want_x);
+            assert_eq!(v.y, want_y);
+            // zero-copy pinned at the pointer level
+            assert_eq!(v.x.as_ptr(), d.row(b.j * 10).as_ptr(), "must alias the dataset");
             seen += 1;
         }
         assert_eq!(seen, 4);
-        let (_, stats) = pf.join();
-        assert_eq!(stats.batches, 4);
-        assert!(stats.sim_access_s > 0.0);
+        let es = pf.last_epoch_stats();
+        assert_eq!(es.batches, 4);
+        assert!(es.sim_access_s > 0.0);
+        assert_eq!(es.bytes_copied, 0, "contiguous epoch must copy nothing");
+        assert_eq!(es.bytes_borrowed, 40 * 3 * 4);
+        let (_, totals) = pf.finish();
+        assert_eq!(totals.batches, 4);
     }
 
     #[test]
-    fn scattered_selection_gathers() {
+    fn scattered_selection_gathers_owned() {
         let d = ds(20, 2);
-        let sels = vec![RowSelection::Scattered(vec![5, 1, 9])];
-        let mut pf = Prefetcher::spawn(d.clone(), sels, sim(&d), 1);
+        let mut pf = Prefetcher::spawn(d.clone(), sim(&d), 1);
+        pf.start_epoch(vec![RowSelection::Scattered(vec![5, 1, 9])]);
         let b = pf.next_batch().unwrap();
-        assert_eq!(b.x, &[10.0, 11.0, 2.0, 3.0, 18.0, 19.0]);
+        assert!(!b.payload.is_borrowed());
+        let v = b.view(2);
+        assert_eq!(v.x, &[10.0, 11.0, 2.0, 3.0, 18.0, 19.0]);
         assert!(pf.next_batch().is_none());
-        pf.join();
+        let es = pf.last_epoch_stats();
+        assert_eq!(es.bytes_copied, 3 * 2 * 4);
+        assert_eq!(es.bytes_borrowed, 0);
+        pf.finish();
     }
 
     #[test]
-    fn backpressure_stalls_are_counted() {
+    fn backpressure_stalls_are_counted_deterministically() {
+        // depth 1 and a consumer that provably consumes nothing until the
+        // reader has already hit the full channel: batch 0 fills the only
+        // slot, batch 1's try_send fails, the live counter ticks — only
+        // then does the consumer start draining. No sleeps, no races.
         let d = ds(1000, 4);
-        let sels: Vec<RowSelection> = (0..100)
-            .map(|j| RowSelection::Contiguous { start: j * 10, end: (j + 1) * 10 })
-            .collect();
-        let mut pf = Prefetcher::spawn(d.clone(), sels, sim(&d), 1);
-        // slow consumer: force the channel to fill
-        std::thread::sleep(std::time::Duration::from_millis(30));
+        let mut pf = Prefetcher::spawn(d.clone(), sim(&d), 1);
+        pf.start_epoch(contiguous_epoch(100, 10));
+        while pf.stalls_so_far() == 0 {
+            std::thread::yield_now();
+        }
         let mut n = 0;
-        while let Some(_b) = pf.next_batch() {
+        while pf.next_batch().is_some() {
             n += 1;
         }
         assert_eq!(n, 100);
-        let (_, stats) = pf.join();
-        assert!(stats.stalls > 0, "reader should have hit backpressure");
+        let es = pf.last_epoch_stats();
+        assert!(es.stalls > 0, "reader must have recorded the backpressure stall");
+        pf.finish();
     }
 
     #[test]
-    fn simulator_cache_state_survives_epochs() {
+    fn one_reader_serves_many_epochs_and_cache_persists() {
         let d = ds(100, 4);
-        let sels: Vec<RowSelection> =
-            vec![RowSelection::Contiguous { start: 0, end: 100 }];
-        let mut pf = Prefetcher::spawn(d.clone(), sels.clone(), sim(&d), 1);
+        let spawns_before = reader_spawns_on_this_thread();
+        let mut pf = Prefetcher::spawn(d.clone(), sim(&d), 1);
+        let sels = vec![RowSelection::Contiguous { start: 0, end: 100 }];
+
+        pf.start_epoch(sels.clone());
         while pf.next_batch().is_some() {}
-        let (sim1, stats1) = pf.join();
-        assert!(stats1.sim_access_s > 0.0);
-        // epoch 2 with the same simulator: everything cached, zero cost
-        let mut pf2 = Prefetcher::spawn(d, sels, sim1, 1);
-        while pf2.next_batch().is_some() {}
-        let (_, stats2) = pf2.join();
-        assert_eq!(stats2.sim_access_s, 0.0, "cache must persist across epochs");
+        let e0 = pf.last_epoch_stats();
+        assert!(e0.sim_access_s > 0.0, "cold first epoch must pay device time");
+
+        for _ in 0..2 {
+            pf.start_epoch(sels.clone());
+            while pf.next_batch().is_some() {}
+            let e = pf.last_epoch_stats();
+            assert_eq!(e.sim_access_s, 0.0, "page cache must persist across epochs");
+        }
+
+        let (sim_back, totals) = pf.finish();
+        assert_eq!(totals.batches, 3);
+        assert!(sim_back.total.cache_hits > 0);
+        assert_eq!(
+            reader_spawns_on_this_thread() - spawns_before,
+            1,
+            "one reader thread regardless of epoch count"
+        );
     }
 
     #[test]
-    fn dropping_receiver_stops_reader() {
+    fn finish_mid_epoch_does_not_deadlock() {
         let d = ds(1000, 4);
-        let sels: Vec<RowSelection> = (0..100)
-            .map(|j| RowSelection::Contiguous { start: j * 10, end: (j + 1) * 10 })
-            .collect();
-        let pf = Prefetcher::spawn(d, sels, sim(&ds(1000, 4)), 1);
-        // join drains + drops; reader must exit promptly without panic
-        let (_, stats) = pf.join();
-        assert!(stats.batches <= 100);
+        let mut pf = Prefetcher::spawn(d.clone(), sim(&d), 1);
+        pf.start_epoch(contiguous_epoch(100, 10));
+        let _first = pf.next_batch().unwrap();
+        // finish with 99 batches still in flight: must drain and join
+        let (_, totals) = pf.finish();
+        assert!(totals.batches <= 100);
+    }
+
+    #[test]
+    fn dropping_prefetcher_stops_reader_without_finish() {
+        let d = ds(1000, 4);
+        let mut pf = Prefetcher::spawn(d.clone(), sim(&d), 1);
+        pf.start_epoch(contiguous_epoch(50, 10));
+        drop(pf); // channels disconnect; the detached reader must exit
     }
 }

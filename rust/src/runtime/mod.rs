@@ -1,6 +1,10 @@
 //! PJRT runtime: loads the AOT artifacts (`artifacts/*.hlo.txt` +
 //! `manifest.json`) and serves compiled executables to the hot path.
 //!
+//! The [`Manifest`] bookkeeping is always compiled (the CLI `info`
+//! subcommand reads it); the PJRT client itself lives behind the `pjrt`
+//! cargo feature because it needs the `xla` crate.
+//!
 //! Pattern (see `/opt/xla-example/load_hlo`): HLO **text** is the
 //! interchange format — `HloModuleProto::from_text_file` reassigns the
 //! 64-bit instruction ids that jax ≥ 0.5 emits and xla_extension 0.5.1
@@ -10,135 +14,142 @@
 
 pub mod manifest;
 
-use std::collections::HashMap;
-use std::path::{Path, PathBuf};
-
-use crate::error::{Error, Result};
-
 pub use manifest::{Manifest, ManifestEntry};
 
-/// PJRT CPU client + compiled-executable cache over one artifacts dir.
-pub struct Runtime {
-    client: xla::PjRtClient,
-    dir: PathBuf,
-    manifest: Manifest,
-    cache: HashMap<String, xla::PjRtLoadedExecutable>,
-    /// Number of modules compiled (for reports and tests).
-    pub compiled: usize,
-}
+#[cfg(feature = "pjrt")]
+mod client {
+    use std::collections::HashMap;
+    use std::path::{Path, PathBuf};
 
-impl std::fmt::Debug for Runtime {
-    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
-        f.debug_struct("Runtime")
-            .field("dir", &self.dir)
-            .field("entries", &self.manifest.entries.len())
-            .field("compiled", &self.compiled)
-            .finish()
-    }
-}
+    use crate::error::{Error, Result};
+    use crate::runtime::Manifest;
 
-impl Runtime {
-    /// Open `artifacts_dir`, parse the manifest, create the PJRT CPU client.
-    pub fn load(artifacts_dir: impl AsRef<Path>) -> Result<Self> {
-        let dir = artifacts_dir.as_ref().to_path_buf();
-        let manifest = Manifest::load(dir.join("manifest.tsv"))?;
-        let client = xla::PjRtClient::cpu()?;
-        Ok(Runtime { client, dir, manifest, cache: HashMap::new(), compiled: 0 })
+    /// PJRT CPU client + compiled-executable cache over one artifacts dir.
+    pub struct Runtime {
+        client: xla::PjRtClient,
+        dir: PathBuf,
+        manifest: Manifest,
+        cache: HashMap<String, xla::PjRtLoadedExecutable>,
+        /// Number of modules compiled (for reports and tests).
+        pub compiled: usize,
     }
 
-    /// The parsed manifest.
-    pub fn manifest(&self) -> &Manifest {
-        &self.manifest
-    }
-
-    /// The PJRT client (for host→device buffer uploads).
-    pub fn client(&self) -> &xla::PjRtClient {
-        &self.client
-    }
-
-    /// PJRT platform name (always "cpu" in this session's image).
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
-    }
-
-    /// Fetch (compiling + caching on first use) the executable for
-    /// `entrypoint` at shape `(batch, features)`.
-    pub fn executable(
-        &mut self,
-        entrypoint: &str,
-        batch: usize,
-        features: usize,
-    ) -> Result<&xla::PjRtLoadedExecutable> {
-        let key = Manifest::key(entrypoint, batch, features);
-        if !self.cache.contains_key(&key) {
-            let entry = self.manifest.entry(entrypoint, batch, features)?;
-            let path = self.dir.join(&entry.file);
-            let proto = xla::HloModuleProto::from_text_file(&path).map_err(|e| {
-                Error::Artifact(format!("parse {}: {e}", path.display()))
-            })?;
-            let comp = xla::XlaComputation::from_proto(&proto);
-            let exe = self.client.compile(&comp)?;
-            self.cache.insert(key.clone(), exe);
-            self.compiled += 1;
+    impl std::fmt::Debug for Runtime {
+        fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+            f.debug_struct("Runtime")
+                .field("dir", &self.dir)
+                .field("entries", &self.manifest.entries.len())
+                .field("compiled", &self.compiled)
+                .finish()
         }
-        Ok(self.cache.get(&key).expect("just inserted"))
     }
 
-    /// Static batch sizes available for a feature dim, ascending.
-    pub fn batch_sizes_for(&self, entrypoint: &str, features: usize) -> Vec<usize> {
-        self.manifest.batch_sizes_for(entrypoint, features)
-    }
-
-    /// Eagerly compile every entrypoint needed by a solver run at one shape
-    /// (keeps compilation jitter out of timed regions).
-    pub fn warmup(&mut self, entrypoints: &[&str], batch: usize, features: usize) -> Result<()> {
-        for ep in entrypoints {
-            self.executable(ep, batch, features)?;
+    impl Runtime {
+        /// Open `artifacts_dir`, parse the manifest, create the PJRT CPU client.
+        pub fn load(artifacts_dir: impl AsRef<Path>) -> Result<Self> {
+            let dir = artifacts_dir.as_ref().to_path_buf();
+            let manifest = Manifest::load(dir.join("manifest.tsv"))?;
+            let client = xla::PjRtClient::cpu()?;
+            Ok(Runtime { client, dir, manifest, cache: HashMap::new(), compiled: 0 })
         }
-        Ok(())
+
+        /// The parsed manifest.
+        pub fn manifest(&self) -> &Manifest {
+            &self.manifest
+        }
+
+        /// The PJRT client (for host→device buffer uploads).
+        pub fn client(&self) -> &xla::PjRtClient {
+            &self.client
+        }
+
+        /// PJRT platform name (always "cpu" in this session's image).
+        pub fn platform(&self) -> String {
+            self.client.platform_name()
+        }
+
+        /// Fetch (compiling + caching on first use) the executable for
+        /// `entrypoint` at shape `(batch, features)`.
+        pub fn executable(
+            &mut self,
+            entrypoint: &str,
+            batch: usize,
+            features: usize,
+        ) -> Result<&xla::PjRtLoadedExecutable> {
+            let key = Manifest::key(entrypoint, batch, features);
+            if !self.cache.contains_key(&key) {
+                let entry = self.manifest.entry(entrypoint, batch, features)?;
+                let path = self.dir.join(&entry.file);
+                let proto = xla::HloModuleProto::from_text_file(&path).map_err(|e| {
+                    Error::Artifact(format!("parse {}: {e}", path.display()))
+                })?;
+                let comp = xla::XlaComputation::from_proto(&proto);
+                let exe = self.client.compile(&comp)?;
+                self.cache.insert(key.clone(), exe);
+                self.compiled += 1;
+            }
+            Ok(self.cache.get(&key).expect("just inserted"))
+        }
+
+        /// Static batch sizes available for a feature dim, ascending.
+        pub fn batch_sizes_for(&self, entrypoint: &str, features: usize) -> Vec<usize> {
+            self.manifest.batch_sizes_for(entrypoint, features)
+        }
+
+        /// Eagerly compile every entrypoint needed by a solver run at one shape
+        /// (keeps compilation jitter out of timed regions).
+        pub fn warmup(&mut self, entrypoints: &[&str], batch: usize, features: usize) -> Result<()> {
+            for ep in entrypoints {
+                self.executable(ep, batch, features)?;
+            }
+            Ok(())
+        }
+    }
+
+    #[cfg(test)]
+    mod tests {
+        use super::*;
+
+        fn artifacts_dir() -> Option<PathBuf> {
+            let p = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+            p.join("manifest.tsv").is_file().then_some(p)
+        }
+
+        #[test]
+        fn load_and_compile_grad() {
+            let Some(dir) = artifacts_dir() else {
+                eprintln!("skipping: run `make artifacts` first");
+                return;
+            };
+            let mut rt = Runtime::load(&dir).unwrap();
+            assert_eq!(rt.platform(), "cpu");
+            rt.executable("grad", 200, 28).unwrap();
+            assert_eq!(rt.compiled, 1);
+            // second fetch is cached
+            rt.executable("grad", 200, 28).unwrap();
+            assert_eq!(rt.compiled, 1);
+        }
+
+        #[test]
+        fn unknown_shape_is_artifact_error() {
+            let Some(dir) = artifacts_dir() else {
+                return;
+            };
+            let mut rt = Runtime::load(&dir).unwrap();
+            assert!(rt.executable("grad", 123, 7).is_err());
+            assert!(rt.executable("nonsense", 200, 28).is_err());
+        }
+
+        #[test]
+        fn batch_sizes_cover_aot_grid() {
+            let Some(dir) = artifacts_dir() else {
+                return;
+            };
+            let rt = Runtime::load(&dir).unwrap();
+            assert_eq!(rt.batch_sizes_for("grad", 28), vec![200, 500, 1000]);
+        }
     }
 }
 
-#[cfg(test)]
-mod tests {
-    use super::*;
-
-    fn artifacts_dir() -> Option<PathBuf> {
-        let p = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-        p.join("manifest.tsv").is_file().then_some(p)
-    }
-
-    #[test]
-    fn load_and_compile_grad() {
-        let Some(dir) = artifacts_dir() else {
-            eprintln!("skipping: run `make artifacts` first");
-            return;
-        };
-        let mut rt = Runtime::load(&dir).unwrap();
-        assert_eq!(rt.platform(), "cpu");
-        rt.executable("grad", 200, 28).unwrap();
-        assert_eq!(rt.compiled, 1);
-        // second fetch is cached
-        rt.executable("grad", 200, 28).unwrap();
-        assert_eq!(rt.compiled, 1);
-    }
-
-    #[test]
-    fn unknown_shape_is_artifact_error() {
-        let Some(dir) = artifacts_dir() else {
-            return;
-        };
-        let mut rt = Runtime::load(&dir).unwrap();
-        assert!(rt.executable("grad", 123, 7).is_err());
-        assert!(rt.executable("nonsense", 200, 28).is_err());
-    }
-
-    #[test]
-    fn batch_sizes_cover_aot_grid() {
-        let Some(dir) = artifacts_dir() else {
-            return;
-        };
-        let rt = Runtime::load(&dir).unwrap();
-        assert_eq!(rt.batch_sizes_for("grad", 28), vec![200, 500, 1000]);
-    }
-}
+#[cfg(feature = "pjrt")]
+pub use client::Runtime;

@@ -1,4 +1,4 @@
-//! Training driver: sampler → storage simulator → batch assembly → solver,
+//! Training driver: sampler → storage simulator → batch pipeline → solver,
 //! with the eq.(1) time decomposition recorded per epoch.
 //!
 //! Measurement protocol (matches the paper §4):
@@ -7,6 +7,13 @@
 //! * the full-dataset objective used for traces/tables is evaluated
 //!   **outside** the clock, like the paper's reporting;
 //! * SVRG's per-epoch full gradient *is* charged (it reads the data).
+//!
+//! With `prefetch_depth > 0` the driver runs the zero-copy pipeline: one
+//! persistent reader thread per experiment owns the access simulator (page
+//! cache persists across epochs, no per-epoch thread spawn or block-map
+//! rebuild), contiguous CS/SS batches reach the solver as range views with
+//! zero feature bytes copied, and SVRG's full-gradient sweep streams
+//! through the same reader.
 
 pub mod optimum;
 pub mod parallel;
@@ -15,13 +22,15 @@ use std::sync::Arc;
 
 use crate::backend::{ComputeBackend, NativeBackend, PjrtBackend};
 use crate::config::{BackendKind, ExperimentConfig, StepKind};
-use crate::data::batch::{BatchAssembler, BatchView};
+use crate::data::batch::{BatchAssembler, BatchView, RowSelection};
 use crate::data::dense::DenseDataset;
 use crate::error::Result;
 use crate::metrics::timer::{Stopwatch, TimeBreakdown};
 use crate::metrics::Trace;
-use crate::pipeline::prefetch::Prefetcher;
+use crate::pipeline::prefetch::{PrefetchStats, Prefetcher};
+use crate::sampling::Sampler;
 use crate::solvers::linesearch::{backtracking, LineSearchParams, LineSearchScratch};
+use crate::solvers::Solver;
 use crate::storage::simulator::AccessSimulator;
 
 pub use optimum::estimate_optimum;
@@ -109,6 +118,14 @@ pub fn run_experiment(cfg: &ExperimentConfig, ds: &DenseDataset) -> Result<Train
     run_experiment_with_backend(cfg, ds, backend.as_mut())
 }
 
+/// Fold one pipeline epoch's reader-side stats into the time breakdown.
+fn charge_epoch(time: &mut TimeBreakdown, es: &PrefetchStats) {
+    time.sim_access_s += es.sim_access_s;
+    time.assemble_s += es.assemble_s;
+    time.bytes_copied += es.bytes_copied;
+    time.bytes_borrowed += es.bytes_borrowed;
+}
+
 /// Like [`run_experiment`] but with a caller-provided backend (lets the
 /// harness share one PJRT runtime across arms).
 pub fn run_experiment_with_backend(
@@ -124,10 +141,10 @@ pub fn run_experiment_with_backend(
     let batch = cfg.batch_size.min(rows);
     let m = rows.div_ceil(batch);
 
-    let mut sampler = cfg.sampling.build(rows, batch, cfg.seed, Some(ds.y()))?;
-    let mut solver = cfg.solver.build(n, m);
+    let mut sampler: Box<dyn Sampler> = cfg.sampling.build(rows, batch, cfg.seed, Some(ds.y()))?;
+    let mut solver: Box<dyn Solver> = cfg.solver.build(n, m);
     solver.set_reg(c);
-    let mut sim = AccessSimulator::for_dataset(cfg.storage.device()?, ds, cfg.storage.cache_bytes());
+    let sim = AccessSimulator::for_dataset(cfg.storage.device()?, ds, cfg.storage.cache_bytes());
     let mut assembler = BatchAssembler::new();
     let mut time = TimeBreakdown::default();
     let mut trace = Trace::default();
@@ -141,53 +158,79 @@ pub fn run_experiment_with_backend(
     trace.push(0, 0.0, obj0);
 
     let wall = Stopwatch::start();
-    let arc_ds = (cfg.prefetch_depth > 0).then(|| Arc::new(ds.clone()));
+
+    // The simulator lives in exactly one place for the whole experiment:
+    // inside the persistent reader (pipelined path) or on this thread
+    // (synchronous path). Either way its page-cache state spans epochs and
+    // the block map is built exactly once.
+    let mut pf: Option<Prefetcher> = None;
+    let mut sim_local: Option<AccessSimulator> = None;
+    if cfg.prefetch_depth > 0 {
+        pf = Some(Prefetcher::spawn(Arc::new(ds.clone()), sim, cfg.prefetch_depth));
+    } else {
+        sim_local = Some(sim);
+    }
 
     for epoch in 0..cfg.epochs {
         solver.epoch_start(epoch);
 
         // SVRG: full gradient at the snapshot — a sequential, charged sweep
         if solver.needs_full_grad() {
-            full_gradient_sweep(
-                be,
-                ds,
-                solver.w(),
-                c,
-                batch,
-                &mut sim,
-                &mut time,
-                &mut mu_scratch,
-                &mut mu_chunk,
-            )?;
+            if let Some(pf) = pf.as_mut() {
+                full_gradient_sweep_prefetched(
+                    be,
+                    pf,
+                    rows,
+                    n,
+                    solver.w(),
+                    c,
+                    batch,
+                    &mut time,
+                    &mut mu_scratch,
+                    &mut mu_chunk,
+                )?;
+            } else {
+                full_gradient_sweep(
+                    be,
+                    ds,
+                    solver.w(),
+                    c,
+                    batch,
+                    sim_local.as_mut().expect("sync path owns the simulator"),
+                    &mut time,
+                    &mut mu_scratch,
+                    &mut mu_chunk,
+                )?;
+            }
             solver.install_full_grad(&mu_scratch);
         }
 
-        if let Some(arc) = &arc_ds {
-            // pipelined path: reader thread overlaps gather with compute
-            let selections = sampler.epoch(epoch);
-            let sim_moved = std::mem::replace(
-                &mut sim,
-                AccessSimulator::for_dataset(cfg.storage.device()?, ds, 0),
-            );
-            let mut pf =
-                Prefetcher::spawn(arc.clone(), selections, sim_moved, cfg.prefetch_depth);
+        if let Some(pf) = pf.as_mut() {
+            // pipelined path: the persistent reader overlaps (simulated)
+            // access + assembly with solver compute; CS/SS batches arrive
+            // as zero-copy range views
+            pf.start_epoch(sampler.epoch(epoch));
             while let Some(b) = pf.next_batch() {
-                let view = BatchView { x: &b.x, y: &b.y, rows: b.rows, cols: n };
+                let view = b.view(n);
                 let sw = Stopwatch::start();
                 let lr = step_size(cfg, be, solver.w(), &view, c, alpha_const,
                                    &ls_params, &mut ls_scratch)?;
                 solver.step(be, &view, b.j, lr)?;
                 time.compute_s += sw.elapsed_s();
             }
-            let (sim_back, stats) = pf.join();
-            sim = sim_back;
-            time.sim_access_s += stats.sim_access_s;
-            time.assemble_s += stats.assemble_s;
+            charge_epoch(&mut time, &pf.last_epoch_stats());
         } else {
             // synchronous path: fetch → assemble → step
+            let sim = sim_local.as_mut().expect("sync path owns the simulator");
+            let row_bytes = n as u64 * 4;
             for (j, sel) in sampler.epoch(epoch).into_iter().enumerate() {
                 let cost = sim.fetch(&sel);
                 time.sim_access_s += cost.time_s;
+                if sel.is_contiguous() {
+                    time.bytes_borrowed += sel.len() as u64 * row_bytes;
+                } else {
+                    time.bytes_copied += sel.len() as u64 * row_bytes;
+                }
                 let mut sw = Stopwatch::start();
                 let view = assembler.assemble(ds, &sel);
                 time.assemble_s += sw.lap_s();
@@ -206,6 +249,10 @@ pub fn run_experiment_with_backend(
         }
     }
     time.wall_s = wall.elapsed_s();
+    let sim = match pf {
+        Some(p) => p.finish().0,
+        None => sim_local.take().expect("sync path owns the simulator"),
+    };
     time.access = sim.total;
 
     let final_objective = trace.final_objective().unwrap_or(obj0);
@@ -262,9 +309,10 @@ fn full_gradient_sweep(
     let mut start = 0;
     while start < rows {
         let end = (start + chunk).min(rows);
-        let sel = crate::data::batch::RowSelection::Contiguous { start, end };
+        let sel = RowSelection::Contiguous { start, end };
         let cost = sim.fetch(&sel);
         time.sim_access_s += cost.time_s;
+        time.bytes_borrowed += (end - start) as u64 * ds.cols() as u64 * 4;
         let sw = Stopwatch::start();
         let (x, y) = ds.rows_slice(start, end);
         let view = BatchView { x, y, rows: end - start, cols: ds.cols() };
@@ -276,6 +324,44 @@ fn full_gradient_sweep(
         start = end;
     }
     // add the regularizer once
+    crate::math::axpy(c, w, out);
+    Ok(())
+}
+
+/// Same sweep, but streamed through the persistent reader so SVRG's full
+/// pass shares the zero-copy pipeline (and the one experiment-lifetime
+/// simulator) instead of touching the device model from the driver thread.
+#[allow(clippy::too_many_arguments)]
+fn full_gradient_sweep_prefetched(
+    be: &mut dyn ComputeBackend,
+    pf: &mut Prefetcher,
+    rows: usize,
+    cols: usize,
+    w: &[f32],
+    c: f32,
+    chunk: usize,
+    time: &mut TimeBreakdown,
+    out: &mut [f32],
+    scratch: &mut [f32],
+) -> Result<()> {
+    out.fill(0.0);
+    let mut sels = Vec::with_capacity(rows.div_ceil(chunk));
+    let mut start = 0;
+    while start < rows {
+        let end = (start + chunk).min(rows);
+        sels.push(RowSelection::Contiguous { start, end });
+        start = end;
+    }
+    pf.start_epoch(sels);
+    while let Some(b) = pf.next_batch() {
+        let sw = Stopwatch::start();
+        let view = b.view(cols);
+        be.grad_into(w, &view, 0.0, scratch)?;
+        let weight = view.rows as f32 / rows as f32;
+        crate::math::axpy(weight, scratch, out);
+        time.compute_s += sw.elapsed_s();
+    }
+    charge_epoch(time, &pf.last_epoch_stats());
     crate::math::axpy(c, w, out);
     Ok(())
 }
@@ -374,6 +460,64 @@ mod tests {
         // identical selections + identical math ⇒ identical iterates
         assert_eq!(a.w, b.w);
         assert!((a.final_objective - b.final_objective).abs() < 1e-12);
+        // and identical simulated device time: same simulator, same fetches
+        assert!((a.time.sim_access_s - b.time.sim_access_s).abs() < 1e-12);
+    }
+
+    #[test]
+    fn svrg_prefetch_matches_sync_including_full_sweep() {
+        // pins the sweep-through-the-reader path: SVRG's full gradient must
+        // be bit-identical whether it is computed synchronously or streamed
+        // through the persistent reader
+        let ds = tiny_ds();
+        let mut sync_cfg = quick_cfg(SolverKind::Svrg, SamplingKind::Ss);
+        sync_cfg.prefetch_depth = 0;
+        let mut pf_cfg = sync_cfg.clone();
+        pf_cfg.prefetch_depth = 2;
+        let a = run_experiment(&sync_cfg, &ds).unwrap();
+        let b = run_experiment(&pf_cfg, &ds).unwrap();
+        assert_eq!(a.w, b.w);
+        assert_eq!(
+            a.time.access.bytes_transferred,
+            b.time.access.bytes_transferred,
+            "sweep must be charged identically on both paths"
+        );
+    }
+
+    #[test]
+    fn contiguous_sampling_copies_zero_bytes_through_pipeline() {
+        let ds = tiny_ds();
+        for sampling in [SamplingKind::Cs, SamplingKind::Ss] {
+            let mut cfg = quick_cfg(SolverKind::Mbsgd, sampling);
+            cfg.prefetch_depth = 2;
+            let r = run_experiment(&cfg, &ds).unwrap();
+            assert_eq!(
+                r.time.bytes_copied, 0,
+                "{}: contiguous batches must be zero-copy",
+                sampling.label()
+            );
+            assert!(r.time.bytes_borrowed > 0);
+            assert_eq!(r.time.copy_fraction(), 0.0);
+        }
+        let mut cfg = quick_cfg(SolverKind::Mbsgd, SamplingKind::Rs);
+        cfg.prefetch_depth = 2;
+        let r = run_experiment(&cfg, &ds).unwrap();
+        assert!(r.time.bytes_copied > 0, "RS gathers must be counted as copies");
+        assert_eq!(r.time.copy_fraction(), 1.0);
+    }
+
+    #[test]
+    fn one_reader_thread_per_experiment_regardless_of_epochs() {
+        let ds = tiny_ds();
+        // SVRG exercises both the sweep and the epoch loop through the
+        // same persistent reader
+        let mut cfg = quick_cfg(SolverKind::Svrg, SamplingKind::Ss);
+        cfg.prefetch_depth = 2;
+        cfg.epochs = 5;
+        let before = crate::pipeline::prefetch::reader_spawns_on_this_thread();
+        run_experiment(&cfg, &ds).unwrap();
+        let after = crate::pipeline::prefetch::reader_spawns_on_this_thread();
+        assert_eq!(after - before, 1, "exactly one reader spawn per experiment");
     }
 
     #[test]

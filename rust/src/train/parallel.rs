@@ -13,11 +13,12 @@ use std::sync::Arc;
 
 use crate::backend::{ComputeBackend, NativeBackend};
 use crate::config::ExperimentConfig;
-use crate::data::batch::{BatchAssembler, BatchView};
+use crate::data::batch::BatchAssembler;
 use crate::data::dense::DenseDataset;
 use crate::error::{Error, Result};
 use crate::metrics::timer::Stopwatch;
-use crate::pipeline::shard;
+use crate::pipeline::shard::{self, Shard};
+use crate::sampling::Sampler;
 use crate::storage::simulator::AccessSimulator;
 
 /// Result of a data-parallel run.
@@ -65,7 +66,7 @@ pub fn run_data_parallel(
     let wall = Stopwatch::start();
 
     // per-worker persistent state: sampler + simulator (cache persists)
-    let mut worker_state: Vec<_> = shards
+    let mut worker_state: Vec<(Shard, Box<dyn Sampler>, AccessSimulator)> = shards
         .iter()
         .map(|sh| {
             let sampler = cfg
@@ -121,7 +122,6 @@ pub fn run_data_parallel(
                         let mut g = vec![0f32; ds.cols()];
                         for sel in sels {
                             let view = asm.assemble(&ds, sel);
-                            let view = BatchView { ..view };
                             be.grad_into(&wloc, &view, c, &mut g).expect("grad");
                             crate::math::axpy(-lr, &g, &mut wloc);
                         }

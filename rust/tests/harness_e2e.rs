@@ -13,7 +13,7 @@ use samplex::backend::NativeBackend;
 use samplex::bench_harness::{run_figure, run_table, speedups};
 use samplex::config::{ExperimentConfig, GridConfig, StepKind};
 use samplex::data::synth::{generate, FeatureDist, SynthSpec};
-use samplex::sampling::SamplingKind;
+use samplex::sampling::{Sampler, SamplingKind};
 use samplex::solvers::SolverKind;
 use samplex::train::estimate_optimum;
 
@@ -191,7 +191,7 @@ fn out_of_core_disk_training_matches_in_memory() {
     assert_eq!(src.rows(), 1200);
 
     // read a full epoch of SS batches from disk; gradient-descend natively
-    let mut sampler = SamplingKind::Ss.build(1200, 100, 1, None).unwrap();
+    let mut sampler: Box<dyn Sampler> = SamplingKind::Ss.build(1200, 100, 1, None).unwrap();
     let mut w_disk = vec![0f32; 8];
     let mut g = vec![0f32; 8];
     let mut xbuf = Vec::new();
@@ -203,7 +203,7 @@ fn out_of_core_disk_training_matches_in_memory() {
     }
 
     // identical updates from memory
-    let mut sampler2 = SamplingKind::Ss.build(1200, 100, 1, None).unwrap();
+    let mut sampler2: Box<dyn Sampler> = SamplingKind::Ss.build(1200, 100, 1, None).unwrap();
     let mut w_mem = vec![0f32; 8];
     let mut asm = samplex::data::batch::BatchAssembler::new();
     for sel in sampler2.epoch(0) {

@@ -2,9 +2,15 @@
 //! is offline, so instead of proptest we sweep seeded random cases — same
 //! invariants, deterministic shrink-free reporting of the failing seed).
 
-use samplex::data::batch::RowSelection;
+use std::sync::Arc;
+
+use samplex::backend::NativeBackend;
+use samplex::data::batch::{gather_owned, BatchView, RowSelection};
+use samplex::data::dense::DenseDataset;
+use samplex::pipeline::prefetch::Prefetcher;
 use samplex::rng::Rng;
 use samplex::sampling::{Sampler, SamplingKind};
+use samplex::solvers::{Solver, SolverKind};
 use samplex::storage::blockmap::BlockMap;
 use samplex::storage::profile::DeviceProfile;
 use samplex::storage::simulator::AccessSimulator;
@@ -238,6 +244,131 @@ fn prop_seeks_bounded_by_rows_plus_one() {
                 "case {i}: {} seeks for {} rows",
                 cost.seeks,
                 sel.len()
+            );
+        }
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Zero-copy pipeline invariants (the Borrowed/Owned payload contract)
+// ---------------------------------------------------------------------------
+
+fn random_dataset(rng: &mut Rng, rows: usize, cols: usize) -> DenseDataset {
+    let x: Vec<f32> = (0..rows * cols).map(|_| rng.normal() as f32).collect();
+    let y: Vec<f32> = (0..rows)
+        .map(|_| if rng.uniform() < 0.5 { 1.0 } else { -1.0 })
+        .collect();
+    DenseDataset::new("prop", cols, x, y).unwrap()
+}
+
+const ALL_KINDS: [SamplingKind; 5] = [
+    SamplingKind::Rs,
+    SamplingKind::Rswr,
+    SamplingKind::Cs,
+    SamplingKind::Ss,
+    SamplingKind::Stratified,
+];
+
+#[test]
+fn prop_borrowed_and_forced_owned_payloads_bit_identical() {
+    // for every sampler kind: the zero-copy payload the pipeline delivers
+    // and a forced owned gather of the same selection hold bit-identical
+    // batch contents; contiguous selections really borrow (pointer-equal)
+    // and report zero copied bytes
+    sweep(10, 0x0B0E, |rng, i| {
+        let rows = 20 + rng.below(300);
+        let cols = 1 + rng.below(12);
+        let batch = 1 + rng.below(rows);
+        let ds = Arc::new(random_dataset(rng, rows, cols));
+        let labels = ds.y().to_vec();
+        for kind in ALL_KINDS {
+            let mut s: Box<dyn Sampler> = kind.build(rows, batch, i as u64, Some(&labels)).unwrap();
+            let sels = s.epoch(i);
+            let sim = AccessSimulator::for_dataset(DeviceProfile::ssd(), &ds, 0);
+            let mut pf = Prefetcher::spawn(ds.clone(), sim, 2);
+            pf.start_epoch(sels.clone());
+            let mut k = 0usize;
+            while let Some(b) = pf.next_batch() {
+                let view = b.view(cols);
+                let (ox, oy) = gather_owned(&ds, &sels[k]);
+                assert_eq!(view.x, &ox[..], "{} case {i} batch {k}: x", kind.label());
+                assert_eq!(view.y, &oy[..], "{} case {i} batch {k}: y", kind.label());
+                assert_eq!(
+                    b.payload.is_borrowed(),
+                    sels[k].is_contiguous(),
+                    "{} case {i}: payload kind must follow selection kind",
+                    kind.label()
+                );
+                if let RowSelection::Contiguous { start, .. } = sels[k] {
+                    assert_eq!(
+                        view.x.as_ptr(),
+                        ds.row(start).as_ptr(),
+                        "{} case {i}: contiguous view must alias the dataset",
+                        kind.label()
+                    );
+                }
+                k += 1;
+            }
+            assert_eq!(k, sels.len(), "{} case {i}: batch count", kind.label());
+            let es = pf.last_epoch_stats();
+            if sels.iter().all(|s| s.is_contiguous()) {
+                assert_eq!(es.bytes_copied, 0, "{} case {i}", kind.label());
+                assert!(es.bytes_borrowed > 0);
+            } else {
+                assert_eq!(es.bytes_borrowed, 0, "{} case {i}", kind.label());
+                assert!(es.bytes_copied > 0);
+            }
+            pf.finish();
+        }
+    });
+}
+
+#[test]
+fn prop_solver_trajectory_identical_on_borrowed_vs_owned_payloads() {
+    // one full epoch of SAGA driven by pipeline payloads (zero-copy for
+    // CS/SS) must land on a bit-identical iterate to the same epoch driven
+    // by forced owned gathers of the same selections
+    sweep(5, 0x7AA9, |rng, i| {
+        let rows = 60 + rng.below(200);
+        let cols = 2 + rng.below(8);
+        let batch = 1 + rng.below(rows.min(50));
+        let ds = Arc::new(random_dataset(rng, rows, cols));
+        let labels = ds.y().to_vec();
+        let lr = 0.05f32;
+        for kind in ALL_KINDS {
+            let sels = kind
+                .build(rows, batch, i as u64, Some(&labels))
+                .unwrap()
+                .epoch(i);
+            let m = sels.len();
+            let mut be = NativeBackend::new();
+
+            // run A: payloads through the pipeline
+            let mut solver_a: Box<dyn Solver> = SolverKind::Saga.build(cols, m);
+            solver_a.set_reg(1e-3);
+            let sim = AccessSimulator::for_dataset(DeviceProfile::ram(), &ds, 0);
+            let mut pf = Prefetcher::spawn(ds.clone(), sim, 2);
+            pf.start_epoch(sels.clone());
+            while let Some(b) = pf.next_batch() {
+                let view = b.view(cols);
+                solver_a.step(&mut be, &view, b.j, lr).unwrap();
+            }
+            pf.finish();
+
+            // run B: forced owned gathers of the same selections
+            let mut solver_b: Box<dyn Solver> = SolverKind::Saga.build(cols, m);
+            solver_b.set_reg(1e-3);
+            for (j, sel) in sels.iter().enumerate() {
+                let (x, y) = gather_owned(&ds, sel);
+                let view = BatchView { x: &x, y: &y, rows: sel.len(), cols };
+                solver_b.step(&mut be, &view, j, lr).unwrap();
+            }
+
+            assert_eq!(
+                solver_a.w(),
+                solver_b.w(),
+                "{} case {i}: trajectories must be bit-identical",
+                kind.label()
             );
         }
     });
