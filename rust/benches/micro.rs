@@ -7,6 +7,8 @@
 //! * native gradient (several shapes)
 //! * PJRT gradient + fused step dispatch (when artifacts exist)
 //! * prefetch pipeline end-to-end epoch
+//! * sparse (CSR) pipeline: CS vs RS epochs on a ~0.1%-density synthetic,
+//!   with borrowed/copied byte traffic next to the dense numbers
 //!
 //! ```bash
 //! cargo bench --bench micro
@@ -16,19 +18,25 @@ use samplex::backend::{ComputeBackend, FusedStep, NativeBackend, PjrtBackend};
 use samplex::bench_harness::timing::{bench, header};
 use samplex::data::batch::{BatchAssembler, BatchView, RowSelection};
 use samplex::data::dense::DenseDataset;
+use samplex::data::synth::SparseSynthSpec;
+use samplex::data::Dataset;
 use samplex::rng::Rng;
 use samplex::sampling::{Sampler, SamplingKind};
 use samplex::storage::cache::LruCache;
 use samplex::storage::profile::DeviceProfile;
 use samplex::storage::simulator::AccessSimulator;
 
-fn dataset(rows: usize, cols: usize) -> DenseDataset {
+fn dense_parts(rows: usize, cols: usize) -> DenseDataset {
     let mut rng = Rng::seed_from(1);
     let x: Vec<f32> = (0..rows * cols).map(|_| rng.normal() as f32).collect();
     let y: Vec<f32> = (0..rows)
         .map(|_| if rng.uniform() < 0.5 { -1.0 } else { 1.0 })
         .collect();
     DenseDataset::new("bench", cols, x, y).unwrap()
+}
+
+fn dataset(rows: usize, cols: usize) -> Dataset {
+    dense_parts(rows, cols).into()
 }
 
 fn main() {
@@ -92,11 +100,11 @@ fn main() {
 
     // --- native math ---------------------------------------------------------
     for (b, n) in [(200usize, 28usize), (1000, 28), (1000, 256)] {
-        let dsn = dataset(b, n);
+        let dsn = dense_parts(b, n);
         let w = vec![0.1f32; n];
         let mut g = vec![0f32; n];
         let mut be = NativeBackend::new();
-        let view = BatchView { x: dsn.x(), y: dsn.y(), rows: b, cols: n };
+        let view = BatchView::dense(dsn.x(), dsn.y(), n);
         results.push(bench(&format!("native/grad b={b} n={n}"), 3, 9, 200, || {
             be.grad_into(&w, &view, 1e-4, &mut g).unwrap();
             std::hint::black_box(&g);
@@ -108,11 +116,11 @@ fn main() {
     let artifacts = std::path::Path::new("artifacts").join("manifest.tsv");
     if artifacts.is_file() {
         for (b, n) in [(200usize, 28usize), (1000, 28), (1000, 256)] {
-            let dsn = dataset(b, n);
+            let dsn = dense_parts(b, n);
             let mut pjrt = PjrtBackend::new("artifacts", n, b).unwrap();
             let w = vec![0.1f32; n];
             let mut g = vec![0f32; n];
-            let view = BatchView { x: dsn.x(), y: dsn.y(), rows: b, cols: n };
+            let view = BatchView::dense(dsn.x(), dsn.y(), n);
             results.push(bench(&format!("pjrt/grad b={b} n={n}"), 3, 9, 50, || {
                 pjrt.grad_into(&w, &view, 1e-4, &mut g).unwrap();
                 std::hint::black_box(&g);
@@ -140,7 +148,7 @@ fn main() {
         let mut pf = samplex::pipeline::prefetch::Prefetcher::spawn(big.clone(), sim, 2);
         pf.start_epoch(sels);
         while let Some(b) = pf.next_batch() {
-            std::hint::black_box(b.view(28).x);
+            std::hint::black_box(b.view(28).rows());
         }
         pf.finish();
     }));
@@ -156,7 +164,7 @@ fn main() {
                 .collect();
             pf.start_epoch(sels);
             while let Some(b) = pf.next_batch() {
-                std::hint::black_box(b.view(28).x);
+                std::hint::black_box(b.view(28).rows());
             }
         }));
         println!("{}", results.last().unwrap().row());
@@ -167,14 +175,14 @@ fn main() {
     // The zero-copy acceptance check: contiguous CS/SS epochs must report
     // bytes_copied == 0 (range views into the dataset), while RS pays a real
     // gather for every batch.
-    println!("\ncopy traffic per epoch (50k rows x 28 cols, batch 500):");
+    println!("\ncopy traffic per epoch (dense 50k rows x 28 cols, batch 500):");
     for kind in [SamplingKind::Rs, SamplingKind::Cs, SamplingKind::Ss] {
         let mut s: Box<dyn Sampler> = kind.build(50_000, 500, 7, None).unwrap();
         let sim = AccessSimulator::for_dataset(DeviceProfile::hdd(), &big, 0);
         let mut pf = samplex::pipeline::prefetch::Prefetcher::spawn(big.clone(), sim, 2);
         pf.start_epoch(s.epoch(0));
         while let Some(b) = pf.next_batch() {
-            std::hint::black_box(b.view(28).rows);
+            std::hint::black_box(b.view(28).rows());
         }
         let es = pf.last_epoch_stats();
         pf.finish();
@@ -184,6 +192,60 @@ fn main() {
             es.bytes_copied,
             es.bytes_borrowed,
             es.stalls
+        );
+    }
+
+    // --- sparse (CSR) pipeline ----------------------------------------------
+    // ~0.1% density: 20k rows x 100k cols, ~100 nnz/row. CS borrows all
+    // three CSR slices zero-copy; RS gathers value + index bytes per batch.
+    let sparse: std::sync::Arc<Dataset> = std::sync::Arc::new(
+        samplex::data::synth::generate_csr(
+            &SparseSynthSpec {
+                name: "bench-sparse",
+                rows: 20_000,
+                cols: 100_000,
+                nnz_per_row: 100,
+                flip_prob: 0.02,
+                margin_noise: 0.2,
+                pos_fraction: 0.5,
+            },
+            7,
+        )
+        .unwrap()
+        .into(),
+    );
+    println!(
+        "\nsparse pipeline (CSR 20k rows x 100k cols, {} nnz = {:.3}% dense, batch 500):",
+        sparse.nnz(),
+        100.0 * sparse.nnz() as f64 / (20_000f64 * 100_000.0)
+    );
+    for kind in [SamplingKind::Cs, SamplingKind::Rs] {
+        let mut sampler: Box<dyn Sampler> = kind.build(20_000, 500, 7, None).unwrap();
+        let mut copied = 0u64;
+        let mut borrowed = 0u64;
+        let label = format!("pipeline/sparse {} epoch 40 batches", kind.label());
+        {
+            let sim = AccessSimulator::for_dataset(DeviceProfile::hdd(), &sparse, 0);
+            let mut pf = samplex::pipeline::prefetch::Prefetcher::spawn(sparse.clone(), sim, 2);
+            let mut e = 0usize;
+            results.push(bench(&label, 1, 5, 1, || {
+                e += 1;
+                pf.start_epoch(sampler.epoch(e));
+                while let Some(b) = pf.next_batch() {
+                    std::hint::black_box(b.view(100_000).rows());
+                }
+                let es = pf.last_epoch_stats();
+                copied = es.bytes_copied;
+                borrowed = es.bytes_borrowed;
+            }));
+            println!("{}", results.last().unwrap().row());
+            pf.finish();
+        }
+        println!(
+            "  {:<5} bytes_copied={:>12}  bytes_borrowed={:>12}",
+            kind.label(),
+            copied,
+            borrowed
         );
     }
 

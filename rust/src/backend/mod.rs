@@ -64,11 +64,21 @@ pub trait ComputeBackend {
         Ok(false)
     }
 
-    /// Full-dataset objective of eq.(2), chunked through `loss_sum`.
+    /// True when this backend's kernels *are* the crate's native host math.
+    /// Solvers may then take host-side CSR fast paths (MBSGD's lazy l2)
+    /// without mis-attributing work to a device backend; non-native
+    /// backends keep every step on their own dispatch path (and report
+    /// their own layout limits, e.g. PJRT's dense-only artifacts).
+    fn is_native_host(&self) -> bool {
+        false
+    }
+
+    /// Full-dataset objective of eq.(2), chunked through `loss_sum`. The
+    /// chunks are zero-copy slice views for either layout.
     fn full_objective(
         &mut self,
         w: &[f32],
-        ds: &crate::data::dense::DenseDataset,
+        ds: &crate::data::Dataset,
         c: f32,
     ) -> Result<f64> {
         let chunk = 4096.min(ds.rows());
@@ -76,8 +86,7 @@ pub trait ComputeBackend {
         let mut start = 0;
         while start < ds.rows() {
             let end = (start + chunk).min(ds.rows());
-            let (x, y) = ds.rows_slice(start, end);
-            let view = BatchView { x, y, rows: end - start, cols: ds.cols() };
+            let view = ds.slice_view(start, end);
             total += self.loss_sum(w, &view)?;
             start = end;
         }

@@ -1,4 +1,9 @@
 //! Native Rust compute backend — `crate::math` behind the backend trait.
+//!
+//! The one place (besides the PJRT mirror) that dispatches on the batch
+//! layout: dense batches run the row-major kernels, CSR batches the
+//! nnz-proportional sparse kernels. Solvers above this line are
+//! layout-blind.
 
 use crate::backend::ComputeBackend;
 use crate::data::batch::BatchView;
@@ -20,6 +25,10 @@ impl ComputeBackend for NativeBackend {
         "native"
     }
 
+    fn is_native_host(&self) -> bool {
+        true
+    }
+
     fn grad_into(
         &mut self,
         w: &[f32],
@@ -27,22 +36,33 @@ impl ComputeBackend for NativeBackend {
         c: f32,
         out: &mut [f32],
     ) -> Result<()> {
-        crate::math::grad_into(w, batch.x, batch.y, batch.cols, c, out);
+        match batch {
+            BatchView::Dense(d) => crate::math::grad_into(w, d.x, d.y, d.cols, c, out),
+            BatchView::Csr(s) => crate::math::sparse::grad_into_csr(w, s, c, out),
+        }
         Ok(())
     }
 
     fn batch_obj(&mut self, w: &[f32], batch: &BatchView<'_>, c: f32) -> Result<f64> {
-        Ok(crate::math::objective_batch(w, batch.x, batch.y, batch.cols, c))
+        Ok(match batch {
+            BatchView::Dense(d) => crate::math::objective_batch(w, d.x, d.y, d.cols, c),
+            BatchView::Csr(s) => crate::math::sparse::objective_batch_csr(w, s, c),
+        })
     }
 
     fn loss_sum(&mut self, w: &[f32], batch: &BatchView<'_>) -> Result<f64> {
-        Ok(crate::math::loss_sum(w, batch.x, batch.y, batch.cols))
+        Ok(match batch {
+            BatchView::Dense(d) => crate::math::loss_sum(w, d.x, d.y, d.cols),
+            BatchView::Csr(s) => crate::math::sparse::loss_sum_csr(w, s),
+        })
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::data::csr::CsrDataset;
+    use crate::data::Dataset;
     use crate::rng::Rng;
 
     fn toy(rows: usize, cols: usize) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
@@ -58,7 +78,7 @@ mod tests {
     #[test]
     fn matches_math_module() {
         let (x, y, w) = toy(32, 8);
-        let view = BatchView { x: &x, y: &y, rows: 32, cols: 8 };
+        let view = BatchView::dense(&x, &y, 8);
         let mut be = NativeBackend::new();
         let mut g = vec![0f32; 8];
         be.grad_into(&w, &view, 0.1, &mut g).unwrap();
@@ -72,9 +92,30 @@ mod tests {
     }
 
     #[test]
+    fn csr_batches_dispatch_to_sparse_kernels() {
+        let (x, y, w) = toy(24, 6);
+        let dense = crate::data::dense::DenseDataset::new("t", 6, x.clone(), y.clone()).unwrap();
+        let csr = CsrDataset::from_dense(&dense).unwrap();
+        let mut be = NativeBackend::new();
+        let dv = BatchView::dense(&x, &y, 6);
+        let sv = BatchView::Csr(csr.slice(0, 24));
+        let mut gd = vec![0f32; 6];
+        let mut gs = vec![0f32; 6];
+        be.grad_into(&w, &dv, 0.2, &mut gd).unwrap();
+        be.grad_into(&w, &sv, 0.2, &mut gs).unwrap();
+        for k in 0..6 {
+            assert!((gd[k] - gs[k]).abs() < 1e-5);
+        }
+        let od = be.batch_obj(&w, &dv, 0.2).unwrap();
+        let os = be.batch_obj(&w, &sv, 0.2).unwrap();
+        assert!((od - os).abs() < 1e-5 * (1.0 + od.abs()));
+    }
+
+    #[test]
     fn full_objective_equals_single_batch_objective() {
         let (x, y, w) = toy(100, 5);
-        let ds = crate::data::dense::DenseDataset::new("t", 5, x.clone(), y.clone()).unwrap();
+        let ds: Dataset =
+            crate::data::dense::DenseDataset::new("t", 5, x.clone(), y.clone()).unwrap().into();
         let mut be = NativeBackend::new();
         let full = be.full_objective(&w, &ds, 0.2).unwrap();
         let whole = crate::math::objective_full(&w, &x, &y, 5, 0.2);
@@ -82,9 +123,20 @@ mod tests {
     }
 
     #[test]
+    fn full_objective_layouts_agree() {
+        let (x, y, w) = toy(90, 7);
+        let dense = crate::data::dense::DenseDataset::new("t", 7, x, y).unwrap();
+        let csr = CsrDataset::from_dense(&dense).unwrap();
+        let mut be = NativeBackend::new();
+        let a = be.full_objective(&w, &dense.into(), 0.05).unwrap();
+        let b = be.full_objective(&w, &Dataset::Csr(csr), 0.05).unwrap();
+        assert!((a - b).abs() < 1e-6 * (1.0 + a.abs()), "{a} vs {b}");
+    }
+
+    #[test]
     fn fused_unsupported() {
         let (x, y, mut w) = toy(8, 3);
-        let view = BatchView { x: &x, y: &y, rows: 8, cols: 3 };
+        let view = BatchView::dense(&x, &y, 3);
         let mut be = NativeBackend::new();
         let handled = be
             .fused(

@@ -23,9 +23,21 @@
 #[cfg(feature = "pjrt")]
 mod real {
     use crate::backend::{ComputeBackend, FusedStep};
-    use crate::data::batch::BatchView;
+    use crate::data::batch::{BatchView, DenseView};
     use crate::error::{Error, Result};
     use crate::runtime::Runtime;
+
+    /// The AOT artifacts are lowered for dense row-major batches; CSR
+    /// batches stay on the native sparse kernels.
+    fn dense_view<'a>(batch: &'a BatchView<'a>) -> Result<&'a DenseView<'a>> {
+        batch.as_dense().ok_or_else(|| {
+            Error::Xla(
+                "PJRT artifacts are dense row-major; run CSR datasets on the \
+                 native backend"
+                    .into(),
+            )
+        })
+    }
 
     /// Backend executing `artifacts/*.hlo.txt` through PJRT.
     pub struct PjrtBackend {
@@ -119,7 +131,7 @@ mod real {
         /// Upload the (x, y) pair, padding if ragged.
         fn data_buffers(
             &mut self,
-            batch: &BatchView<'_>,
+            batch: &DenseView<'_>,
         ) -> Result<(xla::PjRtBuffer, xla::PjRtBuffer)> {
             if batch.cols != self.features {
                 return Err(Error::ShapeMismatch {
@@ -190,6 +202,7 @@ mod real {
             c: f32,
             out: &mut [f32],
         ) -> Result<()> {
+            let batch = dense_view(batch)?;
             let inv = 1.0 / batch.rows as f32;
             let (x, y) = self.data_buffers(batch)?;
             let params = [
@@ -205,6 +218,7 @@ mod real {
         }
 
         fn batch_obj(&mut self, w: &[f32], batch: &BatchView<'_>, c: f32) -> Result<f64> {
+            let batch = dense_view(batch)?;
             let inv = 1.0 / batch.rows as f32;
             let (x, y) = self.data_buffers(batch)?;
             let params = [
@@ -220,6 +234,7 @@ mod real {
         }
 
         fn loss_sum(&mut self, w: &[f32], batch: &BatchView<'_>) -> Result<f64> {
+            let batch = dense_view(batch)?;
             // arbitrary row counts: chunk through the static batch
             let b = self.static_batch;
             let n = self.features;
@@ -227,7 +242,7 @@ mod real {
             let mut start = 0;
             while start < batch.rows {
                 let end = (start + b).min(batch.rows);
-                let view = BatchView {
+                let view = DenseView {
                     x: &batch.x[start * n..end * n],
                     y: &batch.y[start..end],
                     rows: end - start,
@@ -243,6 +258,9 @@ mod real {
         }
 
         fn fused(&mut self, step: FusedStep<'_>, batch: &BatchView<'_>, c: f32) -> Result<bool> {
+            // fused device steps exist for dense batches only; CSR batches
+            // fall back to the solver's gradient + host-algebra path
+            let Some(batch) = batch.as_dense() else { return Ok(false) };
             let n = self.features;
             let inv = 1.0 / batch.rows as f32;
             let (x, y) = self.data_buffers(batch)?;

@@ -12,7 +12,7 @@
 //!   paper's claim (it targets *big data*, i.e. data ≫ memory).
 
 use crate::config::ExperimentConfig;
-use crate::data::dense::DenseDataset;
+use crate::data::Dataset;
 use crate::error::Result;
 use crate::sampling::SamplingKind;
 use crate::train::run_experiment;
@@ -35,7 +35,7 @@ impl AblationPoint {
     }
 }
 
-fn run_point(base: &ExperimentConfig, ds: &DenseDataset, value: u64) -> Result<AblationPoint> {
+fn run_point(base: &ExperimentConfig, ds: &Dataset, value: u64) -> Result<AblationPoint> {
     let mut times = [0f64; 3];
     for (i, kind) in SamplingKind::paper_kinds().iter().enumerate() {
         let mut cfg = base.clone();
@@ -49,7 +49,7 @@ fn run_point(base: &ExperimentConfig, ds: &DenseDataset, value: u64) -> Result<A
 /// Sweep the device block size (KiB) at a fixed profile.
 pub fn block_size_sweep(
     base: &ExperimentConfig,
-    ds: &DenseDataset,
+    ds: &Dataset,
     block_kibs: &[u64],
 ) -> Result<Vec<AblationPoint>> {
     let mut out = Vec::with_capacity(block_kibs.len());
@@ -65,7 +65,7 @@ pub fn block_size_sweep(
 /// collapse visible; the ram profile has no L2 cache model).
 pub fn cache_size_sweep(
     base: &ExperimentConfig,
-    ds: &DenseDataset,
+    ds: &Dataset,
     cache_mibs: &[u64],
 ) -> Result<Vec<AblationPoint>> {
     let mut out = Vec::with_capacity(cache_mibs.len());
@@ -101,8 +101,8 @@ mod tests {
     use super::*;
     use crate::solvers::SolverKind;
 
-    fn setup() -> (ExperimentConfig, DenseDataset) {
-        let ds = crate::data::synth::generate(
+    fn setup() -> (ExperimentConfig, Dataset) {
+        let ds: Dataset = crate::data::synth::generate(
             &crate::data::synth::SynthSpec {
                 name: "abl",
                 rows: 2000,
@@ -114,7 +114,8 @@ mod tests {
             },
             31,
         )
-        .unwrap();
+        .unwrap()
+        .into();
         let mut cfg = ExperimentConfig::quick("abl", SolverKind::Mbsgd, SamplingKind::Ss, 100);
         cfg.epochs = 2;
         cfg.reg_c = Some(1e-3);

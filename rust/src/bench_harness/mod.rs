@@ -17,7 +17,7 @@ pub mod timing;
 use std::collections::BTreeMap;
 
 use crate::config::{ExperimentConfig, GridConfig};
-use crate::data::dense::DenseDataset;
+use crate::data::Dataset;
 use crate::error::Result;
 use crate::metrics::Trace;
 use crate::sampling::SamplingKind;
@@ -56,7 +56,7 @@ impl From<&TrainReport> for TableRow {
 /// Run every arm of `grid` over `ds`; optional progress callback.
 pub fn run_table(
     grid: &GridConfig,
-    ds: &DenseDataset,
+    ds: &Dataset,
     mut progress: Option<&mut dyn FnMut(&TrainReport)>,
 ) -> Result<Vec<TableRow>> {
     let mut rows = Vec::new();
@@ -180,7 +180,7 @@ pub struct FigureSeries {
 /// three series (RS/CS/SS). `p_star` anchors the rate fit.
 pub fn run_figure(
     grid: &GridConfig,
-    ds: &DenseDataset,
+    ds: &Dataset,
     p_star: f64,
     mut progress: Option<&mut dyn FnMut(&TrainReport)>,
 ) -> Result<Vec<FigureSeries>> {
@@ -202,7 +202,7 @@ pub fn run_figure(
 }
 
 /// Quick single-arm convenience used by examples.
-pub fn run_arm(cfg: &ExperimentConfig, ds: &DenseDataset) -> Result<TrainReport> {
+pub fn run_arm(cfg: &ExperimentConfig, ds: &Dataset) -> Result<TrainReport> {
     run_experiment(cfg, ds)
 }
 
@@ -212,7 +212,7 @@ mod tests {
     use crate::config::StepKind;
     use crate::solvers::SolverKind;
 
-    fn tiny() -> DenseDataset {
+    fn tiny() -> Dataset {
         crate::data::synth::generate(
             &crate::data::synth::SynthSpec {
                 name: "tiny",
@@ -226,6 +226,7 @@ mod tests {
             5,
         )
         .unwrap()
+        .into()
     }
 
     fn tiny_grid() -> GridConfig {

@@ -1,11 +1,19 @@
-//! Mini-batch views and the gather/borrow assembler.
+//! Mini-batch views and the gather/borrow assembler — the layout seam.
 //!
 //! The assembler is where the paper's effect shows up *for real* (not just in
-//! the simulator): contiguous selections (CS/SS) borrow the dataset slice
-//! zero-copy, while scattered selections (RS) must gather row-by-row into a
-//! scratch buffer — extra memory traffic on every iteration.
+//! the simulator): contiguous selections (CS/SS) borrow dataset slices
+//! zero-copy — for a dense store one `&[f32]` range, for a CSR store three
+//! sub-slices (`values`/`col_idx`/`row_ptr`) — while scattered selections
+//! (RS) must gather row-by-row into scratch buffers: extra memory traffic on
+//! every iteration, and for CSR the gather pays for *index bytes* as well as
+//! feature bytes.
+//!
+//! [`BatchView`] is the layout-polymorphic currency between the data plane
+//! and the compute backends: every solver steps through it, and only the
+//! backend's innermost kernel dispatches on the layout.
 
-use crate::data::dense::DenseDataset;
+use crate::data::csr::NNZ_BYTES;
+use crate::data::Dataset;
 
 /// Which rows a mini-batch selects. Produced by `sampling::Sampler`.
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -16,6 +24,39 @@ pub enum RowSelection {
     /// RS-with-replacement.
     Scattered(Vec<u32>),
 }
+
+/// Concrete iterator over a [`RowSelection`]'s row indices — an enum, not a
+/// `Box<dyn Iterator>`, so per-batch assembly never heap-allocates for
+/// iteration (this runs on the reader hot path every mini-batch).
+#[derive(Debug, Clone)]
+pub enum RowSelectionIter<'a> {
+    /// Contiguous range.
+    Range(std::ops::Range<usize>),
+    /// Explicit index list.
+    Indices(std::slice::Iter<'a, u32>),
+}
+
+impl Iterator for RowSelectionIter<'_> {
+    type Item = usize;
+
+    #[inline]
+    fn next(&mut self) -> Option<usize> {
+        match self {
+            RowSelectionIter::Range(r) => r.next(),
+            RowSelectionIter::Indices(it) => it.next().map(|&i| i as usize),
+        }
+    }
+
+    #[inline]
+    fn size_hint(&self) -> (usize, Option<usize>) {
+        match self {
+            RowSelectionIter::Range(r) => r.size_hint(),
+            RowSelectionIter::Indices(it) => it.size_hint(),
+        }
+    }
+}
+
+impl ExactSizeIterator for RowSelectionIter<'_> {}
 
 impl RowSelection {
     /// Number of selected rows.
@@ -31,11 +72,11 @@ impl RowSelection {
         self.len() == 0
     }
 
-    /// Iterate the selected row indices in order.
-    pub fn iter(&self) -> Box<dyn Iterator<Item = usize> + '_> {
+    /// Iterate the selected row indices in order (allocation-free).
+    pub fn iter(&self) -> RowSelectionIter<'_> {
         match self {
-            RowSelection::Contiguous { start, end } => Box::new(*start..*end),
-            RowSelection::Scattered(v) => Box::new(v.iter().map(|&i| i as usize)),
+            RowSelection::Contiguous { start, end } => RowSelectionIter::Range(*start..*end),
+            RowSelection::Scattered(v) => RowSelectionIter::Indices(v.iter()),
         }
     }
 
@@ -45,9 +86,9 @@ impl RowSelection {
     }
 }
 
-/// A borrowed, assembled mini-batch ready for a compute backend.
+/// Borrowed dense mini-batch: row-major features + labels.
 #[derive(Debug, Clone, Copy)]
-pub struct BatchView<'a> {
+pub struct DenseView<'a> {
     /// Row-major features, `rows * cols`.
     pub x: &'a [f32],
     /// Labels, length `rows`.
@@ -58,6 +99,175 @@ pub struct BatchView<'a> {
     pub cols: usize,
 }
 
+/// Borrowed CSR mini-batch: three sub-slices of the parent matrix.
+///
+/// `row_ptr` has `rows + 1` entries and keeps the parent's *absolute*
+/// offsets; row `r`'s non-zeros live at local offsets
+/// `row_ptr[r] - row_ptr[0] .. row_ptr[r+1] - row_ptr[0]` in
+/// `values`/`col_idx`. Keeping offsets absolute is what makes a contiguous
+/// selection a pure borrow — no rebased copy of the pointer array.
+#[derive(Debug, Clone, Copy)]
+pub struct CsrView<'a> {
+    /// Non-zero values of the selected rows.
+    pub values: &'a [f32],
+    /// Column index of each value.
+    pub col_idx: &'a [u32],
+    /// Absolute row offsets, length `rows + 1`.
+    pub row_ptr: &'a [u64],
+    /// Labels, length `rows`.
+    pub y: &'a [f32],
+    /// Feature dimension.
+    pub cols: usize,
+}
+
+impl<'a> CsrView<'a> {
+    /// Row count.
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.y.len()
+    }
+
+    /// Stored non-zeros in this batch.
+    #[inline]
+    pub fn nnz(&self) -> usize {
+        self.values.len()
+    }
+
+    /// Non-zeros of batch-row `r` as `(values, col_idx)`.
+    #[inline]
+    pub fn row(&self, r: usize) -> (&'a [f32], &'a [u32]) {
+        let base = self.row_ptr[0];
+        let lo = (self.row_ptr[r] - base) as usize;
+        let hi = (self.row_ptr[r + 1] - base) as usize;
+        (&self.values[lo..hi], &self.col_idx[lo..hi])
+    }
+}
+
+/// A borrowed, assembled mini-batch ready for a compute backend — either
+/// layout behind one type; solvers never branch on it, kernels do.
+#[derive(Debug, Clone, Copy)]
+pub enum BatchView<'a> {
+    /// Dense row-major batch.
+    Dense(DenseView<'a>),
+    /// CSR batch (three borrowed sub-slices).
+    Csr(CsrView<'a>),
+}
+
+impl<'a> BatchView<'a> {
+    /// Dense view over raw parts (`rows` inferred from `y`).
+    pub fn dense(x: &'a [f32], y: &'a [f32], cols: usize) -> Self {
+        BatchView::Dense(DenseView { x, y, rows: y.len(), cols })
+    }
+
+    /// Row count.
+    #[inline]
+    pub fn rows(&self) -> usize {
+        match self {
+            BatchView::Dense(d) => d.rows,
+            BatchView::Csr(s) => s.rows(),
+        }
+    }
+
+    /// Feature dimension.
+    #[inline]
+    pub fn cols(&self) -> usize {
+        match self {
+            BatchView::Dense(d) => d.cols,
+            BatchView::Csr(s) => s.cols,
+        }
+    }
+
+    /// Labels.
+    #[inline]
+    pub fn y(&self) -> &'a [f32] {
+        match self {
+            BatchView::Dense(d) => d.y,
+            BatchView::Csr(s) => s.y,
+        }
+    }
+
+    /// True for CSR batches.
+    #[inline]
+    pub fn is_csr(&self) -> bool {
+        matches!(self, BatchView::Csr(_))
+    }
+
+    /// The dense payload, if this is a dense batch.
+    #[inline]
+    pub fn as_dense(&self) -> Option<&DenseView<'a>> {
+        match self {
+            BatchView::Dense(d) => Some(d),
+            BatchView::Csr(_) => None,
+        }
+    }
+
+    /// The CSR payload, if this is a CSR batch.
+    #[inline]
+    pub fn as_csr(&self) -> Option<&CsrView<'a>> {
+        match self {
+            BatchView::Csr(s) => Some(s),
+            BatchView::Dense(_) => None,
+        }
+    }
+
+    /// Feature (+ index, for CSR) bytes this view spans — the traffic a
+    /// borrow serves zero-copy or a gather must physically move.
+    pub fn payload_bytes(&self) -> u64 {
+        match self {
+            BatchView::Dense(d) => (d.rows * d.cols) as u64 * 4,
+            BatchView::Csr(s) => s.nnz() as u64 * NNZ_BYTES,
+        }
+    }
+}
+
+/// An owned, gathered mini-batch (scattered selections and forced copies).
+#[derive(Debug, Clone)]
+pub enum OwnedBatch {
+    /// Dense gather.
+    Dense {
+        /// Row-major features.
+        x: Vec<f32>,
+        /// Labels.
+        y: Vec<f32>,
+    },
+    /// CSR gather: values *and* index bytes are copied, plus a rebuilt
+    /// row-pointer array.
+    Csr {
+        /// Non-zero values.
+        values: Vec<f32>,
+        /// Column indices.
+        col_idx: Vec<u32>,
+        /// Row offsets (length rows + 1, starting at 0).
+        row_ptr: Vec<u64>,
+        /// Labels.
+        y: Vec<f32>,
+    },
+}
+
+impl OwnedBatch {
+    /// Borrow as a [`BatchView`] for the compute backend.
+    pub fn view(&self, cols: usize) -> BatchView<'_> {
+        match self {
+            OwnedBatch::Dense { x, y } => BatchView::dense(x, y, cols),
+            OwnedBatch::Csr { values, col_idx, row_ptr, y } => BatchView::Csr(CsrView {
+                values,
+                col_idx,
+                row_ptr,
+                y,
+                cols,
+            }),
+        }
+    }
+
+    /// Feature (+ index) bytes physically held by this gather.
+    pub fn payload_bytes(&self) -> u64 {
+        match self {
+            OwnedBatch::Dense { x, .. } => x.len() as u64 * 4,
+            OwnedBatch::Csr { values, .. } => values.len() as u64 * NNZ_BYTES,
+        }
+    }
+}
+
 /// Gather `sel` from `ds` into fresh owned buffers, regardless of whether
 /// the selection is contiguous.
 ///
@@ -65,34 +275,58 @@ pub struct BatchView<'a> {
 /// (RS) selections, and the property tests use it to force an owned copy of
 /// a contiguous selection so the zero-copy `Borrowed` payload can be checked
 /// bit-for-bit against a materialized gather.
-pub fn gather_owned(ds: &DenseDataset, sel: &RowSelection) -> (Vec<f32>, Vec<f32>) {
-    let cols = ds.cols();
-    let rows = sel.len();
-    let mut x = Vec::with_capacity(rows * cols);
-    let mut y = Vec::with_capacity(rows);
-    match sel {
-        RowSelection::Contiguous { start, end } => {
-            let (xs, ys) = ds.rows_slice(*start, *end);
-            x.extend_from_slice(xs);
-            y.extend_from_slice(ys);
-        }
-        RowSelection::Scattered(idx) => {
-            for &r in idx {
-                let r = r as usize;
-                x.extend_from_slice(ds.row(r));
-                y.push(ds.y()[r]);
+pub fn gather_owned(ds: &Dataset, sel: &RowSelection) -> OwnedBatch {
+    match ds {
+        Dataset::Dense(d) => {
+            let cols = d.cols();
+            let rows = sel.len();
+            let mut x = Vec::with_capacity(rows * cols);
+            let mut y = Vec::with_capacity(rows);
+            match sel {
+                RowSelection::Contiguous { start, end } => {
+                    let (xs, ys) = d.rows_slice(*start, *end);
+                    x.extend_from_slice(xs);
+                    y.extend_from_slice(ys);
+                }
+                RowSelection::Scattered(idx) => {
+                    for &r in idx {
+                        let r = r as usize;
+                        x.extend_from_slice(d.row(r));
+                        y.push(d.y()[r]);
+                    }
+                }
             }
+            OwnedBatch::Dense { x, y }
+        }
+        Dataset::Csr(c) => {
+            let rows = sel.len();
+            let mut values = Vec::new();
+            let mut col_idx = Vec::new();
+            let mut row_ptr = Vec::with_capacity(rows + 1);
+            let mut y = Vec::with_capacity(rows);
+            row_ptr.push(0u64);
+            for r in sel.iter() {
+                let (vals, idx) = c.row(r);
+                values.extend_from_slice(vals);
+                col_idx.extend_from_slice(idx);
+                row_ptr.push(values.len() as u64);
+                y.push(c.y()[r]);
+            }
+            OwnedBatch::Csr { values, col_idx, row_ptr, y }
         }
     }
-    (x, y)
 }
 
-/// Reusable gather buffer: assembles a [`BatchView`] from a [`RowSelection`],
-/// borrowing the dataset directly when the selection is contiguous.
+/// Reusable gather buffers: assembles a [`BatchView`] from a
+/// [`RowSelection`], borrowing the dataset directly when the selection is
+/// contiguous (both layouts).
 #[derive(Debug, Default)]
 pub struct BatchAssembler {
     x_buf: Vec<f32>,
     y_buf: Vec<f32>,
+    vals_buf: Vec<f32>,
+    idx_buf: Vec<u32>,
+    ptr_buf: Vec<u64>,
     /// Number of rows gathered (copied) since construction — a real,
     /// measured component of access cost reported by the metrics.
     pub gathered_rows: u64,
@@ -107,27 +341,45 @@ impl BatchAssembler {
     }
 
     /// Assemble `sel` from `ds`. Contiguous selections are zero-copy.
-    pub fn assemble<'a>(&'a mut self, ds: &'a DenseDataset, sel: &RowSelection) -> BatchView<'a> {
-        let cols = ds.cols();
-        match sel {
-            RowSelection::Contiguous { start, end } => {
-                self.borrowed_batches += 1;
-                let (x, y) = ds.rows_slice(*start, *end);
-                BatchView { x, y, rows: end - start, cols }
-            }
-            RowSelection::Scattered(idx) => {
-                let rows = idx.len();
+    pub fn assemble<'a>(&'a mut self, ds: &'a Dataset, sel: &RowSelection) -> BatchView<'a> {
+        if let RowSelection::Contiguous { start, end } = sel {
+            self.borrowed_batches += 1;
+            return ds.slice_view(*start, *end);
+        }
+        self.gathered_rows += sel.len() as u64;
+        match ds {
+            Dataset::Dense(d) => {
+                let cols = d.cols();
                 self.x_buf.clear();
-                self.x_buf.reserve(rows * cols);
+                self.x_buf.reserve(sel.len() * cols);
                 self.y_buf.clear();
-                self.y_buf.reserve(rows);
-                for &r in idx {
-                    let r = r as usize;
-                    self.x_buf.extend_from_slice(ds.row(r));
-                    self.y_buf.push(ds.y()[r]);
+                self.y_buf.reserve(sel.len());
+                for r in sel.iter() {
+                    self.x_buf.extend_from_slice(d.row(r));
+                    self.y_buf.push(d.y()[r]);
                 }
-                self.gathered_rows += rows as u64;
-                BatchView { x: &self.x_buf, y: &self.y_buf, rows, cols }
+                BatchView::dense(&self.x_buf, &self.y_buf, cols)
+            }
+            Dataset::Csr(c) => {
+                self.vals_buf.clear();
+                self.idx_buf.clear();
+                self.ptr_buf.clear();
+                self.y_buf.clear();
+                self.ptr_buf.push(0u64);
+                for r in sel.iter() {
+                    let (vals, idx) = c.row(r);
+                    self.vals_buf.extend_from_slice(vals);
+                    self.idx_buf.extend_from_slice(idx);
+                    self.ptr_buf.push(self.vals_buf.len() as u64);
+                    self.y_buf.push(c.y()[r]);
+                }
+                BatchView::Csr(CsrView {
+                    values: &self.vals_buf,
+                    col_idx: &self.idx_buf,
+                    row_ptr: &self.ptr_buf,
+                    y: &self.y_buf,
+                    cols: c.cols(),
+                })
             }
         }
     }
@@ -136,11 +388,28 @@ impl BatchAssembler {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::data::csr::CsrDataset;
+    use crate::data::dense::DenseDataset;
 
-    fn ds() -> DenseDataset {
+    fn ds() -> Dataset {
         let x: Vec<f32> = (0..20).map(|v| v as f32).collect(); // 10 rows x 2
         let y: Vec<f32> = (0..10).map(|r| if r % 2 == 0 { 1.0 } else { -1.0 }).collect();
-        DenseDataset::new("t", 2, x, y).unwrap()
+        Dataset::Dense(DenseDataset::new("t", 2, x, y).unwrap())
+    }
+
+    fn csr_ds() -> Dataset {
+        // 6 rows x 4 cols, varying nnz (row 3 empty)
+        Dataset::Csr(
+            CsrDataset::new(
+                "t",
+                4,
+                vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0],
+                vec![0, 2, 1, 3, 0, 1, 2],
+                vec![0, 2, 3, 4, 4, 6, 7],
+                vec![1.0, -1.0, 1.0, -1.0, 1.0, -1.0],
+            )
+            .unwrap(),
+        )
     }
 
     #[test]
@@ -154,18 +423,40 @@ mod tests {
         assert_eq!(s.iter().collect::<Vec<_>>(), vec![7, 1, 7]);
         assert!(!s.is_contiguous());
         assert!(c.is_contiguous());
+        // the iterator is exact-size on both arms (hot-path contract)
+        assert_eq!(c.iter().len(), 3);
+        assert_eq!(s.iter().len(), 3);
     }
 
     #[test]
     fn contiguous_assembly_is_zero_copy() {
         let d = ds();
+        let dense = d.as_dense().unwrap();
         let mut asm = BatchAssembler::new();
         let sel = RowSelection::Contiguous { start: 3, end: 6 };
         let v = asm.assemble(&d, &sel);
-        assert_eq!(v.rows, 3);
-        assert_eq!(v.x.as_ptr(), d.row(3).as_ptr(), "must borrow, not copy");
-        assert_eq!(v.y, &d.y()[3..6]);
+        assert_eq!(v.rows(), 3);
+        let dv = v.as_dense().unwrap();
+        assert_eq!(dv.x.as_ptr(), dense.row(3).as_ptr(), "must borrow, not copy");
+        assert_eq!(dv.y, &dense.y()[3..6]);
         assert_eq!(asm.gathered_rows, 0);
+        assert_eq!(asm.borrowed_batches, 1);
+    }
+
+    #[test]
+    fn contiguous_csr_assembly_borrows_all_three_slices() {
+        let d = csr_ds();
+        let c = d.as_csr().unwrap();
+        let (vals, idx, ptr) = c.arrays();
+        let mut asm = BatchAssembler::new();
+        let v = asm.assemble(&d, &RowSelection::Contiguous { start: 1, end: 5 });
+        let sv = v.as_csr().unwrap();
+        assert_eq!(sv.rows(), 4);
+        assert_eq!(sv.values.as_ptr(), vals[2..].as_ptr(), "values must alias");
+        assert_eq!(sv.col_idx.as_ptr(), idx[2..].as_ptr(), "indices must alias");
+        assert_eq!(sv.row_ptr.as_ptr(), ptr[1..].as_ptr(), "row_ptr must alias");
+        assert_eq!(sv.row(0), (&[3.0f32][..], &[1u32][..]));
+        assert_eq!(sv.row(2), (&[][..], &[][..])); // empty row preserved
         assert_eq!(asm.borrowed_batches, 1);
     }
 
@@ -175,23 +466,58 @@ mod tests {
         let mut asm = BatchAssembler::new();
         let sel = RowSelection::Scattered(vec![9, 0, 4]);
         let v = asm.assemble(&d, &sel);
-        assert_eq!(v.rows, 3);
-        assert_eq!(v.x, &[18.0, 19.0, 0.0, 1.0, 8.0, 9.0]);
-        assert_eq!(v.y, &[-1.0, 1.0, 1.0]);
+        assert_eq!(v.rows(), 3);
+        let dv = v.as_dense().unwrap();
+        assert_eq!(dv.x, &[18.0, 19.0, 0.0, 1.0, 8.0, 9.0]);
+        assert_eq!(dv.y, &[-1.0, 1.0, 1.0]);
+        assert_eq!(asm.gathered_rows, 3);
+    }
+
+    #[test]
+    fn scattered_csr_assembly_rebuilds_row_ptr() {
+        let d = csr_ds();
+        let mut asm = BatchAssembler::new();
+        let v = asm.assemble(&d, &RowSelection::Scattered(vec![4, 0, 3]));
+        let sv = v.as_csr().unwrap();
+        assert_eq!(sv.values, &[5.0, 6.0, 1.0, 2.0]);
+        assert_eq!(sv.col_idx, &[0, 1, 0, 2]);
+        assert_eq!(sv.row_ptr, &[0, 2, 4, 4]);
+        assert_eq!(sv.y, &[1.0, 1.0, -1.0]);
         assert_eq!(asm.gathered_rows, 3);
     }
 
     #[test]
     fn gather_owned_copies_contiguous_and_scattered_identically() {
         let d = ds();
-        let (cx, cy) = gather_owned(&d, &RowSelection::Contiguous { start: 3, end: 6 });
-        let (want_x, want_y) = d.rows_slice(3, 6);
+        let dense = d.as_dense().unwrap();
+        let ob = gather_owned(&d, &RowSelection::Contiguous { start: 3, end: 6 });
+        let OwnedBatch::Dense { x: cx, y: cy } = &ob else { panic!("dense gather") };
+        let (want_x, want_y) = dense.rows_slice(3, 6);
         assert_eq!(cx, want_x);
         assert_eq!(cy, want_y);
-        assert_ne!(cx.as_ptr(), d.row(3).as_ptr(), "gather_owned must copy");
-        let (sx, sy) = gather_owned(&d, &RowSelection::Scattered(vec![9, 0, 4]));
+        assert_ne!(cx.as_ptr(), dense.row(3).as_ptr(), "gather_owned must copy");
+        let ob = gather_owned(&d, &RowSelection::Scattered(vec![9, 0, 4]));
+        let OwnedBatch::Dense { x: sx, y: sy } = &ob else { panic!("dense gather") };
         assert_eq!(sx, &[18.0, 19.0, 0.0, 1.0, 8.0, 9.0]);
         assert_eq!(sy, &[-1.0, 1.0, 1.0]);
+    }
+
+    #[test]
+    fn gather_owned_csr_matches_borrowed_slice() {
+        let d = csr_ds();
+        let ob = gather_owned(&d, &RowSelection::Contiguous { start: 1, end: 5 });
+        let borrowed = d.slice_view(1, 5);
+        let bv = borrowed.as_csr().unwrap();
+        let ov = ob.view(4);
+        let sv = ov.as_csr().unwrap();
+        assert_eq!(sv.values, bv.values);
+        assert_eq!(sv.col_idx, bv.col_idx);
+        assert_eq!(sv.y, bv.y);
+        // offsets are rebased in the gather but rows must match one-to-one
+        for r in 0..4 {
+            assert_eq!(sv.row(r), bv.row(r), "row {r}");
+        }
+        assert_eq!(ob.payload_bytes(), borrowed.payload_bytes());
     }
 
     #[test]
@@ -199,7 +525,7 @@ mod tests {
         let d = ds();
         let mut asm = BatchAssembler::new();
         let v = asm.assemble(&d, &RowSelection::Scattered(vec![2, 2]));
-        assert_eq!(v.x, &[4.0, 5.0, 4.0, 5.0]);
+        assert_eq!(v.as_dense().unwrap().x, &[4.0, 5.0, 4.0, 5.0]);
     }
 
     #[test]
@@ -208,8 +534,25 @@ mod tests {
         let mut asm = BatchAssembler::new();
         for _ in 0..5 {
             let v = asm.assemble(&d, &RowSelection::Scattered(vec![1, 2, 3]));
-            assert_eq!(v.rows, 3);
+            assert_eq!(v.rows(), 3);
         }
         assert_eq!(asm.gathered_rows, 15);
+        let c = csr_ds();
+        let mut asm = BatchAssembler::new();
+        for _ in 0..5 {
+            let v = asm.assemble(&c, &RowSelection::Scattered(vec![0, 4]));
+            assert_eq!(v.as_csr().unwrap().nnz(), 4);
+        }
+        assert_eq!(asm.gathered_rows, 10);
+    }
+
+    #[test]
+    fn payload_bytes_count_values_and_indices() {
+        let d = csr_ds();
+        // rows 1..5 hold 4 nnz -> 4 * (4B value + 4B index) = 32 bytes
+        assert_eq!(d.slice_view(1, 5).payload_bytes(), 32);
+        let dense = ds();
+        // 3 rows x 2 cols x 4B = 24 bytes
+        assert_eq!(dense.slice_view(3, 6).payload_bytes(), 24);
     }
 }

@@ -1,13 +1,237 @@
-//! Datasets: in-memory dense store, on-disk binary layout, LIBSVM ingestion,
-//! synthetic stand-ins for the paper's eight benchmark datasets, and the
-//! dataset registry that maps names to generation profiles.
+//! Datasets: the layout seam of the whole system.
+//!
+//! Two concrete stores live behind one [`Dataset`] type:
+//!
+//! * [`DenseDataset`] — row-major `f32` features (`.sxb` on disk). Chosen
+//!   for the paper's low-dimensional physics sets (HIGGS, SUSY, covtype…)
+//!   where nearly every entry is populated.
+//! * [`CsrDataset`] — compressed sparse rows (`values`/`col_idx`/`row_ptr`,
+//!   `.sxc` on disk). Chosen for high-dimensional LIBSVM ingests (rcv1,
+//!   news20) and sparse synthetics, where densifying is impossible — O(nnz)
+//!   memory, nnz-proportional access cost.
+//!
+//! Everything downstream (samplers, the storage simulator, the zero-copy
+//! prefetch pipeline, the solvers) is layout-polymorphic through
+//! [`batch::BatchView`]; only the innermost math kernels dispatch on the
+//! layout. Contiguous CS/SS selections borrow either layout zero-copy — a
+//! dense row range is one slice, a CSR row range is three.
 
 pub mod batch;
+pub mod csr;
 pub mod dense;
 pub mod libsvm;
 pub mod registry;
 pub mod scaling;
 pub mod synth;
 
-pub use batch::{BatchAssembler, BatchView};
+pub use batch::{BatchAssembler, BatchView, OwnedBatch};
+pub use csr::CsrDataset;
 pub use dense::DenseDataset;
+
+use crate::data::batch::RowSelection;
+
+/// A dataset in one of the two supported memory layouts.
+#[derive(Debug, Clone)]
+pub enum Dataset {
+    /// Dense row-major store.
+    Dense(DenseDataset),
+    /// Compressed-sparse-row store.
+    Csr(CsrDataset),
+}
+
+impl From<DenseDataset> for Dataset {
+    fn from(d: DenseDataset) -> Self {
+        Dataset::Dense(d)
+    }
+}
+
+impl From<CsrDataset> for Dataset {
+    fn from(c: CsrDataset) -> Self {
+        Dataset::Csr(c)
+    }
+}
+
+impl Dataset {
+    /// Dataset name.
+    pub fn name(&self) -> &str {
+        match self {
+            Dataset::Dense(d) => &d.name,
+            Dataset::Csr(c) => &c.name,
+        }
+    }
+
+    /// Number of data points `l`.
+    #[inline]
+    pub fn rows(&self) -> usize {
+        match self {
+            Dataset::Dense(d) => d.rows(),
+            Dataset::Csr(c) => c.rows(),
+        }
+    }
+
+    /// Feature dimension `n`.
+    #[inline]
+    pub fn cols(&self) -> usize {
+        match self {
+            Dataset::Dense(d) => d.cols(),
+            Dataset::Csr(c) => c.cols(),
+        }
+    }
+
+    /// Stored entries: `rows * cols` for dense, the non-zero count for CSR.
+    #[inline]
+    pub fn nnz(&self) -> usize {
+        match self {
+            Dataset::Dense(d) => d.rows() * d.cols(),
+            Dataset::Csr(c) => c.nnz(),
+        }
+    }
+
+    /// Full label vector.
+    #[inline]
+    pub fn y(&self) -> &[f32] {
+        match self {
+            Dataset::Dense(d) => d.y(),
+            Dataset::Csr(c) => c.y(),
+        }
+    }
+
+    /// True for the CSR layout.
+    pub fn is_csr(&self) -> bool {
+        matches!(self, Dataset::Csr(_))
+    }
+
+    /// The dense store, if this is a dense dataset.
+    pub fn as_dense(&self) -> Option<&DenseDataset> {
+        match self {
+            Dataset::Dense(d) => Some(d),
+            Dataset::Csr(_) => None,
+        }
+    }
+
+    /// The CSR store, if this is a CSR dataset.
+    pub fn as_csr(&self) -> Option<&CsrDataset> {
+        match self {
+            Dataset::Csr(c) => Some(c),
+            Dataset::Dense(_) => None,
+        }
+    }
+
+    /// Zero-copy [`BatchView`] of contiguous rows `[start, end)` — the CS/SS
+    /// fast path for both layouts.
+    #[inline]
+    pub fn slice_view(&self, start: usize, end: usize) -> BatchView<'_> {
+        match self {
+            Dataset::Dense(d) => {
+                let (x, y) = d.rows_slice(start, end);
+                BatchView::dense(x, y, d.cols())
+            }
+            Dataset::Csr(c) => BatchView::Csr(c.slice(start, end)),
+        }
+    }
+
+    /// Feature (+ index, for CSR) bytes a selection spans — what a borrow
+    /// serves zero-copy or a gather must copy. Duplicated scattered rows are
+    /// counted each time (they are gathered each time).
+    pub fn payload_bytes(&self, sel: &RowSelection) -> u64 {
+        match self {
+            Dataset::Dense(d) => sel.len() as u64 * d.cols() as u64 * 4,
+            Dataset::Csr(c) => match sel {
+                RowSelection::Contiguous { start, end } => c.payload_bytes(*start, *end),
+                RowSelection::Scattered(rows) => rows
+                    .iter()
+                    .map(|&r| c.row_nnz(r as usize) as u64 * csr::NNZ_BYTES)
+                    .sum(),
+            },
+        }
+    }
+
+    /// Upper bound on the per-sample gradient Lipschitz constant
+    /// (`max_i ||x_i||^2 / 4 + C`) — O(stored entries).
+    pub fn lipschitz(&self, c: f32) -> f64 {
+        match self {
+            Dataset::Dense(d) => d.lipschitz(c),
+            Dataset::Csr(s) => s.lipschitz(c),
+        }
+    }
+
+    /// Total size of the on-disk encoding (`.sxb` / `.sxc`) in bytes.
+    pub fn file_bytes(&self) -> u64 {
+        match self {
+            Dataset::Dense(d) => d.file_bytes(),
+            Dataset::Csr(c) => c.file_bytes(),
+        }
+    }
+
+    /// One-time random row permutation (paper §5 pre-shuffle), layout
+    /// preserving.
+    pub fn shuffle_rows(&mut self, seed: u64) {
+        match self {
+            Dataset::Dense(d) => scaling::shuffle_rows(d, seed),
+            Dataset::Csr(c) => c.shuffle_rows(seed),
+        }
+    }
+
+    /// Save to the layout's native binary format.
+    pub fn save(&self, path: impl AsRef<std::path::Path>) -> crate::error::Result<()> {
+        match self {
+            Dataset::Dense(d) => d.save(path),
+            Dataset::Csr(c) => c.save(path),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dense() -> Dataset {
+        let x: Vec<f32> = (0..12).map(|v| v as f32).collect();
+        Dataset::Dense(DenseDataset::new("d", 3, x, vec![1.0, -1.0, 1.0, -1.0]).unwrap())
+    }
+
+    fn csr() -> Dataset {
+        Dataset::Csr(
+            CsrDataset::new(
+                "c",
+                100,
+                vec![1.0, 2.0, 3.0],
+                vec![5, 50, 99],
+                vec![0, 2, 2, 3],
+                vec![1.0, -1.0, 1.0],
+            )
+            .unwrap(),
+        )
+    }
+
+    #[test]
+    fn shared_accessors_dispatch() {
+        let d = dense();
+        assert_eq!((d.rows(), d.cols(), d.nnz()), (4, 3, 12));
+        assert!(!d.is_csr());
+        assert!(d.as_dense().is_some() && d.as_csr().is_none());
+        let c = csr();
+        assert_eq!((c.rows(), c.cols(), c.nnz()), (3, 100, 3));
+        assert!(c.is_csr());
+        assert_eq!(c.name(), "c");
+        assert!(c.lipschitz(0.0) > 0.0);
+    }
+
+    #[test]
+    fn payload_bytes_by_layout() {
+        let d = dense();
+        assert_eq!(d.payload_bytes(&RowSelection::Contiguous { start: 0, end: 2 }), 24);
+        assert_eq!(d.payload_bytes(&RowSelection::Scattered(vec![0, 0])), 24);
+        let c = csr();
+        // rows 0..2: 2 nnz -> 16 bytes (values + indices); row 1 is empty
+        assert_eq!(c.payload_bytes(&RowSelection::Contiguous { start: 0, end: 2 }), 16);
+        assert_eq!(c.payload_bytes(&RowSelection::Scattered(vec![2, 1, 2])), 16);
+    }
+
+    #[test]
+    fn slice_view_matches_layout() {
+        assert!(dense().slice_view(0, 2).as_dense().is_some());
+        assert!(csr().slice_view(0, 2).as_csr().is_some());
+        assert_eq!(csr().slice_view(1, 3).rows(), 2);
+    }
+}

@@ -106,6 +106,100 @@ pub fn generate(spec: &SynthSpec, seed: u64) -> Result<DenseDataset> {
     DenseDataset::new(spec.name, cols, x, y)
 }
 
+/// Generation profile for a sparse (CSR) synthetic dataset.
+///
+/// Density is controlled directly through `nnz_per_row` (so
+/// `density = nnz_per_row / cols`); memory and generation time are O(nnz),
+/// never O(rows * cols) — this is what lets the registry stand in for the
+/// paper's news20-scale sets (1.35M features) on a laptop.
+#[derive(Debug, Clone)]
+pub struct SparseSynthSpec {
+    pub name: &'static str,
+    pub rows: usize,
+    pub cols: usize,
+    /// Mean stored non-zeros per row (actual counts jitter ±50%).
+    pub nnz_per_row: usize,
+    /// Label noise: fraction of labels flipped after separation.
+    pub flip_prob: f64,
+    /// Margin noise added before the sign.
+    pub margin_noise: f64,
+    /// Fraction of positive examples (class imbalance).
+    pub pos_fraction: f64,
+}
+
+impl SparseSynthSpec {
+    /// Stored-entry fraction `nnz_per_row / cols`.
+    pub fn density(&self) -> f64 {
+        self.nnz_per_row as f64 / self.cols as f64
+    }
+}
+
+/// Generate a CSR dataset from `spec` with a deterministic `seed`.
+///
+/// Labeling mirrors the dense generator: a ground-truth separator `w*`
+/// (dense in w-space, O(cols) — the one unavoidable dense array), margins
+/// computed over each row's non-zeros only, tf-idf-style uniform values.
+pub fn generate_csr(spec: &SparseSynthSpec, seed: u64) -> Result<crate::data::csr::CsrDataset> {
+    let mut rng = Rng::seed_from(seed ^ 0xC5_0000);
+    let (rows, cols) = (spec.rows, spec.cols);
+    if spec.nnz_per_row == 0 || spec.nnz_per_row > cols {
+        return Err(crate::error::Error::Config(format!(
+            "nnz_per_row {} must be in [1, cols={cols}]",
+            spec.nnz_per_row
+        )));
+    }
+
+    let w_star: Vec<f64> = (0..cols).map(|_| rng.normal()).collect();
+    // E[margin] scale: each of k stored values is U[0,1] against a unit
+    // normal w*, so Var(clean margin) ~ k * E[v^2] = k/3
+    let k_mean = spec.nnz_per_row as f64;
+    let margin_scale = (k_mean / 3.0).sqrt().max(1e-12);
+    let margin_std = (1.0 + spec.margin_noise * spec.margin_noise).sqrt();
+    let bias = -inv_norm_cdf(spec.pos_fraction) * margin_std;
+
+    let nnz_hint = rows * spec.nnz_per_row;
+    let mut values = Vec::with_capacity(nnz_hint);
+    let mut col_idx = Vec::with_capacity(nnz_hint);
+    let mut row_ptr = Vec::with_capacity(rows + 1);
+    let mut y = Vec::with_capacity(rows);
+    row_ptr.push(0u64);
+    let mut idx_buf: Vec<u32> = Vec::new();
+    let mut seen: std::collections::HashSet<u32> = std::collections::HashSet::new();
+    for _ in 0..rows {
+        // jittered nnz count in [ceil(k/2), 3k/2]
+        let lo = spec.nnz_per_row.div_ceil(2);
+        let hi = (spec.nnz_per_row * 3 / 2).min(cols).max(lo);
+        let k = lo + rng.below(hi - lo + 1);
+        // draw k distinct sorted column indices; k << cols keeps rejection
+        // cheap, and the set makes each draw O(1) (news20-scale rows hold
+        // hundreds of non-zeros — a linear scan per draw would be O(k^2))
+        idx_buf.clear();
+        seen.clear();
+        while idx_buf.len() < k {
+            let j = rng.below(cols) as u32;
+            if seen.insert(j) {
+                idx_buf.push(j);
+            }
+        }
+        idx_buf.sort_unstable();
+        let mut margin = 0f64;
+        for &j in idx_buf.iter() {
+            let v = rng.uniform();
+            margin += v * w_star[j as usize];
+            values.push(v as f32);
+            col_idx.push(j);
+        }
+        row_ptr.push(values.len() as u64);
+        margin = margin / margin_scale + spec.margin_noise * rng.normal() - bias;
+        let mut label = if margin >= 0.0 { 1.0 } else { -1.0 };
+        if rng.uniform() < spec.flip_prob {
+            label = -label;
+        }
+        y.push(label as f32);
+    }
+    crate::data::csr::CsrDataset::new(spec.name, cols, values, col_idx, row_ptr, y)
+}
+
 /// Acklam's rational approximation to the standard normal quantile.
 fn inv_norm_cdf(p: f64) -> f64 {
     let p = p.clamp(1e-9, 1.0 - 1e-9);
@@ -224,6 +318,85 @@ mod tests {
             .count() as f64
             / d.rows() as f64;
         assert!(correct > 0.8, "accuracy={correct}");
+    }
+
+    fn sparse_spec() -> SparseSynthSpec {
+        SparseSynthSpec {
+            name: "st",
+            rows: 1500,
+            cols: 50_000,
+            nnz_per_row: 20,
+            flip_prob: 0.02,
+            margin_noise: 0.2,
+            pos_fraction: 0.5,
+        }
+    }
+
+    #[test]
+    fn sparse_generator_is_nnz_bounded_and_deterministic() {
+        let s = sparse_spec();
+        let a = generate_csr(&s, 4).unwrap();
+        assert_eq!((a.rows(), a.cols()), (1500, 50_000));
+        // nnz within the ±50% jitter envelope
+        assert!(a.nnz() >= 1500 * 10 && a.nnz() <= 1500 * 30, "nnz={}", a.nnz());
+        let b = generate_csr(&s, 4).unwrap();
+        assert_eq!(a.arrays(), b.arrays());
+        assert_eq!(a.y(), b.y());
+        let c = generate_csr(&s, 5).unwrap();
+        assert_ne!(a.arrays().0, c.arrays().0);
+        assert!((s.density() - 20.0 / 50_000.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn sparse_generator_rows_are_valid_csr() {
+        let d = generate_csr(&sparse_spec(), 9).unwrap();
+        for r in 0..d.rows() {
+            let (vals, idx) = d.row(r);
+            assert!(!vals.is_empty());
+            assert!(idx.windows(2).all(|w| w[0] < w[1]), "row {r} indices sorted");
+            assert!(vals.iter().all(|v| (0.0..=1.0).contains(v)));
+        }
+    }
+
+    #[test]
+    fn sparse_generator_balanced_labels() {
+        let d = generate_csr(&sparse_spec(), 2).unwrap();
+        let pos = d.y().iter().filter(|&&v| v > 0.0).count() as f64 / d.rows() as f64;
+        assert!((pos - 0.5).abs() < 0.08, "pos={pos}");
+    }
+
+    #[test]
+    fn sparse_generator_labels_learnable() {
+        // a few sparse GD steps should beat chance comfortably
+        let mut s = sparse_spec();
+        s.rows = 800;
+        s.cols = 2000;
+        s.nnz_per_row = 30;
+        let d = generate_csr(&s, 6).unwrap();
+        let mut w = vec![0f32; d.cols()];
+        let mut g = vec![0f32; d.cols()];
+        for _ in 0..60 {
+            crate::math::sparse::grad_into_csr(&w, &d.slice(0, d.rows()), 1e-4, &mut g);
+            crate::math::axpy(-2.0, &g, &mut w);
+        }
+        let correct = (0..d.rows())
+            .filter(|&r| {
+                let (vals, idx) = d.row(r);
+                let z = crate::math::sparse::sparse_dot(&w, vals, idx);
+                (z >= 0.0) == (d.y()[r] > 0.0)
+            })
+            .count() as f64
+            / d.rows() as f64;
+        assert!(correct > 0.75, "accuracy={correct}");
+    }
+
+    #[test]
+    fn sparse_generator_rejects_bad_nnz() {
+        let mut s = sparse_spec();
+        s.nnz_per_row = 0;
+        assert!(generate_csr(&s, 1).is_err());
+        s.nnz_per_row = s.cols + 1;
+        assert!(generate_csr(&s, 1).is_err());
     }
 
     #[test]

@@ -14,17 +14,24 @@
 //!
 //! ## Architecture (three layers, Python never on the training path)
 //!
-//! * **Layer 3 (this crate)** — the data-pipeline coordinator: samplers,
-//!   block-device storage model + access-time simulator, a **zero-copy,
-//!   persistent batch engine** ([`pipeline::prefetch`]: one reader thread
-//!   per experiment; epochs arrive as messages; contiguous CS/SS batches
-//!   flow to the solvers as [`pipeline::BatchPayload::Borrowed`] range
-//!   views with zero feature bytes copied, scattered RS batches pay a real
-//!   gather counted in bytes), the five solvers (SAG/SAGA/SVRG/SAAG-II/
-//!   MBSGD) with constant-step and backtracking line search, metrics that
-//!   decompose training time into access vs compute (plus copied-vs-
-//!   borrowed byte traffic), and the experiment harness that regenerates
-//!   every table and figure of the paper.
+//! * **Layer 3 (this crate)** — the data-pipeline coordinator: a
+//!   **layout-polymorphic data plane** ([`data::Dataset`]: row-major
+//!   [`data::DenseDataset`] for the paper's dense sets, CSR
+//!   [`data::CsrDataset`] for high-dimensional sparse ones, with LIBSVM
+//!   parsed sparse-native in O(nnz)), samplers, block-device storage model
+//!   + access-time simulator (charging sparse fetches by nnz-proportional
+//!   byte extents), a **zero-copy, persistent batch engine**
+//!   ([`pipeline::prefetch`]: one reader thread per experiment; epochs
+//!   arrive as messages; contiguous CS/SS batches flow to the solvers as
+//!   [`pipeline::BatchPayload::Borrowed`] range views — one borrowed slice
+//!   for dense, three for CSR — with zero feature or index bytes copied,
+//!   scattered RS batches pay a real gather counted in bytes), the five
+//!   solvers (SAG/SAGA/SVRG/SAAG-II/MBSGD) stepping through one
+//!   [`data::BatchView`] seam (with lazy l2 for sparse MBSGD), constant-
+//!   step and backtracking line search, metrics that decompose training
+//!   time into access vs compute (plus copied-vs-borrowed byte traffic),
+//!   and the experiment harness that regenerates every table and figure of
+//!   the paper.
 //! * **Layer 2** — JAX model (`python/compile/model.py`): mini-batch
 //!   gradient/objective and fused solver update steps, AOT-lowered once per
 //!   (batch, features) shape to HLO text under `artifacts/`.
@@ -71,7 +78,9 @@ pub use error::{Error, Result};
 pub mod prelude {
     pub use crate::backend::{ComputeBackend, NativeBackend};
     pub use crate::config::{BackendKind, ExperimentConfig, StepKind, StorageConfig};
+    pub use crate::data::csr::CsrDataset;
     pub use crate::data::dense::DenseDataset;
+    pub use crate::data::Dataset;
     pub use crate::error::{Error, Result};
     pub use crate::sampling::SamplingKind;
     pub use crate::solvers::SolverKind;

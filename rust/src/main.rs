@@ -137,7 +137,8 @@ fn cmd_generate_data(args: &[String]) -> Result<()> {
     };
     for name in names {
         let ds = registry::generate(&name, seed)?;
-        let path = std::path::Path::new(&out_dir).join(format!("{name}.sxb"));
+        let ext = if ds.is_csr() { "sxc" } else { "sxb" };
+        let path = std::path::Path::new(&out_dir).join(format!("{name}.{ext}"));
         ds.save(&path)?;
         println!(
             "wrote {} ({} rows x {} cols, {:.1} MiB)",
@@ -384,7 +385,7 @@ fn cmd_estimate_optimum(args: &[String]) -> Result<()> {
     let seed = f.get_u64("seed", 42)?;
     let ds = registry::resolve(&dataset, &data_dir, seed)?;
     let mut be = samplex::backend::NativeBackend::new();
-    let c = registry::profile(&dataset).map(|p| p.reg_c).unwrap_or(1e-4);
+    let c = registry::reg_c_for(&dataset).unwrap_or(1e-4);
     let p_star = samplex::train::estimate_optimum(&mut be, &ds, c, iters)?;
     println!("{dataset}: p* ≈ {p_star:.12} (C={c}, {iters} acc-GD iters)");
     Ok(())
@@ -398,6 +399,18 @@ fn cmd_info(args: &[String]) -> Result<()> {
         println!(
             "  {:<14} {:>8} x {:<4}  (paper: {:>9} x {:<5}) C={}",
             p.spec.name, p.spec.rows, p.spec.cols, p.paper_rows, p.paper_cols, p.reg_c
+        );
+    }
+    println!("\nsparse datasets (CSR; density = mean nnz/row / cols):");
+    for p in registry::sparse_profiles() {
+        println!(
+            "  {:<14} {:>8} x {:<8} nnz/row~{:<5} ({:.4}% dense) C={}",
+            p.spec.name,
+            p.spec.rows,
+            p.spec.cols,
+            p.spec.nnz_per_row,
+            100.0 * p.spec.density(),
+            p.reg_c
         );
     }
     println!("\ndevice profiles:");

@@ -11,6 +11,8 @@
 
 pub mod dense;
 pub mod logistic;
+pub mod sparse;
 
 pub use dense::{axpy, dot, nrm2_sq, scal};
 pub use logistic::{grad_into, loss_sum, objective_batch, objective_full, sigmoid};
+pub use sparse::{grad_into_csr, loss_sum_csr, objective_batch_csr, sparse_dot};

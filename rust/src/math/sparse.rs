@@ -1,0 +1,279 @@
+//! Sparse (CSR) logistic-loss kernels — per-row work proportional to the
+//! row's non-zero count, never to the feature dimension.
+//!
+//! Mirrors `logistic.rs` for the CSR layout:
+//!
+//! * the forward matvec reads `w` only at the stored column indices;
+//! * the rank-1 back-accumulation scatters only into the active columns;
+//! * the l2 term is the *only* dense-in-`n` part of the gradient. The
+//!   eager kernels initialize `out = c*w` with one vectorized pass (the
+//!   variance-reduced solvers do O(n) state algebra per step anyway, so
+//!   this adds nothing asymptotically); MBSGD — the paper's Theorem-1
+//!   solver, whose step would otherwise be O(nnz) — avoids even that via
+//!   [`mbsgd_lazy_step_csr`], which folds the regularizer into a scalar
+//!   weight scale (`w = scale * v`) so a mini-batch step touches only the
+//!   batch's active coordinates.
+
+use crate::data::batch::CsrView;
+use crate::math::logistic::{log1p_exp, sigmoid};
+
+/// Sparse dot `Σ_k vals[k] * w[idx[k]]` with four independent accumulator
+/// chains (the gather loads dominate, but breaking the add chain still buys
+/// ~2x on long rows — same rationale as `dense::dot_f32`).
+#[inline]
+pub fn sparse_dot(w: &[f32], vals: &[f32], idx: &[u32]) -> f32 {
+    debug_assert_eq!(vals.len(), idx.len());
+    let mut acc = [0f32; 4];
+    let mut vc = vals.chunks_exact(4);
+    let mut ic = idx.chunks_exact(4);
+    for (vs, is) in (&mut vc).zip(&mut ic) {
+        for k in 0..4 {
+            acc[k] += vs[k] * w[is[k] as usize];
+        }
+    }
+    let mut tail = 0f32;
+    for (v, i) in vc.remainder().iter().zip(ic.remainder()) {
+        tail += v * w[*i as usize];
+    }
+    (acc[0] + acc[1]) + (acc[2] + acc[3]) + tail
+}
+
+/// Mini-batch gradient of eq.(3) into `out` (same contract as the dense
+/// [`crate::math::grad_into`]):
+/// `out = (1/rows) * X^T( sigmoid(-y.*Xw) .* (-y) ) + c*w`.
+///
+/// Work: one vectorized `c*w` initialization (O(n)) plus O(nnz) for the
+/// forward and backward passes.
+pub fn grad_into_csr(w: &[f32], batch: &CsrView<'_>, c: f32, out: &mut [f32]) {
+    let rows = batch.rows();
+    debug_assert_eq!(w.len(), batch.cols);
+    debug_assert_eq!(out.len(), batch.cols);
+    debug_assert!(rows > 0);
+
+    for (o, wi) in out.iter_mut().zip(w) {
+        *o = c * *wi;
+    }
+    let scale = 1.0 / rows as f32;
+    for r in 0..rows {
+        let (vals, idx) = batch.row(r);
+        let yi = batch.y[r];
+        let z = sparse_dot(w, vals, idx);
+        let coeff = -yi * sigmoid(-yi * z) * scale;
+        for (v, i) in vals.iter().zip(idx) {
+            out[*i as usize] += coeff * *v;
+        }
+    }
+}
+
+/// Logistic loss sum `Σ_i log(1 + exp(-y_i x_i.w))` over a CSR batch (f64).
+pub fn loss_sum_csr(w: &[f32], batch: &CsrView<'_>) -> f64 {
+    let mut acc = 0f64;
+    for r in 0..batch.rows() {
+        let (vals, idx) = batch.row(r);
+        let z = sparse_dot(w, vals, idx);
+        acc += log1p_exp((-batch.y[r] * z) as f64);
+    }
+    acc
+}
+
+/// Mini-batch objective of eq.(3): mean loss + (C/2)||w||².
+pub fn objective_batch_csr(w: &[f32], batch: &CsrView<'_>, c: f32) -> f64 {
+    loss_sum_csr(w, batch) / batch.rows() as f64
+        + 0.5 * c as f64 * crate::math::dense::nrm2_sq(w)
+}
+
+/// One MBSGD step on a CSR batch with **lazy l2** over the scaled iterate
+/// `w = scale * v`:
+///
+/// ```text
+/// w' = w − lr (∇data(w) + c·w) = (1 − lr·c)·w − lr·∇data(w)
+///   ⇒ scale' = (1 − lr·c)·scale ;  v[k] -= (lr/scale')·g_k   (active k only)
+/// ```
+///
+/// Touches O(batch nnz) coordinates — the `c*w` shrink costs one scalar
+/// multiply instead of a dense O(n) scan. `coeffs` is caller-owned scratch
+/// (per-row residual weights, resized to the batch); returns `scale'`.
+///
+/// Caller contract: `1 − lr·c > 0` (holds for every step rule in this crate:
+/// `lr ≤ 1/L ≤ 1/c`) and `scale` not yet underflowed — the solver
+/// re-materializes `v` when the scale leaves `[1e-3, ∞)`.
+pub fn mbsgd_lazy_step_csr(
+    v: &mut [f32],
+    scale: f32,
+    batch: &CsrView<'_>,
+    c: f32,
+    lr: f32,
+    coeffs: &mut Vec<f32>,
+) -> f32 {
+    let rows = batch.rows();
+    debug_assert!(rows > 0);
+    let inv_rows = 1.0 / rows as f32;
+    // forward pass at the *pre-step* iterate for the whole batch
+    coeffs.clear();
+    coeffs.reserve(rows);
+    for r in 0..rows {
+        let (vals, idx) = batch.row(r);
+        let yi = batch.y[r];
+        let z = scale * sparse_dot(v, vals, idx);
+        coeffs.push(-yi * sigmoid(-yi * z) * inv_rows);
+    }
+    let new_scale = scale * (1.0 - lr * c);
+    debug_assert!(new_scale > 0.0, "caller must re-materialize before 1-lr*c <= 0");
+    let factor = lr / new_scale;
+    for r in 0..rows {
+        let (vals, idx) = batch.row(r);
+        let cr = coeffs[r];
+        for (val, i) in vals.iter().zip(idx) {
+            v[*i as usize] -= factor * cr * *val;
+        }
+    }
+    new_scale
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::csr::CsrDataset;
+    use crate::rng::Rng;
+
+    /// Random CSR batch with ~`density` fill, plus its dense image.
+    fn random_pair(
+        rows: usize,
+        cols: usize,
+        density: f64,
+        seed: u64,
+    ) -> (CsrDataset, Vec<f32>, Vec<f32>) {
+        let mut rng = Rng::seed_from(seed);
+        let mut values = Vec::new();
+        let mut col_idx = Vec::new();
+        let mut row_ptr = vec![0u64];
+        let mut dense = vec![0f32; rows * cols];
+        let mut y = Vec::with_capacity(rows);
+        for r in 0..rows {
+            for j in 0..cols {
+                if rng.uniform() < density {
+                    let v = rng.normal() as f32;
+                    values.push(v);
+                    col_idx.push(j as u32);
+                    dense[r * cols + j] = v;
+                }
+            }
+            row_ptr.push(values.len() as u64);
+            y.push(if rng.uniform() < 0.5 { 1.0 } else { -1.0 });
+        }
+        let csr = CsrDataset::new("t", cols, values, col_idx, row_ptr, y.clone()).unwrap();
+        (csr, dense, y)
+    }
+
+    #[test]
+    fn sparse_dot_matches_dense() {
+        let mut rng = Rng::seed_from(3);
+        let w: Vec<f32> = (0..50).map(|_| rng.normal() as f32).collect();
+        let vals: Vec<f32> = (0..13).map(|_| rng.normal() as f32).collect();
+        let idx: Vec<u32> = (0..13).map(|k| (k * 3 + 1) as u32).collect();
+        let want: f32 = vals.iter().zip(&idx).map(|(v, &i)| v * w[i as usize]).sum();
+        assert!((sparse_dot(&w, &vals, &idx) - want).abs() < 1e-5);
+        assert_eq!(sparse_dot(&w, &[], &[]), 0.0);
+    }
+
+    #[test]
+    fn grad_matches_dense_kernel() {
+        let (csr, dense, y) = random_pair(37, 29, 0.2, 7);
+        let mut rng = Rng::seed_from(8);
+        let w: Vec<f32> = (0..29).map(|_| rng.normal() as f32 * 0.4).collect();
+        for c in [0.0f32, 0.3] {
+            let mut gs = vec![0f32; 29];
+            grad_into_csr(&w, &csr.slice(0, 37), c, &mut gs);
+            let mut gd = vec![0f32; 29];
+            crate::math::grad_into(&w, &dense, &y, 29, c, &mut gd);
+            for k in 0..29 {
+                assert!((gs[k] - gd[k]).abs() < 1e-5, "c={c} k={k}: {} vs {}", gs[k], gd[k]);
+            }
+        }
+    }
+
+    #[test]
+    fn loss_and_objective_match_dense() {
+        let (csr, dense, y) = random_pair(25, 17, 0.3, 11);
+        let mut rng = Rng::seed_from(12);
+        let w: Vec<f32> = (0..17).map(|_| rng.normal() as f32 * 0.5).collect();
+        let view = csr.slice(0, 25);
+        let ls = loss_sum_csr(&w, &view);
+        let ld = crate::math::loss_sum(&w, &dense, &y, 17);
+        assert!((ls - ld).abs() < 1e-4 * (1.0 + ld.abs()), "{ls} vs {ld}");
+        let os = objective_batch_csr(&w, &view, 0.2);
+        let od = crate::math::objective_batch(&w, &dense, &y, 17, 0.2);
+        assert!((os - od).abs() < 1e-4 * (1.0 + od.abs()));
+    }
+
+    #[test]
+    fn empty_rows_contribute_log2_loss_and_zero_grad() {
+        // a row with no features has z = 0: loss log(2), gradient only reg
+        let csr = CsrDataset::new(
+            "t",
+            4,
+            vec![],
+            vec![],
+            vec![0, 0, 0],
+            vec![1.0, -1.0],
+        )
+        .unwrap();
+        let w = vec![0.5f32; 4];
+        let view = csr.slice(0, 2);
+        assert!((loss_sum_csr(&w, &view) - 2.0 * 2f64.ln()).abs() < 1e-9);
+        let mut g = vec![0f32; 4];
+        grad_into_csr(&w, &view, 0.7, &mut g);
+        for k in 0..4 {
+            assert!((g[k] - 0.35).abs() < 1e-7);
+        }
+    }
+
+    #[test]
+    fn lazy_step_matches_eager_mbsgd_update() {
+        let (csr, dense, y) = random_pair(30, 23, 0.25, 21);
+        let c = 0.05f32;
+        let lr = 0.2f32;
+        // eager reference on the dense image
+        let mut w_ref = vec![0.1f32; 23];
+        let mut g = vec![0f32; 23];
+        crate::math::grad_into(&w_ref, &dense, &y, 23, c, &mut g);
+        for k in 0..23 {
+            w_ref[k] -= lr * g[k];
+        }
+        // lazy scaled step on the CSR view
+        let mut v = vec![0.1f32; 23];
+        let mut coeffs = Vec::new();
+        let scale = mbsgd_lazy_step_csr(&mut v, 1.0, &csr.slice(0, 30), c, lr, &mut coeffs);
+        assert!((scale - (1.0 - lr * c)).abs() < 1e-7);
+        for k in 0..23 {
+            let w_lazy = scale * v[k];
+            assert!(
+                (w_lazy - w_ref[k]).abs() < 1e-5,
+                "k={k}: lazy {w_lazy} vs eager {}",
+                w_ref[k]
+            );
+        }
+    }
+
+    #[test]
+    fn lazy_step_touches_only_active_coordinates() {
+        // batch covering columns {1, 3} of 6: v[0,2,4,5] must not move
+        let csr = CsrDataset::new(
+            "t",
+            6,
+            vec![2.0, -1.0],
+            vec![1, 3],
+            vec![0, 1, 2],
+            vec![1.0, -1.0],
+        )
+        .unwrap();
+        let mut v = vec![0.5f32; 6];
+        let mut coeffs = Vec::new();
+        mbsgd_lazy_step_csr(&mut v, 1.0, &csr.slice(0, 2), 0.1, 0.3, &mut coeffs);
+        for k in [0usize, 2, 4, 5] {
+            assert_eq!(v[k], 0.5, "inactive coordinate {k} must stay untouched");
+        }
+        assert_ne!(v[1], 0.5);
+        assert_ne!(v[3], 0.5);
+    }
+}

@@ -11,11 +11,15 @@
 //! The payload is where the paper's claim becomes real on the host path:
 //!
 //! * contiguous selections (CS/SS) ship as [`BatchPayload::Borrowed`] — a
-//!   `(Arc<DenseDataset>, start, end)` range view. **Zero feature-matrix
-//!   bytes are copied**; the solver reads the dataset's own memory.
+//!   `(Arc<Dataset>, start, end)` range view into either layout. **Zero
+//!   feature (or index) bytes are copied**: a dense range is one borrowed
+//!   slice, a CSR range is three (`values`/`col_idx`/`row_ptr`).
 //! * scattered selections (RS) must be gathered row-by-row into owned
 //!   buffers ([`BatchPayload::Owned`]) — real memory traffic on every
-//!   iteration, reported through the `bytes_copied` counter.
+//!   iteration, reported through the `bytes_copied` counter. For CSR the
+//!   gather copies **index bytes as well as values** (8 B per non-zero),
+//!   and the byte counters account both, so copy-fraction stays honest
+//!   across layouts.
 //!
 //! Because the reader owns the [`AccessSimulator`] for the whole experiment,
 //! its page-cache state persists across epochs for free and the driver never
@@ -26,8 +30,8 @@ use std::sync::mpsc::{sync_channel, Receiver, Sender, SyncSender, TrySendError};
 use std::sync::Arc;
 use std::thread::JoinHandle;
 
-use crate::data::batch::{gather_owned, BatchView, RowSelection};
-use crate::data::dense::DenseDataset;
+use crate::data::batch::{gather_owned, BatchView, OwnedBatch, RowSelection};
+use crate::data::Dataset;
 use crate::storage::simulator::{AccessCost, AccessSimulator};
 
 thread_local! {
@@ -43,24 +47,20 @@ pub fn reader_spawns_on_this_thread() -> u64 {
 
 /// The data of one mini-batch: either a zero-copy range view into the shared
 /// dataset (contiguous CS/SS selections) or an owned gather (scattered RS).
+/// Layout-polymorphic on both arms.
 #[derive(Debug, Clone)]
 pub enum BatchPayload {
     /// Rows `[start, end)` of `ds`, borrowed in place — zero bytes copied.
     Borrowed {
         /// Shared dataset the range points into.
-        ds: Arc<DenseDataset>,
+        ds: Arc<Dataset>,
         /// First row (inclusive).
         start: usize,
         /// Last row (exclusive).
         end: usize,
     },
     /// Row-by-row gather into owned buffers (scattered selections).
-    Owned {
-        /// Row-major features.
-        x: Vec<f32>,
-        /// Labels.
-        y: Vec<f32>,
-    },
+    Owned(OwnedBatch),
 }
 
 impl BatchPayload {
@@ -68,11 +68,8 @@ impl BatchPayload {
     /// payloads the view aliases the dataset's own storage.
     pub fn view(&self, cols: usize) -> BatchView<'_> {
         match self {
-            BatchPayload::Borrowed { ds, start, end } => {
-                let (x, y) = ds.rows_slice(*start, *end);
-                BatchView { x, y, rows: end - start, cols }
-            }
-            BatchPayload::Owned { x, y } => BatchView { x, y, rows: y.len(), cols },
+            BatchPayload::Borrowed { ds, start, end } => ds.slice_view(*start, *end),
+            BatchPayload::Owned(ob) => ob.view(cols),
         }
     }
 
@@ -115,9 +112,10 @@ pub struct PrefetchStats {
     pub batches: usize,
     /// Times the reader blocked on a full channel (backpressure events).
     pub stalls: u64,
-    /// Feature-matrix bytes physically copied into owned gathers (RS).
+    /// Feature (+ CSR index) bytes physically copied into owned gathers
+    /// (RS).
     pub bytes_copied: u64,
-    /// Feature-matrix bytes served as zero-copy borrows (CS/SS).
+    /// Feature (+ CSR index) bytes served as zero-copy borrows (CS/SS).
     pub bytes_borrowed: u64,
 }
 
@@ -173,7 +171,7 @@ impl Prefetcher {
     /// (≥1). The simulator is moved in for the experiment's lifetime — its
     /// page-cache state persists across epochs — and is returned by
     /// [`finish`](Prefetcher::finish).
-    pub fn spawn(ds: Arc<DenseDataset>, sim: AccessSimulator, depth: usize) -> Self {
+    pub fn spawn(ds: Arc<Dataset>, sim: AccessSimulator, depth: usize) -> Self {
         let depth = depth.max(1);
         let (cmd_tx, cmd_rx) = std::sync::mpsc::channel::<ReaderMsg>();
         let (tx, rx) = sync_channel::<BatchMsg>(depth);
@@ -255,15 +253,13 @@ impl Prefetcher {
 
 /// Body of the persistent reader thread.
 fn reader_loop(
-    ds: Arc<DenseDataset>,
+    ds: Arc<Dataset>,
     mut sim: AccessSimulator,
     cmd_rx: Receiver<ReaderMsg>,
     tx: SyncSender<BatchMsg>,
     live_stalls: Arc<AtomicU64>,
 ) -> (AccessSimulator, PrefetchStats) {
     let mut totals = PrefetchStats::default();
-    let cols = ds.cols();
-    let row_bytes = cols as u64 * 4;
     'serve: while let Ok(ReaderMsg::Epoch(selections)) = cmd_rx.recv() {
         let mut es = PrefetchStats::default();
         for (j, sel) in selections.into_iter().enumerate() {
@@ -272,13 +268,13 @@ fn reader_loop(
             let rows = sel.len();
             let payload = match &sel {
                 RowSelection::Contiguous { start, end } => {
-                    es.bytes_borrowed += (end - start) as u64 * row_bytes;
+                    es.bytes_borrowed += ds.payload_bytes(&sel);
                     BatchPayload::Borrowed { ds: Arc::clone(&ds), start: *start, end: *end }
                 }
                 RowSelection::Scattered(_) => {
-                    let (x, y) = gather_owned(&ds, &sel);
-                    es.bytes_copied += x.len() as u64 * 4;
-                    BatchPayload::Owned { x, y }
+                    let ob = gather_owned(&ds, &sel);
+                    es.bytes_copied += ob.payload_bytes();
+                    BatchPayload::Owned(ob)
                 }
             };
             let assemble_s = t0.elapsed().as_secs_f64();
@@ -317,15 +313,37 @@ fn reader_loop(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::data::csr::CsrDataset;
+    use crate::data::dense::DenseDataset;
     use crate::storage::profile::DeviceProfile;
 
-    fn ds(rows: usize, cols: usize) -> Arc<DenseDataset> {
+    fn ds(rows: usize, cols: usize) -> Arc<Dataset> {
         let x: Vec<f32> = (0..rows * cols).map(|v| v as f32).collect();
         let y: Vec<f32> = (0..rows).map(|r| if r % 2 == 0 { 1.0 } else { -1.0 }).collect();
-        Arc::new(DenseDataset::new("t", cols, x, y).unwrap())
+        Arc::new(DenseDataset::new("t", cols, x, y).unwrap().into())
     }
 
-    fn sim(ds: &DenseDataset) -> AccessSimulator {
+    fn csr_ds(rows: usize, cols: usize, nnz_per_row: usize) -> Arc<Dataset> {
+        let mut values = Vec::new();
+        let mut col_idx = Vec::new();
+        let mut row_ptr = vec![0u64];
+        for r in 0..rows {
+            let mut cols_r: Vec<u32> = (0..nnz_per_row)
+                .map(|k| ((r * 13 + k * 17) % cols) as u32)
+                .collect();
+            cols_r.sort_unstable();
+            cols_r.dedup();
+            for &j in &cols_r {
+                values.push((r + j as usize) as f32);
+                col_idx.push(j);
+            }
+            row_ptr.push(values.len() as u64);
+        }
+        let y = (0..rows).map(|r| if r % 2 == 0 { 1.0 } else { -1.0 }).collect();
+        Arc::new(CsrDataset::new("t", cols, values, col_idx, row_ptr, y).unwrap().into())
+    }
+
+    fn sim(ds: &Dataset) -> AccessSimulator {
         AccessSimulator::for_dataset(DeviceProfile::hdd(), ds, 1 << 20)
     }
 
@@ -341,6 +359,7 @@ mod tests {
     #[test]
     fn delivers_all_batches_in_order_zero_copy() {
         let d = ds(40, 3);
+        let dense = d.as_dense().unwrap();
         let mut pf = Prefetcher::spawn(d.clone(), sim(&d), 2);
         pf.start_epoch(contiguous_epoch(4, 10));
         let mut seen = 0;
@@ -348,12 +367,13 @@ mod tests {
             assert_eq!(b.j, seen);
             assert_eq!(b.rows, 10);
             assert!(b.payload.is_borrowed(), "contiguous batches must borrow");
-            let v = b.view(3);
-            let (want_x, want_y) = d.rows_slice(b.j * 10, (b.j + 1) * 10);
+            let view = b.view(3);
+            let v = view.as_dense().unwrap();
+            let (want_x, want_y) = dense.rows_slice(b.j * 10, (b.j + 1) * 10);
             assert_eq!(v.x, want_x);
             assert_eq!(v.y, want_y);
             // zero-copy pinned at the pointer level
-            assert_eq!(v.x.as_ptr(), d.row(b.j * 10).as_ptr(), "must alias the dataset");
+            assert_eq!(v.x.as_ptr(), dense.row(b.j * 10).as_ptr(), "must alias the dataset");
             seen += 1;
         }
         assert_eq!(seen, 4);
@@ -367,17 +387,63 @@ mod tests {
     }
 
     #[test]
+    fn csr_contiguous_batches_borrow_all_three_slices() {
+        let d = csr_ds(60, 500, 6);
+        let c = d.as_csr().unwrap();
+        let (vals, idx, ptr) = c.arrays();
+        let mut pf = Prefetcher::spawn(d.clone(), sim(&d), 2);
+        pf.start_epoch(contiguous_epoch(6, 10));
+        let mut seen = 0;
+        while let Some(b) = pf.next_batch() {
+            assert!(b.payload.is_borrowed(), "contiguous CSR batches must borrow");
+            let view = b.view(500);
+            let v = view.as_csr().unwrap();
+            let start = b.j * 10;
+            let lo = ptr[start] as usize;
+            // zero-copy pinned at the pointer level for all three arrays
+            assert_eq!(v.values.as_ptr(), vals[lo..].as_ptr(), "values must alias");
+            assert_eq!(v.col_idx.as_ptr(), idx[lo..].as_ptr(), "indices must alias");
+            assert_eq!(v.row_ptr.as_ptr(), ptr[start..].as_ptr(), "row_ptr must alias");
+            seen += 1;
+        }
+        assert_eq!(seen, 6);
+        let es = pf.last_epoch_stats();
+        assert_eq!(es.bytes_copied, 0, "contiguous CSR epoch must copy nothing");
+        assert_eq!(es.bytes_borrowed, c.nnz() as u64 * 8, "value + index bytes");
+        pf.finish();
+    }
+
+    #[test]
     fn scattered_selection_gathers_owned() {
         let d = ds(20, 2);
         let mut pf = Prefetcher::spawn(d.clone(), sim(&d), 1);
         pf.start_epoch(vec![RowSelection::Scattered(vec![5, 1, 9])]);
         let b = pf.next_batch().unwrap();
         assert!(!b.payload.is_borrowed());
-        let v = b.view(2);
-        assert_eq!(v.x, &[10.0, 11.0, 2.0, 3.0, 18.0, 19.0]);
+        let view = b.view(2);
+        assert_eq!(view.as_dense().unwrap().x, &[10.0, 11.0, 2.0, 3.0, 18.0, 19.0]);
         assert!(pf.next_batch().is_none());
         let es = pf.last_epoch_stats();
         assert_eq!(es.bytes_copied, 3 * 2 * 4);
+        assert_eq!(es.bytes_borrowed, 0);
+        pf.finish();
+    }
+
+    #[test]
+    fn csr_scattered_gather_counts_value_and_index_bytes() {
+        let d = csr_ds(30, 400, 5);
+        let c = d.as_csr().unwrap();
+        let sel = vec![29u32, 3, 11];
+        let want_nnz: usize = sel.iter().map(|&r| c.row_nnz(r as usize)).sum();
+        let mut pf = Prefetcher::spawn(d.clone(), sim(&d), 1);
+        pf.start_epoch(vec![RowSelection::Scattered(sel)]);
+        let b = pf.next_batch().unwrap();
+        assert!(!b.payload.is_borrowed());
+        let view = b.view(400);
+        assert_eq!(view.as_csr().unwrap().nnz(), want_nnz);
+        while pf.next_batch().is_some() {}
+        let es = pf.last_epoch_stats();
+        assert_eq!(es.bytes_copied, want_nnz as u64 * 8, "8 B per gathered non-zero");
         assert_eq!(es.bytes_borrowed, 0);
         pf.finish();
     }

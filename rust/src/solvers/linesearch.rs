@@ -101,7 +101,7 @@ mod tests {
     #[test]
     fn accepted_step_satisfies_armijo() {
         let (x, y) = toy(64, 5);
-        let view = BatchView { x: &x, y: &y, rows: 64, cols: 5 };
+        let view = BatchView::dense(&x, &y, 5);
         let mut be = NativeBackend::new();
         let w = vec![0.3f32; 5];
         let params = LineSearchParams::default();
@@ -122,7 +122,7 @@ mod tests {
         // steep, badly-scaled problem: alpha0=64 must backtrack
         let (x, y) = toy(32, 4);
         let x: Vec<f32> = x.iter().map(|v| v * 10.0).collect();
-        let view = BatchView { x: &x, y: &y, rows: 32, cols: 4 };
+        let view = BatchView::dense(&x, &y, 4);
         let mut be = NativeBackend::new();
         let w = vec![0.5f32; 4];
         let params = LineSearchParams { alpha0: 64.0, ..Default::default() };
@@ -137,7 +137,7 @@ mod tests {
         // perfectly symmetric batch at w=0 with C=0: gradient ~ 0
         let x = vec![1.0f32, -1.0, -1.0, 1.0]; // rows (1,-1) and (-1,1)
         let y = vec![1.0f32, 1.0];
-        let view = BatchView { x: &x, y: &y, rows: 2, cols: 2 };
+        let view = BatchView::dense(&x, &y, 2);
         let mut be = NativeBackend::new();
         let params = LineSearchParams::default();
         let mut scratch = LineSearchScratch::default();

@@ -95,8 +95,16 @@ pub trait Solver: Send {
     /// Paper label (SAG/SAGA/...).
     fn name(&self) -> &'static str;
 
-    /// Current iterate.
+    /// Current iterate. Only guaranteed current after [`Solver::sync_w`];
+    /// solvers with a lazily-scaled internal representation (MBSGD's lazy
+    /// l2 on sparse batches) fold the scale in there.
     fn w(&self) -> &[f32];
+
+    /// Fold any lazily-scaled internal state into the plain iterate so
+    /// [`Solver::w`] is current. The driver calls this before every read of
+    /// `w()` (line search, objective recording, SVRG's full-gradient
+    /// sweep). Default: no-op.
+    fn sync_w(&mut self) {}
 
     /// Set the l2 regularization coefficient `C` used in gradients.
     fn set_reg(&mut self, c: f32);

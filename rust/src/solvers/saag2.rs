@@ -110,7 +110,7 @@ mod tests {
     #[test]
     fn first_batch_of_epoch_is_mbsgd() {
         let (x, y) = toy(12, 3, 1);
-        let view = BatchView { x: &x, y: &y, rows: 12, cols: 3 };
+        let view = BatchView::dense(&x, &y, 3);
         let mut be = NativeBackend::new();
         let mut s = Saag2::new(3, 4);
         s.set_reg(0.1);
@@ -126,7 +126,7 @@ mod tests {
     #[test]
     fn accumulator_resets_each_epoch() {
         let (x, y) = toy(12, 3, 2);
-        let view = BatchView { x: &x, y: &y, rows: 12, cols: 3 };
+        let view = BatchView::dense(&x, &y, 3);
         let mut be = NativeBackend::new();
         let mut s = Saag2::new(3, 2);
         s.step(&mut be, &view, 0, 0.1).unwrap();
@@ -138,7 +138,7 @@ mod tests {
     #[test]
     fn direction_formula_matches_manual() {
         let (x, y) = toy(12, 2, 3);
-        let view = BatchView { x: &x, y: &y, rows: 12, cols: 2 };
+        let view = BatchView::dense(&x, &y, 2);
         let mut be = NativeBackend::new();
         let mut s = Saag2::new(2, 4);
         s.step(&mut be, &view, 0, 0.1).unwrap();
@@ -165,7 +165,7 @@ mod tests {
             s.epoch_start(e);
             for j in 0..4 {
                 let (bx, by) = ds.rows_slice(j * 20, (j + 1) * 20);
-                let view = BatchView { x: bx, y: by, rows: 20, cols: 4 };
+                let view = BatchView::dense(bx, by, 4);
                 s.step(&mut be, &view, j, 0.15).unwrap();
             }
         }

@@ -110,7 +110,7 @@ mod tests {
     #[test]
     fn memory_update_matches_formula() {
         let (x, y) = toy(8, 3, 1);
-        let view = BatchView { x: &x, y: &y, rows: 8, cols: 3 };
+        let view = BatchView::dense(&x, &y, 3);
         let mut be = NativeBackend::new();
         let mut s = Sag::new(3, 4);
         s.set_reg(0.05);
@@ -136,7 +136,7 @@ mod tests {
         for _epoch in 0..60 {
             for j in 0..4 {
                 let (bx, by) = ds.rows_slice(j * 20, (j + 1) * 20);
-                let view = BatchView { x: bx, y: by, rows: 20, cols: 4 };
+                let view = BatchView::dense(bx, by, 4);
                 s.step(&mut be, &view, j, 0.3).unwrap();
             }
         }

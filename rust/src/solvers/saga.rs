@@ -110,7 +110,7 @@ mod tests {
     fn first_step_from_zero_memory_is_plain_sgd() {
         // y_j = avg = 0 ⇒ w' = w − lr·g, identical to MBSGD
         let (x, y) = toy(10, 3, 4);
-        let view = BatchView { x: &x, y: &y, rows: 10, cols: 3 };
+        let view = BatchView::dense(&x, &y, 3);
         let mut be = NativeBackend::new();
         let mut s = Saga::new(3, 5);
         s.set_reg(0.2);
@@ -129,7 +129,7 @@ mod tests {
         // second visit: w must move by lr*(g - y_j + avg) computed at the
         // *current* w before memory refresh
         let (x, y) = toy(10, 2, 5);
-        let view = BatchView { x: &x, y: &y, rows: 10, cols: 2 };
+        let view = BatchView::dense(&x, &y, 2);
         let mut be = NativeBackend::new();
         let mut s = Saga::new(2, 2);
         s.step(&mut be, &view, 0, 0.1).unwrap();
@@ -156,7 +156,7 @@ mod tests {
         for _ in 0..60 {
             for j in 0..4 {
                 let (bx, by) = ds.rows_slice(j * 20, (j + 1) * 20);
-                let view = BatchView { x: bx, y: by, rows: 20, cols: 4 };
+                let view = BatchView::dense(bx, by, 4);
                 s.step(&mut be, &view, j, 0.2).unwrap();
             }
         }

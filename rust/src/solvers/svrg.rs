@@ -124,7 +124,7 @@ mod tests {
     #[test]
     fn step_without_mu_errors() {
         let (x, y) = toy(8, 2, 1);
-        let view = BatchView { x: &x, y: &y, rows: 8, cols: 2 };
+        let view = BatchView::dense(&x, &y, 2);
         let mut be = NativeBackend::new();
         let mut s = Svrg::new(2, 2);
         assert!(s.step(&mut be, &view, 0, 0.1).is_err());
@@ -144,7 +144,7 @@ mod tests {
     fn at_snapshot_step_follows_mu_exactly() {
         // w == w_snap ⇒ correction cancels ⇒ w' = w − lr·mu
         let (x, y) = toy(16, 3, 2);
-        let view = BatchView { x: &x, y: &y, rows: 16, cols: 3 };
+        let view = BatchView::dense(&x, &y, 3);
         let mut be = NativeBackend::new();
         let mut s = Svrg::new(3, 2);
         s.epoch_start(0);
@@ -173,7 +173,7 @@ mod tests {
             }
             for j in 0..4 {
                 let (bx, by) = ds.rows_slice(j * 20, (j + 1) * 20);
-                let view = BatchView { x: bx, y: by, rows: 20, cols: 4 };
+                let view = BatchView::dense(bx, by, 4);
                 s.step(&mut be, &view, j, 0.25).unwrap();
             }
         }

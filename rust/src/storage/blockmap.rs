@@ -1,45 +1,100 @@
-//! Row → block-extent geometry for the `.sxb` layout.
+//! Row → block-extent geometry for the `.sxb` / `.sxc` layouts.
 //!
 //! Data is read block-wise, not content-wise (paper §1): a mini-batch's cost
 //! is determined by *which blocks* its rows live in. The block map converts
 //! a [`RowSelection`] into the ordered set of blocks touched, preserving the
 //! selection's access order so the simulator can detect contiguous runs.
+//!
+//! Two geometries share one type:
+//!
+//! * **uniform** — dense `.sxb`: every row spans `row_bytes = cols * 4`.
+//! * **variable** — sparse `.sxc`: row `r` spans `offsets[r+1] - offsets[r]`
+//!   bytes (8 per stored non-zero). The simulator therefore charges a
+//!   sparse fetch by its **actual nnz-proportional byte extent**, never by
+//!   `rows * cols` — the cost model half of the CSR data plane.
+
+use std::sync::Arc;
 
 use crate::data::batch::RowSelection;
+use crate::data::Dataset;
 
-/// Geometry of a row-major dataset on a blocked device.
-#[derive(Debug, Clone, Copy)]
+/// Geometry of one dataset file on a blocked device.
+#[derive(Debug, Clone)]
 pub struct BlockMap {
-    /// Byte offset of feature row 0 (after header + labels in `.sxb`).
+    /// Byte offset of feature row 0 (after header + labels [+ row_ptr]).
     pub x_base: u64,
-    /// Bytes per feature row (`cols * 4`).
+    /// Bytes per feature row for the uniform layout (`cols * 4`); unused
+    /// when `row_offsets` is present.
     pub row_bytes: u64,
     /// Device block size.
     pub block_bytes: u64,
+    /// Variable-extent layout: byte offset of each row start relative to
+    /// `x_base`, length `rows + 1` (CSR `.sxc`). `None` = uniform layout.
+    row_offsets: Option<Arc<Vec<u64>>>,
 }
 
 impl BlockMap {
+    /// Uniform-stride geometry (dense `.sxb`).
+    pub fn uniform(x_base: u64, row_bytes: u64, block_bytes: u64) -> Self {
+        BlockMap { x_base, row_bytes, block_bytes, row_offsets: None }
+    }
+
+    /// Variable-extent geometry (sparse `.sxc`); `offsets` has `rows + 1`
+    /// entries, relative to `x_base`.
+    pub fn variable(x_base: u64, offsets: Vec<u64>, block_bytes: u64) -> Self {
+        BlockMap { x_base, row_bytes: 0, block_bytes, row_offsets: Some(Arc::new(offsets)) }
+    }
+
     /// Geometry for `ds` on a device with `block_bytes` blocks.
-    pub fn for_dataset(ds: &crate::data::dense::DenseDataset, block_bytes: u64) -> Self {
-        let (lo, hi) = ds.row_extent(0);
-        BlockMap { x_base: lo, row_bytes: hi - lo, block_bytes }
+    pub fn for_dataset(ds: &Dataset, block_bytes: u64) -> Self {
+        match ds {
+            Dataset::Dense(d) => {
+                let (lo, hi) = d.row_extent(0);
+                BlockMap::uniform(lo, hi - lo, block_bytes)
+            }
+            Dataset::Csr(c) => {
+                let (_, _, row_ptr) = c.arrays();
+                let offsets: Vec<u64> =
+                    row_ptr.iter().map(|p| p * crate::data::csr::NNZ_BYTES).collect();
+                BlockMap::variable(c.x_base(), offsets, block_bytes)
+            }
+        }
     }
 
-    /// Inclusive block-id range `[lo, hi]` containing row `r`.
+    /// Absolute byte extent `[lo, hi)` of feature row `r`.
     #[inline]
-    pub fn blocks_for_row(&self, r: usize) -> (u64, u64) {
-        let lo_byte = self.x_base + r as u64 * self.row_bytes;
-        let hi_byte = lo_byte + self.row_bytes - 1;
-        (lo_byte / self.block_bytes, hi_byte / self.block_bytes)
+    fn row_byte_extent(&self, r: usize) -> (u64, u64) {
+        match &self.row_offsets {
+            None => {
+                let lo = self.x_base + r as u64 * self.row_bytes;
+                (lo, lo + self.row_bytes)
+            }
+            Some(off) => (self.x_base + off[r], self.x_base + off[r + 1]),
+        }
     }
 
-    /// Inclusive block range for contiguous rows `[start, end)`.
+    /// Inclusive block-id range `[lo, hi]` containing row `r`; `None` when
+    /// the row occupies no bytes (an empty CSR row costs nothing to fetch).
     #[inline]
-    pub fn blocks_for_range(&self, start: usize, end: usize) -> (u64, u64) {
+    pub fn blocks_for_row(&self, r: usize) -> Option<(u64, u64)> {
+        let (lo, hi) = self.row_byte_extent(r);
+        if lo == hi {
+            return None;
+        }
+        Some((lo / self.block_bytes, (hi - 1) / self.block_bytes))
+    }
+
+    /// Inclusive block range for contiguous rows `[start, end)`; `None` when
+    /// the whole range is empty.
+    #[inline]
+    pub fn blocks_for_range(&self, start: usize, end: usize) -> Option<(u64, u64)> {
         debug_assert!(end > start);
-        let (lo, _) = self.blocks_for_row(start);
-        let (_, hi) = self.blocks_for_row(end - 1);
-        (lo, hi)
+        let (lo, _) = self.row_byte_extent(start);
+        let (_, hi) = self.row_byte_extent(end - 1);
+        if lo == hi {
+            return None;
+        }
+        Some((lo / self.block_bytes, (hi - 1) / self.block_bytes))
     }
 
     /// Ordered, batch-deduplicated list of blocks touched by `sel`.
@@ -49,15 +104,17 @@ impl BlockMap {
     /// second row's bytes are already in the drive's track buffer / page.
     pub fn blocks_for_selection(&self, sel: &RowSelection) -> Vec<u64> {
         match sel {
-            RowSelection::Contiguous { start, end } => {
-                let (lo, hi) = self.blocks_for_range(*start, *end);
-                (lo..=hi).collect()
-            }
+            RowSelection::Contiguous { start, end } => match self.blocks_for_range(*start, *end) {
+                Some((lo, hi)) => (lo..=hi).collect(),
+                None => Vec::new(),
+            },
             RowSelection::Scattered(rows) => {
                 let mut out = Vec::with_capacity(rows.len());
                 let mut seen = std::collections::HashSet::with_capacity(rows.len());
                 for &r in rows {
-                    let (lo, hi) = self.blocks_for_row(r as usize);
+                    let Some((lo, hi)) = self.blocks_for_row(r as usize) else {
+                        continue;
+                    };
                     for b in lo..=hi {
                         if seen.insert(b) {
                             out.push(b);
@@ -95,34 +152,35 @@ impl BlockMap {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::data::csr::CsrDataset;
     use crate::data::dense::DenseDataset;
 
     fn map() -> BlockMap {
         // 64-byte rows, 256-byte blocks -> 4 rows per block, x_base 0 for
         // easy arithmetic
-        BlockMap { x_base: 0, row_bytes: 64, block_bytes: 256 }
+        BlockMap::uniform(0, 64, 256)
     }
 
     #[test]
     fn rows_share_blocks() {
         let m = map();
-        assert_eq!(m.blocks_for_row(0), (0, 0));
-        assert_eq!(m.blocks_for_row(3), (0, 0));
-        assert_eq!(m.blocks_for_row(4), (1, 1));
+        assert_eq!(m.blocks_for_row(0), Some((0, 0)));
+        assert_eq!(m.blocks_for_row(3), Some((0, 0)));
+        assert_eq!(m.blocks_for_row(4), Some((1, 1)));
     }
 
     #[test]
     fn row_spanning_two_blocks() {
-        let m = BlockMap { x_base: 0, row_bytes: 100, block_bytes: 256 };
+        let m = BlockMap::uniform(0, 100, 256);
         // row 2: bytes [200, 300) spans blocks 0 and 1
-        assert_eq!(m.blocks_for_row(2), (0, 1));
+        assert_eq!(m.blocks_for_row(2), Some((0, 1)));
     }
 
     #[test]
     fn x_base_offset_respected() {
-        let m = BlockMap { x_base: 250, row_bytes: 64, block_bytes: 256 };
+        let m = BlockMap::uniform(250, 64, 256);
         // row 0: bytes [250, 314) spans blocks 0..=1
-        assert_eq!(m.blocks_for_row(0), (0, 1));
+        assert_eq!(m.blocks_for_row(0), Some((0, 1)));
     }
 
     #[test]
@@ -162,11 +220,65 @@ mod tests {
 
     #[test]
     fn for_dataset_uses_sxb_geometry() {
-        let d = DenseDataset::new("t", 2, vec![0.0; 20], vec![1.0; 10].iter()
-            .enumerate().map(|(i, _)| if i % 2 == 0 { 1.0 } else { -1.0 }).collect())
+        let d = DenseDataset::new("t", 2, vec![0.0; 20], (0..10)
+            .map(|i| if i % 2 == 0 { 1.0 } else { -1.0 }).collect())
             .unwrap();
-        let m = BlockMap::for_dataset(&d, 4096);
+        let m = BlockMap::for_dataset(&d.into(), 4096);
         assert_eq!(m.row_bytes, 8);
         assert_eq!(m.x_base, crate::data::dense::HEADER_BYTES + 40);
+    }
+
+    /// 4 rows, variable extents 16 / 0 / 8 / 40 bytes.
+    fn csr_map(block_bytes: u64) -> BlockMap {
+        BlockMap::variable(0, vec![0, 16, 16, 24, 64], block_bytes)
+    }
+
+    #[test]
+    fn variable_extents_follow_offsets() {
+        let m = csr_map(16);
+        assert_eq!(m.blocks_for_row(0), Some((0, 0)));
+        assert_eq!(m.blocks_for_row(1), None, "empty row touches no blocks");
+        assert_eq!(m.blocks_for_row(2), Some((1, 1)));
+        assert_eq!(m.blocks_for_row(3), Some((1, 3)));
+    }
+
+    #[test]
+    fn variable_contiguous_range_skips_nothing() {
+        let m = csr_map(16);
+        assert_eq!(
+            m.blocks_for_selection(&RowSelection::Contiguous { start: 0, end: 4 }),
+            vec![0, 1, 2, 3]
+        );
+        // an all-empty range is free
+        assert!(m
+            .blocks_for_selection(&RowSelection::Contiguous { start: 1, end: 2 })
+            .is_empty());
+    }
+
+    #[test]
+    fn variable_scattered_skips_empty_rows() {
+        let m = csr_map(16);
+        assert_eq!(m.blocks_for_selection(&RowSelection::Scattered(vec![3, 1, 0])),
+                   vec![1, 2, 3, 0]);
+    }
+
+    #[test]
+    fn for_dataset_uses_sxc_geometry() {
+        let c = CsrDataset::new(
+            "t",
+            8,
+            vec![1.0, 2.0, 3.0],
+            vec![0, 4, 7],
+            vec![0, 2, 2, 3],
+            vec![1.0, -1.0, 1.0],
+        )
+        .unwrap();
+        let x_base = c.x_base();
+        let m = BlockMap::for_dataset(&c.into(), 4096);
+        assert_eq!(m.x_base, x_base);
+        assert_eq!(m.blocks_for_row(1), None);
+        // row 0 holds 2 nnz = 16 bytes starting at x_base
+        let (lo, hi) = (x_base / 4096, (x_base + 15) / 4096);
+        assert_eq!(m.blocks_for_row(0), Some((lo, hi)));
     }
 }

@@ -10,6 +10,13 @@
 //! mini-batch fetch is costed from the *actual byte extents* a sampling
 //! technique touches — the substitution for the authors' physical MacBook
 //! (DESIGN.md §3).
+//!
+//! **Cost model across layouts:** the block map knows both the uniform
+//! `.sxb` geometry (every row spans `cols * 4` bytes) and the
+//! variable-extent `.sxc` geometry (row `r` spans `8 * nnz_r` bytes —
+//! value + index — at the offset recorded by `row_ptr`). A sparse dataset
+//! is therefore charged by the bytes it would *actually* occupy on disk,
+//! scaling with nnz and never with `rows * cols`; empty rows cost nothing.
 
 pub mod blockmap;
 pub mod cache;

@@ -68,10 +68,12 @@ impl AccessSimulator {
         }
     }
 
-    /// Convenience: simulator for `ds` with a cache of `cache_bytes`.
+    /// Convenience: simulator for `ds` with a cache of `cache_bytes`. The
+    /// block map carries the layout's true byte geometry, so sparse (CSR)
+    /// datasets are charged by actual nnz-proportional extents.
     pub fn for_dataset(
         profile: DeviceProfile,
-        ds: &crate::data::dense::DenseDataset,
+        ds: &crate::data::Dataset,
         cache_bytes: u64,
     ) -> Self {
         let map = BlockMap::for_dataset(ds, profile.block_bytes);
@@ -133,7 +135,7 @@ mod tests {
                 transfer_bytes_per_s: 256.0 * 1000.0, // 1000 blocks/s
                 block_bytes: 256,
             },
-            BlockMap { x_base: 0, row_bytes: 64, block_bytes: 256 },
+            BlockMap::uniform(0, 64, 256),
             cache_blocks,
         )
     }
@@ -229,5 +231,49 @@ mod tests {
         let mut s = sim(0);
         let c = s.fetch(&RowSelection::Contiguous { start: 0, end: 32 });
         assert_eq!(c.bytes_transferred, c.blocks_transferred * 256);
+    }
+
+    #[test]
+    fn sparse_access_cost_scales_with_nnz_not_shape() {
+        // two CSR datasets with the same logical shape (rows x cols) but a
+        // 8x nnz ratio: a full sweep must transfer ~8x the bytes, and both
+        // must be far below the dense rows*cols*4 footprint
+        use crate::data::csr::CsrDataset;
+        use crate::data::Dataset;
+        let build = |nnz_per_row: usize| -> Dataset {
+            let rows = 256;
+            let cols = 100_000;
+            let mut values = Vec::new();
+            let mut col_idx = Vec::new();
+            let mut row_ptr = vec![0u64];
+            for r in 0..rows {
+                let mut row_cols: Vec<u32> = (0..nnz_per_row)
+                    .map(|k| ((r * 37 + k * 331) % cols) as u32)
+                    .collect();
+                row_cols.sort_unstable();
+                row_cols.dedup();
+                for &j in &row_cols {
+                    values.push(1.0);
+                    col_idx.push(j);
+                }
+                row_ptr.push(col_idx.len() as u64);
+            }
+            let y = (0..rows).map(|r| if r % 2 == 0 { 1.0 } else { -1.0 }).collect();
+            CsrDataset::new("s", cols, values, col_idx, row_ptr, y).unwrap().into()
+        };
+        let full = RowSelection::Contiguous { start: 0, end: 256 };
+        let mut small = AccessSimulator::for_dataset(DeviceProfile::hdd(), &build(4), 0);
+        let mut big = AccessSimulator::for_dataset(DeviceProfile::hdd(), &build(32), 0);
+        let cs = small.fetch(&full);
+        let cb = big.fetch(&full);
+        let ratio = cb.bytes_transferred as f64 / cs.bytes_transferred as f64;
+        assert!((4.0..=16.0).contains(&ratio), "bytes must track nnz (ratio {ratio})");
+        let dense_bytes = 256u64 * 100_000 * 4;
+        assert!(
+            cb.bytes_transferred < dense_bytes / 100,
+            "sparse sweep ({} B) must be orders of magnitude below the dense \
+             footprint ({dense_bytes} B)",
+            cb.bytes_transferred
+        );
     }
 }

@@ -22,8 +22,8 @@ use std::sync::Arc;
 
 use crate::backend::{ComputeBackend, NativeBackend, PjrtBackend};
 use crate::config::{BackendKind, ExperimentConfig, StepKind};
-use crate::data::batch::{BatchAssembler, BatchView, RowSelection};
-use crate::data::dense::DenseDataset;
+use crate::data::batch::{BatchAssembler, RowSelection};
+use crate::data::Dataset;
 use crate::error::Result;
 use crate::metrics::timer::{Stopwatch, TimeBreakdown};
 use crate::metrics::Trace;
@@ -85,7 +85,7 @@ impl TrainReport {
 }
 
 /// Build the configured compute backend.
-pub fn build_backend(cfg: &ExperimentConfig, ds: &DenseDataset) -> Result<Box<dyn ComputeBackend>> {
+pub fn build_backend(cfg: &ExperimentConfig, ds: &Dataset) -> Result<Box<dyn ComputeBackend>> {
     Ok(match cfg.backend {
         BackendKind::Native => Box::new(NativeBackend::new()),
         BackendKind::Pjrt => {
@@ -97,22 +97,20 @@ pub fn build_backend(cfg: &ExperimentConfig, ds: &DenseDataset) -> Result<Box<dy
 /// Regularization coefficient for the arm: explicit config value, else the
 /// dataset profile default, else 1e-4.
 pub fn reg_for(cfg: &ExperimentConfig) -> f32 {
-    cfg.reg_c.unwrap_or_else(|| {
-        crate::data::registry::profile(&cfg.dataset)
-            .map(|p| p.reg_c)
-            .unwrap_or(1e-4)
-    })
+    cfg.reg_c
+        .or_else(|| crate::data::registry::reg_c_for(&cfg.dataset))
+        .unwrap_or(1e-4)
 }
 
-/// Run one experiment arm over an already-resolved dataset.
-pub fn run_experiment(cfg: &ExperimentConfig, ds: &DenseDataset) -> Result<TrainReport> {
+/// Run one experiment arm over an already-resolved dataset (either layout).
+pub fn run_experiment(cfg: &ExperimentConfig, ds: &Dataset) -> Result<TrainReport> {
     cfg.validate()?;
     let mut backend = build_backend(cfg, ds)?;
     if cfg.pre_shuffle {
         // paper §5 extension: one-time layout shuffle so CS/SS keep
         // contiguous access over a de-clustered row order
         let mut shuffled = ds.clone();
-        crate::data::scaling::shuffle_rows(&mut shuffled, cfg.seed ^ 0x9E37);
+        shuffled.shuffle_rows(cfg.seed ^ 0x9E37);
         return run_experiment_with_backend(cfg, &shuffled, backend.as_mut());
     }
     run_experiment_with_backend(cfg, ds, backend.as_mut())
@@ -130,7 +128,7 @@ fn charge_epoch(time: &mut TimeBreakdown, es: &PrefetchStats) {
 /// harness share one PJRT runtime across arms).
 pub fn run_experiment_with_backend(
     cfg: &ExperimentConfig,
-    ds: &DenseDataset,
+    ds: &Dataset,
     be: &mut dyn ComputeBackend,
 ) -> Result<TrainReport> {
     let c = reg_for(cfg);
@@ -176,6 +174,7 @@ pub fn run_experiment_with_backend(
 
         // SVRG: full gradient at the snapshot — a sequential, charged sweep
         if solver.needs_full_grad() {
+            solver.sync_w();
             if let Some(pf) = pf.as_mut() {
                 full_gradient_sweep_prefetched(
                     be,
@@ -211,10 +210,15 @@ pub fn run_experiment_with_backend(
             // as zero-copy range views
             pf.start_epoch(sampler.epoch(epoch));
             while let Some(b) = pf.next_batch() {
-                let view = b.view(n);
                 let sw = Stopwatch::start();
-                let lr = step_size(cfg, be, solver.w(), &view, c, alpha_const,
-                                   &ls_params, &mut ls_scratch)?;
+                let view = b.view(n);
+                let lr = match cfg.step {
+                    StepKind::Constant => alpha_const,
+                    StepKind::LineSearch => {
+                        solver.sync_w();
+                        backtracking(be, solver.w(), &view, c, &ls_params, &mut ls_scratch)?
+                    }
+                };
                 solver.step(be, &view, b.j, lr)?;
                 time.compute_s += sw.elapsed_s();
             }
@@ -222,20 +226,24 @@ pub fn run_experiment_with_backend(
         } else {
             // synchronous path: fetch → assemble → step
             let sim = sim_local.as_mut().expect("sync path owns the simulator");
-            let row_bytes = n as u64 * 4;
             for (j, sel) in sampler.epoch(epoch).into_iter().enumerate() {
                 let cost = sim.fetch(&sel);
                 time.sim_access_s += cost.time_s;
                 if sel.is_contiguous() {
-                    time.bytes_borrowed += sel.len() as u64 * row_bytes;
+                    time.bytes_borrowed += ds.payload_bytes(&sel);
                 } else {
-                    time.bytes_copied += sel.len() as u64 * row_bytes;
+                    time.bytes_copied += ds.payload_bytes(&sel);
                 }
                 let mut sw = Stopwatch::start();
                 let view = assembler.assemble(ds, &sel);
                 time.assemble_s += sw.lap_s();
-                let lr = step_size(cfg, be, solver.w(), &view, c, alpha_const,
-                                   &ls_params, &mut ls_scratch)?;
+                let lr = match cfg.step {
+                    StepKind::Constant => alpha_const,
+                    StepKind::LineSearch => {
+                        solver.sync_w();
+                        backtracking(be, solver.w(), &view, c, &ls_params, &mut ls_scratch)?
+                    }
+                };
                 solver.step(be, &view, j, lr)?;
                 time.compute_s += sw.lap_s();
             }
@@ -244,10 +252,12 @@ pub fn run_experiment_with_backend(
         // record (outside the clock)
         let last = epoch + 1 == cfg.epochs;
         if last || (cfg.record_every > 0 && (epoch + 1) % cfg.record_every == 0) {
+            solver.sync_w();
             let obj = be.full_objective(solver.w(), ds, c)?;
             trace.push(epoch + 1, time.training_time_s(), obj);
         }
     }
+    solver.sync_w();
     time.wall_s = wall.elapsed_s();
     let sim = match pf {
         Some(p) => p.finish().0,
@@ -272,30 +282,12 @@ pub fn run_experiment_with_backend(
     })
 }
 
-/// Pick the step size for this batch according to the configured rule.
-#[allow(clippy::too_many_arguments)]
-fn step_size(
-    cfg: &ExperimentConfig,
-    be: &mut dyn ComputeBackend,
-    w: &[f32],
-    view: &BatchView<'_>,
-    c: f32,
-    alpha_const: f32,
-    ls_params: &LineSearchParams,
-    ls_scratch: &mut LineSearchScratch,
-) -> Result<f32> {
-    match cfg.step {
-        StepKind::Constant => Ok(alpha_const),
-        StepKind::LineSearch => backtracking(be, w, view, c, ls_params, ls_scratch),
-    }
-}
-
 /// Full-dataset gradient at `w` via a sequential chunked sweep, charged to
 /// the simulator and the compute clock. Result in `out`.
 #[allow(clippy::too_many_arguments)]
 fn full_gradient_sweep(
     be: &mut dyn ComputeBackend,
-    ds: &DenseDataset,
+    ds: &Dataset,
     w: &[f32],
     c: f32,
     chunk: usize,
@@ -312,10 +304,9 @@ fn full_gradient_sweep(
         let sel = RowSelection::Contiguous { start, end };
         let cost = sim.fetch(&sel);
         time.sim_access_s += cost.time_s;
-        time.bytes_borrowed += (end - start) as u64 * ds.cols() as u64 * 4;
+        time.bytes_borrowed += ds.payload_bytes(&sel);
         let sw = Stopwatch::start();
-        let (x, y) = ds.rows_slice(start, end);
-        let view = BatchView { x, y, rows: end - start, cols: ds.cols() };
+        let view = ds.slice_view(start, end);
         // pure data term of this chunk (c = 0), weighted by chunk mass
         be.grad_into(w, &view, 0.0, scratch)?;
         let weight = (end - start) as f32 / rows as f32;
@@ -357,7 +348,7 @@ fn full_gradient_sweep_prefetched(
         let sw = Stopwatch::start();
         let view = b.view(cols);
         be.grad_into(w, &view, 0.0, scratch)?;
-        let weight = view.rows as f32 / rows as f32;
+        let weight = view.rows() as f32 / rows as f32;
         crate::math::axpy(weight, scratch, out);
         time.compute_s += sw.elapsed_s();
     }
@@ -373,7 +364,7 @@ mod tests {
     use crate::sampling::SamplingKind;
     use crate::solvers::SolverKind;
 
-    fn tiny_ds() -> DenseDataset {
+    fn tiny_ds() -> Dataset {
         crate::data::synth::generate(
             &crate::data::synth::SynthSpec {
                 name: "tiny",
@@ -387,6 +378,7 @@ mod tests {
             7,
         )
         .unwrap()
+        .into()
     }
 
     fn quick_cfg(solver: SolverKind, sampling: SamplingKind) -> ExperimentConfig {

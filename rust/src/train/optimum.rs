@@ -7,14 +7,13 @@
 //! and optimum value").
 
 use crate::backend::ComputeBackend;
-use crate::data::batch::BatchView;
-use crate::data::dense::DenseDataset;
+use crate::data::Dataset;
 use crate::error::Result;
 
 /// Estimate `p*` with `iters` accelerated full-batch iterations.
 pub fn estimate_optimum(
     be: &mut dyn ComputeBackend,
-    ds: &DenseDataset,
+    ds: &Dataset,
     c: f32,
     iters: usize,
 ) -> Result<f64> {
@@ -25,8 +24,7 @@ pub fn estimate_optimum(
     let mut w_prev = vec![0f32; n];
     let mut v = vec![0f32; n];
     let mut g = vec![0f32; n];
-    let (x, y) = ds.rows_slice(0, ds.rows());
-    let view = BatchView { x, y, rows: ds.rows(), cols: n };
+    let view = ds.slice_view(0, ds.rows());
 
     for k in 0..iters {
         // Nesterov momentum: v = w + (k-1)/(k+2) (w - w_prev)
@@ -48,7 +46,7 @@ mod tests {
     use super::*;
     use crate::backend::NativeBackend;
 
-    fn ds() -> DenseDataset {
+    fn ds() -> Dataset {
         crate::data::synth::generate(
             &crate::data::synth::SynthSpec {
                 name: "opt",
@@ -62,6 +60,7 @@ mod tests {
             3,
         )
         .unwrap()
+        .into()
     }
 
     #[test]

@@ -14,7 +14,7 @@ use std::sync::Arc;
 use crate::backend::{ComputeBackend, NativeBackend};
 use crate::config::ExperimentConfig;
 use crate::data::batch::BatchAssembler;
-use crate::data::dense::DenseDataset;
+use crate::data::Dataset;
 use crate::error::{Error, Result};
 use crate::metrics::timer::Stopwatch;
 use crate::pipeline::shard::{self, Shard};
@@ -46,7 +46,7 @@ pub struct ParallelReport {
 /// per worker.
 pub fn run_data_parallel(
     cfg: &ExperimentConfig,
-    ds: &DenseDataset,
+    ds: &Dataset,
     workers: usize,
 ) -> Result<ParallelReport> {
     cfg.validate()?;
@@ -169,7 +169,7 @@ mod tests {
     use crate::sampling::SamplingKind;
     use crate::solvers::SolverKind;
 
-    fn ds() -> DenseDataset {
+    fn ds() -> Dataset {
         crate::data::synth::generate(
             &crate::data::synth::SynthSpec {
                 name: "par",
@@ -183,6 +183,7 @@ mod tests {
             21,
         )
         .unwrap()
+        .into()
     }
 
     fn cfg(sampling: SamplingKind) -> ExperimentConfig {

@@ -17,7 +17,7 @@ use samplex::sampling::{Sampler, SamplingKind};
 use samplex::solvers::SolverKind;
 use samplex::train::estimate_optimum;
 
-fn dataset(rows: usize, cols: usize, seed: u64) -> samplex::data::dense::DenseDataset {
+fn dataset(rows: usize, cols: usize, seed: u64) -> samplex::data::Dataset {
     generate(
         &SynthSpec {
             name: "e2e",
@@ -31,6 +31,7 @@ fn dataset(rows: usize, cols: usize, seed: u64) -> samplex::data::dense::DenseDa
         seed,
     )
     .unwrap()
+    .into()
 }
 
 fn small_grid(epochs: usize) -> GridConfig {
@@ -208,7 +209,8 @@ fn out_of_core_disk_training_matches_in_memory() {
     let mut asm = samplex::data::batch::BatchAssembler::new();
     for sel in sampler2.epoch(0) {
         let view = asm.assemble(&ds, &sel);
-        samplex::math::grad_into(&w_mem, view.x, view.y, 8, 1e-3, &mut g);
+        let dv = view.as_dense().unwrap();
+        samplex::math::grad_into(&w_mem, dv.x, dv.y, 8, 1e-3, &mut g);
         samplex::math::axpy(-0.1, &g, &mut w_mem);
     }
     assert_eq!(w_disk, w_mem, "disk-backed epoch must be bit-identical");

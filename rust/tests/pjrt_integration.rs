@@ -44,7 +44,7 @@ fn pjrt_grad_matches_native() {
     let mut native = NativeBackend::new();
     for rows in [200usize, 137, 1] {
         let (x, y, w) = toy(rows, N, rows as u64);
-        let view = BatchView { x: &x, y: &y, rows, cols: N };
+        let view = BatchView::dense(&x, &y, N);
         let mut g_p = vec![0f32; N];
         let mut g_n = vec![0f32; N];
         pjrt.grad_into(&w, &view, 0.01, &mut g_p).unwrap();
@@ -68,9 +68,9 @@ fn pjrt_objective_and_loss_match_native() {
     let mut pjrt = PjrtBackend::new(&dir, N, 200).unwrap();
     let mut native = NativeBackend::new();
     let (x, y, w) = toy(450, N, 9); // forces loss_sum chunking (450 > 200)
-    let view = BatchView { x: &x, y: &y, rows: 450, cols: N };
-    let o_p = pjrt.batch_obj(&w, &BatchView { x: &x[..200 * N], y: &y[..200], rows: 200, cols: N }, 0.05).unwrap();
-    let o_n = native.batch_obj(&w, &BatchView { x: &x[..200 * N], y: &y[..200], rows: 200, cols: N }, 0.05).unwrap();
+    let view = BatchView::dense(&x, &y, N);
+    let o_p = pjrt.batch_obj(&w, &BatchView::dense(&x[..200 * N], &y[..200], N), 0.05).unwrap();
+    let o_n = native.batch_obj(&w, &BatchView::dense(&x[..200 * N], &y[..200], N), 0.05).unwrap();
     assert!((o_p - o_n).abs() < 1e-4 * (1.0 + o_n.abs()), "obj: {o_p} vs {o_n}");
     let l_p = pjrt.loss_sum(&w, &view).unwrap();
     let l_n = native.loss_sum(&w, &view).unwrap();
@@ -83,7 +83,8 @@ fn pjrt_full_objective_matches_native() {
         return;
     };
     let (x, y, w) = toy(1500, N, 4);
-    let ds = samplex::data::dense::DenseDataset::new("t", N, x, y).unwrap();
+    let ds: samplex::data::Dataset =
+        samplex::data::dense::DenseDataset::new("t", N, x, y).unwrap().into();
     let mut pjrt = PjrtBackend::new(&dir, N, 1000).unwrap();
     let mut native = NativeBackend::new();
     let a = pjrt.full_objective(&w, &ds, 1e-3).unwrap();
@@ -99,7 +100,7 @@ fn fused_steps_match_composed_updates() {
     let mut pjrt = PjrtBackend::new(&dir, N, 200).unwrap();
     let mut native = NativeBackend::new();
     let (x, y, w0) = toy(200, N, 77);
-    let view = BatchView { x: &x, y: &y, rows: 200, cols: N };
+    let view = BatchView::dense(&x, &y, N);
     let c = 0.01f32;
     let lr = 0.05f32;
     let tol = |a: f32, b: f32| (a - b).abs() < 2e-4 * (1.0 + b.abs());
@@ -178,7 +179,7 @@ fn ragged_batch_padding_is_exact() {
     let mut pjrt = PjrtBackend::new(&dir, N, 200).unwrap();
     let mut native = NativeBackend::new();
     let (x, y, w) = toy(73, N, 21);
-    let view = BatchView { x: &x, y: &y, rows: 73, cols: N };
+    let view = BatchView::dense(&x, &y, N);
     let mut g_p = vec![0f32; N];
     let mut g_n = vec![0f32; N];
     pjrt.grad_into(&w, &view, 0.1, &mut g_p).unwrap();
@@ -197,7 +198,7 @@ fn end_to_end_train_pjrt_vs_native_same_trajectory() {
     use samplex::sampling::SamplingKind;
     use samplex::solvers::SolverKind;
 
-    let ds = samplex::data::synth::generate(
+    let ds: samplex::data::Dataset = samplex::data::synth::generate(
         &samplex::data::synth::SynthSpec {
             name: "it",
             rows: 1000,
@@ -209,7 +210,8 @@ fn end_to_end_train_pjrt_vs_native_same_trajectory() {
         },
         11,
     )
-    .unwrap();
+    .unwrap()
+    .into();
 
     let mut cfg = ExperimentConfig::quick("it", SolverKind::Saga, SamplingKind::Ss, 200);
     cfg.epochs = 2;

@@ -4,9 +4,11 @@
 
 use std::sync::Arc;
 
-use samplex::backend::NativeBackend;
+use samplex::backend::{ComputeBackend, NativeBackend};
 use samplex::data::batch::{gather_owned, BatchView, RowSelection};
+use samplex::data::csr::CsrDataset;
 use samplex::data::dense::DenseDataset;
+use samplex::data::Dataset;
 use samplex::pipeline::prefetch::Prefetcher;
 use samplex::rng::Rng;
 use samplex::sampling::{Sampler, SamplingKind};
@@ -138,11 +140,7 @@ fn prop_samplers_deterministic_in_seed() {
 // ---------------------------------------------------------------------------
 
 fn sim_for(rows: usize, cols: usize, profile: DeviceProfile, cache_blocks: usize) -> AccessSimulator {
-    let map = BlockMap {
-        x_base: 24 + rows as u64 * 4,
-        row_bytes: cols as u64 * 4,
-        block_bytes: profile.block_bytes,
-    };
+    let map = BlockMap::uniform(24 + rows as u64 * 4, cols as u64 * 4, profile.block_bytes);
     AccessSimulator::new(profile, map, cache_blocks)
 }
 
@@ -261,6 +259,25 @@ fn random_dataset(rng: &mut Rng, rows: usize, cols: usize) -> DenseDataset {
     DenseDataset::new("prop", cols, x, y).unwrap()
 }
 
+/// Random CSR dataset with ~`density` fill (some rows may be empty).
+fn random_csr(rng: &mut Rng, rows: usize, cols: usize, density: f64) -> CsrDataset {
+    let mut values = Vec::new();
+    let mut col_idx = Vec::new();
+    let mut row_ptr = vec![0u64];
+    let mut y = Vec::with_capacity(rows);
+    for _ in 0..rows {
+        for j in 0..cols {
+            if rng.uniform() < density {
+                values.push(rng.normal() as f32);
+                col_idx.push(j as u32);
+            }
+        }
+        row_ptr.push(values.len() as u64);
+        y.push(if rng.uniform() < 0.5 { 1.0 } else { -1.0 });
+    }
+    CsrDataset::new("prop-csr", cols, values, col_idx, row_ptr, y).unwrap()
+}
+
 const ALL_KINDS: [SamplingKind; 5] = [
     SamplingKind::Rs,
     SamplingKind::Rswr,
@@ -279,7 +296,8 @@ fn prop_borrowed_and_forced_owned_payloads_bit_identical() {
         let rows = 20 + rng.below(300);
         let cols = 1 + rng.below(12);
         let batch = 1 + rng.below(rows);
-        let ds = Arc::new(random_dataset(rng, rows, cols));
+        let dense = random_dataset(rng, rows, cols);
+        let ds = Arc::new(Dataset::Dense(dense));
         let labels = ds.y().to_vec();
         for kind in ALL_KINDS {
             let mut s: Box<dyn Sampler> = kind.build(rows, batch, i as u64, Some(&labels)).unwrap();
@@ -289,10 +307,13 @@ fn prop_borrowed_and_forced_owned_payloads_bit_identical() {
             pf.start_epoch(sels.clone());
             let mut k = 0usize;
             while let Some(b) = pf.next_batch() {
-                let view = b.view(cols);
-                let (ox, oy) = gather_owned(&ds, &sels[k]);
-                assert_eq!(view.x, &ox[..], "{} case {i} batch {k}: x", kind.label());
-                assert_eq!(view.y, &oy[..], "{} case {i} batch {k}: y", kind.label());
+                let pview = b.view(cols);
+                let view = pview.as_dense().unwrap();
+                let owned = gather_owned(&ds, &sels[k]);
+                let oview = owned.view(cols);
+                let od = oview.as_dense().unwrap();
+                assert_eq!(view.x, od.x, "{} case {i} batch {k}: x", kind.label());
+                assert_eq!(view.y, od.y, "{} case {i} batch {k}: y", kind.label());
                 assert_eq!(
                     b.payload.is_borrowed(),
                     sels[k].is_contiguous(),
@@ -302,7 +323,7 @@ fn prop_borrowed_and_forced_owned_payloads_bit_identical() {
                 if let RowSelection::Contiguous { start, .. } = sels[k] {
                     assert_eq!(
                         view.x.as_ptr(),
-                        ds.row(start).as_ptr(),
+                        ds.as_dense().unwrap().row(start).as_ptr(),
                         "{} case {i}: contiguous view must alias the dataset",
                         kind.label()
                     );
@@ -332,7 +353,7 @@ fn prop_solver_trajectory_identical_on_borrowed_vs_owned_payloads() {
         let rows = 60 + rng.below(200);
         let cols = 2 + rng.below(8);
         let batch = 1 + rng.below(rows.min(50));
-        let ds = Arc::new(random_dataset(rng, rows, cols));
+        let ds = Arc::new(Dataset::Dense(random_dataset(rng, rows, cols)));
         let labels = ds.y().to_vec();
         let lr = 0.05f32;
         for kind in ALL_KINDS {
@@ -359,8 +380,8 @@ fn prop_solver_trajectory_identical_on_borrowed_vs_owned_payloads() {
             let mut solver_b: Box<dyn Solver> = SolverKind::Saga.build(cols, m);
             solver_b.set_reg(1e-3);
             for (j, sel) in sels.iter().enumerate() {
-                let (x, y) = gather_owned(&ds, sel);
-                let view = BatchView { x: &x, y: &y, rows: sel.len(), cols };
+                let owned = gather_owned(&ds, sel);
+                let view = owned.view(cols);
                 solver_b.step(&mut be, &view, j, lr).unwrap();
             }
 
@@ -371,6 +392,105 @@ fn prop_solver_trajectory_identical_on_borrowed_vs_owned_payloads() {
                 kind.label()
             );
         }
+    });
+}
+
+
+// ---------------------------------------------------------------------------
+// Dense ↔ CSR layout equivalence (the Dataset seam contract)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_dense_and_csr_gradients_bit_close() {
+    // random CSR matrices, densified: both kernels must produce the same
+    // gradient to within f32 association error (≤ 1e-5)
+    sweep(20, 0x0C5A, |rng, i| {
+        let rows = 5 + rng.below(120);
+        let cols = 3 + rng.below(60);
+        let density = 0.05 + rng.uniform() * 0.5;
+        let csr = random_csr(rng, rows, cols, density);
+        let dense = csr.to_dense().unwrap();
+        let w: Vec<f32> = (0..cols).map(|_| rng.normal() as f32 * 0.5).collect();
+        let c = if i % 2 == 0 { 0.0 } else { 0.2 };
+        let mut be = NativeBackend::new();
+        let mut gd = vec![0f32; cols];
+        let mut gs = vec![0f32; cols];
+        let dview = BatchView::dense(dense.x(), dense.y(), cols);
+        let sview = BatchView::Csr(csr.slice(0, rows));
+        be.grad_into(&w, &dview, c, &mut gd).unwrap();
+        be.grad_into(&w, &sview, c, &mut gs).unwrap();
+        for k in 0..cols {
+            assert!(
+                (gd[k] - gs[k]).abs() <= 1e-5 * (1.0 + gd[k].abs()),
+                "case {i} k={k}: dense {} vs csr {}",
+                gd[k],
+                gs[k]
+            );
+        }
+        // loss agrees too
+        let ld = be.loss_sum(&w, &dview).unwrap();
+        let ls = be.loss_sum(&w, &sview).unwrap();
+        assert!((ld - ls).abs() <= 1e-4 * (1.0 + ld.abs()), "case {i}: {ld} vs {ls}");
+    });
+}
+
+#[test]
+fn prop_saga_trajectory_identical_dense_vs_csr() {
+    // full SAGA epochs driven once through dense views and once through CSR
+    // views of the same data must land on the same iterate (≤ 1e-5): the
+    // layout seam must not change the optimization path
+    sweep(8, 0x5A6A, |rng, i| {
+        let rows = 40 + rng.below(150);
+        let cols = 4 + rng.below(20);
+        let batch = 1 + rng.below(rows.min(40));
+        let csr = random_csr(rng, rows, cols, 0.3);
+        let dense_ds = Dataset::Dense(csr.to_dense().unwrap());
+        let csr_ds = Dataset::Csr(csr);
+        let lr = 0.05f32;
+        for kind in [SamplingKind::Cs, SamplingKind::Ss, SamplingKind::Rs] {
+            let mut be = NativeBackend::new();
+            let mut run = |ds: &Dataset| -> Vec<f32> {
+                let sels = kind.build(rows, batch, i as u64, None).unwrap().epoch(i);
+                let mut solver: Box<dyn Solver> = SolverKind::Saga.build(cols, sels.len());
+                solver.set_reg(1e-3);
+                let mut asm = samplex::data::batch::BatchAssembler::new();
+                for epoch_sels in [&sels, &sels] {
+                    for (j, sel) in epoch_sels.iter().enumerate() {
+                        let view = asm.assemble(ds, sel);
+                        solver.step(&mut be, &view, j, lr).unwrap();
+                    }
+                }
+                solver.sync_w();
+                solver.w().to_vec()
+            };
+            let wd = run(&dense_ds);
+            let ws = run(&csr_ds);
+            for k in 0..cols {
+                assert!(
+                    (wd[k] - ws[k]).abs() <= 1e-5 * (1.0 + wd[k].abs()),
+                    "{} case {i} k={k}: dense {} vs csr {}",
+                    kind.label(),
+                    wd[k],
+                    ws[k]
+                );
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_full_objective_layout_invariant() {
+    sweep(12, 0xF0B1, |rng, i| {
+        let rows = 10 + rng.below(200);
+        let cols = 2 + rng.below(30);
+        let csr = random_csr(rng, rows, cols, 0.2);
+        let dense_ds = Dataset::Dense(csr.to_dense().unwrap());
+        let csr_ds = Dataset::Csr(csr);
+        let w: Vec<f32> = (0..cols).map(|_| rng.normal() as f32 * 0.3).collect();
+        let mut be = NativeBackend::new();
+        let a = be.full_objective(&w, &dense_ds, 0.01).unwrap();
+        let b = be.full_objective(&w, &csr_ds, 0.01).unwrap();
+        assert!((a - b).abs() <= 1e-5 * (1.0 + a.abs()), "case {i}: {a} vs {b}");
     });
 }
 
