@@ -1,0 +1,161 @@
+//! Compute-plane performance snapshot: full-objective and full-gradient
+//! sweep throughput at 1 thread vs the pool default, on a ≥100k-row dense
+//! synthetic and a sparse (CSR) synthetic.
+//!
+//! Writes `BENCH_compute.json` (ns/row, speedup, thread counts) so future
+//! PRs can track compute-plane regressions against a recorded baseline,
+//! and prints the same numbers as a table.
+//!
+//! ```bash
+//! cargo run --release --example bench_snapshot
+//! ```
+//!
+//! The pooled reductions are bit-identical at every thread count (the
+//! fixed-order fold contract), which this binary also re-asserts before
+//! trusting the timings.
+
+use samplex::backend::{ComputeBackend, NativeBackend};
+use samplex::bench_harness::timing::bench;
+use samplex::data::synth::{self, FeatureDist, SparseSynthSpec, SynthSpec};
+use samplex::data::Dataset;
+use samplex::math::chunked::{self, GradScratch};
+use samplex::runtime::pool;
+
+struct SweepTimes {
+    /// Nanoseconds per row, full objective.
+    obj_ns_per_row: f64,
+    /// Nanoseconds per row, full gradient.
+    grad_ns_per_row: f64,
+}
+
+fn time_sweeps(ds: &Dataset, w: &[f32], threads: usize) -> SweepTimes {
+    pool::set_parallelism(threads);
+    let rows = ds.rows() as f64;
+    let mut be = NativeBackend::new();
+    let obj = bench(
+        &format!("{}/objective/t{threads}", ds.name()),
+        1,
+        5,
+        2,
+        || {
+            std::hint::black_box(be.full_objective(w, ds, 1e-3).unwrap());
+        },
+    );
+    let mut g = vec![0f32; ds.cols()];
+    let mut scratch = GradScratch::default();
+    let grad = bench(
+        &format!("{}/gradient/t{threads}", ds.name()),
+        1,
+        5,
+        2,
+        || {
+            chunked::full_grad_into(w, ds, 1e-3, &mut g, &mut scratch);
+            std::hint::black_box(&g);
+        },
+    );
+    pool::set_parallelism(0);
+    SweepTimes {
+        obj_ns_per_row: obj.median_s * 1e9 / rows,
+        grad_ns_per_row: grad.median_s * 1e9 / rows,
+    }
+}
+
+fn json_entry(name: &str, rows: usize, nnz: usize, t1: &SweepTimes, tn: &SweepTimes, n: usize) -> String {
+    format!(
+        concat!(
+            "    {{\n",
+            "      \"dataset\": \"{}\",\n",
+            "      \"rows\": {},\n",
+            "      \"nnz\": {},\n",
+            "      \"threads\": {},\n",
+            "      \"objective_ns_per_row_1t\": {:.3},\n",
+            "      \"objective_ns_per_row_nt\": {:.3},\n",
+            "      \"objective_speedup\": {:.3},\n",
+            "      \"gradient_ns_per_row_1t\": {:.3},\n",
+            "      \"gradient_ns_per_row_nt\": {:.3},\n",
+            "      \"gradient_speedup\": {:.3}\n",
+            "    }}"
+        ),
+        name,
+        rows,
+        nnz,
+        n,
+        t1.obj_ns_per_row,
+        tn.obj_ns_per_row,
+        t1.obj_ns_per_row / tn.obj_ns_per_row.max(1e-12),
+        t1.grad_ns_per_row,
+        tn.grad_ns_per_row,
+        t1.grad_ns_per_row / tn.grad_ns_per_row.max(1e-12),
+    )
+}
+
+fn main() -> samplex::Result<()> {
+    let n_threads = pool::parallelism();
+    println!("compute-plane snapshot: 1 vs {n_threads} threads\n");
+
+    println!("generating dense synthetic (120k x 28) …");
+    let dense: Dataset = synth::generate(
+        &SynthSpec {
+            name: "bench-dense-120k",
+            rows: 120_000,
+            cols: 28,
+            dist: FeatureDist::Gaussian,
+            flip_prob: 0.05,
+            margin_noise: 0.3,
+            pos_fraction: 0.5,
+        },
+        7,
+    )?
+    .into();
+    println!("generating sparse synthetic (120k x 50k, ~60 nnz/row) …");
+    let sparse: Dataset = Dataset::Csr(synth::generate_csr(
+        &SparseSynthSpec {
+            name: "bench-sparse-120k",
+            rows: 120_000,
+            cols: 50_000,
+            nnz_per_row: 60,
+            flip_prob: 0.05,
+            margin_noise: 0.3,
+            pos_fraction: 0.5,
+        },
+        7,
+    )?);
+
+    let mut entries = Vec::new();
+    for ds in [&dense, &sparse] {
+        let w: Vec<f32> = (0..ds.cols()).map(|k| ((k % 17) as f32 - 8.0) * 0.02).collect();
+
+        // determinism gate: bits must match across the thread counts we
+        // are about to compare, or the timings are meaningless
+        let obj_at = |t: usize| {
+            pool::set_parallelism(t);
+            let o = NativeBackend::new().full_objective(&w, ds, 1e-3).unwrap();
+            pool::set_parallelism(0);
+            o.to_bits()
+        };
+        assert_eq!(obj_at(1), obj_at(n_threads), "determinism contract violated");
+
+        let t1 = time_sweeps(ds, &w, 1);
+        let tn = time_sweeps(ds, &w, n_threads);
+        println!(
+            "{:<20} objective {:>8.2} -> {:>8.2} ns/row ({:.2}x)   gradient {:>8.2} -> {:>8.2} ns/row ({:.2}x)",
+            ds.name(),
+            t1.obj_ns_per_row,
+            tn.obj_ns_per_row,
+            t1.obj_ns_per_row / tn.obj_ns_per_row.max(1e-12),
+            t1.grad_ns_per_row,
+            tn.grad_ns_per_row,
+            t1.grad_ns_per_row / tn.grad_ns_per_row.max(1e-12),
+        );
+        entries.push(json_entry(ds.name(), ds.rows(), ds.nnz(), &t1, &tn, n_threads));
+    }
+
+    let json = format!(
+        "{{\n  \"bench\": \"compute_plane_sweeps\",\n  \"threads_default\": {},\n  \"sweeps\": [\n{}\n  ]\n}}\n",
+        n_threads,
+        entries.join(",\n")
+    );
+    std::fs::write("BENCH_compute.json", &json)?;
+    println!("\nwrote BENCH_compute.json");
+    Ok(())
+}

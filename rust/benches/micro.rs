@@ -112,6 +112,28 @@ fn main() {
         println!("{}", results.last().unwrap().row());
     }
 
+    // --- compute plane: pooled full-dataset sweeps ----------------------------
+    {
+        let full = dataset(120_000, 28);
+        let w = vec![0.05f32; 28];
+        let mut g = vec![0f32; 28];
+        let mut scratch = samplex::math::chunked::GradScratch::default();
+        let mut be = NativeBackend::new();
+        for threads in [1usize, samplex::runtime::pool::parallelism()] {
+            samplex::runtime::pool::set_parallelism(threads);
+            results.push(bench(&format!("pool/full objective 120k t={threads}"), 1, 5, 2, || {
+                std::hint::black_box(be.full_objective(&w, &full, 1e-4).unwrap());
+            }));
+            println!("{}", results.last().unwrap().row());
+            results.push(bench(&format!("pool/full gradient 120k t={threads}"), 1, 5, 2, || {
+                samplex::math::chunked::full_grad_into(&w, &full, 1e-4, &mut g, &mut scratch);
+                std::hint::black_box(&g);
+            }));
+            println!("{}", results.last().unwrap().row());
+            samplex::runtime::pool::set_parallelism(0);
+        }
+    }
+
     // --- PJRT dispatch --------------------------------------------------------
     let artifacts = std::path::Path::new("artifacts").join("manifest.tsv");
     if artifacts.is_file() {

@@ -36,10 +36,7 @@ impl ComputeBackend for NativeBackend {
         c: f32,
         out: &mut [f32],
     ) -> Result<()> {
-        match batch {
-            BatchView::Dense(d) => crate::math::grad_into(w, d.x, d.y, d.cols, c, out),
-            BatchView::Csr(s) => crate::math::sparse::grad_into_csr(w, s, c, out),
-        }
+        crate::math::grad_into_view(w, batch, c, out);
         Ok(())
     }
 
@@ -51,10 +48,14 @@ impl ComputeBackend for NativeBackend {
     }
 
     fn loss_sum(&mut self, w: &[f32], batch: &BatchView<'_>) -> Result<f64> {
-        Ok(match batch {
-            BatchView::Dense(d) => crate::math::loss_sum(w, d.x, d.y, d.cols),
-            BatchView::Csr(s) => crate::math::sparse::loss_sum_csr(w, s),
-        })
+        Ok(crate::math::loss_sum_view(w, batch))
+    }
+
+    /// Pooled full objective: same chunk geometry and fold order as the
+    /// serial default (bit-identical for any pool size), but the chunk
+    /// loss sums run on the persistent worker pool.
+    fn full_objective(&mut self, w: &[f32], ds: &crate::data::Dataset, c: f32) -> Result<f64> {
+        Ok(crate::math::chunked::full_objective(w, ds, c))
     }
 }
 

@@ -168,6 +168,11 @@ pub struct ExperimentConfig {
     /// One-time random row shuffle before training (paper §5: recommended
     /// for CS/SS when similar points are grouped together on disk).
     pub pre_shuffle: bool,
+    /// Worker-pool parallelism cap for full-dataset sweeps (0 = auto:
+    /// `SAMPLEX_POOL_THREADS` env var, else the hardware thread count).
+    /// Pooled reductions are bit-identical for every setting — pin to 1
+    /// when reproducing paper figures on a timing-sensitive machine.
+    pub pool_threads: usize,
 }
 
 impl Default for ExperimentConfig {
@@ -189,6 +194,7 @@ impl Default for ExperimentConfig {
             record_every: 1,
             prefetch_depth: 0,
             pre_shuffle: false,
+            pool_threads: 0,
         }
     }
 }
@@ -267,6 +273,9 @@ impl ExperimentConfig {
         if let Some(v) = doc.get_bool("", "pre_shuffle")? {
             cfg.pre_shuffle = v;
         }
+        if let Some(v) = doc.get_usize("", "pool_threads")? {
+            cfg.pool_threads = v;
+        }
         if let Some(v) = doc.get_str("storage", "profile")? {
             cfg.storage.profile = v;
         }
@@ -303,6 +312,7 @@ impl ExperimentConfig {
         s.push_str(&format!("record_every = {}\n", self.record_every));
         s.push_str(&format!("prefetch_depth = {}\n", self.prefetch_depth));
         s.push_str(&format!("pre_shuffle = {}\n", self.pre_shuffle));
+        s.push_str(&format!("pool_threads = {}\n", self.pool_threads));
         s.push_str("\n[storage]\n");
         s.push_str(&format!("profile = \"{}\"\n", self.storage.profile));
         s.push_str(&format!("cache_mib = {}\n", self.storage.cache_mib));
@@ -431,8 +441,10 @@ mod tests {
         cfg.step = StepKind::LineSearch;
         cfg.reg_c = Some(0.001);
         cfg.storage.block_kib = Some(64);
+        cfg.pool_threads = 4;
         let s = cfg.to_toml_string();
         let back = ExperimentConfig::from_toml_str(&s).unwrap();
+        assert_eq!(back.pool_threads, 4);
         assert_eq!(back.dataset, cfg.dataset);
         assert_eq!(back.solver, cfg.solver);
         assert_eq!(back.sampling, cfg.sampling);

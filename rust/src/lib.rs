@@ -25,13 +25,29 @@
 //!   arrive as messages; contiguous CS/SS batches flow to the solvers as
 //!   [`pipeline::BatchPayload::Borrowed`] range views — one borrowed slice
 //!   for dense, three for CSR — with zero feature or index bytes copied,
-//!   scattered RS batches pay a real gather counted in bytes), the five
-//!   solvers (SAG/SAGA/SVRG/SAAG-II/MBSGD) stepping through one
-//!   [`data::BatchView`] seam (with lazy l2 for sparse MBSGD), constant-
-//!   step and backtracking line search, metrics that decompose training
-//!   time into access vs compute (plus copied-vs-borrowed byte traffic),
-//!   and the experiment harness that regenerates every table and figure of
-//!   the paper.
+//!   scattered RS batches pay a real gather counted in bytes), a
+//!   **parallel compute plane** ([`runtime::pool`] + [`math::chunked`]:
+//!   a persistent zero-dependency worker pool that every O(rows·cols)/
+//!   O(nnz) full-dataset sweep — objective, SVRG full gradient, Nesterov
+//!   optimum, §5 data-parallel epochs — runs through as fixed-geometry
+//!   chunks folded serially in chunk order, so results are bit-identical
+//!   at every thread count), the five solvers (SAG/SAGA/SVRG/SAAG-II/
+//!   MBSGD) stepping through one [`data::BatchView`] seam (with lazy l2
+//!   for sparse MBSGD), constant-step and backtracking line search,
+//!   metrics that decompose training time into access vs compute (plus
+//!   copied-vs-borrowed byte traffic), and the experiment harness that
+//!   regenerates every table and figure of the paper.
+//!
+//! ## Reproducibility and the compute plane
+//!
+//! Pooled reductions follow one rule — chunk geometry fixed by the data,
+//! per-chunk partials in isolated slots, one serial fold in chunk order —
+//! so every sweep is **bit-identical for any pool size** (CI runs the
+//! whole suite at default parallelism *and* pinned to one thread). Thread
+//! count is a pure wall-clock knob: pin it with `SAMPLEX_POOL_THREADS=1`,
+//! `pool_threads = 1` in a config, or
+//! [`runtime::pool::set_parallelism`]`(1)` when reproducing paper
+//! figures.
 //! * **Layer 2** — JAX model (`python/compile/model.py`): mini-batch
 //!   gradient/objective and fused solver update steps, AOT-lowered once per
 //!   (batch, features) shape to HLO text under `artifacts/`.

@@ -6,6 +6,8 @@
 //!                 [--step constant|ls] [--batch N] [--epochs N]
 //!                 [--backend native|pjrt] [--storage hdd|ssd|ram]
 //!                 [--data-dir data] [--seed N] [--trace-csv out.csv]
+//!                 [--pool-threads N]  (0 = auto; sweeps are bit-identical
+//!                                      at every setting)
 //! samplex table   [--dataset D | --all] [--epochs N] [--backend B]
 //!                 [--storage P] [--data-dir data] [--summary] [--csv out.csv]
 //! samplex figure  [--datasets a,b] [--epochs N] [--solver S] [--rate-fit]
@@ -185,6 +187,7 @@ fn cmd_train(args: &[String]) -> Result<()> {
     if f.has("pre-shuffle") {
         cfg.pre_shuffle = true;
     }
+    cfg.pool_threads = f.get_usize("pool-threads", cfg.pool_threads)?;
     cfg.name = format!(
         "{}-{}-{}",
         cfg.dataset,

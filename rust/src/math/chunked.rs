@@ -1,0 +1,236 @@
+//! Deterministic pooled reductions for full-dataset sweeps.
+//!
+//! Every O(rows·cols) / O(nnz) pass over a whole dataset — the full
+//! objective, SVRG's per-epoch full gradient, the Nesterov optimum
+//! estimator's full-batch gradients — routes through here instead of a
+//! single-core loop. The recipe is always the same three steps:
+//!
+//! 1. **Fixed chunk geometry.** Rows are split into chunks whose
+//!    boundaries depend only on the row count (never on the thread
+//!    count).
+//! 2. **Slot-isolated partials.** The worker pool
+//!    ([`crate::runtime::pool`]) computes each chunk's partial — an `f64`
+//!    loss sum, or a dense partial gradient in per-chunk scratch — into
+//!    its own slot.
+//! 3. **Serial fold in chunk order.** The caller combines the slots on
+//!    one thread, lowest chunk first.
+//!
+//! Because floating-point association is fully determined by (1) and (3),
+//! results are **bit-identical for every pool size** — the contract that
+//! keeps the crate's trajectory-equality property tests valid on any
+//! machine (`tests/determinism.rs` pins it across parallelism {1, 2, 8}).
+//!
+//! Gradient partials are dense in `cols`, so holding one slot per chunk
+//! would cost `chunks × cols` floats — prohibitive for news20-scale CSR
+//! (1.35M features). Gradient folds therefore run in **waves** of at most
+//! [`WAVE_SLOTS`] chunks: compute a wave's partials in parallel, fold
+//! them serially in order, reuse the scratch for the next wave. The wave
+//! width is a constant, so it never perturbs the fold order.
+
+use crate::data::batch::BatchView;
+use crate::data::Dataset;
+use crate::math::dense::axpy;
+use crate::runtime::pool;
+
+/// Default rows per chunk for full-dataset sweeps. Matches the chunking
+/// the pre-pool `full_objective` used, so pooled results are bit-identical
+/// to the historical serial sweep.
+pub const SWEEP_CHUNK_ROWS: usize = 4096;
+
+/// Maximum gradient-scratch slots held at once (wave width). Constant by
+/// design: it bounds memory at `WAVE_SLOTS × cols` floats without ever
+/// entering the fold order.
+pub const WAVE_SLOTS: usize = 32;
+
+/// Reusable per-chunk gradient scratch for wave folds. One allocation per
+/// sweep lifetime, not per sweep.
+#[derive(Debug, Default)]
+pub struct GradScratch {
+    slots: Vec<Vec<f32>>,
+}
+
+impl GradScratch {
+    /// Make at least `wave` slots of length `cols` available.
+    fn ensure(&mut self, wave: usize, cols: usize) {
+        if self.slots.len() < wave {
+            self.slots.resize_with(wave, Vec::new);
+        }
+        for s in &mut self.slots[..wave] {
+            s.resize(cols, 0.0);
+        }
+    }
+}
+
+/// Full-dataset objective of eq.(2) — pooled, deterministic, zero-copy
+/// chunk views for either layout. Bit-identical to the serial chunked
+/// sweep for every pool size.
+pub fn full_objective(w: &[f32], ds: &Dataset, c: f32) -> f64 {
+    full_loss_sum(w, ds) / ds.rows() as f64
+        + 0.5 * c as f64 * crate::math::dense::nrm2_sq(w)
+}
+
+/// Raw logistic loss sum over the whole dataset (f64), chunked at
+/// [`SWEEP_CHUNK_ROWS`] and folded in chunk order. Loss partials are one
+/// `f64` each, so all chunks hold slots simultaneously — no waves needed.
+pub fn full_loss_sum(w: &[f32], ds: &Dataset) -> f64 {
+    let rows = ds.rows();
+    if rows == 0 {
+        return 0.0;
+    }
+    let chunk = SWEEP_CHUNK_ROWS.min(rows);
+    let nchunks = rows.div_ceil(chunk);
+    let mut partials = vec![0f64; nchunks];
+    pool::global().map_slots(&mut partials, |i, slot| {
+        let start = i * chunk;
+        let end = (start + chunk).min(rows);
+        *slot = crate::math::loss_sum_view(w, &ds.slice_view(start, end));
+    });
+    partials.iter().sum()
+}
+
+/// Full-dataset gradient of eq.(2) into `out` (data term chunk-folded,
+/// l2 term added once), with the default sweep chunking.
+pub fn full_grad_into(w: &[f32], ds: &Dataset, c: f32, out: &mut [f32], scratch: &mut GradScratch) {
+    full_grad_into_chunked(w, ds, c, SWEEP_CHUNK_ROWS, out, scratch);
+}
+
+/// [`full_grad_into`] with an explicit chunk size (the SVRG sweep chunks
+/// at the experiment's batch size so access charging and compute agree on
+/// geometry). Chunk size must not depend on the thread count.
+pub fn full_grad_into_chunked(
+    w: &[f32],
+    ds: &Dataset,
+    c: f32,
+    chunk_rows: usize,
+    out: &mut [f32],
+    scratch: &mut GradScratch,
+) {
+    let rows = ds.rows();
+    out.fill(0.0);
+    if rows > 0 {
+        let chunk = chunk_rows.clamp(1, rows);
+        let nchunks = rows.div_ceil(chunk);
+        let wave = WAVE_SLOTS.min(nchunks);
+        let mut views: Vec<BatchView<'_>> = Vec::with_capacity(wave);
+        let mut base = 0usize;
+        while base < nchunks {
+            let k = wave.min(nchunks - base);
+            views.clear();
+            for i in 0..k {
+                let start = (base + i) * chunk;
+                let end = (start + chunk).min(rows);
+                views.push(ds.slice_view(start, end));
+            }
+            grad_fold_views(w, &views, rows, out, scratch);
+            base += k;
+        }
+    }
+    // the regularizer is added once, outside the chunk fold
+    axpy(c, w, out);
+}
+
+/// One wave of the gradient fold: compute the pure data-term gradients of
+/// `views` in parallel (one scratch slot each) and fold
+/// `out += (rows_i / total_rows) · g_i` serially in index order. Callers
+/// that stream their chunks (the prefetched SVRG sweep) use this directly;
+/// the index order of `views` must follow the global chunk order.
+pub fn grad_fold_views(
+    w: &[f32],
+    views: &[BatchView<'_>],
+    total_rows: usize,
+    out: &mut [f32],
+    scratch: &mut GradScratch,
+) {
+    let k = views.len();
+    if k == 0 {
+        return;
+    }
+    scratch.ensure(k, w.len());
+    pool::global().map_slots(&mut scratch.slots[..k], |i, slot| {
+        crate::math::grad_into_view(w, &views[i], 0.0, slot);
+    });
+    for (view, slot) in views.iter().zip(&scratch.slots) {
+        let weight = view.rows() as f32 / total_rows as f32;
+        axpy(weight, slot, out);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::dense::DenseDataset;
+    use crate::rng::Rng;
+
+    fn toy_ds(rows: usize, cols: usize, seed: u64) -> (Dataset, Vec<f32>) {
+        let mut rng = Rng::seed_from(seed);
+        let x: Vec<f32> = (0..rows * cols).map(|_| rng.normal() as f32).collect();
+        let y: Vec<f32> = (0..rows)
+            .map(|_| if rng.uniform() < 0.5 { -1.0 } else { 1.0 })
+            .collect();
+        let w: Vec<f32> = (0..cols).map(|_| rng.normal() as f32 * 0.4).collect();
+        (DenseDataset::new("t", cols, x, y).unwrap().into(), w)
+    }
+
+    /// Serial reference: the exact fold the pooled sweep must reproduce.
+    fn serial_grad(w: &[f32], ds: &Dataset, c: f32, chunk: usize) -> Vec<f32> {
+        let rows = ds.rows();
+        let cols = ds.cols();
+        let mut out = vec![0f32; cols];
+        let mut g = vec![0f32; cols];
+        let mut start = 0;
+        while start < rows {
+            let end = (start + chunk).min(rows);
+            crate::math::grad_into_view(w, &ds.slice_view(start, end), 0.0, &mut g);
+            axpy((end - start) as f32 / rows as f32, &g, &mut out);
+            start = end;
+        }
+        axpy(c, w, &mut out);
+        out
+    }
+
+    #[test]
+    fn pooled_full_grad_bit_matches_serial_fold() {
+        // chunk sizes that split evenly, raggedly, and as one chunk
+        let (ds, w) = toy_ds(700, 9, 11);
+        for chunk in [64usize, 100, 333, 700, 4096] {
+            let want = serial_grad(&w, &ds, 0.3, chunk);
+            let mut got = vec![0f32; 9];
+            let mut scratch = GradScratch::default();
+            full_grad_into_chunked(&w, &ds, 0.3, chunk, &mut got, &mut scratch);
+            assert_eq!(got, want, "chunk={chunk}");
+        }
+    }
+
+    #[test]
+    fn pooled_objective_matches_serial_chunk_fold() {
+        let (ds, w) = toy_ds(9000, 6, 21);
+        let c = 0.05f32;
+        // serial reference at the same chunk geometry
+        let rows = ds.rows();
+        let chunk = SWEEP_CHUNK_ROWS.min(rows);
+        let mut want = 0f64;
+        let mut start = 0;
+        while start < rows {
+            let end = (start + chunk).min(rows);
+            want += crate::math::loss_sum_view(&w, &ds.slice_view(start, end));
+            start = end;
+        }
+        let want = want / rows as f64 + 0.5 * c as f64 * crate::math::nrm2_sq(&w);
+        let got = full_objective(&w, &ds, c);
+        assert_eq!(got.to_bits(), want.to_bits());
+    }
+
+    #[test]
+    fn scratch_reuse_across_shapes_is_clean() {
+        // a sweep at cols=9 followed by cols=4 must not leak stale slots
+        let (ds_a, w_a) = toy_ds(300, 9, 31);
+        let (ds_b, w_b) = toy_ds(200, 4, 32);
+        let mut scratch = GradScratch::default();
+        let mut g_a = vec![0f32; 9];
+        full_grad_into(&w_a, &ds_a, 0.1, &mut g_a, &mut scratch);
+        let mut g_b = vec![0f32; 4];
+        full_grad_into(&w_b, &ds_b, 0.1, &mut g_b, &mut scratch);
+        let want_b = serial_grad(&w_b, &ds_b, 0.1, SWEEP_CHUNK_ROWS);
+        assert_eq!(g_b, want_b);
+    }
+}

@@ -21,10 +21,17 @@ pub fn axpy(a: f32, x: &[f32], y: &mut [f32]) {
     }
 }
 
-/// `x *= a`.
+/// `x *= a` (8-lane unrolled like [`axpy`]; elementwise, so bit-identical
+/// to the naive loop).
 #[inline]
 pub fn scal(a: f32, x: &mut [f32]) {
-    for xi in x.iter_mut() {
+    let mut xc = x.chunks_exact_mut(8);
+    for xs in &mut xc {
+        for k in 0..8 {
+            xs[k] *= a;
+        }
+    }
+    for xi in xc.into_remainder() {
         *xi *= a;
     }
 }
@@ -40,14 +47,25 @@ pub fn dot(x: &[f32], y: &[f32]) -> f64 {
     acc
 }
 
-/// Squared Euclidean norm with f64 accumulator.
+/// Squared Euclidean norm with f64 accumulation.
+///
+/// Four independent accumulator chains (the f64 serial-dependency
+/// argument of [`dot_f32`], at half the width since f64 lanes are twice
+/// as wide); the fixed tree-sum keeps results deterministic.
 #[inline]
 pub fn nrm2_sq(x: &[f32]) -> f64 {
-    let mut acc = 0f64;
-    for xi in x {
-        acc += (*xi as f64) * (*xi as f64);
+    let mut acc = [0f64; 4];
+    let mut xc = x.chunks_exact(4);
+    for xs in &mut xc {
+        for k in 0..4 {
+            acc[k] += (xs[k] as f64) * (xs[k] as f64);
+        }
     }
-    acc
+    let mut tail = 0f64;
+    for xi in xc.remainder() {
+        tail += (*xi as f64) * (*xi as f64);
+    }
+    ((acc[0] + acc[1]) + (acc[2] + acc[3])) + tail
 }
 
 /// f32 dot used in the row-major matvec hot loop.
@@ -116,6 +134,10 @@ pub fn dot4_f32(x0: &[f32], x1: &[f32], x2: &[f32], x3: &[f32], w: &[f32]) -> [f
 /// Fused rank-4 update `y += c0 x0 + c1 x1 + c2 x2 + c3 x3`: one load+store
 /// of `y` per element instead of four (the dominant cost of the per-row
 /// axpy at larger feature dims — EXPERIMENTS.md §Perf).
+///
+/// 8-wide blocks through fixed-size array views, so the five bounds
+/// checks hoist to one per block and the inner loop vectorizes (same
+/// rationale as [`axpy`]; elementwise, so results are unchanged).
 #[inline]
 #[allow(clippy::too_many_arguments)]
 pub fn axpy4(
@@ -128,7 +150,19 @@ pub fn axpy4(
 ) {
     let n = y.len();
     debug_assert!(x0.len() == n && x1.len() == n && x2.len() == n && x3.len() == n);
-    for k in 0..n {
+    let blocks = n / 8;
+    for b in 0..blocks {
+        let base = b * 8;
+        let ys: &mut [f32; 8] = (&mut y[base..base + 8]).try_into().expect("8-wide block");
+        let a0: &[f32; 8] = (&x0[base..base + 8]).try_into().expect("8-wide block");
+        let a1: &[f32; 8] = (&x1[base..base + 8]).try_into().expect("8-wide block");
+        let a2: &[f32; 8] = (&x2[base..base + 8]).try_into().expect("8-wide block");
+        let a3: &[f32; 8] = (&x3[base..base + 8]).try_into().expect("8-wide block");
+        for k in 0..8 {
+            ys[k] += c[0] * a0[k] + c[1] * a1[k] + c[2] * a2[k] + c[3] * a3[k];
+        }
+    }
+    for k in blocks * 8..n {
         y[k] += c[0] * x0[k] + c[1] * x1[k] + c[2] * x2[k] + c[3] * x3[k];
     }
 }
@@ -188,6 +222,22 @@ mod tests {
         assert_eq!(dot(&x, &x), 9.0);
         assert_eq!(nrm2_sq(&x), 9.0);
         assert_eq!(dot_f32(&x, &x), 9.0);
+    }
+
+    #[test]
+    fn unrolled_scal_and_nrm2_handle_every_remainder() {
+        for n in [0usize, 1, 3, 4, 7, 8, 9, 16, 19] {
+            let v: Vec<f32> = (0..n).map(|k| k as f32 * 0.25 - 1.0).collect();
+            // scal is elementwise: must match the naive loop exactly
+            let mut a = v.clone();
+            scal(1.5, &mut a);
+            for k in 0..n {
+                assert_eq!(a[k], v[k] * 1.5, "n={n} k={k}");
+            }
+            // nrm2_sq re-associates in f64: tolerance, not bits
+            let want: f64 = v.iter().map(|x| (*x as f64) * (*x as f64)).sum();
+            assert!((nrm2_sq(&v) - want).abs() < 1e-12 * (1.0 + want), "n={n}");
+        }
     }
 
     #[test]

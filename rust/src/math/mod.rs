@@ -9,6 +9,7 @@
 //! 3. **Baseline** — the §Perf comparison of PJRT dispatch overhead vs a
 //!    hand-rolled hot loop.
 
+pub mod chunked;
 pub mod dense;
 pub mod logistic;
 pub mod sparse;
@@ -16,3 +17,26 @@ pub mod sparse;
 pub use dense::{axpy, dot, nrm2_sq, scal};
 pub use logistic::{grad_into, loss_sum, objective_batch, objective_full, sigmoid};
 pub use sparse::{grad_into_csr, loss_sum_csr, objective_batch_csr, sparse_dot};
+
+use crate::data::batch::BatchView;
+
+/// Mini-batch gradient of eq.(3) into `out`, dispatching on the batch
+/// layout — the one free-function seam shared by [`NativeBackend`]'s trait
+/// impl and the pooled chunk sweeps (which cannot thread a `&mut dyn`
+/// backend through concurrent workers).
+///
+/// [`NativeBackend`]: crate::backend::NativeBackend
+pub fn grad_into_view(w: &[f32], batch: &BatchView<'_>, c: f32, out: &mut [f32]) {
+    match batch {
+        BatchView::Dense(d) => grad_into(w, d.x, d.y, d.cols, c, out),
+        BatchView::Csr(s) => grad_into_csr(w, s, c, out),
+    }
+}
+
+/// Raw logistic loss sum (f64) over a batch view, dispatching on layout.
+pub fn loss_sum_view(w: &[f32], batch: &BatchView<'_>) -> f64 {
+    match batch {
+        BatchView::Dense(d) => loss_sum(w, d.x, d.y, d.cols),
+        BatchView::Csr(s) => loss_sum_csr(w, s),
+    }
+}

@@ -1,4 +1,6 @@
-//! PJRT runtime: loads the AOT artifacts (`artifacts/*.hlo.txt` +
+//! Runtime services shared by every backend: the persistent worker
+//! [`pool`] (the compute plane's thread engine) and the PJRT runtime,
+//! which loads the AOT artifacts (`artifacts/*.hlo.txt` +
 //! `manifest.json`) and serves compiled executables to the hot path.
 //!
 //! The [`Manifest`] bookkeeping is always compiled (the CLI `info`
@@ -13,6 +15,7 @@
 //! runtime; compilation never happens inside a training loop iteration.
 
 pub mod manifest;
+pub mod pool;
 
 pub use manifest::{Manifest, ManifestEntry};
 

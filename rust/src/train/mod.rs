@@ -25,9 +25,10 @@ use crate::config::{BackendKind, ExperimentConfig, StepKind};
 use crate::data::batch::{BatchAssembler, RowSelection};
 use crate::data::Dataset;
 use crate::error::Result;
+use crate::math::chunked::{self, GradScratch};
 use crate::metrics::timer::{Stopwatch, TimeBreakdown};
 use crate::metrics::Trace;
-use crate::pipeline::prefetch::{PrefetchStats, Prefetcher};
+use crate::pipeline::prefetch::{PrefetchStats, PrefetchedBatch, Prefetcher};
 use crate::sampling::Sampler;
 use crate::solvers::linesearch::{backtracking, LineSearchParams, LineSearchScratch};
 use crate::solvers::Solver;
@@ -149,7 +150,11 @@ pub fn run_experiment_with_backend(
     let ls_params = LineSearchParams { alpha0: 1.0, ..Default::default() };
     let mut ls_scratch = LineSearchScratch::default();
     let mut mu_scratch = vec![0f32; n];
-    let mut mu_chunk = vec![0f32; n];
+    let mut sweep_scratch = SweepScratch::default();
+
+    // 0 resets to the default, so a pin from a previous experiment in the
+    // same process never leaks into this one's timings
+    crate::runtime::pool::set_parallelism(cfg.pool_threads);
 
     // initial objective (outside the clock)
     let obj0 = be.full_objective(solver.w(), ds, c)?;
@@ -186,7 +191,7 @@ pub fn run_experiment_with_backend(
                     batch,
                     &mut time,
                     &mut mu_scratch,
-                    &mut mu_chunk,
+                    &mut sweep_scratch,
                 )?;
             } else {
                 full_gradient_sweep(
@@ -198,7 +203,7 @@ pub fn run_experiment_with_backend(
                     sim_local.as_mut().expect("sync path owns the simulator"),
                     &mut time,
                     &mut mu_scratch,
-                    &mut mu_chunk,
+                    &mut sweep_scratch,
                 )?;
             }
             solver.install_full_grad(&mu_scratch);
@@ -282,8 +287,23 @@ pub fn run_experiment_with_backend(
     })
 }
 
-/// Full-dataset gradient at `w` via a sequential chunked sweep, charged to
-/// the simulator and the compute clock. Result in `out`.
+/// Per-experiment scratch for the SVRG full-gradient sweeps: wave slots
+/// for the pooled chunk fold, plus one chunk buffer for the serial
+/// device-backend fallback.
+#[derive(Debug, Default)]
+struct SweepScratch {
+    grad: GradScratch,
+    chunk: Vec<f32>,
+}
+
+/// Full-dataset gradient at `w`, charged to the simulator and the compute
+/// clock. Result in `out`.
+///
+/// Access is charged chunk-by-chunk (the simulator is stateful and its
+/// cost model is order-dependent); on the native backend the compute runs
+/// as a pooled fixed-order chunk fold at the same geometry — bit-identical
+/// for any pool size — while device backends keep the serial per-chunk
+/// dispatch.
 #[allow(clippy::too_many_arguments)]
 fn full_gradient_sweep(
     be: &mut dyn ComputeBackend,
@@ -294,10 +314,11 @@ fn full_gradient_sweep(
     sim: &mut AccessSimulator,
     time: &mut TimeBreakdown,
     out: &mut [f32],
-    scratch: &mut [f32],
+    scratch: &mut SweepScratch,
 ) -> Result<()> {
     let rows = ds.rows();
-    out.fill(0.0);
+    // charge the device model for the whole sweep (same chunk geometry
+    // the compute fold uses)
     let mut start = 0;
     while start < rows {
         let end = (start + chunk).min(rows);
@@ -305,23 +326,39 @@ fn full_gradient_sweep(
         let cost = sim.fetch(&sel);
         time.sim_access_s += cost.time_s;
         time.bytes_borrowed += ds.payload_bytes(&sel);
-        let sw = Stopwatch::start();
-        let view = ds.slice_view(start, end);
-        // pure data term of this chunk (c = 0), weighted by chunk mass
-        be.grad_into(w, &view, 0.0, scratch)?;
-        let weight = (end - start) as f32 / rows as f32;
-        crate::math::axpy(weight, scratch, out);
-        time.compute_s += sw.elapsed_s();
         start = end;
     }
-    // add the regularizer once
-    crate::math::axpy(c, w, out);
+    let sw = Stopwatch::start();
+    if be.is_native_host() {
+        chunked::full_grad_into_chunked(w, ds, c, chunk, out, &mut scratch.grad);
+    } else {
+        out.fill(0.0);
+        scratch.chunk.resize(out.len(), 0.0);
+        let mut start = 0;
+        while start < rows {
+            let end = (start + chunk).min(rows);
+            let view = ds.slice_view(start, end);
+            // pure data term of this chunk (c = 0), weighted by chunk mass
+            be.grad_into(w, &view, 0.0, &mut scratch.chunk)?;
+            let weight = (end - start) as f32 / rows as f32;
+            crate::math::axpy(weight, &scratch.chunk, out);
+            start = end;
+        }
+        // add the regularizer once
+        crate::math::axpy(c, w, out);
+    }
+    time.compute_s += sw.elapsed_s();
     Ok(())
 }
 
 /// Same sweep, but streamed through the persistent reader so SVRG's full
 /// pass shares the zero-copy pipeline (and the one experiment-lifetime
 /// simulator) instead of touching the device model from the driver thread.
+///
+/// Batches arrive in chunk order; the native path buffers up to one wave
+/// of payloads and folds them through the pooled
+/// [`chunked::grad_fold_views`] — the same fixed-order reduction as the
+/// synchronous sweep, so both paths stay bit-identical.
 #[allow(clippy::too_many_arguments)]
 fn full_gradient_sweep_prefetched(
     be: &mut dyn ComputeBackend,
@@ -333,7 +370,7 @@ fn full_gradient_sweep_prefetched(
     chunk: usize,
     time: &mut TimeBreakdown,
     out: &mut [f32],
-    scratch: &mut [f32],
+    scratch: &mut SweepScratch,
 ) -> Result<()> {
     out.fill(0.0);
     let mut sels = Vec::with_capacity(rows.div_ceil(chunk));
@@ -344,13 +381,35 @@ fn full_gradient_sweep_prefetched(
         start = end;
     }
     pf.start_epoch(sels);
-    while let Some(b) = pf.next_batch() {
-        let sw = Stopwatch::start();
-        let view = b.view(cols);
-        be.grad_into(w, &view, 0.0, scratch)?;
-        let weight = view.rows() as f32 / rows as f32;
-        crate::math::axpy(weight, scratch, out);
-        time.compute_s += sw.elapsed_s();
+    if be.is_native_host() {
+        let wave = chunked::WAVE_SLOTS;
+        let mut pending: Vec<PrefetchedBatch> = Vec::with_capacity(wave);
+        let mut done = false;
+        while !done {
+            match pf.next_batch() {
+                Some(b) => pending.push(b),
+                None => done = true,
+            }
+            if pending.len() == wave || (done && !pending.is_empty()) {
+                let sw = Stopwatch::start();
+                {
+                    let views: Vec<_> = pending.iter().map(|b| b.view(cols)).collect();
+                    chunked::grad_fold_views(w, &views, rows, out, &mut scratch.grad);
+                }
+                time.compute_s += sw.elapsed_s();
+                pending.clear();
+            }
+        }
+    } else {
+        scratch.chunk.resize(out.len(), 0.0);
+        while let Some(b) = pf.next_batch() {
+            let sw = Stopwatch::start();
+            let view = b.view(cols);
+            be.grad_into(w, &view, 0.0, &mut scratch.chunk)?;
+            let weight = view.rows() as f32 / rows as f32;
+            crate::math::axpy(weight, &scratch.chunk, out);
+            time.compute_s += sw.elapsed_s();
+        }
     }
     charge_epoch(time, &pf.last_epoch_stats());
     crate::math::axpy(c, w, out);

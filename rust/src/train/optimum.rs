@@ -5,10 +5,15 @@
 //! and strongly convex ⇒ unique minimizer, so every arm shares the same
 //! reference value (the paper plots "difference between objective function
 //! and optimum value").
+//!
+//! On the native backend every full-batch gradient runs as a pooled,
+//! fixed-order chunk fold ([`crate::math::chunked`]) — bit-identical for
+//! any pool size, so `p*` stays a machine-independent reference.
 
 use crate::backend::ComputeBackend;
 use crate::data::Dataset;
 use crate::error::Result;
+use crate::math::chunked::{self, GradScratch};
 
 /// Estimate `p*` with `iters` accelerated full-batch iterations.
 pub fn estimate_optimum(
@@ -24,7 +29,9 @@ pub fn estimate_optimum(
     let mut w_prev = vec![0f32; n];
     let mut v = vec![0f32; n];
     let mut g = vec![0f32; n];
+    let native = be.is_native_host();
     let view = ds.slice_view(0, ds.rows());
+    let mut scratch = GradScratch::default();
 
     for k in 0..iters {
         // Nesterov momentum: v = w + (k-1)/(k+2) (w - w_prev)
@@ -32,7 +39,13 @@ pub fn estimate_optimum(
         for i in 0..n {
             v[i] = w[i] + beta * (w[i] - w_prev[i]);
         }
-        be.grad_into(&v, &view, c, &mut g)?;
+        if native {
+            // pooled deterministic chunk fold on the worker pool
+            chunked::full_grad_into(&v, ds, c, &mut g, &mut scratch);
+        } else {
+            // device backends keep their own single-dispatch full batch
+            be.grad_into(&v, &view, c, &mut g)?;
+        }
         w_prev.copy_from_slice(&w);
         for i in 0..n {
             w[i] = v[i] - lr * g[i];

@@ -8,8 +8,14 @@
 //! the worker iterates at every epoch boundary. For strongly convex ERM
 //! this converges to the same optimum; the paper's access-time argument
 //! applies per worker unchanged — pinned by the tests below.
-
-use std::sync::Arc;
+//!
+//! Epoch compute runs on the persistent worker pool
+//! ([`crate::runtime::pool`]): each shard's state — local iterate,
+//! gradient buffer, batch assembler, backend — lives in a leader-owned
+//! slot that the pool hands back to a thread every epoch, so after the
+//! pool's one-time warm-up **zero threads are spawned** (no per-epoch
+//! `std::thread::scope`) and the epoch-start iterate is shared with the
+//! workers by reference instead of cloned per worker.
 
 use crate::backend::{ComputeBackend, NativeBackend};
 use crate::config::ExperimentConfig;
@@ -39,11 +45,26 @@ pub struct ParallelReport {
     pub wall_s: f64,
 }
 
+/// Per-shard compute state, persistent across epochs. The pool hands each
+/// slot to one thread per epoch ([`map_slots`] gives job `k` exclusive
+/// `&mut` to slot `k`), so the iterate, gradient buffer, assembler scratch
+/// and backend are reused for the whole run — nothing is spawned, cloned
+/// or allocated at an epoch boundary.
+///
+/// [`map_slots`]: crate::runtime::pool::WorkerPool::map_slots
+#[derive(Debug)]
+struct ShardSlot {
+    be: NativeBackend,
+    asm: BatchAssembler,
+    wloc: Vec<f32>,
+    g: Vec<f32>,
+}
+
 /// Run `cfg.epochs` of data-parallel MBSGD with `workers` shards.
 ///
 /// Uses the configured sampling technique inside every shard; the solver is
 /// MBSGD with constant step `1/L` (the Theorem 1 setting). Native backend
-/// per worker.
+/// per worker, compute on the persistent pool.
 pub fn run_data_parallel(
     cfg: &ExperimentConfig,
     ds: &Dataset,
@@ -53,19 +74,25 @@ pub fn run_data_parallel(
     if workers == 0 {
         return Err(Error::Config("workers must be > 0".into()));
     }
+    // 0 resets to the default, so a pin from a previous experiment in the
+    // same process never leaks into this one's timings
+    crate::runtime::pool::set_parallelism(cfg.pool_threads);
     let c = crate::train::reg_for(cfg);
     let lr = (1.0 / ds.lipschitz(c)) as f32;
     let n = ds.cols();
     let shards = shard::split(ds.rows(), workers)?;
     let batch = cfg.batch_size.min(shards.iter().map(|s| s.len()).min().unwrap());
 
-    let ds = Arc::new(ds.clone());
     let mut w = vec![0f32; n];
     let mut sim_access_total_s = 0f64;
     let mut sim_access_critical_s = 0f64;
     let wall = Stopwatch::start();
 
-    // per-worker persistent state: sampler + simulator (cache persists)
+    // per-worker persistent state. The sampler + simulator half feeds the
+    // access model from the leader thread (cache persists across epochs);
+    // the `ShardSlot` half is what the pool hands to a thread each epoch —
+    // iterate, gradient buffer, assembler and backend all live across
+    // epochs, so the steady state allocates and spawns nothing.
     let mut worker_state: Vec<(Shard, Box<dyn Sampler>, AccessSimulator)> = shards
         .iter()
         .map(|sh| {
@@ -75,10 +102,18 @@ pub fn run_data_parallel(
                 .expect("sampler");
             let sim = AccessSimulator::for_dataset(
                 cfg.storage.device().expect("device"),
-                &ds,
+                ds,
                 cfg.storage.cache_bytes(),
             );
             (sh.clone(), sampler, sim)
+        })
+        .collect();
+    let mut slots: Vec<ShardSlot> = (0..workers)
+        .map(|_| ShardSlot {
+            be: NativeBackend::new(),
+            asm: BatchAssembler::new(),
+            wloc: vec![0f32; n],
+            g: vec![0f32; n],
         })
         .collect();
 
@@ -94,8 +129,8 @@ pub fn run_data_parallel(
             jobs.push(sels);
         }
 
-        // charge access per worker (device-parallel), then compute in
-        // parallel threads
+        // charge access per worker (device-parallel), then compute the
+        // shard epochs on the persistent pool
         let mut epoch_access = Vec::with_capacity(workers);
         for ((_, _, sim), sels) in worker_state.iter_mut().zip(&jobs) {
             let mut t = 0f64;
@@ -108,40 +143,29 @@ pub fn run_data_parallel(
         sim_access_critical_s +=
             epoch_access.iter().cloned().fold(0f64, f64::max);
 
-        let w0 = w.clone();
-        let results: Vec<Vec<f32>> = std::thread::scope(|scope| {
-            let handles: Vec<_> = jobs
-                .iter()
-                .map(|sels| {
-                    let ds = Arc::clone(&ds);
-                    let w_start = w0.clone();
-                    scope.spawn(move || {
-                        let mut be = NativeBackend::new();
-                        let mut asm = BatchAssembler::new();
-                        let mut wloc = w_start;
-                        let mut g = vec![0f32; ds.cols()];
-                        for sel in sels {
-                            let view = asm.assemble(&ds, sel);
-                            be.grad_into(&wloc, &view, c, &mut g).expect("grad");
-                            crate::math::axpy(-lr, &g, &mut wloc);
-                        }
-                        wloc
-                    })
-                })
-                .collect();
-            handles.into_iter().map(|h| h.join().expect("worker")).collect()
+        // the epoch-start iterate is shared by reference: every shard job
+        // copies it into its persistent local buffer, no per-worker clone
+        let w0: &[f32] = &w;
+        crate::runtime::pool::global().map_slots(&mut slots, |k, slot| {
+            slot.wloc.copy_from_slice(w0);
+            let ShardSlot { be, asm, wloc, g } = slot;
+            for sel in &jobs[k] {
+                let view = asm.assemble(ds, sel);
+                be.grad_into(wloc, &view, c, g).expect("grad");
+                crate::math::axpy(-lr, g, wloc);
+            }
         });
 
         // parameter averaging
         w.fill(0.0);
         let inv = 1.0 / workers as f32;
-        for wk in &results {
-            crate::math::axpy(inv, wk, &mut w);
+        for slot in &slots {
+            crate::math::axpy(inv, &slot.wloc, &mut w);
         }
     }
 
     let mut be = NativeBackend::new();
-    let final_objective = be.full_objective(&w, &ds, c)?;
+    let final_objective = be.full_objective(&w, ds, c)?;
     Ok(ParallelReport {
         workers,
         w,
@@ -252,5 +276,23 @@ mod tests {
     #[test]
     fn zero_workers_rejected() {
         assert!(run_data_parallel(&cfg(SamplingKind::Cs), &ds(), 0).is_err());
+    }
+
+    #[test]
+    fn no_threads_spawned_after_pool_warmup() {
+        // the §5 data-parallel path must run on the persistent pool: after
+        // the pool's one-time warm-up, whole multi-epoch runs (including a
+        // worker-count change) spawn zero OS threads
+        let d = ds();
+        crate::runtime::pool::global(); // warm-up (idempotent)
+        run_data_parallel(&cfg(SamplingKind::Cs), &d, 3).unwrap();
+        let before = crate::runtime::pool::threads_spawned_total();
+        run_data_parallel(&cfg(SamplingKind::Ss), &d, 3).unwrap();
+        run_data_parallel(&cfg(SamplingKind::Cs), &d, 2).unwrap();
+        assert_eq!(
+            crate::runtime::pool::threads_spawned_total(),
+            before,
+            "data-parallel epochs must reuse pool workers, not spawn"
+        );
     }
 }

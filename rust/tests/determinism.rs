@@ -1,0 +1,194 @@
+//! The compute-plane determinism contract: every pooled reduction is
+//! **bit-identical for every pool parallelism** (the fixed chunk geometry
+//! + slot-isolated partials + serial fixed-order fold rule of
+//! `math::chunked`).
+//!
+//! These tests sweep parallelism {1, 2, 8} over the full objective, the
+//! full gradient and `estimate_optimum`, on dense and CSR layouts, and
+//! pin the pooled gradient against the serial reference fold exactly.
+//! Because the contract holds for *any* setting, the tests stay valid
+//! even if another test mutates the global parallelism knob concurrently.
+
+use samplex::backend::{ComputeBackend, NativeBackend};
+use samplex::data::csr::CsrDataset;
+use samplex::data::dense::DenseDataset;
+use samplex::data::Dataset;
+use samplex::math::chunked::{self, GradScratch};
+use samplex::rng::Rng;
+use samplex::runtime::pool;
+use samplex::train::estimate_optimum;
+
+const POOL_SIZES: [usize; 3] = [1, 2, 8];
+
+fn dense_ds(rows: usize, cols: usize, seed: u64) -> (Dataset, Vec<f32>) {
+    let mut rng = Rng::seed_from(seed);
+    let x: Vec<f32> = (0..rows * cols).map(|_| rng.normal() as f32).collect();
+    let y: Vec<f32> = (0..rows)
+        .map(|_| if rng.uniform() < 0.5 { -1.0 } else { 1.0 })
+        .collect();
+    let w: Vec<f32> = (0..cols).map(|_| rng.normal() as f32 * 0.4).collect();
+    (DenseDataset::new("det-dense", cols, x, y).unwrap().into(), w)
+}
+
+fn csr_ds(rows: usize, cols: usize, density: f64, seed: u64) -> (Dataset, Vec<f32>) {
+    let mut rng = Rng::seed_from(seed);
+    let mut values = Vec::new();
+    let mut col_idx = Vec::new();
+    let mut row_ptr = vec![0u64];
+    let mut y = Vec::with_capacity(rows);
+    for _ in 0..rows {
+        for j in 0..cols {
+            if rng.uniform() < density {
+                values.push(rng.normal() as f32);
+                col_idx.push(j as u32);
+            }
+        }
+        row_ptr.push(values.len() as u64);
+        y.push(if rng.uniform() < 0.5 { 1.0 } else { -1.0 });
+    }
+    let w: Vec<f32> = (0..cols).map(|_| rng.normal() as f32 * 0.4).collect();
+    (
+        Dataset::Csr(CsrDataset::new("det-csr", cols, values, col_idx, row_ptr, y).unwrap()),
+        w,
+    )
+}
+
+/// Run `f` once per pool size and assert all results are bit-identical.
+fn across_pool_sizes<T: PartialEq + std::fmt::Debug>(label: &str, mut f: impl FnMut() -> T) {
+    let mut results: Vec<(usize, T)> = Vec::new();
+    for threads in POOL_SIZES {
+        pool::set_parallelism(threads);
+        let got = f();
+        pool::set_parallelism(0);
+        results.push((threads, got));
+    }
+    let (t0, want) = &results[0];
+    for (t, got) in &results[1..] {
+        assert_eq!(got, want, "{label}: pool={t} differs from pool={t0}");
+    }
+}
+
+#[test]
+fn full_objective_bit_identical_across_pool_sizes_dense_and_csr() {
+    // > 2 chunks of 4096 rows so the fold is genuinely multi-chunk
+    let (dense, wd) = dense_ds(10_000, 12, 0xD0);
+    let (csr, ws) = csr_ds(9_000, 40, 0.1, 0xD1);
+    let mut be = NativeBackend::new();
+    across_pool_sizes("objective/dense", || {
+        be.full_objective(&wd, &dense, 1e-3).unwrap().to_bits()
+    });
+    let mut be = NativeBackend::new();
+    across_pool_sizes("objective/csr", || {
+        be.full_objective(&ws, &csr, 1e-3).unwrap().to_bits()
+    });
+}
+
+#[test]
+fn full_gradient_bit_identical_across_pool_sizes_dense_and_csr() {
+    let (dense, wd) = dense_ds(10_000, 12, 0xE0);
+    let (csr, ws) = csr_ds(9_000, 40, 0.1, 0xE1);
+    for (label, ds, w) in [("grad/dense", &dense, &wd), ("grad/csr", &csr, &ws)] {
+        let cols = ds.cols();
+        across_pool_sizes(label, || {
+            let mut g = vec![0f32; cols];
+            let mut scratch = GradScratch::default();
+            chunked::full_grad_into(w, ds, 1e-3, &mut g, &mut scratch);
+            g.iter().map(|v| v.to_bits()).collect::<Vec<u32>>()
+        });
+    }
+}
+
+#[test]
+fn estimate_optimum_bit_identical_across_pool_sizes() {
+    let (dense, _) = dense_ds(6_000, 8, 0xF0);
+    let (csr, _) = csr_ds(5_000, 20, 0.15, 0xF1);
+    for (label, ds) in [("p*/dense", &dense), ("p*/csr", &csr)] {
+        across_pool_sizes(label, || {
+            let mut be = NativeBackend::new();
+            estimate_optimum(&mut be, ds, 1e-3, 40).unwrap().to_bits()
+        });
+    }
+}
+
+#[test]
+fn prop_pooled_grad_matches_serial_kernel_exactly() {
+    // property sweep: for random shapes/chunk sizes, the pooled fold must
+    // equal the serial chunk fold bit-for-bit (dense and CSR)
+    for case in 0u64..12 {
+        let mut rng = Rng::seed_from(0x9009 + case * 7919);
+        let rows = 50 + rng.below(3000);
+        let cols = 2 + rng.below(24);
+        let chunk = 1 + rng.below(rows);
+        let (ds, w) = if case % 2 == 0 {
+            dense_ds(rows, cols, 0x77 + case)
+        } else {
+            csr_ds(rows, cols, 0.2, 0x77 + case)
+        };
+        let c = if case % 3 == 0 { 0.0 } else { 0.05 };
+
+        // serial reference: same geometry, same fold order, serial kernels
+        let mut want = vec![0f32; cols];
+        let mut g = vec![0f32; cols];
+        let mut start = 0;
+        while start < rows {
+            let end = (start + chunk).min(rows);
+            samplex::math::grad_into_view(&w, &ds.slice_view(start, end), 0.0, &mut g);
+            samplex::math::axpy((end - start) as f32 / rows as f32, &g, &mut want);
+            start = end;
+        }
+        samplex::math::axpy(c, &w, &mut want);
+
+        let mut got = vec![0f32; cols];
+        let mut scratch = GradScratch::default();
+        chunked::full_grad_into_chunked(&w, &ds, c, chunk, &mut got, &mut scratch);
+        assert_eq!(
+            got, want,
+            "case {case}: rows={rows} cols={cols} chunk={chunk} c={c}"
+        );
+    }
+}
+
+#[test]
+fn pooled_objective_matches_trait_default_serial_sweep() {
+    // the native override must reproduce the serial default trait method
+    // (same 4096-row chunking, same fold order) bit-for-bit — pinned here
+    // via a minimal serial backend that only forwards loss_sum
+    struct SerialOracle(NativeBackend);
+    impl ComputeBackend for SerialOracle {
+        fn name(&self) -> &'static str {
+            "serial-oracle"
+        }
+        fn grad_into(
+            &mut self,
+            w: &[f32],
+            b: &samplex::data::batch::BatchView<'_>,
+            c: f32,
+            out: &mut [f32],
+        ) -> samplex::Result<()> {
+            self.0.grad_into(w, b, c, out)
+        }
+        fn batch_obj(
+            &mut self,
+            w: &[f32],
+            b: &samplex::data::batch::BatchView<'_>,
+            c: f32,
+        ) -> samplex::Result<f64> {
+            self.0.batch_obj(w, b, c)
+        }
+        fn loss_sum(
+            &mut self,
+            w: &[f32],
+            b: &samplex::data::batch::BatchView<'_>,
+        ) -> samplex::Result<f64> {
+            self.0.loss_sum(w, b)
+        }
+        // no full_objective override: uses the serial default
+    }
+
+    let (dense, wd) = dense_ds(10_000, 10, 0xAB);
+    let mut serial = SerialOracle(NativeBackend::new());
+    let mut pooled = NativeBackend::new();
+    let a = serial.full_objective(&wd, &dense, 0.01).unwrap();
+    let b = pooled.full_objective(&wd, &dense, 0.01).unwrap();
+    assert_eq!(a.to_bits(), b.to_bits(), "pooled override must match serial default");
+}
