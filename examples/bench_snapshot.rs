@@ -1,10 +1,16 @@
-//! Compute-plane performance snapshot: full-objective and full-gradient
-//! sweep throughput at 1 thread vs the pool default, on a ≥100k-row dense
-//! synthetic and a sparse (CSR) synthetic.
+//! Performance snapshot: the compute plane and the out-of-core I/O plane.
 //!
-//! Writes `BENCH_compute.json` (ns/row, speedup, thread counts) so future
-//! PRs can track compute-plane regressions against a recorded baseline,
-//! and prints the same numbers as a table.
+//! * `BENCH_compute.json` — full-objective and full-gradient sweep
+//!   throughput at 1 thread vs the pool default, on a ≥100k-row dense
+//!   synthetic and a sparse (CSR) synthetic.
+//! * `BENCH_io.json` — the paged store under CS vs SS vs RS epochs at
+//!   resident-pool budgets of 10% / 50% / 100% of the file size: page
+//!   faults, read syscalls, achieved MB/s and read amplification. The
+//!   paper's contiguous-vs-dispersed gap, measured on real file I/O —
+//!   CS/SS must show strictly fewer faults and higher MB/s than RS at
+//!   every budget below 100%.
+//!
+//! Both are recorded baselines for future PRs, and printed as tables.
 //!
 //! ```bash
 //! cargo run --release --example bench_snapshot
@@ -16,10 +22,12 @@
 
 use samplex::backend::{ComputeBackend, NativeBackend};
 use samplex::bench_harness::timing::bench;
+use samplex::data::batch::BatchAssembler;
 use samplex::data::synth::{self, FeatureDist, SparseSynthSpec, SynthSpec};
-use samplex::data::Dataset;
+use samplex::data::{Dataset, PagedDataset};
 use samplex::math::chunked::{self, GradScratch};
 use samplex::runtime::pool;
+use samplex::sampling::{Sampler, SamplingKind};
 
 struct SweepTimes {
     /// Nanoseconds per row, full objective.
@@ -157,5 +165,100 @@ fn main() -> samplex::Result<()> {
     );
     std::fs::write("BENCH_compute.json", &json)?;
     println!("\nwrote BENCH_compute.json");
+
+    io_snapshot(&dense)?;
+    Ok(())
+}
+
+/// Out-of-core I/O snapshot: CS / SS / RS epochs through the paged store at
+/// budgets of 10% / 50% / 100% of the file size. Writes `BENCH_io.json`.
+fn io_snapshot(dense: &Dataset) -> samplex::Result<()> {
+    let dir = std::env::temp_dir().join(format!("samplex_bench_io_{}", std::process::id()));
+    std::fs::create_dir_all(&dir)?;
+    let path = dir.join("bench_io.sxb");
+    dense.as_dense().expect("dense snapshot dataset").save(&path)?;
+    let file_bytes = dense.file_bytes();
+    let rows = dense.rows();
+    let batch = 500usize;
+    let page_bytes = 64 * 1024u64;
+    let epochs = 2usize;
+
+    println!(
+        "\nout-of-core io: {} rows, {:.1} MiB file, {} KiB pages, {} epochs per arm",
+        rows,
+        file_bytes as f64 / (1024.0 * 1024.0),
+        page_bytes / 1024,
+        epochs
+    );
+    println!(
+        "{:<8} {:<6} {:>10} {:>8} {:>12} {:>8} {:>10}",
+        "budget", "samp", "faults", "reads", "bytes_read", "amp", "MB/s"
+    );
+
+    let mut entries = Vec::new();
+    for budget_pct in [10u64, 50, 100] {
+        let budget = file_bytes * budget_pct / 100;
+        for kind in [SamplingKind::Cs, SamplingKind::Ss, SamplingKind::Rs] {
+            // fresh store per arm: every arm starts cold and independent
+            let paged: Dataset = PagedDataset::open(&path, budget, page_bytes)?.into();
+            let mut sampler: Box<dyn Sampler> = kind.build(rows, batch, 7, None)?;
+            let mut asm = BatchAssembler::new();
+            let sw = std::time::Instant::now();
+            for e in 0..epochs {
+                for sel in sampler.epoch(e) {
+                    std::hint::black_box(asm.assemble(&paged, &sel).rows());
+                }
+            }
+            let wall_s = sw.elapsed().as_secs_f64();
+            let io = paged.io_stats();
+            println!(
+                "{:<8} {:<6} {:>10} {:>8} {:>12} {:>8.2} {:>10.1}",
+                format!("{budget_pct}%"),
+                kind.label(),
+                io.page_faults,
+                io.read_calls,
+                io.bytes_read,
+                io.read_amplification(),
+                io.mb_per_s()
+            );
+            entries.push(format!(
+                concat!(
+                    "    {{\n",
+                    "      \"sampling\": \"{}\",\n",
+                    "      \"budget_pct\": {},\n",
+                    "      \"budget_bytes\": {},\n",
+                    "      \"epochs\": {},\n",
+                    "      \"page_faults\": {},\n",
+                    "      \"read_calls\": {},\n",
+                    "      \"bytes_read\": {},\n",
+                    "      \"read_amplification\": {:.4},\n",
+                    "      \"mb_per_s\": {:.2},\n",
+                    "      \"wall_s\": {:.6}\n",
+                    "    }}"
+                ),
+                kind.label(),
+                budget_pct,
+                budget,
+                epochs,
+                io.page_faults,
+                io.read_calls,
+                io.bytes_read,
+                io.read_amplification(),
+                io.mb_per_s(),
+                wall_s,
+            ));
+        }
+    }
+    let json = format!(
+        "{{\n  \"bench\": \"paged_io\",\n  \"file_bytes\": {},\n  \"page_bytes\": {},\n  \"rows\": {},\n  \"batch\": {},\n  \"arms\": [\n{}\n  ]\n}}\n",
+        file_bytes,
+        page_bytes,
+        rows,
+        batch,
+        entries.join(",\n")
+    );
+    std::fs::write("BENCH_io.json", &json)?;
+    println!("wrote BENCH_io.json");
+    std::fs::remove_dir_all(&dir).ok();
     Ok(())
 }

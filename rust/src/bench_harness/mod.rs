@@ -38,6 +38,11 @@ pub struct TableRow {
     pub time_s: f64,
     /// Final full-dataset objective.
     pub objective: f64,
+    /// Simulated device access seconds (the paper's modeled access time).
+    pub sim_access_s: f64,
+    /// Real file I/O of the arm (all-zero for in-core runs) — printed in
+    /// the CSV next to the simulated access time.
+    pub io: crate::storage::pagestore::IoStats,
 }
 
 impl From<&TrainReport> for TableRow {
@@ -49,6 +54,8 @@ impl From<&TrainReport> for TableRow {
             step: r.step.to_string(),
             time_s: r.time.training_time_s(),
             objective: r.final_objective,
+            sim_access_s: r.time.sim_access_s,
+            io: r.time.io,
         }
     }
 }

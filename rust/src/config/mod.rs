@@ -93,6 +93,16 @@ pub struct StorageConfig {
     pub cache_mib: u64,
     /// Block size override in KiB (None = profile default).
     pub block_kib: Option<u64>,
+    /// Train out-of-core: serve features from the on-disk `.sxb`/`.sxc`
+    /// file through the byte-budgeted page store instead of loading them
+    /// resident.
+    pub paged: bool,
+    /// Byte budget of the paged resident pool, in MiB (0 = unbounded:
+    /// sized to hold the whole feature region). The `--memory-budget`
+    /// CLI knob.
+    pub memory_budget_mib: u64,
+    /// Page size of the paged store in KiB (must be ≥ 1).
+    pub page_kib: u64,
 }
 
 impl Default for StorageConfig {
@@ -106,7 +116,14 @@ impl Default for StorageConfig {
         // `storage_profiles` example or set [storage] profile explicitly.
         // cache_mib = 0 because the ram profile *is* the memory level
         // (an L2 page-cache model only makes sense for hdd/ssd).
-        StorageConfig { profile: "ram".into(), cache_mib: 0, block_kib: None }
+        StorageConfig {
+            profile: "ram".into(),
+            cache_mib: 0,
+            block_kib: None,
+            paged: false,
+            memory_budget_mib: 0,
+            page_kib: 64,
+        }
     }
 }
 
@@ -127,6 +144,16 @@ impl StorageConfig {
     /// Cache size in bytes.
     pub fn cache_bytes(&self) -> u64 {
         self.cache_mib * 1024 * 1024
+    }
+
+    /// Paged resident-pool budget in bytes (0 = unbounded).
+    pub fn memory_budget_bytes(&self) -> u64 {
+        self.memory_budget_mib * 1024 * 1024
+    }
+
+    /// Paged store page size in bytes.
+    pub fn page_bytes(&self) -> u64 {
+        self.page_kib * 1024
     }
 }
 
@@ -285,6 +312,15 @@ impl ExperimentConfig {
         if let Some(v) = doc.get_usize("storage", "block_kib")? {
             cfg.storage.block_kib = Some(v as u64);
         }
+        if let Some(v) = doc.get_bool("storage", "paged")? {
+            cfg.storage.paged = v;
+        }
+        if let Some(v) = doc.get_usize("storage", "memory_budget_mib")? {
+            cfg.storage.memory_budget_mib = v as u64;
+        }
+        if let Some(v) = doc.get_usize("storage", "page_kib")? {
+            cfg.storage.page_kib = v as u64;
+        }
         cfg.validate()?;
         Ok(cfg)
     }
@@ -319,6 +355,9 @@ impl ExperimentConfig {
         if let Some(b) = self.storage.block_kib {
             s.push_str(&format!("block_kib = {b}\n"));
         }
+        s.push_str(&format!("paged = {}\n", self.storage.paged));
+        s.push_str(&format!("memory_budget_mib = {}\n", self.storage.memory_budget_mib));
+        s.push_str(&format!("page_kib = {}\n", self.storage.page_kib));
         s
     }
 
@@ -334,6 +373,9 @@ impl ExperimentConfig {
             if !(c > 0.0) || !c.is_finite() {
                 return Err(Error::Config(format!("reg_c must be positive, got {c}")));
             }
+        }
+        if self.storage.page_kib == 0 {
+            return Err(Error::Config("storage.page_kib must be > 0".into()));
         }
         self.storage.device()?;
         Ok(())
@@ -495,9 +537,38 @@ cache_mib = 16
 
     #[test]
     fn storage_block_override() {
-        let s = StorageConfig { profile: "hdd".into(), cache_mib: 1, block_kib: Some(64) };
+        let s = StorageConfig {
+            profile: "hdd".into(),
+            cache_mib: 1,
+            block_kib: Some(64),
+            ..Default::default()
+        };
         assert_eq!(s.device().unwrap().block_bytes, 64 * 1024);
-        let s = StorageConfig { profile: "hdd".into(), cache_mib: 1, block_kib: Some(0) };
+        let s = StorageConfig {
+            profile: "hdd".into(),
+            cache_mib: 1,
+            block_kib: Some(0),
+            ..Default::default()
+        };
         assert!(s.device().is_err());
+    }
+
+    #[test]
+    fn paged_knobs_roundtrip_and_validate() {
+        let mut cfg = ExperimentConfig::default();
+        cfg.storage.paged = true;
+        cfg.storage.memory_budget_mib = 8;
+        cfg.storage.page_kib = 128;
+        let s = cfg.to_toml_string();
+        let back = ExperimentConfig::from_toml_str(&s).unwrap();
+        assert!(back.storage.paged);
+        assert_eq!(back.storage.memory_budget_mib, 8);
+        assert_eq!(back.storage.page_kib, 128);
+        assert_eq!(back.storage.memory_budget_bytes(), 8 * 1024 * 1024);
+        assert_eq!(back.storage.page_bytes(), 128 * 1024);
+        // page size must be positive
+        let mut bad = ExperimentConfig::default();
+        bad.storage.page_kib = 0;
+        assert!(bad.validate().is_err());
     }
 }

@@ -277,6 +277,7 @@ impl OwnedBatch {
 /// bit-for-bit against a materialized gather.
 pub fn gather_owned(ds: &Dataset, sel: &RowSelection) -> OwnedBatch {
     match ds {
+        Dataset::Paged(p) => p.gather_selection(sel),
         Dataset::Dense(d) => {
             let cols = d.cols();
             let rows = sel.len();
@@ -327,6 +328,8 @@ pub struct BatchAssembler {
     vals_buf: Vec<f32>,
     idx_buf: Vec<u32>,
     ptr_buf: Vec<u64>,
+    /// Out-of-core gather parked here so the returned view can borrow it.
+    paged_scratch: Option<OwnedBatch>,
     /// Number of rows gathered (copied) since construction — a real,
     /// measured component of access cost reported by the metrics.
     pub gathered_rows: u64,
@@ -340,14 +343,23 @@ impl BatchAssembler {
         Self::default()
     }
 
-    /// Assemble `sel` from `ds`. Contiguous selections are zero-copy.
+    /// Assemble `sel` from `ds`. Contiguous selections over the in-core
+    /// layouts are zero-copy; paged datasets are gathered from the page
+    /// store (the synchronous out-of-core path — the prefetch pipeline
+    /// additionally pins single-page batches zero-copy).
     pub fn assemble<'a>(&'a mut self, ds: &'a Dataset, sel: &RowSelection) -> BatchView<'a> {
+        if let Dataset::Paged(p) = ds {
+            self.gathered_rows += sel.len() as u64;
+            self.paged_scratch = Some(p.gather_selection(sel));
+            return self.paged_scratch.as_ref().expect("just set").view(p.cols());
+        }
         if let RowSelection::Contiguous { start, end } = sel {
             self.borrowed_batches += 1;
             return ds.slice_view(*start, *end);
         }
         self.gathered_rows += sel.len() as u64;
         match ds {
+            Dataset::Paged(_) => unreachable!("handled above"),
             Dataset::Dense(d) => {
                 let cols = d.cols();
                 self.x_buf.clear();
@@ -544,6 +556,29 @@ mod tests {
             assert_eq!(v.as_csr().unwrap().nnz(), 4);
         }
         assert_eq!(asm.gathered_rows, 10);
+    }
+
+    #[test]
+    fn assembler_serves_paged_datasets_by_gathering() {
+        let d = ds();
+        let dense = d.as_dense().unwrap();
+        let p = std::env::temp_dir().join(format!("batch_paged_{}.sxb", std::process::id()));
+        dense.save(&p).unwrap();
+        let paged: Dataset =
+            crate::data::paged::PagedDataset::open(&p, 64, 16).unwrap().into();
+        let mut asm = BatchAssembler::new();
+        let v = asm.assemble(&paged, &RowSelection::Contiguous { start: 3, end: 6 });
+        assert_eq!(v.as_dense().unwrap().x, dense.rows_slice(3, 6).0);
+        assert_eq!(v.as_dense().unwrap().y, dense.rows_slice(3, 6).1);
+        let v = asm.assemble(&paged, &RowSelection::Scattered(vec![9, 0, 4]));
+        assert_eq!(v.as_dense().unwrap().x, &[18.0, 19.0, 0.0, 1.0, 8.0, 9.0]);
+        assert_eq!(asm.gathered_rows, 6, "paged batches are counted as gathers");
+        assert_eq!(asm.borrowed_batches, 0);
+        // gather_owned routes through the same page store
+        let ob = gather_owned(&paged, &RowSelection::Contiguous { start: 0, end: 10 });
+        let OwnedBatch::Dense { x, .. } = &ob else { panic!("dense gather") };
+        assert_eq!(x.as_slice(), dense.x());
+        std::fs::remove_file(p).ok();
     }
 
     #[test]

@@ -295,39 +295,46 @@ impl CsrDataset {
         Ok(())
     }
 
-    /// Load a `.sxc` file fully into memory.
+    /// Load a `.sxc` file fully into memory. Corruption — bad magic or
+    /// version, zero dims, a header whose geometry disagrees with the real
+    /// file length, truncation — yields a typed [`Error::Corrupt`] with the
+    /// byte offset where the inconsistency was detected.
     pub fn load(path: impl AsRef<Path>) -> Result<Self> {
         let name = path
             .as_ref()
             .file_stem()
             .map(|s| s.to_string_lossy().into_owned())
             .unwrap_or_else(|| "dataset".into());
+        let pstr = path.as_ref().display().to_string();
+        let corrupt = |offset: u64, msg: String| Error::Corrupt { path: pstr.clone(), offset, msg };
         let f = std::fs::File::open(path.as_ref())?;
         let file_len = f.metadata()?.len();
         let mut r = BufReader::new(f);
         let mut magic = [0u8; 4];
-        r.read_exact(&mut magic)?;
+        r.read_exact(&mut magic)
+            .map_err(|e| corrupt(0, format!("file shorter than the magic: {e}")))?;
         if &magic != MAGIC {
-            return Err(Error::DatasetParse { line: 0, msg: "bad .sxc magic".into() });
+            return Err(corrupt(0, format!("bad .sxc magic {magic:?}")));
         }
         let mut b4 = [0u8; 4];
-        r.read_exact(&mut b4)?;
+        r.read_exact(&mut b4)
+            .map_err(|e| corrupt(4, format!("truncated .sxc header: {e}")))?;
         let version = u32::from_le_bytes(b4);
         if version != VERSION {
-            return Err(Error::DatasetParse {
-                line: 0,
-                msg: format!("unsupported .sxc version {version}"),
-            });
+            return Err(corrupt(4, format!("unsupported .sxc version {version}")));
         }
         let mut b8 = [0u8; 8];
-        r.read_exact(&mut b8)?;
+        r.read_exact(&mut b8)
+            .map_err(|e| corrupt(8, format!("truncated .sxc header: {e}")))?;
         let rows64 = u64::from_le_bytes(b8);
-        r.read_exact(&mut b8)?;
+        r.read_exact(&mut b8)
+            .map_err(|e| corrupt(16, format!("truncated .sxc header: {e}")))?;
         let cols64 = u64::from_le_bytes(b8);
-        r.read_exact(&mut b8)?;
+        r.read_exact(&mut b8)
+            .map_err(|e| corrupt(24, format!("truncated .sxc header: {e}")))?;
         let nnz64 = u64::from_le_bytes(b8);
         if rows64 == 0 || cols64 == 0 {
-            return Err(Error::DatasetParse { line: 0, msg: "bad .sxc dims".into() });
+            return Err(corrupt(8, format!("bad .sxc dims {rows64} x {cols64}")));
         }
         // validate the claimed geometry against the actual file length with
         // checked arithmetic BEFORE allocating anything — a corrupt header
@@ -339,13 +346,13 @@ impl CsrDataset {
             HEADER_BYTES.checked_add(labels)?.checked_add(ptrs)?.checked_add(payload)
         })();
         if expected != Some(file_len) {
-            return Err(Error::DatasetParse {
-                line: 0,
-                msg: format!(
+            return Err(corrupt(
+                file_len.min(expected.unwrap_or(u64::MAX)),
+                format!(
                     ".sxc geometry mismatch (rows={rows64} nnz={nnz64} \
                      expects {expected:?} bytes, file has {file_len})"
                 ),
-            });
+            ));
         }
         let rows = rows64 as usize;
         let cols = cols64 as usize;
@@ -508,8 +515,9 @@ mod tests {
         buf.extend_from_slice(&u64::MAX.to_le_bytes()); // nnz
         std::fs::write(&p, &buf).unwrap();
         match CsrDataset::load(&p) {
-            Err(Error::DatasetParse { msg, .. }) => {
+            Err(Error::Corrupt { msg, offset, .. }) => {
                 assert!(msg.contains("geometry"), "{msg}");
+                assert_eq!(offset, 32, "detected at the end of the 32-byte file");
             }
             other => panic!("expected geometry error, got {other:?}"),
         }
@@ -523,6 +531,34 @@ mod tests {
         buf.extend_from_slice(&4u64.to_le_bytes()); // nnz, but no body
         std::fs::write(&p2, &buf).unwrap();
         assert!(CsrDataset::load(&p2).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn corrupting_a_real_file_yields_typed_errors() {
+        let dir = std::env::temp_dir().join(format!("sxc_corrupt_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("c.sxc");
+        toy().save(&p).unwrap();
+        let valid = std::fs::read(&p).unwrap();
+        // truncated body: detected at the end of the shortened file
+        let truncated = &valid[..valid.len() - 5];
+        std::fs::write(&p, truncated).unwrap();
+        match CsrDataset::load(&p) {
+            Err(Error::Corrupt { offset, .. }) => assert_eq!(offset, truncated.len() as u64),
+            other => panic!("expected Corrupt, got {other:?}"),
+        }
+        // flipped magic byte: detected at offset 0
+        let mut bad = valid.clone();
+        bad[0] ^= 0xFF;
+        std::fs::write(&p, &bad).unwrap();
+        match CsrDataset::load(&p) {
+            Err(Error::Corrupt { offset: 0, msg, .. }) => assert!(msg.contains("magic"), "{msg}"),
+            other => panic!("expected Corrupt at 0, got {other:?}"),
+        }
+        // restored file loads again
+        std::fs::write(&p, &valid).unwrap();
+        assert!(CsrDataset::load(&p).is_ok());
         std::fs::remove_dir_all(&dir).ok();
     }
 

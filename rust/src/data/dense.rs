@@ -152,37 +152,63 @@ impl DenseDataset {
         Ok(())
     }
 
-    /// Load a `.sxb` file fully into memory.
+    /// Load a `.sxb` file fully into memory. Corruption — bad magic or
+    /// version, zero dims, a header whose geometry disagrees with the real
+    /// file length, truncation — yields a typed [`Error::Corrupt`] with the
+    /// byte offset where the inconsistency was detected.
     pub fn load(path: impl AsRef<Path>) -> Result<Self> {
         let name = path
             .as_ref()
             .file_stem()
             .map(|s| s.to_string_lossy().into_owned())
             .unwrap_or_else(|| "dataset".into());
+        let pstr = path.as_ref().display().to_string();
+        let corrupt = |offset: u64, msg: String| Error::Corrupt { path: pstr.clone(), offset, msg };
         let f = std::fs::File::open(path.as_ref())?;
+        let file_len = f.metadata()?.len();
         let mut r = BufReader::new(f);
         let mut magic = [0u8; 4];
-        r.read_exact(&mut magic)?;
+        r.read_exact(&mut magic)
+            .map_err(|e| corrupt(0, format!("file shorter than the magic: {e}")))?;
         if &magic != MAGIC {
-            return Err(Error::DatasetParse { line: 0, msg: "bad .sxb magic".into() });
+            return Err(corrupt(0, format!("bad .sxb magic {magic:?}")));
         }
         let mut b4 = [0u8; 4];
-        r.read_exact(&mut b4)?;
+        r.read_exact(&mut b4)
+            .map_err(|e| corrupt(4, format!("truncated .sxb header: {e}")))?;
         let version = u32::from_le_bytes(b4);
         if version != VERSION {
-            return Err(Error::DatasetParse {
-                line: 0,
-                msg: format!("unsupported .sxb version {version}"),
-            });
+            return Err(corrupt(4, format!("unsupported .sxb version {version}")));
         }
         let mut b8 = [0u8; 8];
-        r.read_exact(&mut b8)?;
-        let rows = u64::from_le_bytes(b8) as usize;
-        r.read_exact(&mut b8)?;
-        let cols = u64::from_le_bytes(b8) as usize;
-        if rows == 0 || cols == 0 || rows.checked_mul(cols).is_none() {
-            return Err(Error::DatasetParse { line: 0, msg: "bad .sxb dims".into() });
+        r.read_exact(&mut b8)
+            .map_err(|e| corrupt(8, format!("truncated .sxb header: {e}")))?;
+        let rows64 = u64::from_le_bytes(b8);
+        r.read_exact(&mut b8)
+            .map_err(|e| corrupt(16, format!("truncated .sxb header: {e}")))?;
+        let cols64 = u64::from_le_bytes(b8);
+        if rows64 == 0 || cols64 == 0 {
+            return Err(corrupt(8, format!("bad .sxb dims {rows64} x {cols64}")));
         }
+        // validate the claimed geometry against the real file length with
+        // checked arithmetic BEFORE allocating — a lying header must fail
+        // typed, never OOM
+        let expected = (|| {
+            let labels = 4u64.checked_mul(rows64)?;
+            let feats = 4u64.checked_mul(rows64.checked_mul(cols64)?)?;
+            HEADER_BYTES.checked_add(labels)?.checked_add(feats)
+        })();
+        if expected != Some(file_len) {
+            return Err(corrupt(
+                file_len.min(expected.unwrap_or(u64::MAX)),
+                format!(
+                    ".sxb length mismatch: header {rows64} x {cols64} expects \
+                     {expected:?} bytes, file has {file_len}"
+                ),
+            ));
+        }
+        let rows = rows64 as usize;
+        let cols = cols64 as usize;
         let y = read_f32s(&mut r, rows)?;
         let x = read_f32s(&mut r, rows * cols)?;
         DenseDataset::new(name, cols, x, y)
@@ -272,7 +298,38 @@ mod tests {
         std::fs::create_dir_all(&dir).unwrap();
         let p = dir.join("bad.sxb");
         std::fs::write(&p, b"NOPE").unwrap();
-        assert!(DenseDataset::load(&p).is_err());
+        match DenseDataset::load(&p) {
+            Err(Error::Corrupt { offset: 0, .. }) => {}
+            other => panic!("expected Corrupt at 0, got {other:?}"),
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn load_rejects_truncation_and_lying_headers_typed() {
+        let dir = std::env::temp_dir().join(format!("sxb_corrupt_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("c.sxb");
+        toy().save(&p).unwrap();
+        let valid = std::fs::read(&p).unwrap();
+        // truncation: detected at the end of the shortened file
+        let truncated = &valid[..valid.len() - 3];
+        std::fs::write(&p, truncated).unwrap();
+        match DenseDataset::load(&p) {
+            Err(Error::Corrupt { offset, msg, .. }) => {
+                assert_eq!(offset, truncated.len() as u64);
+                assert!(msg.contains("length mismatch"), "{msg}");
+            }
+            other => panic!("expected Corrupt, got {other:?}"),
+        }
+        // lying rows field: length check must fire without allocating
+        let mut lying = valid.clone();
+        lying[8..16].copy_from_slice(&u64::MAX.to_le_bytes());
+        std::fs::write(&p, &lying).unwrap();
+        assert!(matches!(DenseDataset::load(&p), Err(Error::Corrupt { .. })));
+        // restored file loads again
+        std::fs::write(&p, &valid).unwrap();
+        assert!(DenseDataset::load(&p).is_ok());
         std::fs::remove_dir_all(&dir).ok();
     }
 

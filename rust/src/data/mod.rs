@@ -1,6 +1,6 @@
 //! Datasets: the layout seam of the whole system.
 //!
-//! Two concrete stores live behind one [`Dataset`] type:
+//! Three concrete stores live behind one [`Dataset`] type:
 //!
 //! * [`DenseDataset`] — row-major `f32` features (`.sxb` on disk). Chosen
 //!   for the paper's low-dimensional physics sets (HIGGS, SUSY, covtype…)
@@ -9,17 +9,29 @@
 //!   `.sxc` on disk). Chosen for high-dimensional LIBSVM ingests (rcv1,
 //!   news20) and sparse synthetics, where densifying is impossible — O(nnz)
 //!   memory, nnz-proportional access cost.
+//! * [`paged::PagedDataset`] — **out-of-core**: either on-disk layout
+//!   served through a byte-budgeted page store
+//!   ([`crate::storage::pagestore`]). Only labels (and CSR `row_ptr`)
+//!   stay resident; feature pages are faulted on demand, so datasets
+//!   larger than RAM train with trajectories bit-identical to the
+//!   in-core stores.
 //!
 //! Everything downstream (samplers, the storage simulator, the zero-copy
 //! prefetch pipeline, the solvers) is layout-polymorphic through
 //! [`batch::BatchView`]; only the innermost math kernels dispatch on the
-//! layout. Contiguous CS/SS selections borrow either layout zero-copy — a
-//! dense row range is one slice, a CSR row range is three.
+//! layout. Contiguous CS/SS selections borrow the in-core layouts
+//! zero-copy — a dense row range is one slice, a CSR row range is three —
+//! and the paged store pins a batch zero-copy when it lands inside one
+//! resident page. The one seam paged stores cannot serve is
+//! [`Dataset::slice_view`] (an unbounded borrow into memory that may not
+//! be resident); the batch assembler, the prefetcher and the chunked
+//! sweeps all route paged data through gather/pin paths instead.
 
 pub mod batch;
 pub mod csr;
 pub mod dense;
 pub mod libsvm;
+pub mod paged;
 pub mod registry;
 pub mod scaling;
 pub mod synth;
@@ -27,16 +39,21 @@ pub mod synth;
 pub use batch::{BatchAssembler, BatchView, OwnedBatch};
 pub use csr::CsrDataset;
 pub use dense::DenseDataset;
+pub use paged::PagedDataset;
 
 use crate::data::batch::RowSelection;
+use crate::storage::pagestore::IoStats;
 
-/// A dataset in one of the two supported memory layouts.
+/// A dataset in one of the supported layouts (in-core dense, in-core CSR,
+/// or paged out-of-core).
 #[derive(Debug, Clone)]
 pub enum Dataset {
     /// Dense row-major store.
     Dense(DenseDataset),
     /// Compressed-sparse-row store.
     Csr(CsrDataset),
+    /// Disk-backed paged store (either underlying layout).
+    Paged(PagedDataset),
 }
 
 impl From<DenseDataset> for Dataset {
@@ -51,12 +68,19 @@ impl From<CsrDataset> for Dataset {
     }
 }
 
+impl From<PagedDataset> for Dataset {
+    fn from(p: PagedDataset) -> Self {
+        Dataset::Paged(p)
+    }
+}
+
 impl Dataset {
     /// Dataset name.
     pub fn name(&self) -> &str {
         match self {
             Dataset::Dense(d) => &d.name,
             Dataset::Csr(c) => &c.name,
+            Dataset::Paged(p) => &p.name,
         }
     }
 
@@ -66,6 +90,7 @@ impl Dataset {
         match self {
             Dataset::Dense(d) => d.rows(),
             Dataset::Csr(c) => c.rows(),
+            Dataset::Paged(p) => p.rows(),
         }
     }
 
@@ -75,6 +100,7 @@ impl Dataset {
         match self {
             Dataset::Dense(d) => d.cols(),
             Dataset::Csr(c) => c.cols(),
+            Dataset::Paged(p) => p.cols(),
         }
     }
 
@@ -84,6 +110,7 @@ impl Dataset {
         match self {
             Dataset::Dense(d) => d.rows() * d.cols(),
             Dataset::Csr(c) => c.nnz(),
+            Dataset::Paged(p) => p.nnz(),
         }
     }
 
@@ -93,19 +120,25 @@ impl Dataset {
         match self {
             Dataset::Dense(d) => d.y(),
             Dataset::Csr(c) => c.y(),
+            Dataset::Paged(p) => p.y(),
         }
     }
 
-    /// True for the CSR layout.
+    /// True for the in-core CSR layout.
     pub fn is_csr(&self) -> bool {
         matches!(self, Dataset::Csr(_))
+    }
+
+    /// True for the paged out-of-core store.
+    pub fn is_paged(&self) -> bool {
+        matches!(self, Dataset::Paged(_))
     }
 
     /// The dense store, if this is a dense dataset.
     pub fn as_dense(&self) -> Option<&DenseDataset> {
         match self {
             Dataset::Dense(d) => Some(d),
-            Dataset::Csr(_) => None,
+            _ => None,
         }
     }
 
@@ -113,12 +146,28 @@ impl Dataset {
     pub fn as_csr(&self) -> Option<&CsrDataset> {
         match self {
             Dataset::Csr(c) => Some(c),
-            Dataset::Dense(_) => None,
+            _ => None,
+        }
+    }
+
+    /// The paged store, if this is an out-of-core dataset.
+    pub fn as_paged(&self) -> Option<&PagedDataset> {
+        match self {
+            Dataset::Paged(p) => Some(p),
+            _ => None,
         }
     }
 
     /// Zero-copy [`BatchView`] of contiguous rows `[start, end)` — the CS/SS
-    /// fast path for both layouts.
+    /// fast path for the in-core layouts.
+    ///
+    /// # Panics
+    ///
+    /// Panics for paged datasets: an out-of-core store cannot hand out
+    /// borrows into memory that may not be resident. Every production call
+    /// site (batch assembler, prefetcher, chunked sweeps) routes paged data
+    /// through the gather/pin paths instead; reaching this arm is a
+    /// programming error, not a data condition.
     #[inline]
     pub fn slice_view(&self, start: usize, end: usize) -> BatchView<'_> {
         match self {
@@ -127,6 +176,10 @@ impl Dataset {
                 BatchView::dense(x, y, d.cols())
             }
             Dataset::Csr(c) => BatchView::Csr(c.slice(start, end)),
+            Dataset::Paged(_) => panic!(
+                "slice_view is not available for paged (out-of-core) datasets; \
+                 use the batch assembler / gather paths"
+            ),
         }
     }
 
@@ -143,15 +196,18 @@ impl Dataset {
                     .map(|&r| c.row_nnz(r as usize) as u64 * csr::NNZ_BYTES)
                     .sum(),
             },
+            Dataset::Paged(p) => p.payload_bytes(sel),
         }
     }
 
     /// Upper bound on the per-sample gradient Lipschitz constant
-    /// (`max_i ||x_i||^2 / 4 + C`) — O(stored entries).
+    /// (`max_i ||x_i||^2 / 4 + C`) — O(stored entries); one sequential
+    /// chunked file sweep for paged stores, bit-identical across layouts.
     pub fn lipschitz(&self, c: f32) -> f64 {
         match self {
             Dataset::Dense(d) => d.lipschitz(c),
             Dataset::Csr(s) => s.lipschitz(c),
+            Dataset::Paged(p) => p.lipschitz(c),
         }
     }
 
@@ -160,23 +216,47 @@ impl Dataset {
         match self {
             Dataset::Dense(d) => d.file_bytes(),
             Dataset::Csr(c) => c.file_bytes(),
+            Dataset::Paged(p) => p.file_bytes(),
+        }
+    }
+
+    /// Real I/O counters of the paged store (all-zero for in-core layouts,
+    /// which perform no file I/O after load).
+    pub fn io_stats(&self) -> IoStats {
+        match self {
+            Dataset::Paged(p) => p.io_stats(),
+            _ => IoStats::default(),
         }
     }
 
     /// One-time random row permutation (paper §5 pre-shuffle), layout
-    /// preserving.
-    pub fn shuffle_rows(&mut self, seed: u64) {
+    /// preserving. Errors for paged datasets — an out-of-core store cannot
+    /// rewrite its file; shuffle when generating it instead.
+    pub fn shuffle_rows(&mut self, seed: u64) -> crate::error::Result<()> {
         match self {
             Dataset::Dense(d) => scaling::shuffle_rows(d, seed),
             Dataset::Csr(c) => c.shuffle_rows(seed),
+            Dataset::Paged(_) => {
+                return Err(crate::error::Error::Config(
+                    "cannot shuffle a paged dataset in place; regenerate the file \
+                     pre-shuffled instead"
+                        .into(),
+                ))
+            }
         }
+        Ok(())
     }
 
-    /// Save to the layout's native binary format.
+    /// Save to the layout's native binary format (paged datasets already
+    /// live on disk; saving one is an error).
     pub fn save(&self, path: impl AsRef<std::path::Path>) -> crate::error::Result<()> {
         match self {
             Dataset::Dense(d) => d.save(path),
             Dataset::Csr(c) => c.save(path),
+            Dataset::Paged(p) => Err(crate::error::Error::Config(format!(
+                "paged dataset '{}' is already disk-backed; copy the file instead",
+                p.name
+            ))),
         }
     }
 }
@@ -233,5 +313,25 @@ mod tests {
         assert!(dense().slice_view(0, 2).as_dense().is_some());
         assert!(csr().slice_view(0, 2).as_csr().is_some());
         assert_eq!(csr().slice_view(1, 3).rows(), 2);
+    }
+
+    #[test]
+    fn paged_variant_dispatches() {
+        let d = dense();
+        let p = std::env::temp_dir().join(format!("ds_mod_paged_{}.sxb", std::process::id()));
+        d.save(&p).unwrap();
+        let mut pd: Dataset = PagedDataset::open(&p, 0, 64).unwrap().into();
+        assert!(pd.is_paged() && !pd.is_csr());
+        assert!(pd.as_paged().is_some() && pd.as_dense().is_none() && pd.as_csr().is_none());
+        assert_eq!((pd.rows(), pd.cols(), pd.nnz()), (4, 3, 12));
+        assert_eq!(pd.y(), d.y());
+        assert_eq!(pd.file_bytes(), d.file_bytes());
+        assert_eq!(pd.payload_bytes(&RowSelection::Contiguous { start: 0, end: 2 }), 24);
+        assert_eq!(pd.io_stats().bytes_read, 0, "metadata alone reads no payload");
+        assert_eq!(pd.lipschitz(0.5).to_bits(), d.lipschitz(0.5).to_bits());
+        assert!(pd.io_stats().bytes_read > 0, "the lipschitz sweep reads the file");
+        assert!(pd.shuffle_rows(1).is_err(), "paged shuffle must be rejected");
+        assert!(pd.save(&p).is_err(), "paged save must be rejected");
+        std::fs::remove_file(p).ok();
     }
 }

@@ -1,0 +1,838 @@
+//! Out-of-core dataset: the [`Dataset`](crate::data::Dataset) seam served
+//! from a [`PageStore`](crate::storage::pagestore::PageStore) instead of
+//! resident arrays.
+//!
+//! A [`PagedDataset`] keeps only the *small* parts of a `.sxb`/`.sxc` file
+//! in memory — labels (4 B/row) and, for CSR, the `row_ptr` offsets
+//! (8 B/row) — while the feature payload (the `rows × cols` f32 block or
+//! the nnz `(col_idx, value)` pairs) stays on disk and is faulted page by
+//! page within a byte budget. Everything downstream is unchanged:
+//!
+//! * contiguous CS/SS selections resolve to maximal page runs served by
+//!   sequential reads, and a batch that lands inside one resident page is
+//!   **borrowed zero-copy** out of the refcounted page
+//!   ([`PagedBatchData::PinnedPage`]);
+//! * scattered RS selections fault their pages individually — the paper's
+//!   dispersed-access penalty, now measured on real file I/O
+//!   ([`crate::storage::pagestore::IoStats`]);
+//! * every view handed to the solvers holds exactly the bytes the in-core
+//!   stores would hold, so trajectories are **bit-identical** to
+//!   [`DenseDataset`](crate::data::dense::DenseDataset) /
+//!   [`CsrDataset`](crate::data::csr::CsrDataset) runs.
+//!
+//! Concurrency: the store sits behind a `Mutex` shared by every clone of
+//! the dataset (the prefetch reader thread, the driver, pool workers), so
+//! I/O stats accumulate in one place and pages warmed by the reader are
+//! hits for everyone.
+//!
+//! Error policy: `open` and the store return typed [`Error`]s; the batch
+//! assembly methods sit behind infallible seams (`BatchAssembler`,
+//! `gather_owned`, the chunked sweeps) and panic with a clear message if
+//! the file turns unreadable mid-training — an environmental failure, not
+//! a recoverable state.
+
+use std::fs::File;
+use std::io::{Read, Seek, SeekFrom};
+use std::path::Path;
+use std::sync::{Arc, Mutex, MutexGuard};
+
+use crate::data::batch::{BatchView, CsrView, OwnedBatch, RowSelection};
+use crate::data::csr::NNZ_BYTES;
+use crate::error::{Error, Result};
+use crate::storage::pagestore::{IoStats, Page, PageLayout, PageStore};
+
+/// Assembled out-of-core batch data: pinned zero-copy page or owned gather.
+#[derive(Debug, Clone)]
+pub enum PagedBatchData {
+    /// The whole batch lies inside one resident page — borrowed zero-copy
+    /// out of the refcounted page buffer (eviction cannot invalidate it).
+    PinnedPage {
+        /// The page holding the batch's elements.
+        page: Arc<Page>,
+        /// Element offset of the batch's first element inside the page.
+        elem_lo: usize,
+    },
+    /// The batch spans pages (or rows were scattered): copied out.
+    Gathered(OwnedBatch),
+}
+
+impl PagedBatchData {
+    /// True for the zero-copy single-page case.
+    pub fn is_pinned(&self) -> bool {
+        matches!(self, PagedBatchData::PinnedPage { .. })
+    }
+}
+
+/// Disk-backed dataset implementing the [`Dataset`](crate::data::Dataset)
+/// seam over a byte-budgeted page store.
+#[derive(Debug, Clone)]
+pub struct PagedDataset {
+    /// Dataset name (file stem).
+    pub name: String,
+    rows: usize,
+    cols: usize,
+    /// Resident labels (shared across clones).
+    y: Arc<Vec<f32>>,
+    /// Resident CSR row offsets (absolute nnz indices); `None` for `.sxb`.
+    row_ptr: Option<Arc<Vec<u64>>>,
+    x_base: u64,
+    file_bytes: u64,
+    page_bytes: u64,
+    budget_bytes: u64,
+    store: Arc<Mutex<PageStore>>,
+}
+
+impl PagedDataset {
+    /// Open a `.sxb` or `.sxc` file for out-of-core training (dispatched on
+    /// the magic). `budget_bytes` caps the resident page pool (0 = size the
+    /// pool to hold the whole feature region); `page_bytes` is the page
+    /// size (must be a positive multiple of 8 so both layouts align).
+    pub fn open(path: impl AsRef<Path>, budget_bytes: u64, page_bytes: u64) -> Result<Self> {
+        let path = path.as_ref();
+        let name = path
+            .file_stem()
+            .map(|s| s.to_string_lossy().into_owned())
+            .unwrap_or_else(|| "dataset".into());
+        let pstr = path.display().to_string();
+        let mut f = File::open(path)?;
+        let file_bytes = f.metadata()?.len();
+        let mut magic = [0u8; 4];
+        f.read_exact(&mut magic).map_err(|_| Error::Corrupt {
+            path: pstr.clone(),
+            offset: 0,
+            msg: "file shorter than the 4-byte magic".into(),
+        })?;
+        match &magic {
+            b"SXB1" => Self::open_sxb(f, path, name, file_bytes, budget_bytes, page_bytes),
+            b"SXC1" => Self::open_sxc(f, path, name, file_bytes, budget_bytes, page_bytes),
+            other => Err(Error::Corrupt {
+                path: pstr,
+                offset: 0,
+                msg: format!("unknown magic {other:?} (expected SXB1 or SXC1)"),
+            }),
+        }
+    }
+
+    fn open_sxb(
+        mut f: File,
+        path: &Path,
+        name: String,
+        file_bytes: u64,
+        budget_bytes: u64,
+        page_bytes: u64,
+    ) -> Result<Self> {
+        let pstr = path.display().to_string();
+        let corrupt = |offset: u64, msg: String| Error::Corrupt { path: pstr.clone(), offset, msg };
+        let mut hdr = [0u8; 20];
+        f.read_exact(&mut hdr)
+            .map_err(|e| corrupt(4, format!("truncated .sxb header: {e}")))?;
+        let version = u32::from_le_bytes(hdr[0..4].try_into().unwrap());
+        if version != 1 {
+            return Err(corrupt(4, format!("unsupported .sxb version {version}")));
+        }
+        let rows64 = u64::from_le_bytes(hdr[4..12].try_into().unwrap());
+        let cols64 = u64::from_le_bytes(hdr[12..20].try_into().unwrap());
+        if rows64 == 0 || cols64 == 0 {
+            return Err(corrupt(8, format!("bad .sxb dims {rows64} x {cols64}")));
+        }
+        let expected = (|| {
+            let labels = 4u64.checked_mul(rows64)?;
+            let feats = 4u64.checked_mul(rows64.checked_mul(cols64)?)?;
+            24u64.checked_add(labels)?.checked_add(feats)
+        })();
+        if expected != Some(file_bytes) {
+            return Err(corrupt(
+                file_bytes.min(expected.unwrap_or(u64::MAX)),
+                format!(
+                    ".sxb length mismatch: header {rows64} x {cols64} expects \
+                     {expected:?} bytes, file has {file_bytes}"
+                ),
+            ));
+        }
+        let rows = rows64 as usize;
+        let cols = cols64 as usize;
+        let y = read_label_block(&mut f, rows, &pstr, 24)?;
+        let x_base = 24 + 4 * rows64;
+        let n_elems = rows64 * cols64;
+        let store = new_store(
+            path,
+            PageLayout::DenseF32,
+            x_base,
+            n_elems,
+            page_bytes,
+            budget_bytes,
+        )?;
+        Ok(PagedDataset {
+            name,
+            rows,
+            cols,
+            y: Arc::new(y),
+            row_ptr: None,
+            x_base,
+            file_bytes,
+            page_bytes,
+            budget_bytes: effective_budget(budget_bytes, n_elems, PageLayout::DenseF32, page_bytes),
+            store: Arc::new(Mutex::new(store)),
+        })
+    }
+
+    fn open_sxc(
+        mut f: File,
+        path: &Path,
+        name: String,
+        file_bytes: u64,
+        budget_bytes: u64,
+        page_bytes: u64,
+    ) -> Result<Self> {
+        let pstr = path.display().to_string();
+        let corrupt = |offset: u64, msg: String| Error::Corrupt { path: pstr.clone(), offset, msg };
+        let mut hdr = [0u8; 28];
+        f.read_exact(&mut hdr)
+            .map_err(|e| corrupt(4, format!("truncated .sxc header: {e}")))?;
+        let version = u32::from_le_bytes(hdr[0..4].try_into().unwrap());
+        if version != 1 {
+            return Err(corrupt(4, format!("unsupported .sxc version {version}")));
+        }
+        let rows64 = u64::from_le_bytes(hdr[4..12].try_into().unwrap());
+        let cols64 = u64::from_le_bytes(hdr[12..20].try_into().unwrap());
+        let nnz64 = u64::from_le_bytes(hdr[20..28].try_into().unwrap());
+        if rows64 == 0 || cols64 == 0 {
+            return Err(corrupt(8, format!("bad .sxc dims {rows64} x {cols64}")));
+        }
+        let expected = (|| {
+            let labels = 4u64.checked_mul(rows64)?;
+            let ptrs = 8u64.checked_mul(rows64.checked_add(1)?)?;
+            let payload = NNZ_BYTES.checked_mul(nnz64)?;
+            32u64.checked_add(labels)?.checked_add(ptrs)?.checked_add(payload)
+        })();
+        if expected != Some(file_bytes) {
+            return Err(corrupt(
+                file_bytes.min(expected.unwrap_or(u64::MAX)),
+                format!(
+                    ".sxc length mismatch: header rows={rows64} nnz={nnz64} \
+                     expects {expected:?} bytes, file has {file_bytes}"
+                ),
+            ));
+        }
+        let rows = rows64 as usize;
+        let cols = cols64 as usize;
+        let y = read_label_block(&mut f, rows, &pstr, 32)?;
+        let ptr_base = 32 + 4 * rows64;
+        let mut row_ptr = Vec::with_capacity(rows + 1);
+        let mut b8 = [0u8; 8];
+        for i in 0..=rows {
+            f.read_exact(&mut b8)
+                .map_err(|e| corrupt(ptr_base + 8 * i as u64, format!("truncated row_ptr: {e}")))?;
+            row_ptr.push(u64::from_le_bytes(b8));
+        }
+        if row_ptr[0] != 0 || *row_ptr.last().unwrap() != nnz64 {
+            return Err(corrupt(
+                ptr_base,
+                format!(
+                    "row_ptr must span 0..={nnz64}, got {}..={}",
+                    row_ptr[0],
+                    row_ptr.last().unwrap()
+                ),
+            ));
+        }
+        if let Some(i) = row_ptr.windows(2).position(|w| w[0] > w[1]) {
+            return Err(corrupt(
+                ptr_base + 8 * i as u64,
+                format!("row_ptr decreases at row {i}"),
+            ));
+        }
+        let x_base = ptr_base + 8 * (rows64 + 1);
+        let mut store = new_store(
+            path,
+            PageLayout::IdxValPairs,
+            x_base,
+            nnz64,
+            page_bytes,
+            budget_bytes,
+        )?;
+        // payload corruption (col_idx past the feature dim) must fault
+        // typed, matching CsrDataset::load's validation
+        store.set_idx_bound(u32::try_from(cols).unwrap_or(u32::MAX));
+        Ok(PagedDataset {
+            name,
+            rows,
+            cols,
+            y: Arc::new(y),
+            row_ptr: Some(Arc::new(row_ptr)),
+            x_base,
+            file_bytes,
+            page_bytes,
+            budget_bytes: effective_budget(
+                budget_bytes,
+                nnz64,
+                PageLayout::IdxValPairs,
+                page_bytes,
+            ),
+            store: Arc::new(Mutex::new(store)),
+        })
+    }
+
+    /// Number of data points `l`.
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    /// Feature dimension `n`.
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// Stored entries: `rows * cols` for a dense file, nnz for CSR.
+    #[inline]
+    pub fn nnz(&self) -> usize {
+        match &self.row_ptr {
+            None => self.rows * self.cols,
+            Some(p) => *p.last().unwrap() as usize,
+        }
+    }
+
+    /// Resident labels.
+    #[inline]
+    pub fn y(&self) -> &[f32] {
+        &self.y
+    }
+
+    /// Resident CSR row offsets (absolute), when the file is `.sxc`.
+    #[inline]
+    pub fn row_ptr(&self) -> Option<&[u64]> {
+        self.row_ptr.as_deref().map(|v| v.as_slice())
+    }
+
+    /// True when the underlying file is the sparse `.sxc` layout.
+    pub fn is_sparse(&self) -> bool {
+        self.row_ptr.is_some()
+    }
+
+    /// Byte offset of the feature region in the file.
+    pub fn x_base(&self) -> u64 {
+        self.x_base
+    }
+
+    /// Total size of the on-disk encoding.
+    pub fn file_bytes(&self) -> u64 {
+        self.file_bytes
+    }
+
+    /// Configured page size in bytes.
+    pub fn page_bytes(&self) -> u64 {
+        self.page_bytes
+    }
+
+    /// Effective resident-pool budget in bytes.
+    pub fn budget_bytes(&self) -> u64 {
+        self.budget_bytes
+    }
+
+    /// Pages covering the feature region.
+    pub fn n_pages(&self) -> u64 {
+        self.lock().n_pages()
+    }
+
+    /// Snapshot of the store's lifetime I/O statistics (shared by every
+    /// clone of this dataset).
+    pub fn io_stats(&self) -> IoStats {
+        self.lock().stats
+    }
+
+    /// Drop every resident page (cold-start between experiment arms;
+    /// counters are preserved).
+    pub fn drop_pool(&self) {
+        self.lock().drop_pool();
+    }
+
+    fn lock(&self) -> MutexGuard<'_, PageStore> {
+        self.store.lock().expect("page store poisoned")
+    }
+
+    /// Feature (+ index) bytes `sel` spans — mirrors
+    /// [`Dataset::payload_bytes`](crate::data::Dataset::payload_bytes).
+    pub fn payload_bytes(&self, sel: &RowSelection) -> u64 {
+        match &self.row_ptr {
+            None => sel.len() as u64 * self.cols as u64 * 4,
+            Some(p) => match sel {
+                RowSelection::Contiguous { start, end } => NNZ_BYTES * (p[*end] - p[*start]),
+                RowSelection::Scattered(rows) => rows
+                    .iter()
+                    .map(|&r| NNZ_BYTES * (p[r as usize + 1] - p[r as usize]))
+                    .sum(),
+            },
+        }
+    }
+
+    /// Element range (dense f32s or nnz pairs) of rows `[start, end)`.
+    fn elem_range(&self, start: usize, end: usize) -> (u64, u64) {
+        match &self.row_ptr {
+            None => ((start * self.cols) as u64, (end * self.cols) as u64),
+            Some(p) => (p[start], p[end]),
+        }
+    }
+
+    /// Assemble contiguous rows `[start, end)`: pinned zero-copy when the
+    /// range lies inside one page, otherwise gathered across pages with
+    /// sequential run reads.
+    pub fn assemble_contiguous(&self, start: usize, end: usize) -> PagedBatchData {
+        assert!(start < end && end <= self.rows, "bad range [{start},{end})");
+        let (lo, hi) = self.elem_range(start, end);
+        let pinned = self
+            .lock()
+            .pin_range(lo, hi)
+            .unwrap_or_else(|e| panic!("paged dataset '{}': {e}", self.name));
+        match pinned {
+            Some((page, elem_lo)) => PagedBatchData::PinnedPage { page, elem_lo },
+            None => PagedBatchData::Gathered(self.gather_range(start, end)),
+        }
+    }
+
+    /// Gather contiguous rows `[start, end)` into an owned batch (always
+    /// copies — the forced-owned path used by the chunked sweeps and the
+    /// equivalence tests).
+    pub fn gather_range(&self, start: usize, end: usize) -> OwnedBatch {
+        assert!(start < end && end <= self.rows, "bad range [{start},{end})");
+        let (lo, hi) = self.elem_range(start, end);
+        match &self.row_ptr {
+            None => {
+                let mut x = Vec::with_capacity((hi - lo) as usize);
+                self.lock()
+                    .with_range(lo, hi, |pg, a, b| x.extend_from_slice(&pg.dense()[a..b]))
+                    .unwrap_or_else(|e| panic!("paged dataset '{}': {e}", self.name));
+                OwnedBatch::Dense { x, y: self.y[start..end].to_vec() }
+            }
+            Some(p) => {
+                let mut values = Vec::with_capacity((hi - lo) as usize);
+                let mut col_idx = Vec::with_capacity((hi - lo) as usize);
+                self.lock()
+                    .with_range(lo, hi, |pg, a, b| {
+                        let (v, i) = pg.pairs();
+                        values.extend_from_slice(&v[a..b]);
+                        col_idx.extend_from_slice(&i[a..b]);
+                    })
+                    .unwrap_or_else(|e| panic!("paged dataset '{}': {e}", self.name));
+                let base = p[start];
+                let row_ptr: Vec<u64> = p[start..=end].iter().map(|q| q - base).collect();
+                OwnedBatch::Csr { values, col_idx, row_ptr, y: self.y[start..end].to_vec() }
+            }
+        }
+    }
+
+    /// Gather an explicit row list (RS): each row's pages are faulted
+    /// individually — the dispersed-access penalty, on real files.
+    pub fn gather_rows(&self, rows: &[u32]) -> OwnedBatch {
+        match &self.row_ptr {
+            None => {
+                let mut x = Vec::with_capacity(rows.len() * self.cols);
+                let mut y = Vec::with_capacity(rows.len());
+                let mut st = self.lock();
+                for &r in rows {
+                    let r = r as usize;
+                    assert!(r < self.rows, "row {r} out of bounds");
+                    let lo = (r * self.cols) as u64;
+                    st.with_range(lo, lo + self.cols as u64, |pg, a, b| {
+                        x.extend_from_slice(&pg.dense()[a..b]);
+                    })
+                    .unwrap_or_else(|e| panic!("paged dataset '{}': {e}", self.name));
+                    y.push(self.y[r]);
+                }
+                OwnedBatch::Dense { x, y }
+            }
+            Some(p) => {
+                let mut values = Vec::new();
+                let mut col_idx = Vec::new();
+                let mut row_ptr = Vec::with_capacity(rows.len() + 1);
+                let mut y = Vec::with_capacity(rows.len());
+                row_ptr.push(0u64);
+                let mut st = self.lock();
+                for &r in rows {
+                    let r = r as usize;
+                    assert!(r < self.rows, "row {r} out of bounds");
+                    st.with_range(p[r], p[r + 1], |pg, a, b| {
+                        let (v, i) = pg.pairs();
+                        values.extend_from_slice(&v[a..b]);
+                        col_idx.extend_from_slice(&i[a..b]);
+                    })
+                    .unwrap_or_else(|e| panic!("paged dataset '{}': {e}", self.name));
+                    row_ptr.push(values.len() as u64);
+                    y.push(self.y[r]);
+                }
+                OwnedBatch::Csr { values, col_idx, row_ptr, y }
+            }
+        }
+    }
+
+    /// Gather any selection into an owned batch.
+    pub fn gather_selection(&self, sel: &RowSelection) -> OwnedBatch {
+        match sel {
+            RowSelection::Contiguous { start, end } => self.gather_range(*start, *end),
+            RowSelection::Scattered(rows) => self.gather_rows(rows),
+        }
+    }
+
+    /// Materialize the [`BatchView`] of an assembled batch for rows
+    /// `[start, end)`. Pinned batches alias the page buffer (and, for CSR,
+    /// the resident absolute `row_ptr`); gathered batches view their own
+    /// buffers.
+    pub fn view_of<'a>(
+        &'a self,
+        data: &'a PagedBatchData,
+        start: usize,
+        end: usize,
+    ) -> BatchView<'a> {
+        match data {
+            PagedBatchData::Gathered(ob) => ob.view(self.cols),
+            PagedBatchData::PinnedPage { page, elem_lo } => match (&**page, &self.row_ptr) {
+                (Page::Dense(x), None) => BatchView::dense(
+                    &x[*elem_lo..*elem_lo + (end - start) * self.cols],
+                    &self.y[start..end],
+                    self.cols,
+                ),
+                (Page::Pairs { values, col_idx }, Some(p)) => {
+                    let nnz = (p[end] - p[start]) as usize;
+                    BatchView::Csr(CsrView {
+                        values: &values[*elem_lo..*elem_lo + nnz],
+                        col_idx: &col_idx[*elem_lo..*elem_lo + nnz],
+                        row_ptr: &p[start..=end],
+                        y: &self.y[start..end],
+                        cols: self.cols,
+                    })
+                }
+                _ => unreachable!("page layout always matches the dataset layout"),
+            },
+        }
+    }
+
+    /// Upper bound on the per-sample gradient Lipschitz constant
+    /// (`max_i ||x_i||^2 / 4 + C`) — one sequential chunked sweep over the
+    /// file, bit-identical to the in-core computation.
+    pub fn lipschitz(&self, c: f32) -> f64 {
+        let mut max_sq = 0f64;
+        let chunk = 4096.min(self.rows);
+        let mut start = 0;
+        while start < self.rows {
+            let end = (start + chunk).min(self.rows);
+            let ob = self.gather_range(start, end);
+            match &ob {
+                OwnedBatch::Dense { x, .. } => {
+                    for r in 0..end - start {
+                        let s = crate::math::nrm2_sq(&x[r * self.cols..(r + 1) * self.cols]);
+                        if s > max_sq {
+                            max_sq = s;
+                        }
+                    }
+                }
+                OwnedBatch::Csr { values, row_ptr, .. } => {
+                    for r in 0..end - start {
+                        let (lo, hi) = (row_ptr[r] as usize, row_ptr[r + 1] as usize);
+                        let s: f64 =
+                            values[lo..hi].iter().map(|v| (*v as f64) * (*v as f64)).sum();
+                        if s > max_sq {
+                            max_sq = s;
+                        }
+                    }
+                }
+            }
+            start = end;
+        }
+        max_sq / 4.0 + c as f64
+    }
+}
+
+/// Budget actually enforced: 0 means "hold everything" (the region's page
+/// count, rounded up so even a sub-page region keeps its one page),
+/// anything else is taken literally.
+fn effective_budget(budget_bytes: u64, n_elems: u64, layout: PageLayout, page_bytes: u64) -> u64 {
+    if budget_bytes == 0 {
+        (n_elems * layout.elem_bytes()).div_ceil(page_bytes).max(1) * page_bytes
+    } else {
+        budget_bytes
+    }
+}
+
+fn new_store(
+    path: &Path,
+    layout: PageLayout,
+    x_base: u64,
+    n_elems: u64,
+    page_bytes: u64,
+    budget_bytes: u64,
+) -> Result<PageStore> {
+    if page_bytes == 0 || page_bytes % 8 != 0 {
+        return Err(Error::Config(format!(
+            "page size must be a positive multiple of 8 bytes, got {page_bytes}"
+        )));
+    }
+    let file = File::open(path)?;
+    PageStore::new(
+        file,
+        path,
+        layout,
+        x_base,
+        n_elems,
+        page_bytes,
+        effective_budget(budget_bytes, n_elems, layout, page_bytes),
+    )
+}
+
+fn read_label_block(f: &mut File, rows: usize, path: &str, offset: u64) -> Result<Vec<f32>> {
+    f.seek(SeekFrom::Start(offset))?;
+    let mut raw = vec![0u8; rows * 4];
+    f.read_exact(&mut raw).map_err(|e| Error::Corrupt {
+        path: path.into(),
+        offset,
+        msg: format!("truncated label block: {e}"),
+    })?;
+    Ok(raw
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::csr::CsrDataset;
+    use crate::data::dense::DenseDataset;
+
+    static UNIQ: std::sync::atomic::AtomicUsize = std::sync::atomic::AtomicUsize::new(0);
+
+    fn tmp(ext: &str) -> std::path::PathBuf {
+        let uniq = UNIQ.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        std::env::temp_dir().join(format!("paged_{}_{uniq}.{ext}", std::process::id()))
+    }
+
+    fn dense_ds(rows: usize, cols: usize) -> DenseDataset {
+        let x: Vec<f32> = (0..rows * cols).map(|v| v as f32 * 0.25).collect();
+        let y: Vec<f32> = (0..rows).map(|r| if r % 2 == 0 { 1.0 } else { -1.0 }).collect();
+        DenseDataset::new("t", cols, x, y).unwrap()
+    }
+
+    fn csr_ds() -> CsrDataset {
+        // 6 rows x 10 cols, row 3 empty
+        CsrDataset::new(
+            "t",
+            10,
+            vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0],
+            vec![0, 4, 2, 9, 1, 5, 8],
+            vec![0, 2, 3, 4, 4, 6, 7],
+            vec![1.0, -1.0, 1.0, -1.0, 1.0, -1.0],
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn open_sxb_matches_incore_metadata() {
+        let d = dense_ds(30, 4);
+        let p = tmp("sxb");
+        d.save(&p).unwrap();
+        let pd = PagedDataset::open(&p, 0, 64).unwrap();
+        assert_eq!((pd.rows(), pd.cols(), pd.nnz()), (30, 4, 120));
+        assert_eq!(pd.y(), d.y());
+        assert!(!pd.is_sparse());
+        assert_eq!(pd.file_bytes(), d.file_bytes());
+        assert_eq!(pd.x_base(), 24 + 4 * 30);
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn gather_range_matches_incore_bits() {
+        let d = dense_ds(50, 6);
+        let p = tmp("sxb");
+        d.save(&p).unwrap();
+        // page = 16 elements -> ranges straddle pages freely
+        let pd = PagedDataset::open(&p, 3 * 64, 64).unwrap();
+        for (s, e) in [(0, 50), (7, 13), (49, 50), (0, 1), (10, 40)] {
+            let ob = pd.gather_range(s, e);
+            let OwnedBatch::Dense { x, y } = &ob else { panic!("dense") };
+            let (wx, wy) = d.rows_slice(s, e);
+            assert_eq!(x, wx, "[{s},{e})");
+            assert_eq!(y, wy);
+        }
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn scattered_gather_matches_incore_and_faults_individually() {
+        let d = dense_ds(64, 4);
+        let p = tmp("sxb");
+        d.save(&p).unwrap();
+        // one row = 16 B; page = 16 B -> one page per row; budget 2 pages
+        let pd = PagedDataset::open(&p, 32, 16).unwrap();
+        let rows = [60u32, 1, 33, 1];
+        let ob = pd.gather_rows(&rows);
+        let OwnedBatch::Dense { x, y } = &ob else { panic!("dense") };
+        for (k, &r) in rows.iter().enumerate() {
+            assert_eq!(&x[k * 4..(k + 1) * 4], d.row(r as usize), "row {r}");
+            assert_eq!(y[k], d.y()[r as usize]);
+        }
+        // pages touched: 60 (fault), 1 (fault), 33 (fault, evicts 60),
+        // 1 again (hit — still resident in the 2-page pool)
+        let io = pd.io_stats();
+        assert_eq!(io.read_calls, 3, "scattered rows fault page by page");
+        assert_eq!(io.page_faults, 3);
+        assert_eq!(io.page_hits, 1);
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn contiguous_assembly_pins_single_page_zero_copy() {
+        // 8 rows x 4 cols; page = 64 B = 4 rows: batch [4,8) is exactly
+        // page 1 and must be borrowed out of the page, not copied
+        let d = dense_ds(8, 4);
+        let p = tmp("sxb");
+        d.save(&p).unwrap();
+        let pd = PagedDataset::open(&p, 0, 64).unwrap();
+        let data = pd.assemble_contiguous(4, 8);
+        assert!(data.is_pinned(), "in-page batch must pin");
+        let view = pd.view_of(&data, 4, 8);
+        let dv = view.as_dense().unwrap();
+        let (wx, wy) = d.rows_slice(4, 8);
+        assert_eq!(dv.x, wx);
+        assert_eq!(dv.y, wy);
+        if let PagedBatchData::PinnedPage { page, elem_lo } = &data {
+            assert_eq!(dv.x.as_ptr(), page.dense()[*elem_lo..].as_ptr(), "must alias the page");
+        }
+        // a page-straddling batch falls back to a gather
+        let data = pd.assemble_contiguous(2, 6);
+        assert!(!data.is_pinned());
+        let view = pd.view_of(&data, 2, 6);
+        assert_eq!(view.as_dense().unwrap().x, d.rows_slice(2, 6).0);
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn csr_roundtrip_contiguous_and_scattered() {
+        let c = csr_ds();
+        let p = tmp("sxc");
+        c.save(&p).unwrap();
+        let pd = PagedDataset::open(&p, 0, 16).unwrap();
+        assert!(pd.is_sparse());
+        assert_eq!(pd.nnz(), 7);
+        assert_eq!(pd.row_ptr().unwrap(), c.arrays().2);
+        // contiguous range incl. the empty row
+        let ob = pd.gather_range(1, 5);
+        let view = ob.view(10);
+        let got = view.as_csr().unwrap();
+        let want = c.slice(1, 5);
+        assert_eq!(got.rows(), want.rows());
+        for r in 0..4 {
+            assert_eq!(got.row(r), want.row(r), "row {r}");
+        }
+        // scattered incl. the empty row
+        let ob = pd.gather_rows(&[5, 3, 0]);
+        let view = ob.view(10);
+        let got = view.as_csr().unwrap();
+        assert_eq!(got.row(0), c.row(5));
+        assert_eq!(got.row(1), c.row(3));
+        assert_eq!(got.row(2), c.row(0));
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn csr_single_page_batch_pins_and_aliases_row_ptr() {
+        let c = csr_ds();
+        let p = tmp("sxc");
+        c.save(&p).unwrap();
+        // whole payload (7 nnz = 56 B) fits one 64 B page
+        let pd = PagedDataset::open(&p, 0, 64).unwrap();
+        let data = pd.assemble_contiguous(0, 6);
+        assert!(data.is_pinned());
+        let view = pd.view_of(&data, 0, 6);
+        let got = view.as_csr().unwrap();
+        assert_eq!(got.row_ptr.as_ptr(), pd.row_ptr().unwrap().as_ptr(), "row_ptr aliases");
+        for r in 0..6 {
+            assert_eq!(got.row(r), c.row(r), "row {r}");
+        }
+        assert_eq!(got.nnz(), 7);
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn lipschitz_bit_matches_incore() {
+        let d = dense_ds(200, 5);
+        let p = tmp("sxb");
+        d.save(&p).unwrap();
+        let pd = PagedDataset::open(&p, 256, 64).unwrap();
+        assert_eq!(pd.lipschitz(0.3).to_bits(), d.lipschitz(0.3).to_bits());
+        let c = csr_ds();
+        let ps = tmp("sxc");
+        c.save(&ps).unwrap();
+        let pc = PagedDataset::open(&ps, 16, 16).unwrap();
+        assert_eq!(pc.lipschitz(0.3).to_bits(), c.lipschitz(0.3).to_bits());
+        std::fs::remove_file(p).ok();
+        std::fs::remove_file(ps).ok();
+    }
+
+    #[test]
+    fn payload_bytes_mirror_incore() {
+        let c = csr_ds();
+        let p = tmp("sxc");
+        c.save(&p).unwrap();
+        let pd = PagedDataset::open(&p, 0, 16).unwrap();
+        // rows 0..2 hold 3 nnz -> 24 B (value + index); mirror the in-core
+        // accounting exactly
+        let sel = RowSelection::Contiguous { start: 0, end: 2 };
+        assert_eq!(pd.payload_bytes(&sel), 24);
+        let incore: crate::data::Dataset = c.into();
+        assert_eq!(incore.payload_bytes(&sel), 24);
+        let sel = RowSelection::Scattered(vec![2, 3, 2]);
+        assert_eq!(pd.payload_bytes(&sel), 16);
+        assert_eq!(incore.payload_bytes(&sel), 16);
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn open_rejects_corruption_with_typed_offsets() {
+        // bad magic
+        let p = tmp("sxb");
+        std::fs::write(&p, b"NOPE....").unwrap();
+        match PagedDataset::open(&p, 0, 64) {
+            Err(Error::Corrupt { offset: 0, .. }) => {}
+            other => panic!("expected Corrupt at 0, got {other:?}"),
+        }
+        // valid header, truncated body
+        let d = dense_ds(10, 3);
+        d.save(&p).unwrap();
+        let full = std::fs::read(&p).unwrap();
+        std::fs::write(&p, &full[..full.len() - 7]).unwrap();
+        match PagedDataset::open(&p, 0, 64) {
+            Err(Error::Corrupt { .. }) => {}
+            other => panic!("expected Corrupt for truncation, got {other:?}"),
+        }
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    #[should_panic(expected = "col_idx")]
+    fn corrupt_csr_payload_index_fails_typed_not_oob() {
+        // flip one payload pair's col_idx past cols (file length and
+        // row_ptr untouched): the gather must surface the store's typed
+        // Corrupt message, never reach a kernel with a wild index
+        let c = csr_ds();
+        let p = tmp("sxc");
+        c.save(&p).unwrap();
+        let mut bytes = std::fs::read(&p).unwrap();
+        let x_base = (32 + 4 * 6 + 8 * 7) as usize; // header + labels + row_ptr
+        bytes[x_base..x_base + 4].copy_from_slice(&1000u32.to_le_bytes()); // cols = 10
+        std::fs::write(&p, &bytes).unwrap();
+        let pd = PagedDataset::open(&p, 0, 16).unwrap();
+        let _ = pd.gather_range(0, 2); // panics with the Corrupt message
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn clones_share_the_store_and_its_stats() {
+        let d = dense_ds(32, 4);
+        let p = tmp("sxb");
+        d.save(&p).unwrap();
+        let pd = PagedDataset::open(&p, 0, 64).unwrap();
+        let pd2 = pd.clone();
+        pd.gather_range(0, 32);
+        assert!(pd2.io_stats().bytes_read > 0, "clone must see the shared stats");
+        std::fs::remove_file(p).ok();
+    }
+}

@@ -20,6 +20,7 @@ use std::path::Path;
 use crate::data::csr::CsrDataset;
 use crate::data::dense::DenseDataset;
 use crate::data::libsvm::{self, LabelMap};
+use crate::data::paged::PagedDataset;
 use crate::data::synth::{self, FeatureDist, SparseSynthSpec, SynthSpec};
 use crate::data::Dataset;
 use crate::error::{Error, Result};
@@ -314,6 +315,60 @@ pub fn resolve(name: &str, data_dir: impl AsRef<Path>, seed: u64) -> Result<Data
     Ok(ds.into())
 }
 
+/// Resolve a dataset for **out-of-core** training: ensure its `.sxb`/`.sxc`
+/// binary exists on disk (a paged store *must* have a file), then open it
+/// through the byte-budgeted page store. The resolution order mirrors
+/// [`resolve`] exactly — cached binary, then the **real LIBSVM file**
+/// (ingested and cached as the binary), then the synthetic stand-in — so
+/// `--paged` never silently trains on different data than the in-core
+/// path would. `budget_bytes = 0` sizes the pool to the whole feature
+/// region; `page_bytes` is the page size.
+pub fn resolve_paged(
+    name: &str,
+    data_dir: impl AsRef<Path>,
+    seed: u64,
+    budget_bytes: u64,
+    page_bytes: u64,
+) -> Result<Dataset> {
+    let dir = data_dir.as_ref();
+    let sxb = dir.join(format!("{name}.sxb"));
+    let sxc = dir.join(format!("{name}.sxc"));
+    let path = if sxb.is_file() {
+        sxb
+    } else if sxc.is_file() {
+        sxc
+    } else {
+        std::fs::create_dir_all(dir)?;
+        if let Ok(p) = profile(name) {
+            let raw = dir.join(p.libsvm_file);
+            let ds = if raw.is_file() {
+                // same ingest as `resolve`: sparse-native parse, densify
+                // (dense profiles are small by construction), standardize
+                let csr = libsvm::parse_libsvm(&raw, Some(p.spec.cols), p.label_map,
+                                               Some(p.spec.rows))?;
+                let mut ds = csr.to_dense()?;
+                crate::data::scaling::standardize(&mut ds);
+                ds
+            } else {
+                synth::generate(&p.spec, seed)?
+            };
+            ds.save(&sxb)?;
+            sxb
+        } else {
+            let p = sparse_profile(name)?;
+            let raw = dir.join(p.libsvm_file);
+            let ds = if raw.is_file() {
+                libsvm::parse_libsvm(&raw, Some(p.spec.cols), p.label_map, Some(p.spec.rows))?
+            } else {
+                synth::generate_csr(&p.spec, seed)?
+            };
+            ds.save(&sxc)?;
+            sxc
+        }
+    };
+    Ok(Dataset::Paged(PagedDataset::open(&path, budget_bytes, page_bytes)?))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -441,6 +496,53 @@ mod tests {
         // ijcnn1 is ~10% positive
         let pos = d.y().iter().filter(|&&v| v > 0.0).count() as f64 / 2000.0;
         assert!(pos < 0.2, "pos={pos}");
+    }
+
+    #[test]
+    fn resolve_paged_opens_cached_binaries_and_generates_missing_ones() {
+        let dir = std::env::temp_dir().join(format!("sx_reg_paged_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        // pre-cached .sxb is opened in place
+        let mut p = profile("ijcnn1-mini").unwrap();
+        p.spec.rows = 400;
+        let d = synth::generate(&p.spec, 1).unwrap();
+        d.save(dir.join("ijcnn1-mini.sxb")).unwrap();
+        let paged = resolve_paged("ijcnn1-mini", &dir, 1, 4096, 1024).unwrap();
+        assert!(paged.is_paged());
+        assert_eq!(paged.rows(), 400);
+        assert_eq!(paged.y(), d.y());
+        // a sparse profile with no cached file is generated, saved, opened
+        let mut sp = sparse_profile("rcv1-sparse").unwrap();
+        sp.spec.rows = 100;
+        let ds = synth::generate_csr(&sp.spec, 2).unwrap();
+        ds.save(dir.join("rcv1-sparse.sxc")).unwrap();
+        let paged = resolve_paged("rcv1-sparse", &dir, 2, 0, 8 * 1024).unwrap();
+        assert!(paged.is_paged());
+        assert_eq!(paged.nnz(), ds.nnz());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn resolve_paged_ingests_real_libsvm_like_resolve() {
+        // with only the raw LIBSVM file present, --paged must train on the
+        // same ingested data the in-core resolve would use — never a
+        // silent synthetic stand-in
+        let dir = std::env::temp_dir().join(format!("sx_reg_paged_lv_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("ijcnn1"), "+1 1:0.5 3:0.25\n-1 2:1.0\n+1 22:0.75\n").unwrap();
+        let incore = resolve("ijcnn1-mini", &dir, 1).unwrap();
+        std::fs::remove_file(dir.join("ijcnn1-mini.sxb")).ok(); // resolve may not cache; be sure
+        let paged = resolve_paged("ijcnn1-mini", &dir, 1, 0, 1024).unwrap();
+        assert!(paged.is_paged());
+        assert_eq!(paged.rows(), 3, "must ingest the 3-row real file, not the synthetic");
+        assert_eq!(paged.y(), incore.y());
+        // sparse profile: stays CSR
+        std::fs::write(dir.join("rcv1_train.binary"), "+1 5:0.5 47000:0.25\n-1 2:1.0\n").unwrap();
+        let paged = resolve_paged("rcv1-sparse", &dir, 1, 0, 1024).unwrap();
+        assert_eq!(paged.rows(), 2);
+        assert_eq!(paged.nnz(), 3);
+        assert!(paged.as_paged().unwrap().is_sparse());
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

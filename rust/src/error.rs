@@ -18,6 +18,12 @@ pub enum Error {
     /// Malformed dataset file (LIBSVM text or .sxb binary).
     DatasetParse { line: usize, msg: String },
 
+    /// Corrupt or truncated binary dataset/storage file, with the byte
+    /// offset at which the inconsistency was detected (magic at 0, header
+    /// fields at their layout offset, truncation at the end of the valid
+    /// prefix).
+    Corrupt { path: String, offset: u64, msg: String },
+
     /// Configuration validation failure.
     Config(String),
 
@@ -42,6 +48,9 @@ impl fmt::Display for Error {
             Error::Xla(msg) => write!(f, "xla error: {msg}"),
             Error::DatasetParse { line, msg } => {
                 write!(f, "dataset parse error at line {line}: {msg}")
+            }
+            Error::Corrupt { path, offset, msg } => {
+                write!(f, "corrupt file '{path}' at byte {offset}: {msg}")
             }
             Error::Config(msg) => write!(f, "config error: {msg}"),
             Error::Artifact(msg) => write!(f, "artifact error: {msg}"),
@@ -90,6 +99,10 @@ mod tests {
         assert_eq!(
             Error::DatasetParse { line: 3, msg: "bad".into() }.to_string(),
             "dataset parse error at line 3: bad"
+        );
+        assert_eq!(
+            Error::Corrupt { path: "x.sxb".into(), offset: 24, msg: "short".into() }.to_string(),
+            "corrupt file 'x.sxb' at byte 24: short"
         );
         assert_eq!(Error::Config("c".into()).to_string(), "config error: c");
         assert_eq!(Error::Artifact("a".into()).to_string(), "artifact error: a");

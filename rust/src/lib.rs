@@ -18,7 +18,9 @@
 //!   **layout-polymorphic data plane** ([`data::Dataset`]: row-major
 //!   [`data::DenseDataset`] for the paper's dense sets, CSR
 //!   [`data::CsrDataset`] for high-dimensional sparse ones, with LIBSVM
-//!   parsed sparse-native in O(nnz)), samplers, block-device storage model
+//!   parsed sparse-native in O(nnz), and **out-of-core**
+//!   [`data::PagedDataset`] serving either on-disk layout through a
+//!   byte-budgeted page store), samplers, block-device storage model
 //!   + access-time simulator (charging sparse fetches by nnz-proportional
 //!   byte extents), a **zero-copy, persistent batch engine**
 //!   ([`pipeline::prefetch`]: one reader thread per experiment; epochs
@@ -37,6 +39,37 @@
 //!   metrics that decompose training time into access vs compute (plus
 //!   copied-vs-borrowed byte traffic), and the experiment harness that
 //!   regenerates every table and figure of the paper.
+//!
+//! ## The paging layer: simulated vs real access time
+//!
+//! ```text
+//!                       RowSelection (CS / SS / RS)
+//!                                  │
+//!                ┌─────────────────┴──────────────────┐
+//!                ▼ (model)                            ▼ (perform)
+//!   storage::AccessSimulator             data::PagedDataset
+//!   BlockMap → LruCache → device         elem range → storage::PageStore
+//!   profile: seek + rot + transfer       ┌──────────────────────────────┐
+//!   ⇒ AccessCost (simulated s,           │ byte-budgeted resident pool  │
+//!     seeks, blocks, cache hits)         │ (LruCache-evicted Arc pages) │
+//!                                        │ hit → borrow   miss → fault  │
+//!                                        │ runs = 1 seek + 1 seq read   │
+//!                                        └──────────────────────────────┘
+//!                                        ⇒ IoStats (real bytes, syscalls,
+//!                                          faults, amplification, MB/s)
+//! ```
+//!
+//! The **simulator is authoritative for the paper's access-time numbers**
+//! (deterministic, can impersonate HDD/SSD/RAM anywhere); the **page store
+//! is authoritative for out-of-core feasibility** and for the physical
+//! contiguous-vs-dispersed gap on the host's actual storage. Every
+//! [`TrainReport`](train::TrainReport) carries both, and the harness CSV
+//! prints them side by side. Contiguous CS/SS batches resolve to maximal
+//! page runs (one sequential read each; a batch inside one resident page
+//! is pinned zero-copy out of the refcounted page), scattered RS batches
+//! fault their pages one by one — so trajectories stay **bit-identical**
+//! to the in-core stores while datasets larger than RAM train under a
+//! `--memory-budget` as small as one page.
 //!
 //! ## Reproducibility and the compute plane
 //!

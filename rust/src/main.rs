@@ -8,6 +8,10 @@
 //!                 [--data-dir data] [--seed N] [--trace-csv out.csv]
 //!                 [--pool-threads N]  (0 = auto; sweeps are bit-identical
 //!                                      at every setting)
+//!                 [--paged] [--memory-budget MiB] [--page-kib KiB]
+//!                     (out-of-core: features served from the on-disk file
+//!                      through a byte-budgeted page store; trajectories
+//!                      are bit-identical to the in-core run)
 //! samplex table   [--dataset D | --all] [--epochs N] [--backend B]
 //!                 [--storage P] [--data-dir data] [--summary] [--csv out.csv]
 //! samplex figure  [--datasets a,b] [--epochs N] [--solver S] [--rate-fit]
@@ -154,7 +158,7 @@ fn cmd_generate_data(args: &[String]) -> Result<()> {
 }
 
 fn cmd_train(args: &[String]) -> Result<()> {
-    let f = Flags::parse(args, &["pre-shuffle"])?;
+    let f = Flags::parse(args, &["pre-shuffle", "paged"])?;
     let mut cfg = match f.get("config") {
         Some(p) => ExperimentConfig::from_toml_file(p)?,
         None => ExperimentConfig::default(),
@@ -187,6 +191,12 @@ fn cmd_train(args: &[String]) -> Result<()> {
     if f.has("pre-shuffle") {
         cfg.pre_shuffle = true;
     }
+    if f.has("paged") {
+        cfg.storage.paged = true;
+    }
+    cfg.storage.memory_budget_mib =
+        f.get_u64("memory-budget", cfg.storage.memory_budget_mib)?;
+    cfg.storage.page_kib = f.get_u64("page-kib", cfg.storage.page_kib)?;
     cfg.pool_threads = f.get_usize("pool-threads", cfg.pool_threads)?;
     cfg.name = format!(
         "{}-{}-{}",
@@ -194,7 +204,17 @@ fn cmd_train(args: &[String]) -> Result<()> {
         cfg.solver.label(),
         cfg.sampling.label()
     );
-    let ds = registry::resolve(&cfg.dataset, &cfg.data_dir, cfg.seed)?;
+    let ds = if cfg.storage.paged {
+        registry::resolve_paged(
+            &cfg.dataset,
+            &cfg.data_dir,
+            cfg.seed,
+            cfg.storage.memory_budget_bytes(),
+            cfg.storage.page_bytes(),
+        )?
+    } else {
+        registry::resolve(&cfg.dataset, &cfg.data_dir, cfg.seed)?
+    };
     let report = samplex::train::run_experiment(&cfg, &ds)?;
     println!("{}", report.summary());
     println!(
@@ -202,11 +222,25 @@ fn cmd_train(args: &[String]) -> Result<()> {
         report.time.sim_access_s, report.time.assemble_s, report.time.compute_s, report.time.wall_s
     );
     println!(
-        "  device: {} seeks, {} blocks, {:.1} MiB transferred",
+        "  device (simulated): {} seeks, {} blocks, {:.1} MiB transferred",
         report.time.access.seeks,
         report.time.access.blocks_transferred,
         report.time.access.bytes_transferred as f64 / (1024.0 * 1024.0)
     );
+    if cfg.storage.paged {
+        let io = report.time.io;
+        println!(
+            "  file io (real): {:.1} MiB in {} reads, {} faults / {} hits, \
+             amp {:.2}, {:.1} MB/s over {:.4}s",
+            io.bytes_read as f64 / (1024.0 * 1024.0),
+            io.read_calls,
+            io.page_faults,
+            io.page_hits,
+            io.read_amplification(),
+            io.mb_per_s(),
+            io.read_s
+        );
+    }
     if let Some(p) = f.get("trace-csv") {
         samplex::metrics::csv::write_trace(p, &report.name, &report.trace)?;
         println!("  trace -> {p}");
@@ -241,24 +275,25 @@ fn cmd_table(args: &[String]) -> Result<()> {
         }
         println!("{}", bench_harness::speedup_summary(&rows));
         if let Some(p) = f.get("csv") {
-            let rows_csv: Vec<Vec<String>> = rows
-                .iter()
-                .map(|r| {
-                    vec![
-                        r.solver.clone(),
-                        r.sampling.clone(),
-                        r.batch.to_string(),
-                        r.step.clone(),
-                        format!("{:.6}", r.time_s),
-                        format!("{:.12}", r.objective),
-                    ]
-                })
-                .collect();
-            samplex::metrics::csv::write_rows(
-                p,
-                &["solver", "sampling", "batch", "step", "time_s", "objective"],
-                &rows_csv,
-            )?;
+            // streaming writer: each record is flushed as it is written, and
+            // the simulated access time sits next to the real IoStats columns
+            let mut header =
+                vec!["solver", "sampling", "batch", "step", "time_s", "objective", "sim_access_s"];
+            header.extend_from_slice(&samplex::metrics::csv::IO_HEADER);
+            let mut w = samplex::metrics::csv::CsvWriter::create(p, &header)?;
+            for r in &rows {
+                let mut fields = vec![
+                    r.solver.clone(),
+                    r.sampling.clone(),
+                    r.batch.to_string(),
+                    r.step.clone(),
+                    format!("{:.6}", r.time_s),
+                    format!("{:.12}", r.objective),
+                    format!("{:.6}", r.sim_access_s),
+                ];
+                fields.extend(samplex::metrics::csv::io_fields(&r.io));
+                w.record(&fields)?;
+            }
             println!("rows -> {p}");
         }
     }

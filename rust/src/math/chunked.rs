@@ -27,7 +27,7 @@
 //! them serially in order, reuse the scratch for the next wave. The wave
 //! width is a constant, so it never perturbs the fold order.
 
-use crate::data::batch::BatchView;
+use crate::data::batch::{BatchView, OwnedBatch};
 use crate::data::Dataset;
 use crate::math::dense::axpy;
 use crate::runtime::pool;
@@ -72,6 +72,13 @@ pub fn full_objective(w: &[f32], ds: &Dataset, c: f32) -> f64 {
 /// Raw logistic loss sum over the whole dataset (f64), chunked at
 /// [`SWEEP_CHUNK_ROWS`] and folded in chunk order. Loss partials are one
 /// `f64` each, so all chunks hold slots simultaneously — no waves needed.
+///
+/// Paged (out-of-core) datasets cannot hand concurrent workers borrowed
+/// chunk views, so their sweep materializes chunks in bounded waves
+/// (sequential page-run reads) and pool-computes each wave's partials into
+/// the same slot positions. The partial values and the final serial
+/// in-order sum are unchanged, so the result stays **bit-identical** to
+/// the in-core sweep.
 pub fn full_loss_sum(w: &[f32], ds: &Dataset) -> f64 {
     let rows = ds.rows();
     if rows == 0 {
@@ -80,11 +87,34 @@ pub fn full_loss_sum(w: &[f32], ds: &Dataset) -> f64 {
     let chunk = SWEEP_CHUNK_ROWS.min(rows);
     let nchunks = rows.div_ceil(chunk);
     let mut partials = vec![0f64; nchunks];
-    pool::global().map_slots(&mut partials, |i, slot| {
-        let start = i * chunk;
-        let end = (start + chunk).min(rows);
-        *slot = crate::math::loss_sum_view(w, &ds.slice_view(start, end));
-    });
+    match ds {
+        Dataset::Paged(p) => {
+            let wave = WAVE_SLOTS.min(nchunks);
+            let mut base = 0usize;
+            while base < nchunks {
+                let k = wave.min(nchunks - base);
+                let owned: Vec<OwnedBatch> = (0..k)
+                    .map(|i| {
+                        let start = (base + i) * chunk;
+                        let end = (start + chunk).min(rows);
+                        p.gather_range(start, end)
+                    })
+                    .collect();
+                let views: Vec<BatchView<'_>> = owned.iter().map(|ob| ob.view(p.cols())).collect();
+                pool::global().map_slots(&mut partials[base..base + k], |i, slot| {
+                    *slot = crate::math::loss_sum_view(w, &views[i]);
+                });
+                base += k;
+            }
+        }
+        _ => {
+            pool::global().map_slots(&mut partials, |i, slot| {
+                let start = i * chunk;
+                let end = (start + chunk).min(rows);
+                *slot = crate::math::loss_sum_view(w, &ds.slice_view(start, end));
+            });
+        }
+    }
     partials.iter().sum()
 }
 
@@ -111,16 +141,33 @@ pub fn full_grad_into_chunked(
         let chunk = chunk_rows.clamp(1, rows);
         let nchunks = rows.div_ceil(chunk);
         let wave = WAVE_SLOTS.min(nchunks);
-        let mut views: Vec<BatchView<'_>> = Vec::with_capacity(wave);
         let mut base = 0usize;
         while base < nchunks {
             let k = wave.min(nchunks - base);
-            views.clear();
-            for i in 0..k {
-                let start = (base + i) * chunk;
-                let end = (start + chunk).min(rows);
-                views.push(ds.slice_view(start, end));
-            }
+            // paged stores materialize each wave's chunks (bounded at
+            // wave × chunk bytes) since they cannot serve borrowed slice
+            // views; the fold order is identical either way
+            let owned: Vec<OwnedBatch> = match ds {
+                Dataset::Paged(p) => (0..k)
+                    .map(|i| {
+                        let start = (base + i) * chunk;
+                        let end = (start + chunk).min(rows);
+                        p.gather_range(start, end)
+                    })
+                    .collect(),
+                _ => Vec::new(),
+            };
+            let views: Vec<BatchView<'_>> = if ds.is_paged() {
+                owned.iter().map(|ob| ob.view(ds.cols())).collect()
+            } else {
+                (0..k)
+                    .map(|i| {
+                        let start = (base + i) * chunk;
+                        let end = (start + chunk).min(rows);
+                        ds.slice_view(start, end)
+                    })
+                    .collect()
+            };
             grad_fold_views(w, &views, rows, out, scratch);
             base += k;
         }
@@ -218,6 +265,33 @@ mod tests {
         let want = want / rows as f64 + 0.5 * c as f64 * crate::math::nrm2_sq(&w);
         let got = full_objective(&w, &ds, c);
         assert_eq!(got.to_bits(), want.to_bits());
+    }
+
+    #[test]
+    fn paged_sweeps_bit_match_incore() {
+        // the out-of-core wave path must reproduce the in-core pooled
+        // sweeps bit for bit, even with a budget far below the file size
+        let (ds, w) = toy_ds(9000, 6, 77);
+        let p = std::env::temp_dir().join(format!("chunked_paged_{}.sxb", std::process::id()));
+        ds.as_dense().unwrap().save(&p).unwrap();
+        let file = ds.file_bytes();
+        let paged: Dataset =
+            crate::data::paged::PagedDataset::open(&p, file / 5, 4096).unwrap().into();
+        let a = full_objective(&w, &ds, 0.05);
+        let b = full_objective(&w, &paged, 0.05);
+        assert_eq!(a.to_bits(), b.to_bits(), "objective must be bit-identical");
+        let mut ga = vec![0f32; 6];
+        let mut gb = vec![0f32; 6];
+        let mut scratch = GradScratch::default();
+        full_grad_into(&w, &ds, 0.05, &mut ga, &mut scratch);
+        full_grad_into(&w, &paged, 0.05, &mut gb, &mut scratch);
+        assert_eq!(ga, gb, "gradient must be bit-identical");
+        // and with a ragged explicit chunking
+        full_grad_into_chunked(&w, &ds, 0.05, 333, &mut ga, &mut scratch);
+        full_grad_into_chunked(&w, &paged, 0.05, 333, &mut gb, &mut scratch);
+        assert_eq!(ga, gb);
+        assert!(paged.io_stats().bytes_read > 0);
+        std::fs::remove_file(p).ok();
     }
 
     #[test]

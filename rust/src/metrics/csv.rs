@@ -1,10 +1,88 @@
 //! CSV export for traces and table rows (feeds external plotting).
+//!
+//! Two write paths:
+//!
+//! * the one-shot helpers ([`write_trace`] / [`write_rows`]) for complete
+//!   in-memory results;
+//! * the streaming [`CsvWriter`], which **flushes after every record and
+//!   on drop**, so a run that is interrupted mid-grid leaves a valid CSV
+//!   with every completed record intact — never a file truncated in the
+//!   middle of a line. The harness writes its per-arm rows through it.
+//!
+//! The shared [`IO_HEADER`]/[`io_fields`] helpers put the paged store's
+//! real access measurements ([`IoStats`]) in every table, right next to
+//! the simulated access time, so the modeled and the physically measured
+//! cost print side by side.
 
-use std::io::Write;
+use std::fs::File;
+use std::io::{BufWriter, Write};
 use std::path::Path;
 
-use crate::error::Result;
+use crate::error::{Error, Result};
 use crate::metrics::Trace;
+use crate::storage::pagestore::IoStats;
+
+/// Column names for the real-I/O statistics block.
+pub const IO_HEADER: [&str; 6] = [
+    "io_bytes_read",
+    "io_read_calls",
+    "io_page_faults",
+    "io_page_hits",
+    "io_read_amp",
+    "io_mb_per_s",
+];
+
+/// Render an [`IoStats`] into the [`IO_HEADER`] columns.
+pub fn io_fields(io: &IoStats) -> Vec<String> {
+    vec![
+        io.bytes_read.to_string(),
+        io.read_calls.to_string(),
+        io.page_faults.to_string(),
+        io.page_hits.to_string(),
+        format!("{:.4}", io.read_amplification()),
+        format!("{:.2}", io.mb_per_s()),
+    ]
+}
+
+/// Streaming CSV writer: header on create, one flushed line per record,
+/// flush again on drop. Interrupting the process between records can never
+/// truncate a line that was already reported as written.
+#[derive(Debug)]
+pub struct CsvWriter {
+    w: BufWriter<File>,
+    columns: usize,
+}
+
+impl CsvWriter {
+    /// Create (truncate) `path` and write the flushed header line.
+    pub fn create(path: impl AsRef<Path>, header: &[&str]) -> Result<Self> {
+        let f = File::create(path)?;
+        let mut w = BufWriter::new(f);
+        writeln!(w, "{}", header.join(","))?;
+        w.flush()?;
+        Ok(CsvWriter { w, columns: header.len() })
+    }
+
+    /// Append one record and flush it to disk before returning.
+    pub fn record(&mut self, fields: &[String]) -> Result<()> {
+        if fields.len() != self.columns {
+            return Err(Error::Config(format!(
+                "csv record has {} fields, header has {}",
+                fields.len(),
+                self.columns
+            )));
+        }
+        writeln!(self.w, "{}", fields.join(","))?;
+        self.w.flush()?;
+        Ok(())
+    }
+}
+
+impl Drop for CsvWriter {
+    fn drop(&mut self) {
+        let _ = self.w.flush();
+    }
+}
 
 /// Write a convergence trace as `epoch,train_time_s,objective`.
 pub fn write_trace(path: impl AsRef<Path>, label: &str, trace: &Trace) -> Result<()> {
@@ -14,19 +92,20 @@ pub fn write_trace(path: impl AsRef<Path>, label: &str, trace: &Trace) -> Result
     for p in &trace.points {
         writeln!(f, "{},{:.9},{:.12}", p.epoch, p.train_time_s, p.objective)?;
     }
+    f.flush()?;
     Ok(())
 }
 
-/// Write generic rows with a header (used by the table harness).
+/// Write generic rows with a header (used by the table harness) — routed
+/// through [`CsvWriter`], so every row hits the disk as it is written.
 pub fn write_rows(
     path: impl AsRef<Path>,
     header: &[&str],
     rows: &[Vec<String>],
 ) -> Result<()> {
-    let mut f = std::fs::File::create(path)?;
-    writeln!(f, "{}", header.join(","))?;
+    let mut w = CsvWriter::create(path, header)?;
     for r in rows {
-        writeln!(f, "{}", r.join(","))?;
+        w.record(r)?;
     }
     Ok(())
 }
@@ -56,5 +135,45 @@ mod tests {
         let body = std::fs::read_to_string(&p).unwrap();
         assert_eq!(body, "a,b\n1,2\n");
         std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn streaming_writer_flushes_every_record() {
+        // each record must be on disk *before* the writer is dropped —
+        // that is what makes an interrupted run keep its completed rows
+        let p = std::env::temp_dir().join(format!("stream_{}.csv", std::process::id()));
+        let mut w = CsvWriter::create(&p, &["k", "v"]).unwrap();
+        w.record(&["1".into(), "a".into()]).unwrap();
+        let mid = std::fs::read_to_string(&p).unwrap();
+        assert_eq!(mid, "k,v\n1,a\n", "record visible while writer is live");
+        w.record(&["2".into(), "b".into()]).unwrap();
+        drop(w);
+        let body = std::fs::read_to_string(&p).unwrap();
+        assert_eq!(body, "k,v\n1,a\n2,b\n");
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn streaming_writer_rejects_ragged_records() {
+        let p = std::env::temp_dir().join(format!("ragged_{}.csv", std::process::id()));
+        let mut w = CsvWriter::create(&p, &["a", "b"]).unwrap();
+        assert!(w.record(&["only-one".into()]).is_err());
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn io_fields_match_header_shape() {
+        let io = IoStats {
+            bytes_read: 4096,
+            read_calls: 2,
+            page_faults: 4,
+            page_hits: 8,
+            bytes_requested: 2048,
+            read_s: 0.001,
+        };
+        let fields = io_fields(&io);
+        assert_eq!(fields.len(), IO_HEADER.len());
+        assert_eq!(fields[0], "4096");
+        assert_eq!(fields[4], "2.0000"); // 4096 / 2048
     }
 }

@@ -1,6 +1,7 @@
 //! Training-time decomposition (paper eq. 1):
 //! `training time = time to access data + time to process data`.
 
+use crate::storage::pagestore::IoStats;
 use crate::storage::simulator::AccessCost;
 
 /// Accumulated time breakdown for one experiment arm.
@@ -24,6 +25,11 @@ pub struct TimeBreakdown {
     pub bytes_copied: u64,
     /// Feature-matrix bytes served zero-copy as range views (CS/SS).
     pub bytes_borrowed: u64,
+    /// Real file I/O of the paged (out-of-core) store for this arm —
+    /// all-zero for in-core runs. Printed *next to* the simulated access
+    /// cost so the modeled and the physically measured access time can be
+    /// compared side by side.
+    pub io: IoStats,
 }
 
 impl TimeBreakdown {
@@ -63,6 +69,7 @@ impl TimeBreakdown {
         self.access += other.access;
         self.bytes_copied += other.bytes_copied;
         self.bytes_borrowed += other.bytes_borrowed;
+        self.io += other.io;
     }
 }
 
@@ -117,6 +124,7 @@ mod tests {
             access: AccessCost { seeks: 3, ..Default::default() },
             bytes_copied: 100,
             bytes_borrowed: 300,
+            io: IoStats { bytes_read: 64, page_faults: 2, ..Default::default() },
         };
         a.merge(&b);
         a.merge(&b);
@@ -124,6 +132,8 @@ mod tests {
         assert!((a.training_time_s() - 6.5).abs() < 1e-12);
         assert_eq!(a.bytes_copied, 200);
         assert_eq!(a.bytes_borrowed, 600);
+        assert_eq!(a.io.bytes_read, 128);
+        assert_eq!(a.io.page_faults, 4);
     }
 
     #[test]

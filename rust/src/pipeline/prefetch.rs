@@ -31,6 +31,7 @@ use std::sync::Arc;
 use std::thread::JoinHandle;
 
 use crate::data::batch::{gather_owned, BatchView, OwnedBatch, RowSelection};
+use crate::data::paged::PagedBatchData;
 use crate::data::Dataset;
 use crate::storage::simulator::{AccessCost, AccessSimulator};
 
@@ -45,9 +46,10 @@ pub fn reader_spawns_on_this_thread() -> u64 {
     READER_SPAWNS.with(|c| c.get())
 }
 
-/// The data of one mini-batch: either a zero-copy range view into the shared
-/// dataset (contiguous CS/SS selections) or an owned gather (scattered RS).
-/// Layout-polymorphic on both arms.
+/// The data of one mini-batch: a zero-copy range view into the shared
+/// dataset (contiguous CS/SS selections over in-core layouts), an owned
+/// gather (scattered RS), or an out-of-core batch assembled from the page
+/// store. Layout-polymorphic on every arm.
 #[derive(Debug, Clone)]
 pub enum BatchPayload {
     /// Rows `[start, end)` of `ds`, borrowed in place — zero bytes copied.
@@ -61,21 +63,52 @@ pub enum BatchPayload {
     },
     /// Row-by-row gather into owned buffers (scattered selections).
     Owned(OwnedBatch),
+    /// Contiguous rows of a paged (out-of-core) dataset: pinned zero-copy
+    /// inside one resident page, or gathered across pages by sequential
+    /// run reads. The real disk I/O happened on the reader thread — the
+    /// prefetcher is what warms the next batch's pages ahead of the
+    /// solver.
+    Paged {
+        /// Shared paged dataset (labels, `row_ptr`, the store).
+        ds: Arc<Dataset>,
+        /// First row (inclusive).
+        start: usize,
+        /// Last row (exclusive).
+        end: usize,
+        /// Pinned page or owned gather.
+        data: PagedBatchData,
+    },
 }
 
 impl BatchPayload {
     /// Materialize the [`BatchView`] the solvers consume. For `Borrowed`
-    /// payloads the view aliases the dataset's own storage.
+    /// payloads the view aliases the dataset's own storage; for pinned
+    /// `Paged` payloads it aliases the resident page.
     pub fn view(&self, cols: usize) -> BatchView<'_> {
         match self {
             BatchPayload::Borrowed { ds, start, end } => ds.slice_view(*start, *end),
             BatchPayload::Owned(ob) => ob.view(cols),
+            BatchPayload::Paged { ds, start, end, data } => ds
+                .as_paged()
+                .expect("paged payload always wraps a paged dataset")
+                .view_of(data, *start, *end),
         }
     }
 
-    /// True when this payload is a zero-copy range view.
+    /// True when this payload is a zero-copy range view into the in-core
+    /// dataset.
     pub fn is_borrowed(&self) -> bool {
         matches!(self, BatchPayload::Borrowed { .. })
+    }
+
+    /// True when this payload is zero-copy — an in-core range borrow or an
+    /// out-of-core batch pinned inside one resident page.
+    pub fn is_zero_copy(&self) -> bool {
+        match self {
+            BatchPayload::Borrowed { .. } => true,
+            BatchPayload::Owned(_) => false,
+            BatchPayload::Paged { data, .. } => data.is_pinned(),
+        }
     }
 }
 
@@ -266,12 +299,30 @@ fn reader_loop(
             let sim_cost = sim.fetch(&sel);
             let t0 = std::time::Instant::now();
             let rows = sel.len();
-            let payload = match &sel {
-                RowSelection::Contiguous { start, end } => {
+            let payload = match (&sel, ds.as_paged()) {
+                (RowSelection::Contiguous { start, end }, None) => {
                     es.bytes_borrowed += ds.payload_bytes(&sel);
                     BatchPayload::Borrowed { ds: Arc::clone(&ds), start: *start, end: *end }
                 }
-                RowSelection::Scattered(_) => {
+                (RowSelection::Contiguous { start, end }, Some(p)) => {
+                    // the page faults happen here, on the reader thread —
+                    // the next batch's pages are warmed while the solver
+                    // computes on the previous one
+                    let data = p.assemble_contiguous(*start, *end);
+                    match &data {
+                        PagedBatchData::PinnedPage { .. } => {
+                            es.bytes_borrowed += ds.payload_bytes(&sel);
+                        }
+                        PagedBatchData::Gathered(ob) => es.bytes_copied += ob.payload_bytes(),
+                    }
+                    BatchPayload::Paged {
+                        ds: Arc::clone(&ds),
+                        start: *start,
+                        end: *end,
+                        data,
+                    }
+                }
+                (RowSelection::Scattered(_), _) => {
                     let ob = gather_owned(&ds, &sel);
                     es.bytes_copied += ob.payload_bytes();
                     BatchPayload::Owned(ob)
@@ -446,6 +497,57 @@ mod tests {
         assert_eq!(es.bytes_copied, want_nnz as u64 * 8, "8 B per gathered non-zero");
         assert_eq!(es.bytes_borrowed, 0);
         pf.finish();
+    }
+
+    #[test]
+    fn paged_epochs_flow_through_the_reader() {
+        // paged dataset: page = 4 rows (64 B); page-aligned batches must be
+        // pinned zero-copy, a straddling batch gathers, scattered RS owns
+        let in_core = ds(64, 4);
+        let path = std::env::temp_dir().join(format!("prefetch_paged_{}.sxb", std::process::id()));
+        in_core.as_dense().unwrap().save(&path).unwrap();
+        let d: Arc<Dataset> = Arc::new(
+            crate::data::paged::PagedDataset::open(&path, 2 * 64, 64).unwrap().into(),
+        );
+        let dense = in_core.as_dense().unwrap();
+        let mut pf = Prefetcher::spawn(d.clone(), sim(&d), 2);
+        pf.start_epoch(contiguous_epoch(16, 4));
+        let mut seen = 0;
+        while let Some(b) = pf.next_batch() {
+            assert!(b.payload.is_zero_copy(), "page-aligned batches must pin");
+            let view = b.view(4);
+            let v = view.as_dense().unwrap();
+            let (want_x, want_y) = dense.rows_slice(b.j * 4, (b.j + 1) * 4);
+            assert_eq!(v.x, want_x, "batch {}", b.j);
+            assert_eq!(v.y, want_y);
+            seen += 1;
+        }
+        assert_eq!(seen, 16);
+        let es = pf.last_epoch_stats();
+        assert_eq!(es.bytes_copied, 0, "aligned paged epoch is zero-copy");
+        assert_eq!(es.bytes_borrowed, 64 * 4 * 4);
+
+        // a straddling contiguous batch still delivers exact bytes (gather)
+        pf.start_epoch(vec![RowSelection::Contiguous { start: 2, end: 7 }]);
+        let b = pf.next_batch().unwrap();
+        assert!(!b.payload.is_zero_copy());
+        assert_eq!(b.view(4).as_dense().unwrap().x, dense.rows_slice(2, 7).0);
+        while pf.next_batch().is_some() {}
+
+        // scattered rows gather owned, faulting pages individually
+        pf.start_epoch(vec![RowSelection::Scattered(vec![63, 0, 17])]);
+        let b = pf.next_batch().unwrap();
+        assert!(!b.payload.is_zero_copy());
+        let view = b.view(4);
+        let v = view.as_dense().unwrap();
+        assert_eq!(&v.x[0..4], dense.row(63));
+        assert_eq!(&v.x[4..8], dense.row(0));
+        assert_eq!(&v.x[8..12], dense.row(17));
+        while pf.next_batch().is_some() {}
+        pf.finish();
+        let io = d.io_stats();
+        assert!(io.bytes_read > 0 && io.read_calls > 0, "real file IO happened");
+        std::fs::remove_file(path).ok();
     }
 
     #[test]

@@ -45,7 +45,9 @@ impl BlockMap {
         BlockMap { x_base, row_bytes: 0, block_bytes, row_offsets: Some(Arc::new(offsets)) }
     }
 
-    /// Geometry for `ds` on a device with `block_bytes` blocks.
+    /// Geometry for `ds` on a device with `block_bytes` blocks. A paged
+    /// dataset shares its underlying file's geometry, so the simulator
+    /// charges it identically to the equivalent in-core store.
     pub fn for_dataset(ds: &Dataset, block_bytes: u64) -> Self {
         match ds {
             Dataset::Dense(d) => {
@@ -58,6 +60,14 @@ impl BlockMap {
                     row_ptr.iter().map(|p| p * crate::data::csr::NNZ_BYTES).collect();
                 BlockMap::variable(c.x_base(), offsets, block_bytes)
             }
+            Dataset::Paged(p) => match p.row_ptr() {
+                None => BlockMap::uniform(p.x_base(), p.cols() as u64 * 4, block_bytes),
+                Some(row_ptr) => {
+                    let offsets: Vec<u64> =
+                        row_ptr.iter().map(|q| q * crate::data::csr::NNZ_BYTES).collect();
+                    BlockMap::variable(p.x_base(), offsets, block_bytes)
+                }
+            },
         }
     }
 

@@ -10,6 +10,20 @@ use std::collections::HashMap;
 
 const NIL: usize = usize::MAX;
 
+/// Outcome of a [`LruCache::touch_evicting`] call.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Touch {
+    /// The block was resident and has been promoted to MRU.
+    Hit,
+    /// The block was not resident. `evicted` names the LRU block that was
+    /// dropped to make room (`None` when the cache was below capacity, or
+    /// when capacity is 0 — in which case nothing was inserted either).
+    Miss {
+        /// Block evicted to make room, if any.
+        evicted: Option<u64>,
+    },
+}
+
 #[derive(Debug, Clone, Copy)]
 struct Node {
     key: u64,
@@ -90,9 +104,16 @@ impl LruCache {
     /// Touch `block`: returns `true` on hit (block was resident; promoted to
     /// MRU), `false` on miss (block inserted, possibly evicting the LRU).
     pub fn touch(&mut self, block: u64) -> bool {
+        matches!(self.touch_evicting(block), Touch::Hit)
+    }
+
+    /// [`touch`](LruCache::touch) that also reports which block (if any)
+    /// was evicted to make room — the feedback the byte-budgeted page store
+    /// needs to drop the evicted page's buffer from its resident pool.
+    pub fn touch_evicting(&mut self, block: u64) -> Touch {
         if self.capacity == 0 {
             self.misses += 1;
-            return false;
+            return Touch::Miss { evicted: None };
         }
         if let Some(&idx) = self.map.get(&block) {
             self.hits += 1;
@@ -100,16 +121,18 @@ impl LruCache {
                 self.detach(idx);
                 self.attach_front(idx);
             }
-            return true;
+            return Touch::Hit;
         }
         self.misses += 1;
         // evict if full
+        let mut evicted = None;
         if self.map.len() == self.capacity {
             let lru = self.tail;
             let key = self.nodes[lru].key;
             self.detach(lru);
             self.map.remove(&key);
             self.free.push(lru);
+            evicted = Some(key);
         }
         let idx = if let Some(idx) = self.free.pop() {
             self.nodes[idx] = Node { key: block, prev: NIL, next: NIL };
@@ -120,7 +143,7 @@ impl LruCache {
         };
         self.attach_front(idx);
         self.map.insert(block, idx);
-        false
+        Touch::Miss { evicted }
     }
 
     /// Non-mutating residency check (no LRU promotion, no counters).
@@ -244,5 +267,93 @@ mod tests {
         c.touch(1);
         c.touch(1);
         assert!((c.hit_rate() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn zero_capacity_disables_caching_entirely() {
+        // every touch is a miss, nothing is ever inserted, and the miss
+        // reports no eviction (there was no room to begin with)
+        let mut c = LruCache::new(0);
+        for b in [7u64, 7, 7, 9, 7] {
+            assert_eq!(c.touch_evicting(b), Touch::Miss { evicted: None });
+            assert!(!c.contains(b));
+        }
+        assert_eq!((c.hits, c.misses), (0, 5));
+        assert!(c.is_empty());
+    }
+
+    #[test]
+    fn capacity_one_strictly_alternates() {
+        // with one slot, alternating keys never hit and always evict the
+        // other key; repeating the same key always hits
+        let mut c = LruCache::new(1);
+        assert_eq!(c.touch_evicting(1), Touch::Miss { evicted: None });
+        assert_eq!(c.touch_evicting(2), Touch::Miss { evicted: Some(1) });
+        assert_eq!(c.touch_evicting(1), Touch::Miss { evicted: Some(2) });
+        assert_eq!(c.touch_evicting(2), Touch::Miss { evicted: Some(1) });
+        assert_eq!(c.touch_evicting(2), Touch::Hit);
+        assert_eq!(c.len(), 1);
+        assert!(c.contains(2) && !c.contains(1));
+        assert_eq!((c.hits, c.misses), (1, 4));
+    }
+
+    #[test]
+    fn touch_evicting_reports_the_lru_key() {
+        let mut c = LruCache::new(2);
+        c.touch(10);
+        c.touch(20);
+        c.touch(10); // order: 10 (MRU), 20 (LRU)
+        assert_eq!(c.touch_evicting(30), Touch::Miss { evicted: Some(20) });
+        assert!(c.contains(10) && c.contains(30));
+    }
+
+    /// Naive O(capacity) reference LRU: a recency-ordered Vec (front = MRU).
+    struct NaiveLru {
+        order: Vec<u64>,
+        capacity: usize,
+    }
+
+    impl NaiveLru {
+        fn touch(&mut self, block: u64) -> Touch {
+            if self.capacity == 0 {
+                return Touch::Miss { evicted: None };
+            }
+            if let Some(pos) = self.order.iter().position(|&b| b == block) {
+                self.order.remove(pos);
+                self.order.insert(0, block);
+                return Touch::Hit;
+            }
+            let evicted = if self.order.len() == self.capacity {
+                self.order.pop()
+            } else {
+                None
+            };
+            self.order.insert(0, block);
+            Touch::Miss { evicted }
+        }
+    }
+
+    #[test]
+    fn eviction_order_matches_naive_reference() {
+        // deterministic pseudo-random workloads over small key universes so
+        // hits, misses and evictions all occur frequently; the slab+list
+        // implementation must agree with the naive reference on every touch
+        // outcome and on the final resident set, at every capacity
+        for capacity in [0usize, 1, 2, 3, 8, 17] {
+            let mut fast = LruCache::new(capacity);
+            let mut slow = NaiveLru { order: Vec::new(), capacity };
+            let mut rng = crate::rng::Rng::seed_from(0xCAFE + capacity as u64);
+            for step in 0..5000 {
+                let universe = 4 + capacity * 2;
+                let key = rng.below(universe) as u64;
+                let got = fast.touch_evicting(key);
+                let want = slow.touch(key);
+                assert_eq!(got, want, "capacity={capacity} step={step} key={key}");
+            }
+            assert_eq!(fast.len(), slow.order.len(), "capacity={capacity}");
+            for &k in &slow.order {
+                assert!(fast.contains(k), "capacity={capacity} lost key {k}");
+            }
+        }
     }
 }

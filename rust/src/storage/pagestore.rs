@@ -1,0 +1,701 @@
+//! Paged, disk-backed feature store — the *real* out-of-core layer.
+//!
+//! Where [`super::simulator::AccessSimulator`] *models* device time and
+//! [`super::reader::DiskSource`] performs whole-batch reads with no
+//! residency, the page store is the full OS-page-cache analogue built into
+//! the process: the feature region of a `.sxb`/`.sxc` file is split into
+//! fixed-size pages that are read on demand into a **byte-budgeted**
+//! resident pool and evicted via the same [`LruCache`] slab machinery the
+//! simulator uses. Every access is accounted in [`IoStats`] — real bytes
+//! read, read syscalls, page faults/hits, delivered bytes and wall read
+//! time — so the paper's contiguous-vs-dispersed gap is measurable on
+//! actual file I/O, next to the simulator's idealized numbers.
+//!
+//! Access-pattern behavior (the paper's §1 claim, reproduced physically):
+//!
+//! * a contiguous range touching several non-resident pages is served by
+//!   **one seek + one sequential read per maximal run** of missing pages;
+//! * a scattered access faults its pages individually — one syscall each;
+//! * a range that lands inside one *resident* page can be borrowed
+//!   zero-copy ([`PageStore::pin_range`]) because pages are refcounted
+//!   ([`Arc`]): eviction drops the pool's reference, never the borrower's.
+//!
+//! Pages are stored *decoded* (f32 elements for dense `.sxb`, deinterleaved
+//! `(col_idx, value)` pair arrays for `.sxc`), so borrowing out of a page
+//! yields exactly the slices the math kernels consume and results stay
+//! bit-identical to the in-core stores.
+
+use std::collections::HashMap;
+use std::fs::File;
+use std::io::{Read, Seek, SeekFrom};
+use std::path::Path;
+use std::sync::Arc;
+
+use crate::error::{Error, Result};
+use crate::storage::cache::{LruCache, Touch};
+
+/// Lifetime I/O statistics of one page store — the real-file analogue of
+/// [`super::simulator::AccessCost`].
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct IoStats {
+    /// Bytes physically read from the file (page granularity).
+    pub bytes_read: u64,
+    /// Read syscalls issued (one per maximal run of faulted pages).
+    pub read_calls: u64,
+    /// Pages faulted in from disk.
+    pub page_faults: u64,
+    /// Page touches served from the resident pool.
+    pub page_hits: u64,
+    /// Bytes actually delivered to callers (the useful payload).
+    pub bytes_requested: u64,
+    /// Wall seconds spent inside read syscalls.
+    pub read_s: f64,
+}
+
+impl IoStats {
+    /// `bytes_read / bytes_requested` — how many bytes the page
+    /// granularity forced off the device per byte the caller wanted.
+    pub fn read_amplification(&self) -> f64 {
+        if self.bytes_requested == 0 {
+            0.0
+        } else {
+            self.bytes_read as f64 / self.bytes_requested as f64
+        }
+    }
+
+    /// Achieved read throughput in MB/s (0 when nothing was read).
+    pub fn mb_per_s(&self) -> f64 {
+        if self.read_s <= 0.0 {
+            0.0
+        } else {
+            self.bytes_read as f64 / 1e6 / self.read_s
+        }
+    }
+
+    /// Counters accumulated since `base` was captured (page stores are
+    /// shared across experiment arms; reports want per-arm deltas).
+    pub fn delta_since(&self, base: &IoStats) -> IoStats {
+        IoStats {
+            bytes_read: self.bytes_read - base.bytes_read,
+            read_calls: self.read_calls - base.read_calls,
+            page_faults: self.page_faults - base.page_faults,
+            page_hits: self.page_hits - base.page_hits,
+            bytes_requested: self.bytes_requested - base.bytes_requested,
+            read_s: self.read_s - base.read_s,
+        }
+    }
+}
+
+impl std::ops::AddAssign for IoStats {
+    fn add_assign(&mut self, rhs: Self) {
+        self.bytes_read += rhs.bytes_read;
+        self.read_calls += rhs.read_calls;
+        self.page_faults += rhs.page_faults;
+        self.page_hits += rhs.page_hits;
+        self.bytes_requested += rhs.bytes_requested;
+        self.read_s += rhs.read_s;
+    }
+}
+
+/// How the raw page bytes decode into math-kernel-ready arrays.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PageLayout {
+    /// Little-endian f32 elements (the `.sxb` feature region).
+    DenseF32,
+    /// Packed `(u32 col_idx, f32 value)` pairs (the `.sxc` payload region),
+    /// deinterleaved into two arrays at decode time.
+    IdxValPairs,
+}
+
+impl PageLayout {
+    /// Bytes per stored element (f32 = 4; index+value pair = 8).
+    pub const fn elem_bytes(self) -> u64 {
+        match self {
+            PageLayout::DenseF32 => 4,
+            PageLayout::IdxValPairs => 8,
+        }
+    }
+}
+
+/// One decoded, refcounted page of the feature region.
+#[derive(Debug)]
+pub enum Page {
+    /// Dense f32 elements.
+    Dense(Vec<f32>),
+    /// Deinterleaved CSR payload: values and their column indices.
+    Pairs {
+        /// Non-zero values.
+        values: Vec<f32>,
+        /// Column index of each value.
+        col_idx: Vec<u32>,
+    },
+}
+
+impl Page {
+    /// Elements held by this page.
+    pub fn len(&self) -> usize {
+        match self {
+            Page::Dense(x) => x.len(),
+            Page::Pairs { values, .. } => values.len(),
+        }
+    }
+
+    /// True when the page holds no elements.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// The dense element array (panics on a pairs page — layout is fixed
+    /// per store, so this is a programming error, not a data error).
+    pub fn dense(&self) -> &[f32] {
+        match self {
+            Page::Dense(x) => x,
+            Page::Pairs { .. } => panic!("dense() on a pairs page"),
+        }
+    }
+
+    /// The pair arrays `(values, col_idx)` (panics on a dense page).
+    pub fn pairs(&self) -> (&[f32], &[u32]) {
+        match self {
+            Page::Pairs { values, col_idx } => (values, col_idx),
+            Page::Dense(_) => panic!("pairs() on a dense page"),
+        }
+    }
+}
+
+/// Fixed-size paged view over one file region, with a byte-budgeted
+/// resident pool, LRU eviction and lifetime [`IoStats`].
+///
+/// Element addressing: the region holds `n_elems` elements of
+/// `layout.elem_bytes()` bytes each, starting at absolute file offset
+/// `region_base`. Page `p` covers elements
+/// `[p * elems_per_page, (p+1) * elems_per_page)` (the last page may be
+/// short).
+#[derive(Debug)]
+pub struct PageStore {
+    file: File,
+    path: String,
+    layout: PageLayout,
+    region_base: u64,
+    n_elems: u64,
+    elems_per_page: u64,
+    page_bytes: u64,
+    budget_bytes: u64,
+    resident: HashMap<u64, Arc<Page>>,
+    lru: LruCache,
+    raw: Vec<u8>,
+    /// Exclusive upper bound for decoded `col_idx` values (pairs layout
+    /// only; `u32::MAX` = unchecked). Catches payload corruption at fault
+    /// time with a typed error instead of an out-of-bounds panic deep in
+    /// a math kernel.
+    idx_bound: u32,
+    /// Lifetime I/O counters.
+    pub stats: IoStats,
+}
+
+impl PageStore {
+    /// Build over the region `[region_base, region_base + n_elems * elem)`
+    /// of `file`. `page_bytes` must be a positive multiple of the layout's
+    /// element size; `budget_bytes` caps the resident pool (a budget below
+    /// one page keeps nothing resident — every access faults).
+    pub fn new(
+        file: File,
+        path: impl AsRef<Path>,
+        layout: PageLayout,
+        region_base: u64,
+        n_elems: u64,
+        page_bytes: u64,
+        budget_bytes: u64,
+    ) -> Result<Self> {
+        if page_bytes == 0 || page_bytes % layout.elem_bytes() != 0 {
+            return Err(Error::Config(format!(
+                "page size {page_bytes} must be a positive multiple of the \
+                 element size {}",
+                layout.elem_bytes()
+            )));
+        }
+        let capacity_pages = (budget_bytes / page_bytes) as usize;
+        Ok(PageStore {
+            file,
+            path: path.as_ref().display().to_string(),
+            layout,
+            region_base,
+            n_elems,
+            elems_per_page: page_bytes / layout.elem_bytes(),
+            page_bytes,
+            budget_bytes,
+            resident: HashMap::new(),
+            lru: LruCache::new(capacity_pages),
+            raw: Vec::new(),
+            idx_bound: u32::MAX,
+            stats: IoStats::default(),
+        })
+    }
+
+    /// Validate every decoded `col_idx` against `bound` (exclusive) from
+    /// now on — corrupt payload pairs then fault with [`Error::Corrupt`]
+    /// carrying the offending byte offset, mirroring the typed header
+    /// checks.
+    pub fn set_idx_bound(&mut self, bound: u32) {
+        self.idx_bound = bound;
+    }
+
+    /// Total pages covering the region.
+    pub fn n_pages(&self) -> u64 {
+        self.n_elems.div_ceil(self.elems_per_page)
+    }
+
+    /// Elements in the region.
+    pub fn n_elems(&self) -> u64 {
+        self.n_elems
+    }
+
+    /// Configured page size in bytes.
+    pub fn page_bytes(&self) -> u64 {
+        self.page_bytes
+    }
+
+    /// Configured resident-pool budget in bytes.
+    pub fn budget_bytes(&self) -> u64 {
+        self.budget_bytes
+    }
+
+    /// Pages currently resident.
+    pub fn resident_pages(&self) -> usize {
+        self.resident.len()
+    }
+
+    /// Resident-pool hit rate over the store's lifetime.
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.stats.page_hits + self.stats.page_faults;
+        if total == 0 {
+            0.0
+        } else {
+            self.stats.page_hits as f64 / total as f64
+        }
+    }
+
+    /// Fault pages `[lo, hi]` (inclusive, consecutive) with **one** seek +
+    /// read, decode them, and return them in page order. Does not insert
+    /// into the pool — the caller decides residency.
+    fn read_run(&mut self, lo: u64, hi: u64) -> Result<Vec<Arc<Page>>> {
+        let first_elem = lo * self.elems_per_page;
+        let last_elem = ((hi + 1) * self.elems_per_page).min(self.n_elems);
+        let byte_lo = self.region_base + first_elem * self.layout.elem_bytes();
+        let nbytes = (last_elem - first_elem) * self.layout.elem_bytes();
+        self.raw.resize(nbytes as usize, 0);
+        let sw = std::time::Instant::now();
+        self.file.seek(SeekFrom::Start(byte_lo))?;
+        self.file.read_exact(&mut self.raw).map_err(|e| Error::Corrupt {
+            path: self.path.clone(),
+            offset: byte_lo,
+            msg: format!("short read of {nbytes} bytes: {e}"),
+        })?;
+        self.stats.read_s += sw.elapsed().as_secs_f64();
+        self.stats.read_calls += 1;
+        self.stats.bytes_read += nbytes;
+        self.stats.page_faults += hi - lo + 1;
+        let mut out = Vec::with_capacity((hi - lo + 1) as usize);
+        for id in lo..=hi {
+            let a = ((id * self.elems_per_page - first_elem) * self.layout.elem_bytes()) as usize;
+            let b = ((((id + 1) * self.elems_per_page).min(self.n_elems) - first_elem)
+                * self.layout.elem_bytes()) as usize;
+            let page = self.decode(&self.raw[a..b]);
+            if let Page::Pairs { col_idx, .. } = &page {
+                if let Some(k) = col_idx.iter().position(|&c| c >= self.idx_bound) {
+                    let elem = id * self.elems_per_page + k as u64;
+                    return Err(Error::Corrupt {
+                        path: self.path.clone(),
+                        offset: self.region_base + elem * self.layout.elem_bytes(),
+                        msg: format!(
+                            "col_idx {} >= column bound {} at element {elem}",
+                            col_idx[k], self.idx_bound
+                        ),
+                    });
+                }
+            }
+            out.push(Arc::new(page));
+        }
+        Ok(out)
+    }
+
+    fn decode(&self, raw: &[u8]) -> Page {
+        match self.layout {
+            PageLayout::DenseF32 => {
+                let mut x = Vec::with_capacity(raw.len() / 4);
+                for ch in raw.chunks_exact(4) {
+                    x.push(f32::from_le_bytes([ch[0], ch[1], ch[2], ch[3]]));
+                }
+                Page::Dense(x)
+            }
+            PageLayout::IdxValPairs => {
+                let n = raw.len() / 8;
+                let mut values = Vec::with_capacity(n);
+                let mut col_idx = Vec::with_capacity(n);
+                for ch in raw.chunks_exact(8) {
+                    col_idx.push(u32::from_le_bytes([ch[0], ch[1], ch[2], ch[3]]));
+                    values.push(f32::from_le_bytes([ch[4], ch[5], ch[6], ch[7]]));
+                }
+                Page::Pairs { values, col_idx }
+            }
+        }
+    }
+
+    /// Insert a freshly faulted page into the pool, evicting per budget.
+    /// With a zero-capacity pool (budget below one page) nothing is kept.
+    fn install(&mut self, id: u64, page: Arc<Page>) {
+        if self.lru.capacity() == 0 {
+            return;
+        }
+        match self.lru.touch_evicting(id) {
+            Touch::Hit => {
+                // already tracked (possible when a caller re-faults a page
+                // it raced out of `resident`); refresh the buffer
+                self.resident.insert(id, page);
+            }
+            Touch::Miss { evicted } => {
+                if let Some(ev) = evicted {
+                    self.resident.remove(&ev);
+                }
+                self.resident.insert(id, page);
+            }
+        }
+    }
+
+    /// Touch a resident page: promote + count a hit and return its buffer.
+    fn touch_resident(&mut self, id: u64) -> Option<Arc<Page>> {
+        let page = self.resident.get(&id).map(Arc::clone)?;
+        let _ = self.lru.touch_evicting(id);
+        self.stats.page_hits += 1;
+        Some(page)
+    }
+
+    /// If the non-empty element range `[elem_lo, elem_hi)` lies inside a
+    /// single page, fault that page (if needed) and return it with the
+    /// range's offset inside the page — the zero-copy borrow path for
+    /// batches that land in one page. Returns `None` when the range is
+    /// empty or spans pages.
+    pub fn pin_range(&mut self, elem_lo: u64, elem_hi: u64) -> Result<Option<(Arc<Page>, usize)>> {
+        if elem_hi <= elem_lo {
+            return Ok(None);
+        }
+        debug_assert!(elem_hi <= self.n_elems);
+        let p_lo = elem_lo / self.elems_per_page;
+        let p_hi = (elem_hi - 1) / self.elems_per_page;
+        if p_lo != p_hi {
+            return Ok(None);
+        }
+        self.stats.bytes_requested += (elem_hi - elem_lo) * self.layout.elem_bytes();
+        let page = match self.touch_resident(p_lo) {
+            Some(p) => p,
+            None => {
+                let mut run = self.read_run(p_lo, p_lo)?;
+                let p = run.pop().expect("one page");
+                self.install(p_lo, Arc::clone(&p));
+                p
+            }
+        };
+        Ok(Some((page, (elem_lo - p_lo * self.elems_per_page) as usize)))
+    }
+
+    /// Visit the element range `[elem_lo, elem_hi)` page by page, in
+    /// order. `f` receives each page plus the covered sub-range *local to
+    /// that page* (element indices). Missing pages are faulted in maximal
+    /// consecutive runs — one seek + one sequential read per run — which is
+    /// exactly how contiguous CS/SS selections earn their cost advantage on
+    /// real files. Pages are refcounted, so a range larger than the budget
+    /// is still visited correctly while the pool churns underneath.
+    pub fn with_range<F>(&mut self, elem_lo: u64, elem_hi: u64, mut f: F) -> Result<()>
+    where
+        F: FnMut(&Page, usize, usize),
+    {
+        if elem_hi <= elem_lo {
+            return Ok(());
+        }
+        debug_assert!(elem_hi <= self.n_elems, "range past region end");
+        self.stats.bytes_requested += (elem_hi - elem_lo) * self.layout.elem_bytes();
+        let epp = self.elems_per_page;
+        let p_lo = elem_lo / epp;
+        let p_hi = (elem_hi - 1) / epp;
+        // pass 1: classify, promoting hits and collecting their buffers
+        let mut pages: Vec<Option<Arc<Page>>> = vec![None; (p_hi - p_lo + 1) as usize];
+        let mut misses: Vec<u64> = Vec::new();
+        for id in p_lo..=p_hi {
+            match self.touch_resident(id) {
+                Some(p) => pages[(id - p_lo) as usize] = Some(p),
+                None => misses.push(id),
+            }
+        }
+        // pass 2: fault the misses in maximal consecutive runs
+        let mut i = 0;
+        while i < misses.len() {
+            let run_lo = misses[i];
+            let mut j = i;
+            while j + 1 < misses.len() && misses[j + 1] == misses[j] + 1 {
+                j += 1;
+            }
+            let run_hi = misses[j];
+            let faulted = self.read_run(run_lo, run_hi)?;
+            for (k, page) in faulted.into_iter().enumerate() {
+                let id = run_lo + k as u64;
+                self.install(id, Arc::clone(&page));
+                pages[(id - p_lo) as usize] = Some(page);
+            }
+            i = j + 1;
+        }
+        // pass 3: visit in element order
+        for id in p_lo..=p_hi {
+            let page = pages[(id - p_lo) as usize].as_ref().expect("page resolved");
+            let first = id * epp;
+            let last = (first + epp).min(self.n_elems);
+            let lo = elem_lo.max(first) - first;
+            let hi = elem_hi.min(last) - first;
+            f(page, lo as usize, hi as usize);
+        }
+        Ok(())
+    }
+
+    /// Drop every resident page (counters preserved) — e.g. to cold-start
+    /// an experiment arm.
+    pub fn drop_pool(&mut self) {
+        self.resident.clear();
+        self.lru.clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    static UNIQ: std::sync::atomic::AtomicUsize = std::sync::atomic::AtomicUsize::new(0);
+
+    /// A file whose "region" is `n` little-endian f32s `0.0, 1.0, 2.0, …`
+    /// starting at byte offset `base`.
+    fn dense_file(base: u64, n: u64) -> (std::path::PathBuf, File) {
+        let uniq = UNIQ.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        let p = std::env::temp_dir().join(format!(
+            "pagestore_{}_{uniq}_{base}_{n}.bin",
+            std::process::id()
+        ));
+        let mut f = std::fs::File::create(&p).unwrap();
+        f.write_all(&vec![0xAAu8; base as usize]).unwrap();
+        for i in 0..n {
+            f.write_all(&(i as f32).to_le_bytes()).unwrap();
+        }
+        f.flush().unwrap();
+        (p.clone(), std::fs::File::open(&p).unwrap())
+    }
+
+    fn store(
+        base: u64,
+        n: u64,
+        page_bytes: u64,
+        budget_bytes: u64,
+    ) -> (std::path::PathBuf, PageStore) {
+        let (p, f) = dense_file(base, n);
+        let s = PageStore::new(f, &p, PageLayout::DenseF32, base, n, page_bytes, budget_bytes)
+            .unwrap();
+        (p, s)
+    }
+
+    #[test]
+    fn rejects_bad_page_size() {
+        let (p, f) = dense_file(0, 8);
+        assert!(PageStore::new(f, &p, PageLayout::DenseF32, 0, 8, 0, 64).is_err());
+        let f = std::fs::File::open(&p).unwrap();
+        assert!(PageStore::new(f, &p, PageLayout::DenseF32, 0, 8, 6, 64).is_err());
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn contiguous_range_is_one_sequential_read() {
+        // 64 elems, 4 elems per page (16 B), budget for all 16 pages
+        let (p, mut s) = store(24, 64, 16, 16 * 16);
+        let mut got = Vec::new();
+        s.with_range(3, 23, |pg, a, b| got.extend_from_slice(&pg.dense()[a..b]))
+            .unwrap();
+        let want: Vec<f32> = (3..23).map(|v| v as f32).collect();
+        assert_eq!(got, want);
+        assert_eq!(s.stats.read_calls, 1, "cold contiguous range = one syscall");
+        assert_eq!(s.stats.page_faults, 6); // pages 0..=5
+        assert_eq!(s.stats.bytes_read, 6 * 16);
+        assert_eq!(s.stats.bytes_requested, 20 * 4);
+        assert!(s.stats.read_amplification() > 1.0);
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn resident_pages_hit_without_io() {
+        let (p, mut s) = store(0, 64, 16, 16 * 16);
+        let mut sink = 0f32;
+        s.with_range(0, 16, |pg, a, b| sink += pg.dense()[a..b].iter().sum::<f32>())
+            .unwrap();
+        let calls = s.stats.read_calls;
+        s.with_range(0, 16, |pg, a, b| sink += pg.dense()[a..b].iter().sum::<f32>())
+            .unwrap();
+        assert_eq!(s.stats.read_calls, calls, "warm range must not touch the file");
+        assert_eq!(s.stats.page_hits, 4);
+        assert!(sink > 0.0);
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn partial_residency_splits_into_runs() {
+        let (p, mut s) = store(0, 64, 16, 16 * 16);
+        // warm pages 2..=3 (elements 8..16)
+        s.with_range(8, 16, |_, _, _| {}).unwrap();
+        assert_eq!(s.stats.read_calls, 1);
+        // fetch elements 0..32 = pages 0..=7; 2,3 hot -> runs (0,1), (4..7)
+        s.with_range(0, 32, |_, _, _| {}).unwrap();
+        assert_eq!(s.stats.read_calls, 3);
+        assert_eq!(s.stats.page_hits, 2);
+        assert_eq!(s.stats.page_faults, 2 + 6);
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn budget_bounds_residency_and_forces_refaults() {
+        // 16 pages, budget = 4 pages: a full sweep keeps only the last 4
+        // resident; the next sweep hits those 4 (ranges classify residency
+        // up front, per batch) and must re-fault the other 12
+        let (p, mut s) = store(0, 64, 16, 4 * 16);
+        s.with_range(0, 64, |_, _, _| {}).unwrap();
+        assert_eq!(s.stats.page_faults, 16);
+        assert_eq!(s.resident_pages(), 4);
+        assert!(s.resident_pages() as u64 * s.page_bytes() <= s.budget_bytes());
+        s.with_range(0, 64, |_, _, _| {}).unwrap();
+        assert_eq!(s.stats.page_faults, 16 + 12, "evicted pages must re-fault");
+        assert_eq!(s.stats.page_hits, 4, "the surviving tail pages hit");
+        assert!(s.stats.bytes_read > s.budget_bytes(), "eviction proof");
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn zero_budget_keeps_nothing_resident() {
+        let (p, mut s) = store(0, 32, 16, 0);
+        s.with_range(0, 32, |_, _, _| {}).unwrap();
+        s.with_range(0, 32, |_, _, _| {}).unwrap();
+        assert_eq!(s.resident_pages(), 0);
+        assert_eq!(s.stats.page_hits, 0);
+        assert_eq!(s.stats.page_faults, 16);
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn pin_range_borrows_single_page_and_faults_once() {
+        let (p, mut s) = store(0, 64, 16, 16 * 16);
+        let (page, off) = s.pin_range(5, 8).unwrap().expect("fits page 1");
+        assert_eq!(off, 1);
+        assert_eq!(&page.dense()[off..off + 3], &[5.0, 6.0, 7.0]);
+        assert_eq!(s.stats.page_faults, 1);
+        // second pin of the same page is a pure hit
+        let (_page2, _off2) = s.pin_range(4, 8).unwrap().unwrap();
+        assert_eq!(s.stats.page_faults, 1);
+        assert_eq!(s.stats.page_hits, 1);
+        // spanning ranges and empty ranges decline
+        assert!(s.pin_range(3, 8).unwrap().is_none());
+        assert!(s.pin_range(5, 5).unwrap().is_none());
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn pinned_page_survives_eviction() {
+        // budget = 1 page: pin page 0, then sweep far enough to evict it;
+        // the pinned Arc must stay valid and intact
+        let (p, mut s) = store(0, 64, 16, 16);
+        let (page, off) = s.pin_range(0, 4).unwrap().unwrap();
+        s.with_range(16, 64, |_, _, _| {}).unwrap();
+        assert!(s.resident_pages() <= 1);
+        assert_eq!(&page.dense()[off..off + 4], &[0.0, 1.0, 2.0, 3.0]);
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn ragged_last_page_is_short() {
+        // 10 elems, 4 per page -> 3 pages, last holds 2
+        let (p, mut s) = store(0, 10, 16, 1024);
+        assert_eq!(s.n_pages(), 3);
+        let mut got = Vec::new();
+        s.with_range(0, 10, |pg, a, b| got.extend_from_slice(&pg.dense()[a..b]))
+            .unwrap();
+        assert_eq!(got.len(), 10);
+        assert_eq!(got[9], 9.0);
+        assert_eq!(s.stats.bytes_read, 10 * 4, "short last page reads short");
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn truncated_file_yields_typed_corrupt_error() {
+        // claim 32 elements but write only 8: faulting past the end must
+        // surface a Corrupt error with the offending offset
+        let (p, f) = dense_file(0, 8);
+        let mut s =
+            PageStore::new(f, &p, PageLayout::DenseF32, 0, 32, 16, 1024).unwrap();
+        match s.with_range(0, 32, |_, _, _| {}) {
+            Err(Error::Corrupt { offset, .. }) => assert!(offset <= 32),
+            other => panic!("expected Corrupt, got {other:?}"),
+        }
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn pairs_layout_deinterleaves() {
+        let p = std::env::temp_dir().join(format!("pagestore_pairs_{}.bin", std::process::id()));
+        let mut f = std::fs::File::create(&p).unwrap();
+        for i in 0..6u32 {
+            f.write_all(&i.to_le_bytes()).unwrap();
+            f.write_all(&(i as f32 * 0.5).to_le_bytes()).unwrap();
+        }
+        f.flush().unwrap();
+        let f = std::fs::File::open(&p).unwrap();
+        let mut s = PageStore::new(f, &p, PageLayout::IdxValPairs, 0, 6, 16, 1024).unwrap();
+        let mut vals = Vec::new();
+        let mut idx = Vec::new();
+        s.with_range(1, 5, |pg, a, b| {
+            let (v, i) = pg.pairs();
+            vals.extend_from_slice(&v[a..b]);
+            idx.extend_from_slice(&i[a..b]);
+        })
+        .unwrap();
+        assert_eq!(idx, vec![1, 2, 3, 4]);
+        assert_eq!(vals, vec![0.5, 1.0, 1.5, 2.0]);
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn pairs_page_with_out_of_bounds_index_errors_typed() {
+        // 4 pairs, one with col_idx 9 under a bound of 5: the fault must
+        // yield Corrupt at that pair's byte offset, not a decoded page
+        let p = std::env::temp_dir().join(format!("pagestore_oob_{}.bin", std::process::id()));
+        let mut f = std::fs::File::create(&p).unwrap();
+        for (i, idx) in [0u32, 2, 9, 4].iter().enumerate() {
+            f.write_all(&idx.to_le_bytes()).unwrap();
+            f.write_all(&(i as f32).to_le_bytes()).unwrap();
+        }
+        f.flush().unwrap();
+        let f = std::fs::File::open(&p).unwrap();
+        let mut s = PageStore::new(f, &p, PageLayout::IdxValPairs, 0, 4, 16, 1024).unwrap();
+        s.set_idx_bound(5);
+        match s.with_range(0, 4, |_, _, _| {}) {
+            Err(Error::Corrupt { offset, msg, .. }) => {
+                assert_eq!(offset, 2 * 8, "offset of the corrupt pair");
+                assert!(msg.contains("col_idx 9"), "{msg}");
+            }
+            other => panic!("expected Corrupt, got {other:?}"),
+        }
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn drop_pool_forces_cold_refetch() {
+        let (p, mut s) = store(0, 16, 16, 1024);
+        s.with_range(0, 16, |_, _, _| {}).unwrap();
+        let faults = s.stats.page_faults;
+        s.drop_pool();
+        assert_eq!(s.resident_pages(), 0);
+        s.with_range(0, 16, |_, _, _| {}).unwrap();
+        assert!(s.stats.page_faults > faults);
+        std::fs::remove_file(p).ok();
+    }
+}

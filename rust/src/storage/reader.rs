@@ -30,21 +30,49 @@ pub struct DiskSource {
 }
 
 impl DiskSource {
-    /// Open an `.sxb` file, validating the header and loading labels.
+    /// Open an `.sxb` file, validating the header (magic, dims, and the
+    /// claimed geometry against the actual file length, with checked
+    /// arithmetic) and loading labels. Every corruption mode — bad magic,
+    /// truncated header, lying dims, truncated body — yields a typed
+    /// [`Error::Corrupt`] carrying the byte offset where the inconsistency
+    /// was detected.
     pub fn open(path: impl AsRef<Path>) -> Result<Self> {
-        let mut file = File::open(path)?;
+        let pstr = path.as_ref().display().to_string();
+        let corrupt = |offset: u64, msg: String| Error::Corrupt { path: pstr.clone(), offset, msg };
+        let mut file = File::open(path.as_ref())?;
+        let file_len = file.metadata()?.len();
         let mut hdr = [0u8; 24];
-        file.read_exact(&mut hdr)?;
+        file.read_exact(&mut hdr)
+            .map_err(|e| corrupt(0, format!("file shorter than the 24-byte header: {e}")))?;
         if &hdr[0..4] != b"SXB1" {
-            return Err(Error::DatasetParse { line: 0, msg: "bad .sxb magic".into() });
+            return Err(corrupt(0, format!("bad .sxb magic {:?}", &hdr[0..4])));
         }
-        let rows = u64::from_le_bytes(hdr[8..16].try_into().unwrap()) as usize;
-        let cols = u64::from_le_bytes(hdr[16..24].try_into().unwrap()) as usize;
-        if rows == 0 || cols == 0 {
-            return Err(Error::DatasetParse { line: 0, msg: "bad .sxb dims".into() });
+        let rows64 = u64::from_le_bytes(hdr[8..16].try_into().unwrap());
+        let cols64 = u64::from_le_bytes(hdr[16..24].try_into().unwrap());
+        if rows64 == 0 || cols64 == 0 {
+            return Err(corrupt(8, format!("bad .sxb dims {rows64} x {cols64}")));
         }
+        // validate the claimed geometry against the real file length BEFORE
+        // allocating anything — a lying header must fail typed, never OOM
+        let expected = (|| {
+            let labels = 4u64.checked_mul(rows64)?;
+            let feats = 4u64.checked_mul(rows64.checked_mul(cols64)?)?;
+            HEADER_BYTES.checked_add(labels)?.checked_add(feats)
+        })();
+        if expected != Some(file_len) {
+            return Err(corrupt(
+                file_len.min(expected.unwrap_or(u64::MAX)),
+                format!(
+                    ".sxb length mismatch: header {rows64} x {cols64} expects \
+                     {expected:?} bytes, file has {file_len}"
+                ),
+            ));
+        }
+        let rows = rows64 as usize;
+        let cols = cols64 as usize;
         let mut yraw = vec![0u8; rows * 4];
-        file.read_exact(&mut yraw)?;
+        file.read_exact(&mut yraw)
+            .map_err(|e| corrupt(HEADER_BYTES, format!("truncated label block: {e}")))?;
         let y = yraw
             .chunks_exact(4)
             .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
@@ -209,7 +237,61 @@ mod tests {
     fn rejects_non_sxb_file() {
         let p = std::env::temp_dir().join(format!("reader_bad_{}.sxb", std::process::id()));
         std::fs::write(&p, b"not an sxb file at all........").unwrap();
-        assert!(DiskSource::open(&p).is_err());
+        match DiskSource::open(&p) {
+            Err(Error::Corrupt { offset: 0, msg, .. }) => assert!(msg.contains("magic"), "{msg}"),
+            other => panic!("expected Corrupt at offset 0, got {other:?}"),
+        }
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn corruption_modes_yield_typed_errors_with_offsets() {
+        // build a real, valid file, then corrupt it in place four ways
+        let (p, _) = setup();
+        let valid = std::fs::read(&p).unwrap();
+
+        // (1) truncated mid-body: length check fires at the end of the file
+        let truncated = &valid[..valid.len() - 10];
+        std::fs::write(&p, truncated).unwrap();
+        match DiskSource::open(&p) {
+            Err(Error::Corrupt { offset, msg, .. }) => {
+                assert_eq!(offset, truncated.len() as u64, "offset = valid prefix end");
+                assert!(msg.contains("length mismatch"), "{msg}");
+            }
+            other => panic!("expected Corrupt for truncation, got {other:?}"),
+        }
+
+        // (2) flipped magic byte
+        let mut bad_magic = valid.clone();
+        bad_magic[1] ^= 0xFF;
+        std::fs::write(&p, &bad_magic).unwrap();
+        match DiskSource::open(&p) {
+            Err(Error::Corrupt { offset: 0, .. }) => {}
+            other => panic!("expected Corrupt at 0, got {other:?}"),
+        }
+
+        // (3) header lies about rows: length mismatch, detected without
+        // allocating the claimed geometry
+        let mut lying = valid.clone();
+        lying[8..16].copy_from_slice(&u64::MAX.to_le_bytes());
+        std::fs::write(&p, &lying).unwrap();
+        match DiskSource::open(&p) {
+            Err(Error::Corrupt { msg, .. }) => assert!(msg.contains("length mismatch"), "{msg}"),
+            other => panic!("expected Corrupt for lying header, got {other:?}"),
+        }
+
+        // (4) zero dims
+        let mut zeroed = valid.clone();
+        zeroed[8..16].copy_from_slice(&0u64.to_le_bytes());
+        std::fs::write(&p, &zeroed).unwrap();
+        match DiskSource::open(&p) {
+            Err(Error::Corrupt { offset: 8, msg, .. }) => assert!(msg.contains("dims"), "{msg}"),
+            other => panic!("expected Corrupt at 8, got {other:?}"),
+        }
+
+        // restore and confirm the file still opens (the corruption was ours)
+        std::fs::write(&p, &valid).unwrap();
+        assert!(DiskSource::open(&p).is_ok());
         std::fs::remove_file(p).ok();
     }
 }

@@ -106,12 +106,29 @@ pub fn reg_for(cfg: &ExperimentConfig) -> f32 {
 /// Run one experiment arm over an already-resolved dataset (either layout).
 pub fn run_experiment(cfg: &ExperimentConfig, ds: &Dataset) -> Result<TrainReport> {
     cfg.validate()?;
+    if ds.is_paged() {
+        // the out-of-core path needs the native host kernels (a device
+        // backend would require the whole feature block resident) and
+        // cannot rewrite its file in place
+        if cfg.backend != BackendKind::Native {
+            return Err(crate::error::Error::Config(
+                "paged (out-of-core) datasets require the native backend".into(),
+            ));
+        }
+        if cfg.pre_shuffle {
+            return Err(crate::error::Error::Config(
+                "pre_shuffle is unsupported for paged datasets; generate the \
+                 file pre-shuffled instead"
+                    .into(),
+            ));
+        }
+    }
     let mut backend = build_backend(cfg, ds)?;
     if cfg.pre_shuffle {
         // paper §5 extension: one-time layout shuffle so CS/SS keep
         // contiguous access over a de-clustered row order
         let mut shuffled = ds.clone();
-        shuffled.shuffle_rows(cfg.seed ^ 0x9E37);
+        shuffled.shuffle_rows(cfg.seed ^ 0x9E37)?;
         return run_experiment_with_backend(cfg, &shuffled, backend.as_mut());
     }
     run_experiment_with_backend(cfg, ds, backend.as_mut())
@@ -155,6 +172,9 @@ pub fn run_experiment_with_backend(
     // 0 resets to the default, so a pin from a previous experiment in the
     // same process never leaks into this one's timings
     crate::runtime::pool::set_parallelism(cfg.pool_threads);
+
+    // paged stores are shared across arms; report this arm's IO as a delta
+    let io_base = ds.io_stats();
 
     // initial objective (outside the clock)
     let obj0 = be.full_objective(solver.w(), ds, c)?;
@@ -234,9 +254,11 @@ pub fn run_experiment_with_backend(
             for (j, sel) in sampler.epoch(epoch).into_iter().enumerate() {
                 let cost = sim.fetch(&sel);
                 time.sim_access_s += cost.time_s;
-                if sel.is_contiguous() {
+                if sel.is_contiguous() && !ds.is_paged() {
                     time.bytes_borrowed += ds.payload_bytes(&sel);
                 } else {
+                    // scattered gathers — and every synchronous paged
+                    // assembly, which copies out of the page store
                     time.bytes_copied += ds.payload_bytes(&sel);
                 }
                 let mut sw = Stopwatch::start();
@@ -269,6 +291,7 @@ pub fn run_experiment_with_backend(
         None => sim_local.take().expect("sync path owns the simulator"),
     };
     time.access = sim.total;
+    time.io = ds.io_stats().delta_since(&io_base);
 
     let final_objective = trace.final_objective().unwrap_or(obj0);
     Ok(TrainReport {
@@ -325,7 +348,13 @@ fn full_gradient_sweep(
         let sel = RowSelection::Contiguous { start, end };
         let cost = sim.fetch(&sel);
         time.sim_access_s += cost.time_s;
-        time.bytes_borrowed += ds.payload_bytes(&sel);
+        if ds.is_paged() {
+            // the paged chunked sweep materializes every chunk out of the
+            // page store — that traffic is a copy, not a borrow
+            time.bytes_copied += ds.payload_bytes(&sel);
+        } else {
+            time.bytes_borrowed += ds.payload_bytes(&sel);
+        }
         start = end;
     }
     let sw = Stopwatch::start();
@@ -448,7 +477,12 @@ mod tests {
             sampling,
             dataset: "tiny".into(),
             reg_c: Some(1e-3),
-            storage: StorageConfig { profile: "hdd".into(), cache_mib: 0, block_kib: None },
+            storage: StorageConfig {
+                profile: "hdd".into(),
+                cache_mib: 0,
+                block_kib: None,
+                ..Default::default()
+            },
             prefetch_depth: 0,
             ..ExperimentConfig::default()
         }
@@ -569,6 +603,51 @@ mod tests {
         run_experiment(&cfg, &ds).unwrap();
         let after = crate::pipeline::prefetch::reader_spawns_on_this_thread();
         assert_eq!(after - before, 1, "exactly one reader spawn per experiment");
+    }
+
+    #[test]
+    fn paged_run_bit_matches_incore_on_sync_and_prefetch_paths() {
+        // the tentpole contract: training out-of-core (25% page budget)
+        // must reproduce the in-core trajectory bit for bit, on both the
+        // synchronous and the pipelined driver paths
+        let ds = tiny_ds();
+        let path = std::env::temp_dir().join(format!("train_paged_{}.sxb", std::process::id()));
+        ds.as_dense().unwrap().save(&path).unwrap();
+        let paged: Dataset =
+            crate::data::PagedDataset::open(&path, ds.file_bytes() / 4, 4096).unwrap().into();
+        for depth in [0usize, 3] {
+            for solver in [SolverKind::Saga, SolverKind::Svrg] {
+                let mut cfg = quick_cfg(solver, SamplingKind::Ss);
+                cfg.prefetch_depth = depth;
+                let a = run_experiment(&cfg, &ds).unwrap();
+                let b = run_experiment(&cfg, &paged).unwrap();
+                assert_eq!(a.w, b.w, "{} depth={depth}", solver.label());
+                assert_eq!(
+                    a.final_objective.to_bits(),
+                    b.final_objective.to_bits(),
+                    "{} depth={depth}",
+                    solver.label()
+                );
+                assert!(b.time.io.bytes_read > 0, "paged run must really read the file");
+                assert_eq!(a.time.io.bytes_read, 0, "in-core run performs no file IO");
+            }
+        }
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn paged_rejects_preshuffle_and_device_backends() {
+        let ds = tiny_ds();
+        let path = std::env::temp_dir().join(format!("train_paged_g_{}.sxb", std::process::id()));
+        ds.as_dense().unwrap().save(&path).unwrap();
+        let paged: Dataset = crate::data::PagedDataset::open(&path, 0, 4096).unwrap().into();
+        let mut cfg = quick_cfg(SolverKind::Mbsgd, SamplingKind::Cs);
+        cfg.pre_shuffle = true;
+        assert!(run_experiment(&cfg, &paged).is_err(), "pre_shuffle must be rejected");
+        let mut cfg = quick_cfg(SolverKind::Mbsgd, SamplingKind::Cs);
+        cfg.backend = crate::config::BackendKind::Pjrt;
+        assert!(run_experiment(&cfg, &paged).is_err(), "device backends must be rejected");
+        std::fs::remove_file(path).ok();
     }
 
     #[test]

@@ -30,7 +30,15 @@ pub fn estimate_optimum(
     let mut v = vec![0f32; n];
     let mut g = vec![0f32; n];
     let native = be.is_native_host();
-    let view = ds.slice_view(0, ds.rows());
+    if !native && ds.is_paged() {
+        return Err(crate::error::Error::Config(
+            "paged (out-of-core) datasets require the native backend".into(),
+        ));
+    }
+    // the single-dispatch full-batch view is only materialized for device
+    // backends (a paged dataset cannot serve it; the native path never
+    // needs it)
+    let view = if native { None } else { Some(ds.slice_view(0, ds.rows())) };
     let mut scratch = GradScratch::default();
 
     for k in 0..iters {
@@ -44,7 +52,7 @@ pub fn estimate_optimum(
             chunked::full_grad_into(&v, ds, c, &mut g, &mut scratch);
         } else {
             // device backends keep their own single-dispatch full batch
-            be.grad_into(&v, &view, c, &mut g)?;
+            be.grad_into(&v, view.as_ref().expect("non-native view"), c, &mut g)?;
         }
         w_prev.copy_from_slice(&w);
         for i in 0..n {

@@ -1,0 +1,217 @@
+//! End-to-end out-of-core tests: the paged data plane must train every
+//! solver with trajectories **bit-identical** to the in-core stores, under
+//! page budgets from a single page up to the whole file, while really
+//! evicting and re-faulting pages (proven by `IoStats.bytes_read` far
+//! exceeding the budget) and reproducing the paper's contiguous-vs-
+//! dispersed gap in page-fault counts on real file I/O.
+//!
+//! The CI out-of-core job runs exactly this file:
+//! `cargo test --release --test paged_e2e`.
+
+use samplex::config::ExperimentConfig;
+use samplex::data::batch::BatchAssembler;
+use samplex::data::synth::{self, FeatureDist, SparseSynthSpec, SynthSpec};
+use samplex::data::{Dataset, PagedDataset};
+use samplex::sampling::{Sampler, SamplingKind};
+use samplex::solvers::SolverKind;
+use samplex::train::run_experiment;
+
+static UNIQ: std::sync::atomic::AtomicUsize = std::sync::atomic::AtomicUsize::new(0);
+
+fn tmp_path(ext: &str) -> std::path::PathBuf {
+    let uniq = UNIQ.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+    std::env::temp_dir().join(format!("paged_e2e_{}_{uniq}.{ext}", std::process::id()))
+}
+
+fn dense_ds(rows: usize, cols: usize, seed: u64) -> Dataset {
+    synth::generate(
+        &SynthSpec {
+            name: "ooc",
+            rows,
+            cols,
+            dist: FeatureDist::Gaussian,
+            flip_prob: 0.05,
+            margin_noise: 0.3,
+            pos_fraction: 0.5,
+        },
+        seed,
+    )
+    .unwrap()
+    .into()
+}
+
+fn csr_ds(rows: usize, seed: u64) -> Dataset {
+    Dataset::Csr(
+        synth::generate_csr(
+            &SparseSynthSpec {
+                name: "ooc-sparse",
+                rows,
+                cols: 5_000,
+                nnz_per_row: 20,
+                flip_prob: 0.05,
+                margin_noise: 0.3,
+                pos_fraction: 0.5,
+            },
+            seed,
+        )
+        .unwrap(),
+    )
+}
+
+/// Save `ds` to a temp binary and reopen it paged at the given budget.
+fn paged_copy(ds: &Dataset, budget_bytes: u64, page_bytes: u64) -> (std::path::PathBuf, Dataset) {
+    let ext = if ds.is_csr() { "sxc" } else { "sxb" };
+    let p = tmp_path(ext);
+    ds.save(&p).unwrap();
+    let paged: Dataset = PagedDataset::open(&p, budget_bytes, page_bytes).unwrap().into();
+    (p, paged)
+}
+
+fn cfg(solver: SolverKind, sampling: SamplingKind, batch: usize) -> ExperimentConfig {
+    let mut c = ExperimentConfig::quick("ooc", solver, sampling, batch);
+    c.epochs = 2;
+    c.reg_c = Some(1e-3);
+    c.record_every = 1;
+    c
+}
+
+/// Acceptance criterion: a 120k-row synthetic trains end-to-end through
+/// all five solvers at a page budget of ≤ 25% of the file size, through
+/// the prefetch pipeline, bit-identical to the in-core run.
+#[test]
+fn all_five_solvers_bit_identical_at_quarter_budget_120k_rows() {
+    let ds = dense_ds(120_000, 8, 11);
+    let budget = ds.file_bytes() / 4;
+    let (path, paged) = paged_copy(&ds, budget, 64 * 1024);
+    assert!(paged.as_paged().unwrap().budget_bytes() < ds.file_bytes());
+    for solver in SolverKind::all() {
+        let mut c = cfg(solver, SamplingKind::Ss, 2000);
+        c.prefetch_depth = 2;
+        let incore = run_experiment(&c, &ds).unwrap();
+        let ooc = run_experiment(&c, &paged).unwrap();
+        assert_eq!(incore.w, ooc.w, "{}: iterates must be bit-identical", solver.label());
+        assert_eq!(
+            incore.final_objective.to_bits(),
+            ooc.final_objective.to_bits(),
+            "{}: objective must be bit-identical",
+            solver.label()
+        );
+        assert!(ooc.time.io.bytes_read > 0, "{}: must really read the file", solver.label());
+    }
+    std::fs::remove_file(path).ok();
+}
+
+/// Satellite: SAGA and SVRG trajectories on `PagedDataset` are
+/// bit-identical to `DenseDataset`/`CsrDataset` for all five sampler kinds
+/// at page budgets {1 page, 25%, 100%}.
+#[test]
+fn saga_svrg_trajectories_match_incore_for_all_samplers_and_budgets() {
+    let page_bytes = 2048u64;
+    let all_samplers = [
+        SamplingKind::Rs,
+        SamplingKind::Rswr,
+        SamplingKind::Cs,
+        SamplingKind::Ss,
+        SamplingKind::Stratified,
+    ];
+    for ds in [dense_ds(2400, 6, 3), csr_ds(1500, 4)] {
+        let layout = if ds.is_csr() { "csr" } else { "dense" };
+        for solver in [SolverKind::Saga, SolverKind::Svrg] {
+            for sampling in all_samplers {
+                let c = cfg(solver, sampling, 100);
+                let incore = run_experiment(&c, &ds).unwrap();
+                for budget in [page_bytes, ds.file_bytes() / 4, ds.file_bytes()] {
+                    let (path, paged) = paged_copy(&ds, budget, page_bytes);
+                    let ooc = run_experiment(&c, &paged).unwrap();
+                    assert_eq!(
+                        incore.w,
+                        ooc.w,
+                        "{layout}/{}/{} budget={budget}",
+                        solver.label(),
+                        sampling.label()
+                    );
+                    assert_eq!(
+                        incore.final_objective.to_bits(),
+                        ooc.final_objective.to_bits(),
+                        "{layout}/{}/{} budget={budget}",
+                        solver.label(),
+                        sampling.label()
+                    );
+                    std::fs::remove_file(path).ok();
+                }
+            }
+        }
+    }
+}
+
+/// Satellite / CI assertion: with a budget far below the file size, the
+/// e2e run must evict and re-fault pages — lifetime `bytes_read` strictly
+/// exceeds the budget (a store that merely cached everything could never
+/// read more than budget + one cold pass).
+#[test]
+fn tiny_budget_forces_evictions_bytes_read_exceeds_budget() {
+    let ds = dense_ds(120_000, 8, 7);
+    let budget = 4 * 64 * 1024u64; // 256 KiB pool vs a ~3.8 MiB file
+    assert!(budget < ds.file_bytes() / 4);
+    let (path, paged) = paged_copy(&ds, budget, 64 * 1024);
+    let mut c = cfg(SolverKind::Mbsgd, SamplingKind::Cs, 2000);
+    c.epochs = 3;
+    c.prefetch_depth = 2;
+    let report = run_experiment(&c, &paged).unwrap();
+    let io = report.time.io;
+    assert!(
+        io.bytes_read > budget,
+        "eviction proof failed: read {} bytes within a {budget}-byte budget",
+        io.bytes_read
+    );
+    // 3 epochs + objective sweeps over a thrashing pool: well beyond one
+    // cold pass of the file as well
+    assert!(io.bytes_read > ds.file_bytes(), "must re-read evicted pages");
+    assert!(io.page_faults > 0 && io.read_calls > 0);
+    std::fs::remove_file(path).ok();
+}
+
+/// Acceptance criterion: below a 100% budget, contiguous CS/SS epochs take
+/// strictly fewer page faults than scattered RS epochs — the paper's gap
+/// on real file I/O.
+#[test]
+fn cs_and_ss_fault_strictly_less_than_rs_below_full_budget() {
+    let ds = dense_ds(50_000, 8, 5);
+    for budget_pct in [10u64, 25, 50] {
+        let budget = ds.file_bytes() * budget_pct / 100;
+        let faults = |kind: SamplingKind| {
+            let (path, paged) = paged_copy(&ds, budget, 64 * 1024);
+            let mut sampler: Box<dyn Sampler> = kind.build(50_000, 500, 7, None).unwrap();
+            let mut asm = BatchAssembler::new();
+            for e in 0..2 {
+                for sel in sampler.epoch(e) {
+                    std::hint::black_box(asm.assemble(&paged, &sel).rows());
+                }
+            }
+            let io = paged.io_stats();
+            std::fs::remove_file(path).ok();
+            io.page_faults
+        };
+        let (rs, cs, ss) = (
+            faults(SamplingKind::Rs),
+            faults(SamplingKind::Cs),
+            faults(SamplingKind::Ss),
+        );
+        assert!(cs < rs, "budget {budget_pct}%: cs faults {cs} !< rs faults {rs}");
+        assert!(ss < rs, "budget {budget_pct}%: ss faults {ss} !< rs faults {rs}");
+    }
+}
+
+/// The paged path composes with the data-parallel trainer (§5): shards
+/// assemble out of the shared store and converge like the in-core run.
+#[test]
+fn data_parallel_trains_out_of_core() {
+    let ds = dense_ds(4000, 6, 9);
+    let (path, paged) = paged_copy(&ds, ds.file_bytes() / 4, 4096);
+    let c = cfg(SolverKind::Mbsgd, SamplingKind::Cs, 100);
+    let par_incore = samplex::train::parallel::run_data_parallel(&c, &ds, 3).unwrap();
+    let par_paged = samplex::train::parallel::run_data_parallel(&c, &paged, 3).unwrap();
+    assert_eq!(par_incore.w, par_paged.w, "parallel shards must match bit for bit");
+    assert!(paged.io_stats().bytes_read > 0);
+    std::fs::remove_file(path).ok();
+}
