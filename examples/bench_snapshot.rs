@@ -57,7 +57,7 @@ fn time_sweeps(ds: &Dataset, w: &[f32], threads: usize) -> SweepTimes {
         5,
         2,
         || {
-            chunked::full_grad_into(w, ds, 1e-3, &mut g, &mut scratch);
+            chunked::full_grad_into(w, ds, 1e-3, &mut g, &mut scratch).unwrap();
             std::hint::black_box(&g);
         },
     );
@@ -101,11 +101,18 @@ fn main() -> samplex::Result<()> {
     let n_threads = pool::parallelism();
     println!("compute-plane snapshot: 1 vs {n_threads} threads\n");
 
-    println!("generating dense synthetic (120k x 28) …");
+    // SAMPLEX_BENCH_SMALL=1 shrinks the synthetic profiles (CI runs the
+    // snapshot on every push; the shape of the numbers is what matters
+    // there, not their absolute scale)
+    let small = std::env::var("SAMPLEX_BENCH_SMALL").is_ok_and(|v| v == "1");
+    let (dense_rows, sparse_rows, sparse_cols) =
+        if small { (30_000, 20_000, 10_000) } else { (120_000, 120_000, 50_000) };
+
+    println!("generating dense synthetic ({dense_rows} x 28) …");
     let dense: Dataset = synth::generate(
         &SynthSpec {
-            name: "bench-dense-120k",
-            rows: 120_000,
+            name: "bench-dense",
+            rows: dense_rows,
             cols: 28,
             dist: FeatureDist::Gaussian,
             flip_prob: 0.05,
@@ -115,12 +122,12 @@ fn main() -> samplex::Result<()> {
         7,
     )?
     .into();
-    println!("generating sparse synthetic (120k x 50k, ~60 nnz/row) …");
+    println!("generating sparse synthetic ({sparse_rows} x {sparse_cols}, ~60 nnz/row) …");
     let sparse: Dataset = Dataset::Csr(synth::generate_csr(
         &SparseSynthSpec {
-            name: "bench-sparse-120k",
-            rows: 120_000,
-            cols: 50_000,
+            name: "bench-sparse",
+            rows: sparse_rows,
+            cols: sparse_cols,
             nnz_per_row: 60,
             flip_prob: 0.05,
             margin_noise: 0.3,
@@ -171,7 +178,11 @@ fn main() -> samplex::Result<()> {
 }
 
 /// Out-of-core I/O snapshot: CS / SS / RS epochs through the paged store at
-/// budgets of 10% / 50% / 100% of the file size. Writes `BENCH_io.json`.
+/// budgets of 10% / 50% / 100% of the file size, each in two modes —
+/// demand paging and asynchronous readahead (a dedicated thread prefaults
+/// the deterministic schedule ahead of assembly). Writes `BENCH_io.json`
+/// and asserts the readahead arms report strictly fewer demand faults than
+/// their demand-paged twins.
 fn io_snapshot(dense: &Dataset) -> samplex::Result<()> {
     let dir = std::env::temp_dir().join(format!("samplex_bench_io_{}", std::process::id()));
     std::fs::create_dir_all(&dir)?;
@@ -191,62 +202,116 @@ fn io_snapshot(dense: &Dataset) -> samplex::Result<()> {
         epochs
     );
     println!(
-        "{:<8} {:<6} {:>10} {:>8} {:>12} {:>8} {:>10}",
-        "budget", "samp", "faults", "reads", "bytes_read", "amp", "MB/s"
+        "{:<8} {:<9} {:>10} {:>10} {:>8} {:>12} {:>8} {:>10}",
+        "budget", "samp", "faults", "demand", "reads", "bytes_read", "amp", "MB/s"
     );
 
+    let readahead_window = 32u64;
     let mut entries = Vec::new();
     for budget_pct in [10u64, 50, 100] {
         let budget = file_bytes * budget_pct / 100;
         for kind in [SamplingKind::Cs, SamplingKind::Ss, SamplingKind::Rs] {
-            // fresh store per arm: every arm starts cold and independent
-            let paged: Dataset = PagedDataset::open(&path, budget, page_bytes)?.into();
-            let mut sampler: Box<dyn Sampler> = kind.build(rows, batch, 7, None)?;
-            let mut asm = BatchAssembler::new();
-            let sw = std::time::Instant::now();
-            for e in 0..epochs {
-                for sel in sampler.epoch(e) {
-                    std::hint::black_box(asm.assemble(&paged, &sel).rows());
+            let mut demand_faults_by_mode = [0u64; 2];
+            for (mode, with_readahead) in [(0usize, false), (1, true)] {
+                // fresh store per arm: every arm starts cold and independent
+                let paged: Dataset = PagedDataset::open(&path, budget, page_bytes)?.into();
+                let p = paged.as_paged().expect("paged");
+                let mut ra = with_readahead
+                    .then(|| (p.spawn_readahead(readahead_window), 0u64));
+                let sampler: Box<dyn Sampler> = kind.build(rows, batch, 7, None)?;
+                let mut asm = BatchAssembler::new();
+                let sw = std::time::Instant::now();
+                for e in 0..epochs {
+                    let sels = sampler.schedule(e);
+                    let mut batch_pages = Vec::new();
+                    if let Some((ra, _)) = ra.as_mut() {
+                        batch_pages = sels
+                            .iter()
+                            .map(|sel| {
+                                let runs = p.selection_runs(sel);
+                                let pages = p.runs_pages(&runs);
+                                ra.publish(runs);
+                                pages
+                            })
+                            .collect();
+                    }
+                    for (j, sel) in sels.iter().enumerate() {
+                        if let Some((ra, seq)) = ra.as_mut() {
+                            ra.wait_ready(*seq);
+                            *seq += 1;
+                        }
+                        std::hint::black_box(asm.assemble(&paged, sel).unwrap().rows());
+                        if let Some((ra, _)) = ra.as_mut() {
+                            ra.mark_consumed(batch_pages[j]);
+                        }
+                    }
                 }
+                let wall_s = sw.elapsed().as_secs_f64();
+                drop(ra);
+                let io = paged.io_stats();
+                demand_faults_by_mode[mode] = io.demand_faults;
+                println!(
+                    "{:<8} {:<9} {:>10} {:>10} {:>8} {:>12} {:>8.2} {:>10.1}",
+                    format!("{budget_pct}%"),
+                    format!("{}{}", kind.label(), if with_readahead { "+ra" } else { "" }),
+                    io.page_faults,
+                    io.demand_faults,
+                    io.read_calls,
+                    io.bytes_read,
+                    io.read_amplification(),
+                    io.mb_per_s()
+                );
+                entries.push(format!(
+                    concat!(
+                        "    {{\n",
+                        "      \"sampling\": \"{}\",\n",
+                        "      \"readahead\": {},\n",
+                        "      \"budget_pct\": {},\n",
+                        "      \"budget_bytes\": {},\n",
+                        "      \"epochs\": {},\n",
+                        "      \"page_faults\": {},\n",
+                        "      \"demand_faults\": {},\n",
+                        "      \"readahead_hits\": {},\n",
+                        "      \"read_calls\": {},\n",
+                        "      \"bytes_read\": {},\n",
+                        "      \"read_amplification\": {:.4},\n",
+                        "      \"mb_per_s\": {:.2},\n",
+                        "      \"stall_s\": {:.6},\n",
+                        "      \"wall_s\": {:.6}\n",
+                        "    }}"
+                    ),
+                    kind.label(),
+                    with_readahead,
+                    budget_pct,
+                    budget,
+                    epochs,
+                    io.page_faults,
+                    io.demand_faults,
+                    io.readahead_hits,
+                    io.read_calls,
+                    io.bytes_read,
+                    io.read_amplification(),
+                    io.mb_per_s(),
+                    io.stall_s,
+                    wall_s,
+                ));
             }
-            let wall_s = sw.elapsed().as_secs_f64();
-            let io = paged.io_stats();
-            println!(
-                "{:<8} {:<6} {:>10} {:>8} {:>12} {:>8.2} {:>10.1}",
-                format!("{budget_pct}%"),
+            // the CI gate: readahead must absorb demand faults (for the
+            // contiguous kinds it drives them to ~0 at healthy budgets)
+            assert!(
+                demand_faults_by_mode[1] < demand_faults_by_mode[0],
+                "{} at {budget_pct}%: readahead demand faults {} !< demand-paged {}",
                 kind.label(),
-                io.page_faults,
-                io.read_calls,
-                io.bytes_read,
-                io.read_amplification(),
-                io.mb_per_s()
+                demand_faults_by_mode[1],
+                demand_faults_by_mode[0]
             );
-            entries.push(format!(
-                concat!(
-                    "    {{\n",
-                    "      \"sampling\": \"{}\",\n",
-                    "      \"budget_pct\": {},\n",
-                    "      \"budget_bytes\": {},\n",
-                    "      \"epochs\": {},\n",
-                    "      \"page_faults\": {},\n",
-                    "      \"read_calls\": {},\n",
-                    "      \"bytes_read\": {},\n",
-                    "      \"read_amplification\": {:.4},\n",
-                    "      \"mb_per_s\": {:.2},\n",
-                    "      \"wall_s\": {:.6}\n",
-                    "    }}"
-                ),
-                kind.label(),
-                budget_pct,
-                budget,
-                epochs,
-                io.page_faults,
-                io.read_calls,
-                io.bytes_read,
-                io.read_amplification(),
-                io.mb_per_s(),
-                wall_s,
-            ));
+            if budget_pct >= 50 && kind != SamplingKind::Rs {
+                assert_eq!(
+                    demand_faults_by_mode[1], 0,
+                    "{} at {budget_pct}%: contiguous access with readahead must not stall",
+                    kind.label()
+                );
+            }
         }
     }
     let json = format!(

@@ -90,11 +90,11 @@ fn main() {
     // --- batch assembly ------------------------------------------------------
     let mut asm = BatchAssembler::new();
     results.push(bench("assemble/borrow contiguous b=500 n=28", 5, 9, 2000, || {
-        std::hint::black_box(asm.assemble(&ds, &contiguous));
+        std::hint::black_box(asm.assemble(&ds, &contiguous).unwrap());
     }));
     println!("{}", results.last().unwrap().row());
     results.push(bench("assemble/gather scattered b=500 n=28", 5, 9, 500, || {
-        std::hint::black_box(asm.assemble(&ds, &scattered));
+        std::hint::black_box(asm.assemble(&ds, &scattered).unwrap());
     }));
     println!("{}", results.last().unwrap().row());
 
@@ -126,7 +126,7 @@ fn main() {
             }));
             println!("{}", results.last().unwrap().row());
             results.push(bench(&format!("pool/full gradient 120k t={threads}"), 1, 5, 2, || {
-                samplex::math::chunked::full_grad_into(&w, &full, 1e-4, &mut g, &mut scratch);
+                samplex::math::chunked::full_grad_into(&w, &full, 1e-4, &mut g, &mut scratch).unwrap();
                 std::hint::black_box(&g);
             }));
             println!("{}", results.last().unwrap().row());
@@ -169,7 +169,7 @@ fn main() {
         let sim = AccessSimulator::for_dataset(DeviceProfile::hdd(), &big, 0);
         let mut pf = samplex::pipeline::prefetch::Prefetcher::spawn(big.clone(), sim, 2);
         pf.start_epoch(sels);
-        while let Some(b) = pf.next_batch() {
+        while let Some(b) = pf.next_batch().unwrap() {
             std::hint::black_box(b.view(28).rows());
         }
         pf.finish();
@@ -185,7 +185,7 @@ fn main() {
                 .map(|j| RowSelection::Contiguous { start: j * 500, end: (j + 1) * 500 })
                 .collect();
             pf.start_epoch(sels);
-            while let Some(b) = pf.next_batch() {
+            while let Some(b) = pf.next_batch().unwrap() {
                 std::hint::black_box(b.view(28).rows());
             }
         }));
@@ -203,7 +203,7 @@ fn main() {
         let sim = AccessSimulator::for_dataset(DeviceProfile::hdd(), &big, 0);
         let mut pf = samplex::pipeline::prefetch::Prefetcher::spawn(big.clone(), sim, 2);
         pf.start_epoch(s.epoch(0));
-        while let Some(b) = pf.next_batch() {
+        while let Some(b) = pf.next_batch().unwrap() {
             std::hint::black_box(b.view(28).rows());
         }
         let es = pf.last_epoch_stats();
@@ -253,7 +253,7 @@ fn main() {
             results.push(bench(&label, 1, 5, 1, || {
                 e += 1;
                 pf.start_epoch(sampler.epoch(e));
-                while let Some(b) = pf.next_batch() {
+                while let Some(b) = pf.next_batch().unwrap() {
                     std::hint::black_box(b.view(100_000).rows());
                 }
                 let es = pf.last_epoch_stats();
@@ -296,7 +296,7 @@ fn main() {
             results.push(bench(&format!("paged/{} epoch 100 batches", kind.label()), 1, 5, 1, || {
                 e += 1;
                 for sel in sampler.epoch(e) {
-                    std::hint::black_box(asm.assemble(&paged, &sel).rows());
+                    std::hint::black_box(asm.assemble(&paged, &sel).unwrap().rows());
                 }
             }));
             println!("{}", results.last().unwrap().row());

@@ -55,7 +55,7 @@ impl ComputeBackend for NativeBackend {
     /// serial default (bit-identical for any pool size), but the chunk
     /// loss sums run on the persistent worker pool.
     fn full_objective(&mut self, w: &[f32], ds: &crate::data::Dataset, c: f32) -> Result<f64> {
-        Ok(crate::math::chunked::full_objective(w, ds, c))
+        crate::math::chunked::full_objective(w, ds, c)
     }
 }
 

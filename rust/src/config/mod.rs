@@ -103,6 +103,12 @@ pub struct StorageConfig {
     pub memory_budget_mib: u64,
     /// Page size of the paged store in KiB (must be ≥ 1).
     pub page_kib: u64,
+    /// Asynchronous readahead window in *pages* for paged datasets
+    /// (0 = readahead off, every page faults on demand). The
+    /// `--readahead-pages` CLI knob / `[storage] readahead` config key.
+    /// Trajectories are bit-identical at every setting — this only moves
+    /// disk time off the solver's critical path.
+    pub readahead_pages: u64,
 }
 
 impl Default for StorageConfig {
@@ -123,6 +129,7 @@ impl Default for StorageConfig {
             paged: false,
             memory_budget_mib: 0,
             page_kib: 64,
+            readahead_pages: 0,
         }
     }
 }
@@ -321,6 +328,9 @@ impl ExperimentConfig {
         if let Some(v) = doc.get_usize("storage", "page_kib")? {
             cfg.storage.page_kib = v as u64;
         }
+        if let Some(v) = doc.get_usize("storage", "readahead")? {
+            cfg.storage.readahead_pages = v as u64;
+        }
         cfg.validate()?;
         Ok(cfg)
     }
@@ -358,6 +368,7 @@ impl ExperimentConfig {
         s.push_str(&format!("paged = {}\n", self.storage.paged));
         s.push_str(&format!("memory_budget_mib = {}\n", self.storage.memory_budget_mib));
         s.push_str(&format!("page_kib = {}\n", self.storage.page_kib));
+        s.push_str(&format!("readahead = {}\n", self.storage.readahead_pages));
         s
     }
 
@@ -559,11 +570,13 @@ cache_mib = 16
         cfg.storage.paged = true;
         cfg.storage.memory_budget_mib = 8;
         cfg.storage.page_kib = 128;
+        cfg.storage.readahead_pages = 48;
         let s = cfg.to_toml_string();
         let back = ExperimentConfig::from_toml_str(&s).unwrap();
         assert!(back.storage.paged);
         assert_eq!(back.storage.memory_budget_mib, 8);
         assert_eq!(back.storage.page_kib, 128);
+        assert_eq!(back.storage.readahead_pages, 48);
         assert_eq!(back.storage.memory_budget_bytes(), 8 * 1024 * 1024);
         assert_eq!(back.storage.page_bytes(), 128 * 1024);
         // page size must be positive

@@ -274,10 +274,11 @@ impl OwnedBatch {
 /// This is the *copying* path: the prefetch reader uses it for scattered
 /// (RS) selections, and the property tests use it to force an owned copy of
 /// a contiguous selection so the zero-copy `Borrowed` payload can be checked
-/// bit-for-bit against a materialized gather.
-pub fn gather_owned(ds: &Dataset, sel: &RowSelection) -> OwnedBatch {
-    match ds {
-        Dataset::Paged(p) => p.gather_selection(sel),
+/// bit-for-bit against a materialized gather. In-core gathers cannot fail;
+/// a paged gather surfaces the store's typed I/O error.
+pub fn gather_owned(ds: &Dataset, sel: &RowSelection) -> crate::error::Result<OwnedBatch> {
+    Ok(match ds {
+        Dataset::Paged(p) => p.gather_selection(sel)?,
         Dataset::Dense(d) => {
             let cols = d.cols();
             let rows = sel.len();
@@ -315,7 +316,7 @@ pub fn gather_owned(ds: &Dataset, sel: &RowSelection) -> OwnedBatch {
             }
             OwnedBatch::Csr { values, col_idx, row_ptr, y }
         }
-    }
+    })
 }
 
 /// Reusable gather buffers: assembles a [`BatchView`] from a
@@ -346,19 +347,25 @@ impl BatchAssembler {
     /// Assemble `sel` from `ds`. Contiguous selections over the in-core
     /// layouts are zero-copy; paged datasets are gathered from the page
     /// store (the synchronous out-of-core path — the prefetch pipeline
-    /// additionally pins single-page batches zero-copy).
-    pub fn assemble<'a>(&'a mut self, ds: &'a Dataset, sel: &RowSelection) -> BatchView<'a> {
+    /// additionally pins single-page batches zero-copy). In-core assembly
+    /// cannot fail; a paged gather surfaces the store's typed I/O error
+    /// instead of panicking.
+    pub fn assemble<'a>(
+        &'a mut self,
+        ds: &'a Dataset,
+        sel: &RowSelection,
+    ) -> crate::error::Result<BatchView<'a>> {
         if let Dataset::Paged(p) = ds {
             self.gathered_rows += sel.len() as u64;
-            self.paged_scratch = Some(p.gather_selection(sel));
-            return self.paged_scratch.as_ref().expect("just set").view(p.cols());
+            self.paged_scratch = Some(p.gather_selection(sel)?);
+            return Ok(self.paged_scratch.as_ref().expect("just set").view(p.cols()));
         }
         if let RowSelection::Contiguous { start, end } = sel {
             self.borrowed_batches += 1;
-            return ds.slice_view(*start, *end);
+            return Ok(ds.slice_view(*start, *end));
         }
         self.gathered_rows += sel.len() as u64;
-        match ds {
+        Ok(match ds {
             Dataset::Paged(_) => unreachable!("handled above"),
             Dataset::Dense(d) => {
                 let cols = d.cols();
@@ -393,7 +400,7 @@ impl BatchAssembler {
                     cols: c.cols(),
                 })
             }
-        }
+        })
     }
 }
 
@@ -446,7 +453,7 @@ mod tests {
         let dense = d.as_dense().unwrap();
         let mut asm = BatchAssembler::new();
         let sel = RowSelection::Contiguous { start: 3, end: 6 };
-        let v = asm.assemble(&d, &sel);
+        let v = asm.assemble(&d, &sel).unwrap();
         assert_eq!(v.rows(), 3);
         let dv = v.as_dense().unwrap();
         assert_eq!(dv.x.as_ptr(), dense.row(3).as_ptr(), "must borrow, not copy");
@@ -461,7 +468,7 @@ mod tests {
         let c = d.as_csr().unwrap();
         let (vals, idx, ptr) = c.arrays();
         let mut asm = BatchAssembler::new();
-        let v = asm.assemble(&d, &RowSelection::Contiguous { start: 1, end: 5 });
+        let v = asm.assemble(&d, &RowSelection::Contiguous { start: 1, end: 5 }).unwrap();
         let sv = v.as_csr().unwrap();
         assert_eq!(sv.rows(), 4);
         assert_eq!(sv.values.as_ptr(), vals[2..].as_ptr(), "values must alias");
@@ -477,7 +484,7 @@ mod tests {
         let d = ds();
         let mut asm = BatchAssembler::new();
         let sel = RowSelection::Scattered(vec![9, 0, 4]);
-        let v = asm.assemble(&d, &sel);
+        let v = asm.assemble(&d, &sel).unwrap();
         assert_eq!(v.rows(), 3);
         let dv = v.as_dense().unwrap();
         assert_eq!(dv.x, &[18.0, 19.0, 0.0, 1.0, 8.0, 9.0]);
@@ -489,7 +496,7 @@ mod tests {
     fn scattered_csr_assembly_rebuilds_row_ptr() {
         let d = csr_ds();
         let mut asm = BatchAssembler::new();
-        let v = asm.assemble(&d, &RowSelection::Scattered(vec![4, 0, 3]));
+        let v = asm.assemble(&d, &RowSelection::Scattered(vec![4, 0, 3])).unwrap();
         let sv = v.as_csr().unwrap();
         assert_eq!(sv.values, &[5.0, 6.0, 1.0, 2.0]);
         assert_eq!(sv.col_idx, &[0, 1, 0, 2]);
@@ -502,13 +509,13 @@ mod tests {
     fn gather_owned_copies_contiguous_and_scattered_identically() {
         let d = ds();
         let dense = d.as_dense().unwrap();
-        let ob = gather_owned(&d, &RowSelection::Contiguous { start: 3, end: 6 });
+        let ob = gather_owned(&d, &RowSelection::Contiguous { start: 3, end: 6 }).unwrap();
         let OwnedBatch::Dense { x: cx, y: cy } = &ob else { panic!("dense gather") };
         let (want_x, want_y) = dense.rows_slice(3, 6);
         assert_eq!(cx, want_x);
         assert_eq!(cy, want_y);
         assert_ne!(cx.as_ptr(), dense.row(3).as_ptr(), "gather_owned must copy");
-        let ob = gather_owned(&d, &RowSelection::Scattered(vec![9, 0, 4]));
+        let ob = gather_owned(&d, &RowSelection::Scattered(vec![9, 0, 4])).unwrap();
         let OwnedBatch::Dense { x: sx, y: sy } = &ob else { panic!("dense gather") };
         assert_eq!(sx, &[18.0, 19.0, 0.0, 1.0, 8.0, 9.0]);
         assert_eq!(sy, &[-1.0, 1.0, 1.0]);
@@ -517,7 +524,7 @@ mod tests {
     #[test]
     fn gather_owned_csr_matches_borrowed_slice() {
         let d = csr_ds();
-        let ob = gather_owned(&d, &RowSelection::Contiguous { start: 1, end: 5 });
+        let ob = gather_owned(&d, &RowSelection::Contiguous { start: 1, end: 5 }).unwrap();
         let borrowed = d.slice_view(1, 5);
         let bv = borrowed.as_csr().unwrap();
         let ov = ob.view(4);
@@ -536,7 +543,7 @@ mod tests {
     fn with_replacement_duplicates_are_gathered() {
         let d = ds();
         let mut asm = BatchAssembler::new();
-        let v = asm.assemble(&d, &RowSelection::Scattered(vec![2, 2]));
+        let v = asm.assemble(&d, &RowSelection::Scattered(vec![2, 2])).unwrap();
         assert_eq!(v.as_dense().unwrap().x, &[4.0, 5.0, 4.0, 5.0]);
     }
 
@@ -545,14 +552,14 @@ mod tests {
         let d = ds();
         let mut asm = BatchAssembler::new();
         for _ in 0..5 {
-            let v = asm.assemble(&d, &RowSelection::Scattered(vec![1, 2, 3]));
+            let v = asm.assemble(&d, &RowSelection::Scattered(vec![1, 2, 3])).unwrap();
             assert_eq!(v.rows(), 3);
         }
         assert_eq!(asm.gathered_rows, 15);
         let c = csr_ds();
         let mut asm = BatchAssembler::new();
         for _ in 0..5 {
-            let v = asm.assemble(&c, &RowSelection::Scattered(vec![0, 4]));
+            let v = asm.assemble(&c, &RowSelection::Scattered(vec![0, 4])).unwrap();
             assert_eq!(v.as_csr().unwrap().nnz(), 4);
         }
         assert_eq!(asm.gathered_rows, 10);
@@ -567,15 +574,15 @@ mod tests {
         let paged: Dataset =
             crate::data::paged::PagedDataset::open(&p, 64, 16).unwrap().into();
         let mut asm = BatchAssembler::new();
-        let v = asm.assemble(&paged, &RowSelection::Contiguous { start: 3, end: 6 });
+        let v = asm.assemble(&paged, &RowSelection::Contiguous { start: 3, end: 6 }).unwrap();
         assert_eq!(v.as_dense().unwrap().x, dense.rows_slice(3, 6).0);
         assert_eq!(v.as_dense().unwrap().y, dense.rows_slice(3, 6).1);
-        let v = asm.assemble(&paged, &RowSelection::Scattered(vec![9, 0, 4]));
+        let v = asm.assemble(&paged, &RowSelection::Scattered(vec![9, 0, 4])).unwrap();
         assert_eq!(v.as_dense().unwrap().x, &[18.0, 19.0, 0.0, 1.0, 8.0, 9.0]);
         assert_eq!(asm.gathered_rows, 6, "paged batches are counted as gathers");
         assert_eq!(asm.borrowed_batches, 0);
         // gather_owned routes through the same page store
-        let ob = gather_owned(&paged, &RowSelection::Contiguous { start: 0, end: 10 });
+        let ob = gather_owned(&paged, &RowSelection::Contiguous { start: 0, end: 10 }).unwrap();
         let OwnedBatch::Dense { x, .. } = &ob else { panic!("dense gather") };
         assert_eq!(x.as_slice(), dense.x());
         std::fs::remove_file(p).ok();

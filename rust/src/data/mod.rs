@@ -203,10 +203,11 @@ impl Dataset {
     /// Upper bound on the per-sample gradient Lipschitz constant
     /// (`max_i ||x_i||^2 / 4 + C`) — O(stored entries); one sequential
     /// chunked file sweep for paged stores, bit-identical across layouts.
-    pub fn lipschitz(&self, c: f32) -> f64 {
+    /// Errors (typed) only on a paged store whose file turns unreadable.
+    pub fn lipschitz(&self, c: f32) -> crate::error::Result<f64> {
         match self {
-            Dataset::Dense(d) => d.lipschitz(c),
-            Dataset::Csr(s) => s.lipschitz(c),
+            Dataset::Dense(d) => Ok(d.lipschitz(c)),
+            Dataset::Csr(s) => Ok(s.lipschitz(c)),
             Dataset::Paged(p) => p.lipschitz(c),
         }
     }
@@ -294,7 +295,7 @@ mod tests {
         assert_eq!((c.rows(), c.cols(), c.nnz()), (3, 100, 3));
         assert!(c.is_csr());
         assert_eq!(c.name(), "c");
-        assert!(c.lipschitz(0.0) > 0.0);
+        assert!(c.lipschitz(0.0).unwrap() > 0.0);
     }
 
     #[test]
@@ -328,7 +329,7 @@ mod tests {
         assert_eq!(pd.file_bytes(), d.file_bytes());
         assert_eq!(pd.payload_bytes(&RowSelection::Contiguous { start: 0, end: 2 }), 24);
         assert_eq!(pd.io_stats().bytes_read, 0, "metadata alone reads no payload");
-        assert_eq!(pd.lipschitz(0.5).to_bits(), d.lipschitz(0.5).to_bits());
+        assert_eq!(pd.lipschitz(0.5).unwrap().to_bits(), d.lipschitz(0.5).unwrap().to_bits());
         assert!(pd.io_stats().bytes_read > 0, "the lipschitz sweep reads the file");
         assert!(pd.shuffle_rows(1).is_err(), "paged shuffle must be rejected");
         assert!(pd.save(&p).is_err(), "paged save must be rejected");

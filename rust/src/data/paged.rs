@@ -20,26 +20,29 @@
 //!   [`DenseDataset`](crate::data::dense::DenseDataset) /
 //!   [`CsrDataset`](crate::data::csr::CsrDataset) runs.
 //!
-//! Concurrency: the store sits behind a `Mutex` shared by every clone of
-//! the dataset (the prefetch reader thread, the driver, pool workers), so
-//! I/O stats accumulate in one place and pages warmed by the reader are
-//! hits for everyone.
+//! Concurrency: the store is a shard-locked shared handle
+//! ([`PageStore`] is `Clone`; see its module docs), so every clone of the
+//! dataset — the prefetch reader thread, the [`Readahead`] thread, the
+//! driver, pool workers — accesses the one resident pool directly, with no
+//! outer mutex to convoy on; I/O stats accumulate in one atomic block and
+//! pages warmed by any thread are hits for everyone.
 //!
-//! Error policy: `open` and the store return typed [`Error`]s; the batch
-//! assembly methods sit behind infallible seams (`BatchAssembler`,
-//! `gather_owned`, the chunked sweeps) and panic with a clear message if
-//! the file turns unreadable mid-training — an environmental failure, not
-//! a recoverable state.
+//! Error policy: **no production path panics on an I/O error.** `open`,
+//! the store and every gather/pin method return typed [`Error`]s
+//! (including [`Error::Corrupt`] for bad bytes), threaded through batch
+//! assembly (`BatchAssembler`, `gather_owned`, the chunked sweeps, the
+//! prefetcher) so a disk that turns unreadable mid-training fails the run
+//! with a real error instead of aborting the process.
 
 use std::fs::File;
 use std::io::{Read, Seek, SeekFrom};
 use std::path::Path;
-use std::sync::{Arc, Mutex, MutexGuard};
+use std::sync::Arc;
 
 use crate::data::batch::{BatchView, CsrView, OwnedBatch, RowSelection};
 use crate::data::csr::NNZ_BYTES;
 use crate::error::{Error, Result};
-use crate::storage::pagestore::{IoStats, Page, PageLayout, PageStore};
+use crate::storage::pagestore::{ElemRuns, IoStats, Page, PageLayout, PageStore, Readahead};
 
 /// Assembled out-of-core batch data: pinned zero-copy page or owned gather.
 #[derive(Debug, Clone)]
@@ -79,7 +82,7 @@ pub struct PagedDataset {
     file_bytes: u64,
     page_bytes: u64,
     budget_bytes: u64,
-    store: Arc<Mutex<PageStore>>,
+    store: PageStore,
 }
 
 impl PagedDataset {
@@ -172,7 +175,7 @@ impl PagedDataset {
             file_bytes,
             page_bytes,
             budget_bytes: effective_budget(budget_bytes, n_elems, PageLayout::DenseF32, page_bytes),
-            store: Arc::new(Mutex::new(store)),
+            store,
         })
     }
 
@@ -242,7 +245,7 @@ impl PagedDataset {
             ));
         }
         let x_base = ptr_base + 8 * (rows64 + 1);
-        let mut store = new_store(
+        let store = new_store(
             path,
             PageLayout::IdxValPairs,
             x_base,
@@ -268,7 +271,7 @@ impl PagedDataset {
                 PageLayout::IdxValPairs,
                 page_bytes,
             ),
-            store: Arc::new(Mutex::new(store)),
+            store,
         })
     }
 
@@ -332,23 +335,65 @@ impl PagedDataset {
 
     /// Pages covering the feature region.
     pub fn n_pages(&self) -> u64 {
-        self.lock().n_pages()
+        self.store.n_pages()
     }
 
     /// Snapshot of the store's lifetime I/O statistics (shared by every
     /// clone of this dataset).
     pub fn io_stats(&self) -> IoStats {
-        self.lock().stats
+        self.store.stats()
     }
 
     /// Drop every resident page (cold-start between experiment arms;
     /// counters are preserved).
     pub fn drop_pool(&self) {
-        self.lock().drop_pool();
+        self.store.drop_pool();
     }
 
-    fn lock(&self) -> MutexGuard<'_, PageStore> {
-        self.store.lock().expect("page store poisoned")
+    /// The underlying shard-locked page store (a cheap shared handle).
+    pub fn store(&self) -> &PageStore {
+        &self.store
+    }
+
+    /// Spawn an asynchronous [`Readahead`] thread over this dataset's
+    /// store, allowed to run `window_pages` pages ahead of consumption.
+    /// The window is clamped to at most half the pool's page capacity so
+    /// prefetched pages are never evicted by further readahead before
+    /// their batch is assembled.
+    pub fn spawn_readahead(&self, window_pages: u64) -> Readahead {
+        let capacity_pages = (self.store.budget_bytes() / self.store.page_bytes()).max(2);
+        Readahead::spawn(self.store.clone(), window_pages.clamp(1, capacity_pages / 2))
+    }
+
+    /// The element runs (page-addressable extents) a selection will touch,
+    /// in access order — what gets published to the readahead thread. A
+    /// contiguous selection is one run; a scattered selection is one run
+    /// per (non-empty) row.
+    pub fn selection_runs(&self, sel: &RowSelection) -> ElemRuns {
+        match sel {
+            RowSelection::Contiguous { start, end } => {
+                let (lo, hi) = self.elem_range(*start, *end);
+                if hi > lo {
+                    vec![(lo, hi)]
+                } else {
+                    Vec::new()
+                }
+            }
+            RowSelection::Scattered(rows) => rows
+                .iter()
+                .filter_map(|&r| {
+                    let (lo, hi) = self.elem_range(r as usize, r as usize + 1);
+                    (hi > lo).then_some((lo, hi))
+                })
+                .collect(),
+        }
+    }
+
+    /// Pages spanned by an already-derived run set (the readahead window
+    /// currency) — lets publishers derive the runs once and account them
+    /// without a second per-row pass.
+    pub fn runs_pages(&self, runs: &ElemRuns) -> u64 {
+        runs.iter().map(|&(lo, hi)| self.store.pages_spanned(lo, hi)).sum()
     }
 
     /// Feature (+ index) bytes `sel` spans — mirrors
@@ -376,70 +421,62 @@ impl PagedDataset {
 
     /// Assemble contiguous rows `[start, end)`: pinned zero-copy when the
     /// range lies inside one page, otherwise gathered across pages with
-    /// sequential run reads.
-    pub fn assemble_contiguous(&self, start: usize, end: usize) -> PagedBatchData {
+    /// sequential run reads. A failed read surfaces the store's typed
+    /// error (this path never panics on I/O).
+    pub fn assemble_contiguous(&self, start: usize, end: usize) -> Result<PagedBatchData> {
         assert!(start < end && end <= self.rows, "bad range [{start},{end})");
         let (lo, hi) = self.elem_range(start, end);
-        let pinned = self
-            .lock()
-            .pin_range(lo, hi)
-            .unwrap_or_else(|e| panic!("paged dataset '{}': {e}", self.name));
-        match pinned {
-            Some((page, elem_lo)) => PagedBatchData::PinnedPage { page, elem_lo },
-            None => PagedBatchData::Gathered(self.gather_range(start, end)),
+        match self.store.pin_range(lo, hi)? {
+            Some((page, elem_lo)) => Ok(PagedBatchData::PinnedPage { page, elem_lo }),
+            None => Ok(PagedBatchData::Gathered(self.gather_range(start, end)?)),
         }
     }
 
     /// Gather contiguous rows `[start, end)` into an owned batch (always
     /// copies — the forced-owned path used by the chunked sweeps and the
     /// equivalence tests).
-    pub fn gather_range(&self, start: usize, end: usize) -> OwnedBatch {
+    pub fn gather_range(&self, start: usize, end: usize) -> Result<OwnedBatch> {
         assert!(start < end && end <= self.rows, "bad range [{start},{end})");
         let (lo, hi) = self.elem_range(start, end);
         match &self.row_ptr {
             None => {
                 let mut x = Vec::with_capacity((hi - lo) as usize);
-                self.lock()
-                    .with_range(lo, hi, |pg, a, b| x.extend_from_slice(&pg.dense()[a..b]))
-                    .unwrap_or_else(|e| panic!("paged dataset '{}': {e}", self.name));
-                OwnedBatch::Dense { x, y: self.y[start..end].to_vec() }
+                self.store
+                    .with_range(lo, hi, |pg, a, b| x.extend_from_slice(&pg.dense()[a..b]))?;
+                Ok(OwnedBatch::Dense { x, y: self.y[start..end].to_vec() })
             }
             Some(p) => {
                 let mut values = Vec::with_capacity((hi - lo) as usize);
                 let mut col_idx = Vec::with_capacity((hi - lo) as usize);
-                self.lock()
-                    .with_range(lo, hi, |pg, a, b| {
-                        let (v, i) = pg.pairs();
-                        values.extend_from_slice(&v[a..b]);
-                        col_idx.extend_from_slice(&i[a..b]);
-                    })
-                    .unwrap_or_else(|e| panic!("paged dataset '{}': {e}", self.name));
+                self.store.with_range(lo, hi, |pg, a, b| {
+                    let (v, i) = pg.pairs();
+                    values.extend_from_slice(&v[a..b]);
+                    col_idx.extend_from_slice(&i[a..b]);
+                })?;
                 let base = p[start];
                 let row_ptr: Vec<u64> = p[start..=end].iter().map(|q| q - base).collect();
-                OwnedBatch::Csr { values, col_idx, row_ptr, y: self.y[start..end].to_vec() }
+                Ok(OwnedBatch::Csr { values, col_idx, row_ptr, y: self.y[start..end].to_vec() })
             }
         }
     }
 
     /// Gather an explicit row list (RS): each row's pages are faulted
     /// individually — the dispersed-access penalty, on real files.
-    pub fn gather_rows(&self, rows: &[u32]) -> OwnedBatch {
+    pub fn gather_rows(&self, rows: &[u32]) -> Result<OwnedBatch> {
         match &self.row_ptr {
             None => {
                 let mut x = Vec::with_capacity(rows.len() * self.cols);
                 let mut y = Vec::with_capacity(rows.len());
-                let mut st = self.lock();
                 for &r in rows {
                     let r = r as usize;
                     assert!(r < self.rows, "row {r} out of bounds");
                     let lo = (r * self.cols) as u64;
-                    st.with_range(lo, lo + self.cols as u64, |pg, a, b| {
+                    self.store.with_range(lo, lo + self.cols as u64, |pg, a, b| {
                         x.extend_from_slice(&pg.dense()[a..b]);
-                    })
-                    .unwrap_or_else(|e| panic!("paged dataset '{}': {e}", self.name));
+                    })?;
                     y.push(self.y[r]);
                 }
-                OwnedBatch::Dense { x, y }
+                Ok(OwnedBatch::Dense { x, y })
             }
             Some(p) => {
                 let mut values = Vec::new();
@@ -447,26 +484,24 @@ impl PagedDataset {
                 let mut row_ptr = Vec::with_capacity(rows.len() + 1);
                 let mut y = Vec::with_capacity(rows.len());
                 row_ptr.push(0u64);
-                let mut st = self.lock();
                 for &r in rows {
                     let r = r as usize;
                     assert!(r < self.rows, "row {r} out of bounds");
-                    st.with_range(p[r], p[r + 1], |pg, a, b| {
+                    self.store.with_range(p[r], p[r + 1], |pg, a, b| {
                         let (v, i) = pg.pairs();
                         values.extend_from_slice(&v[a..b]);
                         col_idx.extend_from_slice(&i[a..b]);
-                    })
-                    .unwrap_or_else(|e| panic!("paged dataset '{}': {e}", self.name));
+                    })?;
                     row_ptr.push(values.len() as u64);
                     y.push(self.y[r]);
                 }
-                OwnedBatch::Csr { values, col_idx, row_ptr, y }
+                Ok(OwnedBatch::Csr { values, col_idx, row_ptr, y })
             }
         }
     }
 
     /// Gather any selection into an owned batch.
-    pub fn gather_selection(&self, sel: &RowSelection) -> OwnedBatch {
+    pub fn gather_selection(&self, sel: &RowSelection) -> Result<OwnedBatch> {
         match sel {
             RowSelection::Contiguous { start, end } => self.gather_range(*start, *end),
             RowSelection::Scattered(rows) => self.gather_rows(rows),
@@ -508,14 +543,15 @@ impl PagedDataset {
 
     /// Upper bound on the per-sample gradient Lipschitz constant
     /// (`max_i ||x_i||^2 / 4 + C`) — one sequential chunked sweep over the
-    /// file, bit-identical to the in-core computation.
-    pub fn lipschitz(&self, c: f32) -> f64 {
+    /// file, bit-identical to the in-core computation. Errors typed on a
+    /// failed read.
+    pub fn lipschitz(&self, c: f32) -> Result<f64> {
         let mut max_sq = 0f64;
         let chunk = 4096.min(self.rows);
         let mut start = 0;
         while start < self.rows {
             let end = (start + chunk).min(self.rows);
-            let ob = self.gather_range(start, end);
+            let ob = self.gather_range(start, end)?;
             match &ob {
                 OwnedBatch::Dense { x, .. } => {
                     for r in 0..end - start {
@@ -538,7 +574,7 @@ impl PagedDataset {
             }
             start = end;
         }
-        max_sq / 4.0 + c as f64
+        Ok(max_sq / 4.0 + c as f64)
     }
 }
 
@@ -646,7 +682,7 @@ mod tests {
         // page = 16 elements -> ranges straddle pages freely
         let pd = PagedDataset::open(&p, 3 * 64, 64).unwrap();
         for (s, e) in [(0, 50), (7, 13), (49, 50), (0, 1), (10, 40)] {
-            let ob = pd.gather_range(s, e);
+            let ob = pd.gather_range(s, e).unwrap();
             let OwnedBatch::Dense { x, y } = &ob else { panic!("dense") };
             let (wx, wy) = d.rows_slice(s, e);
             assert_eq!(x, wx, "[{s},{e})");
@@ -661,16 +697,18 @@ mod tests {
         let p = tmp("sxb");
         d.save(&p).unwrap();
         // one row = 16 B; page = 16 B -> one page per row; budget 2 pages
+        // = 2 shards of 1 page (page id mod 2 picks the shard)
         let pd = PagedDataset::open(&p, 32, 16).unwrap();
-        let rows = [60u32, 1, 33, 1];
-        let ob = pd.gather_rows(&rows);
+        let rows = [60u32, 1, 32, 1];
+        let ob = pd.gather_rows(&rows).unwrap();
         let OwnedBatch::Dense { x, y } = &ob else { panic!("dense") };
         for (k, &r) in rows.iter().enumerate() {
             assert_eq!(&x[k * 4..(k + 1) * 4], d.row(r as usize), "row {r}");
             assert_eq!(y[k], d.y()[r as usize]);
         }
-        // pages touched: 60 (fault), 1 (fault), 33 (fault, evicts 60),
-        // 1 again (hit — still resident in the 2-page pool)
+        // pages touched: 60 (fault, shard 0), 1 (fault, shard 1),
+        // 32 (fault, evicts 60 from shard 0), 1 again (hit — still
+        // resident in shard 1)
         let io = pd.io_stats();
         assert_eq!(io.read_calls, 3, "scattered rows fault page by page");
         assert_eq!(io.page_faults, 3);
@@ -686,7 +724,7 @@ mod tests {
         let p = tmp("sxb");
         d.save(&p).unwrap();
         let pd = PagedDataset::open(&p, 0, 64).unwrap();
-        let data = pd.assemble_contiguous(4, 8);
+        let data = pd.assemble_contiguous(4, 8).unwrap();
         assert!(data.is_pinned(), "in-page batch must pin");
         let view = pd.view_of(&data, 4, 8);
         let dv = view.as_dense().unwrap();
@@ -697,7 +735,7 @@ mod tests {
             assert_eq!(dv.x.as_ptr(), page.dense()[*elem_lo..].as_ptr(), "must alias the page");
         }
         // a page-straddling batch falls back to a gather
-        let data = pd.assemble_contiguous(2, 6);
+        let data = pd.assemble_contiguous(2, 6).unwrap();
         assert!(!data.is_pinned());
         let view = pd.view_of(&data, 2, 6);
         assert_eq!(view.as_dense().unwrap().x, d.rows_slice(2, 6).0);
@@ -714,7 +752,7 @@ mod tests {
         assert_eq!(pd.nnz(), 7);
         assert_eq!(pd.row_ptr().unwrap(), c.arrays().2);
         // contiguous range incl. the empty row
-        let ob = pd.gather_range(1, 5);
+        let ob = pd.gather_range(1, 5).unwrap();
         let view = ob.view(10);
         let got = view.as_csr().unwrap();
         let want = c.slice(1, 5);
@@ -723,7 +761,7 @@ mod tests {
             assert_eq!(got.row(r), want.row(r), "row {r}");
         }
         // scattered incl. the empty row
-        let ob = pd.gather_rows(&[5, 3, 0]);
+        let ob = pd.gather_rows(&[5, 3, 0]).unwrap();
         let view = ob.view(10);
         let got = view.as_csr().unwrap();
         assert_eq!(got.row(0), c.row(5));
@@ -739,7 +777,7 @@ mod tests {
         c.save(&p).unwrap();
         // whole payload (7 nnz = 56 B) fits one 64 B page
         let pd = PagedDataset::open(&p, 0, 64).unwrap();
-        let data = pd.assemble_contiguous(0, 6);
+        let data = pd.assemble_contiguous(0, 6).unwrap();
         assert!(data.is_pinned());
         let view = pd.view_of(&data, 0, 6);
         let got = view.as_csr().unwrap();
@@ -757,12 +795,12 @@ mod tests {
         let p = tmp("sxb");
         d.save(&p).unwrap();
         let pd = PagedDataset::open(&p, 256, 64).unwrap();
-        assert_eq!(pd.lipschitz(0.3).to_bits(), d.lipschitz(0.3).to_bits());
+        assert_eq!(pd.lipschitz(0.3).unwrap().to_bits(), d.lipschitz(0.3).to_bits());
         let c = csr_ds();
         let ps = tmp("sxc");
         c.save(&ps).unwrap();
         let pc = PagedDataset::open(&ps, 16, 16).unwrap();
-        assert_eq!(pc.lipschitz(0.3).to_bits(), c.lipschitz(0.3).to_bits());
+        assert_eq!(pc.lipschitz(0.3).unwrap().to_bits(), c.lipschitz(0.3).to_bits());
         std::fs::remove_file(p).ok();
         std::fs::remove_file(ps).ok();
     }
@@ -807,11 +845,11 @@ mod tests {
     }
 
     #[test]
-    #[should_panic(expected = "col_idx")]
     fn corrupt_csr_payload_index_fails_typed_not_oob() {
         // flip one payload pair's col_idx past cols (file length and
         // row_ptr untouched): the gather must surface the store's typed
-        // Corrupt message, never reach a kernel with a wild index
+        // Corrupt error, never reach a kernel with a wild index — and
+        // never abort the process
         let c = csr_ds();
         let p = tmp("sxc");
         c.save(&p).unwrap();
@@ -820,7 +858,12 @@ mod tests {
         bytes[x_base..x_base + 4].copy_from_slice(&1000u32.to_le_bytes()); // cols = 10
         std::fs::write(&p, &bytes).unwrap();
         let pd = PagedDataset::open(&p, 0, 16).unwrap();
-        let _ = pd.gather_range(0, 2); // panics with the Corrupt message
+        match pd.gather_range(0, 2) {
+            Err(Error::Corrupt { msg, .. }) => assert!(msg.contains("col_idx"), "{msg}"),
+            other => panic!("expected Corrupt, got {other:?}"),
+        }
+        // the typed error also flows through the generic selection path
+        assert!(pd.gather_selection(&RowSelection::Scattered(vec![0])).is_err());
         std::fs::remove_file(p).ok();
     }
 
@@ -831,7 +874,7 @@ mod tests {
         d.save(&p).unwrap();
         let pd = PagedDataset::open(&p, 0, 64).unwrap();
         let pd2 = pd.clone();
-        pd.gather_range(0, 32);
+        pd.gather_range(0, 32).unwrap();
         assert!(pd2.io_stats().bytes_read > 0, "clone must see the shared stats");
         std::fs::remove_file(p).ok();
     }

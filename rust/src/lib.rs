@@ -71,6 +71,15 @@
 //! to the in-core stores while datasets larger than RAM train under a
 //! `--memory-budget` as small as one page.
 //!
+//! The resident pool is **shard-locked** (per-shard locks + one atomic
+//! stats block — no global store mutex), and because every sampling
+//! schedule is a pure function of `(seed, epoch)` the
+//! [`storage::pagestore::Readahead`] thread can prefault the *exact*
+//! upcoming pages within a `--readahead-pages` window, overlapping disk
+//! time with solver compute: demand faults (and the consumer-visible
+//! `stall_s`) drop to zero for contiguous access at healthy budgets while
+//! trajectories stay bit-identical with readahead on or off.
+//!
 //! ## Reproducibility and the compute plane
 //!
 //! Pooled reductions follow one rule — chunk geometry fixed by the data,

@@ -9,9 +9,13 @@
 //!                 [--pool-threads N]  (0 = auto; sweeps are bit-identical
 //!                                      at every setting)
 //!                 [--paged] [--memory-budget MiB] [--page-kib KiB]
+//!                 [--readahead-pages N]
 //!                     (out-of-core: features served from the on-disk file
 //!                      through a byte-budgeted page store; trajectories
-//!                      are bit-identical to the in-core run)
+//!                      are bit-identical to the in-core run. With
+//!                      --readahead-pages N a dedicated thread prefaults
+//!                      the next N pages of the deterministic schedule so
+//!                      demand faults — and access stalls — go to ~zero)
 //! samplex table   [--dataset D | --all] [--epochs N] [--backend B]
 //!                 [--storage P] [--data-dir data] [--summary] [--csv out.csv]
 //! samplex figure  [--datasets a,b] [--epochs N] [--solver S] [--rate-fit]
@@ -98,11 +102,20 @@ impl Flags {
 const USAGE: &str = "samplex <generate-data|train|table|figure|sweep|estimate-optimum|info> [flags]
   (see `samplex help` or README.md for flag reference)";
 
+/// Error text printed to stderr on failure. Usage is appended **only** for
+/// configuration errors (bad flags/values): an I/O or corruption failure
+/// must not bury its real message under help text.
+fn render_failure(e: &Error) -> String {
+    match e {
+        Error::Config(_) => format!("error: {e}\n{USAGE}"),
+        _ => format!("error: {e}"),
+    }
+}
+
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
     if let Err(e) = run(&args) {
-        eprintln!("error: {e}");
-        eprintln!("{USAGE}");
+        eprintln!("{}", render_failure(&e));
         std::process::exit(1);
     }
 }
@@ -197,6 +210,8 @@ fn cmd_train(args: &[String]) -> Result<()> {
     cfg.storage.memory_budget_mib =
         f.get_u64("memory-budget", cfg.storage.memory_budget_mib)?;
     cfg.storage.page_kib = f.get_u64("page-kib", cfg.storage.page_kib)?;
+    cfg.storage.readahead_pages =
+        f.get_u64("readahead-pages", cfg.storage.readahead_pages)?;
     cfg.pool_threads = f.get_usize("pool-threads", cfg.pool_threads)?;
     cfg.name = format!(
         "{}-{}-{}",
@@ -239,6 +254,14 @@ fn cmd_train(args: &[String]) -> Result<()> {
             io.read_amplification(),
             io.mb_per_s(),
             io.read_s
+        );
+        println!(
+            "  overlap: {} demand faults / {} readahead hits, \
+             demand stall {:.4}s (window {} pages)",
+            io.demand_faults,
+            io.readahead_hits,
+            io.stall_s,
+            cfg.storage.readahead_pages
         );
     }
     if let Some(p) = f.get("trace-csv") {
@@ -506,6 +529,26 @@ mod tests {
         assert!(run(&s(&["frobnicate"])).is_err());
         assert!(run(&[]).is_err());
         run(&s(&["help"])).unwrap();
+    }
+
+    #[test]
+    fn usage_is_printed_only_for_config_errors() {
+        // a bad flag is a config error: help the user with the usage block
+        let cfg_err = run(&s(&["frobnicate"])).unwrap_err();
+        assert!(matches!(cfg_err, Error::Config(_)));
+        assert!(render_failure(&cfg_err).contains(USAGE));
+        // an I/O or corruption failure must surface its real message
+        // without burying it under help text
+        let corrupt = Error::Corrupt {
+            path: "data/x.sxb".into(),
+            offset: 24,
+            msg: "truncated label block".into(),
+        };
+        let rendered = render_failure(&corrupt);
+        assert!(rendered.contains("truncated label block"));
+        assert!(!rendered.contains(USAGE), "no usage spam on I/O errors");
+        let io: Error = std::io::Error::new(std::io::ErrorKind::NotFound, "gone").into();
+        assert!(!render_failure(&io).contains(USAGE));
     }
 
     #[test]

@@ -29,6 +29,7 @@
 
 use crate::data::batch::{BatchView, OwnedBatch};
 use crate::data::Dataset;
+use crate::error::Result;
 use crate::math::dense::axpy;
 use crate::runtime::pool;
 
@@ -63,10 +64,11 @@ impl GradScratch {
 
 /// Full-dataset objective of eq.(2) — pooled, deterministic, zero-copy
 /// chunk views for either layout. Bit-identical to the serial chunked
-/// sweep for every pool size.
-pub fn full_objective(w: &[f32], ds: &Dataset, c: f32) -> f64 {
-    full_loss_sum(w, ds) / ds.rows() as f64
-        + 0.5 * c as f64 * crate::math::dense::nrm2_sq(w)
+/// sweep for every pool size. Errors (typed) only when a paged store's
+/// file turns unreadable mid-sweep.
+pub fn full_objective(w: &[f32], ds: &Dataset, c: f32) -> Result<f64> {
+    Ok(full_loss_sum(w, ds)? / ds.rows() as f64
+        + 0.5 * c as f64 * crate::math::dense::nrm2_sq(w))
 }
 
 /// Raw logistic loss sum over the whole dataset (f64), chunked at
@@ -79,10 +81,10 @@ pub fn full_objective(w: &[f32], ds: &Dataset, c: f32) -> f64 {
 /// the same slot positions. The partial values and the final serial
 /// in-order sum are unchanged, so the result stays **bit-identical** to
 /// the in-core sweep.
-pub fn full_loss_sum(w: &[f32], ds: &Dataset) -> f64 {
+pub fn full_loss_sum(w: &[f32], ds: &Dataset) -> Result<f64> {
     let rows = ds.rows();
     if rows == 0 {
-        return 0.0;
+        return Ok(0.0);
     }
     let chunk = SWEEP_CHUNK_ROWS.min(rows);
     let nchunks = rows.div_ceil(chunk);
@@ -99,7 +101,7 @@ pub fn full_loss_sum(w: &[f32], ds: &Dataset) -> f64 {
                         let end = (start + chunk).min(rows);
                         p.gather_range(start, end)
                     })
-                    .collect();
+                    .collect::<Result<_>>()?;
                 let views: Vec<BatchView<'_>> = owned.iter().map(|ob| ob.view(p.cols())).collect();
                 pool::global().map_slots(&mut partials[base..base + k], |i, slot| {
                     *slot = crate::math::loss_sum_view(w, &views[i]);
@@ -115,18 +117,25 @@ pub fn full_loss_sum(w: &[f32], ds: &Dataset) -> f64 {
             });
         }
     }
-    partials.iter().sum()
+    Ok(partials.iter().sum())
 }
 
 /// Full-dataset gradient of eq.(2) into `out` (data term chunk-folded,
 /// l2 term added once), with the default sweep chunking.
-pub fn full_grad_into(w: &[f32], ds: &Dataset, c: f32, out: &mut [f32], scratch: &mut GradScratch) {
-    full_grad_into_chunked(w, ds, c, SWEEP_CHUNK_ROWS, out, scratch);
+pub fn full_grad_into(
+    w: &[f32],
+    ds: &Dataset,
+    c: f32,
+    out: &mut [f32],
+    scratch: &mut GradScratch,
+) -> Result<()> {
+    full_grad_into_chunked(w, ds, c, SWEEP_CHUNK_ROWS, out, scratch)
 }
 
 /// [`full_grad_into`] with an explicit chunk size (the SVRG sweep chunks
 /// at the experiment's batch size so access charging and compute agree on
-/// geometry). Chunk size must not depend on the thread count.
+/// geometry). Chunk size must not depend on the thread count. Errors
+/// (typed) only when a paged store's file turns unreadable mid-sweep.
 pub fn full_grad_into_chunked(
     w: &[f32],
     ds: &Dataset,
@@ -134,7 +143,7 @@ pub fn full_grad_into_chunked(
     chunk_rows: usize,
     out: &mut [f32],
     scratch: &mut GradScratch,
-) {
+) -> Result<()> {
     let rows = ds.rows();
     out.fill(0.0);
     if rows > 0 {
@@ -154,7 +163,7 @@ pub fn full_grad_into_chunked(
                         let end = (start + chunk).min(rows);
                         p.gather_range(start, end)
                     })
-                    .collect(),
+                    .collect::<Result<_>>()?,
                 _ => Vec::new(),
             };
             let views: Vec<BatchView<'_>> = if ds.is_paged() {
@@ -174,6 +183,7 @@ pub fn full_grad_into_chunked(
     }
     // the regularizer is added once, outside the chunk fold
     axpy(c, w, out);
+    Ok(())
 }
 
 /// One wave of the gradient fold: compute the pure data-term gradients of
@@ -243,7 +253,7 @@ mod tests {
             let want = serial_grad(&w, &ds, 0.3, chunk);
             let mut got = vec![0f32; 9];
             let mut scratch = GradScratch::default();
-            full_grad_into_chunked(&w, &ds, 0.3, chunk, &mut got, &mut scratch);
+            full_grad_into_chunked(&w, &ds, 0.3, chunk, &mut got, &mut scratch).unwrap();
             assert_eq!(got, want, "chunk={chunk}");
         }
     }
@@ -263,7 +273,7 @@ mod tests {
             start = end;
         }
         let want = want / rows as f64 + 0.5 * c as f64 * crate::math::nrm2_sq(&w);
-        let got = full_objective(&w, &ds, c);
+        let got = full_objective(&w, &ds, c).unwrap();
         assert_eq!(got.to_bits(), want.to_bits());
     }
 
@@ -277,18 +287,18 @@ mod tests {
         let file = ds.file_bytes();
         let paged: Dataset =
             crate::data::paged::PagedDataset::open(&p, file / 5, 4096).unwrap().into();
-        let a = full_objective(&w, &ds, 0.05);
-        let b = full_objective(&w, &paged, 0.05);
+        let a = full_objective(&w, &ds, 0.05).unwrap();
+        let b = full_objective(&w, &paged, 0.05).unwrap();
         assert_eq!(a.to_bits(), b.to_bits(), "objective must be bit-identical");
         let mut ga = vec![0f32; 6];
         let mut gb = vec![0f32; 6];
         let mut scratch = GradScratch::default();
-        full_grad_into(&w, &ds, 0.05, &mut ga, &mut scratch);
-        full_grad_into(&w, &paged, 0.05, &mut gb, &mut scratch);
+        full_grad_into(&w, &ds, 0.05, &mut ga, &mut scratch).unwrap();
+        full_grad_into(&w, &paged, 0.05, &mut gb, &mut scratch).unwrap();
         assert_eq!(ga, gb, "gradient must be bit-identical");
         // and with a ragged explicit chunking
-        full_grad_into_chunked(&w, &ds, 0.05, 333, &mut ga, &mut scratch);
-        full_grad_into_chunked(&w, &paged, 0.05, 333, &mut gb, &mut scratch);
+        full_grad_into_chunked(&w, &ds, 0.05, 333, &mut ga, &mut scratch).unwrap();
+        full_grad_into_chunked(&w, &paged, 0.05, 333, &mut gb, &mut scratch).unwrap();
         assert_eq!(ga, gb);
         assert!(paged.io_stats().bytes_read > 0);
         std::fs::remove_file(p).ok();
@@ -301,9 +311,9 @@ mod tests {
         let (ds_b, w_b) = toy_ds(200, 4, 32);
         let mut scratch = GradScratch::default();
         let mut g_a = vec![0f32; 9];
-        full_grad_into(&w_a, &ds_a, 0.1, &mut g_a, &mut scratch);
+        full_grad_into(&w_a, &ds_a, 0.1, &mut g_a, &mut scratch).unwrap();
         let mut g_b = vec![0f32; 4];
-        full_grad_into(&w_b, &ds_b, 0.1, &mut g_b, &mut scratch);
+        full_grad_into(&w_b, &ds_b, 0.1, &mut g_b, &mut scratch).unwrap();
         let want_b = serial_grad(&w_b, &ds_b, 0.1, SWEEP_CHUNK_ROWS);
         assert_eq!(g_b, want_b);
     }

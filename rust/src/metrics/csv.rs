@@ -22,14 +22,20 @@ use crate::error::{Error, Result};
 use crate::metrics::Trace;
 use crate::storage::pagestore::IoStats;
 
-/// Column names for the real-I/O statistics block.
-pub const IO_HEADER: [&str; 6] = [
+/// Column names for the real-I/O statistics block. `io_demand_faults` /
+/// `io_readahead_hits` / `io_stall_s` split access time into what stalled
+/// the consumer vs what the readahead thread absorbed off the critical
+/// path.
+pub const IO_HEADER: [&str; 9] = [
     "io_bytes_read",
     "io_read_calls",
     "io_page_faults",
+    "io_demand_faults",
     "io_page_hits",
+    "io_readahead_hits",
     "io_read_amp",
     "io_mb_per_s",
+    "io_stall_s",
 ];
 
 /// Render an [`IoStats`] into the [`IO_HEADER`] columns.
@@ -38,9 +44,12 @@ pub fn io_fields(io: &IoStats) -> Vec<String> {
         io.bytes_read.to_string(),
         io.read_calls.to_string(),
         io.page_faults.to_string(),
+        io.demand_faults.to_string(),
         io.page_hits.to_string(),
+        io.readahead_hits.to_string(),
         format!("{:.4}", io.read_amplification()),
         format!("{:.2}", io.mb_per_s()),
+        format!("{:.6}", io.stall_s),
     ]
 }
 
@@ -167,13 +176,19 @@ mod tests {
             bytes_read: 4096,
             read_calls: 2,
             page_faults: 4,
+            demand_faults: 3,
             page_hits: 8,
+            readahead_hits: 5,
             bytes_requested: 2048,
             read_s: 0.001,
+            stall_s: 0.0005,
         };
         let fields = io_fields(&io);
         assert_eq!(fields.len(), IO_HEADER.len());
         assert_eq!(fields[0], "4096");
-        assert_eq!(fields[4], "2.0000"); // 4096 / 2048
+        assert_eq!(fields[3], "3");
+        assert_eq!(fields[5], "5");
+        assert_eq!(fields[6], "2.0000"); // 4096 / 2048
+        assert_eq!(fields[8], "0.000500");
     }
 }

@@ -33,6 +33,8 @@ use std::thread::JoinHandle;
 use crate::data::batch::{gather_owned, BatchView, OwnedBatch, RowSelection};
 use crate::data::paged::PagedBatchData;
 use crate::data::Dataset;
+use crate::error::{Error, Result};
+use crate::storage::pagestore::Readahead;
 use crate::storage::simulator::{AccessCost, AccessSimulator};
 
 thread_local! {
@@ -175,6 +177,9 @@ enum BatchMsg {
     Batch(PrefetchedBatch),
     /// Epoch boundary marker carrying that epoch's stats.
     EpochEnd(PrefetchStats),
+    /// Batch assembly failed (paged I/O error): the epoch is abandoned and
+    /// the typed error surfaces on the trainer thread.
+    Failed(Error),
 }
 
 /// Handle to the experiment-lifetime prefetch engine.
@@ -205,14 +210,36 @@ impl Prefetcher {
     /// page-cache state persists across epochs — and is returned by
     /// [`finish`](Prefetcher::finish).
     pub fn spawn(ds: Arc<Dataset>, sim: AccessSimulator, depth: usize) -> Self {
+        Self::spawn_with_readahead(ds, sim, depth, 0)
+    }
+
+    /// [`spawn`](Prefetcher::spawn) plus asynchronous page readahead for
+    /// paged datasets: with `readahead_pages > 0` the reader publishes each
+    /// epoch's exact batch schedule to a dedicated [`Readahead`] thread,
+    /// which faults the upcoming pages into the shard-locked pool while
+    /// the reader assembles earlier batches and the solver computes — the
+    /// access/compute overlap the paper's eq.(1) asks for. Trajectories
+    /// are bit-identical with readahead on or off (it only warms pages);
+    /// in-core datasets ignore the knob.
+    pub fn spawn_with_readahead(
+        ds: Arc<Dataset>,
+        sim: AccessSimulator,
+        depth: usize,
+        readahead_pages: u64,
+    ) -> Self {
         let depth = depth.max(1);
+        let readahead = if readahead_pages > 0 {
+            ds.as_paged().map(|p| p.spawn_readahead(readahead_pages))
+        } else {
+            None
+        };
         let (cmd_tx, cmd_rx) = std::sync::mpsc::channel::<ReaderMsg>();
         let (tx, rx) = sync_channel::<BatchMsg>(depth);
         let stall_counter = Arc::new(AtomicU64::new(0));
         let live_stalls = Arc::clone(&stall_counter);
         READER_SPAWNS.with(|c| c.set(c.get() + 1));
         let handle = std::thread::spawn(move || {
-            reader_loop(ds, sim, cmd_rx, tx, live_stalls)
+            reader_loop(ds, sim, cmd_rx, tx, live_stalls, readahead)
         });
         Prefetcher {
             cmd_tx: Some(cmd_tx),
@@ -236,24 +263,34 @@ impl Prefetcher {
         self.epoch_open = true;
     }
 
-    /// Receive the next batch of the current epoch; `None` once the epoch is
-    /// exhausted (its stats are then available via
-    /// [`last_epoch_stats`](Prefetcher::last_epoch_stats)).
-    pub fn next_batch(&mut self) -> Option<PrefetchedBatch> {
+    /// Receive the next batch of the current epoch; `Ok(None)` once the
+    /// epoch is exhausted (its stats are then available via
+    /// [`last_epoch_stats`](Prefetcher::last_epoch_stats)). A paged batch
+    /// whose disk read failed surfaces here as the store's typed error —
+    /// the epoch is abandoned, never silently truncated by a panic.
+    pub fn next_batch(&mut self) -> Result<Option<PrefetchedBatch>> {
         if !self.epoch_open {
-            return None;
+            return Ok(None);
         }
         match self.rx.recv() {
-            Ok(BatchMsg::Batch(b)) => Some(b),
+            Ok(BatchMsg::Batch(b)) => Ok(Some(b)),
             Ok(BatchMsg::EpochEnd(stats)) => {
                 self.last_epoch = stats;
                 self.epoch_open = false;
-                None
+                Ok(None)
+            }
+            Ok(BatchMsg::Failed(e)) => {
+                self.epoch_open = false;
+                Err(e)
             }
             Err(_) => {
-                // reader died (only possible on panic); surface as epoch end
+                // reader died (only possible on panic): a mid-epoch death
+                // must not read as a clean epoch end, or the trainer would
+                // publish a trajectory silently missing updates
                 self.epoch_open = false;
-                None
+                Err(Error::Other(
+                    "prefetch reader thread died mid-epoch (panicked)".into(),
+                ))
             }
         }
     }
@@ -291,41 +328,91 @@ fn reader_loop(
     cmd_rx: Receiver<ReaderMsg>,
     tx: SyncSender<BatchMsg>,
     live_stalls: Arc<AtomicU64>,
+    mut readahead: Option<Readahead>,
 ) -> (AccessSimulator, PrefetchStats) {
     let mut totals = PrefetchStats::default();
+    // How many batches the reader keeps *published* ahead of consumption.
+    // Bounds the readahead command channel at O(ahead) run lists even for
+    // scattered epochs (one run per row), instead of O(rows) for a whole
+    // epoch; the page window still paces the actual I/O.
+    const PUBLISH_AHEAD_BATCHES: usize = 64;
     'serve: while let Ok(ReaderMsg::Epoch(selections)) = cmd_rx.recv() {
         let mut es = PrefetchStats::default();
-        for (j, sel) in selections.into_iter().enumerate() {
-            let sim_cost = sim.fetch(&sel);
+        let paged = ds.as_paged();
+        // per-epoch publish state: the exact page schedule is published
+        // incrementally, a bounded horizon ahead of consumption. Sequence
+        // numbers come from publish() itself, so they stay aligned with
+        // the thread's completion counter even across abandoned epochs.
+        let mut epoch_base: u64 = 0;
+        let mut batch_pages: Vec<u64> = Vec::new();
+        for (j, sel) in selections.iter().enumerate() {
+            let sim_cost = sim.fetch(sel);
+            if let (Some(ra), Some(p)) = (&mut readahead, paged) {
+                // top up the publish horizon, then wait for this batch's
+                // pages (wait time is charged to stall_s) so the demand
+                // path never races the readahead thread for the disk
+                while batch_pages.len() < selections.len().min(j + 1 + PUBLISH_AHEAD_BATCHES) {
+                    let idx = batch_pages.len();
+                    let runs = p.selection_runs(&selections[idx]);
+                    batch_pages.push(p.runs_pages(&runs));
+                    let seq = ra.publish(runs);
+                    if idx == 0 {
+                        epoch_base = seq;
+                    }
+                }
+                ra.wait_ready(epoch_base + j as u64);
+            }
             let t0 = std::time::Instant::now();
             let rows = sel.len();
-            let payload = match (&sel, ds.as_paged()) {
+            let assembled: Result<BatchPayload> = match (sel, paged) {
                 (RowSelection::Contiguous { start, end }, None) => {
-                    es.bytes_borrowed += ds.payload_bytes(&sel);
-                    BatchPayload::Borrowed { ds: Arc::clone(&ds), start: *start, end: *end }
+                    es.bytes_borrowed += ds.payload_bytes(sel);
+                    Ok(BatchPayload::Borrowed { ds: Arc::clone(&ds), start: *start, end: *end })
                 }
                 (RowSelection::Contiguous { start, end }, Some(p)) => {
                     // the page faults happen here, on the reader thread —
                     // the next batch's pages are warmed while the solver
                     // computes on the previous one
-                    let data = p.assemble_contiguous(*start, *end);
-                    match &data {
-                        PagedBatchData::PinnedPage { .. } => {
-                            es.bytes_borrowed += ds.payload_bytes(&sel);
+                    p.assemble_contiguous(*start, *end).map(|data| {
+                        match &data {
+                            PagedBatchData::PinnedPage { .. } => {
+                                es.bytes_borrowed += ds.payload_bytes(sel);
+                            }
+                            PagedBatchData::Gathered(ob) => {
+                                es.bytes_copied += ob.payload_bytes();
+                            }
                         }
-                        PagedBatchData::Gathered(ob) => es.bytes_copied += ob.payload_bytes(),
-                    }
-                    BatchPayload::Paged {
-                        ds: Arc::clone(&ds),
-                        start: *start,
-                        end: *end,
-                        data,
-                    }
+                        BatchPayload::Paged {
+                            ds: Arc::clone(&ds),
+                            start: *start,
+                            end: *end,
+                            data,
+                        }
+                    })
                 }
-                (RowSelection::Scattered(_), _) => {
-                    let ob = gather_owned(&ds, &sel);
+                (RowSelection::Scattered(_), _) => gather_owned(&ds, sel).map(|ob| {
                     es.bytes_copied += ob.payload_bytes();
                     BatchPayload::Owned(ob)
+                }),
+            };
+            if let Some(ra) = &readahead {
+                ra.mark_consumed(batch_pages.get(j).copied().unwrap_or(0));
+            }
+            let payload = match assembled {
+                Ok(p) => p,
+                Err(e) => {
+                    if let Some(ra) = &readahead {
+                        // the rest of the epoch stays published but will
+                        // never be assembled: mark it consumed so the
+                        // window accounting stays aligned for any epoch
+                        // the trainer starts after the error
+                        for pages in batch_pages.iter().skip(j + 1) {
+                            ra.mark_consumed(*pages);
+                        }
+                    }
+                    // abandon the epoch; the trainer sees the typed error
+                    let _ = tx.send(BatchMsg::Failed(e));
+                    continue 'serve;
                 }
             };
             let assemble_s = t0.elapsed().as_secs_f64();
@@ -414,7 +501,7 @@ mod tests {
         let mut pf = Prefetcher::spawn(d.clone(), sim(&d), 2);
         pf.start_epoch(contiguous_epoch(4, 10));
         let mut seen = 0;
-        while let Some(b) = pf.next_batch() {
+        while let Some(b) = pf.next_batch().unwrap() {
             assert_eq!(b.j, seen);
             assert_eq!(b.rows, 10);
             assert!(b.payload.is_borrowed(), "contiguous batches must borrow");
@@ -445,7 +532,7 @@ mod tests {
         let mut pf = Prefetcher::spawn(d.clone(), sim(&d), 2);
         pf.start_epoch(contiguous_epoch(6, 10));
         let mut seen = 0;
-        while let Some(b) = pf.next_batch() {
+        while let Some(b) = pf.next_batch().unwrap() {
             assert!(b.payload.is_borrowed(), "contiguous CSR batches must borrow");
             let view = b.view(500);
             let v = view.as_csr().unwrap();
@@ -469,11 +556,11 @@ mod tests {
         let d = ds(20, 2);
         let mut pf = Prefetcher::spawn(d.clone(), sim(&d), 1);
         pf.start_epoch(vec![RowSelection::Scattered(vec![5, 1, 9])]);
-        let b = pf.next_batch().unwrap();
+        let b = pf.next_batch().unwrap().unwrap();
         assert!(!b.payload.is_borrowed());
         let view = b.view(2);
         assert_eq!(view.as_dense().unwrap().x, &[10.0, 11.0, 2.0, 3.0, 18.0, 19.0]);
-        assert!(pf.next_batch().is_none());
+        assert!(pf.next_batch().unwrap().is_none());
         let es = pf.last_epoch_stats();
         assert_eq!(es.bytes_copied, 3 * 2 * 4);
         assert_eq!(es.bytes_borrowed, 0);
@@ -488,11 +575,11 @@ mod tests {
         let want_nnz: usize = sel.iter().map(|&r| c.row_nnz(r as usize)).sum();
         let mut pf = Prefetcher::spawn(d.clone(), sim(&d), 1);
         pf.start_epoch(vec![RowSelection::Scattered(sel)]);
-        let b = pf.next_batch().unwrap();
+        let b = pf.next_batch().unwrap().unwrap();
         assert!(!b.payload.is_borrowed());
         let view = b.view(400);
         assert_eq!(view.as_csr().unwrap().nnz(), want_nnz);
-        while pf.next_batch().is_some() {}
+        while pf.next_batch().unwrap().is_some() {}
         let es = pf.last_epoch_stats();
         assert_eq!(es.bytes_copied, want_nnz as u64 * 8, "8 B per gathered non-zero");
         assert_eq!(es.bytes_borrowed, 0);
@@ -513,7 +600,7 @@ mod tests {
         let mut pf = Prefetcher::spawn(d.clone(), sim(&d), 2);
         pf.start_epoch(contiguous_epoch(16, 4));
         let mut seen = 0;
-        while let Some(b) = pf.next_batch() {
+        while let Some(b) = pf.next_batch().unwrap() {
             assert!(b.payload.is_zero_copy(), "page-aligned batches must pin");
             let view = b.view(4);
             let v = view.as_dense().unwrap();
@@ -529,24 +616,88 @@ mod tests {
 
         // a straddling contiguous batch still delivers exact bytes (gather)
         pf.start_epoch(vec![RowSelection::Contiguous { start: 2, end: 7 }]);
-        let b = pf.next_batch().unwrap();
+        let b = pf.next_batch().unwrap().unwrap();
         assert!(!b.payload.is_zero_copy());
         assert_eq!(b.view(4).as_dense().unwrap().x, dense.rows_slice(2, 7).0);
-        while pf.next_batch().is_some() {}
+        while pf.next_batch().unwrap().is_some() {}
 
         // scattered rows gather owned, faulting pages individually
         pf.start_epoch(vec![RowSelection::Scattered(vec![63, 0, 17])]);
-        let b = pf.next_batch().unwrap();
+        let b = pf.next_batch().unwrap().unwrap();
         assert!(!b.payload.is_zero_copy());
         let view = b.view(4);
         let v = view.as_dense().unwrap();
         assert_eq!(&v.x[0..4], dense.row(63));
         assert_eq!(&v.x[4..8], dense.row(0));
         assert_eq!(&v.x[8..12], dense.row(17));
-        while pf.next_batch().is_some() {}
+        while pf.next_batch().unwrap().is_some() {}
         pf.finish();
         let io = d.io_stats();
         assert!(io.bytes_read > 0 && io.read_calls > 0, "real file IO happened");
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn readahead_reader_delivers_identical_batches_with_zero_demand_faults() {
+        // full budget + readahead: the reader waits for each batch's
+        // prefault, so every demand touch is a pool hit — deterministically
+        // zero demand faults — and the delivered bytes are bit-identical
+        let in_core = ds(64, 4);
+        let path =
+            std::env::temp_dir().join(format!("prefetch_ra_{}.sxb", std::process::id()));
+        in_core.as_dense().unwrap().save(&path).unwrap();
+        let d: Arc<Dataset> =
+            Arc::new(crate::data::paged::PagedDataset::open(&path, 0, 64).unwrap().into());
+        let dense = in_core.as_dense().unwrap();
+        let mut pf = Prefetcher::spawn_with_readahead(d.clone(), sim(&d), 2, 8);
+        for epoch in 0..2 {
+            pf.start_epoch(contiguous_epoch(16, 4));
+            let mut seen = 0;
+            while let Some(b) = pf.next_batch().unwrap() {
+                let view = b.view(4);
+                let v = view.as_dense().unwrap();
+                let (want_x, want_y) = dense.rows_slice(b.j * 4, (b.j + 1) * 4);
+                assert_eq!(v.x, want_x, "epoch {epoch} batch {}", b.j);
+                assert_eq!(v.y, want_y);
+                seen += 1;
+            }
+            assert_eq!(seen, 16);
+        }
+        pf.finish();
+        let io = d.io_stats();
+        assert_eq!(io.demand_faults, 0, "readahead must absorb every fault");
+        assert_eq!(io.page_faults, 16, "second epoch is all hits at full budget");
+        assert!(io.readahead_hits > 0);
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn reader_surfaces_paged_io_error_typed() {
+        // truncate the file after open: the next epoch's assembly must
+        // surface Error::Corrupt through next_batch, not kill the process
+        let in_core = ds(64, 4);
+        let path =
+            std::env::temp_dir().join(format!("prefetch_err_{}.sxb", std::process::id()));
+        in_core.as_dense().unwrap().save(&path).unwrap();
+        let d: Arc<Dataset> =
+            Arc::new(crate::data::paged::PagedDataset::open(&path, 0, 64).unwrap().into());
+        let full = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &full[..full.len() / 2]).unwrap();
+        let mut pf = Prefetcher::spawn(d.clone(), sim(&d), 2);
+        pf.start_epoch(contiguous_epoch(16, 4));
+        let mut failed = false;
+        loop {
+            match pf.next_batch() {
+                Ok(Some(_)) => {}
+                Ok(None) => break,
+                Err(e) => {
+                    assert!(matches!(e, crate::error::Error::Corrupt { .. }), "{e}");
+                    failed = true;
+                    break;
+                }
+            }
+        }
+        assert!(failed, "the truncated file must surface a typed error");
         std::fs::remove_file(path).ok();
     }
 
@@ -563,7 +714,7 @@ mod tests {
             std::thread::yield_now();
         }
         let mut n = 0;
-        while pf.next_batch().is_some() {
+        while pf.next_batch().unwrap().is_some() {
             n += 1;
         }
         assert_eq!(n, 100);
@@ -580,13 +731,13 @@ mod tests {
         let sels = vec![RowSelection::Contiguous { start: 0, end: 100 }];
 
         pf.start_epoch(sels.clone());
-        while pf.next_batch().is_some() {}
+        while pf.next_batch().unwrap().is_some() {}
         let e0 = pf.last_epoch_stats();
         assert!(e0.sim_access_s > 0.0, "cold first epoch must pay device time");
 
         for _ in 0..2 {
             pf.start_epoch(sels.clone());
-            while pf.next_batch().is_some() {}
+            while pf.next_batch().unwrap().is_some() {}
             let e = pf.last_epoch_stats();
             assert_eq!(e.sim_access_s, 0.0, "page cache must persist across epochs");
         }
@@ -606,7 +757,7 @@ mod tests {
         let d = ds(1000, 4);
         let mut pf = Prefetcher::spawn(d.clone(), sim(&d), 1);
         pf.start_epoch(contiguous_epoch(100, 10));
-        let _first = pf.next_batch().unwrap();
+        let _first = pf.next_batch().unwrap().unwrap();
         // finish with 99 batches still in flight: must drain and join
         let (_, totals) = pf.finish();
         assert!(totals.batches <= 100);

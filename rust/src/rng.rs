@@ -5,6 +5,31 @@
 //! the paper's comparisons require the *same* mini-batch partition across
 //! sampling techniques, which deterministic seeding guarantees.
 
+/// One round of the SplitMix64 output finalizer (Steele et al.): a strong
+/// 64-bit mixer with no weak inputs — in particular `splitmix64(0) != 0`.
+#[inline]
+fn splitmix64(z: u64) -> u64 {
+    let mut z = z.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// Derive a per-epoch RNG seed from `(seed, epoch_idx, sampler_tag)` by
+/// chaining SplitMix64 finalizers.
+///
+/// Every sampler used to derive its epoch seed as
+/// `seed ^ epoch_idx.wrapping_mul(K)`, which degenerates to the raw `seed`
+/// at epoch 0 for *every* sampler kind (the multiplier is annihilated) —
+/// so on epoch 0 RS, SS and stratified all consumed the *same* random
+/// stream. Mixing all three inputs through a proper finalizer keeps the
+/// streams distinct at every epoch, including 0, while staying a pure
+/// deterministic function of the inputs.
+#[inline]
+pub fn epoch_seed(seed: u64, epoch_idx: u64, sampler_tag: u64) -> u64 {
+    splitmix64(seed ^ splitmix64(epoch_idx ^ splitmix64(sampler_tag)))
+}
+
 /// xoshiro256** — fast, high-quality, 256-bit state.
 #[derive(Debug, Clone)]
 pub struct Rng {
@@ -139,6 +164,31 @@ mod tests {
         let var = xs.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / n as f64;
         assert!(mean.abs() < 0.03, "mean={mean}");
         assert!((var - 1.0).abs() < 0.05, "var={var}");
+    }
+
+    #[test]
+    fn epoch_seed_does_not_degenerate_at_epoch_zero() {
+        // the old `seed ^ epoch.wrapping_mul(K)` scheme collapsed to the
+        // raw seed at epoch 0 for every sampler tag — pin the fix
+        let seed = 42u64;
+        let tags = [1u64, 2, 3, 4];
+        let mut at_zero: Vec<u64> = tags.iter().map(|&t| epoch_seed(seed, 0, t)).collect();
+        for (&t, &s) in tags.iter().zip(&at_zero) {
+            assert_ne!(s, seed, "tag {t}: epoch 0 must not collapse to the raw seed");
+        }
+        at_zero.sort_unstable();
+        at_zero.dedup();
+        assert_eq!(at_zero.len(), tags.len(), "tags must give distinct epoch-0 streams");
+    }
+
+    #[test]
+    fn epoch_seed_is_deterministic_and_input_sensitive() {
+        assert_eq!(epoch_seed(7, 3, 1), epoch_seed(7, 3, 1));
+        assert_ne!(epoch_seed(7, 3, 1), epoch_seed(7, 4, 1));
+        assert_ne!(epoch_seed(7, 3, 1), epoch_seed(8, 3, 1));
+        assert_ne!(epoch_seed(7, 3, 1), epoch_seed(7, 3, 2));
+        // even the all-zero input mixes to something non-trivial
+        assert_ne!(epoch_seed(0, 0, 0), 0);
     }
 
     #[test]

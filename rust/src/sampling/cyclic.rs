@@ -37,7 +37,7 @@ impl Sampler for CyclicSampler {
         self.m
     }
 
-    fn epoch(&mut self, _epoch_idx: usize) -> Vec<RowSelection> {
+    fn schedule(&self, _epoch_idx: usize) -> Vec<RowSelection> {
         (0..self.m)
             .map(|j| RowSelection::Contiguous {
                 start: j * self.batch,

@@ -103,6 +103,15 @@ impl SamplingKind {
 }
 
 /// Per-epoch mini-batch selection sequence.
+///
+/// Schedules are **pure functions of `(seed, epoch_idx)`**: [`schedule`]
+/// takes `&self`, never mutates sampler state, and returns the same
+/// sequence every time it is asked for the same epoch. That purity is what
+/// lets the readahead subsystem peek at upcoming epochs (to prefault their
+/// pages) without perturbing the RNG stream the trainer will consume —
+/// look-ahead and training always see the identical batch order.
+///
+/// [`schedule`]: Sampler::schedule
 pub trait Sampler: Send {
     /// Technique label (RS/CS/SS/…).
     fn name(&self) -> &'static str;
@@ -110,9 +119,26 @@ pub trait Sampler: Send {
     /// Number of mini-batches per epoch, `m = ceil(l / b)`.
     fn batches_per_epoch(&self) -> usize;
 
-    /// The mini-batch sequence for epoch `epoch_idx`. Deterministic in
-    /// `(seed, epoch_idx)`.
-    fn epoch(&mut self, epoch_idx: usize) -> Vec<RowSelection>;
+    /// The mini-batch sequence for epoch `epoch_idx` — deterministic in
+    /// `(seed, epoch_idx)`, idempotent, and side-effect free, so callers
+    /// may peek ahead at any epoch (readahead) without changing what a
+    /// later call returns.
+    fn schedule(&self, epoch_idx: usize) -> Vec<RowSelection>;
+
+    /// The mini-batch sequence for epoch `epoch_idx` (consuming form kept
+    /// for `&mut` call sites; identical to [`schedule`](Sampler::schedule)).
+    fn epoch(&mut self, epoch_idx: usize) -> Vec<RowSelection> {
+        self.schedule(epoch_idx)
+    }
+}
+
+/// Per-kind domain-separation tags mixed into [`crate::rng::epoch_seed`] so
+/// two samplers sharing a seed never consume the same random stream.
+pub(crate) mod tag {
+    pub const RS: u64 = 1;
+    pub const RSWR: u64 = 2;
+    pub const SS: u64 = 3;
+    pub const STRATIFIED: u64 = 4;
 }
 
 /// Shared validation for (rows, batch) pairs.
@@ -167,6 +193,58 @@ mod tests {
     #[test]
     fn stratified_requires_labels() {
         assert!(SamplingKind::Stratified.build(8, 2, 0, None).is_err());
+    }
+
+    #[test]
+    fn epoch_zero_streams_are_distinct_across_kinds() {
+        // with the old `seed ^ epoch.wrapping_mul(K)` derivation, RS / SS /
+        // stratified all degenerated to the raw seed's stream at epoch 0;
+        // flattening the selections must now give different sequences
+        let labels: Vec<f32> =
+            (0..64).map(|i| if i % 2 == 0 { 1.0 } else { -1.0 }).collect();
+        let flat = |k: SamplingKind| -> Vec<usize> {
+            k.build(64, 8, 42, Some(&labels))
+                .unwrap()
+                .schedule(0)
+                .iter()
+                .flat_map(|sel| sel.iter())
+                .collect()
+        };
+        let rs = flat(SamplingKind::Rs);
+        let ss = flat(SamplingKind::Ss);
+        let strat = flat(SamplingKind::Stratified);
+        assert_ne!(rs, ss, "RS and SS must not share the epoch-0 stream");
+        assert_ne!(rs, strat, "RS and stratified must not share the epoch-0 stream");
+    }
+
+    #[test]
+    fn schedule_is_idempotent_and_never_perturbs_later_epochs() {
+        // the readahead contract: peeking any epoch (any number of times,
+        // in any order) must not change what any other call returns
+        let labels: Vec<f32> =
+            (0..100).map(|i| if i % 3 == 0 { 1.0 } else { -1.0 }).collect();
+        for k in [
+            SamplingKind::Rs,
+            SamplingKind::Rswr,
+            SamplingKind::Cs,
+            SamplingKind::Ss,
+            SamplingKind::Stratified,
+        ] {
+            let mut a = k.build(100, 10, 9, Some(&labels)).unwrap();
+            let b = k.build(100, 10, 9, Some(&labels)).unwrap();
+            // peek epochs 5 and 1 (twice) on `b` before reading epoch 0
+            let peek5 = b.schedule(5);
+            assert_eq!(b.schedule(1), b.schedule(1), "{}: idempotent", k.label());
+            assert_eq!(b.schedule(5), peek5, "{}: idempotent", k.label());
+            for e in 0..4 {
+                assert_eq!(
+                    a.epoch(e),
+                    b.schedule(e),
+                    "{}: epoch {e} must be independent of peek history",
+                    k.label()
+                );
+            }
+        }
     }
 
     #[test]

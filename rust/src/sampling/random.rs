@@ -15,29 +15,27 @@
 
 use crate::data::batch::RowSelection;
 use crate::error::Result;
-use crate::rng::Rng;
-use crate::sampling::{check_dims, num_batches, Sampler};
+use crate::rng::{epoch_seed, Rng};
+use crate::sampling::{check_dims, num_batches, tag, Sampler};
 
 /// RS without replacement: shuffled index array, chunked (the paper's RS).
+///
+/// The epoch permutation is a pure function of `(seed, epoch_idx)` — a
+/// fresh identity array shuffled by the epoch's RNG — so peeking an epoch
+/// (readahead) never perturbs any other epoch's order.
 #[derive(Debug, Clone)]
 pub struct RandomWithoutReplacement {
+    rows: usize,
     batch: usize,
     m: usize,
     seed: u64,
-    /// Reused index array — shuffled in place each epoch.
-    perm: Vec<u32>,
 }
 
 impl RandomWithoutReplacement {
     /// New sampler over `rows` points with mini-batch size `batch`.
     pub fn new(rows: usize, batch: usize, seed: u64) -> Result<Self> {
         check_dims(rows, batch)?;
-        Ok(RandomWithoutReplacement {
-            batch,
-            m: num_batches(rows, batch),
-            seed,
-            perm: (0..rows as u32).collect(),
-        })
+        Ok(RandomWithoutReplacement { rows, batch, m: num_batches(rows, batch), seed })
     }
 }
 
@@ -50,11 +48,11 @@ impl Sampler for RandomWithoutReplacement {
         self.m
     }
 
-    fn epoch(&mut self, epoch_idx: usize) -> Vec<RowSelection> {
-        let mut rng = Rng::seed_from(self.seed ^ (epoch_idx as u64).wrapping_mul(0xA076_1D64));
-        rng.shuffle(&mut self.perm);
-        self.perm
-            .chunks(self.batch)
+    fn schedule(&self, epoch_idx: usize) -> Vec<RowSelection> {
+        let mut rng = Rng::seed_from(epoch_seed(self.seed, epoch_idx as u64, tag::RS));
+        let mut perm: Vec<u32> = (0..self.rows as u32).collect();
+        rng.shuffle(&mut perm);
+        perm.chunks(self.batch)
             .map(|c| RowSelection::Scattered(c.to_vec()))
             .collect()
     }
@@ -87,8 +85,8 @@ impl Sampler for RandomWithReplacement {
         self.m
     }
 
-    fn epoch(&mut self, epoch_idx: usize) -> Vec<RowSelection> {
-        let mut rng = Rng::seed_from(self.seed ^ (epoch_idx as u64).wrapping_mul(0xD6E8_FEB8));
+    fn schedule(&self, epoch_idx: usize) -> Vec<RowSelection> {
+        let mut rng = Rng::seed_from(epoch_seed(self.seed, epoch_idx as u64, tag::RSWR));
         (0..self.m)
             .map(|j| {
                 // keep the ragged-last-batch convention of the partition

@@ -10,8 +10,8 @@
 
 use crate::data::batch::RowSelection;
 use crate::error::{Error, Result};
-use crate::rng::Rng;
-use crate::sampling::{num_batches, Sampler};
+use crate::rng::{epoch_seed, Rng};
+use crate::sampling::{num_batches, tag, Sampler};
 
 /// Label-stratified sampler with per-epoch without-replacement draws.
 #[derive(Debug, Clone)]
@@ -58,8 +58,8 @@ impl Sampler for StratifiedSampler {
         self.m
     }
 
-    fn epoch(&mut self, epoch_idx: usize) -> Vec<RowSelection> {
-        let mut rng = Rng::seed_from(self.seed ^ (epoch_idx as u64).wrapping_mul(0xC2B2_AE3D));
+    fn schedule(&self, epoch_idx: usize) -> Vec<RowSelection> {
+        let mut rng = Rng::seed_from(epoch_seed(self.seed, epoch_idx as u64, tag::STRATIFIED));
         // shuffle each stratum, then deal class-proportionally into batches
         let mut shuffled: Vec<Vec<u32>> = self.strata.clone();
         for s in shuffled.iter_mut() {

@@ -12,8 +12,8 @@
 
 use crate::data::batch::RowSelection;
 use crate::error::Result;
-use crate::rng::Rng;
-use crate::sampling::{check_dims, num_batches, Sampler};
+use crate::rng::{epoch_seed, Rng};
+use crate::sampling::{check_dims, num_batches, tag, Sampler};
 
 /// Systematic sampler: contiguous batches, shuffled batch order per epoch.
 #[derive(Debug, Clone)]
@@ -41,9 +41,9 @@ impl Sampler for SystematicSampler {
         self.m
     }
 
-    fn epoch(&mut self, epoch_idx: usize) -> Vec<RowSelection> {
+    fn schedule(&self, epoch_idx: usize) -> Vec<RowSelection> {
         // fresh, deterministic order per (seed, epoch)
-        let mut rng = Rng::seed_from(self.seed ^ (epoch_idx as u64).wrapping_mul(0x9E37_79B9));
+        let mut rng = Rng::seed_from(epoch_seed(self.seed, epoch_idx as u64, tag::SS));
         let mut order: Vec<usize> = (0..self.m).collect();
         rng.shuffle(&mut order);
         order

@@ -29,6 +29,29 @@
 //! maximal runs (one positioning event / one syscall per run), scattered
 //! selections pay per fragment.
 //!
+//! **Concurrency & overlap.** The page store is a shard-locked shared
+//! handle: the resident pool is split into up to
+//! [`pagestore::MAX_SHARDS`] independently locked shards (page id mod
+//! shard count) with the counters in one atomic block, so the prefetch
+//! reader, the driver, pool workers and the [`pagestore::Readahead`]
+//! thread never convoy on a single pool lock. Because every sampling
+//! schedule is a pure function of `(seed, epoch)`, the readahead thread
+//! prefaults the *exact* upcoming pages within a configured page window
+//! (`[storage] readahead` / `--readahead-pages`), overlapping disk time
+//! with solver compute without changing a single delivered byte.
+//!
+//! **Reading [`pagestore::IoStats`].** `page_faults` counts every disk
+//! fault regardless of which thread paid for it; `demand_faults` counts
+//! only faults the demand path waited on, and `stall_s` is the wall time
+//! of those waits (demand-fault reads + waiting on an unfinished
+//! prefault) — together they are authoritative for "did access stall the
+//! demand path?" (under the pipelined driver, the prefetch channel depth
+//! may additionally hide part of `stall_s` from the solver itself).
+//! `readahead_hits` credits the first demand touch of each prefetched
+//! page — authoritative for "did readahead do useful work?". With
+//! readahead off, `demand_faults == page_faults` and
+//! `readahead_hits == 0`.
+//!
 //! **Cost model across layouts:** the block map knows both the uniform
 //! `.sxb` geometry (every row spans `cols * 4` bytes) and the
 //! variable-extent `.sxc` geometry (row `r` spans `8 * nnz_r` bytes —

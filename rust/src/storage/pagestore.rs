@@ -24,15 +24,57 @@
 //! `(col_idx, value)` pair arrays for `.sxc`), so borrowing out of a page
 //! yields exactly the slices the math kernels consume and results stay
 //! bit-identical to the in-core stores.
+//!
+//! ## Concurrency: the shard-locked pool
+//!
+//! A [`PageStore`] is a cheap [`Clone`] handle onto shared state and every
+//! access method takes `&self`, so the prefetch reader thread, the
+//! [`Readahead`] thread, the driver and the pool workers all operate on
+//! the store directly — there is no outer `Mutex<PageStore>` to convoy on.
+//! Internally the resident pool is split into [`MAX_SHARDS`] shards (page
+//! `p` lives in shard `p % n_shards`), each holding its own page map and
+//! LRU list behind its own lock, and the [`IoStats`] counters are plain
+//! atomics. The only serialization point is the file handle itself (one
+//! `seek + read` at a time); page decode and delivery run outside every
+//! lock. Two threads racing to fault the same page may both read it — the
+//! second install simply refreshes the (identical) buffer, and both reads
+//! are counted.
+//!
+//! ## Readahead: overlapping access with compute
+//!
+//! Because every sampling schedule is a deterministic function of
+//! `(seed, epoch)`, the exact sequence of future pages is knowable ahead
+//! of time — so readahead here is **exact, not heuristic**. A [`Readahead`]
+//! handle owns one persistent thread (spawned once per experiment, the
+//! same discipline as [`crate::runtime::pool`] and the prefetch reader)
+//! that consumes published per-batch element runs and faults their pages
+//! into the pool with [`PageStore::prefault_range`] ahead of the demand
+//! path, pacing itself to stay at most a configured window of pages ahead.
+//! The demand path waits for a batch's prefault to complete before
+//! assembling it, so with readahead on, contiguous access patterns see
+//! **zero demand faults** once the window and budget allow — all disk time
+//! is absorbed on the readahead thread, overlapped with solver compute.
+//! `IoStats` splits the picture: `demand_faults` (and `stall_s`) tell you
+//! what the consumer actually waited for; `readahead_hits` tell you how
+//! many page touches were served by prefetched pages.
 
 use std::collections::HashMap;
 use std::fs::File;
 use std::io::{Read, Seek, SeekFrom};
 use std::path::Path;
-use std::sync::Arc;
+use std::sync::atomic::{AtomicU32, AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
+use std::thread::JoinHandle;
+use std::time::Duration;
 
 use crate::error::{Error, Result};
 use crate::storage::cache::{LruCache, Touch};
+
+/// Upper bound on pool shards (the actual count never exceeds the pool's
+/// page capacity, so a 1-page budget degenerates to a single shard with
+/// plain global LRU behavior).
+pub const MAX_SHARDS: usize = 8;
 
 /// Lifetime I/O statistics of one page store — the real-file analogue of
 /// [`super::simulator::AccessCost`].
@@ -42,14 +84,30 @@ pub struct IoStats {
     pub bytes_read: u64,
     /// Read syscalls issued (one per maximal run of faulted pages).
     pub read_calls: u64,
-    /// Pages faulted in from disk.
+    /// Pages faulted in from disk (demand + readahead).
     pub page_faults: u64,
+    /// Pages faulted on the *demand* path — the consumer had to wait for
+    /// the disk. With readahead keeping up this drops to zero; it is the
+    /// authoritative "did access stall compute?" counter.
+    pub demand_faults: u64,
     /// Page touches served from the resident pool.
     pub page_hits: u64,
+    /// Hits on pages that were brought in by the readahead thread (each
+    /// prefetched page is credited at most once, on its first demand
+    /// touch) — the authoritative "did readahead do useful work?" counter.
+    pub readahead_hits: u64,
     /// Bytes actually delivered to callers (the useful payload).
     pub bytes_requested: u64,
-    /// Wall seconds spent inside read syscalls.
+    /// Wall seconds spent inside read syscalls (all threads).
     pub read_s: f64,
+    /// Wall seconds the *demand path* (the thread assembling batches)
+    /// stalled on the disk: demand-fault read time plus time spent waiting
+    /// for a batch's readahead to complete. Readahead-thread read time is
+    /// excluded. Note: under the pipelined driver the demand path is the
+    /// prefetch reader thread, whose stalls may themselves be hidden from
+    /// the solver by the channel depth — `stall_s` is an upper bound on
+    /// solver-visible stall, and exact for the synchronous driver.
+    pub stall_s: f64,
 }
 
 impl IoStats {
@@ -79,9 +137,12 @@ impl IoStats {
             bytes_read: self.bytes_read - base.bytes_read,
             read_calls: self.read_calls - base.read_calls,
             page_faults: self.page_faults - base.page_faults,
+            demand_faults: self.demand_faults - base.demand_faults,
             page_hits: self.page_hits - base.page_hits,
+            readahead_hits: self.readahead_hits - base.readahead_hits,
             bytes_requested: self.bytes_requested - base.bytes_requested,
             read_s: self.read_s - base.read_s,
+            stall_s: self.stall_s - base.stall_s,
         }
     }
 }
@@ -91,9 +152,43 @@ impl std::ops::AddAssign for IoStats {
         self.bytes_read += rhs.bytes_read;
         self.read_calls += rhs.read_calls;
         self.page_faults += rhs.page_faults;
+        self.demand_faults += rhs.demand_faults;
         self.page_hits += rhs.page_hits;
+        self.readahead_hits += rhs.readahead_hits;
         self.bytes_requested += rhs.bytes_requested;
         self.read_s += rhs.read_s;
+        self.stall_s += rhs.stall_s;
+    }
+}
+
+/// Lock-free live counters (nanosecond clocks stored as integers so the
+/// whole block is atomic); snapshotted into [`IoStats`] on demand.
+#[derive(Debug, Default)]
+struct AtomicIoStats {
+    bytes_read: AtomicU64,
+    read_calls: AtomicU64,
+    page_faults: AtomicU64,
+    demand_faults: AtomicU64,
+    page_hits: AtomicU64,
+    readahead_hits: AtomicU64,
+    bytes_requested: AtomicU64,
+    read_ns: AtomicU64,
+    stall_ns: AtomicU64,
+}
+
+impl AtomicIoStats {
+    fn snapshot(&self) -> IoStats {
+        IoStats {
+            bytes_read: self.bytes_read.load(Ordering::Relaxed),
+            read_calls: self.read_calls.load(Ordering::Relaxed),
+            page_faults: self.page_faults.load(Ordering::Relaxed),
+            demand_faults: self.demand_faults.load(Ordering::Relaxed),
+            page_hits: self.page_hits.load(Ordering::Relaxed),
+            readahead_hits: self.readahead_hits.load(Ordering::Relaxed),
+            bytes_requested: self.bytes_requested.load(Ordering::Relaxed),
+            read_s: self.read_ns.load(Ordering::Relaxed) as f64 * 1e-9,
+            stall_s: self.stall_ns.load(Ordering::Relaxed) as f64 * 1e-9,
+        }
     }
 }
 
@@ -113,6 +208,28 @@ impl PageLayout {
         match self {
             PageLayout::DenseF32 => 4,
             PageLayout::IdxValPairs => 8,
+        }
+    }
+
+    fn decode(self, raw: &[u8]) -> Page {
+        match self {
+            PageLayout::DenseF32 => {
+                let mut x = Vec::with_capacity(raw.len() / 4);
+                for ch in raw.chunks_exact(4) {
+                    x.push(f32::from_le_bytes([ch[0], ch[1], ch[2], ch[3]]));
+                }
+                Page::Dense(x)
+            }
+            PageLayout::IdxValPairs => {
+                let n = raw.len() / 8;
+                let mut values = Vec::with_capacity(n);
+                let mut col_idx = Vec::with_capacity(n);
+                for ch in raw.chunks_exact(8) {
+                    col_idx.push(u32::from_le_bytes([ch[0], ch[1], ch[2], ch[3]]));
+                    values.push(f32::from_le_bytes([ch[4], ch[5], ch[6], ch[7]]));
+                }
+                Page::Pairs { values, col_idx }
+            }
         }
     }
 }
@@ -163,6 +280,51 @@ impl Page {
     }
 }
 
+/// One resident page plus its readahead provenance (so the first demand
+/// touch of a prefetched page can be credited to `readahead_hits`).
+#[derive(Debug)]
+struct Entry {
+    page: Arc<Page>,
+    prefetched: bool,
+}
+
+/// One lock's worth of the resident pool: the pages whose id ≡ shard index
+/// (mod shard count), with their own LRU list and capacity slice.
+#[derive(Debug)]
+struct Shard {
+    resident: HashMap<u64, Entry>,
+    lru: LruCache,
+}
+
+/// Lock a mutex, recovering the guard from a poisoned lock: the shard maps
+/// and the readahead state are caches/counters whose invariants hold after
+/// any partial update, so a panic on another thread must degrade to (at
+/// worst) a stale cache entry — never cascade panics across the data plane.
+fn lock_recovering<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|poisoned| poisoned.into_inner())
+}
+
+#[derive(Debug)]
+struct StoreInner {
+    file: Mutex<File>,
+    path: String,
+    layout: PageLayout,
+    region_base: u64,
+    n_elems: u64,
+    elems_per_page: u64,
+    page_bytes: u64,
+    budget_bytes: u64,
+    /// Total pool capacity in pages (sum of the shard capacity slices).
+    capacity_pages: usize,
+    /// Exclusive upper bound for decoded `col_idx` values (pairs layout
+    /// only; `u32::MAX` = unchecked). Catches payload corruption at fault
+    /// time with a typed error instead of an out-of-bounds panic deep in
+    /// a math kernel.
+    idx_bound: AtomicU32,
+    shards: Vec<Mutex<Shard>>,
+    stats: AtomicIoStats,
+}
+
 /// Fixed-size paged view over one file region, with a byte-budgeted
 /// resident pool, LRU eviction and lifetime [`IoStats`].
 ///
@@ -171,26 +333,13 @@ impl Page {
 /// `region_base`. Page `p` covers elements
 /// `[p * elems_per_page, (p+1) * elems_per_page)` (the last page may be
 /// short).
-#[derive(Debug)]
+///
+/// Cloning a `PageStore` clones a *handle*: all clones share the resident
+/// pool, the file and the statistics (see the module docs for the
+/// concurrency model).
+#[derive(Debug, Clone)]
 pub struct PageStore {
-    file: File,
-    path: String,
-    layout: PageLayout,
-    region_base: u64,
-    n_elems: u64,
-    elems_per_page: u64,
-    page_bytes: u64,
-    budget_bytes: u64,
-    resident: HashMap<u64, Arc<Page>>,
-    lru: LruCache,
-    raw: Vec<u8>,
-    /// Exclusive upper bound for decoded `col_idx` values (pairs layout
-    /// only; `u32::MAX` = unchecked). Catches payload corruption at fault
-    /// time with a typed error instead of an out-of-bounds panic deep in
-    /// a math kernel.
-    idx_bound: u32,
-    /// Lifetime I/O counters.
-    pub stats: IoStats,
+    inner: Arc<StoreInner>,
 }
 
 impl PageStore {
@@ -215,20 +364,30 @@ impl PageStore {
             )));
         }
         let capacity_pages = (budget_bytes / page_bytes) as usize;
+        let n_shards = capacity_pages.clamp(1, MAX_SHARDS);
+        let shards = (0..n_shards)
+            .map(|i| {
+                // spread the page capacity over the shards (remainder to
+                // the low shards), so total residency == capacity_pages
+                let cap = capacity_pages / n_shards + usize::from(i < capacity_pages % n_shards);
+                Mutex::new(Shard { resident: HashMap::new(), lru: LruCache::new(cap) })
+            })
+            .collect();
         Ok(PageStore {
-            file,
-            path: path.as_ref().display().to_string(),
-            layout,
-            region_base,
-            n_elems,
-            elems_per_page: page_bytes / layout.elem_bytes(),
-            page_bytes,
-            budget_bytes,
-            resident: HashMap::new(),
-            lru: LruCache::new(capacity_pages),
-            raw: Vec::new(),
-            idx_bound: u32::MAX,
-            stats: IoStats::default(),
+            inner: Arc::new(StoreInner {
+                file: Mutex::new(file),
+                path: path.as_ref().display().to_string(),
+                layout,
+                region_base,
+                n_elems,
+                elems_per_page: page_bytes / layout.elem_bytes(),
+                page_bytes,
+                budget_bytes,
+                capacity_pages,
+                idx_bound: AtomicU32::new(u32::MAX),
+                shards,
+                stats: AtomicIoStats::default(),
+            }),
         })
     }
 
@@ -236,80 +395,124 @@ impl PageStore {
     /// now on — corrupt payload pairs then fault with [`Error::Corrupt`]
     /// carrying the offending byte offset, mirroring the typed header
     /// checks.
-    pub fn set_idx_bound(&mut self, bound: u32) {
-        self.idx_bound = bound;
+    pub fn set_idx_bound(&self, bound: u32) {
+        self.inner.idx_bound.store(bound, Ordering::Relaxed);
     }
 
     /// Total pages covering the region.
     pub fn n_pages(&self) -> u64 {
-        self.n_elems.div_ceil(self.elems_per_page)
+        self.inner.n_elems.div_ceil(self.inner.elems_per_page)
     }
 
     /// Elements in the region.
     pub fn n_elems(&self) -> u64 {
-        self.n_elems
+        self.inner.n_elems
     }
 
     /// Configured page size in bytes.
     pub fn page_bytes(&self) -> u64 {
-        self.page_bytes
+        self.inner.page_bytes
     }
 
     /// Configured resident-pool budget in bytes.
     pub fn budget_bytes(&self) -> u64 {
-        self.budget_bytes
+        self.inner.budget_bytes
     }
 
-    /// Pages currently resident.
+    /// Pool shard count (1 ≤ shards ≤ [`MAX_SHARDS`], never more than the
+    /// pool's page capacity).
+    pub fn n_shards(&self) -> usize {
+        self.inner.shards.len()
+    }
+
+    /// Pages currently resident (summed over the shards).
     pub fn resident_pages(&self) -> usize {
-        self.resident.len()
+        self.inner
+            .shards
+            .iter()
+            .map(|s| lock_recovering(s).resident.len())
+            .sum()
+    }
+
+    /// Snapshot of the lifetime I/O counters.
+    pub fn stats(&self) -> IoStats {
+        self.inner.stats.snapshot()
     }
 
     /// Resident-pool hit rate over the store's lifetime.
     pub fn hit_rate(&self) -> f64 {
-        let total = self.stats.page_hits + self.stats.page_faults;
+        let s = self.stats();
+        let total = s.page_hits + s.page_faults;
         if total == 0 {
             0.0
         } else {
-            self.stats.page_hits as f64 / total as f64
+            s.page_hits as f64 / total as f64
         }
+    }
+
+    /// Pages the non-empty element range `[elem_lo, elem_hi)` spans (0 for
+    /// an empty range) — what the readahead window accounting is measured
+    /// in.
+    pub fn pages_spanned(&self, elem_lo: u64, elem_hi: u64) -> u64 {
+        if elem_hi <= elem_lo {
+            0
+        } else {
+            (elem_hi - 1) / self.inner.elems_per_page - elem_lo / self.inner.elems_per_page + 1
+        }
+    }
+
+    fn shard(&self, page_id: u64) -> &Mutex<Shard> {
+        &self.inner.shards[(page_id % self.inner.shards.len() as u64) as usize]
     }
 
     /// Fault pages `[lo, hi]` (inclusive, consecutive) with **one** seek +
     /// read, decode them, and return them in page order. Does not insert
-    /// into the pool — the caller decides residency.
-    fn read_run(&mut self, lo: u64, hi: u64) -> Result<Vec<Arc<Page>>> {
-        let first_elem = lo * self.elems_per_page;
-        let last_elem = ((hi + 1) * self.elems_per_page).min(self.n_elems);
-        let byte_lo = self.region_base + first_elem * self.layout.elem_bytes();
-        let nbytes = (last_elem - first_elem) * self.layout.elem_bytes();
-        self.raw.resize(nbytes as usize, 0);
-        let sw = std::time::Instant::now();
-        self.file.seek(SeekFrom::Start(byte_lo))?;
-        self.file.read_exact(&mut self.raw).map_err(|e| Error::Corrupt {
-            path: self.path.clone(),
-            offset: byte_lo,
-            msg: format!("short read of {nbytes} bytes: {e}"),
-        })?;
-        self.stats.read_s += sw.elapsed().as_secs_f64();
-        self.stats.read_calls += 1;
-        self.stats.bytes_read += nbytes;
-        self.stats.page_faults += hi - lo + 1;
+    /// into the pool — the caller decides residency. `demand` charges the
+    /// fault to the consumer-visible counters (`demand_faults`/`stall_s`);
+    /// the readahead thread passes `false`.
+    fn read_run(&self, lo: u64, hi: u64, demand: bool) -> Result<Vec<Arc<Page>>> {
+        let inner = &*self.inner;
+        let first_elem = lo * inner.elems_per_page;
+        let last_elem = ((hi + 1) * inner.elems_per_page).min(inner.n_elems);
+        let byte_lo = inner.region_base + first_elem * inner.layout.elem_bytes();
+        let nbytes = (last_elem - first_elem) * inner.layout.elem_bytes();
+        let mut raw = vec![0u8; nbytes as usize];
+        let elapsed = {
+            let mut file = lock_recovering(&inner.file);
+            let sw = std::time::Instant::now();
+            file.seek(SeekFrom::Start(byte_lo))?;
+            file.read_exact(&mut raw).map_err(|e| Error::Corrupt {
+                path: inner.path.clone(),
+                offset: byte_lo,
+                msg: format!("short read of {nbytes} bytes: {e}"),
+            })?;
+            sw.elapsed()
+        };
+        let ns = elapsed.as_nanos() as u64;
+        inner.stats.read_ns.fetch_add(ns, Ordering::Relaxed);
+        inner.stats.read_calls.fetch_add(1, Ordering::Relaxed);
+        inner.stats.bytes_read.fetch_add(nbytes, Ordering::Relaxed);
+        inner.stats.page_faults.fetch_add(hi - lo + 1, Ordering::Relaxed);
+        if demand {
+            inner.stats.demand_faults.fetch_add(hi - lo + 1, Ordering::Relaxed);
+            inner.stats.stall_ns.fetch_add(ns, Ordering::Relaxed);
+        }
+        let idx_bound = inner.idx_bound.load(Ordering::Relaxed);
         let mut out = Vec::with_capacity((hi - lo + 1) as usize);
         for id in lo..=hi {
-            let a = ((id * self.elems_per_page - first_elem) * self.layout.elem_bytes()) as usize;
-            let b = ((((id + 1) * self.elems_per_page).min(self.n_elems) - first_elem)
-                * self.layout.elem_bytes()) as usize;
-            let page = self.decode(&self.raw[a..b]);
+            let a = ((id * inner.elems_per_page - first_elem) * inner.layout.elem_bytes()) as usize;
+            let b = ((((id + 1) * inner.elems_per_page).min(inner.n_elems) - first_elem)
+                * inner.layout.elem_bytes()) as usize;
+            let page = inner.layout.decode(&raw[a..b]);
             if let Page::Pairs { col_idx, .. } = &page {
-                if let Some(k) = col_idx.iter().position(|&c| c >= self.idx_bound) {
-                    let elem = id * self.elems_per_page + k as u64;
+                if let Some(k) = col_idx.iter().position(|&c| c >= idx_bound) {
+                    let elem = id * inner.elems_per_page + k as u64;
                     return Err(Error::Corrupt {
-                        path: self.path.clone(),
-                        offset: self.region_base + elem * self.layout.elem_bytes(),
+                        path: inner.path.clone(),
+                        offset: inner.region_base + elem * inner.layout.elem_bytes(),
                         msg: format!(
-                            "col_idx {} >= column bound {} at element {elem}",
-                            col_idx[k], self.idx_bound
+                            "col_idx {} >= column bound {idx_bound} at element {elem}",
+                            col_idx[k]
                         ),
                     });
                 }
@@ -319,55 +522,52 @@ impl PageStore {
         Ok(out)
     }
 
-    fn decode(&self, raw: &[u8]) -> Page {
-        match self.layout {
-            PageLayout::DenseF32 => {
-                let mut x = Vec::with_capacity(raw.len() / 4);
-                for ch in raw.chunks_exact(4) {
-                    x.push(f32::from_le_bytes([ch[0], ch[1], ch[2], ch[3]]));
-                }
-                Page::Dense(x)
-            }
-            PageLayout::IdxValPairs => {
-                let n = raw.len() / 8;
-                let mut values = Vec::with_capacity(n);
-                let mut col_idx = Vec::with_capacity(n);
-                for ch in raw.chunks_exact(8) {
-                    col_idx.push(u32::from_le_bytes([ch[0], ch[1], ch[2], ch[3]]));
-                    values.push(f32::from_le_bytes([ch[4], ch[5], ch[6], ch[7]]));
-                }
-                Page::Pairs { values, col_idx }
-            }
-        }
-    }
-
-    /// Insert a freshly faulted page into the pool, evicting per budget.
-    /// With a zero-capacity pool (budget below one page) nothing is kept.
-    fn install(&mut self, id: u64, page: Arc<Page>) {
-        if self.lru.capacity() == 0 {
+    /// Insert a freshly faulted page into its shard, evicting per the
+    /// shard's capacity slice. With a zero-capacity pool (budget below one
+    /// page) nothing is kept.
+    fn install(&self, id: u64, page: Arc<Page>, prefetched: bool) {
+        let mut shard = lock_recovering(self.shard(id));
+        if shard.lru.capacity() == 0 {
             return;
         }
-        match self.lru.touch_evicting(id) {
+        match shard.lru.touch_evicting(id) {
             Touch::Hit => {
-                // already tracked (possible when a caller re-faults a page
-                // it raced out of `resident`); refresh the buffer
-                self.resident.insert(id, page);
+                // already tracked (a concurrent faulter won the race, or a
+                // caller re-faulted a page it raced out of the pool);
+                // refresh the buffer and provenance
+                shard.resident.insert(id, Entry { page, prefetched });
             }
             Touch::Miss { evicted } => {
                 if let Some(ev) = evicted {
-                    self.resident.remove(&ev);
+                    shard.resident.remove(&ev);
                 }
-                self.resident.insert(id, page);
+                shard.resident.insert(id, Entry { page, prefetched });
             }
         }
     }
 
-    /// Touch a resident page: promote + count a hit and return its buffer.
-    fn touch_resident(&mut self, id: u64) -> Option<Arc<Page>> {
-        let page = self.resident.get(&id).map(Arc::clone)?;
-        let _ = self.lru.touch_evicting(id);
-        self.stats.page_hits += 1;
+    /// Touch a resident page on the demand path: promote, count a hit
+    /// (crediting `readahead_hits` on the first touch of a prefetched
+    /// page) and return its buffer.
+    fn touch_resident(&self, id: u64) -> Option<Arc<Page>> {
+        let mut shard = lock_recovering(self.shard(id));
+        let shard = &mut *shard;
+        let entry = shard.resident.get_mut(&id)?;
+        let page = Arc::clone(&entry.page);
+        if entry.prefetched {
+            entry.prefetched = false;
+            self.inner.stats.readahead_hits.fetch_add(1, Ordering::Relaxed);
+        }
+        let _ = shard.lru.touch_evicting(id);
+        self.inner.stats.page_hits.fetch_add(1, Ordering::Relaxed);
         Some(page)
+    }
+
+    /// Residency probe for the readahead thread: no LRU promotion, no hit
+    /// counting, no provenance change — probing upcoming pages must not
+    /// distort the demand path's statistics or eviction order.
+    fn resident_quiet(&self, id: u64) -> bool {
+        lock_recovering(self.shard(id)).resident.contains_key(&id)
     }
 
     /// If the non-empty element range `[elem_lo, elem_hi)` lies inside a
@@ -375,27 +575,31 @@ impl PageStore {
     /// range's offset inside the page — the zero-copy borrow path for
     /// batches that land in one page. Returns `None` when the range is
     /// empty or spans pages.
-    pub fn pin_range(&mut self, elem_lo: u64, elem_hi: u64) -> Result<Option<(Arc<Page>, usize)>> {
+    pub fn pin_range(&self, elem_lo: u64, elem_hi: u64) -> Result<Option<(Arc<Page>, usize)>> {
         if elem_hi <= elem_lo {
             return Ok(None);
         }
-        debug_assert!(elem_hi <= self.n_elems);
-        let p_lo = elem_lo / self.elems_per_page;
-        let p_hi = (elem_hi - 1) / self.elems_per_page;
+        debug_assert!(elem_hi <= self.inner.n_elems);
+        let epp = self.inner.elems_per_page;
+        let p_lo = elem_lo / epp;
+        let p_hi = (elem_hi - 1) / epp;
         if p_lo != p_hi {
             return Ok(None);
         }
-        self.stats.bytes_requested += (elem_hi - elem_lo) * self.layout.elem_bytes();
+        self.inner
+            .stats
+            .bytes_requested
+            .fetch_add((elem_hi - elem_lo) * self.inner.layout.elem_bytes(), Ordering::Relaxed);
         let page = match self.touch_resident(p_lo) {
             Some(p) => p,
             None => {
-                let mut run = self.read_run(p_lo, p_lo)?;
+                let mut run = self.read_run(p_lo, p_lo, true)?;
                 let p = run.pop().expect("one page");
-                self.install(p_lo, Arc::clone(&p));
+                self.install(p_lo, Arc::clone(&p), false);
                 p
             }
         };
-        Ok(Some((page, (elem_lo - p_lo * self.elems_per_page) as usize)))
+        Ok(Some((page, (elem_lo - p_lo * epp) as usize)))
     }
 
     /// Visit the element range `[elem_lo, elem_hi)` page by page, in
@@ -405,16 +609,19 @@ impl PageStore {
     /// exactly how contiguous CS/SS selections earn their cost advantage on
     /// real files. Pages are refcounted, so a range larger than the budget
     /// is still visited correctly while the pool churns underneath.
-    pub fn with_range<F>(&mut self, elem_lo: u64, elem_hi: u64, mut f: F) -> Result<()>
+    pub fn with_range<F>(&self, elem_lo: u64, elem_hi: u64, mut f: F) -> Result<()>
     where
         F: FnMut(&Page, usize, usize),
     {
         if elem_hi <= elem_lo {
             return Ok(());
         }
-        debug_assert!(elem_hi <= self.n_elems, "range past region end");
-        self.stats.bytes_requested += (elem_hi - elem_lo) * self.layout.elem_bytes();
-        let epp = self.elems_per_page;
+        debug_assert!(elem_hi <= self.inner.n_elems, "range past region end");
+        self.inner
+            .stats
+            .bytes_requested
+            .fetch_add((elem_hi - elem_lo) * self.inner.layout.elem_bytes(), Ordering::Relaxed);
+        let epp = self.inner.elems_per_page;
         let p_lo = elem_lo / epp;
         let p_hi = (elem_hi - 1) / epp;
         // pass 1: classify, promoting hits and collecting their buffers
@@ -435,10 +642,10 @@ impl PageStore {
                 j += 1;
             }
             let run_hi = misses[j];
-            let faulted = self.read_run(run_lo, run_hi)?;
+            let faulted = self.read_run(run_lo, run_hi, true)?;
             for (k, page) in faulted.into_iter().enumerate() {
                 let id = run_lo + k as u64;
-                self.install(id, Arc::clone(&page));
+                self.install(id, Arc::clone(&page), false);
                 pages[(id - p_lo) as usize] = Some(page);
             }
             i = j + 1;
@@ -447,7 +654,7 @@ impl PageStore {
         for id in p_lo..=p_hi {
             let page = pages[(id - p_lo) as usize].as_ref().expect("page resolved");
             let first = id * epp;
-            let last = (first + epp).min(self.n_elems);
+            let last = (first + epp).min(self.inner.n_elems);
             let lo = elem_lo.max(first) - first;
             let hi = elem_hi.min(last) - first;
             f(page, lo as usize, hi as usize);
@@ -455,11 +662,289 @@ impl PageStore {
         Ok(())
     }
 
+    /// Fault every non-resident page of `[elem_lo, elem_hi)` into the pool
+    /// (maximal-run reads, marked as prefetched) *without* delivering any
+    /// bytes — the readahead thread's entry point. Returns the number of
+    /// pages actually faulted. Counts toward `page_faults`/`read_s` but
+    /// never `demand_faults`, `page_hits`, `bytes_requested` or `stall_s`.
+    ///
+    /// The prefault is capped at the pool's page capacity: reading pages
+    /// the pool cannot retain (a range larger than the budget, or a
+    /// zero-capacity pool) would be guaranteed double I/O — the demand
+    /// path covers the tail itself.
+    pub fn prefault_range(&self, elem_lo: u64, elem_hi: u64) -> Result<u64> {
+        if elem_hi <= elem_lo || self.inner.capacity_pages == 0 {
+            return Ok(0);
+        }
+        debug_assert!(elem_hi <= self.inner.n_elems, "range past region end");
+        let epp = self.inner.elems_per_page;
+        let p_lo = elem_lo / epp;
+        let p_hi = (elem_hi - 1) / epp;
+        let mut misses: Vec<u64> = Vec::new();
+        for id in p_lo..=p_hi {
+            if !self.resident_quiet(id) {
+                misses.push(id);
+            }
+        }
+        misses.truncate(self.inner.capacity_pages);
+        let faulted_pages = misses.len() as u64;
+        let mut i = 0;
+        while i < misses.len() {
+            let run_lo = misses[i];
+            let mut j = i;
+            while j + 1 < misses.len() && misses[j + 1] == misses[j] + 1 {
+                j += 1;
+            }
+            let run_hi = misses[j];
+            let faulted = self.read_run(run_lo, run_hi, false)?;
+            for (k, page) in faulted.into_iter().enumerate() {
+                self.install(run_lo + k as u64, page, true);
+            }
+            i = j + 1;
+        }
+        Ok(faulted_pages)
+    }
+
+    fn add_stall(&self, d: Duration) {
+        self.inner
+            .stats
+            .stall_ns
+            .fetch_add(d.as_nanos() as u64, Ordering::Relaxed);
+    }
+
     /// Drop every resident page (counters preserved) — e.g. to cold-start
     /// an experiment arm.
-    pub fn drop_pool(&mut self) {
-        self.resident.clear();
-        self.lru.clear();
+    pub fn drop_pool(&self) {
+        for shard in &self.inner.shards {
+            let mut s = lock_recovering(shard);
+            s.resident.clear();
+            s.lru.clear();
+        }
+    }
+}
+
+/// One published unit of readahead work: the element runs one mini-batch
+/// will touch, in access order (a contiguous selection is one run; a
+/// scattered selection is one run per row).
+pub type ElemRuns = Vec<(u64, u64)>;
+
+#[derive(Debug)]
+struct RaState {
+    /// Batches fully prefaulted so far (monotone; batch `j` is ready once
+    /// `completed > j`).
+    completed: u64,
+    /// Batches the demand path has finished assembling.
+    consumed_batches: u64,
+    /// Page-window accounting: pages' worth of published batches consumed…
+    consumed_pages: u64,
+    /// …and prefaulted (pages spanned, not distinct faults — conservative).
+    prefaulted_pages: u64,
+    /// Consumer asked the thread to exit.
+    shutdown: bool,
+    /// The readahead thread has exited (on shutdown, channel close, or
+    /// panic) — waiters must stop blocking and self-serve.
+    dead: bool,
+    /// First readahead-side I/O error, informational: the demand path hits
+    /// the same bytes and surfaces the same error typed.
+    failed: Option<String>,
+}
+
+#[derive(Debug)]
+struct RaShared {
+    state: Mutex<RaState>,
+    /// Signals `completed`/`dead` changes to the waiting consumer.
+    completed_cv: Condvar,
+    /// Signals consumption progress (window room) to the readahead thread.
+    room_cv: Condvar,
+    window_pages: u64,
+    /// Lock-free mirror of `completed` for live observation in tests and
+    /// monitors (same pattern as the prefetcher's stall counter).
+    completed_atomic: AtomicU64,
+}
+
+/// Handle to the asynchronous page-readahead thread (see the module docs).
+///
+/// Protocol, per mini-batch, from a single consumer thread:
+/// 1. [`publish`](Readahead::publish) the batch's element runs (any number
+///    of batches may be published ahead; the thread paces itself to the
+///    page window);
+/// 2. before assembling batch `j`, [`wait_ready`](Readahead::wait_ready)`(j)`;
+/// 3. after assembling it, [`mark_consumed`](Readahead::mark_consumed) with
+///    the batch's page count, which opens window room for the thread.
+///
+/// Dropping the handle shuts the thread down and joins it. If the thread
+/// dies (I/O error after I/O error, or a panic), waiters unblock and the
+/// demand path simply faults for itself — readahead is an overlap
+/// optimization, never a correctness dependency.
+#[derive(Debug)]
+pub struct Readahead {
+    store: PageStore,
+    shared: Arc<RaShared>,
+    tx: Option<Sender<ElemRuns>>,
+    handle: Option<JoinHandle<()>>,
+    published: u64,
+}
+
+impl Readahead {
+    /// Spawn the readahead thread over (a clone of) `store`, allowed to run
+    /// at most `window_pages` pages ahead of consumption (clamped to ≥ 1;
+    /// the batch the consumer is waiting for is always allowed regardless
+    /// of the window, so the pipeline can never starve).
+    pub fn spawn(store: PageStore, window_pages: u64) -> Self {
+        let shared = Arc::new(RaShared {
+            state: Mutex::new(RaState {
+                completed: 0,
+                consumed_batches: 0,
+                consumed_pages: 0,
+                prefaulted_pages: 0,
+                shutdown: false,
+                dead: false,
+                failed: None,
+            }),
+            completed_cv: Condvar::new(),
+            room_cv: Condvar::new(),
+            window_pages: window_pages.max(1),
+            completed_atomic: AtomicU64::new(0),
+        });
+        let (tx, rx) = channel::<ElemRuns>();
+        let thread_store = store.clone();
+        let thread_shared = Arc::clone(&shared);
+        let handle = std::thread::Builder::new()
+            .name("samplex-readahead".into())
+            .spawn(move || readahead_loop(thread_store, thread_shared, rx))
+            .expect("spawn readahead thread");
+        Readahead {
+            store,
+            shared,
+            tx: Some(tx),
+            handle: Some(handle),
+            published: 0,
+        }
+    }
+
+    /// Queue one batch's element runs; returns the batch's sequence number
+    /// (0-based, monotone across epochs) for [`wait_ready`].
+    ///
+    /// [`wait_ready`]: Readahead::wait_ready
+    pub fn publish(&mut self, runs: ElemRuns) -> u64 {
+        let seq = self.published;
+        self.published += 1;
+        if let Some(tx) = &self.tx {
+            // a dead thread just means the demand path self-serves
+            let _ = tx.send(runs);
+        }
+        seq
+    }
+
+    /// Block until batch `batch_seq` has been prefaulted (or the thread is
+    /// gone). The wait time is charged to [`IoStats::stall_s`] — it is
+    /// access time the consumer could not hide.
+    pub fn wait_ready(&self, batch_seq: u64) {
+        if self.shared.completed_atomic.load(Ordering::Acquire) > batch_seq {
+            return;
+        }
+        let sw = std::time::Instant::now();
+        let mut st = lock_recovering(&self.shared.state);
+        while st.completed <= batch_seq && !st.dead {
+            let (guard, _) = self
+                .shared
+                .completed_cv
+                .wait_timeout(st, Duration::from_millis(100))
+                .unwrap_or_else(|poisoned| poisoned.into_inner());
+            st = guard;
+        }
+        drop(st);
+        self.store.add_stall(sw.elapsed());
+    }
+
+    /// Record that one published batch (spanning `pages` pages) has been
+    /// assembled, opening window room for the thread to run further ahead.
+    pub fn mark_consumed(&self, pages: u64) {
+        let mut st = lock_recovering(&self.shared.state);
+        st.consumed_batches += 1;
+        st.consumed_pages += pages;
+        drop(st);
+        self.shared.room_cv.notify_all();
+    }
+
+    /// Batches fully prefaulted so far (live, lock-free — the observation
+    /// hook for deterministic tests).
+    pub fn completed_batches(&self) -> u64 {
+        self.shared.completed_atomic.load(Ordering::Acquire)
+    }
+
+    /// First readahead-side error, if any (informational; the demand path
+    /// reports the authoritative typed error).
+    pub fn failed(&self) -> Option<String> {
+        lock_recovering(&self.shared.state).failed.clone()
+    }
+}
+
+impl Drop for Readahead {
+    fn drop(&mut self) {
+        {
+            let mut st = lock_recovering(&self.shared.state);
+            st.shutdown = true;
+        }
+        self.shared.room_cv.notify_all();
+        self.shared.completed_cv.notify_all();
+        drop(self.tx.take());
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn readahead_loop(store: PageStore, shared: Arc<RaShared>, rx: Receiver<ElemRuns>) {
+    /// Marks the shared state dead on every exit path — including a panic
+    /// unwind — so a consumer blocked in `wait_ready` always unblocks.
+    struct DeadGuard(Arc<RaShared>);
+    impl Drop for DeadGuard {
+        fn drop(&mut self) {
+            let mut st = lock_recovering(&self.0.state);
+            st.dead = true;
+            drop(st);
+            self.0.completed_cv.notify_all();
+        }
+    }
+    let _guard = DeadGuard(Arc::clone(&shared));
+    while let Ok(runs) = rx.recv() {
+        let pages: u64 = runs
+            .iter()
+            .map(|&(lo, hi)| store.pages_spanned(lo, hi))
+            .sum();
+        {
+            // pace to the window — but the batch the consumer is waiting
+            // for (completed == consumed) is always allowed through
+            let mut st = lock_recovering(&shared.state);
+            while !st.shutdown
+                && st.completed > st.consumed_batches
+                && st.prefaulted_pages + pages > st.consumed_pages + shared.window_pages
+            {
+                st = shared
+                    .room_cv
+                    .wait(st)
+                    .unwrap_or_else(|poisoned| poisoned.into_inner());
+            }
+            if st.shutdown {
+                return;
+            }
+        }
+        for &(lo, hi) in &runs {
+            if let Err(e) = store.prefault_range(lo, hi) {
+                let mut st = lock_recovering(&shared.state);
+                if st.failed.is_none() {
+                    st.failed = Some(e.to_string());
+                }
+                break;
+            }
+        }
+        let mut st = lock_recovering(&shared.state);
+        st.prefaulted_pages += pages;
+        st.completed += 1;
+        shared.completed_atomic.store(st.completed, Ordering::Release);
+        drop(st);
+        shared.completed_cv.notify_all();
     }
 }
 
@@ -511,88 +996,93 @@ mod tests {
     #[test]
     fn contiguous_range_is_one_sequential_read() {
         // 64 elems, 4 elems per page (16 B), budget for all 16 pages
-        let (p, mut s) = store(24, 64, 16, 16 * 16);
+        let (p, s) = store(24, 64, 16, 16 * 16);
         let mut got = Vec::new();
         s.with_range(3, 23, |pg, a, b| got.extend_from_slice(&pg.dense()[a..b]))
             .unwrap();
         let want: Vec<f32> = (3..23).map(|v| v as f32).collect();
         assert_eq!(got, want);
-        assert_eq!(s.stats.read_calls, 1, "cold contiguous range = one syscall");
-        assert_eq!(s.stats.page_faults, 6); // pages 0..=5
-        assert_eq!(s.stats.bytes_read, 6 * 16);
-        assert_eq!(s.stats.bytes_requested, 20 * 4);
-        assert!(s.stats.read_amplification() > 1.0);
+        let io = s.stats();
+        assert_eq!(io.read_calls, 1, "cold contiguous range = one syscall");
+        assert_eq!(io.page_faults, 6); // pages 0..=5
+        assert_eq!(io.demand_faults, 6, "no readahead ran: all faults are demand");
+        assert_eq!(io.bytes_read, 6 * 16);
+        assert_eq!(io.bytes_requested, 20 * 4);
+        assert!(io.read_amplification() > 1.0);
         std::fs::remove_file(p).ok();
     }
 
     #[test]
     fn resident_pages_hit_without_io() {
-        let (p, mut s) = store(0, 64, 16, 16 * 16);
+        let (p, s) = store(0, 64, 16, 16 * 16);
         let mut sink = 0f32;
         s.with_range(0, 16, |pg, a, b| sink += pg.dense()[a..b].iter().sum::<f32>())
             .unwrap();
-        let calls = s.stats.read_calls;
+        let calls = s.stats().read_calls;
         s.with_range(0, 16, |pg, a, b| sink += pg.dense()[a..b].iter().sum::<f32>())
             .unwrap();
-        assert_eq!(s.stats.read_calls, calls, "warm range must not touch the file");
-        assert_eq!(s.stats.page_hits, 4);
+        assert_eq!(s.stats().read_calls, calls, "warm range must not touch the file");
+        assert_eq!(s.stats().page_hits, 4);
+        assert_eq!(s.stats().readahead_hits, 0, "no prefetched pages involved");
         assert!(sink > 0.0);
         std::fs::remove_file(p).ok();
     }
 
     #[test]
     fn partial_residency_splits_into_runs() {
-        let (p, mut s) = store(0, 64, 16, 16 * 16);
+        let (p, s) = store(0, 64, 16, 16 * 16);
         // warm pages 2..=3 (elements 8..16)
         s.with_range(8, 16, |_, _, _| {}).unwrap();
-        assert_eq!(s.stats.read_calls, 1);
+        assert_eq!(s.stats().read_calls, 1);
         // fetch elements 0..32 = pages 0..=7; 2,3 hot -> runs (0,1), (4..7)
         s.with_range(0, 32, |_, _, _| {}).unwrap();
-        assert_eq!(s.stats.read_calls, 3);
-        assert_eq!(s.stats.page_hits, 2);
-        assert_eq!(s.stats.page_faults, 2 + 6);
+        assert_eq!(s.stats().read_calls, 3);
+        assert_eq!(s.stats().page_hits, 2);
+        assert_eq!(s.stats().page_faults, 2 + 6);
         std::fs::remove_file(p).ok();
     }
 
     #[test]
     fn budget_bounds_residency_and_forces_refaults() {
-        // 16 pages, budget = 4 pages: a full sweep keeps only the last 4
-        // resident; the next sweep hits those 4 (ranges classify residency
-        // up front, per batch) and must re-fault the other 12
-        let (p, mut s) = store(0, 64, 16, 4 * 16);
+        // 16 pages, budget = 4 pages (4 shards x 1 page): a full sweep
+        // keeps only the last 4 pages resident (interleaved shards retain
+        // exactly the global-LRU tail on sequential sweeps); the next sweep
+        // hits those 4 (ranges classify residency up front, per batch) and
+        // must re-fault the other 12
+        let (p, s) = store(0, 64, 16, 4 * 16);
         s.with_range(0, 64, |_, _, _| {}).unwrap();
-        assert_eq!(s.stats.page_faults, 16);
+        assert_eq!(s.stats().page_faults, 16);
         assert_eq!(s.resident_pages(), 4);
         assert!(s.resident_pages() as u64 * s.page_bytes() <= s.budget_bytes());
         s.with_range(0, 64, |_, _, _| {}).unwrap();
-        assert_eq!(s.stats.page_faults, 16 + 12, "evicted pages must re-fault");
-        assert_eq!(s.stats.page_hits, 4, "the surviving tail pages hit");
-        assert!(s.stats.bytes_read > s.budget_bytes(), "eviction proof");
+        assert_eq!(s.stats().page_faults, 16 + 12, "evicted pages must re-fault");
+        assert_eq!(s.stats().page_hits, 4, "the surviving tail pages hit");
+        assert!(s.stats().bytes_read > s.budget_bytes(), "eviction proof");
         std::fs::remove_file(p).ok();
     }
 
     #[test]
     fn zero_budget_keeps_nothing_resident() {
-        let (p, mut s) = store(0, 32, 16, 0);
+        let (p, s) = store(0, 32, 16, 0);
         s.with_range(0, 32, |_, _, _| {}).unwrap();
         s.with_range(0, 32, |_, _, _| {}).unwrap();
         assert_eq!(s.resident_pages(), 0);
-        assert_eq!(s.stats.page_hits, 0);
-        assert_eq!(s.stats.page_faults, 16);
+        assert_eq!(s.stats().page_hits, 0);
+        assert_eq!(s.stats().page_faults, 16);
         std::fs::remove_file(p).ok();
     }
 
     #[test]
     fn pin_range_borrows_single_page_and_faults_once() {
-        let (p, mut s) = store(0, 64, 16, 16 * 16);
+        let (p, s) = store(0, 64, 16, 16 * 16);
         let (page, off) = s.pin_range(5, 8).unwrap().expect("fits page 1");
         assert_eq!(off, 1);
         assert_eq!(&page.dense()[off..off + 3], &[5.0, 6.0, 7.0]);
-        assert_eq!(s.stats.page_faults, 1);
+        assert_eq!(s.stats().page_faults, 1);
         // second pin of the same page is a pure hit
         let (_page2, _off2) = s.pin_range(4, 8).unwrap().unwrap();
-        assert_eq!(s.stats.page_faults, 1);
-        assert_eq!(s.stats.page_hits, 1);
+        assert_eq!(s.stats().page_faults, 1);
+        assert_eq!(s.stats().page_hits, 1);
         // spanning ranges and empty ranges decline
         assert!(s.pin_range(3, 8).unwrap().is_none());
         assert!(s.pin_range(5, 5).unwrap().is_none());
@@ -603,7 +1093,7 @@ mod tests {
     fn pinned_page_survives_eviction() {
         // budget = 1 page: pin page 0, then sweep far enough to evict it;
         // the pinned Arc must stay valid and intact
-        let (p, mut s) = store(0, 64, 16, 16);
+        let (p, s) = store(0, 64, 16, 16);
         let (page, off) = s.pin_range(0, 4).unwrap().unwrap();
         s.with_range(16, 64, |_, _, _| {}).unwrap();
         assert!(s.resident_pages() <= 1);
@@ -614,14 +1104,14 @@ mod tests {
     #[test]
     fn ragged_last_page_is_short() {
         // 10 elems, 4 per page -> 3 pages, last holds 2
-        let (p, mut s) = store(0, 10, 16, 1024);
+        let (p, s) = store(0, 10, 16, 1024);
         assert_eq!(s.n_pages(), 3);
         let mut got = Vec::new();
         s.with_range(0, 10, |pg, a, b| got.extend_from_slice(&pg.dense()[a..b]))
             .unwrap();
         assert_eq!(got.len(), 10);
         assert_eq!(got[9], 9.0);
-        assert_eq!(s.stats.bytes_read, 10 * 4, "short last page reads short");
+        assert_eq!(s.stats().bytes_read, 10 * 4, "short last page reads short");
         std::fs::remove_file(p).ok();
     }
 
@@ -630,8 +1120,7 @@ mod tests {
         // claim 32 elements but write only 8: faulting past the end must
         // surface a Corrupt error with the offending offset
         let (p, f) = dense_file(0, 8);
-        let mut s =
-            PageStore::new(f, &p, PageLayout::DenseF32, 0, 32, 16, 1024).unwrap();
+        let s = PageStore::new(f, &p, PageLayout::DenseF32, 0, 32, 16, 1024).unwrap();
         match s.with_range(0, 32, |_, _, _| {}) {
             Err(Error::Corrupt { offset, .. }) => assert!(offset <= 32),
             other => panic!("expected Corrupt, got {other:?}"),
@@ -649,7 +1138,7 @@ mod tests {
         }
         f.flush().unwrap();
         let f = std::fs::File::open(&p).unwrap();
-        let mut s = PageStore::new(f, &p, PageLayout::IdxValPairs, 0, 6, 16, 1024).unwrap();
+        let s = PageStore::new(f, &p, PageLayout::IdxValPairs, 0, 6, 16, 1024).unwrap();
         let mut vals = Vec::new();
         let mut idx = Vec::new();
         s.with_range(1, 5, |pg, a, b| {
@@ -675,7 +1164,7 @@ mod tests {
         }
         f.flush().unwrap();
         let f = std::fs::File::open(&p).unwrap();
-        let mut s = PageStore::new(f, &p, PageLayout::IdxValPairs, 0, 4, 16, 1024).unwrap();
+        let s = PageStore::new(f, &p, PageLayout::IdxValPairs, 0, 4, 16, 1024).unwrap();
         s.set_idx_bound(5);
         match s.with_range(0, 4, |_, _, _| {}) {
             Err(Error::Corrupt { offset, msg, .. }) => {
@@ -689,13 +1178,150 @@ mod tests {
 
     #[test]
     fn drop_pool_forces_cold_refetch() {
-        let (p, mut s) = store(0, 16, 16, 1024);
+        let (p, s) = store(0, 16, 16, 1024);
         s.with_range(0, 16, |_, _, _| {}).unwrap();
-        let faults = s.stats.page_faults;
+        let faults = s.stats().page_faults;
         s.drop_pool();
         assert_eq!(s.resident_pages(), 0);
         s.with_range(0, 16, |_, _, _| {}).unwrap();
-        assert!(s.stats.page_faults > faults);
+        assert!(s.stats().page_faults > faults);
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn shard_count_never_exceeds_capacity() {
+        let (p, s) = store(0, 64, 16, 16 * 16);
+        assert_eq!(s.n_shards(), MAX_SHARDS, "16-page budget spreads over all shards");
+        std::fs::remove_file(&p).ok();
+        let (p, s) = store(0, 64, 16, 3 * 16);
+        assert_eq!(s.n_shards(), 3, "3-page budget cannot use more than 3 shards");
+        std::fs::remove_file(&p).ok();
+        let (p, s) = store(0, 64, 16, 0);
+        assert_eq!(s.n_shards(), 1, "zero-capacity pool degenerates to one shard");
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn clones_share_pool_and_stats_across_threads() {
+        // the shard-locked pool contract: clones on different threads see
+        // one pool (a page one thread faults is a hit for the other) and
+        // one stats block, with no outer mutex
+        let (p, s) = store(0, 256, 16, 64 * 16);
+        let s2 = s.clone();
+        let t = std::thread::spawn(move || {
+            let mut sum = 0f32;
+            s2.with_range(0, 128, |pg, a, b| sum += pg.dense()[a..b].iter().sum::<f32>())
+                .unwrap();
+            sum
+        });
+        let mut sum_main = 0f32;
+        s.with_range(128, 256, |pg, a, b| sum_main += pg.dense()[a..b].iter().sum::<f32>())
+            .unwrap();
+        let sum_thread = t.join().unwrap();
+        let want: f32 = (0..256).map(|v| v as f32).sum();
+        assert_eq!(sum_thread + sum_main, want);
+        // warm re-read from the main thread: pages faulted by the helper
+        // thread must be hits now
+        let calls = s.stats().read_calls;
+        s.with_range(0, 128, |_, _, _| {}).unwrap();
+        assert_eq!(s.stats().read_calls, calls, "cross-thread warm pages must hit");
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn prefault_then_demand_has_zero_demand_faults() {
+        let (p, s) = store(0, 64, 16, 16 * 16);
+        let faulted = s.prefault_range(0, 40).unwrap();
+        assert_eq!(faulted, 10, "pages 0..=9 prefaulted");
+        let io = s.stats();
+        assert_eq!(io.page_faults, 10);
+        assert_eq!(io.demand_faults, 0, "prefaults are not demand faults");
+        assert_eq!(io.bytes_requested, 0, "prefault delivers nothing");
+        // demand access over the prefaulted range: pure hits, credited to
+        // readahead exactly once per page
+        let mut got = Vec::new();
+        s.with_range(0, 40, |pg, a, b| got.extend_from_slice(&pg.dense()[a..b]))
+            .unwrap();
+        assert_eq!(got.len(), 40);
+        let io = s.stats();
+        assert_eq!(io.demand_faults, 0, "everything was prefetched");
+        assert_eq!(io.page_hits, 10);
+        assert_eq!(io.readahead_hits, 10);
+        // a second demand pass hits again but no longer credits readahead
+        s.with_range(0, 40, |_, _, _| {}).unwrap();
+        let io = s.stats();
+        assert_eq!(io.readahead_hits, 10, "prefetch credit is one-shot");
+        assert_eq!(io.page_hits, 20);
+        // prefaulting an already-resident range is a no-op
+        assert_eq!(s.prefault_range(0, 40).unwrap(), 0);
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn prefault_on_truncated_region_errors_typed() {
+        let (p, f) = dense_file(0, 8);
+        let s = PageStore::new(f, &p, PageLayout::DenseF32, 0, 32, 16, 1024).unwrap();
+        assert!(matches!(s.prefault_range(0, 32), Err(Error::Corrupt { .. })));
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn readahead_thread_prefaults_published_batches() {
+        // the deterministic observation pattern: publish, then observe the
+        // live completed counter (no sleeps) before touching the pages
+        let (p, s) = store(0, 64, 16, 16 * 16);
+        let mut ra = Readahead::spawn(s.clone(), 8);
+        let batches: Vec<(u64, u64)> = (0..4).map(|j| (j * 16, (j + 1) * 16)).collect();
+        for &(lo, hi) in &batches {
+            ra.publish(vec![(lo, hi)]);
+        }
+        for (j, &(lo, hi)) in batches.iter().enumerate() {
+            ra.wait_ready(j as u64);
+            let mut got = Vec::new();
+            s.with_range(lo, hi, |pg, a, b| got.extend_from_slice(&pg.dense()[a..b]))
+                .unwrap();
+            assert_eq!(got.len(), 16);
+            ra.mark_consumed(s.pages_spanned(lo, hi));
+        }
+        assert!(ra.completed_batches() >= 4);
+        assert!(ra.failed().is_none());
+        let io = s.stats();
+        assert_eq!(io.demand_faults, 0, "readahead absorbed every fault");
+        assert_eq!(io.page_faults, 16);
+        assert_eq!(io.readahead_hits, 16);
+        drop(ra); // shuts down and joins
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn readahead_window_paces_but_never_starves() {
+        // window of 1 page with 4-page batches: the "batch the consumer is
+        // waiting for is always allowed" rule must keep the pipeline moving
+        let (p, s) = store(0, 64, 16, 16 * 16);
+        let mut ra = Readahead::spawn(s.clone(), 1);
+        for j in 0..4u64 {
+            ra.publish(vec![(j * 16, (j + 1) * 16)]);
+        }
+        for j in 0..4u64 {
+            ra.wait_ready(j);
+            ra.mark_consumed(4);
+        }
+        assert_eq!(ra.completed_batches(), 4);
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn readahead_io_error_marks_failed_but_consumer_proceeds() {
+        // region claims 32 elems, file holds 8: the readahead thread must
+        // record the failure and still complete the batch so wait_ready
+        // returns; the demand path then surfaces the same error typed
+        let (p, f) = dense_file(0, 8);
+        let s = PageStore::new(f, &p, PageLayout::DenseF32, 0, 32, 16, 1024).unwrap();
+        let mut ra = Readahead::spawn(s.clone(), 8);
+        let seq = ra.publish(vec![(0, 32)]);
+        ra.wait_ready(seq);
+        assert!(ra.failed().is_some(), "readahead must record the I/O failure");
+        assert!(matches!(s.with_range(0, 32, |_, _, _| {}), Err(Error::Corrupt { .. })));
         std::fs::remove_file(p).ok();
     }
 }

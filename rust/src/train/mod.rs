@@ -32,6 +32,7 @@ use crate::pipeline::prefetch::{PrefetchStats, PrefetchedBatch, Prefetcher};
 use crate::sampling::Sampler;
 use crate::solvers::linesearch::{backtracking, LineSearchParams, LineSearchScratch};
 use crate::solvers::Solver;
+use crate::storage::pagestore::Readahead;
 use crate::storage::simulator::AccessSimulator;
 
 pub use optimum::estimate_optimum;
@@ -150,7 +151,7 @@ pub fn run_experiment_with_backend(
     be: &mut dyn ComputeBackend,
 ) -> Result<TrainReport> {
     let c = reg_for(cfg);
-    let l = ds.lipschitz(c);
+    let l = ds.lipschitz(c)?;
     let alpha_const = (1.0 / l) as f32;
     let rows = ds.rows();
     let n = ds.cols();
@@ -188,10 +189,27 @@ pub fn run_experiment_with_backend(
     // the block map is built exactly once.
     let mut pf: Option<Prefetcher> = None;
     let mut sim_local: Option<AccessSimulator> = None;
+    // asynchronous page readahead (paged datasets only): the pipelined
+    // path hands the knob to the reader thread; the synchronous path
+    // drives a readahead session from this thread. Either way the
+    // schedule published is the exact deterministic (seed, epoch)
+    // schedule, so trajectories are bit-identical with readahead on/off.
+    let readahead_pages = if ds.is_paged() { cfg.storage.readahead_pages } else { 0 };
+    let mut sync_ra: Option<(Readahead, u64)> = None;
     if cfg.prefetch_depth > 0 {
-        pf = Some(Prefetcher::spawn(Arc::new(ds.clone()), sim, cfg.prefetch_depth));
+        pf = Some(Prefetcher::spawn_with_readahead(
+            Arc::new(ds.clone()),
+            sim,
+            cfg.prefetch_depth,
+            readahead_pages,
+        ));
     } else {
         sim_local = Some(sim);
+        if readahead_pages > 0 {
+            sync_ra = ds
+                .as_paged()
+                .map(|p| (p.spawn_readahead(readahead_pages), 0u64));
+        }
     }
 
     for epoch in 0..cfg.epochs {
@@ -234,7 +252,7 @@ pub fn run_experiment_with_backend(
             // access + assembly with solver compute; CS/SS batches arrive
             // as zero-copy range views
             pf.start_epoch(sampler.epoch(epoch));
-            while let Some(b) = pf.next_batch() {
+            while let Some(b) = pf.next_batch()? {
                 let sw = Stopwatch::start();
                 let view = b.view(n);
                 let lr = match cfg.step {
@@ -251,7 +269,22 @@ pub fn run_experiment_with_backend(
         } else {
             // synchronous path: fetch → assemble → step
             let sim = sim_local.as_mut().expect("sync path owns the simulator");
-            for (j, sel) in sampler.epoch(epoch).into_iter().enumerate() {
+            let sels = sampler.epoch(epoch);
+            // publish the epoch's exact page schedule to the readahead
+            // thread before touching the first batch
+            let batch_pages: Vec<u64> = match (sync_ra.as_mut(), ds.as_paged()) {
+                (Some((ra, _)), Some(p)) => sels
+                    .iter()
+                    .map(|sel| {
+                        let runs = p.selection_runs(sel);
+                        let pages = p.runs_pages(&runs);
+                        ra.publish(runs);
+                        pages
+                    })
+                    .collect(),
+                _ => Vec::new(),
+            };
+            for (j, sel) in sels.into_iter().enumerate() {
                 let cost = sim.fetch(&sel);
                 time.sim_access_s += cost.time_s;
                 if sel.is_contiguous() && !ds.is_paged() {
@@ -261,9 +294,17 @@ pub fn run_experiment_with_backend(
                     // assembly, which copies out of the page store
                     time.bytes_copied += ds.payload_bytes(&sel);
                 }
+                if let Some((ra, seq)) = sync_ra.as_mut() {
+                    ra.wait_ready(*seq);
+                    *seq += 1;
+                }
                 let mut sw = Stopwatch::start();
-                let view = assembler.assemble(ds, &sel);
+                let view = assembler.assemble(ds, &sel)?;
                 time.assemble_s += sw.lap_s();
+                if let Some((ra, _)) = sync_ra.as_mut() {
+                    // batch assembled: open window room for the thread
+                    ra.mark_consumed(batch_pages.get(j).copied().unwrap_or(0));
+                }
                 let lr = match cfg.step {
                     StepKind::Constant => alpha_const,
                     StepKind::LineSearch => {
@@ -359,7 +400,7 @@ fn full_gradient_sweep(
     }
     let sw = Stopwatch::start();
     if be.is_native_host() {
-        chunked::full_grad_into_chunked(w, ds, c, chunk, out, &mut scratch.grad);
+        chunked::full_grad_into_chunked(w, ds, c, chunk, out, &mut scratch.grad)?;
     } else {
         out.fill(0.0);
         scratch.chunk.resize(out.len(), 0.0);
@@ -415,7 +456,7 @@ fn full_gradient_sweep_prefetched(
         let mut pending: Vec<PrefetchedBatch> = Vec::with_capacity(wave);
         let mut done = false;
         while !done {
-            match pf.next_batch() {
+            match pf.next_batch()? {
                 Some(b) => pending.push(b),
                 None => done = true,
             }
@@ -431,7 +472,7 @@ fn full_gradient_sweep_prefetched(
         }
     } else {
         scratch.chunk.resize(out.len(), 0.0);
-        while let Some(b) = pf.next_batch() {
+        while let Some(b) = pf.next_batch()? {
             let sw = Stopwatch::start();
             let view = b.view(cols);
             be.grad_into(w, &view, 0.0, &mut scratch.chunk)?;
@@ -616,20 +657,23 @@ mod tests {
         let paged: Dataset =
             crate::data::PagedDataset::open(&path, ds.file_bytes() / 4, 4096).unwrap().into();
         for depth in [0usize, 3] {
-            for solver in [SolverKind::Saga, SolverKind::Svrg] {
-                let mut cfg = quick_cfg(solver, SamplingKind::Ss);
-                cfg.prefetch_depth = depth;
-                let a = run_experiment(&cfg, &ds).unwrap();
-                let b = run_experiment(&cfg, &paged).unwrap();
-                assert_eq!(a.w, b.w, "{} depth={depth}", solver.label());
-                assert_eq!(
-                    a.final_objective.to_bits(),
-                    b.final_objective.to_bits(),
-                    "{} depth={depth}",
-                    solver.label()
-                );
-                assert!(b.time.io.bytes_read > 0, "paged run must really read the file");
-                assert_eq!(a.time.io.bytes_read, 0, "in-core run performs no file IO");
+            for readahead in [0u64, 16] {
+                for solver in [SolverKind::Saga, SolverKind::Svrg] {
+                    let mut cfg = quick_cfg(solver, SamplingKind::Ss);
+                    cfg.prefetch_depth = depth;
+                    cfg.storage.readahead_pages = readahead;
+                    let a = run_experiment(&cfg, &ds).unwrap();
+                    let b = run_experiment(&cfg, &paged).unwrap();
+                    assert_eq!(a.w, b.w, "{} depth={depth} ra={readahead}", solver.label());
+                    assert_eq!(
+                        a.final_objective.to_bits(),
+                        b.final_objective.to_bits(),
+                        "{} depth={depth} ra={readahead}",
+                        solver.label()
+                    );
+                    assert!(b.time.io.bytes_read > 0, "paged run must really read the file");
+                    assert_eq!(a.time.io.bytes_read, 0, "in-core run performs no file IO");
+                }
             }
         }
         std::fs::remove_file(path).ok();

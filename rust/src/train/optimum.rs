@@ -23,7 +23,7 @@ pub fn estimate_optimum(
     iters: usize,
 ) -> Result<f64> {
     let n = ds.cols();
-    let l = ds.lipschitz(c);
+    let l = ds.lipschitz(c)?;
     let lr = (1.0 / l) as f32;
     let mut w = vec![0f32; n];
     let mut w_prev = vec![0f32; n];
@@ -49,7 +49,7 @@ pub fn estimate_optimum(
         }
         if native {
             // pooled deterministic chunk fold on the worker pool
-            chunked::full_grad_into(&v, ds, c, &mut g, &mut scratch);
+            chunked::full_grad_into(&v, ds, c, &mut g, &mut scratch)?;
         } else {
             // device backends keep their own single-dispatch full batch
             be.grad_into(&v, view.as_ref().expect("non-native view"), c, &mut g)?;

@@ -58,6 +58,10 @@ struct ShardSlot {
     asm: BatchAssembler,
     wloc: Vec<f32>,
     g: Vec<f32>,
+    /// First assembly/step error of this shard's epoch (paged I/O can
+    /// fail); collected by the leader after the pooled epoch so a bad disk
+    /// read fails the run typed instead of panicking a pool worker.
+    err: Option<Error>,
 }
 
 /// Run `cfg.epochs` of data-parallel MBSGD with `workers` shards.
@@ -78,7 +82,7 @@ pub fn run_data_parallel(
     // same process never leaks into this one's timings
     crate::runtime::pool::set_parallelism(cfg.pool_threads);
     let c = crate::train::reg_for(cfg);
-    let lr = (1.0 / ds.lipschitz(c)) as f32;
+    let lr = (1.0 / ds.lipschitz(c)?) as f32;
     let n = ds.cols();
     let shards = shard::split(ds.rows(), workers)?;
     let batch = cfg.batch_size.min(shards.iter().map(|s| s.len()).min().unwrap());
@@ -114,6 +118,7 @@ pub fn run_data_parallel(
             asm: BatchAssembler::new(),
             wloc: vec![0f32; n],
             g: vec![0f32; n],
+            err: None,
         })
         .collect();
 
@@ -148,13 +153,27 @@ pub fn run_data_parallel(
         let w0: &[f32] = &w;
         crate::runtime::pool::global().map_slots(&mut slots, |k, slot| {
             slot.wloc.copy_from_slice(w0);
-            let ShardSlot { be, asm, wloc, g } = slot;
+            let ShardSlot { be, asm, wloc, g, err } = slot;
             for sel in &jobs[k] {
-                let view = asm.assemble(ds, sel);
-                be.grad_into(wloc, &view, c, g).expect("grad");
-                crate::math::axpy(-lr, g, wloc);
+                // a paged I/O failure parks the typed error in the slot
+                // (pool jobs must not panic); the leader surfaces it below
+                let step = asm
+                    .assemble(ds, sel)
+                    .and_then(|view| be.grad_into(wloc, &view, c, g));
+                match step {
+                    Ok(()) => crate::math::axpy(-lr, g, wloc),
+                    Err(e) => {
+                        *err = Some(e);
+                        return;
+                    }
+                }
             }
         });
+        for slot in &mut slots {
+            if let Some(e) = slot.err.take() {
+                return Err(e);
+            }
+        }
 
         // parameter averaging
         w.fill(0.0);

@@ -92,7 +92,7 @@ fn full_gradient_bit_identical_across_pool_sizes_dense_and_csr() {
         across_pool_sizes(label, || {
             let mut g = vec![0f32; cols];
             let mut scratch = GradScratch::default();
-            chunked::full_grad_into(w, ds, 1e-3, &mut g, &mut scratch);
+            chunked::full_grad_into(w, ds, 1e-3, &mut g, &mut scratch).unwrap();
             g.iter().map(|v| v.to_bits()).collect::<Vec<u32>>()
         });
     }
@@ -140,7 +140,7 @@ fn prop_pooled_grad_matches_serial_kernel_exactly() {
 
         let mut got = vec![0f32; cols];
         let mut scratch = GradScratch::default();
-        chunked::full_grad_into_chunked(&w, &ds, c, chunk, &mut got, &mut scratch);
+        chunked::full_grad_into_chunked(&w, &ds, c, chunk, &mut got, &mut scratch).unwrap();
         assert_eq!(
             got, want,
             "case {case}: rows={rows} cols={cols} chunk={chunk} c={c}"

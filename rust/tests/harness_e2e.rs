@@ -208,7 +208,7 @@ fn out_of_core_disk_training_matches_in_memory() {
     let mut w_mem = vec![0f32; 8];
     let mut asm = samplex::data::batch::BatchAssembler::new();
     for sel in sampler2.epoch(0) {
-        let view = asm.assemble(&ds, &sel);
+        let view = asm.assemble(&ds, &sel).unwrap();
         let dv = view.as_dense().unwrap();
         samplex::math::grad_into(&w_mem, dv.x, dv.y, 8, 1e-3, &mut g);
         samplex::math::axpy(-0.1, &g, &mut w_mem);

@@ -8,12 +8,18 @@
 //! The CI out-of-core job runs exactly this file:
 //! `cargo test --release --test paged_e2e`.
 
+use std::sync::Arc;
+
 use samplex::config::ExperimentConfig;
 use samplex::data::batch::BatchAssembler;
 use samplex::data::synth::{self, FeatureDist, SparseSynthSpec, SynthSpec};
 use samplex::data::{Dataset, PagedDataset};
+use samplex::pipeline::prefetch::Prefetcher;
 use samplex::sampling::{Sampler, SamplingKind};
 use samplex::solvers::SolverKind;
+use samplex::storage::pagestore::Readahead;
+use samplex::storage::profile::DeviceProfile;
+use samplex::storage::simulator::AccessSimulator;
 use samplex::train::run_experiment;
 
 static UNIQ: std::sync::atomic::AtomicUsize = std::sync::atomic::AtomicUsize::new(0);
@@ -185,7 +191,7 @@ fn cs_and_ss_fault_strictly_less_than_rs_below_full_budget() {
             let mut asm = BatchAssembler::new();
             for e in 0..2 {
                 for sel in sampler.epoch(e) {
-                    std::hint::black_box(asm.assemble(&paged, &sel).rows());
+                    std::hint::black_box(asm.assemble(&paged, &sel).unwrap().rows());
                 }
             }
             let io = paged.io_stats();
@@ -200,6 +206,141 @@ fn cs_and_ss_fault_strictly_less_than_rs_below_full_budget() {
         assert!(cs < rs, "budget {budget_pct}%: cs faults {cs} !< rs faults {rs}");
         assert!(ss < rs, "budget {budget_pct}%: ss faults {ss} !< rs faults {rs}");
     }
+}
+
+/// Tentpole acceptance: solver trajectories are **bit-identical** with
+/// readahead {off, on} × budgets {1 page, 25%, 100%} × {CS, SS, RS}, on
+/// both the synchronous and the pipelined driver paths — readahead only
+/// moves disk time off the critical path, never changes a byte.
+#[test]
+fn trajectories_bit_identical_with_readahead_on_and_off() {
+    let page_bytes = 2048u64;
+    let ds = dense_ds(2400, 6, 17);
+    for sampling in [SamplingKind::Cs, SamplingKind::Ss, SamplingKind::Rs] {
+        let incore = run_experiment(&cfg(SolverKind::Saga, sampling, 100), &ds).unwrap();
+        for budget in [page_bytes, ds.file_bytes() / 4, ds.file_bytes()] {
+            for (depth, readahead) in [(0usize, 0u64), (0, 32), (2, 0), (2, 32)] {
+                let (path, paged) = paged_copy(&ds, budget, page_bytes);
+                let mut c = cfg(SolverKind::Saga, sampling, 100);
+                c.prefetch_depth = depth;
+                c.storage.readahead_pages = readahead;
+                let ooc = run_experiment(&c, &paged).unwrap();
+                let tag = format!(
+                    "{} budget={budget} depth={depth} readahead={readahead}",
+                    sampling.label()
+                );
+                assert_eq!(incore.w, ooc.w, "{tag}: iterates");
+                assert_eq!(
+                    incore.final_objective.to_bits(),
+                    ooc.final_objective.to_bits(),
+                    "{tag}: objective"
+                );
+                std::fs::remove_file(path).ok();
+            }
+        }
+    }
+}
+
+/// Acceptance: contiguous (CS/SS) epochs through the readahead-enabled
+/// pipeline take **zero** demand faults at budgets ≥ 25% — every fault is
+/// absorbed by the readahead thread, overlapped with (what would be)
+/// compute. Deterministic because the reader waits for each batch's
+/// prefault and the window is clamped far below the pool capacity, so a
+/// prefetched page can never be evicted before its batch is assembled
+/// (window 32 + ~5 pages/batch ≪ 100-page budget).
+#[test]
+fn readahead_zeroes_demand_faults_for_contiguous_access_at_quarter_budget() {
+    let ds = dense_ds(50_000, 8, 5);
+    for budget_pct in [25u64, 100] {
+        for kind in [SamplingKind::Cs, SamplingKind::Ss] {
+            let budget = ds.file_bytes() * budget_pct / 100;
+            let (path, paged) = paged_copy(&ds, budget, 4096);
+            let arc: Arc<Dataset> = Arc::new(paged.clone());
+            let sim = AccessSimulator::for_dataset(DeviceProfile::hdd(), &arc, 1 << 20);
+            let mut pf = Prefetcher::spawn_with_readahead(arc.clone(), sim, 2, 32);
+            let sampler: Box<dyn Sampler> = kind.build(50_000, 500, 7, None).unwrap();
+            for e in 0..2 {
+                pf.start_epoch(sampler.schedule(e));
+                while let Some(b) = pf.next_batch().unwrap() {
+                    std::hint::black_box(b.rows);
+                }
+            }
+            pf.finish();
+            let io = paged.io_stats();
+            assert_eq!(
+                io.demand_faults, 0,
+                "{} at {budget_pct}%: demand faults must be zero ({io:?})",
+                kind.label()
+            );
+            assert!(io.page_faults > 0, "the readahead thread did the faulting");
+            assert!(io.readahead_hits > 0);
+            std::fs::remove_file(path).ok();
+        }
+    }
+}
+
+/// Satellite: the deterministic atomic-counter pattern (same as the
+/// prefetch backpressure-stall test) — publish a whole CS epoch to the
+/// readahead thread, observe its live `completed_batches` counter until
+/// every batch is prefaulted (no sleeps), then assemble on the demand
+/// path and prove demand faults stayed at zero at a 100% budget.
+#[test]
+fn readahead_counter_proves_zero_demand_faults_for_cs_at_full_budget() {
+    let ds = dense_ds(20_000, 8, 13);
+    let (path, paged) = paged_copy(&ds, ds.file_bytes(), 4096);
+    let p = paged.as_paged().unwrap();
+    // raw handle with an effectively unbounded window: nothing paces the
+    // thread, so `completed` provably reaches the published count
+    let mut ra = Readahead::spawn(p.store().clone(), u64::MAX / 2);
+    let sampler: Box<dyn Sampler> = SamplingKind::Cs.build(20_000, 500, 7, None).unwrap();
+    let sels = sampler.schedule(0);
+    let total = sels.len() as u64;
+    for sel in &sels {
+        ra.publish(p.selection_runs(sel));
+    }
+    while ra.completed_batches() < total {
+        std::thread::yield_now();
+    }
+    assert!(ra.failed().is_none());
+    let mut asm = BatchAssembler::new();
+    for sel in &sels {
+        std::hint::black_box(asm.assemble(&paged, sel).unwrap().rows());
+    }
+    let io = paged.io_stats();
+    assert_eq!(io.demand_faults, 0, "all faults happened on the readahead thread");
+    assert_eq!(io.page_faults, p.n_pages(), "one readahead fault per page");
+    assert!(io.readahead_hits > 0, "demand touches were served by prefetched pages");
+    assert!(io.stall_s <= io.read_s, "stall is the demand-visible slice of read time");
+    drop(ra);
+    std::fs::remove_file(path).ok();
+}
+
+/// De-panicking acceptance: a file that turns unreadable mid-training
+/// fails the run with the store's typed error — through the synchronous
+/// driver, the pipelined driver and the data-parallel trainer — instead of
+/// aborting the process.
+#[test]
+fn unreadable_file_fails_run_with_typed_error_not_panic() {
+    let ds = dense_ds(4000, 6, 23);
+    let (path, paged) = paged_copy(&ds, ds.file_bytes() / 4, 2048);
+    // truncate the on-disk file after open: later page runs cannot be read
+    let full = std::fs::read(&path).unwrap();
+    std::fs::write(&path, &full[..full.len() / 3]).unwrap();
+    for depth in [0usize, 2] {
+        let mut c = cfg(SolverKind::Mbsgd, SamplingKind::Cs, 100);
+        c.prefetch_depth = depth;
+        let err = run_experiment(&c, &paged).expect_err("must fail, not abort");
+        let msg = err.to_string();
+        assert!(msg.contains("corrupt") || msg.contains("io error"), "depth={depth}: {msg}");
+    }
+    let err = samplex::train::parallel::run_data_parallel(
+        &cfg(SolverKind::Mbsgd, SamplingKind::Cs, 100),
+        &paged,
+        3,
+    )
+    .expect_err("parallel trainer must fail typed");
+    assert!(!err.to_string().is_empty());
+    std::fs::remove_file(path).ok();
 }
 
 /// The paged path composes with the data-parallel trainer (§5): shards

@@ -306,10 +306,10 @@ fn prop_borrowed_and_forced_owned_payloads_bit_identical() {
             let mut pf = Prefetcher::spawn(ds.clone(), sim, 2);
             pf.start_epoch(sels.clone());
             let mut k = 0usize;
-            while let Some(b) = pf.next_batch() {
+            while let Some(b) = pf.next_batch().unwrap() {
                 let pview = b.view(cols);
                 let view = pview.as_dense().unwrap();
-                let owned = gather_owned(&ds, &sels[k]);
+                let owned = gather_owned(&ds, &sels[k]).unwrap();
                 let oview = owned.view(cols);
                 let od = oview.as_dense().unwrap();
                 assert_eq!(view.x, od.x, "{} case {i} batch {k}: x", kind.label());
@@ -370,7 +370,7 @@ fn prop_solver_trajectory_identical_on_borrowed_vs_owned_payloads() {
             let sim = AccessSimulator::for_dataset(DeviceProfile::ram(), &ds, 0);
             let mut pf = Prefetcher::spawn(ds.clone(), sim, 2);
             pf.start_epoch(sels.clone());
-            while let Some(b) = pf.next_batch() {
+            while let Some(b) = pf.next_batch().unwrap() {
                 let view = b.view(cols);
                 solver_a.step(&mut be, &view, b.j, lr).unwrap();
             }
@@ -380,7 +380,7 @@ fn prop_solver_trajectory_identical_on_borrowed_vs_owned_payloads() {
             let mut solver_b: Box<dyn Solver> = SolverKind::Saga.build(cols, m);
             solver_b.set_reg(1e-3);
             for (j, sel) in sels.iter().enumerate() {
-                let owned = gather_owned(&ds, sel);
+                let owned = gather_owned(&ds, sel).unwrap();
                 let view = owned.view(cols);
                 solver_b.step(&mut be, &view, j, lr).unwrap();
             }
@@ -456,7 +456,7 @@ fn prop_saga_trajectory_identical_dense_vs_csr() {
                 let mut asm = samplex::data::batch::BatchAssembler::new();
                 for epoch_sels in [&sels, &sels] {
                     for (j, sel) in epoch_sels.iter().enumerate() {
-                        let view = asm.assemble(ds, sel);
+                        let view = asm.assemble(ds, sel).unwrap();
                         solver.step(&mut be, &view, j, lr).unwrap();
                     }
                 }

@@ -130,7 +130,7 @@ fn cs_batches_alias_the_dataset_arrays_at_high_dim() {
         .collect();
     pf.start_epoch(sels);
     let mut seen = 0;
-    while let Some(b) = pf.next_batch() {
+    while let Some(b) = pf.next_batch().unwrap() {
         let view = b.view(COLS);
         let v = view.as_csr().unwrap();
         let lo = ptr[seen * 100] as usize;
