@@ -357,8 +357,8 @@ impl BatchAssembler {
     ) -> crate::error::Result<BatchView<'a>> {
         if let Dataset::Paged(p) = ds {
             self.gathered_rows += sel.len() as u64;
-            self.paged_scratch = Some(p.gather_selection(sel)?);
-            return Ok(self.paged_scratch.as_ref().expect("just set").view(p.cols()));
+            let ob = self.paged_scratch.insert(p.gather_selection(sel)?);
+            return Ok(ob.view(p.cols()));
         }
         if let RowSelection::Contiguous { start, end } = sel {
             self.borrowed_batches += 1;
@@ -366,6 +366,7 @@ impl BatchAssembler {
         }
         self.gathered_rows += sel.len() as u64;
         Ok(match ds {
+            // samplex-lint: allow(no-panic-plane) -- the Paged arm returned above; this match only sees in-core datasets
             Dataset::Paged(_) => unreachable!("handled above"),
             Dataset::Dense(d) => {
                 let cols = d.cols();

@@ -81,9 +81,9 @@ impl CsrDataset {
                 row_ptr.len()
             )));
         }
-        if values.len() != col_idx.len() || *row_ptr.last().unwrap() != values.len() as u64 {
+        if values.len() != col_idx.len() || row_ptr[rows] != values.len() as u64 {
             return Err(Error::ShapeMismatch {
-                expected: format!("nnz {} (row_ptr tail)", row_ptr.last().unwrap()),
+                expected: format!("nnz {} (row_ptr tail)", row_ptr[rows]),
                 got: format!("{} values / {} col_idx", values.len(), col_idx.len()),
                 context: "CsrDataset::new".into(),
             });

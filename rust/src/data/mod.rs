@@ -176,6 +176,7 @@ impl Dataset {
                 BatchView::dense(x, y, d.cols())
             }
             Dataset::Csr(c) => BatchView::Csr(c.slice(start, end)),
+            // samplex-lint: allow(no-panic-plane) -- documented programming-error panic (see doc comment): paged data must use the gather/pin paths
             Dataset::Paged(_) => panic!(
                 "slice_view is not available for paged (out-of-core) datasets; \
                  use the batch assembler / gather paths"

@@ -129,12 +129,12 @@ impl PagedDataset {
         let mut hdr = [0u8; 20];
         f.read_exact(&mut hdr)
             .map_err(|e| corrupt(4, format!("truncated .sxb header: {e}")))?;
-        let version = u32::from_le_bytes(hdr[0..4].try_into().unwrap());
+        let version = crate::storage::le_u32(&hdr, 0);
         if version != 1 {
             return Err(corrupt(4, format!("unsupported .sxb version {version}")));
         }
-        let rows64 = u64::from_le_bytes(hdr[4..12].try_into().unwrap());
-        let cols64 = u64::from_le_bytes(hdr[12..20].try_into().unwrap());
+        let rows64 = crate::storage::le_u64(&hdr, 4);
+        let cols64 = crate::storage::le_u64(&hdr, 12);
         if rows64 == 0 || cols64 == 0 {
             return Err(corrupt(8, format!("bad .sxb dims {rows64} x {cols64}")));
         }
@@ -192,13 +192,13 @@ impl PagedDataset {
         let mut hdr = [0u8; 28];
         f.read_exact(&mut hdr)
             .map_err(|e| corrupt(4, format!("truncated .sxc header: {e}")))?;
-        let version = u32::from_le_bytes(hdr[0..4].try_into().unwrap());
+        let version = crate::storage::le_u32(&hdr, 0);
         if version != 1 {
             return Err(corrupt(4, format!("unsupported .sxc version {version}")));
         }
-        let rows64 = u64::from_le_bytes(hdr[4..12].try_into().unwrap());
-        let cols64 = u64::from_le_bytes(hdr[12..20].try_into().unwrap());
-        let nnz64 = u64::from_le_bytes(hdr[20..28].try_into().unwrap());
+        let rows64 = crate::storage::le_u64(&hdr, 4);
+        let cols64 = crate::storage::le_u64(&hdr, 12);
+        let nnz64 = crate::storage::le_u64(&hdr, 20);
         if rows64 == 0 || cols64 == 0 {
             return Err(corrupt(8, format!("bad .sxc dims {rows64} x {cols64}")));
         }
@@ -228,13 +228,13 @@ impl PagedDataset {
                 .map_err(|e| corrupt(ptr_base + 8 * i as u64, format!("truncated row_ptr: {e}")))?;
             row_ptr.push(u64::from_le_bytes(b8));
         }
-        if row_ptr[0] != 0 || *row_ptr.last().unwrap() != nnz64 {
+        if row_ptr[0] != 0 || row_ptr[rows] != nnz64 {
             return Err(corrupt(
                 ptr_base,
                 format!(
                     "row_ptr must span 0..={nnz64}, got {}..={}",
                     row_ptr[0],
-                    row_ptr.last().unwrap()
+                    row_ptr[rows]
                 ),
             ));
         }
@@ -292,7 +292,8 @@ impl PagedDataset {
     pub fn nnz(&self) -> usize {
         match &self.row_ptr {
             None => self.rows * self.cols,
-            Some(p) => *p.last().unwrap() as usize,
+            // row_ptr always holds rows + 1 validated entries
+            Some(p) => p[self.rows] as usize,
         }
     }
 
@@ -536,6 +537,7 @@ impl PagedDataset {
                         cols: self.cols,
                     })
                 }
+                // samplex-lint: allow(no-panic-plane) -- documented programming-error panic: the store's layout is fixed at open, so a mismatched page cannot be constructed
                 _ => unreachable!("page layout always matches the dataset layout"),
             },
         }

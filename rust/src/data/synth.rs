@@ -73,6 +73,7 @@ pub fn generate(spec: &SynthSpec, seed: u64) -> Result<DenseDataset> {
                 }
             }
             FeatureDist::Correlated { rank } => {
+                // samplex-lint: allow(no-panic-plane) -- mixer is built above iff dist is Correlated; both match on spec.dist
                 let m = mixer.as_ref().unwrap();
                 let z: Vec<f64> = (0..rank).map(|_| rng.normal()).collect();
                 for (jc, v) in rowbuf.iter_mut().enumerate() {

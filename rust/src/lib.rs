@@ -103,6 +103,31 @@
 //! executes them from the solver hot path; [`math`] is a bit-careful native
 //! mirror used as cross-check oracle and portable fallback.
 //!
+//! ## Machine-checked invariants (`samplex-lint`)
+//!
+//! The concurrency and determinism claims above are not just prose: the
+//! workspace ships `tools/samplex-lint`, a zero-dependency static checker
+//! run in CI (`cargo run -p samplex-lint -- rust/src`) that enforces
+//!
+//! * **no-panic-plane** — no `panic!` / `unwrap()` / `expect(` /
+//!   `unreachable!` in the data plane (`data/`, `storage/`, `pipeline/`,
+//!   `math/chunked.rs`): a poisoned lock or a torn shard must surface as
+//!   a typed [`Error`], never tear down a worker mid-epoch;
+//! * **lock-discipline** — no disk I/O or page decode inside a
+//!   shard-lock scope in `storage/pagestore.rs`, and no nested lock
+//!   acquisition (the fault protocol is reserve → drop lock → read →
+//!   re-lock → publish);
+//! * **determinism** — no `HashMap`/`HashSet` iteration, clocks, or
+//!   thread identity in the bit-identical modules (`math/chunked.rs`,
+//!   `train/parallel.rs`, `backend/native.rs`);
+//! * **atomics-audit** — every `Ordering::Relaxed` is an annotated stats
+//!   counter, never a synchronization flag;
+//! * **safety-comments** — every `unsafe` carries a `// SAFETY:` account.
+//!
+//! `INVARIANTS.md` at the repo root documents each rule, the escape hatch
+//! (a per-site `allow(rule) -- reason` annotation), and the Miri /
+//! ThreadSanitizer CI jobs that test the same invariants dynamically.
+//!
 //! ## Quick start
 //!
 //! ```no_run

@@ -92,6 +92,7 @@ impl BatchPayload {
             BatchPayload::Owned(ob) => ob.view(cols),
             BatchPayload::Paged { ds, start, end, data } => ds
                 .as_paged()
+                // samplex-lint: allow(no-panic-plane) -- Paged payloads are only built from paged datasets (reader_loop gates on ds.as_paged())
                 .expect("paged payload always wraps a paged dataset")
                 .view_of(data, *start, *end),
         }
@@ -255,11 +256,13 @@ impl Prefetcher {
     /// previous epoch is still being drained.
     pub fn start_epoch(&mut self, selections: Vec<RowSelection>) {
         assert!(!self.epoch_open, "start_epoch before previous epoch was drained");
-        self.cmd_tx
-            .as_ref()
-            .expect("prefetcher already finished")
-            .send(ReaderMsg::Epoch(selections))
-            .expect("prefetch reader thread is gone");
+        // `cmd_tx` is `Some` until `finish`/`Drop` consume the prefetcher,
+        // and a reader that died mid-send surfaces as the typed
+        // "reader thread died" error from the next `next_batch` call —
+        // neither case needs to panic here.
+        if let Some(tx) = self.cmd_tx.as_ref() {
+            let _ = tx.send(ReaderMsg::Epoch(selections));
+        }
         self.epoch_open = true;
     }
 
@@ -304,6 +307,8 @@ impl Prefetcher {
     /// over the reader's lifetime; lets tests and monitors observe a stall
     /// the moment it happens instead of sleeping and hoping.
     pub fn stalls_so_far(&self) -> u64 {
+        // relaxed-ok: monotonic stats counter; readers only observe "a
+        // stall happened", never synchronize on it.
         self.stall_counter.load(Ordering::Relaxed)
     }
 
@@ -315,8 +320,10 @@ impl Prefetcher {
         while self.rx.recv().is_ok() {} // unblock + drain a mid-send reader
         self.handle
             .take()
+            // samplex-lint: allow(no-panic-plane) -- finish consumes self, so the handle is always present here
             .expect("finish called once")
             .join()
+            // samplex-lint: allow(no-panic-plane) -- deliberate bug signal: a reader panic must propagate, not read as a clean shutdown
             .expect("prefetch reader panicked")
     }
 }
@@ -432,6 +439,8 @@ fn reader_loop(
                 Ok(()) => {}
                 Err(TrySendError::Full(msg)) => {
                     es.stalls += 1;
+                    // relaxed-ok: live stall counter is stats-only; the
+                    // blocking send below is the actual synchronization.
                     live_stalls.fetch_add(1, Ordering::Relaxed);
                     if tx.send(msg).is_err() {
                         break 'serve; // trainer dropped the receiver

@@ -66,8 +66,8 @@ pub fn rebalance(shards: &[Shard], k: usize) -> Result<Vec<Shard>> {
             )));
         }
     }
-    let lo = sorted.first().unwrap().start;
-    let hi = sorted.last().unwrap().end;
+    let lo = sorted[0].start;
+    let hi = sorted[sorted.len() - 1].end;
     let mut out = split(hi - lo, k)?;
     for s in out.iter_mut() {
         s.start += lo;

@@ -26,6 +26,12 @@
 //! to an inline loop on the caller thread with no synchronization at all —
 //! which is what keeps the crate's trajectory-equality property tests valid
 //! on machines with any core count.
+//!
+//! The `unsafe` plumbing here (the type-erased closure pointer and
+//! `SlotsPtr`) is covered by `samplex-lint`'s **safety-comments** (R5)
+//! rule — every site carries its aliasing/lifetime argument — and the
+//! fold-path callers are covered by **determinism** (R3); see
+//! `INVARIANTS.md` at the repo root.
 
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Sender};
@@ -97,6 +103,8 @@ struct Run {
     /// Pointer to the caller's closure (`&F`, valid while `run` blocks).
     data: *const (),
     /// Monomorphized thunk that reborrows `data` as `&F` and calls it.
+    /// SAFETY: only invoked with this `Run`'s `data` pointer while the
+    /// submitting `run()` call is still blocked keeping `F` alive.
     call: unsafe fn(*const (), usize),
     /// Next unclaimed job index.
     next: AtomicUsize,
@@ -116,8 +124,15 @@ struct Run {
 // never touch `data` after that increment), and `call` only reborrows it
 // as `&F`. All other fields are plain sync primitives.
 unsafe impl Send for Run {}
+// SAFETY: workers only ever hold `&Run`; the shared mutable state
+// (`next`, `panicked`, `finished`) is atomics/mutex/condvar, and `data`
+// is only reborrowed immutably as `&F` with `F: Sync`.
 unsafe impl Sync for Run {}
 
+// SAFETY: callers must pass the `data` pointer of a live `Run` whose
+// erased closure is exactly `F` (guaranteed by construction in `run`,
+// which pairs `&f as *const F` with `call_thunk::<F>`); the thunk
+// reborrows it as `&F` only while the submitting `run()` is blocked.
 unsafe fn call_thunk<F: Fn(usize) + Sync>(data: *const (), i: usize) {
     let f = &*(data as *const F);
     f(i);
@@ -126,6 +141,7 @@ unsafe fn call_thunk<F: Fn(usize) + Sync>(data: *const (), i: usize) {
 /// Drain the run's job counter on the current thread.
 fn work(run: &Run) {
     loop {
+        // samplex-lint: allow(atomics-audit) -- work-index allocator, not a flag: the RMW is atomic and publishes no other memory
         let i = run.next.fetch_add(1, Ordering::Relaxed);
         if i >= run.jobs {
             break;
@@ -151,9 +167,13 @@ fn worker_loop(rx: std::sync::mpsc::Receiver<Arc<Run>>) {
 /// Wrapper that lets a `*mut T` ride inside a `Sync` closure; used only
 /// for disjoint-index writes (see [`WorkerPool::map_slots`]).
 struct SlotsPtr<T>(*mut T);
-// SAFETY: every job index is claimed exactly once, so each `&mut` derived
-// from this pointer is exclusive; `T: Send` is enforced by `map_slots`.
+// SAFETY: moving the raw pointer across threads is sound because it
+// addresses `T: Send` slots owned by the caller of `map_slots`, which
+// blocks until every worker is done with them.
 unsafe impl<T> Send for SlotsPtr<T> {}
+// SAFETY: concurrent shared use only ever derives *disjoint* `&mut T`
+// (every job index is claimed exactly once by the pool's counter), so
+// no two threads can alias the same slot.
 unsafe impl<T> Sync for SlotsPtr<T> {}
 
 /// Persistent, lazily-spawned worker pool (see the module docs).

@@ -61,6 +61,28 @@
 //! The page store inherits the same geometry through
 //! [`crate::data::paged::PagedDataset`].
 
+/// Little-endian `u32` at `buf[at..at + 4]`. Callers decode fixed-size
+/// header buffers whose length was already validated, so the bounds are
+/// static facts — this keeps the `try_into().unwrap()` idiom (and its
+/// panic path) out of the data plane (lint rule **no-panic-plane**).
+pub(crate) fn le_u32(buf: &[u8], at: usize) -> u32 {
+    u32::from_le_bytes([buf[at], buf[at + 1], buf[at + 2], buf[at + 3]])
+}
+
+/// Little-endian `u64` at `buf[at..at + 8]`; see [`le_u32`].
+pub(crate) fn le_u64(buf: &[u8], at: usize) -> u64 {
+    u64::from_le_bytes([
+        buf[at],
+        buf[at + 1],
+        buf[at + 2],
+        buf[at + 3],
+        buf[at + 4],
+        buf[at + 5],
+        buf[at + 6],
+        buf[at + 7],
+    ])
+}
+
 pub mod blockmap;
 pub mod cache;
 pub mod pagestore;

@@ -57,6 +57,17 @@
 //! `IoStats` splits the picture: `demand_faults` (and `stall_s`) tell you
 //! what the consumer actually waited for; `readahead_hits` tell you how
 //! many page touches were served by prefetched pages.
+//!
+//! ## Machine-checked invariants
+//!
+//! `samplex-lint` (see `INVARIANTS.md` at the repo root) enforces this
+//! module's discipline on every build: **lock-discipline** (R2) — no file
+//! seek/read or page decode inside a shard-lock scope and no nested lock
+//! acquisition; **atomics-audit** (R4) — every `Ordering::Relaxed` here
+//! is an annotated stats counter, while cross-thread signals
+//! (`idx_bound`, `completed_atomic`) carry Acquire/Release with their
+//! happens-before edges documented; **no-panic-plane** (R1) — the store
+//! surfaces typed [`Error`]s, never panics.
 
 use std::collections::HashMap;
 use std::fs::File;
@@ -179,6 +190,9 @@ struct AtomicIoStats {
 impl AtomicIoStats {
     fn snapshot(&self) -> IoStats {
         IoStats {
+            // relaxed-ok: independent monotonic stats counters read for
+            // reporting; a snapshot needs no cross-counter ordering and
+            // no thread synchronizes on these values.
             bytes_read: self.bytes_read.load(Ordering::Relaxed),
             read_calls: self.read_calls.load(Ordering::Relaxed),
             page_faults: self.page_faults.load(Ordering::Relaxed),
@@ -267,6 +281,7 @@ impl Page {
     pub fn dense(&self) -> &[f32] {
         match self {
             Page::Dense(x) => x,
+            // samplex-lint: allow(no-panic-plane) -- documented programming-error panic: layout is fixed per store at open
             Page::Pairs { .. } => panic!("dense() on a pairs page"),
         }
     }
@@ -275,6 +290,7 @@ impl Page {
     pub fn pairs(&self) -> (&[f32], &[u32]) {
         match self {
             Page::Pairs { values, col_idx } => (values, col_idx),
+            // samplex-lint: allow(no-panic-plane) -- documented programming-error panic: layout is fixed per store at open
             Page::Dense(_) => panic!("pairs() on a dense page"),
         }
     }
@@ -396,7 +412,10 @@ impl PageStore {
     /// carrying the offending byte offset, mirroring the typed header
     /// checks.
     pub fn set_idx_bound(&self, bound: u32) {
-        self.inner.idx_bound.store(bound, Ordering::Relaxed);
+        // Release pairs with the Acquire load in `read_run`: a thread that
+        // faults a page after this store validates with the new bound.
+        // Not a stats counter, so R4 wants a real ordering, not Relaxed.
+        self.inner.idx_bound.store(bound, Ordering::Release);
     }
 
     /// Total pages covering the region.
@@ -489,15 +508,20 @@ impl PageStore {
             sw.elapsed()
         };
         let ns = elapsed.as_nanos() as u64;
+        // relaxed-ok: monotonic stats counters; nothing synchronizes on
+        // them and the snapshot tolerates torn cross-counter views.
         inner.stats.read_ns.fetch_add(ns, Ordering::Relaxed);
         inner.stats.read_calls.fetch_add(1, Ordering::Relaxed);
         inner.stats.bytes_read.fetch_add(nbytes, Ordering::Relaxed);
         inner.stats.page_faults.fetch_add(hi - lo + 1, Ordering::Relaxed);
         if demand {
+            // relaxed-ok: same stats-counter argument as above.
             inner.stats.demand_faults.fetch_add(hi - lo + 1, Ordering::Relaxed);
             inner.stats.stall_ns.fetch_add(ns, Ordering::Relaxed);
         }
-        let idx_bound = inner.idx_bound.load(Ordering::Relaxed);
+        // Acquire pairs with the Release store in `set_idx_bound`, so a
+        // bound published before this fault is seen by its validation.
+        let idx_bound = inner.idx_bound.load(Ordering::Acquire);
         let mut out = Vec::with_capacity((hi - lo + 1) as usize);
         for id in lo..=hi {
             let a = ((id * inner.elems_per_page - first_elem) * inner.layout.elem_bytes()) as usize;
@@ -556,9 +580,11 @@ impl PageStore {
         let page = Arc::clone(&entry.page);
         if entry.prefetched {
             entry.prefetched = false;
+            // relaxed-ok: pure stats counter (provenance credit).
             self.inner.stats.readahead_hits.fetch_add(1, Ordering::Relaxed);
         }
         let _ = shard.lru.touch_evicting(id);
+        // relaxed-ok: pure stats counter.
         self.inner.stats.page_hits.fetch_add(1, Ordering::Relaxed);
         Some(page)
     }
@@ -589,12 +615,15 @@ impl PageStore {
         self.inner
             .stats
             .bytes_requested
+            // relaxed-ok: pure stats counter.
             .fetch_add((elem_hi - elem_lo) * self.inner.layout.elem_bytes(), Ordering::Relaxed);
         let page = match self.touch_resident(p_lo) {
             Some(p) => p,
             None => {
                 let mut run = self.read_run(p_lo, p_lo, true)?;
-                let p = run.pop().expect("one page");
+                let p = run.pop().ok_or_else(|| {
+                    Error::Other("read_run returned no page for a one-page run".into())
+                })?;
                 self.install(p_lo, Arc::clone(&p), false);
                 p
             }
@@ -620,6 +649,7 @@ impl PageStore {
         self.inner
             .stats
             .bytes_requested
+            // relaxed-ok: pure stats counter.
             .fetch_add((elem_hi - elem_lo) * self.inner.layout.elem_bytes(), Ordering::Relaxed);
         let epp = self.inner.elems_per_page;
         let p_lo = elem_lo / epp;
@@ -652,7 +682,9 @@ impl PageStore {
         }
         // pass 3: visit in element order
         for id in p_lo..=p_hi {
-            let page = pages[(id - p_lo) as usize].as_ref().expect("page resolved");
+            let page = pages[(id - p_lo) as usize]
+                .as_ref()
+                .ok_or_else(|| Error::Other(format!("page {id} unresolved after fault pass")))?;
             let first = id * epp;
             let last = (first + epp).min(self.inner.n_elems);
             let lo = elem_lo.max(first) - first;
@@ -709,6 +741,7 @@ impl PageStore {
         self.inner
             .stats
             .stall_ns
+            // relaxed-ok: pure stats counter.
             .fetch_add(d.as_nanos() as u64, Ordering::Relaxed);
     }
 
@@ -809,17 +842,18 @@ impl Readahead {
         let (tx, rx) = channel::<ElemRuns>();
         let thread_store = store.clone();
         let thread_shared = Arc::clone(&shared);
+        // A failed OS-thread spawn degrades to a dead handle instead of
+        // panicking the data plane: `dead` makes every `wait_ready` return
+        // immediately and the demand path self-serves — readahead is an
+        // overlap optimization, never a correctness dependency.
         let handle = std::thread::Builder::new()
             .name("samplex-readahead".into())
             .spawn(move || readahead_loop(thread_store, thread_shared, rx))
-            .expect("spawn readahead thread");
-        Readahead {
-            store,
-            shared,
-            tx: Some(tx),
-            handle: Some(handle),
-            published: 0,
+            .ok();
+        if handle.is_none() {
+            lock_recovering(&shared.state).dead = true;
         }
+        Readahead { store, shared, tx: Some(tx), handle, published: 0 }
     }
 
     /// Queue one batch's element runs; returns the batch's sequence number
@@ -840,6 +874,10 @@ impl Readahead {
     /// gone). The wait time is charged to [`IoStats::stall_s`] — it is
     /// access time the consumer could not hide.
     pub fn wait_ready(&self, batch_seq: u64) {
+        // Acquire pairs with the Release store in `readahead_loop`: seeing
+        // `completed > batch_seq` means the batch's page installs (done
+        // under the shard locks before the store) happen-before this read,
+        // so the fast path may skip the mutex entirely.
         if self.shared.completed_atomic.load(Ordering::Acquire) > batch_seq {
             return;
         }
@@ -942,6 +980,9 @@ fn readahead_loop(store: PageStore, shared: Arc<RaShared>, rx: Receiver<ElemRuns
         let mut st = lock_recovering(&shared.state);
         st.prefaulted_pages += pages;
         st.completed += 1;
+        // Release publishes this batch's page installs to the consumer's
+        // Acquire fast path in `wait_ready` — a cross-thread signal, so R4
+        // (atomics-audit) requires a real ordering here, not Relaxed.
         shared.completed_atomic.store(st.completed, Ordering::Release);
         drop(st);
         shared.completed_cv.notify_all();

@@ -47,8 +47,8 @@ impl DiskSource {
         if &hdr[0..4] != b"SXB1" {
             return Err(corrupt(0, format!("bad .sxb magic {:?}", &hdr[0..4])));
         }
-        let rows64 = u64::from_le_bytes(hdr[8..16].try_into().unwrap());
-        let cols64 = u64::from_le_bytes(hdr[16..24].try_into().unwrap());
+        let rows64 = super::le_u64(&hdr, 8);
+        let cols64 = super::le_u64(&hdr, 16);
         if rows64 == 0 || cols64 == 0 {
             return Err(corrupt(8, format!("bad .sxb dims {rows64} x {cols64}")));
         }

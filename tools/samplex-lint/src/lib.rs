@@ -1,0 +1,928 @@
+//! samplex-lint: a source-level checker for the samplex invariants.
+//!
+//! The crate's determinism and out-of-core guarantees (bit-identical
+//! trajectories across thread counts, page budgets, and readahead on/off)
+//! rest on a handful of coding rules that used to live only in doc
+//! comments. This tool machine-checks them:
+//!
+//! - **no-panic-plane** (R1): `panic!` / `.unwrap()` / `.expect(` /
+//!   `unreachable!` are forbidden in data-plane modules (`data/`,
+//!   `storage/`, `pipeline/`, `math/chunked.rs`) — errors must travel as
+//!   typed `Error` values.
+//! - **lock-discipline** (R2): in `storage/pagestore.rs`, no file
+//!   seek/read or page decode while a shard lock is held, and no nested
+//!   lock acquisition.
+//! - **determinism** (R3): no `HashMap`/`HashSet`, `Instant::now`,
+//!   `SystemTime::now`, `thread::current`, or `available_parallelism`
+//!   in reduction/fold paths (`math/chunked.rs`, `train/parallel.rs`,
+//!   `backend/native.rs`).
+//! - **atomics-audit** (R4): every `Ordering::Relaxed` must sit on an
+//!   annotated stats counter (a `relaxed-ok:` comment on the same line or
+//!   on the comment block immediately above a contiguous run of Relaxed
+//!   lines) — never on a flag another thread observes for
+//!   synchronization.
+//! - **safety-comments** (R5): every `unsafe` token must carry a
+//!   `// SAFETY:` comment (same line or the comment block directly
+//!   above).
+//!
+//! Violations are suppressible only via an explicit
+//! `// samplex-lint: allow(<rule>) -- <reason>` annotation on the same
+//! line or the line directly above; each annotation suppresses exactly
+//! one finding. Malformed annotations are reported as `bad-allow`,
+//! annotations that suppress nothing as `unused-allow`.
+//!
+//! The scanner is deliberately a hand-rolled line/token pass (no syn, no
+//! proc-macro, zero dependencies): it strips strings, char literals, and
+//! comments, masks `#[cfg(test)]` items, and then applies per-line token
+//! rules plus a brace-depth lock-scope tracker for R2. It is a
+//! conservative approximation of Rust syntax, not a parser — which is
+//! exactly enough for the invariants above and keeps the tool buildable
+//! offline anywhere the main crate builds.
+
+use std::path::{Path, PathBuf};
+
+/// The named rules. `BadAllow`/`UnusedAllow` are meta-diagnostics about
+/// the annotation mechanism itself and cannot be allowed away.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Rule {
+    /// R1: no panicking constructs in data-plane modules.
+    NoPanicPlane,
+    /// R2: no file I/O or decode under a shard lock; no nested locks.
+    LockDiscipline,
+    /// R3: no nondeterministic values feeding reduction/fold paths.
+    Determinism,
+    /// R4: `Ordering::Relaxed` only on annotated stats counters.
+    AtomicsAudit,
+    /// R5: every `unsafe` carries a `// SAFETY:` justification.
+    SafetyComments,
+    /// Meta: malformed `samplex-lint:` annotation.
+    BadAllow,
+    /// Meta: an allow annotation that suppressed nothing.
+    UnusedAllow,
+}
+
+impl Rule {
+    /// Stable machine-readable rule name, as printed in diagnostics.
+    pub fn name(self) -> &'static str {
+        match self {
+            Rule::NoPanicPlane => "no-panic-plane",
+            Rule::LockDiscipline => "lock-discipline",
+            Rule::Determinism => "determinism",
+            Rule::AtomicsAudit => "atomics-audit",
+            Rule::SafetyComments => "safety-comments",
+            Rule::BadAllow => "bad-allow",
+            Rule::UnusedAllow => "unused-allow",
+        }
+    }
+
+    /// Parse an allow-able rule name (the meta rules are not allowed
+    /// targets).
+    pub fn from_name(s: &str) -> Option<Rule> {
+        match s {
+            "no-panic-plane" => Some(Rule::NoPanicPlane),
+            "lock-discipline" => Some(Rule::LockDiscipline),
+            "determinism" => Some(Rule::Determinism),
+            "atomics-audit" => Some(Rule::AtomicsAudit),
+            "safety-comments" => Some(Rule::SafetyComments),
+            _ => None,
+        }
+    }
+}
+
+/// One diagnostic, printed as `file:line rule message`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Finding {
+    /// Path as handed to the linter (forward slashes).
+    pub file: String,
+    /// 1-based line number.
+    pub line: usize,
+    /// Violated rule.
+    pub rule: Rule,
+    /// Human-readable explanation.
+    pub msg: String,
+}
+
+impl std::fmt::Display for Finding {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}:{} {} {}", self.file, self.line, self.rule.name(), self.msg)
+    }
+}
+
+/// One physical source line after lexical stripping: `code` has strings
+/// and char literals blanked and comments removed; `comment` holds the
+/// comment text (line or block) that appeared on the line.
+#[derive(Debug, Default, Clone)]
+pub struct Line {
+    /// Code text with string/char contents blanked out.
+    pub code: String,
+    /// Comment text carried by this line.
+    pub comment: String,
+}
+
+fn is_ident_char(c: char) -> bool {
+    c == '_' || c.is_alphanumeric()
+}
+
+/// Split source into per-line (code, comment) pairs. String literals
+/// become `""`, char literals become `' '`, raw strings are consumed,
+/// and block comments (including nested ones) are routed to `comment`.
+pub fn strip_source(src: &str) -> Vec<Line> {
+    #[derive(PartialEq)]
+    enum St {
+        Code,
+        LineComment,
+        BlockComment,
+        Str,
+        RawStr,
+    }
+    let cs: Vec<char> = src.chars().collect();
+    let n = cs.len();
+    let mut lines: Vec<Line> = Vec::new();
+    let mut cur = Line::default();
+    let mut st = St::Code;
+    let mut block_depth = 0usize;
+    let mut raw_hashes = 0usize;
+    let mut i = 0usize;
+    while i < n {
+        let c = cs[i];
+        let nxt = if i + 1 < n { cs[i + 1] } else { '\0' };
+        if c == '\n' {
+            lines.push(std::mem::take(&mut cur));
+            if st == St::LineComment {
+                st = St::Code;
+            }
+            i += 1;
+            continue;
+        }
+        match st {
+            St::Code => {
+                if c == '/' && nxt == '/' {
+                    st = St::LineComment;
+                    i += 2;
+                } else if c == '/' && nxt == '*' {
+                    st = St::BlockComment;
+                    block_depth = 1;
+                    i += 2;
+                } else if c == '"' {
+                    st = St::Str;
+                    cur.code.push_str("\"\"");
+                    i += 1;
+                } else if c == 'r'
+                    && (nxt == '"' || nxt == '#')
+                    && (i == 0 || !is_ident_char(cs[i - 1]))
+                {
+                    // candidate raw string r"..." / r#"..."#
+                    let mut j = i + 1;
+                    let mut h = 0usize;
+                    while j < n && cs[j] == '#' {
+                        h += 1;
+                        j += 1;
+                    }
+                    if j < n && cs[j] == '"' {
+                        st = St::RawStr;
+                        raw_hashes = h;
+                        cur.code.push_str("\"\"");
+                        i = j + 1;
+                    } else {
+                        cur.code.push(c);
+                        i += 1;
+                    }
+                } else if c == '\'' {
+                    // char literal vs lifetime
+                    if nxt == '\\' {
+                        // escaped char literal: skip to the closing quote
+                        let mut j = i + 2;
+                        while j < n && cs[j] != '\'' {
+                            j += 1;
+                        }
+                        cur.code.push_str("' '");
+                        i = j + 1;
+                    } else if i + 2 < n && nxt != '\'' && cs[i + 2] == '\'' {
+                        cur.code.push_str("' '");
+                        i += 3;
+                    } else {
+                        // lifetime marker: keep it, it is not a string
+                        cur.code.push(c);
+                        i += 1;
+                    }
+                } else {
+                    cur.code.push(c);
+                    i += 1;
+                }
+            }
+            St::LineComment => {
+                cur.comment.push(c);
+                i += 1;
+            }
+            St::BlockComment => {
+                if c == '/' && nxt == '*' {
+                    block_depth += 1;
+                    i += 2;
+                } else if c == '*' && nxt == '/' {
+                    block_depth -= 1;
+                    if block_depth == 0 {
+                        st = St::Code;
+                    }
+                    i += 2;
+                } else {
+                    cur.comment.push(c);
+                    i += 1;
+                }
+            }
+            St::Str => {
+                if c == '\\' {
+                    i += 2;
+                } else {
+                    if c == '"' {
+                        st = St::Code;
+                    }
+                    i += 1;
+                }
+            }
+            St::RawStr => {
+                if c == '"' {
+                    let mut j = i + 1;
+                    let mut h = 0usize;
+                    while j < n && cs[j] == '#' && h < raw_hashes {
+                        h += 1;
+                        j += 1;
+                    }
+                    if h == raw_hashes {
+                        st = St::Code;
+                        i = j;
+                    } else {
+                        i += 1;
+                    }
+                } else {
+                    i += 1;
+                }
+            }
+        }
+    }
+    lines.push(cur);
+    lines
+}
+
+/// Mark the lines that belong to `#[cfg(test)]` items (the attribute
+/// line, the item header, its braced body, and the closing brace). The
+/// rules do not apply there: tests may unwrap freely.
+pub fn test_mask(lines: &[Line]) -> Vec<bool> {
+    let mut mask = vec![false; lines.len()];
+    let mut depth: i64 = 0;
+    let mut pending = false;
+    let mut skip_above: Option<i64> = None;
+    for (idx, line) in lines.iter().enumerate() {
+        let code = &line.code;
+        let attr_at = code.find("#[cfg(test)]");
+        let mut in_test = skip_above.is_some() || pending;
+        for (pos, ch) in code.char_indices() {
+            if attr_at == Some(pos) && skip_above.is_none() {
+                pending = true;
+                in_test = true;
+            }
+            match ch {
+                '{' => {
+                    depth += 1;
+                    if pending && skip_above.is_none() {
+                        skip_above = Some(depth - 1);
+                        pending = false;
+                    }
+                }
+                '}' => {
+                    depth -= 1;
+                    if let Some(d) = skip_above {
+                        if depth <= d {
+                            skip_above = None;
+                            in_test = true; // the closing brace is still test
+                        }
+                    }
+                }
+                ';' => {
+                    // a braceless item (e.g. `#[cfg(test)] use ...;`) ends here
+                    if pending && skip_above.is_none() {
+                        pending = false;
+                        in_test = true;
+                    }
+                }
+                _ => {}
+            }
+            if skip_above.is_some() {
+                in_test = true;
+            }
+        }
+        if pending {
+            in_test = true;
+        }
+        mask[idx] = in_test;
+    }
+    mask
+}
+
+/// Which rule families apply to a file, decided from its path.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct FileClass {
+    /// R1 applies: under a `data/`, `storage/`, or `pipeline/` directory,
+    /// or the chunked reduction module itself.
+    pub data_plane: bool,
+    /// R3 applies: a reduction/fold path.
+    pub determinism: bool,
+    /// R2 applies: the shard-locked page store.
+    pub pagestore: bool,
+}
+
+/// Classify a path (forward or back slashes) into rule families.
+/// R4 and R5 are global and need no class.
+pub fn classify(path: &str) -> FileClass {
+    let p = path.replace('\\', "/");
+    let segs: Vec<&str> = p.split('/').collect();
+    let ndirs = segs.len().saturating_sub(1);
+    let dir_hit = segs
+        .iter()
+        .take(ndirs)
+        .any(|s| *s == "data" || *s == "storage" || *s == "pipeline");
+    FileClass {
+        data_plane: dir_hit || p.ends_with("math/chunked.rs"),
+        determinism: p.ends_with("math/chunked.rs")
+            || p.ends_with("train/parallel.rs")
+            || p.ends_with("backend/native.rs"),
+        pagestore: p.ends_with("storage/pagestore.rs"),
+    }
+}
+
+fn occurrences(hay: &str, needle: &str) -> usize {
+    let mut count = 0usize;
+    let mut at = 0usize;
+    while let Some(p) = hay[at..].find(needle) {
+        count += 1;
+        at += p + needle.len();
+    }
+    count
+}
+
+fn has_word(hay: &str, word: &str) -> bool {
+    let bytes = hay.as_bytes();
+    let mut at = 0usize;
+    while let Some(p) = hay[at..].find(word) {
+        let s = at + p;
+        let e = s + word.len();
+        let pre_ok = s == 0 || !(bytes[s - 1] == b'_' || bytes[s - 1].is_ascii_alphanumeric());
+        let post_ok = e >= bytes.len() || !(bytes[e] == b'_' || bytes[e].is_ascii_alphanumeric());
+        if pre_ok && post_ok {
+            return true;
+        }
+        at = e;
+    }
+    false
+}
+
+/// R4 annotation: a `relaxed-ok:` marker on this line's comment, or on
+/// the comment block immediately above a contiguous run of
+/// `Ordering::Relaxed` lines (so one marker covers e.g. a whole stats
+/// snapshot). Any other code line breaks the chain.
+fn relaxed_annotated(lines: &[Line], idx: usize) -> bool {
+    if lines[idx].comment.contains("relaxed-ok:") {
+        return true;
+    }
+    let mut k = idx;
+    while k > 0 {
+        k -= 1;
+        let l = &lines[k];
+        if l.code.trim().is_empty() {
+            if l.comment.trim().is_empty() {
+                return false; // blank line ends the block
+            }
+            if l.comment.contains("relaxed-ok:") {
+                return true;
+            }
+        } else if l.code.contains("Ordering::Relaxed") {
+            if l.comment.contains("relaxed-ok:") {
+                return true;
+            }
+        } else {
+            return false;
+        }
+    }
+    false
+}
+
+/// R5 annotation: `SAFETY:` in this line's comment or in the contiguous
+/// comment-only block directly above.
+fn safety_annotated(lines: &[Line], idx: usize) -> bool {
+    if lines[idx].comment.contains("SAFETY:") {
+        return true;
+    }
+    let mut k = idx;
+    while k > 0 {
+        k -= 1;
+        let l = &lines[k];
+        if !l.code.trim().is_empty() || l.comment.trim().is_empty() {
+            return false;
+        }
+        if l.comment.contains("SAFETY:") {
+            return true;
+        }
+    }
+    false
+}
+
+/// An open lock scope in the R2 tracker.
+struct LockScope {
+    kind: &'static str,
+    guard: Option<String>,
+    depth: i64,
+}
+
+fn lock_kind(arg: &str) -> &'static str {
+    if arg.contains("file") {
+        "file"
+    } else if arg.contains("state") {
+        "state"
+    } else {
+        "shard"
+    }
+}
+
+const SHARD_FORBIDDEN: [&str; 4] = [".seek(", ".read_exact(", ".decode(", "read_run("];
+
+/// Extract the binding identifier from `let [mut] ident =` directly
+/// preceding a `lock_recovering(` call, if any.
+fn binding_ident(before: &str) -> Option<String> {
+    let t = before.trim_end().strip_suffix('=')?.trim_end();
+    let ident: String = {
+        let tail: Vec<char> = t.chars().rev().take_while(|c| is_ident_char(*c)).collect();
+        tail.into_iter().rev().collect()
+    };
+    if ident.is_empty() {
+        return None;
+    }
+    let rest = t[..t.len() - ident.len()].trim_end();
+    if rest.ends_with("let") || rest.ends_with("mut") {
+        Some(ident)
+    } else {
+        None
+    }
+}
+
+/// R2: track lock scopes by brace depth in `storage/pagestore.rs`.
+///
+/// Locks are acquired via the file's `lock_recovering(...)` helper; the
+/// argument text classifies the lock (`file`, `state`, else `shard`).
+/// A `let`-bound guard lives until its block closes or `drop(guard)`;
+/// an expression temporary lives for its own line. While a shard lock is
+/// held, file seeks/reads, page decode, and `read_run` are forbidden;
+/// while any lock is held, acquiring another is forbidden.
+fn lock_discipline(file: &str, lines: &[Line], mask: &[bool]) -> Vec<Finding> {
+    let mut out = Vec::new();
+    let mut depth: i64 = 0;
+    let mut scopes: Vec<LockScope> = Vec::new();
+    for (idx, line) in lines.iter().enumerate() {
+        let code = &line.code;
+        let ln = idx + 1;
+        if !mask[idx] {
+            if let Some(p) = code.find("lock_recovering(") {
+                let after = &code[p + "lock_recovering(".len()..];
+                let arg = after.split(')').next().unwrap_or(after);
+                let kind = lock_kind(arg);
+                for s in &scopes {
+                    let held = match &s.guard {
+                        Some(g) => format!("{} lock (guard `{g}`)", s.kind),
+                        None => format!("{} lock", s.kind),
+                    };
+                    out.push(Finding {
+                        file: file.to_string(),
+                        line: ln,
+                        rule: Rule::LockDiscipline,
+                        msg: format!("acquires the {kind} lock while already holding the {held}"),
+                    });
+                }
+                match binding_ident(&code[..p]) {
+                    Some(g) => scopes.push(LockScope { kind, guard: Some(g), depth }),
+                    None => {
+                        // guard is a temporary: it lives for this line only
+                        if kind == "shard" {
+                            for tok in SHARD_FORBIDDEN {
+                                if code.contains(tok) {
+                                    out.push(Finding {
+                                        file: file.to_string(),
+                                        line: ln,
+                                        rule: Rule::LockDiscipline,
+                                        msg: format!(
+                                            "{tok} in the same expression as a shard-lock \
+                                             acquisition"
+                                        ),
+                                    });
+                                }
+                            }
+                        }
+                    }
+                }
+            } else {
+                if let Some(s) = scopes.iter().find(|s| s.kind == "shard") {
+                    let g = s.guard.clone().unwrap_or_default();
+                    for tok in SHARD_FORBIDDEN {
+                        if code.contains(tok) {
+                            out.push(Finding {
+                                file: file.to_string(),
+                                line: ln,
+                                rule: Rule::LockDiscipline,
+                                msg: format!(
+                                    "{tok} inside the shard-lock scope of guard `{g}` — do \
+                                     file I/O and page decode outside the shard lock"
+                                ),
+                            });
+                        }
+                    }
+                }
+                if let Some(s) = scopes.iter().find(|s| s.kind == "file") {
+                    let g = s.guard.clone().unwrap_or_default();
+                    if code.contains(".decode(") {
+                        out.push(Finding {
+                            file: file.to_string(),
+                            line: ln,
+                            rule: Rule::LockDiscipline,
+                            msg: format!(
+                                ".decode( inside the file-lock scope of guard `{g}` — decode \
+                                 after dropping the file lock"
+                            ),
+                        });
+                    }
+                }
+                if !scopes.is_empty() && code.contains(".lock(") {
+                    out.push(Finding {
+                        file: file.to_string(),
+                        line: ln,
+                        rule: Rule::LockDiscipline,
+                        msg: "raw .lock( while a lock_recovering guard is live — nested lock \
+                              acquisition is forbidden"
+                            .to_string(),
+                    });
+                }
+            }
+        }
+        // brace bookkeeping runs even through test code so depths stay true
+        for ch in code.chars() {
+            if ch == '{' {
+                depth += 1;
+            } else if ch == '}' {
+                depth -= 1;
+                scopes.retain(|s| s.depth <= depth);
+            }
+        }
+        scopes.retain(|s| match &s.guard {
+            Some(g) => !code.contains(&format!("drop({g})")),
+            None => true,
+        });
+    }
+    out
+}
+
+struct Allow {
+    ann_line: usize,
+    target_line: usize,
+    rule: Rule,
+    used: bool,
+}
+
+/// Parse `samplex-lint: allow(rule) -- reason` annotations. An
+/// annotation on a code line targets that line; a standalone comment
+/// line targets the next line. Malformed annotations become `bad-allow`
+/// findings.
+fn collect_allows(file: &str, lines: &[Line], mask: &[bool]) -> (Vec<Allow>, Vec<Finding>) {
+    let mut allows = Vec::new();
+    let mut meta = Vec::new();
+    for (idx, line) in lines.iter().enumerate() {
+        if mask[idx] {
+            continue;
+        }
+        let c = &line.comment;
+        let p = match c.find("samplex-lint:") {
+            Some(p) => p,
+            None => continue,
+        };
+        let ln = idx + 1;
+        let rest = c[p + "samplex-lint:".len()..].trim_start();
+        let body = match rest.strip_prefix("allow(") {
+            Some(b) => b,
+            None => {
+                meta.push(Finding {
+                    file: file.to_string(),
+                    line: ln,
+                    rule: Rule::BadAllow,
+                    msg: "expected `samplex-lint: allow(<rule>) -- <reason>`".to_string(),
+                });
+                continue;
+            }
+        };
+        let close = match body.find(')') {
+            Some(c) => c,
+            None => {
+                meta.push(Finding {
+                    file: file.to_string(),
+                    line: ln,
+                    rule: Rule::BadAllow,
+                    msg: "unclosed `allow(` in samplex-lint annotation".to_string(),
+                });
+                continue;
+            }
+        };
+        let name = body[..close].trim();
+        let tail = body[close + 1..].trim_start();
+        let reason_ok = tail
+            .strip_prefix("--")
+            .map(|r| !r.trim().is_empty())
+            .unwrap_or(false);
+        if !reason_ok {
+            meta.push(Finding {
+                file: file.to_string(),
+                line: ln,
+                rule: Rule::BadAllow,
+                msg: format!("allow({name}) is missing a `-- <reason>` justification"),
+            });
+            continue;
+        }
+        let rule = match Rule::from_name(name) {
+            Some(r) => r,
+            None => {
+                meta.push(Finding {
+                    file: file.to_string(),
+                    line: ln,
+                    rule: Rule::BadAllow,
+                    msg: format!("unknown rule `{name}` in allow annotation"),
+                });
+                continue;
+            }
+        };
+        let target_line = if line.code.trim().is_empty() { ln + 1 } else { ln };
+        allows.push(Allow { ann_line: ln, target_line, rule, used: false });
+    }
+    (allows, meta)
+}
+
+fn apply_allows(file: &str, raw: &mut Vec<Finding>, allows: &mut [Allow]) -> Vec<Finding> {
+    for a in allows.iter_mut() {
+        if let Some(pos) = raw
+            .iter()
+            .position(|f| f.line == a.target_line && f.rule == a.rule)
+        {
+            raw.remove(pos); // exactly one finding per annotation
+            a.used = true;
+        }
+    }
+    allows
+        .iter()
+        .filter(|a| !a.used)
+        .map(|a| Finding {
+            file: file.to_string(),
+            line: a.ann_line,
+            rule: Rule::UnusedAllow,
+            msg: format!(
+                "allow({}) matched no finding on line {}",
+                a.rule.name(),
+                a.target_line
+            ),
+        })
+        .collect()
+}
+
+const DETERMINISM_TOKENS: [&str; 6] = [
+    "HashMap",
+    "HashSet",
+    "Instant::now",
+    "SystemTime::now",
+    "thread::current",
+    "available_parallelism",
+];
+
+/// Lint one file's source. `file` is the display path used both for
+/// diagnostics and for rule classification.
+pub fn lint_source(file: &str, src: &str) -> Vec<Finding> {
+    let lines = strip_source(src);
+    let mask = test_mask(&lines);
+    let class = classify(file);
+    let mut raw: Vec<Finding> = Vec::new();
+
+    for (idx, line) in lines.iter().enumerate() {
+        if mask[idx] {
+            continue;
+        }
+        let code = &line.code;
+        let ln = idx + 1;
+        if class.data_plane {
+            for tok in ["panic!", "unreachable!", ".unwrap()", ".expect("] {
+                for _ in 0..occurrences(code, tok) {
+                    raw.push(Finding {
+                        file: file.to_string(),
+                        line: ln,
+                        rule: Rule::NoPanicPlane,
+                        msg: format!(
+                            "{tok} in a data-plane module — thread a typed `Error` instead"
+                        ),
+                    });
+                }
+            }
+        }
+        if class.determinism {
+            for tok in DETERMINISM_TOKENS {
+                if code.contains(tok) {
+                    raw.push(Finding {
+                        file: file.to_string(),
+                        line: ln,
+                        rule: Rule::Determinism,
+                        msg: format!(
+                            "{tok} can feed nondeterministic values into a reduction/fold path"
+                        ),
+                    });
+                }
+            }
+        }
+        let relaxed = occurrences(code, "Ordering::Relaxed");
+        if relaxed > 0 && !relaxed_annotated(&lines, idx) {
+            for _ in 0..relaxed {
+                raw.push(Finding {
+                    file: file.to_string(),
+                    line: ln,
+                    rule: Rule::AtomicsAudit,
+                    msg: "Ordering::Relaxed without a `relaxed-ok:` stats-counter annotation — \
+                          cross-thread signal flags need Acquire/Release"
+                        .to_string(),
+                });
+            }
+        }
+        if has_word(code, "unsafe") && !safety_annotated(&lines, idx) {
+            raw.push(Finding {
+                file: file.to_string(),
+                line: ln,
+                rule: Rule::SafetyComments,
+                msg: "`unsafe` without a `// SAFETY:` comment stating the aliasing/lifetime \
+                      argument"
+                    .to_string(),
+            });
+        }
+    }
+
+    if class.pagestore {
+        raw.extend(lock_discipline(file, &lines, &mask));
+    }
+
+    let (mut allows, mut meta) = collect_allows(file, &lines, &mask);
+    let unused = apply_allows(file, &mut raw, &mut allows);
+    raw.append(&mut meta);
+    raw.extend(unused);
+    raw.sort_by(|a, b| (a.line, a.rule).cmp(&(b.line, b.rule)));
+    raw
+}
+
+/// Recursively collect `.rs` files under `root` in sorted order.
+pub fn collect_rs_files(root: &Path, out: &mut Vec<PathBuf>) -> std::io::Result<()> {
+    if root.is_file() {
+        if root.extension().map(|e| e == "rs").unwrap_or(false) {
+            out.push(root.to_path_buf());
+        }
+        return Ok(());
+    }
+    let mut entries: Vec<PathBuf> = std::fs::read_dir(root)?
+        .map(|e| e.map(|e| e.path()))
+        .collect::<std::io::Result<_>>()?;
+    entries.sort();
+    for e in entries {
+        if e.is_dir() {
+            collect_rs_files(&e, out)?;
+        } else if e.extension().map(|x| x == "rs").unwrap_or(false) {
+            out.push(e);
+        }
+    }
+    Ok(())
+}
+
+/// Lint every `.rs` file under the given paths (files or directories).
+pub fn lint_paths(paths: &[PathBuf]) -> std::io::Result<Vec<Finding>> {
+    let mut files = Vec::new();
+    for p in paths {
+        collect_rs_files(p, &mut files)?;
+    }
+    let mut out = Vec::new();
+    for f in &files {
+        let src = std::fs::read_to_string(f)?;
+        let display = f.to_string_lossy().replace('\\', "/");
+        out.extend(lint_source(&display, &src));
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rules_of(findings: &[Finding]) -> Vec<(usize, &'static str)> {
+        findings.iter().map(|f| (f.line, f.rule.name())).collect()
+    }
+
+    #[test]
+    fn strips_strings_comments_and_chars() {
+        let l = strip_source("let x = \"panic!\"; // panic! here\n");
+        assert_eq!(l[0].code, "let x = \"\"; ");
+        assert!(l[0].comment.contains("panic! here"));
+        assert!(!l[0].code.contains("panic!"));
+    }
+
+    #[test]
+    fn char_literals_blanked_lifetimes_kept() {
+        let l = strip_source("let c = 'a'; let s: &'static str = \"x\"; let e = '\\n';\n");
+        assert!(l[0].code.contains("&'static str"));
+        assert!(!l[0].code.contains("'a'"));
+        let l2 = strip_source("let q = 'u'; x.unwrap();\n");
+        assert!(l2[0].code.contains(".unwrap()"));
+    }
+
+    #[test]
+    fn raw_strings_and_nested_block_comments() {
+        let l = strip_source("let r = r#\"has .unwrap() inside\"#;\n");
+        assert!(!l[0].code.contains("unwrap"));
+        let l2 = strip_source("/* outer /* inner .unwrap() */ tail */ code()\n");
+        assert!(!l2[0].code.contains("unwrap"));
+        assert!(l2[0].code.contains("code()"));
+        assert!(l2[0].comment.contains("inner"));
+    }
+
+    #[test]
+    fn cfg_test_items_are_masked() {
+        let src = "fn a() {}\n#[cfg(test)]\nmod tests {\n    fn b() { x.unwrap(); }\n}\nfn c() {}\n";
+        let lines = strip_source(src);
+        let m = test_mask(&lines);
+        assert!(!m[0]);
+        assert!(m[1] && m[2] && m[3] && m[4]);
+        assert!(!m[5]);
+    }
+
+    #[test]
+    fn classify_paths() {
+        assert!(classify("rust/src/data/paged.rs").data_plane);
+        assert!(classify("rust/src/storage/pagestore.rs").pagestore);
+        assert!(classify("rust/src/math/chunked.rs").data_plane);
+        assert!(classify("rust/src/math/chunked.rs").determinism);
+        assert!(!classify("rust/src/runtime/pool.rs").data_plane);
+        assert!(!classify("rust/src/data.rs").data_plane);
+    }
+
+    #[test]
+    fn r1_fires_and_allow_suppresses_one() {
+        let src = "fn f(v: Option<u32>) -> u32 {\n    \
+                   // samplex-lint: allow(no-panic-plane) -- reason\n    \
+                   v.unwrap() + v.unwrap()\n}\n";
+        let f = lint_source("src/data/x.rs", src);
+        assert_eq!(rules_of(&f), vec![(3, "no-panic-plane")]);
+    }
+
+    #[test]
+    fn unused_allow_reported_at_annotation_line() {
+        let src = "fn f() {}\n// samplex-lint: allow(determinism) -- nothing here\nfn g() {}\n";
+        let f = lint_source("src/train/parallel.rs", src);
+        assert_eq!(rules_of(&f), vec![(2, "unused-allow")]);
+    }
+
+    #[test]
+    fn malformed_allow_is_bad_allow() {
+        let src = "fn f(v: Option<u32>) -> u32 {\n    \
+                   v.unwrap() // samplex-lint: allow(no-panic-plane)\n}\n";
+        let f = lint_source("src/data/x.rs", src);
+        assert_eq!(rules_of(&f), vec![(2, "no-panic-plane"), (2, "bad-allow")]);
+    }
+
+    #[test]
+    fn relaxed_marker_covers_contiguous_run_only() {
+        let src = "fn f() {\n    \
+                   a.load(Ordering::Relaxed); // relaxed-ok: counter\n    \
+                   b.load(Ordering::Relaxed);\n    \
+                   let x = 1;\n    \
+                   c.load(Ordering::Relaxed);\n}\n";
+        let f = lint_source("src/misc.rs", src);
+        assert_eq!(rules_of(&f), vec![(5, "atomics-audit")]);
+    }
+
+    #[test]
+    fn safety_comment_same_line_or_block_above() {
+        let src = "// SAFETY: p is valid\nunsafe { read(p) }\nunsafe { read(q) }\n";
+        let f = lint_source("src/misc.rs", src);
+        assert_eq!(rules_of(&f), vec![(3, "safety-comments")]);
+    }
+
+    #[test]
+    fn lock_scope_tracks_bindings_and_drop() {
+        let src = "fn bad(&self) {\n    \
+                   let mut shard = lock_recovering(self.shard(id));\n    \
+                   self.file.seek(SeekFrom::Start(0));\n    \
+                   drop(shard);\n    \
+                   self.file.seek(SeekFrom::Start(0));\n}\n";
+        let f = lint_source("src/storage/pagestore.rs", src);
+        assert_eq!(rules_of(&f), vec![(3, "lock-discipline")]);
+    }
+
+    #[test]
+    fn nested_lock_acquisition_flagged() {
+        let src = "fn bad(&self) {\n    \
+                   let f = lock_recovering(&self.file);\n    \
+                   let s = lock_recovering(self.shard(0));\n}\n";
+        let f = lint_source("src/storage/pagestore.rs", src);
+        assert_eq!(rules_of(&f), vec![(3, "lock-discipline")]);
+    }
+}

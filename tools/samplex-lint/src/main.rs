@@ -1,0 +1,45 @@
+//! CLI entry point: `cargo run -p samplex-lint -- rust/src`.
+//!
+//! Prints one `file:line rule message` diagnostic per violation on
+//! stdout (machine-readable, sorted), a summary on stderr, and exits
+//! with 0 (clean), 1 (violations), or 2 (usage / I/O error).
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if args.is_empty() || args.iter().any(|a| a == "-h" || a == "--help") {
+        eprintln!("usage: samplex-lint <file-or-dir>...");
+        eprintln!(
+            "rules: no-panic-plane lock-discipline determinism atomics-audit safety-comments"
+        );
+        eprintln!("suppress with: // samplex-lint: allow(<rule>) -- <reason>");
+        return ExitCode::from(2);
+    }
+    let paths: Vec<PathBuf> = args.iter().map(PathBuf::from).collect();
+    for p in &paths {
+        if !p.exists() {
+            eprintln!("samplex-lint: path not found: {}", p.display());
+            return ExitCode::from(2);
+        }
+    }
+    match samplex_lint::lint_paths(&paths) {
+        Ok(findings) => {
+            for f in &findings {
+                println!("{f}");
+            }
+            if findings.is_empty() {
+                eprintln!("samplex-lint: clean");
+                ExitCode::SUCCESS
+            } else {
+                eprintln!("samplex-lint: {} violation(s)", findings.len());
+                ExitCode::FAILURE
+            }
+        }
+        Err(e) => {
+            eprintln!("samplex-lint: i/o error: {e}");
+            ExitCode::from(2)
+        }
+    }
+}

@@ -1,0 +1,7 @@
+pub fn f(v: Option<u32>) -> u32 {
+    // samplex-lint: allow(no-panic-plane)
+    let a = v.unwrap();
+    // samplex-lint: allow(not-a-rule) -- reason text
+    let b = v.unwrap();
+    a + b
+}

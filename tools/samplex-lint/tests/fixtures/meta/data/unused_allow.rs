@@ -1,0 +1,4 @@
+pub fn g(v: u32) -> u32 {
+    // samplex-lint: allow(no-panic-plane) -- nothing to suppress here
+    v + 1
+}

@@ -1,0 +1,13 @@
+//! One allow annotation suppresses exactly one finding.
+
+pub fn lookup(v: Option<u32>) -> u32 {
+    // samplex-lint: allow(no-panic-plane) -- construction guarantees Some here
+    let first = v.unwrap();
+    let second = v.unwrap();
+    first + second
+}
+
+pub fn pair(a: Option<u32>, b: Option<u32>) -> u32 {
+    // samplex-lint: allow(no-panic-plane) -- left operand is checked by the caller
+    a.unwrap() + b.unwrap()
+}

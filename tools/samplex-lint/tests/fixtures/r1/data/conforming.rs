@@ -1,0 +1,18 @@
+//! Conforming twin: every panic token here is in a string, a comment,
+//! a non-matching method name, or test-only code.
+
+pub fn parse(v: Option<u32>) -> u32 {
+    // unwrap() in a comment is fine; so is panic! here
+    let msg = "calling unwrap() or panic! in a string is data, not code";
+    let a = v.unwrap_or_else(|| msg.len() as u32);
+    a.min(10)
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn test_only_unwrap_is_fine() {
+        super::parse(Some(3));
+        Some(1).unwrap();
+    }
+}

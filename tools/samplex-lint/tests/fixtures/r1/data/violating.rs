@@ -1,0 +1,10 @@
+pub fn parse(v: Option<u32>) -> u32 {
+    let a = v.unwrap();
+    if a > 10 {
+        panic!("too big");
+    }
+    match a {
+        0 => unreachable!("zero handled by caller"),
+        _ => v.expect("checked above"),
+    }
+}

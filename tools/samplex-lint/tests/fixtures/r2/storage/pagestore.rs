@@ -1,0 +1,9 @@
+pub fn read_page(&self, id: u32) -> Page {
+    let mut shard = lock_recovering(self.shard(id));
+    let mut f = lock_recovering(&self.file);
+    f.seek(SeekFrom::Start(self.offset(id)));
+    f.read_exact(&mut self.buf);
+    let page = self.buf.decode(id);
+    drop(f);
+    shard.insert(id, page)
+}

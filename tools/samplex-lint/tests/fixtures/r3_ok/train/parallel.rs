@@ -1,0 +1,11 @@
+pub fn fold(parts: &[f32]) -> f32 {
+    let mut keyed: Vec<(usize, f32)> = Vec::new();
+    for (i, p) in parts.iter().enumerate() {
+        keyed.push((i, *p));
+    }
+    let mut total = 0.0;
+    for (_, v) in &keyed {
+        total += v;
+    }
+    total
+}

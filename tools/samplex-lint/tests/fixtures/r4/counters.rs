@@ -1,0 +1,4 @@
+pub fn bump(c: &AtomicU64, flag: &AtomicBool) {
+    c.fetch_add(1, Ordering::Relaxed);
+    flag.store(true, Ordering::Relaxed);
+}

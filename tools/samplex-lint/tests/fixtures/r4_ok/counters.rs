@@ -1,0 +1,13 @@
+impl Stats {
+    pub fn snapshot(&self) -> (u64, u64) {
+        // relaxed-ok: monotonic stats counters read for reporting only;
+        // no thread observes them for synchronization.
+        let h = self.hits.load(Ordering::Relaxed);
+        let m = self.misses.load(Ordering::Relaxed);
+        (h, m)
+    }
+
+    pub fn hit(&self) {
+        self.hits.fetch_add(1, Ordering::Relaxed); // relaxed-ok: pure counter
+    }
+}

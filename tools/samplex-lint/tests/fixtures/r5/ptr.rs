@@ -1,0 +1,5 @@
+pub fn read_first(p: *const u8) -> u8 {
+    unsafe { *p }
+}
+
+unsafe impl Send for Wrapper {}

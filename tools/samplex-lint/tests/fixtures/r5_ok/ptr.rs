@@ -1,0 +1,11 @@
+pub fn read_first(p: *const u8) -> u8 {
+    // SAFETY: caller contract says `p` points at one readable byte.
+    unsafe { *p }
+}
+
+pub fn read_second(p: *const u8) -> u8 {
+    unsafe { *p.add(1) } // SAFETY: caller contract: two readable bytes.
+}
+
+// SAFETY: Wrapper owns its allocation; no thread-affine state inside.
+unsafe impl Send for Wrapper {}

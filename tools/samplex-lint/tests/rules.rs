@@ -1,0 +1,161 @@
+//! Fixture-backed tests: one violating + one conforming fixture per
+//! rule (R1-R5), exact `line rule` diagnostics, allow suppression, and
+//! the binary's exit-code contract.
+
+use std::path::{Path, PathBuf};
+
+use samplex_lint::lint_source;
+
+fn fixture_path(rel: &str) -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("tests/fixtures").join(rel)
+}
+
+fn lint_fixture(rel: &str) -> Vec<(usize, &'static str)> {
+    let src = std::fs::read_to_string(fixture_path(rel)).unwrap();
+    // lint under the repo-relative style path so classification sees the
+    // same segments CI does
+    let display = format!("tests/fixtures/{rel}");
+    lint_source(&display, &src)
+        .into_iter()
+        .map(|f| (f.line, f.rule.name()))
+        .collect()
+}
+
+#[test]
+fn r1_violating_exact_diagnostics() {
+    assert_eq!(
+        lint_fixture("r1/data/violating.rs"),
+        vec![
+            (2, "no-panic-plane"),
+            (4, "no-panic-plane"),
+            (7, "no-panic-plane"),
+            (8, "no-panic-plane"),
+        ]
+    );
+}
+
+#[test]
+fn r1_conforming_is_clean() {
+    assert!(lint_fixture("r1/data/conforming.rs").is_empty());
+}
+
+#[test]
+fn r1_allow_suppresses_precisely_one_finding() {
+    // two annotated sites: one suppresses the first of two single-finding
+    // lines, one suppresses one of two findings on the same line
+    assert_eq!(
+        lint_fixture("r1/data/allowed.rs"),
+        vec![(6, "no-panic-plane"), (12, "no-panic-plane")]
+    );
+}
+
+#[test]
+fn r2_violating_exact_diagnostics() {
+    assert_eq!(
+        lint_fixture("r2/storage/pagestore.rs"),
+        vec![
+            (3, "lock-discipline"),
+            (4, "lock-discipline"),
+            (5, "lock-discipline"),
+            (6, "lock-discipline"),
+            (6, "lock-discipline"),
+        ]
+    );
+}
+
+#[test]
+fn r2_conforming_is_clean() {
+    assert!(lint_fixture("r2_ok/storage/pagestore.rs").is_empty());
+}
+
+#[test]
+fn r3_violating_exact_diagnostics() {
+    assert_eq!(
+        lint_fixture("r3/train/parallel.rs"),
+        vec![(2, "determinism"), (3, "determinism")]
+    );
+}
+
+#[test]
+fn r3_conforming_is_clean() {
+    assert!(lint_fixture("r3_ok/train/parallel.rs").is_empty());
+}
+
+#[test]
+fn r4_violating_exact_diagnostics() {
+    assert_eq!(
+        lint_fixture("r4/counters.rs"),
+        vec![(2, "atomics-audit"), (3, "atomics-audit")]
+    );
+}
+
+#[test]
+fn r4_conforming_is_clean() {
+    // one block marker covers the contiguous snapshot run; a same-line
+    // marker covers the counter bump
+    assert!(lint_fixture("r4_ok/counters.rs").is_empty());
+}
+
+#[test]
+fn r5_violating_exact_diagnostics() {
+    assert_eq!(
+        lint_fixture("r5/ptr.rs"),
+        vec![(2, "safety-comments"), (5, "safety-comments")]
+    );
+}
+
+#[test]
+fn r5_conforming_is_clean() {
+    assert!(lint_fixture("r5_ok/ptr.rs").is_empty());
+}
+
+#[test]
+fn malformed_and_unknown_allows_are_bad_allow() {
+    assert_eq!(
+        lint_fixture("meta/data/bad_allow.rs"),
+        vec![
+            (2, "bad-allow"),
+            (3, "no-panic-plane"),
+            (4, "bad-allow"),
+            (5, "no-panic-plane"),
+        ]
+    );
+}
+
+#[test]
+fn allow_that_suppresses_nothing_is_unused_allow() {
+    assert_eq!(lint_fixture("meta/data/unused_allow.rs"), vec![(2, "unused-allow")]);
+}
+
+#[test]
+fn binary_exits_nonzero_with_diagnostics_on_violations() {
+    let out = std::process::Command::new(env!("CARGO_BIN_EXE_samplex-lint"))
+        .arg(fixture_path("r1/data/violating.rs"))
+        .output()
+        .unwrap();
+    assert_eq!(out.status.code(), Some(1));
+    let stdout = String::from_utf8(out.stdout).unwrap();
+    assert!(
+        stdout.contains("violating.rs:2 no-panic-plane"),
+        "machine-readable file:line rule output expected, got:\n{stdout}"
+    );
+}
+
+#[test]
+fn binary_exits_zero_on_clean_tree() {
+    let out = std::process::Command::new(env!("CARGO_BIN_EXE_samplex-lint"))
+        .arg(fixture_path("r1/data/conforming.rs"))
+        .output()
+        .unwrap();
+    assert_eq!(out.status.code(), Some(0));
+    assert!(out.stdout.is_empty());
+}
+
+#[test]
+fn binary_exits_2_on_bad_usage() {
+    let out = std::process::Command::new(env!("CARGO_BIN_EXE_samplex-lint"))
+        .arg("no/such/path.rs")
+        .output()
+        .unwrap();
+    assert_eq!(out.status.code(), Some(2));
+}
