@@ -2,7 +2,10 @@
 //!
 //! * `BENCH_compute.json` — full-objective and full-gradient sweep
 //!   throughput at 1 thread vs the pool default, on a ≥100k-row dense
-//!   synthetic and a sparse (CSR) synthetic.
+//!   synthetic and a sparse (CSR) synthetic; plus a scalar-vs-SIMD
+//!   kernel arm (ns/row per sweep with the dispatch table forced each
+//!   way) that asserts the SIMD table is never slower than the portable
+//!   scalar kernels on the dense sweeps.
 //! * `BENCH_io.json` — the paged store under CS vs SS vs RS epochs at
 //!   resident-pool budgets of 10% / 50% / 100% of the file size: page
 //!   faults, read syscalls, achieved MB/s and read amplification. The
@@ -26,6 +29,7 @@ use samplex::data::batch::BatchAssembler;
 use samplex::data::synth::{self, FeatureDist, SparseSynthSpec, SynthSpec};
 use samplex::data::{Dataset, PagedDataset};
 use samplex::math::chunked::{self, GradScratch};
+use samplex::math::simd;
 use samplex::runtime::pool;
 use samplex::sampling::{Sampler, SamplingKind};
 
@@ -165,10 +169,71 @@ fn main() -> samplex::Result<()> {
         entries.push(json_entry(ds.name(), ds.rows(), ds.nnz(), &t1, &tn, n_threads));
     }
 
+    // scalar-vs-SIMD arm: the same sweeps at 1 thread with the kernel
+    // table forced, so the dispatch win is measured in isolation from
+    // pool scaling. The bits are identical either way (asserted in the
+    // determinism suite); here only the clock may differ.
+    println!(
+        "\nkernel dispatch: scalar vs best-detected (`{}`), 1 thread",
+        simd::best().name
+    );
+    let mut arm_entries = Vec::new();
+    let mut dense_by_arm: Vec<(&'static str, SweepTimes)> = Vec::new();
+    for force_scalar in [true, false] {
+        if force_scalar {
+            simd::force_scalar();
+        } else {
+            simd::force_best();
+        }
+        let arm = simd::active_name();
+        let wd: Vec<f32> =
+            (0..dense.cols()).map(|k| ((k % 17) as f32 - 8.0) * 0.02).collect();
+        let ws: Vec<f32> =
+            (0..sparse.cols()).map(|k| ((k % 17) as f32 - 8.0) * 0.02).collect();
+        let td = time_sweeps(&dense, &wd, 1);
+        let ts = time_sweeps(&sparse, &ws, 1);
+        println!(
+            "{:<8} dense objective {:>8.2} ns/row, gradient {:>8.2} ns/row   csr objective {:>8.2} ns/row, gradient {:>8.2} ns/row",
+            arm, td.obj_ns_per_row, td.grad_ns_per_row, ts.obj_ns_per_row, ts.grad_ns_per_row,
+        );
+        arm_entries.push(format!(
+            concat!(
+                "    {{\n",
+                "      \"kernels\": \"{}\",\n",
+                "      \"dense_objective_ns_per_row\": {:.3},\n",
+                "      \"dense_gradient_ns_per_row\": {:.3},\n",
+                "      \"csr_objective_ns_per_row\": {:.3},\n",
+                "      \"csr_gradient_ns_per_row\": {:.3}\n",
+                "    }}"
+            ),
+            arm, td.obj_ns_per_row, td.grad_ns_per_row, ts.obj_ns_per_row, ts.grad_ns_per_row,
+        ));
+        dense_by_arm.push((arm, td));
+    }
+    simd::force_best();
+    // the CI gate: when a SIMD table was detected, the dense sweeps must
+    // not run slower than the portable scalar kernels
+    if dense_by_arm[1].0 != "scalar" {
+        let (scalar, vec) = (&dense_by_arm[0].1, &dense_by_arm[1].1);
+        assert!(
+            vec.obj_ns_per_row <= scalar.obj_ns_per_row,
+            "SIMD dense objective slower than scalar: {:.2} vs {:.2} ns/row",
+            vec.obj_ns_per_row,
+            scalar.obj_ns_per_row
+        );
+        assert!(
+            vec.grad_ns_per_row <= scalar.grad_ns_per_row,
+            "SIMD dense gradient slower than scalar: {:.2} vs {:.2} ns/row",
+            vec.grad_ns_per_row,
+            scalar.grad_ns_per_row
+        );
+    }
+
     let json = format!(
-        "{{\n  \"bench\": \"compute_plane_sweeps\",\n  \"threads_default\": {},\n  \"sweeps\": [\n{}\n  ]\n}}\n",
+        "{{\n  \"bench\": \"compute_plane_sweeps\",\n  \"threads_default\": {},\n  \"sweeps\": [\n{}\n  ],\n  \"kernel_arms\": [\n{}\n  ]\n}}\n",
         n_threads,
-        entries.join(",\n")
+        entries.join(",\n"),
+        arm_entries.join(",\n")
     );
     std::fs::write("BENCH_compute.json", &json)?;
     println!("\nwrote BENCH_compute.json");

@@ -1,0 +1,391 @@
+//! 64-byte-aligned heap buffers for the SIMD compute plane.
+//!
+//! [`AlignedVec`] is a minimal `Vec<T>` work-alike whose backing allocation
+//! is always [`ALIGN`]-byte (cache-line / AVX-512-register) aligned. Every
+//! buffer the hot kernels stream — dataset feature regions, decoded pages,
+//! weight/gradient vectors, per-chunk sweep scratch — is allocated through
+//! it, so vector loads never split a cache line at the buffer head and the
+//! kernels may later be upgraded to aligned loads without re-plumbing the
+//! owners.
+//!
+//! Scope is deliberately tiny: `T: Copy` only (no drop glue, so truncation
+//! and reallocation are plain byte copies), no `into_iter`, no spare-capacity
+//! API. It dereferences to `[T]`, which is how every consumer touches it —
+//! the kernels themselves only ever see slices.
+//!
+//! The unit tests below run under Miri in CI (`aligned` filter) to check the
+//! raw-pointer arithmetic, reallocation copies, and `Send` hand-off.
+
+use std::alloc::{alloc, dealloc, handle_alloc_error, Layout};
+use std::ops::{Deref, DerefMut};
+use std::ptr::NonNull;
+
+/// Alignment (bytes) of every `AlignedVec` allocation: one x86 cache line,
+/// and enough for any SSE/AVX/AVX-512/NEON vector load.
+pub const ALIGN: usize = 64;
+
+/// A growable, [`ALIGN`]-byte-aligned buffer of `Copy` elements.
+///
+/// Invariants: `ptr` is either dangling (`cap == 0`) or a live allocation of
+/// `cap` elements aligned to [`ALIGN`]; the first `len <= cap` elements are
+/// initialized.
+pub struct AlignedVec<T: Copy> {
+    ptr: NonNull<T>,
+    len: usize,
+    cap: usize,
+}
+
+impl<T: Copy> AlignedVec<T> {
+    /// An empty buffer; does not allocate.
+    pub const fn new() -> Self {
+        AlignedVec { ptr: NonNull::dangling(), len: 0, cap: 0 }
+    }
+
+    /// An empty buffer with room for `cap` elements.
+    pub fn with_capacity(cap: usize) -> Self {
+        let mut v = Self::new();
+        if cap > 0 {
+            v.ptr = Self::alloc_buf(cap);
+            v.cap = cap;
+        }
+        v
+    }
+
+    /// A buffer holding `n` copies of `value`.
+    pub fn from_elem(value: T, n: usize) -> Self {
+        let mut v = Self::with_capacity(n);
+        for _ in 0..n {
+            v.push(value);
+        }
+        v
+    }
+
+    /// A buffer holding a copy of `s`.
+    pub fn from_slice(s: &[T]) -> Self {
+        let mut v = Self::with_capacity(s.len());
+        v.extend_from_slice(s);
+        v
+    }
+
+    /// The allocation layout for `cap` elements — recomputed identically at
+    /// alloc and dealloc time, as the allocator contract requires.
+    fn layout(cap: usize) -> Layout {
+        match Layout::array::<T>(cap).and_then(|l| l.align_to(ALIGN)) {
+            Ok(l) => l,
+            Err(_) => panic!("AlignedVec capacity overflow"),
+        }
+    }
+
+    fn alloc_buf(cap: usize) -> NonNull<T> {
+        assert!(std::mem::size_of::<T>() > 0, "AlignedVec does not support ZSTs");
+        let layout = Self::layout(cap);
+        // SAFETY: cap > 0 and T is not a ZST (asserted above), so the layout
+        // has non-zero size — the precondition of `alloc`.
+        let raw = unsafe { alloc(layout) };
+        match NonNull::new(raw as *mut T) {
+            Some(p) => p,
+            None => handle_alloc_error(layout),
+        }
+    }
+
+    /// Number of initialized elements.
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    /// True when no elements are initialized.
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Allocated capacity in elements.
+    #[inline]
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    /// The initialized elements as a slice.
+    #[inline]
+    pub fn as_slice(&self) -> &[T] {
+        // SAFETY: the first `len` elements are initialized (struct
+        // invariant) and `ptr` is valid for `len` reads (dangling only when
+        // len == 0, which from_raw_parts permits).
+        unsafe { std::slice::from_raw_parts(self.ptr.as_ptr(), self.len) }
+    }
+
+    /// The initialized elements as a mutable slice.
+    #[inline]
+    pub fn as_mut_slice(&mut self) -> &mut [T] {
+        // SAFETY: same invariant as `as_slice`; `&mut self` gives unique
+        // access to the buffer.
+        unsafe { std::slice::from_raw_parts_mut(self.ptr.as_ptr(), self.len) }
+    }
+
+    /// Ensure room for at least `additional` more elements. Growth
+    /// reallocates (alloc + copy + dealloc — there is no aligned realloc)
+    /// with doubling, so repeated `push` is amortized O(1).
+    pub fn reserve(&mut self, additional: usize) {
+        let need = match self.len.checked_add(additional) {
+            Some(n) => n,
+            None => panic!("AlignedVec capacity overflow"),
+        };
+        if need <= self.cap {
+            return;
+        }
+        let new_cap = need.max(self.cap * 2).max(8);
+        let new_ptr = Self::alloc_buf(new_cap);
+        if self.cap > 0 {
+            // SAFETY: both pointers are valid for `len` elements (old
+            // buffer holds len initialized elements; new_cap >= need > len)
+            // and distinct allocations cannot overlap.
+            unsafe {
+                std::ptr::copy_nonoverlapping(self.ptr.as_ptr(), new_ptr.as_ptr(), self.len);
+            }
+            // SAFETY: `ptr` was allocated with exactly `layout(cap)`.
+            unsafe { dealloc(self.ptr.as_ptr() as *mut u8, Self::layout(self.cap)) };
+        }
+        self.ptr = new_ptr;
+        self.cap = new_cap;
+    }
+
+    /// Append one element.
+    #[inline]
+    pub fn push(&mut self, value: T) {
+        if self.len == self.cap {
+            self.reserve(1);
+        }
+        // SAFETY: len < cap after the reserve, so the write is in bounds of
+        // the allocation.
+        unsafe { self.ptr.as_ptr().add(self.len).write(value) };
+        self.len += 1;
+    }
+
+    /// Append a copy of every element of `s`.
+    pub fn extend_from_slice(&mut self, s: &[T]) {
+        self.reserve(s.len());
+        // SAFETY: capacity holds len + s.len() elements after the reserve;
+        // `s` cannot overlap the destination (we hold &mut self).
+        unsafe {
+            std::ptr::copy_nonoverlapping(s.as_ptr(), self.ptr.as_ptr().add(self.len), s.len());
+        }
+        self.len += s.len();
+    }
+
+    /// Drop all elements (`T: Copy` — no drop glue, so this is `len = 0`).
+    #[inline]
+    pub fn clear(&mut self) {
+        self.len = 0;
+    }
+
+    /// Shorten to `n` elements; no-op when already shorter.
+    #[inline]
+    pub fn truncate(&mut self, n: usize) {
+        if n < self.len {
+            self.len = n;
+        }
+    }
+
+    /// Resize to exactly `n` elements, filling new tail slots with `value`.
+    pub fn resize(&mut self, n: usize, value: T) {
+        if n <= self.len {
+            self.len = n;
+            return;
+        }
+        self.reserve(n - self.len);
+        while self.len < n {
+            // SAFETY: len < n <= cap, so the write is in bounds.
+            unsafe { self.ptr.as_ptr().add(self.len).write(value) };
+            self.len += 1;
+        }
+    }
+}
+
+// SAFETY: AlignedVec owns its allocation exclusively (no interior sharing),
+// so moving it to another thread is sound whenever T itself is Send.
+unsafe impl<T: Copy + Send> Send for AlignedVec<T> {}
+// SAFETY: &AlignedVec only exposes &[T]; concurrent shared reads are sound
+// whenever T is Sync.
+unsafe impl<T: Copy + Sync> Sync for AlignedVec<T> {}
+
+impl<T: Copy> Drop for AlignedVec<T> {
+    fn drop(&mut self) {
+        if self.cap > 0 {
+            // SAFETY: `ptr` was allocated with exactly `layout(cap)` and is
+            // released exactly once (Drop).
+            unsafe { dealloc(self.ptr.as_ptr() as *mut u8, Self::layout(self.cap)) };
+        }
+    }
+}
+
+impl<T: Copy> Deref for AlignedVec<T> {
+    type Target = [T];
+
+    #[inline]
+    fn deref(&self) -> &[T] {
+        self.as_slice()
+    }
+}
+
+impl<T: Copy> DerefMut for AlignedVec<T> {
+    #[inline]
+    fn deref_mut(&mut self) -> &mut [T] {
+        self.as_mut_slice()
+    }
+}
+
+impl<T: Copy> Default for AlignedVec<T> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<T: Copy> Clone for AlignedVec<T> {
+    fn clone(&self) -> Self {
+        Self::from_slice(self)
+    }
+}
+
+impl<T: Copy + std::fmt::Debug> std::fmt::Debug for AlignedVec<T> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        self.as_slice().fmt(f)
+    }
+}
+
+impl<T: Copy + PartialEq> PartialEq for AlignedVec<T> {
+    fn eq(&self, other: &Self) -> bool {
+        self.as_slice() == other.as_slice()
+    }
+}
+
+impl<T: Copy + PartialEq> PartialEq<[T]> for AlignedVec<T> {
+    fn eq(&self, other: &[T]) -> bool {
+        self.as_slice() == other
+    }
+}
+
+impl<T: Copy + PartialEq> PartialEq<Vec<T>> for AlignedVec<T> {
+    fn eq(&self, other: &Vec<T>) -> bool {
+        self.as_slice() == other.as_slice()
+    }
+}
+
+impl<'a, T: Copy> IntoIterator for &'a AlignedVec<T> {
+    type Item = &'a T;
+    type IntoIter = std::slice::Iter<'a, T>;
+
+    fn into_iter(self) -> Self::IntoIter {
+        self.as_slice().iter()
+    }
+}
+
+impl<T: Copy> FromIterator<T> for AlignedVec<T> {
+    fn from_iter<I: IntoIterator<Item = T>>(iter: I) -> Self {
+        let iter = iter.into_iter();
+        let mut v = Self::with_capacity(iter.size_hint().0);
+        for item in iter {
+            v.push(item);
+        }
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn is_aligned<T: Copy>(v: &AlignedVec<T>) -> bool {
+        v.capacity() == 0 || (v.as_slice().as_ptr() as usize) % ALIGN == 0
+    }
+
+    #[test]
+    fn empty_does_not_allocate_and_derefs() {
+        let v: AlignedVec<f32> = AlignedVec::new();
+        assert_eq!(v.len(), 0);
+        assert!(v.is_empty());
+        assert_eq!(v.capacity(), 0);
+        assert_eq!(&v[..], &[] as &[f32]);
+        let d: AlignedVec<f32> = AlignedVec::default();
+        assert!(d.is_empty());
+    }
+
+    #[test]
+    fn allocation_is_64_byte_aligned_through_growth() {
+        let mut v: AlignedVec<f32> = AlignedVec::new();
+        for i in 0..1000 {
+            v.push(i as f32);
+            assert!(is_aligned(&v), "misaligned at len {}", v.len());
+        }
+        assert_eq!(v.len(), 1000);
+        for (i, x) in v.iter().enumerate() {
+            assert_eq!(*x, i as f32, "growth copy lost element {i}");
+        }
+        let u: AlignedVec<u32> = AlignedVec::with_capacity(7);
+        assert!(is_aligned(&u));
+        let d: AlignedVec<f64> = AlignedVec::from_elem(1.5, 33);
+        assert!(is_aligned(&d));
+        assert!(d.iter().all(|&x| x == 1.5));
+    }
+
+    #[test]
+    fn from_slice_and_clone_copy_bits() {
+        let src: Vec<f32> = (0..97).map(|k| k as f32 * 0.5 - 3.0).collect();
+        let v = AlignedVec::from_slice(&src);
+        assert_eq!(v, src);
+        assert_ne!(v.as_ptr(), src.as_ptr());
+        let c = v.clone();
+        assert_eq!(c, v);
+        assert_ne!(c.as_ptr(), v.as_ptr());
+        assert!(is_aligned(&c));
+    }
+
+    #[test]
+    fn extend_resize_truncate_clear() {
+        let mut v: AlignedVec<u32> = AlignedVec::new();
+        v.extend_from_slice(&[1, 2, 3]);
+        v.extend_from_slice(&[]);
+        v.extend_from_slice(&[4, 5]);
+        assert_eq!(v, vec![1, 2, 3, 4, 5]);
+        v.resize(8, 9);
+        assert_eq!(v, vec![1, 2, 3, 4, 5, 9, 9, 9]);
+        v.resize(2, 0);
+        assert_eq!(v, vec![1, 2]);
+        v.truncate(10); // no-op
+        assert_eq!(v.len(), 2);
+        v.truncate(1);
+        assert_eq!(v, vec![1]);
+        v.clear();
+        assert!(v.is_empty());
+        // buffer is reusable after clear
+        v.push(7);
+        assert_eq!(v, vec![7]);
+    }
+
+    #[test]
+    fn mutation_through_deref_mut() {
+        let mut v = AlignedVec::from_elem(0f32, 16);
+        v.fill(2.0);
+        v[3] = -1.0;
+        for (k, x) in v.iter().enumerate() {
+            assert_eq!(*x, if k == 3 { -1.0 } else { 2.0 });
+        }
+        v.as_mut_slice().copy_from_slice(&[1.0; 16]);
+        assert!(v.iter().all(|&x| x == 1.0));
+    }
+
+    #[test]
+    fn collects_from_iterator() {
+        let v: AlignedVec<u32> = (0..40u32).collect();
+        assert_eq!(v.len(), 40);
+        assert_eq!(v[39], 39);
+        assert!(is_aligned(&v));
+    }
+
+    #[test]
+    fn send_hand_off_to_another_thread() {
+        let v = AlignedVec::from_slice(&[1.0f32, 2.0, 3.0]);
+        let sum = std::thread::spawn(move || v.iter().sum::<f32>()).join().unwrap();
+        assert_eq!(sum, 6.0);
+    }
+}

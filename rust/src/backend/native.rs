@@ -4,6 +4,12 @@
 //! layout: dense batches run the row-major kernels, CSR batches the
 //! nnz-proportional sparse kernels. Solvers above this line are
 //! layout-blind.
+//!
+//! Every kernel reached from here is itself runtime-dispatched through the
+//! [`crate::math::simd::KernelSet`] table (AVX2 / NEON / portable scalar,
+//! resolved once per process), so this backend never names an instruction
+//! set — and [`kernel_set`](NativeBackend::kernel_set) reports which table
+//! is live for bench labels and logs.
 
 use crate::backend::ComputeBackend;
 use crate::data::batch::BatchView;
@@ -17,6 +23,12 @@ impl NativeBackend {
     /// Construct the native backend.
     pub fn new() -> Self {
         NativeBackend
+    }
+
+    /// Name of the kernel table this backend's math runs on (`"scalar"`,
+    /// `"avx2"`, or `"neon"`), resolved by [`crate::math::simd::active`].
+    pub fn kernel_set(&self) -> &'static str {
+        crate::math::simd::active_name()
     }
 }
 
@@ -132,6 +144,13 @@ mod tests {
         let a = be.full_objective(&w, &dense.into(), 0.05).unwrap();
         let b = be.full_objective(&w, &Dataset::Csr(csr), 0.05).unwrap();
         assert!((a - b).abs() < 1e-6 * (1.0 + a.abs()), "{a} vs {b}");
+    }
+
+    #[test]
+    fn kernel_set_reports_active_table() {
+        let be = NativeBackend::new();
+        let name = be.kernel_set();
+        assert!(["scalar", "avx2", "neon"].contains(&name), "{name}");
     }
 
     #[test]

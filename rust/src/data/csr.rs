@@ -33,6 +33,7 @@
 use std::io::{BufReader, BufWriter, Read, Write};
 use std::path::Path;
 
+use crate::aligned::AlignedVec;
 use crate::data::batch::CsrView;
 use crate::data::dense::DenseDataset;
 use crate::error::{Error, Result};
@@ -51,10 +52,12 @@ pub struct CsrDataset {
     pub name: String,
     cols: usize,
     /// Non-zero values, length `nnz`, row-major (row r's values are
-    /// `values[row_ptr[r]..row_ptr[r+1]]`).
-    values: Vec<f32>,
-    /// Column index of each value, strictly increasing within a row.
-    col_idx: Vec<u32>,
+    /// `values[row_ptr[r]..row_ptr[r+1]]`), in a 64-byte-aligned region for
+    /// the SIMD gather kernels.
+    values: AlignedVec<f32>,
+    /// Column index of each value, strictly increasing within a row; aligned
+    /// like `values`.
+    col_idx: AlignedVec<u32>,
     /// Row start offsets into `values`/`col_idx`, length `rows + 1`.
     row_ptr: Vec<u64>,
     /// Labels in {-1, +1}, length `rows`.
@@ -110,7 +113,14 @@ impl CsrDataset {
         if let Some(bad) = y.iter().find(|v| **v != 1.0 && **v != -1.0) {
             return Err(Error::Config(format!("label not in {{-1,+1}}: {bad}")));
         }
-        Ok(CsrDataset { name: name.into(), cols, values, col_idx, row_ptr, y })
+        Ok(CsrDataset {
+            name: name.into(),
+            cols,
+            values: AlignedVec::from_slice(&values),
+            col_idx: AlignedVec::from_slice(&col_idx),
+            row_ptr,
+            y,
+        })
     }
 
     /// Number of data points `l`.
@@ -218,8 +228,8 @@ impl CsrDataset {
         let mut rng = crate::rng::Rng::seed_from(seed ^ 0x5817_FFAA);
         let mut perm: Vec<u32> = (0..rows as u32).collect();
         rng.shuffle(&mut perm);
-        let mut values = Vec::with_capacity(self.nnz());
-        let mut col_idx = Vec::with_capacity(self.nnz());
+        let mut values = AlignedVec::with_capacity(self.nnz());
+        let mut col_idx = AlignedVec::with_capacity(self.nnz());
         let mut row_ptr = Vec::with_capacity(rows + 1);
         let mut y = Vec::with_capacity(rows);
         row_ptr.push(0u64);

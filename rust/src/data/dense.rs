@@ -20,6 +20,7 @@
 use std::io::{BufReader, BufWriter, Read, Write};
 use std::path::Path;
 
+use crate::aligned::AlignedVec;
 use crate::error::{Error, Result};
 
 const MAGIC: &[u8; 4] = b"SXB1";
@@ -34,8 +35,9 @@ pub struct DenseDataset {
     pub name: String,
     rows: usize,
     cols: usize,
-    /// Row-major features, `rows * cols`.
-    x: Vec<f32>,
+    /// Row-major features, `rows * cols`, in a 64-byte-aligned region so
+    /// SIMD row sweeps never split the first cache line.
+    x: AlignedVec<f32>,
     /// Labels in {-1, +1}, length `rows`.
     y: Vec<f32>,
 }
@@ -57,7 +59,7 @@ impl DenseDataset {
         if let Some(bad) = y.iter().find(|v| **v != 1.0 && **v != -1.0) {
             return Err(Error::Config(format!("label not in {{-1,+1}}: {bad}")));
         }
-        Ok(DenseDataset { name: name.into(), rows, cols, x, y })
+        Ok(DenseDataset { name: name.into(), rows, cols, x: AlignedVec::from_slice(&x), y })
     }
 
     /// Number of data points `l`.

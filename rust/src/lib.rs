@@ -90,6 +90,20 @@
 //! `pool_threads = 1` in a config, or
 //! [`runtime::pool::set_parallelism`]`(1)` when reproducing paper
 //! figures.
+//!
+//! The hot kernels underneath those sweeps ([`math::simd`]) are
+//! **runtime-dispatched**: one startup CPU-feature probe selects the AVX2
+//! (x86-64), NEON (aarch64), or portable-scalar kernel set, cached in a
+//! function table. Every set performs the same arithmetic in the same
+//! order — fixed virtual lane counts, fixed reduction trees, shared
+//! remainder handling, no FMA contraction — so the dispatch choice is also
+//! a pure wall-clock knob: trajectories are **bit-identical scalar vs
+//! SIMD** (pin with `SAMPLEX_FORCE_SCALAR=1` or `--force-scalar`; CI runs
+//! the suite both ways and the determinism suite compares full solver
+//! trajectories across sets). Feature regions, decoded pages, and solver
+//! state live in 64-byte [`aligned::AlignedVec`] buffers so vector loads
+//! never split cache lines, and full dense sweeps are cache-blocked past
+//! 4 K columns (`math::logistic`) so `w` stays L1/L2-resident.
 //! * **Layer 2** — JAX model (`python/compile/model.py`): mini-batch
 //!   gradient/objective and fused solver update steps, AOT-lowered once per
 //!   (batch, features) shape to HLO text under `artifacts/`.
@@ -122,7 +136,11 @@
 //!   `train/parallel.rs`, `backend/native.rs`);
 //! * **atomics-audit** — every `Ordering::Relaxed` is an annotated stats
 //!   counter, never a synchronization flag;
-//! * **safety-comments** — every `unsafe` carries a `// SAFETY:` account.
+//! * **safety-comments** — every `unsafe` carries a `// SAFETY:` account;
+//! * **simd-dispatch** — `#[target_feature]` kernels are defined in
+//!   `math/simd/` only and reached only through the dispatched
+//!   [`math::simd::KernelSet`] table, never called directly (calling one
+//!   on a CPU without the feature is UB; the table is probed once).
 //!
 //! `INVARIANTS.md` at the repo root documents each rule, the escape hatch
 //! (a per-site `allow(rule) -- reason` annotation), and the Miri /
@@ -140,6 +158,7 @@
 //! println!("{}", report.summary());
 //! ```
 
+pub mod aligned;
 pub mod backend;
 pub mod bench_harness;
 pub mod config;

@@ -22,6 +22,11 @@
 //!                 [--backend B] [--storage P] [--data-dir data] [--csv-dir d]
 //! samplex estimate-optimum [--dataset D] [--iters N] [--data-dir data]
 //! samplex info    [--artifacts-dir artifacts]
+//!
+//! any command: [--force-scalar]
+//!                 (pin compute to the portable scalar kernels — mirror of
+//!                  SAMPLEX_FORCE_SCALAR=1; trajectories are bit-identical
+//!                  to the SIMD path either way)
 //! ```
 //!
 //! Argument parsing is hand-rolled: the workspace builds fully offline with
@@ -121,6 +126,20 @@ fn main() {
 }
 
 fn run(args: &[String]) -> Result<()> {
+    // global switch, valid before or after the subcommand: pin the compute
+    // plane to the portable scalar kernels (mirror of SAMPLEX_FORCE_SCALAR=1)
+    let args: Vec<String> = args
+        .iter()
+        .filter(|a| {
+            if a.as_str() == "--force-scalar" {
+                samplex::math::simd::force_scalar();
+                false
+            } else {
+                true
+            }
+        })
+        .cloned()
+        .collect();
     let Some(cmd) = args.first() else {
         return Err(Error::Config("missing subcommand".into()));
     };
@@ -554,5 +573,14 @@ mod tests {
     #[test]
     fn info_runs_without_artifacts() {
         run(&s(&["info", "--artifacts-dir", "/nonexistent"])).unwrap();
+    }
+
+    #[test]
+    fn force_scalar_flag_is_stripped_and_pins_scalar() {
+        // global switch: consumed before subcommand dispatch (position-free),
+        // so the hand-rolled parser never sees it
+        run(&s(&["--force-scalar", "help"])).unwrap();
+        assert_eq!(samplex::math::simd::active_name(), "scalar");
+        run(&s(&["help", "--force-scalar"])).unwrap();
     }
 }

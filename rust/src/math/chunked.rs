@@ -27,6 +27,7 @@
 //! them serially in order, reuse the scratch for the next wave. The wave
 //! width is a constant, so it never perturbs the fold order.
 
+use crate::aligned::AlignedVec;
 use crate::data::batch::{BatchView, OwnedBatch};
 use crate::data::Dataset;
 use crate::error::Result;
@@ -47,14 +48,15 @@ pub const WAVE_SLOTS: usize = 32;
 /// sweep lifetime, not per sweep.
 #[derive(Debug, Default)]
 pub struct GradScratch {
-    slots: Vec<Vec<f32>>,
+    slots: Vec<AlignedVec<f32>>,
 }
 
 impl GradScratch {
-    /// Make at least `wave` slots of length `cols` available.
+    /// Make at least `wave` slots of length `cols` available (64-byte
+    /// aligned so the SIMD axpy fold never splits a cache line).
     fn ensure(&mut self, wave: usize, cols: usize) {
         if self.slots.len() < wave {
-            self.slots.resize_with(wave, Vec::new);
+            self.slots.resize_with(wave, AlignedVec::new);
         }
         for s in &mut self.slots[..wave] {
             s.resize(cols, 0.0);

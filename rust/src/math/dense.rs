@@ -1,50 +1,38 @@
 //! Dense vector primitives (f32 storage, f64 accumulation for reductions).
 //!
 //! The solver algebra is O(n) per iteration — negligible next to the O(Bn)
-//! gradient — but it runs every inner iteration, so these are allocation-free
-//! and written to autovectorize.
+//! gradient — but it runs every inner iteration, so these are
+//! allocation-free. Since PR 7 each primitive is a thin front door over the
+//! runtime-dispatched [`simd`] kernel table: one relaxed-free atomic load
+//! picks the scalar / AVX2 / NEON set, and every set performs the same
+//! arithmetic in the same order, so results are bit-identical across sets
+//! (see `math/simd` module docs for the three rules that guarantee it).
+//!
+//! [`simd`]: crate::math::simd
 
-/// `y += a * x` (8-lane unrolled via chunks_exact so the bounds checks
-/// vanish and the loop vectorizes; see EXPERIMENTS.md §Perf).
+use super::simd;
+
+/// `y += a * x` (8-lane unrolled; SIMD sets use 256-bit mul+add, never FMA,
+/// so the result is bit-identical to the scalar loop).
 #[inline]
 pub fn axpy(a: f32, x: &[f32], y: &mut [f32]) {
     debug_assert_eq!(x.len(), y.len());
-    let mut yc = y.chunks_exact_mut(8);
-    let mut xc = x.chunks_exact(8);
-    for (ys, xs) in (&mut yc).zip(&mut xc) {
-        for k in 0..8 {
-            ys[k] += a * xs[k];
-        }
-    }
-    for (yi, xi) in yc.into_remainder().iter_mut().zip(xc.remainder()) {
-        *yi += a * *xi;
-    }
+    (simd::active().axpy)(a, x, y)
 }
 
-/// `x *= a` (8-lane unrolled like [`axpy`]; elementwise, so bit-identical
-/// to the naive loop).
+/// `x *= a` (elementwise, so bit-identical to the naive loop on every set).
 #[inline]
 pub fn scal(a: f32, x: &mut [f32]) {
-    let mut xc = x.chunks_exact_mut(8);
-    for xs in &mut xc {
-        for k in 0..8 {
-            xs[k] *= a;
-        }
-    }
-    for xi in xc.into_remainder() {
-        *xi *= a;
-    }
+    (simd::active().scal)(a, x)
 }
 
-/// Dot product with f64 accumulator.
+/// Dot product with f64 accumulation over four fixed lanes (chain `k` takes
+/// elements `4i + k`; fixed tree-sum finish). All sets share the layout, so
+/// the value is bit-identical scalar vs SIMD.
 #[inline]
 pub fn dot(x: &[f32], y: &[f32]) -> f64 {
     debug_assert_eq!(x.len(), y.len());
-    let mut acc = 0f64;
-    for (xi, yi) in x.iter().zip(y) {
-        acc += (*xi as f64) * (*yi as f64);
-    }
-    acc
+    (simd::active().dot)(x, y)
 }
 
 /// Squared Euclidean norm with f64 accumulation.
@@ -54,90 +42,41 @@ pub fn dot(x: &[f32], y: &[f32]) -> f64 {
 /// as wide); the fixed tree-sum keeps results deterministic.
 #[inline]
 pub fn nrm2_sq(x: &[f32]) -> f64 {
-    let mut acc = [0f64; 4];
-    let mut xc = x.chunks_exact(4);
-    for xs in &mut xc {
-        for k in 0..4 {
-            acc[k] += (xs[k] as f64) * (xs[k] as f64);
-        }
-    }
-    let mut tail = 0f64;
-    for xi in xc.remainder() {
-        tail += (*xi as f64) * (*xi as f64);
-    }
-    ((acc[0] + acc[1]) + (acc[2] + acc[3])) + tail
+    (simd::active().nrm2_sq)(x)
 }
 
 /// f32 dot used in the row-major matvec hot loop.
 ///
 /// Strict-IEEE f32 `acc += x*y` is a serial dependency chain the compiler
 /// must not reorder, so the naive loop runs at ~1 add per 4 cycles. Eight
-/// independent accumulators break the chain (≈4–5× on this hot path — see
-/// EXPERIMENTS.md §Perf); the final tree-sum changes association, which is
-/// fine at the f32 tolerance the backends are compared under.
+/// independent accumulator lanes break the chain (≈4–5× on this hot path —
+/// see EXPERIMENTS.md §Perf); lane `k` takes elements `8i + k`, finished by
+/// the fixed tree-sum, so scalar, AVX2, and NEON agree bit-for-bit.
 #[inline]
 pub fn dot_f32(x: &[f32], y: &[f32]) -> f32 {
     debug_assert_eq!(x.len(), y.len());
-    let mut acc = [0f32; 8];
-    let mut xc = x.chunks_exact(8);
-    let mut yc = y.chunks_exact(8);
-    for (xs, ys) in (&mut xc).zip(&mut yc) {
-        for k in 0..8 {
-            acc[k] += xs[k] * ys[k];
-        }
-    }
-    let mut tail = 0f32;
-    for (xi, yi) in xc.remainder().iter().zip(yc.remainder()) {
-        tail += xi * yi;
-    }
-    (((acc[0] + acc[1]) + (acc[2] + acc[3])) + ((acc[4] + acc[5]) + (acc[6] + acc[7]))) + tail
+    (simd::active().dot_f32)(x, y)
 }
 
 /// Four simultaneous dot products against a shared `w`: `w` streams through
-/// registers once for four rows, and the four accumulator chains keep the
-/// FMA pipes full. Rows must all have length `w.len()`.
+/// registers once for four rows. Each row uses the same 8-lane layout as
+/// [`dot_f32`], so `dot4_f32(..)[r]` is bit-identical to `dot_f32(xr, w)`
+/// — the property the column-blocked sweeps in `logistic` rely on.
 #[inline]
 pub fn dot4_f32(x0: &[f32], x1: &[f32], x2: &[f32], x3: &[f32], w: &[f32]) -> [f32; 4] {
     let n = w.len();
     debug_assert!(x0.len() == n && x1.len() == n && x2.len() == n && x3.len() == n);
-    let mut a0 = 0f32;
-    let mut a1 = 0f32;
-    let mut a2 = 0f32;
-    let mut a3 = 0f32;
-    let mut b0 = 0f32;
-    let mut b1 = 0f32;
-    let mut b2 = 0f32;
-    let mut b3 = 0f32;
-    let mut k = 0;
-    while k + 2 <= n {
-        let (wk, wk1) = (w[k], w[k + 1]);
-        a0 += x0[k] * wk;
-        b0 += x0[k + 1] * wk1;
-        a1 += x1[k] * wk;
-        b1 += x1[k + 1] * wk1;
-        a2 += x2[k] * wk;
-        b2 += x2[k + 1] * wk1;
-        a3 += x3[k] * wk;
-        b3 += x3[k + 1] * wk1;
-        k += 2;
-    }
-    if k < n {
-        let wk = w[k];
-        a0 += x0[k] * wk;
-        a1 += x1[k] * wk;
-        a2 += x2[k] * wk;
-        a3 += x3[k] * wk;
-    }
-    [a0 + b0, a1 + b1, a2 + b2, a3 + b3]
+    simd::dot4_with(simd::active(), x0, x1, x2, x3, w)
 }
 
 /// Fused rank-4 update `y += c0 x0 + c1 x1 + c2 x2 + c3 x3`: one load+store
 /// of `y` per element instead of four (the dominant cost of the per-row
 /// axpy at larger feature dims — EXPERIMENTS.md §Perf).
 ///
-/// 8-wide blocks through fixed-size array views, so the five bounds
-/// checks hoist to one per block and the inner loop vectorizes (same
-/// rationale as [`axpy`]; elementwise, so results are unchanged).
+/// Per-element association is `((c0·x0 + c1·x1) + c2·x2) + c3·x3`, then one
+/// add onto `y`; every kernel set keeps that exact shape, so results are
+/// unchanged from four sequential [`axpy`] calls only in order, not value
+/// layout — and identical across sets.
 #[inline]
 #[allow(clippy::too_many_arguments)]
 pub fn axpy4(
@@ -150,21 +89,7 @@ pub fn axpy4(
 ) {
     let n = y.len();
     debug_assert!(x0.len() == n && x1.len() == n && x2.len() == n && x3.len() == n);
-    let blocks = n / 8;
-    for b in 0..blocks {
-        let base = b * 8;
-        let ys: &mut [f32; 8] = (&mut y[base..base + 8]).try_into().expect("8-wide block");
-        let a0: &[f32; 8] = (&x0[base..base + 8]).try_into().expect("8-wide block");
-        let a1: &[f32; 8] = (&x1[base..base + 8]).try_into().expect("8-wide block");
-        let a2: &[f32; 8] = (&x2[base..base + 8]).try_into().expect("8-wide block");
-        let a3: &[f32; 8] = (&x3[base..base + 8]).try_into().expect("8-wide block");
-        for k in 0..8 {
-            ys[k] += c[0] * a0[k] + c[1] * a1[k] + c[2] * a2[k] + c[3] * a3[k];
-        }
-    }
-    for k in blocks * 8..n {
-        y[k] += c[0] * x0[k] + c[1] * x1[k] + c[2] * x2[k] + c[3] * x3[k];
-    }
+    (simd::active().axpy4)(&c, x0, x1, x2, x3, y)
 }
 
 #[cfg(test)]
@@ -172,15 +97,19 @@ mod tests {
     use super::*;
 
     #[test]
-    fn dot4_matches_four_dots() {
-        let rows: Vec<Vec<f32>> = (0..4)
-            .map(|r| (0..13).map(|k| (r * 13 + k) as f32 * 0.1).collect())
-            .collect();
-        let w: Vec<f32> = (0..13).map(|k| (k as f32 - 6.0) * 0.3).collect();
-        let got = dot4_f32(&rows[0], &rows[1], &rows[2], &rows[3], &w);
-        for r in 0..4 {
-            let want = dot_f32(&rows[r], &w);
-            assert!((got[r] - want).abs() < 1e-4, "row {r}: {} vs {want}", got[r]);
+    fn dot4_matches_four_dots_bitwise() {
+        // dot4_f32 shares the 8-lane layout with dot_f32, so the match is
+        // exact, not approximate.
+        for n in [0usize, 1, 7, 8, 13, 16, 67] {
+            let rows: Vec<Vec<f32>> = (0..4)
+                .map(|r| (0..n).map(|k| (r * n + k) as f32 * 0.1).collect())
+                .collect();
+            let w: Vec<f32> = (0..n).map(|k| (k as f32 - 6.0) * 0.3).collect();
+            let got = dot4_f32(&rows[0], &rows[1], &rows[2], &rows[3], &w);
+            for r in 0..4 {
+                let want = dot_f32(&rows[r], &w);
+                assert_eq!(got[r].to_bits(), want.to_bits(), "n={n} row={r}");
+            }
         }
     }
 
@@ -247,5 +176,6 @@ mod tests {
         let mut e: [f32; 0] = [];
         axpy(1.0, &[], &mut e);
         scal(2.0, &mut e);
+        assert_eq!(dot4_f32(&[], &[], &[], &[], &[]), [0.0; 4]);
     }
 }

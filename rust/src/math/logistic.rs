@@ -3,6 +3,37 @@
 //! All routines take row-major `x` (`rows * cols` f32) and labels `y` in
 //! {-1, +1}; `rows == y.len()`. No mask/padding here: the native path always
 //! works on exact row counts (padding exists only to keep AOT shapes static).
+//!
+//! # Cache blocking
+//!
+//! At small feature counts `w` and `out` stay L1/L2-resident and the 4-row
+//! blocked sweep is already bandwidth-optimal. Past [`COL_BLOCK`] columns
+//! they no longer fit, and every row walks the full length of `w` — the
+//! sweep re-streams `w` from L3/DRAM once per 4 rows. The tiled path
+//! ([`grad_into_with_block`] / [`loss_sum_with_block`]) fixes that by
+//! processing [`TILE_ROWS`] rows per tile and iterating *column blocks* in
+//! the outer loop, so each `COL_BLOCK`-sized slice of `w` (and `out`) is
+//! loaded once per 64 rows instead of once per 4.
+//!
+//! Blocking is bit-invisible: the kernel table's `dot4_acc` continues each
+//! row's 8-lane chains across column blocks (column blocks start at
+//! multiples of 8, so lane `k` still takes elements `8i + k` in index
+//! order), the shared tail finish matches `dot_f32`, the rank-4 `axpy4`
+//! update is elementwise, and both f64 loss adds and per-element `out`
+//! updates happen in row/group order — exactly the plain path's order. The
+//! tests pin `with_block(16) == plain` bitwise.
+
+use crate::math::simd;
+
+/// Column-block width (f32 elements) beyond which the tiled sweeps kick in.
+/// 4096 columns = 16 KiB of `w` — half a typical 32 KiB L1d, leaving room
+/// for the streamed row data.
+const COL_BLOCK: usize = 4096;
+
+/// Rows per tile in the column-blocked sweeps: 16 groups of 4 rows, giving a
+/// per-tile accumulator footprint of 16·4·8 f32 = 2 KiB (stack).
+const TILE_ROWS: usize = 64;
+const TILE_GROUPS: usize = TILE_ROWS / 4;
 
 /// Numerically safe logistic sigmoid.
 #[inline]
@@ -32,6 +63,22 @@ pub fn log1p_exp(t: f64) -> f64 {
 /// matvec and the rank-1 back-accumulation — the native analogue of the fused
 /// Pallas kernel's one-HBM-pass schedule.
 pub fn grad_into(w: &[f32], x: &[f32], y: &[f32], cols: usize, c: f32, out: &mut [f32]) {
+    let block = if cols > COL_BLOCK { Some(COL_BLOCK) } else { None };
+    grad_into_with_block(w, x, y, cols, c, out, block)
+}
+
+/// [`grad_into`] with an explicit column-block width (`None` = plain 4-row
+/// sweep). Exposed at crate level so the tests can pin
+/// `Some(16) == None` bitwise on sizes where both paths do real work.
+pub(crate) fn grad_into_with_block(
+    w: &[f32],
+    x: &[f32],
+    y: &[f32],
+    cols: usize,
+    c: f32,
+    out: &mut [f32],
+    block: Option<usize>,
+) {
     let rows = y.len();
     debug_assert_eq!(x.len(), rows * cols);
     debug_assert_eq!(w.len(), cols);
@@ -43,9 +90,12 @@ pub fn grad_into(w: &[f32], x: &[f32], y: &[f32], cols: usize, c: f32, out: &mut
         *o = c * *wi;
     }
     let scale = 1.0 / rows as f32;
+    let mut r = 0;
+    if let Some(col_block) = block {
+        r = grad_tiles(w, x, y, cols, scale, out, col_block);
+    }
     // 4-row blocking: w streams once per 4 rows, `out` is loaded/stored once
     // per 4 rows (rank-4 update) — see EXPERIMENTS.md §Perf
-    let mut r = 0;
     while r + 4 <= rows {
         let x0 = &x[r * cols..(r + 1) * cols];
         let x1 = &x[(r + 1) * cols..(r + 2) * cols];
@@ -70,16 +120,140 @@ pub fn grad_into(w: &[f32], x: &[f32], y: &[f32], cols: usize, c: f32, out: &mut
     }
 }
 
+/// Column-blocked gradient over full 64-row tiles; returns the first
+/// unprocessed row (the caller's plain sweep finishes the remainder).
+///
+/// Per tile: forward accumulates all 16 groups' 8-lane chains block by
+/// block (each `w` block is loaded once per tile), the per-row finish is
+/// the shared `tree8` + tail (bit-identical to `dot_f32`), and the backward
+/// rank-4 updates walk the same blocks so each `out` block is loaded/stored
+/// 16 times per tile instead of once per 4 rows over the full width.
+fn grad_tiles(
+    w: &[f32],
+    x: &[f32],
+    y: &[f32],
+    cols: usize,
+    scale: f32,
+    out: &mut [f32],
+    col_block: usize,
+) -> usize {
+    debug_assert!(col_block >= 8 && col_block % 8 == 0);
+    let rows = y.len();
+    let main = cols & !7;
+    let ks = simd::active();
+    let mut r = 0;
+    while r + TILE_ROWS <= rows {
+        // forward: continue each row's 8-lane chains across column blocks
+        let mut acc = [[[0f32; 8]; 4]; TILE_GROUPS];
+        let mut start = 0;
+        while start < main {
+            let end = (start + col_block).min(main);
+            for (g, acc_g) in acc.iter_mut().enumerate() {
+                let r0 = r + 4 * g;
+                (ks.dot4_acc)(
+                    &x[r0 * cols + start..r0 * cols + end],
+                    &x[(r0 + 1) * cols + start..(r0 + 1) * cols + end],
+                    &x[(r0 + 2) * cols + start..(r0 + 2) * cols + end],
+                    &x[(r0 + 3) * cols + start..(r0 + 3) * cols + end],
+                    &w[start..end],
+                    acc_g,
+                );
+            }
+            start = end;
+        }
+        // finish: tree8 + tail per row, then the logistic coefficient
+        let mut coeff = [[0f32; 4]; TILE_GROUPS];
+        for (g, acc_g) in acc.iter().enumerate() {
+            for k in 0..4 {
+                let row = r + 4 * g + k;
+                let z = simd::tree8(&acc_g[k])
+                    + simd::tail_dot_f32(&x[row * cols + main..(row + 1) * cols], &w[main..]);
+                let yk = y[row];
+                coeff[g][k] = -yk * sigmoid(-yk * z) * scale;
+            }
+        }
+        // backward: rank-4 updates per column block, groups in row order so
+        // every out element sees the same update sequence as the plain sweep
+        let mut start = 0;
+        while start < cols {
+            // fold the sub-8 column tail into the last block (axpy4 is
+            // elementwise, so block shape cannot change results)
+            let end = if start + col_block < main { start + col_block } else { cols };
+            for (g, cg) in coeff.iter().enumerate() {
+                let r0 = r + 4 * g;
+                (ks.axpy4)(
+                    cg,
+                    &x[r0 * cols + start..r0 * cols + end],
+                    &x[(r0 + 1) * cols + start..(r0 + 1) * cols + end],
+                    &x[(r0 + 2) * cols + start..(r0 + 2) * cols + end],
+                    &x[(r0 + 3) * cols + start..(r0 + 3) * cols + end],
+                    &mut out[start..end],
+                );
+            }
+            start = end;
+        }
+        r += TILE_ROWS;
+    }
+    r
+}
+
 /// Masked-free logistic loss sum: `sum_i log(1 + exp(-y_i x_i.w))` (f64).
 ///
 /// Blocked 4 rows at a time through `dot4_f32` like [`grad_into`], so the
 /// per-epoch objective evaluation runs at the rank-4 matvec throughput
 /// (one stream of `w` per 4 rows) instead of single-row speed.
 pub fn loss_sum(w: &[f32], x: &[f32], y: &[f32], cols: usize) -> f64 {
+    let block = if cols > COL_BLOCK { Some(COL_BLOCK) } else { None };
+    loss_sum_with_block(w, x, y, cols, block)
+}
+
+/// [`loss_sum`] with an explicit column-block width (`None` = plain 4-row
+/// sweep); see [`grad_into_with_block`].
+pub(crate) fn loss_sum_with_block(
+    w: &[f32],
+    x: &[f32],
+    y: &[f32],
+    cols: usize,
+    block: Option<usize>,
+) -> f64 {
     let rows = y.len();
     debug_assert_eq!(x.len(), rows * cols);
     let mut acc = 0f64;
     let mut r = 0;
+    if let Some(col_block) = block {
+        debug_assert!(col_block >= 8 && col_block % 8 == 0);
+        let main = cols & !7;
+        let ks = simd::active();
+        while r + TILE_ROWS <= rows {
+            let mut lanes = [[[0f32; 8]; 4]; TILE_GROUPS];
+            let mut start = 0;
+            while start < main {
+                let end = (start + col_block).min(main);
+                for (g, lanes_g) in lanes.iter_mut().enumerate() {
+                    let r0 = r + 4 * g;
+                    (ks.dot4_acc)(
+                        &x[r0 * cols + start..r0 * cols + end],
+                        &x[(r0 + 1) * cols + start..(r0 + 1) * cols + end],
+                        &x[(r0 + 2) * cols + start..(r0 + 2) * cols + end],
+                        &x[(r0 + 3) * cols + start..(r0 + 3) * cols + end],
+                        &w[start..end],
+                        lanes_g,
+                    );
+                }
+                start = end;
+            }
+            // f64 adds in row order — same order as the plain sweep
+            for (g, lanes_g) in lanes.iter().enumerate() {
+                for k in 0..4 {
+                    let row = r + 4 * g + k;
+                    let z = simd::tree8(&lanes_g[k])
+                        + simd::tail_dot_f32(&x[row * cols + main..(row + 1) * cols], &w[main..]);
+                    acc += log1p_exp((-y[row] * z) as f64);
+                }
+            }
+            r += TILE_ROWS;
+        }
+    }
     while r + 4 <= rows {
         let x0 = &x[r * cols..(r + 1) * cols];
         let x1 = &x[(r + 1) * cols..(r + 2) * cols];
@@ -220,6 +394,29 @@ mod tests {
                 (got - want).abs() < 1e-5 * (1.0 + want.abs()),
                 "rows={rows}: {got} vs {want}"
             );
+        }
+    }
+
+    #[test]
+    fn column_blocked_sweeps_bit_match_plain() {
+        // full tiles plus ragged remainder rows, cols with a sub-8 tail:
+        // blocking must be invisible at the bit level, not just tolerance
+        for (rows, cols) in [(64usize, 40usize), (134, 29), (70, 48)] {
+            let (x, y, w) = toy(rows, cols, 100 + rows as u64);
+            let plain = loss_sum_with_block(&w, &x, &y, cols, None);
+            let tiled = loss_sum_with_block(&w, &x, &y, cols, Some(16));
+            assert_eq!(plain.to_bits(), tiled.to_bits(), "loss rows={rows} cols={cols}");
+            let mut g1 = vec![0f32; cols];
+            let mut g2 = vec![0f32; cols];
+            grad_into_with_block(&w, &x, &y, cols, 0.3, &mut g1, None);
+            grad_into_with_block(&w, &x, &y, cols, 0.3, &mut g2, Some(16));
+            for k in 0..cols {
+                assert_eq!(
+                    g1[k].to_bits(),
+                    g2[k].to_bits(),
+                    "grad rows={rows} cols={cols} k={k}"
+                );
+            }
         }
     }
 

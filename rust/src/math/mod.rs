@@ -12,6 +12,7 @@
 pub mod chunked;
 pub mod dense;
 pub mod logistic;
+pub mod simd;
 pub mod sparse;
 
 pub use dense::{axpy, dot, nrm2_sq, scal};

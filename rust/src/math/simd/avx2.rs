@@ -1,0 +1,338 @@
+//! AVX2 kernel set (x86_64, runtime-detected).
+//!
+//! Every kernel is the scalar implementation's arithmetic transliterated to
+//! 256/128-bit registers with **separate multiply and add** (no FMA) and
+//! the module's virtual lane layout, so results are bit-identical to the
+//! scalar set (see the module docs for the three rules and the property
+//! tests that pin them).
+//!
+//! Layout of this file: each kernel is a private `#[target_feature]`
+//! `unsafe fn *_impl` plus a safe wrapper that the [`AVX2`] table exposes.
+//! The wrappers are the only way in — `samplex-lint`'s `simd-dispatch` rule
+//! rejects any call to the `_impl` names from outside `math/simd/`.
+
+use core::arch::x86_64::{
+    __m128i, _mm256_add_pd, _mm256_add_ps, _mm256_cvtps_pd, _mm256_loadu_ps, _mm256_mul_pd,
+    _mm256_mul_ps, _mm256_set1_ps, _mm256_setzero_pd, _mm256_setzero_ps, _mm256_storeu_pd,
+    _mm256_storeu_ps, _mm_add_ps, _mm_i32gather_ps, _mm_loadu_ps, _mm_loadu_si128, _mm_mul_ps,
+    _mm_prefetch, _mm_setzero_ps, _mm_storeu_ps, _MM_HINT_T0,
+};
+
+use super::{scalar, tail_dot_f32, tail_dot_f64, tail_sq_f64, tree4, tree4_f64, tree8, KernelSet};
+
+/// The AVX2 kernel set. Only handed out by the dispatcher after
+/// `is_x86_feature_detected!("avx2")` returns true.
+pub(super) static AVX2: KernelSet = KernelSet {
+    name: "avx2",
+    dot,
+    nrm2_sq,
+    dot_f32,
+    dot4_acc,
+    axpy,
+    axpy4,
+    scal,
+    sparse_dot,
+    prefetch_w,
+};
+
+/// How many f32 elements ahead the CSR gather loop prefetches its targets.
+const GATHER_PREFETCH_AHEAD: usize = 16;
+
+#[target_feature(enable = "avx2")]
+// SAFETY: requires AVX2; only reached via the safe wrapper below, which the
+// dispatcher installs after runtime detection.
+unsafe fn dot_impl(x: &[f32], y: &[f32]) -> f64 {
+    debug_assert_eq!(x.len(), y.len());
+    let n = x.len();
+    let main = n & !3;
+    let (px, py) = (x.as_ptr(), y.as_ptr());
+    // chain k holds elements 4i + k, exactly like the scalar [f64; 4]
+    let mut acc = _mm256_setzero_pd();
+    let mut i = 0;
+    while i < main {
+        let xv = _mm256_cvtps_pd(_mm_loadu_ps(px.add(i)));
+        let yv = _mm256_cvtps_pd(_mm_loadu_ps(py.add(i)));
+        // mul then add — never FMA (rounding must match scalar)
+        acc = _mm256_add_pd(acc, _mm256_mul_pd(xv, yv));
+        i += 4;
+    }
+    let mut lanes = [0f64; 4];
+    _mm256_storeu_pd(lanes.as_mut_ptr(), acc);
+    tree4_f64(&lanes) + tail_dot_f64(&x[main..], &y[main..])
+}
+
+fn dot(x: &[f32], y: &[f32]) -> f64 {
+    // SAFETY: this fn is only reachable through the AVX2 table, which the
+    // dispatcher returns only after is_x86_feature_detected!("avx2").
+    unsafe { dot_impl(x, y) }
+}
+
+#[target_feature(enable = "avx2")]
+// SAFETY: requires AVX2; only reached via the safe wrapper below after
+// runtime detection.
+unsafe fn nrm2_sq_impl(x: &[f32]) -> f64 {
+    let n = x.len();
+    let main = n & !3;
+    let px = x.as_ptr();
+    let mut acc = _mm256_setzero_pd();
+    let mut i = 0;
+    while i < main {
+        let xv = _mm256_cvtps_pd(_mm_loadu_ps(px.add(i)));
+        acc = _mm256_add_pd(acc, _mm256_mul_pd(xv, xv));
+        i += 4;
+    }
+    let mut lanes = [0f64; 4];
+    _mm256_storeu_pd(lanes.as_mut_ptr(), acc);
+    tree4_f64(&lanes) + tail_sq_f64(&x[main..])
+}
+
+fn nrm2_sq(x: &[f32]) -> f64 {
+    // SAFETY: only reachable through the AVX2 table, installed after
+    // runtime detection.
+    unsafe { nrm2_sq_impl(x) }
+}
+
+#[target_feature(enable = "avx2")]
+// SAFETY: requires AVX2; only reached via the safe wrapper below after
+// runtime detection.
+unsafe fn dot_f32_impl(x: &[f32], y: &[f32]) -> f32 {
+    debug_assert_eq!(x.len(), y.len());
+    let n = x.len();
+    let main = n & !7;
+    let (px, py) = (x.as_ptr(), y.as_ptr());
+    // one ymm register == the scalar [f32; 8] lane array
+    let mut acc = _mm256_setzero_ps();
+    let mut i = 0;
+    while i < main {
+        let xv = _mm256_loadu_ps(px.add(i));
+        let yv = _mm256_loadu_ps(py.add(i));
+        acc = _mm256_add_ps(acc, _mm256_mul_ps(xv, yv));
+        i += 8;
+    }
+    let mut lanes = [0f32; 8];
+    _mm256_storeu_ps(lanes.as_mut_ptr(), acc);
+    tree8(&lanes) + tail_dot_f32(&x[main..], &y[main..])
+}
+
+fn dot_f32(x: &[f32], y: &[f32]) -> f32 {
+    // SAFETY: only reachable through the AVX2 table, installed after
+    // runtime detection.
+    unsafe { dot_f32_impl(x, y) }
+}
+
+#[target_feature(enable = "avx2")]
+// SAFETY: requires AVX2; only reached via the safe wrapper below after
+// runtime detection.
+unsafe fn dot4_acc_impl(
+    x0: &[f32],
+    x1: &[f32],
+    x2: &[f32],
+    x3: &[f32],
+    w: &[f32],
+    acc: &mut [[f32; 8]; 4],
+) {
+    let n = w.len();
+    debug_assert!(n % 8 == 0);
+    debug_assert!(x0.len() == n && x1.len() == n && x2.len() == n && x3.len() == n);
+    // continue the caller's per-row lane chains: load, accumulate, store
+    let mut a0 = _mm256_loadu_ps(acc[0].as_ptr());
+    let mut a1 = _mm256_loadu_ps(acc[1].as_ptr());
+    let mut a2 = _mm256_loadu_ps(acc[2].as_ptr());
+    let mut a3 = _mm256_loadu_ps(acc[3].as_ptr());
+    let (p0, p1, p2, p3, pw) = (x0.as_ptr(), x1.as_ptr(), x2.as_ptr(), x3.as_ptr(), w.as_ptr());
+    let mut i = 0;
+    while i < n {
+        // w streams through registers once for all four rows
+        let wv = _mm256_loadu_ps(pw.add(i));
+        a0 = _mm256_add_ps(a0, _mm256_mul_ps(_mm256_loadu_ps(p0.add(i)), wv));
+        a1 = _mm256_add_ps(a1, _mm256_mul_ps(_mm256_loadu_ps(p1.add(i)), wv));
+        a2 = _mm256_add_ps(a2, _mm256_mul_ps(_mm256_loadu_ps(p2.add(i)), wv));
+        a3 = _mm256_add_ps(a3, _mm256_mul_ps(_mm256_loadu_ps(p3.add(i)), wv));
+        i += 8;
+    }
+    _mm256_storeu_ps(acc[0].as_mut_ptr(), a0);
+    _mm256_storeu_ps(acc[1].as_mut_ptr(), a1);
+    _mm256_storeu_ps(acc[2].as_mut_ptr(), a2);
+    _mm256_storeu_ps(acc[3].as_mut_ptr(), a3);
+}
+
+fn dot4_acc(x0: &[f32], x1: &[f32], x2: &[f32], x3: &[f32], w: &[f32], acc: &mut [[f32; 8]; 4]) {
+    // SAFETY: only reachable through the AVX2 table, installed after
+    // runtime detection.
+    unsafe { dot4_acc_impl(x0, x1, x2, x3, w, acc) }
+}
+
+#[target_feature(enable = "avx2")]
+// SAFETY: requires AVX2; only reached via the safe wrapper below after
+// runtime detection.
+unsafe fn axpy_impl(a: f32, x: &[f32], y: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    let n = y.len();
+    let main = n & !7;
+    let av = _mm256_set1_ps(a);
+    let px = x.as_ptr();
+    let py = y.as_mut_ptr();
+    let mut i = 0;
+    while i < main {
+        let yv = _mm256_loadu_ps(py.add(i));
+        let xv = _mm256_loadu_ps(px.add(i));
+        _mm256_storeu_ps(py.add(i), _mm256_add_ps(yv, _mm256_mul_ps(av, xv)));
+        i += 8;
+    }
+    for k in main..n {
+        y[k] += a * x[k];
+    }
+}
+
+fn axpy(a: f32, x: &[f32], y: &mut [f32]) {
+    // SAFETY: only reachable through the AVX2 table, installed after
+    // runtime detection.
+    unsafe { axpy_impl(a, x, y) }
+}
+
+#[target_feature(enable = "avx2")]
+// SAFETY: requires AVX2; only reached via the safe wrapper below after
+// runtime detection.
+unsafe fn axpy4_impl(c: &[f32; 4], x0: &[f32], x1: &[f32], x2: &[f32], x3: &[f32], y: &mut [f32]) {
+    let n = y.len();
+    debug_assert!(x0.len() == n && x1.len() == n && x2.len() == n && x3.len() == n);
+    let main = n & !7;
+    let (c0, c1, c2, c3) =
+        (_mm256_set1_ps(c[0]), _mm256_set1_ps(c[1]), _mm256_set1_ps(c[2]), _mm256_set1_ps(c[3]));
+    let (p0, p1, p2, p3) = (x0.as_ptr(), x1.as_ptr(), x2.as_ptr(), x3.as_ptr());
+    let py = y.as_mut_ptr();
+    let mut i = 0;
+    while i < main {
+        // keep the scalar association: ((c0·x0 + c1·x1) + c2·x2) + c3·x3
+        let t01 = _mm256_add_ps(
+            _mm256_mul_ps(c0, _mm256_loadu_ps(p0.add(i))),
+            _mm256_mul_ps(c1, _mm256_loadu_ps(p1.add(i))),
+        );
+        let t012 = _mm256_add_ps(t01, _mm256_mul_ps(c2, _mm256_loadu_ps(p2.add(i))));
+        let t = _mm256_add_ps(t012, _mm256_mul_ps(c3, _mm256_loadu_ps(p3.add(i))));
+        _mm256_storeu_ps(py.add(i), _mm256_add_ps(_mm256_loadu_ps(py.add(i)), t));
+        i += 8;
+    }
+    for k in main..n {
+        y[k] += c[0] * x0[k] + c[1] * x1[k] + c[2] * x2[k] + c[3] * x3[k];
+    }
+}
+
+fn axpy4(c: &[f32; 4], x0: &[f32], x1: &[f32], x2: &[f32], x3: &[f32], y: &mut [f32]) {
+    // SAFETY: only reachable through the AVX2 table, installed after
+    // runtime detection.
+    unsafe { axpy4_impl(c, x0, x1, x2, x3, y) }
+}
+
+#[target_feature(enable = "avx2")]
+// SAFETY: requires AVX2; only reached via the safe wrapper below after
+// runtime detection.
+unsafe fn scal_impl(a: f32, x: &mut [f32]) {
+    let n = x.len();
+    let main = n & !7;
+    let av = _mm256_set1_ps(a);
+    let px = x.as_mut_ptr();
+    let mut i = 0;
+    while i < main {
+        _mm256_storeu_ps(px.add(i), _mm256_mul_ps(_mm256_loadu_ps(px.add(i)), av));
+        i += 8;
+    }
+    for k in main..n {
+        x[k] *= a;
+    }
+}
+
+fn scal(a: f32, x: &mut [f32]) {
+    // SAFETY: only reachable through the AVX2 table, installed after
+    // runtime detection.
+    unsafe { scal_impl(a, x) }
+}
+
+#[target_feature(enable = "avx2")]
+// SAFETY: requires AVX2; only reached via the safe wrapper below after
+// runtime detection. Gather lanes are bounds-checked against `w.len()`
+// before every `_mm_i32gather_ps`, so the instruction never reads outside
+// `w`; out-of-range indices take the slice-indexing path and panic exactly
+// like the scalar kernel.
+unsafe fn sparse_dot_impl(w: &[f32], vals: &[f32], idx: &[u32]) -> f32 {
+    debug_assert_eq!(vals.len(), idx.len());
+    let n = vals.len();
+    let main = n & !3;
+    let limit = w.len();
+    let pw = w.as_ptr();
+    // chain k holds elements 4i + k, exactly like the scalar [f32; 4]
+    let mut acc = _mm_setzero_ps();
+    let mut i = 0;
+    while i < main {
+        // software-prefetch the gather targets a few chunks ahead: the
+        // index stream is sequential (hardware-prefetched) but the w[idx]
+        // targets are scattered. wrapping_add never materializes an
+        // out-of-bounds dereference — prefetch is a pure hint.
+        let ahead = i + GATHER_PREFETCH_AHEAD;
+        if ahead < main {
+            _mm_prefetch::<_MM_HINT_T0>(pw.wrapping_add(idx[ahead] as usize) as *const i8);
+        }
+        let (i0, i1, i2, i3) =
+            (idx[i] as usize, idx[i + 1] as usize, idx[i + 2] as usize, idx[i + 3] as usize);
+        if i0 < limit && i1 < limit && i2 < limit && i3 < limit && limit <= i32::MAX as usize {
+            // all four lanes verified in bounds (and representable as the
+            // instruction's signed 32-bit offsets), so the gather reads
+            // exactly w[i0..=i3]
+            let iv = _mm_loadu_si128(idx.as_ptr().add(i) as *const __m128i);
+            let g = _mm_i32gather_ps::<4>(pw, iv);
+            acc = _mm_add_ps(acc, _mm_mul_ps(_mm_loadu_ps(vals.as_ptr().add(i)), g));
+        } else {
+            // out-of-range (or >2^31-element w): index through the slice in
+            // chunk order — panics on the first bad index like scalar does
+            let mut lanes = [0f32; 4];
+            lanes[0] = w[i0];
+            lanes[1] = w[i1];
+            lanes[2] = w[i2];
+            lanes[3] = w[i3];
+            let mut l = [0f32; 4];
+            _mm_storeu_ps(l.as_mut_ptr(), acc);
+            for k in 0..4 {
+                l[k] += vals[i + k] * lanes[k];
+            }
+            acc = _mm_loadu_ps(l.as_ptr());
+        }
+        i += 4;
+    }
+    let mut lanes = [0f32; 4];
+    _mm_storeu_ps(lanes.as_mut_ptr(), acc);
+    let mut tail = 0f32;
+    for k in main..n {
+        tail += vals[k] * w[idx[k] as usize];
+    }
+    tree4(&lanes) + tail
+}
+
+fn sparse_dot(w: &[f32], vals: &[f32], idx: &[u32]) -> f32 {
+    if w.len() > i32::MAX as usize {
+        // gather offsets are signed 32-bit; beyond that the scalar path is
+        // the implementation (bit-identical by the module contract)
+        return scalar::sparse_dot(w, vals, idx);
+    }
+    // SAFETY: only reachable through the AVX2 table, installed after
+    // runtime detection.
+    unsafe { sparse_dot_impl(w, vals, idx) }
+}
+
+/// Prefetch every 16th gather target of an upcoming row — enough to cover
+/// a cache line of the index stream per issue, without flooding the LSU.
+fn prefetch_w(w: &[f32], idx: &[u32]) {
+    let limit = w.len();
+    let pw = w.as_ptr();
+    let mut i = 0;
+    while i < idx.len() {
+        let j = idx[i] as usize;
+        if j < limit {
+            // SAFETY: _mm_prefetch (SSE, baseline on x86_64) is a pure
+            // hint and never faults; wrapping_add never materializes a
+            // dereference, and j < w.len() keeps the hint inside the
+            // allocation anyway.
+            unsafe { _mm_prefetch::<_MM_HINT_T0>(pw.wrapping_add(j) as *const i8) };
+        }
+        i += 16;
+    }
+}

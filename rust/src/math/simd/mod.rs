@@ -1,0 +1,410 @@
+//! Runtime-dispatched SIMD kernels behind one [`KernelSet`] function table.
+//!
+//! ## Dispatch policy
+//!
+//! The hot kernels in [`crate::math`] (`dot`, `dot_f32`, `dot4_f32`, `axpy`,
+//! `axpy4`, `scal`, `nrm2_sq`, `sparse_dot`) are thin wrappers over the
+//! function pointers in the *active* [`KernelSet`]. The set is chosen **once
+//! per process** — AVX2 on x86_64 when `is_x86_feature_detected!("avx2")`
+//! holds, NEON on aarch64 (baseline), the portable scalar code everywhere
+//! else — and cached in an atomic so the per-call cost is one `Acquire`
+//! load. `SAMPLEX_FORCE_SCALAR=1` (or the `--force-scalar` CLI flag, or
+//! [`force_scalar`]) pins the scalar set; under Miri the scalar set is
+//! always used (arch intrinsics are slow/partial under the interpreter).
+//!
+//! ## The bit-identity contract (how to add a kernel)
+//!
+//! Every implementation of a kernel must produce **bit-identical** results
+//! on every architecture, so the determinism suite can pin trajectories
+//! across scalar vs SIMD exactly like it does across thread counts. Three
+//! rules make that possible, and any new kernel must follow them:
+//!
+//! 1. **No FMA.** Fused multiply-add rounds once where `mul` + `add` round
+//!    twice; IEEE-754 `mul`/`add`/`sub` themselves are bit-exact on every
+//!    target, so each lane op is written as separate multiply and add
+//!    (`_mm256_mul_ps` + `_mm256_add_ps`, `vmulq_f32` + `vaddq_f32` —
+//!    never `_mm256_fmadd_ps` / `vfmaq_f32`).
+//! 2. **Lane-count-normalized accumulators.** Reductions fix a *virtual*
+//!    lane count independent of the register width: f32 dots use 8 lanes
+//!    (scalar: `[f32; 8]`, AVX2: one 8-lane `ymm`, NEON: two 4-lane `q`
+//!    registers), f64 reductions use 4 chains. Lane `k` always accumulates
+//!    elements `k, k+W, k+2W, …` in index order, so the per-lane chains are
+//!    the same arithmetic everywhere.
+//! 3. **One fixed reduction tree + shared scalar tail.** Lanes are combined
+//!    by the fixed trees in [`tree8`]/[`tree4_f64`] and the remainder
+//!    (`len % W`) is accumulated by the shared scalar helpers
+//!    ([`tail_dot_f32`] & co.), then added once — identical association in
+//!    every implementation.
+//!
+//! Elementwise kernels (`axpy`, `axpy4`, `scal`) are bit-identical by
+//! construction as long as the per-element expression keeps the scalar
+//! code's association.
+//!
+//! `#[target_feature]` functions live **only** in this module's `avx2`/
+//! `neon` submodules, are private to them, and are reached exclusively
+//! through the table — enforced statically by `samplex-lint`'s
+//! `simd-dispatch` rule, so no caller can slip a raw AVX2 call into code
+//! that runs before detection.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+#[cfg(target_arch = "x86_64")]
+mod avx2;
+#[cfg(target_arch = "aarch64")]
+mod neon;
+mod scalar;
+
+/// One architecture's implementation of every hot kernel, as plain safe
+/// function pointers (the arch modules wrap their `#[target_feature]`
+/// internals behind safe fns that are only installed after detection).
+#[derive(Debug, Clone, Copy)]
+pub struct KernelSet {
+    /// Implementation label ("scalar", "avx2", "neon") for reports/benches.
+    pub name: &'static str,
+    /// f64-accumulated dot of two f32 slices (4 virtual chains).
+    pub dot: fn(&[f32], &[f32]) -> f64,
+    /// f64-accumulated squared norm (4 virtual chains).
+    pub nrm2_sq: fn(&[f32]) -> f64,
+    /// f32 dot (8 virtual lanes).
+    pub dot_f32: fn(&[f32], &[f32]) -> f32,
+    /// Partial rank-4 dot: accumulate four rows × shared `w` into per-row
+    /// 8-lane accumulators. All slices must have equal length, a multiple
+    /// of 8 — the caller owns the tail (see [`dot4_with`]). Accumulating
+    /// (`+=`) so column-blocked sweeps can continue the same chains across
+    /// blocks.
+    pub dot4_acc: fn(&[f32], &[f32], &[f32], &[f32], &[f32], &mut [[f32; 8]; 4]),
+    /// `y += a * x` (elementwise).
+    pub axpy: fn(f32, &[f32], &mut [f32]),
+    /// Rank-4 update `y += c0 x0 + c1 x1 + c2 x2 + c3 x3` (elementwise).
+    pub axpy4: fn(&[f32; 4], &[f32], &[f32], &[f32], &[f32], &mut [f32]),
+    /// `x *= a` (elementwise).
+    pub scal: fn(f32, &mut [f32]),
+    /// Sparse dot `Σ vals[k] * w[idx[k]]` (4 virtual chains).
+    pub sparse_dot: fn(&[f32], &[f32], &[u32]) -> f32,
+    /// Software-prefetch the gather targets `w[idx[..]]` of an upcoming CSR
+    /// row (pure hint — a no-op on scalar; never faults).
+    pub prefetch_w: fn(&[f32], &[u32]),
+}
+
+const KIND_UNINIT: u8 = 0;
+const KIND_SCALAR: u8 = 1;
+const KIND_SIMD: u8 = 2;
+
+/// The process-wide active kernel kind. `Acquire`/`Release` so a reader
+/// that observes a forced kind also observes everything written before the
+/// force (this is a dispatch decision, not a stats counter).
+static ACTIVE: AtomicU8 = AtomicU8::new(KIND_UNINIT);
+
+#[cfg(target_arch = "x86_64")]
+fn detected_kind() -> u8 {
+    if std::arch::is_x86_feature_detected!("avx2") {
+        KIND_SIMD
+    } else {
+        KIND_SCALAR
+    }
+}
+
+#[cfg(target_arch = "aarch64")]
+fn detected_kind() -> u8 {
+    // NEON is baseline on aarch64 — no runtime probe needed.
+    KIND_SIMD
+}
+
+#[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+fn detected_kind() -> u8 {
+    KIND_SCALAR
+}
+
+#[cfg(target_arch = "x86_64")]
+fn simd_table() -> &'static KernelSet {
+    &avx2::AVX2
+}
+
+#[cfg(target_arch = "aarch64")]
+fn simd_table() -> &'static KernelSet {
+    &neon::NEON
+}
+
+#[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+fn simd_table() -> &'static KernelSet {
+    &scalar::SCALAR
+}
+
+fn table(kind: u8) -> &'static KernelSet {
+    match kind {
+        KIND_SIMD => simd_table(),
+        _ => &scalar::SCALAR,
+    }
+}
+
+/// The best kind this host supports, honoring the Miri/env overrides that
+/// apply at first resolution (but not a later [`force_scalar`]).
+fn resolve_kind() -> u8 {
+    if cfg!(miri) {
+        return KIND_SCALAR;
+    }
+    if std::env::var("SAMPLEX_FORCE_SCALAR").map(|v| v == "1").unwrap_or(false) {
+        return KIND_SCALAR;
+    }
+    detected_kind()
+}
+
+/// The active kernel set. Resolved once (feature detection + the
+/// `SAMPLEX_FORCE_SCALAR` override) and cached; subsequent calls are one
+/// atomic load.
+#[inline]
+pub fn active() -> &'static KernelSet {
+    let k = ACTIVE.load(Ordering::Acquire);
+    if k != KIND_UNINIT {
+        return table(k);
+    }
+    let k = resolve_kind();
+    ACTIVE.store(k, Ordering::Release);
+    table(k)
+}
+
+/// Label of the active set ("scalar", "avx2", "neon").
+pub fn active_name() -> &'static str {
+    active().name
+}
+
+/// Pin the scalar set for the rest of the process (the `--force-scalar`
+/// CLI flag and the scalar-vs-SIMD determinism tests route through here).
+/// Safe to call at any time: every set is bit-identical, so in-flight work
+/// mixing sets still produces identical numbers.
+pub fn force_scalar() {
+    ACTIVE.store(KIND_SCALAR, Ordering::Release);
+}
+
+/// Re-pin the best detected set (ignoring `SAMPLEX_FORCE_SCALAR` — this is
+/// the test hook for exercising the SIMD path even under the scalar CI
+/// leg; under Miri it stays scalar).
+pub fn force_best() {
+    let k = if cfg!(miri) { KIND_SCALAR } else { detected_kind() };
+    ACTIVE.store(k, Ordering::Release);
+}
+
+/// The portable scalar set — the property-test oracle, always available.
+pub fn scalar() -> &'static KernelSet {
+    &scalar::SCALAR
+}
+
+/// The best set this host supports (what [`force_best`] installs), without
+/// touching the global dispatch state — benches time `best()` against
+/// [`scalar`] side by side.
+pub fn best() -> &'static KernelSet {
+    table(if cfg!(miri) { KIND_SCALAR } else { detected_kind() })
+}
+
+// ---------------------------------------------------------------------------
+// Shared reduction building blocks (the *only* tail/tree code — every arch
+// implementation and every front-door wrapper goes through these, which is
+// what makes the lane-normalization rules above checkable in one place).
+// ---------------------------------------------------------------------------
+
+/// The fixed 8-lane reduction tree:
+/// `(((l0+l1)+(l2+l3)) + ((l4+l5)+(l6+l7)))`.
+#[inline]
+pub fn tree8(l: &[f32; 8]) -> f32 {
+    ((l[0] + l[1]) + (l[2] + l[3])) + ((l[4] + l[5]) + (l[6] + l[7]))
+}
+
+/// The fixed 4-chain f32 reduction tree: `(l0+l1) + (l2+l3)`.
+#[inline]
+pub fn tree4(l: &[f32; 4]) -> f32 {
+    (l[0] + l[1]) + (l[2] + l[3])
+}
+
+/// The fixed 4-chain f64 reduction tree: `(l0+l1) + (l2+l3)`.
+#[inline]
+pub fn tree4_f64(l: &[f64; 4]) -> f64 {
+    (l[0] + l[1]) + (l[2] + l[3])
+}
+
+/// Serial f32 dot over a remainder (`len < 8`, but correct for any length):
+/// the one tail loop shared by every `dot_f32`/`dot4_f32` implementation.
+/// Accumulated separately from zero and added to the tree sum once, so the
+/// association is identical no matter which architecture ran the body.
+#[inline]
+pub fn tail_dot_f32(x: &[f32], y: &[f32]) -> f32 {
+    debug_assert_eq!(x.len(), y.len());
+    let mut tail = 0f32;
+    for (xi, yi) in x.iter().zip(y) {
+        tail += xi * yi;
+    }
+    tail
+}
+
+/// Serial f64-accumulated dot over a remainder (`len < 4`).
+#[inline]
+pub fn tail_dot_f64(x: &[f32], y: &[f32]) -> f64 {
+    debug_assert_eq!(x.len(), y.len());
+    let mut tail = 0f64;
+    for (xi, yi) in x.iter().zip(y) {
+        tail += (*xi as f64) * (*yi as f64);
+    }
+    tail
+}
+
+/// Serial f64-accumulated squared-norm tail (`len < 4`).
+#[inline]
+pub fn tail_sq_f64(x: &[f32]) -> f64 {
+    let mut tail = 0f64;
+    for xi in x {
+        tail += (*xi as f64) * (*xi as f64);
+    }
+    tail
+}
+
+/// Four simultaneous dots against a shared `w` through `ks`: the main body
+/// runs in the set's [`KernelSet::dot4_acc`] over the multiple-of-8 prefix,
+/// the finish (tree + shared tail) is common scalar code — so every set
+/// returns bit-identical values here by construction.
+#[inline]
+pub fn dot4_with(
+    ks: &KernelSet,
+    x0: &[f32],
+    x1: &[f32],
+    x2: &[f32],
+    x3: &[f32],
+    w: &[f32],
+) -> [f32; 4] {
+    let n = w.len();
+    debug_assert!(x0.len() == n && x1.len() == n && x2.len() == n && x3.len() == n);
+    let main = n & !7;
+    let mut acc = [[0f32; 8]; 4];
+    (ks.dot4_acc)(&x0[..main], &x1[..main], &x2[..main], &x3[..main], &w[..main], &mut acc);
+    let wt = &w[main..];
+    [
+        tree8(&acc[0]) + tail_dot_f32(&x0[main..], wt),
+        tree8(&acc[1]) + tail_dot_f32(&x1[main..], wt),
+        tree8(&acc[2]) + tail_dot_f32(&x2[main..], wt),
+        tree8(&acc[3]) + tail_dot_f32(&x3[main..], wt),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    fn rand_vec(n: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Rng::seed_from(seed);
+        (0..n).map(|_| rng.normal() as f32).collect()
+    }
+
+    /// Exact serial f64 reference for the remainder-helper property test.
+    fn oracle_dot_f64(x: &[f32], y: &[f32]) -> f64 {
+        x.iter().zip(y).map(|(a, b)| (*a as f64) * (*b as f64)).sum()
+    }
+
+    #[test]
+    fn detection_resolves_and_is_stable() {
+        let _guard = DISPATCH_LOCK.lock().unwrap();
+        let a = active();
+        let b = active();
+        assert_eq!(a.name, b.name, "dispatch must be cached");
+        assert!(["scalar", "avx2", "neon"].contains(&a.name));
+        assert_eq!(scalar().name, "scalar");
+    }
+
+    #[test]
+    fn trees_are_fixed_order() {
+        let l8 = [1e8f32, -1e8, 3.0, 4.0, 5.0, -6.0, 7.5, 0.25];
+        assert_eq!(tree8(&l8).to_bits(), (((1e8f32 + -1e8) + (3.0 + 4.0)) + ((5.0 + -6.0) + (7.5 + 0.25))).to_bits());
+        let l4 = [0.1f64, 0.2, 0.3, 0.4];
+        assert_eq!(tree4_f64(&l4).to_bits(), ((0.1f64 + 0.2) + (0.3 + 0.4)).to_bits());
+    }
+
+    /// Satellite: the shared remainder helper, exhaustively over lengths
+    /// 0..=67, against the f64 `dot` oracle (tolerance — the helper is f32)
+    /// and against a bit-exact serial f32 reference.
+    #[test]
+    fn prop_tail_helper_matches_oracle_for_all_lengths() {
+        for n in 0..=67usize {
+            let x = rand_vec(n, 100 + n as u64);
+            let y = rand_vec(n, 200 + n as u64);
+            let got = tail_dot_f32(&x, &y) as f64;
+            let want = oracle_dot_f64(&x, &y);
+            assert!((got - want).abs() <= 1e-5 * (1.0 + want.abs()), "n={n}: {got} vs {want}");
+            // bit-exact vs the serial f32 loop it promises to be
+            let mut serial = 0f32;
+            for k in 0..n {
+                serial += x[k] * y[k];
+            }
+            assert_eq!(tail_dot_f32(&x, &y).to_bits(), serial.to_bits(), "n={n}");
+        }
+    }
+
+    /// Every kernel in every *available* set is bit-identical to the scalar
+    /// oracle across all remainder shapes 0..=67.
+    #[test]
+    fn prop_best_set_bit_matches_scalar_oracle_for_all_lengths() {
+        let s = scalar();
+        let b = best();
+        for n in 0..=67usize {
+            let x = rand_vec(n, 300 + n as u64);
+            let y = rand_vec(n, 400 + n as u64);
+            assert_eq!((s.dot)(&x, &y).to_bits(), (b.dot)(&x, &y).to_bits(), "dot n={n}");
+            assert_eq!((s.nrm2_sq)(&x).to_bits(), (b.nrm2_sq)(&x).to_bits(), "nrm2 n={n}");
+            assert_eq!((s.dot_f32)(&x, &y).to_bits(), (b.dot_f32)(&x, &y).to_bits(), "dot_f32 n={n}");
+            let rows: Vec<Vec<f32>> = (0..4).map(|r| rand_vec(n, 500 + (4 * n + r) as u64)).collect();
+            let zs = dot4_with(s, &rows[0], &rows[1], &rows[2], &rows[3], &x);
+            let zb = dot4_with(b, &rows[0], &rows[1], &rows[2], &rows[3], &x);
+            for r in 0..4 {
+                assert_eq!(zs[r].to_bits(), zb[r].to_bits(), "dot4 n={n} r={r}");
+                // dot4 lane/tree structure == single-row dot_f32 structure
+                assert_eq!(zs[r].to_bits(), (s.dot_f32)(&rows[r], &x).to_bits(), "dot4-vs-dot n={n} r={r}");
+            }
+            let mut ys = y.clone();
+            let mut yb = y.clone();
+            (s.axpy)(0.37, &x, &mut ys);
+            (b.axpy)(0.37, &x, &mut yb);
+            assert_eq!(ys, yb, "axpy n={n}");
+            let c = [0.5f32, -1.25, 2.0, 0.125];
+            (s.axpy4)(&c, &rows[0], &rows[1], &rows[2], &rows[3], &mut ys);
+            (b.axpy4)(&c, &rows[0], &rows[1], &rows[2], &rows[3], &mut yb);
+            assert_eq!(ys, yb, "axpy4 n={n}");
+            (s.scal)(-0.93, &mut ys);
+            (b.scal)(-0.93, &mut yb);
+            assert_eq!(ys, yb, "scal n={n}");
+        }
+    }
+
+    #[test]
+    fn sparse_dot_and_prefetch_bit_match_scalar() {
+        let s = scalar();
+        let b = best();
+        let w = rand_vec(257, 7);
+        for n in 0..=67usize {
+            let vals = rand_vec(n, 600 + n as u64);
+            let mut rng = Rng::seed_from(700 + n as u64);
+            let idx: Vec<u32> = (0..n).map(|_| (rng.uniform() * 257.0) as u32 % 257).collect();
+            // prefetch must be a pure hint for any index pattern
+            (b.prefetch_w)(&w, &idx);
+            (s.prefetch_w)(&w, &idx);
+            assert_eq!(
+                (s.sparse_dot)(&w, &vals, &idx).to_bits(),
+                (b.sparse_dot)(&w, &vals, &idx).to_bits(),
+                "sparse_dot n={n}"
+            );
+        }
+        // empty gather target is fine
+        assert_eq!((b.sparse_dot)(&[], &[], &[]), 0.0);
+        (b.prefetch_w)(&[], &[0, 1, 2]);
+    }
+
+    #[test]
+    fn force_scalar_and_back() {
+        let _guard = DISPATCH_LOCK.lock().unwrap();
+        force_scalar();
+        assert_eq!(active_name(), "scalar");
+        force_best();
+        assert_eq!(active_name(), best().name);
+    }
+
+    /// Serializes tests that toggle the process-wide dispatch (the harness
+    /// runs tests concurrently; numeric results are unaffected either way —
+    /// that is the whole invariant — but name assertions need stability).
+    pub(crate) static DISPATCH_LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+}

@@ -1,0 +1,259 @@
+//! NEON kernel set (aarch64 — NEON is architecturally baseline, so this set
+//! is always eligible there).
+//!
+//! Same contract as `avx2.rs`: scalar arithmetic transliterated to vector
+//! registers with separate multiply and add (no `vfmaq_f32` — FMA rounds
+//! once and would break bit-identity) and the module's virtual lane layout.
+//! NEON registers are 128-bit, so the 8-lane f32 accumulators live in *two*
+//! `q` registers (lanes 0–3 / 4–7) and the 4-chain f64 accumulators in two
+//! `float64x2_t` — the per-lane chains are exactly the scalar ones.
+//!
+//! `sparse_dot` stays on the scalar implementation: aarch64 has no gather
+//! unit, and the stable intrinsics expose no prefetch (`prfm`), so the
+//! packed form has nothing to win. `prefetch_w` is therefore a no-op here.
+
+use core::arch::aarch64::{
+    vaddq_f32, vaddq_f64, vcvt_f64_f32, vcvt_high_f64_f32, vdupq_n_f32, vdupq_n_f64,
+    vget_low_f32, vld1q_f32, vld1q_f64, vmulq_f32, vmulq_f64, vst1q_f32, vst1q_f64,
+};
+
+use super::{scalar, tail_dot_f32, tail_dot_f64, tail_sq_f64, tree4_f64, tree8, KernelSet};
+
+/// The NEON kernel set.
+pub(super) static NEON: KernelSet = KernelSet {
+    name: "neon",
+    dot,
+    nrm2_sq,
+    dot_f32,
+    dot4_acc,
+    axpy,
+    axpy4,
+    scal,
+    sparse_dot: scalar::sparse_dot,
+    prefetch_w,
+};
+
+#[target_feature(enable = "neon")]
+// SAFETY: requires NEON (baseline on every aarch64 target this crate
+// builds for); only reached via the safe wrapper below through the table.
+unsafe fn dot_impl(x: &[f32], y: &[f32]) -> f64 {
+    debug_assert_eq!(x.len(), y.len());
+    let n = x.len();
+    let main = n & !3;
+    let (px, py) = (x.as_ptr(), y.as_ptr());
+    // two f64x2 registers == the scalar [f64; 4] chains (k = 4i + k)
+    let mut acc01 = vdupq_n_f64(0.0);
+    let mut acc23 = vdupq_n_f64(0.0);
+    let mut i = 0;
+    while i < main {
+        let xv = vld1q_f32(px.add(i));
+        let yv = vld1q_f32(py.add(i));
+        let (xlo, xhi) = (vcvt_f64_f32(vget_low_f32(xv)), vcvt_high_f64_f32(xv));
+        let (ylo, yhi) = (vcvt_f64_f32(vget_low_f32(yv)), vcvt_high_f64_f32(yv));
+        // mul then add — never FMA (rounding must match scalar)
+        acc01 = vaddq_f64(acc01, vmulq_f64(xlo, ylo));
+        acc23 = vaddq_f64(acc23, vmulq_f64(xhi, yhi));
+        i += 4;
+    }
+    let mut lanes = [0f64; 4];
+    vst1q_f64(lanes.as_mut_ptr(), acc01);
+    vst1q_f64(lanes.as_mut_ptr().add(2), acc23);
+    tree4_f64(&lanes) + tail_dot_f64(&x[main..], &y[main..])
+}
+
+fn dot(x: &[f32], y: &[f32]) -> f64 {
+    // SAFETY: NEON is baseline on aarch64 and this fn is only reachable
+    // through the NEON table.
+    unsafe { dot_impl(x, y) }
+}
+
+#[target_feature(enable = "neon")]
+// SAFETY: requires NEON (aarch64 baseline); reached only via the wrapper.
+unsafe fn nrm2_sq_impl(x: &[f32]) -> f64 {
+    let n = x.len();
+    let main = n & !3;
+    let px = x.as_ptr();
+    let mut acc01 = vdupq_n_f64(0.0);
+    let mut acc23 = vdupq_n_f64(0.0);
+    let mut i = 0;
+    while i < main {
+        let xv = vld1q_f32(px.add(i));
+        let (xlo, xhi) = (vcvt_f64_f32(vget_low_f32(xv)), vcvt_high_f64_f32(xv));
+        acc01 = vaddq_f64(acc01, vmulq_f64(xlo, xlo));
+        acc23 = vaddq_f64(acc23, vmulq_f64(xhi, xhi));
+        i += 4;
+    }
+    let mut lanes = [0f64; 4];
+    vst1q_f64(lanes.as_mut_ptr(), acc01);
+    vst1q_f64(lanes.as_mut_ptr().add(2), acc23);
+    tree4_f64(&lanes) + tail_sq_f64(&x[main..])
+}
+
+fn nrm2_sq(x: &[f32]) -> f64 {
+    // SAFETY: NEON is baseline on aarch64; reached only through the table.
+    unsafe { nrm2_sq_impl(x) }
+}
+
+#[target_feature(enable = "neon")]
+// SAFETY: requires NEON (aarch64 baseline); reached only via the wrapper.
+unsafe fn dot_f32_impl(x: &[f32], y: &[f32]) -> f32 {
+    debug_assert_eq!(x.len(), y.len());
+    let n = x.len();
+    let main = n & !7;
+    let (px, py) = (x.as_ptr(), y.as_ptr());
+    // two f32x4 registers == the scalar [f32; 8] lanes (lo = 0..4, hi = 4..8)
+    let mut acc_lo = vdupq_n_f32(0.0);
+    let mut acc_hi = vdupq_n_f32(0.0);
+    let mut i = 0;
+    while i < main {
+        acc_lo = vaddq_f32(acc_lo, vmulq_f32(vld1q_f32(px.add(i)), vld1q_f32(py.add(i))));
+        acc_hi = vaddq_f32(acc_hi, vmulq_f32(vld1q_f32(px.add(i + 4)), vld1q_f32(py.add(i + 4))));
+        i += 8;
+    }
+    let mut lanes = [0f32; 8];
+    vst1q_f32(lanes.as_mut_ptr(), acc_lo);
+    vst1q_f32(lanes.as_mut_ptr().add(4), acc_hi);
+    tree8(&lanes) + tail_dot_f32(&x[main..], &y[main..])
+}
+
+fn dot_f32(x: &[f32], y: &[f32]) -> f32 {
+    // SAFETY: NEON is baseline on aarch64; reached only through the table.
+    unsafe { dot_f32_impl(x, y) }
+}
+
+#[target_feature(enable = "neon")]
+// SAFETY: requires NEON (aarch64 baseline); reached only via the wrapper.
+unsafe fn dot4_acc_impl(
+    x0: &[f32],
+    x1: &[f32],
+    x2: &[f32],
+    x3: &[f32],
+    w: &[f32],
+    acc: &mut [[f32; 8]; 4],
+) {
+    let n = w.len();
+    debug_assert!(n % 8 == 0);
+    debug_assert!(x0.len() == n && x1.len() == n && x2.len() == n && x3.len() == n);
+    // continue the caller's chains: two q registers per row
+    let mut a0l = vld1q_f32(acc[0].as_ptr());
+    let mut a0h = vld1q_f32(acc[0].as_ptr().add(4));
+    let mut a1l = vld1q_f32(acc[1].as_ptr());
+    let mut a1h = vld1q_f32(acc[1].as_ptr().add(4));
+    let mut a2l = vld1q_f32(acc[2].as_ptr());
+    let mut a2h = vld1q_f32(acc[2].as_ptr().add(4));
+    let mut a3l = vld1q_f32(acc[3].as_ptr());
+    let mut a3h = vld1q_f32(acc[3].as_ptr().add(4));
+    let (p0, p1, p2, p3, pw) = (x0.as_ptr(), x1.as_ptr(), x2.as_ptr(), x3.as_ptr(), w.as_ptr());
+    let mut i = 0;
+    while i < n {
+        // w streams through registers once for all four rows
+        let wl = vld1q_f32(pw.add(i));
+        let wh = vld1q_f32(pw.add(i + 4));
+        a0l = vaddq_f32(a0l, vmulq_f32(vld1q_f32(p0.add(i)), wl));
+        a0h = vaddq_f32(a0h, vmulq_f32(vld1q_f32(p0.add(i + 4)), wh));
+        a1l = vaddq_f32(a1l, vmulq_f32(vld1q_f32(p1.add(i)), wl));
+        a1h = vaddq_f32(a1h, vmulq_f32(vld1q_f32(p1.add(i + 4)), wh));
+        a2l = vaddq_f32(a2l, vmulq_f32(vld1q_f32(p2.add(i)), wl));
+        a2h = vaddq_f32(a2h, vmulq_f32(vld1q_f32(p2.add(i + 4)), wh));
+        a3l = vaddq_f32(a3l, vmulq_f32(vld1q_f32(p3.add(i)), wl));
+        a3h = vaddq_f32(a3h, vmulq_f32(vld1q_f32(p3.add(i + 4)), wh));
+        i += 8;
+    }
+    vst1q_f32(acc[0].as_mut_ptr(), a0l);
+    vst1q_f32(acc[0].as_mut_ptr().add(4), a0h);
+    vst1q_f32(acc[1].as_mut_ptr(), a1l);
+    vst1q_f32(acc[1].as_mut_ptr().add(4), a1h);
+    vst1q_f32(acc[2].as_mut_ptr(), a2l);
+    vst1q_f32(acc[2].as_mut_ptr().add(4), a2h);
+    vst1q_f32(acc[3].as_mut_ptr(), a3l);
+    vst1q_f32(acc[3].as_mut_ptr().add(4), a3h);
+}
+
+fn dot4_acc(x0: &[f32], x1: &[f32], x2: &[f32], x3: &[f32], w: &[f32], acc: &mut [[f32; 8]; 4]) {
+    // SAFETY: NEON is baseline on aarch64; reached only through the table.
+    unsafe { dot4_acc_impl(x0, x1, x2, x3, w, acc) }
+}
+
+#[target_feature(enable = "neon")]
+// SAFETY: requires NEON (aarch64 baseline); reached only via the wrapper.
+unsafe fn axpy_impl(a: f32, x: &[f32], y: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    let n = y.len();
+    let main = n & !3;
+    let av = vdupq_n_f32(a);
+    let px = x.as_ptr();
+    let py = y.as_mut_ptr();
+    let mut i = 0;
+    while i < main {
+        let yv = vld1q_f32(py.add(i));
+        let xv = vld1q_f32(px.add(i));
+        vst1q_f32(py.add(i), vaddq_f32(yv, vmulq_f32(av, xv)));
+        i += 4;
+    }
+    for k in main..n {
+        y[k] += a * x[k];
+    }
+}
+
+fn axpy(a: f32, x: &[f32], y: &mut [f32]) {
+    // SAFETY: NEON is baseline on aarch64; reached only through the table.
+    unsafe { axpy_impl(a, x, y) }
+}
+
+#[target_feature(enable = "neon")]
+// SAFETY: requires NEON (aarch64 baseline); reached only via the wrapper.
+unsafe fn axpy4_impl(c: &[f32; 4], x0: &[f32], x1: &[f32], x2: &[f32], x3: &[f32], y: &mut [f32]) {
+    let n = y.len();
+    debug_assert!(x0.len() == n && x1.len() == n && x2.len() == n && x3.len() == n);
+    let main = n & !3;
+    let (c0, c1, c2, c3) =
+        (vdupq_n_f32(c[0]), vdupq_n_f32(c[1]), vdupq_n_f32(c[2]), vdupq_n_f32(c[3]));
+    let (p0, p1, p2, p3) = (x0.as_ptr(), x1.as_ptr(), x2.as_ptr(), x3.as_ptr());
+    let py = y.as_mut_ptr();
+    let mut i = 0;
+    while i < main {
+        // keep the scalar association: ((c0·x0 + c1·x1) + c2·x2) + c3·x3
+        let t01 = vaddq_f32(
+            vmulq_f32(c0, vld1q_f32(p0.add(i))),
+            vmulq_f32(c1, vld1q_f32(p1.add(i))),
+        );
+        let t012 = vaddq_f32(t01, vmulq_f32(c2, vld1q_f32(p2.add(i))));
+        let t = vaddq_f32(t012, vmulq_f32(c3, vld1q_f32(p3.add(i))));
+        vst1q_f32(py.add(i), vaddq_f32(vld1q_f32(py.add(i)), t));
+        i += 4;
+    }
+    for k in main..n {
+        y[k] += c[0] * x0[k] + c[1] * x1[k] + c[2] * x2[k] + c[3] * x3[k];
+    }
+}
+
+fn axpy4(c: &[f32; 4], x0: &[f32], x1: &[f32], x2: &[f32], x3: &[f32], y: &mut [f32]) {
+    // SAFETY: NEON is baseline on aarch64; reached only through the table.
+    unsafe { axpy4_impl(c, x0, x1, x2, x3, y) }
+}
+
+#[target_feature(enable = "neon")]
+// SAFETY: requires NEON (aarch64 baseline); reached only via the wrapper.
+unsafe fn scal_impl(a: f32, x: &mut [f32]) {
+    let n = x.len();
+    let main = n & !3;
+    let av = vdupq_n_f32(a);
+    let px = x.as_mut_ptr();
+    let mut i = 0;
+    while i < main {
+        vst1q_f32(px.add(i), vmulq_f32(vld1q_f32(px.add(i)), av));
+        i += 4;
+    }
+    for k in main..n {
+        x[k] *= a;
+    }
+}
+
+fn scal(a: f32, x: &mut [f32]) {
+    // SAFETY: NEON is baseline on aarch64; reached only through the table.
+    unsafe { scal_impl(a, x) }
+}
+
+/// No stable prefetch intrinsic on aarch64 — rely on the hardware
+/// prefetcher (a no-op keeps the table total).
+fn prefetch_w(_w: &[f32], _idx: &[u32]) {}

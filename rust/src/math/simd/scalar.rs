@@ -1,0 +1,173 @@
+//! Portable scalar kernels — the fallback [`KernelSet`] and the oracle the
+//! property tests compare every SIMD set against.
+//!
+//! These are the crate's original hand-unrolled loops, lane-normalized to
+//! the module's virtual widths (8 f32 lanes, 4 f64 chains) so the AVX2 and
+//! NEON sets perform *the same arithmetic in the same order* and stay
+//! bit-identical (see the module docs for the three rules). The unrolled
+//! forms also autovectorize well, so "scalar" here still runs at several
+//! elements per cycle on any target.
+
+use super::{tail_dot_f32, tail_dot_f64, tail_sq_f64, tree4, tree4_f64, tree8, KernelSet};
+
+/// The portable kernel set.
+pub(super) static SCALAR: KernelSet = KernelSet {
+    name: "scalar",
+    dot,
+    nrm2_sq,
+    dot_f32,
+    dot4_acc,
+    axpy,
+    axpy4,
+    scal,
+    sparse_dot,
+    prefetch_w,
+};
+
+/// f64 dot, 4 accumulator chains (chain `k` takes elements `4i + k`).
+fn dot(x: &[f32], y: &[f32]) -> f64 {
+    debug_assert_eq!(x.len(), y.len());
+    let mut acc = [0f64; 4];
+    let mut xc = x.chunks_exact(4);
+    let mut yc = y.chunks_exact(4);
+    for (xs, ys) in (&mut xc).zip(&mut yc) {
+        for k in 0..4 {
+            acc[k] += (xs[k] as f64) * (ys[k] as f64);
+        }
+    }
+    tree4_f64(&acc) + tail_dot_f64(xc.remainder(), yc.remainder())
+}
+
+/// f64 squared norm, 4 accumulator chains.
+fn nrm2_sq(x: &[f32]) -> f64 {
+    let mut acc = [0f64; 4];
+    let mut xc = x.chunks_exact(4);
+    for xs in &mut xc {
+        for k in 0..4 {
+            acc[k] += (xs[k] as f64) * (xs[k] as f64);
+        }
+    }
+    tree4_f64(&acc) + tail_sq_f64(xc.remainder())
+}
+
+/// f32 dot, 8 accumulator lanes (lane `k` takes elements `8i + k`). Strict
+/// IEEE f32 `acc += x*y` is a serial dependency chain the compiler must not
+/// reorder; eight independent lanes break it (≈4–5× on this hot path — see
+/// EXPERIMENTS.md §Perf).
+fn dot_f32(x: &[f32], y: &[f32]) -> f32 {
+    debug_assert_eq!(x.len(), y.len());
+    let mut acc = [0f32; 8];
+    let mut xc = x.chunks_exact(8);
+    let mut yc = y.chunks_exact(8);
+    for (xs, ys) in (&mut xc).zip(&mut yc) {
+        for k in 0..8 {
+            acc[k] += xs[k] * ys[k];
+        }
+    }
+    tree8(&acc) + tail_dot_f32(xc.remainder(), yc.remainder())
+}
+
+/// Partial rank-4 dot into per-row 8-lane accumulators (slices must be a
+/// multiple of 8 long; the front door owns the tail). `w` streams through
+/// registers once per 8 columns for all four rows.
+fn dot4_acc(
+    x0: &[f32],
+    x1: &[f32],
+    x2: &[f32],
+    x3: &[f32],
+    w: &[f32],
+    acc: &mut [[f32; 8]; 4],
+) {
+    let n = w.len();
+    debug_assert!(n % 8 == 0);
+    debug_assert!(x0.len() == n && x1.len() == n && x2.len() == n && x3.len() == n);
+    let mut base = 0;
+    while base + 8 <= n {
+        for k in 0..8 {
+            let wk = w[base + k];
+            acc[0][k] += x0[base + k] * wk;
+            acc[1][k] += x1[base + k] * wk;
+            acc[2][k] += x2[base + k] * wk;
+            acc[3][k] += x3[base + k] * wk;
+        }
+        base += 8;
+    }
+}
+
+/// `y += a * x`, 8-lane unrolled via `chunks_exact` so the bounds checks
+/// vanish and the loop vectorizes.
+fn axpy(a: f32, x: &[f32], y: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    let mut yc = y.chunks_exact_mut(8);
+    let mut xc = x.chunks_exact(8);
+    for (ys, xs) in (&mut yc).zip(&mut xc) {
+        for k in 0..8 {
+            ys[k] += a * xs[k];
+        }
+    }
+    for (yi, xi) in yc.into_remainder().iter_mut().zip(xc.remainder()) {
+        *yi += a * *xi;
+    }
+}
+
+/// Rank-4 update through 8-wide fixed-size array views: one load + store of
+/// `y` per element instead of four, bounds checks hoisted to one per block.
+/// Per-element association is `((c0·x0 + c1·x1) + c2·x2) + c3·x3`, then one
+/// add onto `y` — every implementation must keep this exact shape.
+fn axpy4(c: &[f32; 4], x0: &[f32], x1: &[f32], x2: &[f32], x3: &[f32], y: &mut [f32]) {
+    let n = y.len();
+    debug_assert!(x0.len() == n && x1.len() == n && x2.len() == n && x3.len() == n);
+    let blocks = n / 8;
+    for b in 0..blocks {
+        let base = b * 8;
+        let ys: &mut [f32; 8] = (&mut y[base..base + 8]).try_into().expect("8-wide block");
+        let a0: &[f32; 8] = (&x0[base..base + 8]).try_into().expect("8-wide block");
+        let a1: &[f32; 8] = (&x1[base..base + 8]).try_into().expect("8-wide block");
+        let a2: &[f32; 8] = (&x2[base..base + 8]).try_into().expect("8-wide block");
+        let a3: &[f32; 8] = (&x3[base..base + 8]).try_into().expect("8-wide block");
+        for k in 0..8 {
+            ys[k] += c[0] * a0[k] + c[1] * a1[k] + c[2] * a2[k] + c[3] * a3[k];
+        }
+    }
+    for k in blocks * 8..n {
+        y[k] += c[0] * x0[k] + c[1] * x1[k] + c[2] * x2[k] + c[3] * x3[k];
+    }
+}
+
+/// `x *= a`, 8-lane unrolled (elementwise, bit-identical to the naive loop).
+fn scal(a: f32, x: &mut [f32]) {
+    let mut xc = x.chunks_exact_mut(8);
+    for xs in &mut xc {
+        for k in 0..8 {
+            xs[k] *= a;
+        }
+    }
+    for xi in xc.into_remainder() {
+        *xi *= a;
+    }
+}
+
+/// Sparse dot with 4 accumulator chains (the gather loads dominate, but
+/// breaking the add chain still buys ~2× on long rows). Out-of-range
+/// indices panic through the slice index, same as every implementation.
+/// `pub(super)`: the NEON set (no gather unit) and the AVX2 huge-`w` guard
+/// reuse this exact code path.
+pub(super) fn sparse_dot(w: &[f32], vals: &[f32], idx: &[u32]) -> f32 {
+    debug_assert_eq!(vals.len(), idx.len());
+    let mut acc = [0f32; 4];
+    let mut vc = vals.chunks_exact(4);
+    let mut ic = idx.chunks_exact(4);
+    for (vs, is) in (&mut vc).zip(&mut ic) {
+        for k in 0..4 {
+            acc[k] += vs[k] * w[is[k] as usize];
+        }
+    }
+    let mut tail = 0f32;
+    for (v, i) in vc.remainder().iter().zip(ic.remainder()) {
+        tail += v * w[*i as usize];
+    }
+    tree4(&acc) + tail
+}
+
+/// Scalar prefetch: a no-op (the hardware prefetcher is all there is).
+fn prefetch_w(_w: &[f32], _idx: &[u32]) {}

@@ -16,26 +16,18 @@
 
 use crate::data::batch::CsrView;
 use crate::math::logistic::{log1p_exp, sigmoid};
+use crate::math::simd;
 
 /// Sparse dot `Σ_k vals[k] * w[idx[k]]` with four independent accumulator
 /// chains (the gather loads dominate, but breaking the add chain still buys
-/// ~2x on long rows — same rationale as `dense::dot_f32`).
+/// ~2x on long rows — same rationale as `dense::dot_f32`). Dispatches to the
+/// active kernel set: the AVX2 path uses bounds-checked hardware gathers,
+/// and every set shares the 4-chain layout, so the value is bit-identical
+/// scalar vs SIMD.
 #[inline]
 pub fn sparse_dot(w: &[f32], vals: &[f32], idx: &[u32]) -> f32 {
     debug_assert_eq!(vals.len(), idx.len());
-    let mut acc = [0f32; 4];
-    let mut vc = vals.chunks_exact(4);
-    let mut ic = idx.chunks_exact(4);
-    for (vs, is) in (&mut vc).zip(&mut ic) {
-        for k in 0..4 {
-            acc[k] += vs[k] * w[is[k] as usize];
-        }
-    }
-    let mut tail = 0f32;
-    for (v, i) in vc.remainder().iter().zip(ic.remainder()) {
-        tail += v * w[*i as usize];
-    }
-    (acc[0] + acc[1]) + (acc[2] + acc[3]) + tail
+    (simd::active().sparse_dot)(w, vals, idx)
 }
 
 /// Mini-batch gradient of eq.(3) into `out` (same contract as the dense
@@ -53,11 +45,17 @@ pub fn grad_into_csr(w: &[f32], batch: &CsrView<'_>, c: f32, out: &mut [f32]) {
     for (o, wi) in out.iter_mut().zip(w) {
         *o = c * *wi;
     }
+    let ks = simd::active();
     let scale = 1.0 / rows as f32;
     for r in 0..rows {
         let (vals, idx) = batch.row(r);
+        if r + 1 < rows {
+            // pull the next row's gather targets toward L1 while this row's
+            // dot and scatter are in flight
+            (ks.prefetch_w)(w, batch.row(r + 1).1);
+        }
         let yi = batch.y[r];
-        let z = sparse_dot(w, vals, idx);
+        let z = (ks.sparse_dot)(w, vals, idx);
         let coeff = -yi * sigmoid(-yi * z) * scale;
         for (v, i) in vals.iter().zip(idx) {
             out[*i as usize] += coeff * *v;
@@ -67,10 +65,15 @@ pub fn grad_into_csr(w: &[f32], batch: &CsrView<'_>, c: f32, out: &mut [f32]) {
 
 /// Logistic loss sum `Σ_i log(1 + exp(-y_i x_i.w))` over a CSR batch (f64).
 pub fn loss_sum_csr(w: &[f32], batch: &CsrView<'_>) -> f64 {
+    let ks = simd::active();
+    let rows = batch.rows();
     let mut acc = 0f64;
-    for r in 0..batch.rows() {
+    for r in 0..rows {
         let (vals, idx) = batch.row(r);
-        let z = sparse_dot(w, vals, idx);
+        if r + 1 < rows {
+            (ks.prefetch_w)(w, batch.row(r + 1).1);
+        }
+        let z = (ks.sparse_dot)(w, vals, idx);
         acc += log1p_exp((-batch.y[r] * z) as f64);
     }
     acc
@@ -109,12 +112,16 @@ pub fn mbsgd_lazy_step_csr(
     debug_assert!(rows > 0);
     let inv_rows = 1.0 / rows as f32;
     // forward pass at the *pre-step* iterate for the whole batch
+    let ks = simd::active();
     coeffs.clear();
     coeffs.reserve(rows);
     for r in 0..rows {
         let (vals, idx) = batch.row(r);
+        if r + 1 < rows {
+            (ks.prefetch_w)(v, batch.row(r + 1).1);
+        }
         let yi = batch.y[r];
-        let z = scale * sparse_dot(v, vals, idx);
+        let z = scale * (ks.sparse_dot)(v, vals, idx);
         coeffs.push(-yi * sigmoid(-yi * z) * inv_rows);
     }
     let new_scale = scale * (1.0 - lr * c);

@@ -35,8 +35,9 @@ const MIN_SCALE: f32 = 1e-3;
 /// MBSGD state: the iterate, kept as `scale * v` between sparse steps.
 #[derive(Debug, Clone)]
 pub struct Mbsgd {
-    /// The scaled iterate `v` (`w = scale * v`; `scale == 1` ⇒ `w == v`).
-    w: Vec<f32>,
+    /// The scaled iterate `v` (`w = scale * v`; `scale == 1` ⇒ `w == v`),
+    /// 64-byte aligned for the SIMD kernels.
+    w: crate::aligned::AlignedVec<f32>,
     scale: f32,
     scratch: GradScratch,
     /// Per-row residual weights for the lazy sparse step.
@@ -48,7 +49,7 @@ impl Mbsgd {
     /// `n` features, `m` batches per epoch (unused — kept for uniformity).
     pub fn new(n: usize, _m: usize) -> Self {
         Mbsgd {
-            w: vec![0f32; n],
+            w: crate::aligned::AlignedVec::from_elem(0f32, n),
             scale: 1.0,
             scratch: GradScratch::new(n),
             coeffs: Vec::new(),

@@ -135,15 +135,16 @@ pub trait Solver: Send {
     ) -> Result<()>;
 }
 
-/// Shared fallback: gradient + host algebra scratch.
+/// Shared fallback: gradient + host algebra scratch (64-byte aligned for
+/// the SIMD kernels).
 #[derive(Debug, Clone)]
 pub(crate) struct GradScratch {
-    pub g: Vec<f32>,
+    pub g: crate::aligned::AlignedVec<f32>,
 }
 
 impl GradScratch {
     pub fn new(n: usize) -> Self {
-        GradScratch { g: vec![0f32; n] }
+        GradScratch { g: crate::aligned::AlignedVec::from_elem(0f32, n) }
     }
 }
 

@@ -14,16 +14,18 @@
 //! At `j = 0` this is exactly MBSGD; late in the epoch it approaches the
 //! SAG-style biased average. The accumulator resets every epoch.
 
+use crate::aligned::AlignedVec;
 use crate::backend::{ComputeBackend, FusedStep};
 use crate::data::batch::BatchView;
 use crate::error::Result;
 use crate::solvers::{GradScratch, Solver};
 
-/// SAAG-II state: iterate + epoch gradient accumulator.
+/// SAAG-II state: iterate + epoch gradient accumulator, in 64-byte-aligned
+/// buffers for the SIMD kernels.
 #[derive(Debug, Clone)]
 pub struct Saag2 {
-    w: Vec<f32>,
-    acc: Vec<f32>,
+    w: AlignedVec<f32>,
+    acc: AlignedVec<f32>,
     m: usize,
     scratch: GradScratch,
     c: f32,
@@ -32,7 +34,13 @@ pub struct Saag2 {
 impl Saag2 {
     /// `n` features, `m` mini-batches per epoch.
     pub fn new(n: usize, m: usize) -> Self {
-        Saag2 { w: vec![0f32; n], acc: vec![0f32; n], m, scratch: GradScratch::new(n), c: 0.0 }
+        Saag2 {
+            w: AlignedVec::from_elem(0f32, n),
+            acc: AlignedVec::from_elem(0f32, n),
+            m,
+            scratch: GradScratch::new(n),
+            c: 0.0,
+        }
     }
 
     /// Set the regularization coefficient.

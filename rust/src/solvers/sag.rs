@@ -9,17 +9,19 @@
 //! partition samplers (CS/SS, RS-without) every position is revisited once
 //! per epoch, matching the classic analysis.
 
+use crate::aligned::AlignedVec;
 use crate::backend::{ComputeBackend, FusedStep};
 use crate::data::batch::BatchView;
 use crate::error::Result;
 use crate::solvers::{GradScratch, Solver};
 
-/// SAG state: iterate + `m` stored batch gradients + running average.
+/// SAG state: iterate + `m` stored batch gradients + running average, all
+/// in 64-byte-aligned buffers for the SIMD kernels.
 #[derive(Debug, Clone)]
 pub struct Sag {
-    w: Vec<f32>,
-    memory: Vec<Vec<f32>>,
-    avg: Vec<f32>,
+    w: AlignedVec<f32>,
+    memory: Vec<AlignedVec<f32>>,
+    avg: AlignedVec<f32>,
     inv_m: f32,
     scratch: GradScratch,
     c: f32,
@@ -29,9 +31,9 @@ impl Sag {
     /// `n` features, `m` mini-batches per epoch.
     pub fn new(n: usize, m: usize) -> Self {
         Sag {
-            w: vec![0f32; n],
-            memory: vec![vec![0f32; n]; m],
-            avg: vec![0f32; n],
+            w: AlignedVec::from_elem(0f32, n),
+            memory: vec![AlignedVec::from_elem(0f32, n); m],
+            avg: AlignedVec::from_elem(0f32, n),
             inv_m: 1.0 / m as f32,
             scratch: GradScratch::new(n),
             c: 0.0,

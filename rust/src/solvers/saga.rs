@@ -8,17 +8,19 @@
 //! Unlike SAG, the correction `g_j − y_j + avg` is an unbiased gradient
 //! estimate; the paper benchmarks both.
 
+use crate::aligned::AlignedVec;
 use crate::backend::{ComputeBackend, FusedStep};
 use crate::data::batch::BatchView;
 use crate::error::Result;
 use crate::solvers::{GradScratch, Solver};
 
-/// SAGA state: iterate + `m` stored batch gradients + running average.
+/// SAGA state: iterate + `m` stored batch gradients + running average, all
+/// in 64-byte-aligned buffers for the SIMD kernels.
 #[derive(Debug, Clone)]
 pub struct Saga {
-    w: Vec<f32>,
-    memory: Vec<Vec<f32>>,
-    avg: Vec<f32>,
+    w: AlignedVec<f32>,
+    memory: Vec<AlignedVec<f32>>,
+    avg: AlignedVec<f32>,
     inv_m: f32,
     scratch: GradScratch,
     c: f32,
@@ -28,9 +30,9 @@ impl Saga {
     /// `n` features, `m` mini-batches per epoch.
     pub fn new(n: usize, m: usize) -> Self {
         Saga {
-            w: vec![0f32; n],
-            memory: vec![vec![0f32; n]; m],
-            avg: vec![0f32; n],
+            w: AlignedVec::from_elem(0f32, n),
+            memory: vec![AlignedVec::from_elem(0f32, n); m],
+            avg: AlignedVec::from_elem(0f32, n),
             inv_m: 1.0 / m as f32,
             scratch: GradScratch::new(n),
             c: 0.0,

@@ -10,19 +10,21 @@
 //! [`Solver::install_full_grad`], so its data-access cost is accounted like
 //! every other read — the paper's timing includes it too.
 
+use crate::aligned::AlignedVec;
 use crate::backend::{ComputeBackend, FusedStep};
 use crate::data::batch::BatchView;
 use crate::error::{Error, Result};
 use crate::solvers::{GradScratch, Solver};
 
-/// SVRG state: iterate + epoch snapshot + full gradient at the snapshot.
+/// SVRG state: iterate + epoch snapshot + full gradient at the snapshot,
+/// in 64-byte-aligned buffers for the SIMD kernels.
 #[derive(Debug, Clone)]
 pub struct Svrg {
-    w: Vec<f32>,
-    w_snap: Vec<f32>,
-    mu: Option<Vec<f32>>,
+    w: AlignedVec<f32>,
+    w_snap: AlignedVec<f32>,
+    mu: Option<AlignedVec<f32>>,
     scratch: GradScratch,
-    scratch2: Vec<f32>,
+    scratch2: AlignedVec<f32>,
     c: f32,
 }
 
@@ -31,11 +33,11 @@ impl Svrg {
     /// uniformity).
     pub fn new(n: usize, _m: usize) -> Self {
         Svrg {
-            w: vec![0f32; n],
-            w_snap: vec![0f32; n],
+            w: AlignedVec::from_elem(0f32, n),
+            w_snap: AlignedVec::from_elem(0f32, n),
             mu: None,
             scratch: GradScratch::new(n),
-            scratch2: vec![0f32; n],
+            scratch2: AlignedVec::from_elem(0f32, n),
             c: 0.0,
         }
     }
@@ -69,7 +71,7 @@ impl Solver for Svrg {
     }
 
     fn install_full_grad(&mut self, mu: &[f32]) {
-        self.mu = Some(mu.to_vec());
+        self.mu = Some(AlignedVec::from_slice(mu));
     }
 
     fn step(

@@ -79,6 +79,7 @@ use std::sync::{Arc, Condvar, Mutex, MutexGuard};
 use std::thread::JoinHandle;
 use std::time::Duration;
 
+use crate::aligned::AlignedVec;
 use crate::error::{Error, Result};
 use crate::storage::cache::{LruCache, Touch};
 
@@ -228,7 +229,7 @@ impl PageLayout {
     fn decode(self, raw: &[u8]) -> Page {
         match self {
             PageLayout::DenseF32 => {
-                let mut x = Vec::with_capacity(raw.len() / 4);
+                let mut x = AlignedVec::with_capacity(raw.len() / 4);
                 for ch in raw.chunks_exact(4) {
                     x.push(f32::from_le_bytes([ch[0], ch[1], ch[2], ch[3]]));
                 }
@@ -236,8 +237,8 @@ impl PageLayout {
             }
             PageLayout::IdxValPairs => {
                 let n = raw.len() / 8;
-                let mut values = Vec::with_capacity(n);
-                let mut col_idx = Vec::with_capacity(n);
+                let mut values = AlignedVec::with_capacity(n);
+                let mut col_idx = AlignedVec::with_capacity(n);
                 for ch in raw.chunks_exact(8) {
                     col_idx.push(u32::from_le_bytes([ch[0], ch[1], ch[2], ch[3]]));
                     values.push(f32::from_le_bytes([ch[4], ch[5], ch[6], ch[7]]));
@@ -248,17 +249,19 @@ impl PageLayout {
     }
 }
 
-/// One decoded, refcounted page of the feature region.
+/// One decoded, refcounted page of the feature region. Payloads live in
+/// 64-byte-aligned buffers so pinned zero-copy batch views hand the SIMD
+/// kernels the same alignment guarantee as the in-core stores.
 #[derive(Debug)]
 pub enum Page {
     /// Dense f32 elements.
-    Dense(Vec<f32>),
+    Dense(AlignedVec<f32>),
     /// Deinterleaved CSR payload: values and their column indices.
     Pairs {
         /// Non-zero values.
-        values: Vec<f32>,
+        values: AlignedVec<f32>,
         /// Column index of each value.
-        col_idx: Vec<u32>,
+        col_idx: AlignedVec<u32>,
     },
 }
 

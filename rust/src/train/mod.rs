@@ -167,7 +167,7 @@ pub fn run_experiment_with_backend(
     let mut trace = Trace::default();
     let ls_params = LineSearchParams { alpha0: 1.0, ..Default::default() };
     let mut ls_scratch = LineSearchScratch::default();
-    let mut mu_scratch = vec![0f32; n];
+    let mut mu_scratch = crate::aligned::AlignedVec::from_elem(0f32, n);
     let mut sweep_scratch = SweepScratch::default();
 
     // 0 resets to the default, so a pin from a previous experiment in the

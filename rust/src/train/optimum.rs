@@ -25,10 +25,11 @@ pub fn estimate_optimum(
     let n = ds.cols();
     let l = ds.lipschitz(c)?;
     let lr = (1.0 / l) as f32;
-    let mut w = vec![0f32; n];
-    let mut w_prev = vec![0f32; n];
-    let mut v = vec![0f32; n];
-    let mut g = vec![0f32; n];
+    // 64-byte-aligned iterate/gradient buffers for the SIMD kernels
+    let mut w = crate::aligned::AlignedVec::from_elem(0f32, n);
+    let mut w_prev = crate::aligned::AlignedVec::from_elem(0f32, n);
+    let mut v = crate::aligned::AlignedVec::from_elem(0f32, n);
+    let mut g = crate::aligned::AlignedVec::from_elem(0f32, n);
     let native = be.is_native_host();
     if !native && ds.is_paged() {
         return Err(crate::error::Error::Config(

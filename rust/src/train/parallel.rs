@@ -56,8 +56,8 @@ pub struct ParallelReport {
 struct ShardSlot {
     be: NativeBackend,
     asm: BatchAssembler,
-    wloc: Vec<f32>,
-    g: Vec<f32>,
+    wloc: crate::aligned::AlignedVec<f32>,
+    g: crate::aligned::AlignedVec<f32>,
     /// First assembly/step error of this shard's epoch (paged I/O can
     /// fail); collected by the leader after the pooled epoch so a bad disk
     /// read fails the run typed instead of panicking a pool worker.
@@ -116,8 +116,8 @@ pub fn run_data_parallel(
         .map(|_| ShardSlot {
             be: NativeBackend::new(),
             asm: BatchAssembler::new(),
-            wloc: vec![0f32; n],
-            g: vec![0f32; n],
+            wloc: crate::aligned::AlignedVec::from_elem(0f32, n),
+            g: crate::aligned::AlignedVec::from_elem(0f32, n),
             err: None,
         })
         .collect();

@@ -8,14 +8,27 @@
 //! pin the pooled gradient against the serial reference fold exactly.
 //! Because the contract holds for *any* setting, the tests stay valid
 //! even if another test mutates the global parallelism knob concurrently.
+//!
+//! The same contract extends across the *kernel dispatch* axis: the
+//! portable scalar table and the best detected SIMD table (AVX2/NEON)
+//! must produce bit-identical objectives, gradients, and whole solver
+//! trajectories — pinned by the `scalar_and_simd_*` tests below, which
+//! serialize on a local mutex because the dispatch override is
+//! process-global.
+
+use std::sync::Mutex;
 
 use samplex::backend::{ComputeBackend, NativeBackend};
+use samplex::config::ExperimentConfig;
 use samplex::data::csr::CsrDataset;
 use samplex::data::dense::DenseDataset;
 use samplex::data::Dataset;
 use samplex::math::chunked::{self, GradScratch};
+use samplex::math::simd;
 use samplex::rng::Rng;
 use samplex::runtime::pool;
+use samplex::sampling::SamplingKind;
+use samplex::solvers::SolverKind;
 use samplex::train::estimate_optimum;
 
 const POOL_SIZES: [usize; 3] = [1, 2, 8];
@@ -146,6 +159,83 @@ fn prop_pooled_grad_matches_serial_kernel_exactly() {
             "case {case}: rows={rows} cols={cols} chunk={chunk} c={c}"
         );
     }
+}
+
+/// Serializes the tests that flip the process-global kernel dispatch.
+static DISPATCH: Mutex<()> = Mutex::new(());
+
+/// Run `f` under the forced-scalar table and the best available table and
+/// assert bit-identical results (the SIMD overhaul's core contract).
+fn scalar_vs_best<T: PartialEq + std::fmt::Debug>(label: &str, mut f: impl FnMut() -> T) {
+    simd::force_scalar();
+    let scalar = f();
+    simd::force_best();
+    let best = f();
+    assert_eq!(
+        scalar,
+        best,
+        "{label}: scalar vs `{}` kernels must be bit-identical",
+        simd::active_name()
+    );
+}
+
+#[test]
+fn scalar_and_simd_bit_identical_objective_and_gradient() {
+    let _g = DISPATCH.lock().unwrap();
+    // 33 columns: a 4-wide f64 main body plus a 1-element tail for the
+    // loss path, and an 8-wide f32 body plus tail for the gradient path
+    let (dense, wd) = dense_ds(6_000, 33, 0xA0);
+    let (csr, ws) = csr_ds(4_000, 40, 0.12, 0xA1);
+    for pool_threads in [1, 8] {
+        pool::set_parallelism(pool_threads);
+        for (label, ds, w) in [("dense", &dense, &wd), ("csr", &csr, &ws)] {
+            let cols = ds.cols();
+            scalar_vs_best(&format!("objective/{label}/pool={pool_threads}"), || {
+                let mut be = NativeBackend::new();
+                be.full_objective(w, ds, 1e-3).unwrap().to_bits()
+            });
+            scalar_vs_best(&format!("gradient/{label}/pool={pool_threads}"), || {
+                let mut g = vec![0f32; cols];
+                let mut scratch = GradScratch::default();
+                chunked::full_grad_into(w, ds, 1e-3, &mut g, &mut scratch).unwrap();
+                g.iter().map(|v| v.to_bits()).collect::<Vec<u32>>()
+            });
+        }
+    }
+    pool::set_parallelism(0);
+}
+
+#[test]
+fn scalar_and_simd_bit_identical_solver_trajectories() {
+    let _g = DISPATCH.lock().unwrap();
+    let (dense, _) = dense_ds(1_200, 10, 0xB0);
+    let (csr, _) = csr_ds(1_000, 30, 0.15, 0xB1);
+    // every solver on the dense row-major kernels
+    for kind in [
+        SolverKind::Mbsgd,
+        SolverKind::Sag,
+        SolverKind::Saga,
+        SolverKind::Svrg,
+        SolverKind::Saag2,
+    ] {
+        let mut cfg = ExperimentConfig::quick("simd-parity", kind, SamplingKind::Cs, 100);
+        cfg.epochs = 3;
+        cfg.reg_c = Some(1e-3);
+        scalar_vs_best(&format!("trajectory/{kind:?}/dense"), || {
+            let r = samplex::train::run_experiment(&cfg, &dense).unwrap();
+            r.w.iter().map(|v| v.to_bits()).collect::<Vec<u32>>()
+        });
+    }
+    // SAGA additionally on CSR: the gather-based sparse_dot kernel plus
+    // the lazy-scaling scatter path
+    let mut cfg =
+        ExperimentConfig::quick("simd-parity-csr", SolverKind::Saga, SamplingKind::Cs, 100);
+    cfg.epochs = 3;
+    cfg.reg_c = Some(1e-3);
+    scalar_vs_best("trajectory/Saga/csr", || {
+        let r = samplex::train::run_experiment(&cfg, &csr).unwrap();
+        r.w.iter().map(|v| v.to_bits()).collect::<Vec<u32>>()
+    });
 }
 
 #[test]

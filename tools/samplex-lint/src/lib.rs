@@ -24,6 +24,12 @@
 //! - **safety-comments** (R5): every `unsafe` token must carry a
 //!   `// SAFETY:` comment (same line or the comment block directly
 //!   above).
+//! - **simd-dispatch** (R6): `#[target_feature]` functions are defined
+//!   only under `math/simd/`, and no file outside `math/simd/` calls one
+//!   directly — arch kernels are reachable solely through the dispatched
+//!   `KernelSet` function table. This is the one cross-file rule: pass 1
+//!   collects every `#[target_feature]` function name in the linted set,
+//!   pass 2 flags out-of-module definitions and direct calls.
 //!
 //! Violations are suppressible only via an explicit
 //! `// samplex-lint: allow(<rule>) -- <reason>` annotation on the same
@@ -55,6 +61,9 @@ pub enum Rule {
     AtomicsAudit,
     /// R5: every `unsafe` carries a `// SAFETY:` justification.
     SafetyComments,
+    /// R6: `#[target_feature]` kernels live in `math/simd/` and are
+    /// reached only through the dispatched `KernelSet` table.
+    SimdDispatch,
     /// Meta: malformed `samplex-lint:` annotation.
     BadAllow,
     /// Meta: an allow annotation that suppressed nothing.
@@ -70,6 +79,7 @@ impl Rule {
             Rule::Determinism => "determinism",
             Rule::AtomicsAudit => "atomics-audit",
             Rule::SafetyComments => "safety-comments",
+            Rule::SimdDispatch => "simd-dispatch",
             Rule::BadAllow => "bad-allow",
             Rule::UnusedAllow => "unused-allow",
         }
@@ -84,6 +94,7 @@ impl Rule {
             "determinism" => Some(Rule::Determinism),
             "atomics-audit" => Some(Rule::AtomicsAudit),
             "safety-comments" => Some(Rule::SafetyComments),
+            "simd-dispatch" => Some(Rule::SimdDispatch),
             _ => None,
         }
     }
@@ -328,6 +339,9 @@ pub struct FileClass {
     pub determinism: bool,
     /// R2 applies: the shard-locked page store.
     pub pagestore: bool,
+    /// R6 home: under `math/simd/`, where `#[target_feature]` kernels
+    /// (and direct calls to them) are legitimate.
+    pub simd_home: bool,
 }
 
 /// Classify a path (forward or back slashes) into rule families.
@@ -346,6 +360,7 @@ pub fn classify(path: &str) -> FileClass {
             || p.ends_with("train/parallel.rs")
             || p.ends_with("backend/native.rs"),
         pagestore: p.ends_with("storage/pagestore.rs"),
+        simd_home: p.contains("math/simd/"),
     }
 }
 
@@ -684,6 +699,66 @@ fn apply_allows(file: &str, raw: &mut Vec<Finding>, allows: &mut [Allow]) -> Vec
         .collect()
 }
 
+/// First function name declared at or after `code`'s `fn ` keyword, if
+/// any (used to attach a `#[target_feature]` attribute to its item).
+fn fn_name(code: &str) -> Option<String> {
+    let bytes = code.as_bytes();
+    let mut at = 0usize;
+    while let Some(p) = code[at..].find("fn ") {
+        let s = at + p;
+        let pre_ok = s == 0 || !(bytes[s - 1] == b'_' || bytes[s - 1].is_ascii_alphanumeric());
+        if pre_ok {
+            let name: String = code[s + 3..]
+                .trim_start()
+                .chars()
+                .take_while(|c| is_ident_char(*c))
+                .collect();
+            if !name.is_empty() {
+                return Some(name);
+            }
+        }
+        at = s + 3;
+    }
+    None
+}
+
+/// R6 pass 1: names of `#[target_feature]` functions in one file. The
+/// attribute may sit a few lines above the `fn` header (doc/`SAFETY:`
+/// comments and further attributes in between).
+fn target_feature_fns(lines: &[Line], mask: &[bool]) -> Vec<String> {
+    let mut names = Vec::new();
+    for (idx, line) in lines.iter().enumerate() {
+        if mask[idx] || !line.code.contains("#[target_feature") {
+            continue;
+        }
+        for l in lines.iter().skip(idx).take(8) {
+            if let Some(n) = fn_name(&l.code) {
+                names.push(n);
+                break;
+            }
+        }
+    }
+    names
+}
+
+/// R6 pass 2 helper: a call-position occurrence of `name` — word-bounded,
+/// directly followed by `(`, and not the `fn name(` definition itself.
+fn has_direct_call(code: &str, name: &str) -> bool {
+    let pat = format!("{name}(");
+    let bytes = code.as_bytes();
+    let mut at = 0usize;
+    while let Some(p) = code[at..].find(&pat) {
+        let s = at + p;
+        let pre_ok = s == 0 || !(bytes[s - 1] == b'_' || bytes[s - 1].is_ascii_alphanumeric());
+        let is_def = code[..s].trim_end().ends_with("fn");
+        if pre_ok && !is_def {
+            return true;
+        }
+        at = s + pat.len();
+    }
+    false
+}
+
 const DETERMINISM_TOKENS: [&str; 6] = [
     "HashMap",
     "HashSet",
@@ -694,10 +769,40 @@ const DETERMINISM_TOKENS: [&str; 6] = [
 ];
 
 /// Lint one file's source. `file` is the display path used both for
-/// diagnostics and for rule classification.
+/// diagnostics and for rule classification. R6's cross-file call check
+/// only sees `#[target_feature]` functions defined in this one file; use
+/// [`lint_files`] to check a whole tree.
 pub fn lint_source(file: &str, src: &str) -> Vec<Finding> {
-    let lines = strip_source(src);
-    let mask = test_mask(&lines);
+    lint_files(&[(file.to_string(), src.to_string())])
+}
+
+/// Lint a set of `(display path, source)` files as one unit. This is the
+/// full-fidelity entry point: R6 collects `#[target_feature]` function
+/// names across *all* files first, then flags out-of-module definitions
+/// and direct calls anywhere outside `math/simd/`.
+pub fn lint_files(files: &[(String, String)]) -> Vec<Finding> {
+    let prepped: Vec<(&str, Vec<Line>, Vec<bool>)> = files
+        .iter()
+        .map(|(f, src)| {
+            let lines = strip_source(src);
+            let mask = test_mask(&lines);
+            (f.as_str(), lines, mask)
+        })
+        .collect();
+    let mut tf_names: Vec<String> = prepped
+        .iter()
+        .flat_map(|(_, lines, mask)| target_feature_fns(lines, mask))
+        .collect();
+    tf_names.sort();
+    tf_names.dedup();
+    let mut out = Vec::new();
+    for (file, lines, mask) in &prepped {
+        out.extend(lint_one(file, lines, mask, &tf_names));
+    }
+    out
+}
+
+fn lint_one(file: &str, lines: &[Line], mask: &[bool], tf_names: &[String]) -> Vec<Finding> {
     let class = classify(file);
     let mut raw: Vec<Finding> = Vec::new();
 
@@ -758,6 +863,31 @@ pub fn lint_source(file: &str, src: &str) -> Vec<Finding> {
                     .to_string(),
             });
         }
+        if !class.simd_home {
+            if code.contains("#[target_feature") {
+                raw.push(Finding {
+                    file: file.to_string(),
+                    line: ln,
+                    rule: Rule::SimdDispatch,
+                    msg: "#[target_feature] function defined outside math/simd/ — arch \
+                          kernels live in the dispatch module only"
+                        .to_string(),
+                });
+            }
+            for name in tf_names {
+                if has_direct_call(code, name) {
+                    raw.push(Finding {
+                        file: file.to_string(),
+                        line: ln,
+                        rule: Rule::SimdDispatch,
+                        msg: format!(
+                            "direct call to #[target_feature] kernel `{name}` — go through \
+                             the dispatched math::simd::KernelSet table"
+                        ),
+                    });
+                }
+            }
+        }
     }
 
     if class.pagestore {
@@ -794,19 +924,20 @@ pub fn collect_rs_files(root: &Path, out: &mut Vec<PathBuf>) -> std::io::Result<
     Ok(())
 }
 
-/// Lint every `.rs` file under the given paths (files or directories).
+/// Lint every `.rs` file under the given paths (files or directories) as
+/// one unit, so R6's cross-file call check sees the whole tree.
 pub fn lint_paths(paths: &[PathBuf]) -> std::io::Result<Vec<Finding>> {
     let mut files = Vec::new();
     for p in paths {
         collect_rs_files(p, &mut files)?;
     }
-    let mut out = Vec::new();
+    let mut sources = Vec::new();
     for f in &files {
         let src = std::fs::read_to_string(f)?;
         let display = f.to_string_lossy().replace('\\', "/");
-        out.extend(lint_source(&display, &src));
+        sources.push((display, src));
     }
-    Ok(out)
+    Ok(lint_files(&sources))
 }
 
 #[cfg(test)]
@@ -862,6 +993,47 @@ mod tests {
         assert!(classify("rust/src/math/chunked.rs").determinism);
         assert!(!classify("rust/src/runtime/pool.rs").data_plane);
         assert!(!classify("rust/src/data.rs").data_plane);
+        assert!(classify("rust/src/math/simd/avx2.rs").simd_home);
+        assert!(classify("rust/src/math/simd/mod.rs").simd_home);
+        assert!(!classify("rust/src/math/dense.rs").simd_home);
+    }
+
+    #[test]
+    fn r6_direct_call_outside_simd_home_flagged_cross_file() {
+        let def = "#[target_feature(enable = \"avx2\")]\n\
+                   // SAFETY: fixture\n\
+                   unsafe fn dot_impl(x: &[f32]) -> f32 { x[0] }\n";
+        let caller = "fn f(x: &[f32]) -> f32 {\n    \
+                      // SAFETY: fixture\n    \
+                      unsafe { dot_impl(x) }\n}\n";
+        let files = vec![
+            ("src/math/simd/avx2.rs".to_string(), def.to_string()),
+            ("src/solvers/hot.rs".to_string(), caller.to_string()),
+        ];
+        let got: Vec<(String, usize, &'static str)> = lint_files(&files)
+            .into_iter()
+            .map(|f| (f.file, f.line, f.rule.name()))
+            .collect();
+        assert_eq!(got, vec![("src/solvers/hot.rs".to_string(), 3, "simd-dispatch")]);
+    }
+
+    #[test]
+    fn r6_definition_outside_simd_home_flagged() {
+        let src = "#[target_feature(enable = \"avx2\")]\n\
+                   // SAFETY: fixture\n\
+                   unsafe fn stray_impl(x: &[f32]) -> f32 { x[0] }\n";
+        let f = lint_source("src/backend/fast.rs", src);
+        assert_eq!(rules_of(&f), vec![(1, "simd-dispatch")]);
+    }
+
+    #[test]
+    fn r6_allow_suppresses_one_finding() {
+        let src = "// samplex-lint: allow(simd-dispatch) -- fixture justification\n\
+                   #[target_feature(enable = \"avx2\")]\n\
+                   // SAFETY: fixture\n\
+                   unsafe fn stray_impl(x: &[f32]) -> f32 { x[0] }\n";
+        let f = lint_source("src/backend/fast.rs", src);
+        assert!(f.is_empty(), "{f:?}");
     }
 
     #[test]

@@ -12,7 +12,8 @@ fn main() -> ExitCode {
     if args.is_empty() || args.iter().any(|a| a == "-h" || a == "--help") {
         eprintln!("usage: samplex-lint <file-or-dir>...");
         eprintln!(
-            "rules: no-panic-plane lock-discipline determinism atomics-audit safety-comments"
+            "rules: no-panic-plane lock-discipline determinism atomics-audit safety-comments \
+             simd-dispatch"
         );
         eprintln!("suppress with: // samplex-lint: allow(<rule>) -- <reason>");
         return ExitCode::from(2);

@@ -1,0 +1,10 @@
+#[target_feature(enable = "avx2")]
+// SAFETY: fixture
+unsafe fn stray_impl(x: &[f32]) -> f32 {
+    x[0]
+}
+
+pub fn hot_loop(x: &[f32], w: &[f32]) -> f32 {
+    // SAFETY: fixture
+    unsafe { dot_avx2_impl(x, w) + stray_impl(x) }
+}

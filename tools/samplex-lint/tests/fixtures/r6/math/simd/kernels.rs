@@ -1,0 +1,20 @@
+pub struct KernelSet {
+    pub dot: fn(&[f32], &[f32]) -> f32,
+}
+
+#[target_feature(enable = "avx2")]
+// SAFETY: reached only after the dispatcher's runtime avx2 check
+unsafe fn dot_avx2_impl(x: &[f32], w: &[f32]) -> f32 {
+    let mut s = 0.0;
+    for k in 0..x.len().min(w.len()) {
+        s += x[k] * w[k];
+    }
+    s
+}
+
+fn dot_avx2(x: &[f32], w: &[f32]) -> f32 {
+    // SAFETY: table entries are installed only when avx2 was detected
+    unsafe { dot_avx2_impl(x, w) }
+}
+
+pub static AVX2: KernelSet = KernelSet { dot: dot_avx2 };

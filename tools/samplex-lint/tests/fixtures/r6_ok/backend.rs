@@ -1,0 +1,5 @@
+use crate::math::simd::KernelSet;
+
+pub fn hot_loop(ks: &KernelSet, x: &[f32], w: &[f32]) -> f32 {
+    (ks.dot)(x, w)
+}

@@ -1,5 +1,5 @@
 //! Fixture-backed tests: one violating + one conforming fixture per
-//! rule (R1-R5), exact `line rule` diagnostics, allow suppression, and
+//! rule (R1-R6), exact `line rule` diagnostics, allow suppression, and
 //! the binary's exit-code contract.
 
 use std::path::{Path, PathBuf};
@@ -107,6 +107,31 @@ fn r5_violating_exact_diagnostics() {
 #[test]
 fn r5_conforming_is_clean() {
     assert!(lint_fixture("r5_ok/ptr.rs").is_empty());
+}
+
+#[test]
+fn r6_violating_exact_diagnostics_cross_file() {
+    // the whole r6 tree is linted as one unit: `dot_avx2_impl` is defined
+    // (legitimately) in math/simd/kernels.rs, and backend.rs both defines
+    // a stray #[target_feature] kernel and calls two kernels directly
+    let findings = samplex_lint::lint_paths(&[fixture_path("r6")]).unwrap();
+    let got: Vec<(usize, &'static str)> =
+        findings.iter().map(|f| (f.line, f.rule.name())).collect();
+    assert!(
+        findings.iter().all(|f| f.file.ends_with("backend.rs")),
+        "math/simd/ definitions must stay clean: {findings:?}"
+    );
+    assert_eq!(
+        got,
+        vec![(1, "simd-dispatch"), (9, "simd-dispatch"), (9, "simd-dispatch")]
+    );
+}
+
+#[test]
+fn r6_conforming_is_clean() {
+    // same kernels, but the caller goes through the KernelSet table
+    let findings = samplex_lint::lint_paths(&[fixture_path("r6_ok")]).unwrap();
+    assert!(findings.is_empty(), "{findings:?}");
 }
 
 #[test]
