@@ -11,7 +11,11 @@
 //!   faults, read syscalls, achieved MB/s and read amplification. The
 //!   paper's contiguous-vs-dispersed gap, measured on real file I/O —
 //!   CS/SS must show strictly fewer faults and higher MB/s than RS at
-//!   every budget below 100%.
+//!   every budget below 100%. Plus a checksum-overhead arm: the same
+//!   demand-paged sweep over the footer-carrying file (every faulted
+//!   run CRC32-verified) vs a footer-stripped copy (verification off),
+//!   asserting the always-on checksum+retry plumbing costs ≤2% wall
+//!   MB/s (≤10% on the small CI profile, where wall times are tiny).
 //!
 //! Both are recorded baselines for future PRs, and printed as tables.
 //!
@@ -247,7 +251,8 @@ fn main() -> samplex::Result<()> {
 /// demand paging and asynchronous readahead (a dedicated thread prefaults
 /// the deterministic schedule ahead of assembly). Writes `BENCH_io.json`
 /// and asserts the readahead arms report strictly fewer demand faults than
-/// their demand-paged twins.
+/// their demand-paged twins, and that per-page checksum verification +
+/// retry plumbing cost ≤2% wall MB/s against a verification-off copy.
 fn io_snapshot(dense: &Dataset) -> samplex::Result<()> {
     let dir = std::env::temp_dir().join(format!("samplex_bench_io_{}", std::process::id()));
     std::fs::create_dir_all(&dir)?;
@@ -302,7 +307,7 @@ fn io_snapshot(dense: &Dataset) -> samplex::Result<()> {
                     }
                     for (j, sel) in sels.iter().enumerate() {
                         if let Some((ra, seq)) = ra.as_mut() {
-                            ra.wait_ready(*seq);
+                            ra.wait_ready(*seq)?;
                             *seq += 1;
                         }
                         std::hint::black_box(asm.assemble(&paged, sel).unwrap().rows());
@@ -379,12 +384,61 @@ fn io_snapshot(dense: &Dataset) -> samplex::Result<()> {
             }
         }
     }
+    // Checksum/retry plumbing overhead: the same sequential demand-paged
+    // sweep over the footer-carrying file (every faulted run CRC-verified
+    // before decode) and over a footer-stripped copy of the identical
+    // payload (no footer ⇒ verification off), best wall-clock MB/s of 3
+    // cold reps each. The verification is always on for real files, so
+    // its cost must stay in the noise: ≤2% on the full profile, ≤10% on
+    // the small CI profile where the sweeps are too short to time tightly.
+    let small = std::env::var("SAMPLEX_BENCH_SMALL").is_ok_and(|v| v == "1");
+    let plain_path = dir.join("bench_io_nofooter.sxb");
+    {
+        let full = std::fs::read(&path)?;
+        std::fs::write(&plain_path, &full[..file_bytes as usize])?;
+    }
+    let overhead_budget = file_bytes / 10;
+    let mut arm_mb = [0f64; 2];
+    for (arm, arm_path) in [(0usize, &path), (1, &plain_path)] {
+        let mut best = 0f64;
+        for _rep in 0..3 {
+            let paged: Dataset = PagedDataset::open(arm_path, overhead_budget, page_bytes)?.into();
+            let sampler: Box<dyn Sampler> = SamplingKind::Cs.build(rows, batch, 7, None)?;
+            let mut asm = BatchAssembler::new();
+            let sw = std::time::Instant::now();
+            for e in 0..epochs {
+                for sel in &sampler.schedule(e) {
+                    std::hint::black_box(asm.assemble(&paged, sel).unwrap().rows());
+                }
+            }
+            let wall = sw.elapsed().as_secs_f64().max(1e-9);
+            let io = paged.io_stats();
+            best = best.max(io.bytes_read as f64 / 1e6 / wall);
+        }
+        arm_mb[arm] = best;
+    }
+    let (verified_mb, off_mb) = (arm_mb[0], arm_mb[1]);
+    let ratio = verified_mb / off_mb.max(1e-12);
+    let floor = if small { 0.90 } else { 0.98 };
+    println!(
+        "checksum overhead: verified {verified_mb:.1} MB/s vs off {off_mb:.1} MB/s (ratio {ratio:.3}, floor {floor:.2})"
+    );
+    assert!(
+        ratio >= floor,
+        "checksum+retry plumbing overhead too high: verified {verified_mb:.1} MB/s \
+         vs verification-off {off_mb:.1} MB/s (ratio {ratio:.3} < {floor:.2})"
+    );
+
     let json = format!(
-        "{{\n  \"bench\": \"paged_io\",\n  \"file_bytes\": {},\n  \"page_bytes\": {},\n  \"rows\": {},\n  \"batch\": {},\n  \"arms\": [\n{}\n  ]\n}}\n",
+        "{{\n  \"bench\": \"paged_io\",\n  \"file_bytes\": {},\n  \"page_bytes\": {},\n  \"rows\": {},\n  \"batch\": {},\n  \"checksum_overhead\": {{\n    \"verified_mb_per_s\": {:.2},\n    \"off_mb_per_s\": {:.2},\n    \"ratio\": {:.4},\n    \"floor\": {:.2}\n  }},\n  \"arms\": [\n{}\n  ]\n}}\n",
         file_bytes,
         page_bytes,
         rows,
         batch,
+        verified_mb,
+        off_mb,
+        ratio,
+        floor,
         entries.join(",\n")
     );
     std::fs::write("BENCH_io.json", &json)?;

@@ -109,6 +109,19 @@ pub struct StorageConfig {
     /// Trajectories are bit-identical at every setting — this only moves
     /// disk time off the solver's critical path.
     pub readahead_pages: u64,
+    /// Bounded retry attempts for each paged-store read (clamped to ≥ 1
+    /// when materialized). Retries are transparent: a read that succeeds
+    /// on any attempt yields exactly the bytes a first-attempt success
+    /// would have.
+    pub retry_attempts: u32,
+    /// Base backoff between read retries, in microseconds. Backoff grows
+    /// exponentially per attempt from this base (deterministic — no
+    /// jitter), capped by the policy's max.
+    pub retry_backoff_us: u64,
+    /// Per-operation I/O watchdog deadline in milliseconds (0 = no
+    /// deadline). A read or readahead wait that exceeds it surfaces as a
+    /// typed `Error::IoTimeout` instead of blocking forever.
+    pub io_timeout_ms: u64,
 }
 
 impl Default for StorageConfig {
@@ -130,6 +143,9 @@ impl Default for StorageConfig {
             memory_budget_mib: 0,
             page_kib: 64,
             readahead_pages: 0,
+            retry_attempts: 4,
+            retry_backoff_us: 50,
+            io_timeout_ms: 30_000,
         }
     }
 }
@@ -161,6 +177,26 @@ impl StorageConfig {
     /// Paged store page size in bytes.
     pub fn page_bytes(&self) -> u64 {
         self.page_kib * 1024
+    }
+
+    /// Materialize the retry policy for paged-store reads.
+    pub fn retry_policy(&self) -> crate::storage::retry::RetryPolicy {
+        let d = crate::storage::retry::RetryPolicy::default();
+        crate::storage::retry::RetryPolicy {
+            max_attempts: self.retry_attempts.max(1),
+            base_backoff_us: self.retry_backoff_us,
+            max_backoff_us: d.max_backoff_us.max(self.retry_backoff_us),
+            op_timeout_ms: self.io_timeout_ms,
+        }
+    }
+
+    /// Paged-store options implied by these settings (fault injection, if
+    /// any, still comes from `SAMPLEX_FAULTS` via `StoreOptions::from_env`).
+    pub fn store_options(&self) -> Result<crate::storage::pagestore::StoreOptions> {
+        let mut opts = crate::storage::pagestore::StoreOptions::from_env()?;
+        opts.retry = self.retry_policy();
+        opts.io_timeout_ms = Some(self.io_timeout_ms);
+        Ok(opts)
     }
 }
 
@@ -207,6 +243,15 @@ pub struct ExperimentConfig {
     /// Pooled reductions are bit-identical for every setting — pin to 1
     /// when reproducing paper figures on a timing-sensitive machine.
     pub pool_threads: usize,
+    /// Directory for epoch-boundary checkpoints (None = checkpointing
+    /// off). Each epoch's solver state + trace is written atomically
+    /// (temp file + rename, trailing checksum), so a kill at any instant
+    /// leaves a loadable checkpoint.
+    pub checkpoint_dir: Option<String>,
+    /// Resume from the checkpoint in `checkpoint_dir` if one exists.
+    /// Schedules are pure functions of (seed, epoch), so the resumed
+    /// trajectory is bit-identical to an uninterrupted run.
+    pub resume: bool,
 }
 
 impl Default for ExperimentConfig {
@@ -229,6 +274,8 @@ impl Default for ExperimentConfig {
             prefetch_depth: 0,
             pre_shuffle: false,
             pool_threads: 0,
+            checkpoint_dir: None,
+            resume: false,
         }
     }
 }
@@ -310,6 +357,12 @@ impl ExperimentConfig {
         if let Some(v) = doc.get_usize("", "pool_threads")? {
             cfg.pool_threads = v;
         }
+        if let Some(v) = doc.get_str("", "checkpoint_dir")? {
+            cfg.checkpoint_dir = Some(v);
+        }
+        if let Some(v) = doc.get_bool("", "resume")? {
+            cfg.resume = v;
+        }
         if let Some(v) = doc.get_str("storage", "profile")? {
             cfg.storage.profile = v;
         }
@@ -330,6 +383,15 @@ impl ExperimentConfig {
         }
         if let Some(v) = doc.get_usize("storage", "readahead")? {
             cfg.storage.readahead_pages = v as u64;
+        }
+        if let Some(v) = doc.get_usize("storage", "retry_attempts")? {
+            cfg.storage.retry_attempts = v as u32;
+        }
+        if let Some(v) = doc.get_usize("storage", "retry_backoff_us")? {
+            cfg.storage.retry_backoff_us = v as u64;
+        }
+        if let Some(v) = doc.get_usize("storage", "io_timeout_ms")? {
+            cfg.storage.io_timeout_ms = v as u64;
         }
         cfg.validate()?;
         Ok(cfg)
@@ -359,6 +421,10 @@ impl ExperimentConfig {
         s.push_str(&format!("prefetch_depth = {}\n", self.prefetch_depth));
         s.push_str(&format!("pre_shuffle = {}\n", self.pre_shuffle));
         s.push_str(&format!("pool_threads = {}\n", self.pool_threads));
+        if let Some(d) = &self.checkpoint_dir {
+            s.push_str(&format!("checkpoint_dir = \"{d}\"\n"));
+        }
+        s.push_str(&format!("resume = {}\n", self.resume));
         s.push_str("\n[storage]\n");
         s.push_str(&format!("profile = \"{}\"\n", self.storage.profile));
         s.push_str(&format!("cache_mib = {}\n", self.storage.cache_mib));
@@ -369,6 +435,9 @@ impl ExperimentConfig {
         s.push_str(&format!("memory_budget_mib = {}\n", self.storage.memory_budget_mib));
         s.push_str(&format!("page_kib = {}\n", self.storage.page_kib));
         s.push_str(&format!("readahead = {}\n", self.storage.readahead_pages));
+        s.push_str(&format!("retry_attempts = {}\n", self.storage.retry_attempts));
+        s.push_str(&format!("retry_backoff_us = {}\n", self.storage.retry_backoff_us));
+        s.push_str(&format!("io_timeout_ms = {}\n", self.storage.io_timeout_ms));
         s
     }
 
@@ -583,5 +652,34 @@ cache_mib = 16
         let mut bad = ExperimentConfig::default();
         bad.storage.page_kib = 0;
         assert!(bad.validate().is_err());
+    }
+
+    #[test]
+    fn recovery_knobs_roundtrip_and_materialize() {
+        let mut cfg = ExperimentConfig::default();
+        cfg.checkpoint_dir = Some("ckpts".into());
+        cfg.resume = true;
+        cfg.storage.retry_attempts = 7;
+        cfg.storage.retry_backoff_us = 120;
+        cfg.storage.io_timeout_ms = 2_500;
+        let s = cfg.to_toml_string();
+        let back = ExperimentConfig::from_toml_str(&s).unwrap();
+        assert_eq!(back.checkpoint_dir.as_deref(), Some("ckpts"));
+        assert!(back.resume);
+        assert_eq!(back.storage.retry_attempts, 7);
+        assert_eq!(back.storage.retry_backoff_us, 120);
+        assert_eq!(back.storage.io_timeout_ms, 2_500);
+        let p = back.storage.retry_policy();
+        assert_eq!(p.max_attempts, 7);
+        assert_eq!(p.base_backoff_us, 120);
+        assert_eq!(p.op_timeout_ms, 2_500);
+        // attempts clamp to >= 1 so a zero config can never mean "no reads"
+        let mut z = StorageConfig::default();
+        z.retry_attempts = 0;
+        assert_eq!(z.retry_policy().max_attempts, 1);
+        // defaults omit checkpointing entirely
+        let d = ExperimentConfig::default();
+        assert!(d.checkpoint_dir.is_none() && !d.resume);
+        assert!(!d.to_toml_string().contains("checkpoint_dir"));
     }
 }

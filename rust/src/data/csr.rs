@@ -37,6 +37,7 @@ use crate::aligned::AlignedVec;
 use crate::data::batch::CsrView;
 use crate::data::dense::DenseDataset;
 use crate::error::{Error, Result};
+use crate::storage::checksum::{self, ChecksumTable, ChunkHasher};
 
 const MAGIC: &[u8; 4] = b"SXC1";
 const VERSION: u32 = 1;
@@ -194,7 +195,9 @@ impl CsrDataset {
         HEADER_BYTES + 4 * self.rows() as u64 + 8 * (self.rows() as u64 + 1)
     }
 
-    /// Total size of the `.sxc` encoding in bytes.
+    /// Total size of the `.sxc` payload encoding in bytes (the optional
+    /// checksum footer [`save`](Self::save) appends is *not* included —
+    /// extents and budgets address the payload).
     pub fn file_bytes(&self) -> u64 {
         self.x_base() + NNZ_BYTES * self.nnz() as u64
     }
@@ -282,7 +285,9 @@ impl CsrDataset {
     // .sxc serialization
     // ---------------------------------------------------------------------
 
-    /// Write the `.sxc` binary encoding.
+    /// Write the `.sxc` binary encoding, followed by the `"SXK1"` per-chunk
+    /// CRC32 footer over the packed pair payload (streamed while writing —
+    /// no second pass over the data).
     pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
         let f = std::fs::File::create(path)?;
         let mut w = BufWriter::new(f);
@@ -297,10 +302,16 @@ impl CsrDataset {
         for p in &self.row_ptr {
             w.write_all(&p.to_le_bytes())?;
         }
+        let mut hasher = ChunkHasher::new(checksum::DEFAULT_CHUNK_BYTES);
         for (v, i) in self.values.iter().zip(&self.col_idx) {
-            w.write_all(&i.to_le_bytes())?;
-            w.write_all(&v.to_le_bytes())?;
+            let ib = i.to_le_bytes();
+            let vb = v.to_le_bytes();
+            w.write_all(&ib)?;
+            w.write_all(&vb)?;
+            hasher.update(&ib);
+            hasher.update(&vb);
         }
+        w.write_all(&hasher.finish().encode())?;
         w.flush()?;
         Ok(())
     }
@@ -349,24 +360,25 @@ impl CsrDataset {
         // validate the claimed geometry against the actual file length with
         // checked arithmetic BEFORE allocating anything — a corrupt header
         // must yield Err, never a capacity-overflow panic or OOM
-        let expected = (|| {
+        let payload_end = (|| {
             let labels = 4u64.checked_mul(rows64)?;
             let ptrs = 8u64.checked_mul(rows64.checked_add(1)?)?;
             let payload = NNZ_BYTES.checked_mul(nnz64)?;
             HEADER_BYTES.checked_add(labels)?.checked_add(ptrs)?.checked_add(payload)
-        })();
-        if expected != Some(file_len) {
-            return Err(corrupt(
-                file_len.min(expected.unwrap_or(u64::MAX)),
-                format!(
-                    ".sxc geometry mismatch (rows={rows64} nnz={nnz64} \
-                     expects {expected:?} bytes, file has {file_len})"
-                ),
-            ));
-        }
+        })()
+        .ok_or_else(|| {
+            corrupt(
+                file_len,
+                format!(".sxc geometry mismatch (rows={rows64} nnz={nnz64} overflow u64)"),
+            )
+        })?;
+        // the file may end at the payload (footer-less) or carry a "SXK1"
+        // checksum footer; anything else is corruption
+        let has_footer = checksum::footer_present(file_len, payload_end, &pstr)?;
         let rows = rows64 as usize;
         let cols = cols64 as usize;
         let nnz = nnz64 as usize;
+        let x_base = HEADER_BYTES + 4 * rows64 + 8 * (rows64 + 1);
         let mut y = Vec::with_capacity(rows);
         for _ in 0..rows {
             r.read_exact(&mut b4)?;
@@ -377,13 +389,35 @@ impl CsrDataset {
             r.read_exact(&mut b8)?;
             row_ptr.push(u64::from_le_bytes(b8));
         }
+        let mut raw = vec![0u8; nnz * NNZ_BYTES as usize];
+        r.read_exact(&mut raw)
+            .map_err(|e| corrupt(x_base, format!("truncated pair payload: {e}")))?;
+        if has_footer {
+            let mut tail = Vec::with_capacity((file_len - payload_end) as usize);
+            r.read_to_end(&mut tail)?;
+            let table = ChecksumTable::decode(&tail, &pstr, payload_end)?;
+            let want = ChecksumTable::chunks_for(raw.len() as u64, table.chunk_bytes);
+            if want != table.crcs.len() as u64 {
+                return Err(corrupt(
+                    payload_end + 8,
+                    format!(
+                        "checksum footer has {} chunks, pair payload needs {want}",
+                        table.crcs.len()
+                    ),
+                ));
+            }
+            if let Some(bad) = table.verify_region(0, &raw, raw.len() as u64) {
+                return Err(corrupt(
+                    x_base + bad,
+                    format!("payload chunk checksum mismatch at region offset {bad}"),
+                ));
+            }
+        }
         let mut values = Vec::with_capacity(nnz);
         let mut col_idx = Vec::with_capacity(nnz);
-        for _ in 0..nnz {
-            r.read_exact(&mut b4)?;
-            col_idx.push(u32::from_le_bytes(b4));
-            r.read_exact(&mut b4)?;
-            values.push(f32::from_le_bytes(b4));
+        for ch in raw.chunks_exact(NNZ_BYTES as usize) {
+            col_idx.push(u32::from_le_bytes([ch[0], ch[1], ch[2], ch[3]]));
+            values.push(f32::from_le_bytes([ch[4], ch[5], ch[6], ch[7]]));
         }
         CsrDataset::new(name, cols, values, col_idx, row_ptr, y)
     }
@@ -496,7 +530,15 @@ mod tests {
         assert_eq!(d2.arrays(), d.arrays());
         assert_eq!(d2.y(), d.y());
         assert_eq!(d2.cols(), 5);
-        assert_eq!(std::fs::metadata(&p).unwrap().len(), d.file_bytes());
+        // payload + the appended "SXK1" footer (40 pair bytes -> 1 chunk)
+        let footer = ChecksumTable::encoded_len(1);
+        assert_eq!(std::fs::metadata(&p).unwrap().len(), d.file_bytes() + footer);
+        // a footer-less payload (older writers, hand-built fixtures) still
+        // loads bit-identically
+        let full = std::fs::read(&p).unwrap();
+        std::fs::write(&p, &full[..d.file_bytes() as usize]).unwrap();
+        let d3 = CsrDataset::load(&p).unwrap();
+        assert_eq!(d3.arrays(), d.arrays());
         std::fs::remove_dir_all(&dir).ok();
     }
 
@@ -549,14 +591,31 @@ mod tests {
         let dir = std::env::temp_dir().join(format!("sxc_corrupt_{}", std::process::id()));
         std::fs::create_dir_all(&dir).unwrap();
         let p = dir.join("c.sxc");
-        toy().save(&p).unwrap();
+        let d = toy();
+        d.save(&p).unwrap();
         let valid = std::fs::read(&p).unwrap();
-        // truncated body: detected at the end of the shortened file
-        let truncated = &valid[..valid.len() - 5];
+        // truncated into the payload: detected at the end of the shortened
+        // file (the tail can't be a checksum footer)
+        let truncated = &valid[..d.file_bytes() as usize - 5];
         std::fs::write(&p, truncated).unwrap();
         match CsrDataset::load(&p) {
             Err(Error::Corrupt { offset, .. }) => assert_eq!(offset, truncated.len() as u64),
             other => panic!("expected Corrupt, got {other:?}"),
+        }
+        // a torn footer (partial tail) is also typed corruption
+        std::fs::write(&p, &valid[..valid.len() - 1]).unwrap();
+        assert!(matches!(CsrDataset::load(&p), Err(Error::Corrupt { .. })));
+        // a bit flip inside the pair payload: only the footer can catch it
+        let mut flipped = valid.clone();
+        let x_base = (HEADER_BYTES + 4 * 3 + 8 * 4) as usize;
+        flipped[x_base + 9] ^= 0x04;
+        std::fs::write(&p, &flipped).unwrap();
+        match CsrDataset::load(&p) {
+            Err(Error::Corrupt { offset, msg, .. }) => {
+                assert_eq!(offset, x_base as u64);
+                assert!(msg.contains("checksum"), "{msg}");
+            }
+            other => panic!("expected checksum Corrupt, got {other:?}"),
         }
         // flipped magic byte: detected at offset 0
         let mut bad = valid.clone();

@@ -16,12 +16,20 @@
 //! [`DenseDataset::row_extent`] exposes the byte extent of each row of X for
 //! the storage block-map, so the access-time simulator costs *exactly* the
 //! bytes a given sampling technique touches.
+//!
+//! Since the fault-tolerance revision, [`DenseDataset::save`] appends an
+//! optional `"SXK1"` per-chunk CRC32 footer over the feature region (see
+//! [`crate::storage::checksum`]): the in-core loader verifies the region
+//! against it, and the out-of-core page store verifies every faulted page
+//! run before decoding. Footer-less files (hand-written fixtures, files
+//! from older writers) load unchanged.
 
 use std::io::{BufReader, BufWriter, Read, Write};
 use std::path::Path;
 
 use crate::aligned::AlignedVec;
 use crate::error::{Error, Result};
+use crate::storage::checksum::{self, ChecksumTable, ChunkHasher};
 
 const MAGIC: &[u8; 4] = b"SXB1";
 const VERSION: u32 = 1;
@@ -117,7 +125,10 @@ impl DenseDataset {
         (lo, lo + self.cols as u64 * 4)
     }
 
-    /// Total size of the `.sxb` encoding in bytes.
+    /// Total size of the `.sxb` payload encoding in bytes (header + labels
+    /// + features; the optional checksum footer [`save`](Self::save)
+    /// appends is *not* included — extents and budgets address the
+    /// payload).
     pub fn file_bytes(&self) -> u64 {
         HEADER_BYTES + 4 * self.rows as u64 + 4 * (self.rows * self.cols) as u64
     }
@@ -140,7 +151,9 @@ impl DenseDataset {
     // .sxb serialization
     // ---------------------------------------------------------------------
 
-    /// Write the `.sxb` binary encoding.
+    /// Write the `.sxb` binary encoding, followed by the `"SXK1"` per-chunk
+    /// CRC32 footer over the feature region (streamed while writing — no
+    /// second pass over the data).
     pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
         let f = std::fs::File::create(path)?;
         let mut w = BufWriter::new(f);
@@ -148,16 +161,20 @@ impl DenseDataset {
         w.write_all(&VERSION.to_le_bytes())?;
         w.write_all(&(self.rows as u64).to_le_bytes())?;
         w.write_all(&(self.cols as u64).to_le_bytes())?;
-        write_f32s(&mut w, &self.y)?;
-        write_f32s(&mut w, &self.x)?;
+        write_f32s(&mut w, &self.y, None)?;
+        let mut hasher = ChunkHasher::new(checksum::DEFAULT_CHUNK_BYTES);
+        write_f32s(&mut w, &self.x, Some(&mut hasher))?;
+        w.write_all(&hasher.finish().encode())?;
         w.flush()?;
         Ok(())
     }
 
     /// Load a `.sxb` file fully into memory. Corruption — bad magic or
     /// version, zero dims, a header whose geometry disagrees with the real
-    /// file length, truncation — yields a typed [`Error::Corrupt`] with the
-    /// byte offset where the inconsistency was detected.
+    /// file length, truncation, a feature chunk whose CRC32 disagrees with
+    /// the file's checksum footer — yields a typed [`Error::Corrupt`] with
+    /// the byte offset where the inconsistency was detected. Files without
+    /// a footer load without verification.
     pub fn load(path: impl AsRef<Path>) -> Result<Self> {
         let name = path
             .as_ref()
@@ -195,35 +212,71 @@ impl DenseDataset {
         // validate the claimed geometry against the real file length with
         // checked arithmetic BEFORE allocating — a lying header must fail
         // typed, never OOM
-        let expected = (|| {
+        let payload_end = (|| {
             let labels = 4u64.checked_mul(rows64)?;
             let feats = 4u64.checked_mul(rows64.checked_mul(cols64)?)?;
             HEADER_BYTES.checked_add(labels)?.checked_add(feats)
-        })();
-        if expected != Some(file_len) {
-            return Err(corrupt(
-                file_len.min(expected.unwrap_or(u64::MAX)),
-                format!(
-                    ".sxb length mismatch: header {rows64} x {cols64} expects \
-                     {expected:?} bytes, file has {file_len}"
-                ),
-            ));
-        }
+        })()
+        .ok_or_else(|| {
+            corrupt(
+                file_len,
+                format!(".sxb length mismatch: header {rows64} x {cols64} overflows u64"),
+            )
+        })?;
+        // the file may end at the payload (footer-less) or carry a "SXK1"
+        // checksum footer; anything else is corruption
+        let has_footer = checksum::footer_present(file_len, payload_end, &pstr)?;
         let rows = rows64 as usize;
         let cols = cols64 as usize;
+        let x_base = HEADER_BYTES + 4 * rows64;
         let y = read_f32s(&mut r, rows)?;
-        let x = read_f32s(&mut r, rows * cols)?;
+        let mut raw = vec![0u8; rows * cols * 4];
+        r.read_exact(&mut raw)
+            .map_err(|e| corrupt(x_base, format!("truncated feature block: {e}")))?;
+        if has_footer {
+            let mut tail = Vec::with_capacity((file_len - payload_end) as usize);
+            r.read_to_end(&mut tail)?;
+            let table = ChecksumTable::decode(&tail, &pstr, payload_end)?;
+            let want = ChecksumTable::chunks_for(raw.len() as u64, table.chunk_bytes);
+            if want != table.crcs.len() as u64 {
+                return Err(corrupt(
+                    payload_end + 8,
+                    format!(
+                        "checksum footer has {} chunks, feature region needs {want}",
+                        table.crcs.len()
+                    ),
+                ));
+            }
+            if let Some(bad) = table.verify_region(0, &raw, raw.len() as u64) {
+                return Err(corrupt(
+                    x_base + bad,
+                    format!("feature chunk checksum mismatch at region offset {bad}"),
+                ));
+            }
+        }
+        let x = f32s_from_raw(&raw);
         DenseDataset::new(name, cols, x, y)
     }
 }
 
-fn write_f32s<W: Write>(w: &mut W, xs: &[f32]) -> Result<()> {
+fn write_f32s<W: Write>(w: &mut W, xs: &[f32], mut hasher: Option<&mut ChunkHasher>) -> Result<()> {
     // bulk little-endian write; f32::to_le_bytes per element is the portable
-    // form and BufWriter coalesces it
+    // form and BufWriter coalesces it. When a hasher is supplied the same
+    // bytes feed the per-chunk CRC stream.
     for v in xs {
-        w.write_all(&v.to_le_bytes())?;
+        let b = v.to_le_bytes();
+        w.write_all(&b)?;
+        if let Some(h) = hasher.as_deref_mut() {
+            h.update(&b);
+        }
     }
     Ok(())
+}
+
+fn f32s_from_raw(raw: &[u8]) -> Vec<f32> {
+    raw.chunks_exact(4)
+        .map(|ch| f32::from_le_bytes([ch[0], ch[1], ch[2], ch[3]]))
+        .collect()
 }
 
 fn read_f32s<R: Read>(r: &mut R, count: usize) -> Result<Vec<f32>> {
@@ -290,7 +343,15 @@ mod tests {
         assert_eq!(d2.cols(), 2);
         assert_eq!(d2.x(), d.x());
         assert_eq!(d2.y(), d.y());
-        assert_eq!(std::fs::metadata(&p).unwrap().len(), d.file_bytes());
+        // payload + the appended "SXK1" footer (24 feature bytes -> 1 chunk)
+        let footer = ChecksumTable::encoded_len(1);
+        assert_eq!(std::fs::metadata(&p).unwrap().len(), d.file_bytes() + footer);
+        // a footer-less payload (older writers, hand-built fixtures) still
+        // loads bit-identically
+        let full = std::fs::read(&p).unwrap();
+        std::fs::write(&p, &full[..d.file_bytes() as usize]).unwrap();
+        let d3 = DenseDataset::load(&p).unwrap();
+        assert_eq!(d3.x(), d.x());
         std::fs::remove_dir_all(&dir).ok();
     }
 
@@ -312,10 +373,13 @@ mod tests {
         let dir = std::env::temp_dir().join(format!("sxb_corrupt_{}", std::process::id()));
         std::fs::create_dir_all(&dir).unwrap();
         let p = dir.join("c.sxb");
-        toy().save(&p).unwrap();
+        let d = toy();
+        d.save(&p).unwrap();
         let valid = std::fs::read(&p).unwrap();
-        // truncation: detected at the end of the shortened file
-        let truncated = &valid[..valid.len() - 3];
+        let payload_end = d.file_bytes() as usize;
+        // truncation into the payload: detected at the end of the shortened
+        // file (the tail can't be a checksum footer)
+        let truncated = &valid[..payload_end - 3];
         std::fs::write(&p, truncated).unwrap();
         match DenseDataset::load(&p) {
             Err(Error::Corrupt { offset, msg, .. }) => {
@@ -324,6 +388,9 @@ mod tests {
             }
             other => panic!("expected Corrupt, got {other:?}"),
         }
+        // a torn footer (partial tail) is also typed corruption
+        std::fs::write(&p, &valid[..valid.len() - 1]).unwrap();
+        assert!(matches!(DenseDataset::load(&p), Err(Error::Corrupt { .. })));
         // lying rows field: length check must fire without allocating
         let mut lying = valid.clone();
         lying[8..16].copy_from_slice(&u64::MAX.to_le_bytes());
@@ -332,6 +399,29 @@ mod tests {
         // restored file loads again
         std::fs::write(&p, &valid).unwrap();
         assert!(DenseDataset::load(&p).is_ok());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn load_verifies_feature_checksums() {
+        let dir = std::env::temp_dir().join(format!("sxb_crc_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("crc.sxb");
+        let d = toy();
+        d.save(&p).unwrap();
+        // flip one bit inside the feature region: the length still matches,
+        // only the footer can catch it
+        let mut bytes = std::fs::read(&p).unwrap();
+        let x_base = (HEADER_BYTES + 4 * 3) as usize;
+        bytes[x_base + 5] ^= 0x10;
+        std::fs::write(&p, &bytes).unwrap();
+        match DenseDataset::load(&p) {
+            Err(Error::Corrupt { offset, msg, .. }) => {
+                assert_eq!(offset, x_base as u64, "first bad chunk starts at the region base");
+                assert!(msg.contains("checksum"), "{msg}");
+            }
+            other => panic!("expected checksum Corrupt, got {other:?}"),
+        }
         std::fs::remove_dir_all(&dir).ok();
     }
 

@@ -32,7 +32,12 @@
 //! (including [`Error::Corrupt`] for bad bytes), threaded through batch
 //! assembly (`BatchAssembler`, `gather_owned`, the chunked sweeps, the
 //! prefetcher) so a disk that turns unreadable mid-training fails the run
-//! with a real error instead of aborting the process.
+//! with a real error instead of aborting the process. When the file
+//! carries a `"SXK1"` checksum footer ([`crate::storage::checksum`]),
+//! `open` decodes it and the store verifies every faulted page run
+//! against it before decoding — transient bad reads are retried, a
+//! persistently bad chunk surfaces as [`Error::Corrupt`]; see
+//! [`PagedDataset::open_with`] for the retry/watchdog knobs.
 
 use std::fs::File;
 use std::io::{Read, Seek, SeekFrom};
@@ -42,7 +47,10 @@ use std::sync::Arc;
 use crate::data::batch::{BatchView, CsrView, OwnedBatch, RowSelection};
 use crate::data::csr::NNZ_BYTES;
 use crate::error::{Error, Result};
-use crate::storage::pagestore::{ElemRuns, IoStats, Page, PageLayout, PageStore, Readahead};
+use crate::storage::checksum::{self, ChecksumTable};
+use crate::storage::pagestore::{
+    ElemRuns, IoStats, Page, PageLayout, PageStore, Readahead, StoreOptions,
+};
 
 /// Assembled out-of-core batch data: pinned zero-copy page or owned gather.
 #[derive(Debug, Clone)]
@@ -91,6 +99,20 @@ impl PagedDataset {
     /// pool to hold the whole feature region); `page_bytes` is the page
     /// size (must be a positive multiple of 8 so both layouts align).
     pub fn open(path: impl AsRef<Path>, budget_bytes: u64, page_bytes: u64) -> Result<Self> {
+        let opts = StoreOptions::from_env()?;
+        Self::open_with(path, budget_bytes, page_bytes, opts)
+    }
+
+    /// [`open`](Self::open) with explicit fault-tolerance options: the
+    /// retry policy, watchdog deadline and (for tests) an injected fault
+    /// schedule the page store should use. A `"SXK1"` checksum footer found
+    /// on the file takes precedence over `opts.checksums`.
+    pub fn open_with(
+        path: impl AsRef<Path>,
+        budget_bytes: u64,
+        page_bytes: u64,
+        opts: StoreOptions,
+    ) -> Result<Self> {
         let path = path.as_ref();
         let name = path
             .file_stem()
@@ -106,8 +128,8 @@ impl PagedDataset {
             msg: "file shorter than the 4-byte magic".into(),
         })?;
         match &magic {
-            b"SXB1" => Self::open_sxb(f, path, name, file_bytes, budget_bytes, page_bytes),
-            b"SXC1" => Self::open_sxc(f, path, name, file_bytes, budget_bytes, page_bytes),
+            b"SXB1" => Self::open_sxb(f, path, name, file_bytes, budget_bytes, page_bytes, opts),
+            b"SXC1" => Self::open_sxc(f, path, name, file_bytes, budget_bytes, page_bytes, opts),
             other => Err(Error::Corrupt {
                 path: pstr,
                 offset: 0,
@@ -116,6 +138,7 @@ impl PagedDataset {
         }
     }
 
+    #[allow(clippy::too_many_arguments)]
     fn open_sxb(
         mut f: File,
         path: &Path,
@@ -123,6 +146,7 @@ impl PagedDataset {
         file_bytes: u64,
         budget_bytes: u64,
         page_bytes: u64,
+        mut opts: StoreOptions,
     ) -> Result<Self> {
         let pstr = path.display().to_string();
         let corrupt = |offset: u64, msg: String| Error::Corrupt { path: pstr.clone(), offset, msg };
@@ -138,25 +162,28 @@ impl PagedDataset {
         if rows64 == 0 || cols64 == 0 {
             return Err(corrupt(8, format!("bad .sxb dims {rows64} x {cols64}")));
         }
-        let expected = (|| {
+        let payload_end = (|| {
             let labels = 4u64.checked_mul(rows64)?;
             let feats = 4u64.checked_mul(rows64.checked_mul(cols64)?)?;
             24u64.checked_add(labels)?.checked_add(feats)
-        })();
-        if expected != Some(file_bytes) {
-            return Err(corrupt(
-                file_bytes.min(expected.unwrap_or(u64::MAX)),
-                format!(
-                    ".sxb length mismatch: header {rows64} x {cols64} expects \
-                     {expected:?} bytes, file has {file_bytes}"
-                ),
-            ));
-        }
+        })()
+        .ok_or_else(|| {
+            corrupt(
+                file_bytes,
+                format!(".sxb length mismatch: header {rows64} x {cols64} overflows u64"),
+            )
+        })?;
+        let has_footer = checksum::footer_present(file_bytes, payload_end, &pstr)?;
         let rows = rows64 as usize;
         let cols = cols64 as usize;
         let y = read_label_block(&mut f, rows, &pstr, 24)?;
         let x_base = 24 + 4 * rows64;
         let n_elems = rows64 * cols64;
+        if let Some(table) =
+            read_checksum_footer(&mut f, &pstr, x_base, payload_end, file_bytes, has_footer)?
+        {
+            opts.checksums = Some(table);
+        }
         let store = new_store(
             path,
             PageLayout::DenseF32,
@@ -164,6 +191,7 @@ impl PagedDataset {
             n_elems,
             page_bytes,
             budget_bytes,
+            opts,
         )?;
         Ok(PagedDataset {
             name,
@@ -172,13 +200,14 @@ impl PagedDataset {
             y: Arc::new(y),
             row_ptr: None,
             x_base,
-            file_bytes,
+            file_bytes: payload_end,
             page_bytes,
             budget_bytes: effective_budget(budget_bytes, n_elems, PageLayout::DenseF32, page_bytes),
             store,
         })
     }
 
+    #[allow(clippy::too_many_arguments)]
     fn open_sxc(
         mut f: File,
         path: &Path,
@@ -186,6 +215,7 @@ impl PagedDataset {
         file_bytes: u64,
         budget_bytes: u64,
         page_bytes: u64,
+        mut opts: StoreOptions,
     ) -> Result<Self> {
         let pstr = path.display().to_string();
         let corrupt = |offset: u64, msg: String| Error::Corrupt { path: pstr.clone(), offset, msg };
@@ -202,21 +232,19 @@ impl PagedDataset {
         if rows64 == 0 || cols64 == 0 {
             return Err(corrupt(8, format!("bad .sxc dims {rows64} x {cols64}")));
         }
-        let expected = (|| {
+        let payload_end = (|| {
             let labels = 4u64.checked_mul(rows64)?;
             let ptrs = 8u64.checked_mul(rows64.checked_add(1)?)?;
             let payload = NNZ_BYTES.checked_mul(nnz64)?;
             32u64.checked_add(labels)?.checked_add(ptrs)?.checked_add(payload)
-        })();
-        if expected != Some(file_bytes) {
-            return Err(corrupt(
-                file_bytes.min(expected.unwrap_or(u64::MAX)),
-                format!(
-                    ".sxc length mismatch: header rows={rows64} nnz={nnz64} \
-                     expects {expected:?} bytes, file has {file_bytes}"
-                ),
-            ));
-        }
+        })()
+        .ok_or_else(|| {
+            corrupt(
+                file_bytes,
+                format!(".sxc length mismatch: header rows={rows64} nnz={nnz64} overflows u64"),
+            )
+        })?;
+        let has_footer = checksum::footer_present(file_bytes, payload_end, &pstr)?;
         let rows = rows64 as usize;
         let cols = cols64 as usize;
         let y = read_label_block(&mut f, rows, &pstr, 32)?;
@@ -245,6 +273,11 @@ impl PagedDataset {
             ));
         }
         let x_base = ptr_base + 8 * (rows64 + 1);
+        if let Some(table) =
+            read_checksum_footer(&mut f, &pstr, x_base, payload_end, file_bytes, has_footer)?
+        {
+            opts.checksums = Some(table);
+        }
         let store = new_store(
             path,
             PageLayout::IdxValPairs,
@@ -252,6 +285,7 @@ impl PagedDataset {
             nnz64,
             page_bytes,
             budget_bytes,
+            opts,
         )?;
         // payload corruption (col_idx past the feature dim) must fault
         // typed, matching CsrDataset::load's validation
@@ -263,7 +297,7 @@ impl PagedDataset {
             y: Arc::new(y),
             row_ptr: Some(Arc::new(row_ptr)),
             x_base,
-            file_bytes,
+            file_bytes: payload_end,
             page_bytes,
             budget_bytes: effective_budget(
                 budget_bytes,
@@ -319,7 +353,8 @@ impl PagedDataset {
         self.x_base
     }
 
-    /// Total size of the on-disk encoding.
+    /// Total size of the on-disk payload encoding (any trailing checksum
+    /// footer excluded — matches the in-core stores' `file_bytes`).
     pub fn file_bytes(&self) -> u64 {
         self.file_bytes
     }
@@ -591,6 +626,7 @@ fn effective_budget(budget_bytes: u64, n_elems: u64, layout: PageLayout, page_by
     }
 }
 
+#[allow(clippy::too_many_arguments)]
 fn new_store(
     path: &Path,
     layout: PageLayout,
@@ -598,6 +634,7 @@ fn new_store(
     n_elems: u64,
     page_bytes: u64,
     budget_bytes: u64,
+    opts: StoreOptions,
 ) -> Result<PageStore> {
     if page_bytes == 0 || page_bytes % 8 != 0 {
         return Err(Error::Config(format!(
@@ -605,7 +642,7 @@ fn new_store(
         )));
     }
     let file = File::open(path)?;
-    PageStore::new(
+    PageStore::with_options(
         file,
         path,
         layout,
@@ -613,7 +650,46 @@ fn new_store(
         n_elems,
         page_bytes,
         effective_budget(budget_bytes, n_elems, layout, page_bytes),
+        opts,
     )
+}
+
+/// Read and validate the optional `"SXK1"` checksum footer at
+/// `[payload_end, file_len)`; `Ok(None)` when the file has none. The
+/// decoded table must describe exactly the feature region
+/// `[x_base, payload_end)`.
+fn read_checksum_footer(
+    f: &mut File,
+    pstr: &str,
+    x_base: u64,
+    payload_end: u64,
+    file_len: u64,
+    present: bool,
+) -> Result<Option<ChecksumTable>> {
+    if !present {
+        return Ok(None);
+    }
+    f.seek(SeekFrom::Start(payload_end))?;
+    let mut tail = vec![0u8; (file_len - payload_end) as usize];
+    f.read_exact(&mut tail).map_err(|e| Error::Corrupt {
+        path: pstr.to_string(),
+        offset: payload_end,
+        msg: format!("truncated checksum footer: {e}"),
+    })?;
+    let table = ChecksumTable::decode(&tail, pstr, payload_end)?;
+    let region_len = payload_end - x_base;
+    let want = ChecksumTable::chunks_for(region_len, table.chunk_bytes);
+    if want != table.crcs.len() as u64 {
+        return Err(Error::Corrupt {
+            path: pstr.to_string(),
+            offset: payload_end + 8,
+            msg: format!(
+                "checksum footer has {} chunks, feature region needs {want}",
+                table.crcs.len()
+            ),
+        });
+    }
+    Ok(Some(table))
 }
 
 fn read_label_block(f: &mut File, rows: usize, path: &str, offset: u64) -> Result<Vec<f32>> {

@@ -330,6 +330,23 @@ pub fn resolve_paged(
     budget_bytes: u64,
     page_bytes: u64,
 ) -> Result<Dataset> {
+    let opts = crate::storage::pagestore::StoreOptions::from_env()?;
+    resolve_paged_with(name, data_dir, seed, budget_bytes, page_bytes, opts)
+}
+
+/// Like [`resolve_paged`] but with explicit [`StoreOptions`] — the CLI
+/// threads its configured retry policy and watchdog deadline through
+/// here; tests inject fault schedules without touching the environment.
+///
+/// [`StoreOptions`]: crate::storage::pagestore::StoreOptions
+pub fn resolve_paged_with(
+    name: &str,
+    data_dir: impl AsRef<Path>,
+    seed: u64,
+    budget_bytes: u64,
+    page_bytes: u64,
+    opts: crate::storage::pagestore::StoreOptions,
+) -> Result<Dataset> {
     let dir = data_dir.as_ref();
     let sxb = dir.join(format!("{name}.sxb"));
     let sxc = dir.join(format!("{name}.sxc"));
@@ -366,7 +383,7 @@ pub fn resolve_paged(
             sxc
         }
     };
-    Ok(Dataset::Paged(PagedDataset::open(&path, budget_bytes, page_bytes)?))
+    Ok(Dataset::Paged(PagedDataset::open_with(&path, budget_bytes, page_bytes, opts)?))
 }
 
 #[cfg(test)]

@@ -24,6 +24,11 @@ pub enum Error {
     /// prefix).
     Corrupt { path: String, offset: u64, msg: String },
 
+    /// A storage read exceeded its watchdog deadline: the operation was
+    /// retried until the per-op timeout elapsed (hung device, dead
+    /// readahead producer) and was surfaced instead of blocking forever.
+    IoTimeout { op: String, waited_s: f64 },
+
     /// Configuration validation failure.
     Config(String),
 
@@ -51,6 +56,9 @@ impl fmt::Display for Error {
             }
             Error::Corrupt { path, offset, msg } => {
                 write!(f, "corrupt file '{path}' at byte {offset}: {msg}")
+            }
+            Error::IoTimeout { op, waited_s } => {
+                write!(f, "i/o timeout after {waited_s:.3}s: {op}")
             }
             Error::Config(msg) => write!(f, "config error: {msg}"),
             Error::Artifact(msg) => write!(f, "artifact error: {msg}"),
@@ -103,6 +111,10 @@ mod tests {
         assert_eq!(
             Error::Corrupt { path: "x.sxb".into(), offset: 24, msg: "short".into() }.to_string(),
             "corrupt file 'x.sxb' at byte 24: short"
+        );
+        assert_eq!(
+            Error::IoTimeout { op: "page read".into(), waited_s: 1.5 }.to_string(),
+            "i/o timeout after 1.500s: page read"
         );
         assert_eq!(Error::Config("c".into()).to_string(), "config error: c");
         assert_eq!(Error::Artifact("a".into()).to_string(), "artifact error: a");

@@ -140,7 +140,10 @@
 //! * **simd-dispatch** — `#[target_feature]` kernels are defined in
 //!   `math/simd/` only and reached only through the dispatched
 //!   [`math::simd::KernelSet`] table, never called directly (calling one
-//!   on a CPU without the feature is UB; the table is probed once).
+//!   on a CPU without the feature is UB; the table is probed once);
+//! * **io-discipline** — raw `.read_exact(`/`.seek(` calls in `storage/`
+//!   live only in [`storage::retry`], so every byte off disk passes
+//!   through the bounded-retry + checksum recovery path.
 //!
 //! `INVARIANTS.md` at the repo root documents each rule, the escape hatch
 //! (a per-site `allow(rule) -- reason` annotation), and the Miri /
@@ -172,6 +175,7 @@ pub mod runtime;
 pub mod sampling;
 pub mod solvers;
 pub mod storage;
+pub mod testing;
 pub mod train;
 
 pub use error::{Error, Result};

@@ -16,8 +16,21 @@
 //!                      --readahead-pages N a dedicated thread prefaults
 //!                      the next N pages of the deterministic schedule so
 //!                      demand faults — and access stalls — go to ~zero)
+//!                 [--checkpoint DIR] [--resume]
+//!                     (crash consistency: save solver state atomically at
+//!                      every epoch boundary; --resume restarts from the
+//!                      last checkpoint and the finished trajectory is
+//!                      bit-identical to an uninterrupted run)
+//!                 [--retry-attempts N] [--io-timeout-ms MS]
+//!                     (storage fault tolerance: bounded deterministic
+//!                      retries for transient read errors, and the stall
+//!                      watchdog deadline; SAMPLEX_FAULTS=<spec> injects
+//!                      deterministic faults for testing — see README)
 //! samplex table   [--dataset D | --all] [--epochs N] [--backend B]
 //!                 [--storage P] [--data-dir data] [--summary] [--csv out.csv]
+//!                 [--resume]  (reopen --csv in append mode: keep every
+//!                              intact record, drop a torn tail, and only
+//!                              append arms past the last one on disk)
 //! samplex figure  [--datasets a,b] [--epochs N] [--solver S] [--rate-fit]
 //!                 [--backend B] [--storage P] [--data-dir data] [--csv-dir d]
 //! samplex estimate-optimum [--dataset D] [--iters N] [--data-dir data]
@@ -190,7 +203,7 @@ fn cmd_generate_data(args: &[String]) -> Result<()> {
 }
 
 fn cmd_train(args: &[String]) -> Result<()> {
-    let f = Flags::parse(args, &["pre-shuffle", "paged"])?;
+    let f = Flags::parse(args, &["pre-shuffle", "paged", "resume"])?;
     let mut cfg = match f.get("config") {
         Some(p) => ExperimentConfig::from_toml_file(p)?,
         None => ExperimentConfig::default(),
@@ -232,6 +245,15 @@ fn cmd_train(args: &[String]) -> Result<()> {
     cfg.storage.readahead_pages =
         f.get_u64("readahead-pages", cfg.storage.readahead_pages)?;
     cfg.pool_threads = f.get_usize("pool-threads", cfg.pool_threads)?;
+    if let Some(v) = f.get("checkpoint") {
+        cfg.checkpoint_dir = Some(v.to_string());
+    }
+    if f.has("resume") {
+        cfg.resume = true;
+    }
+    cfg.storage.retry_attempts =
+        f.get_u64("retry-attempts", u64::from(cfg.storage.retry_attempts))? as u32;
+    cfg.storage.io_timeout_ms = f.get_u64("io-timeout-ms", cfg.storage.io_timeout_ms)?;
     cfg.name = format!(
         "{}-{}-{}",
         cfg.dataset,
@@ -239,12 +261,13 @@ fn cmd_train(args: &[String]) -> Result<()> {
         cfg.sampling.label()
     );
     let ds = if cfg.storage.paged {
-        registry::resolve_paged(
+        registry::resolve_paged_with(
             &cfg.dataset,
             &cfg.data_dir,
             cfg.seed,
             cfg.storage.memory_budget_bytes(),
             cfg.storage.page_bytes(),
+            cfg.storage.store_options()?,
         )?
     } else {
         registry::resolve(&cfg.dataset, &cfg.data_dir, cfg.seed)?
@@ -282,6 +305,12 @@ fn cmd_train(args: &[String]) -> Result<()> {
             io.stall_s,
             cfg.storage.readahead_pages
         );
+        if io.retries > 0 || io.degraded > 0 {
+            println!(
+                "  recovery: {} read retries, {} degraded batches (readahead off)",
+                io.retries, io.degraded
+            );
+        }
     }
     if let Some(p) = f.get("trace-csv") {
         samplex::metrics::csv::write_trace(p, &report.name, &report.trace)?;
@@ -291,7 +320,7 @@ fn cmd_train(args: &[String]) -> Result<()> {
 }
 
 fn cmd_table(args: &[String]) -> Result<()> {
-    let f = Flags::parse(args, &["all", "summary"])?;
+    let f = Flags::parse(args, &["all", "summary", "resume"])?;
     let epochs = f.get_usize("epochs", 30)?;
     let backend = BackendKind::parse(&f.get_or("backend", "native"))?;
     let storage = f.get_or("storage", "hdd");
@@ -322,8 +351,25 @@ fn cmd_table(args: &[String]) -> Result<()> {
             let mut header =
                 vec!["solver", "sampling", "batch", "step", "time_s", "objective", "sim_access_s"];
             header.extend_from_slice(&samplex::metrics::csv::IO_HEADER);
-            let mut w = samplex::metrics::csv::CsvWriter::create(p, &header)?;
-            for r in &rows {
+            let (mut w, last) = if f.has("resume") {
+                samplex::metrics::csv::CsvWriter::append_or_create(p, &header)?
+            } else {
+                (samplex::metrics::csv::CsvWriter::create(p, &header)?, None)
+            };
+            // on resume, every intact record on disk keeps its place: only
+            // append the arms after the last one that survived the crash
+            let mut from = 0usize;
+            if let Some(rec) = last {
+                if let Some(i) = rows.iter().position(|r| {
+                    r.solver == rec[0]
+                        && r.sampling == rec[1]
+                        && r.batch.to_string() == rec[2]
+                        && r.step == rec[3]
+                }) {
+                    from = i + 1;
+                }
+            }
+            for r in rows.iter().skip(from) {
                 let mut fields = vec![
                     r.solver.clone(),
                     r.sampling.clone(),

@@ -26,13 +26,15 @@ use crate::storage::pagestore::IoStats;
 /// `io_readahead_hits` / `io_stall_s` split access time into what stalled
 /// the consumer vs what the readahead thread absorbed off the critical
 /// path.
-pub const IO_HEADER: [&str; 9] = [
+pub const IO_HEADER: [&str; 11] = [
     "io_bytes_read",
     "io_read_calls",
     "io_page_faults",
     "io_demand_faults",
     "io_page_hits",
     "io_readahead_hits",
+    "io_retries",
+    "io_degraded",
     "io_read_amp",
     "io_mb_per_s",
     "io_stall_s",
@@ -47,6 +49,8 @@ pub fn io_fields(io: &IoStats) -> Vec<String> {
         io.demand_faults.to_string(),
         io.page_hits.to_string(),
         io.readahead_hits.to_string(),
+        io.retries.to_string(),
+        io.degraded.to_string(),
         format!("{:.4}", io.read_amplification()),
         format!("{:.2}", io.mb_per_s()),
         format!("{:.6}", io.stall_s),
@@ -70,6 +74,73 @@ impl CsvWriter {
         writeln!(w, "{}", header.join(","))?;
         w.flush()?;
         Ok(CsvWriter { w, columns: header.len() })
+    }
+
+    /// Reopen an existing CSV for appending, or create it if missing.
+    ///
+    /// The resume path of an interrupted harness run: any `#` preamble
+    /// lines are kept, the header line must match `header` exactly
+    /// (`Error::Config` otherwise), and a torn tail — a final line with
+    /// no newline, or a complete line with the wrong field count, plus
+    /// anything after it — is truncated away before appending. Returns
+    /// the writer and the last intact record, so the caller can skip
+    /// work that is already on disk.
+    pub fn append_or_create(
+        path: impl AsRef<Path>,
+        header: &[&str],
+    ) -> Result<(Self, Option<Vec<String>>)> {
+        let path = path.as_ref();
+        let raw = match std::fs::read_to_string(path) {
+            Ok(s) => s,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => {
+                return Ok((Self::create(path, header)?, None));
+            }
+            Err(e) => return Err(e.into()),
+        };
+        let header_line = header.join(",");
+        let mut valid_len = 0usize;
+        let mut saw_header = false;
+        let mut last: Option<Vec<String>> = None;
+        let mut pos = 0usize;
+        for line in raw.split_inclusive('\n') {
+            let complete = line.ends_with('\n');
+            let text = line.trim_end_matches(['\n', '\r']);
+            pos += line.len();
+            if !complete {
+                break; // torn tail: the process died mid-write
+            }
+            if !saw_header {
+                if text.starts_with('#') || text.is_empty() {
+                    valid_len = pos;
+                    continue;
+                }
+                if text != header_line {
+                    return Err(Error::Config(format!(
+                        "cannot append to '{}': its header '{text}' does not match \
+                         '{header_line}'",
+                        path.display()
+                    )));
+                }
+                saw_header = true;
+                valid_len = pos;
+                continue;
+            }
+            let fields: Vec<String> = text.split(',').map(str::to_string).collect();
+            if fields.len() != header.len() {
+                break; // malformed record: drop it and everything after
+            }
+            last = Some(fields);
+            valid_len = pos;
+        }
+        if !saw_header {
+            // the kill landed before the header was complete: start over
+            return Ok((Self::create(path, header)?, None));
+        }
+        let f = std::fs::OpenOptions::new().write(true).open(path)?;
+        f.set_len(valid_len as u64)?;
+        drop(f);
+        let f = std::fs::OpenOptions::new().append(true).open(path)?;
+        Ok((CsvWriter { w: BufWriter::new(f), columns: header.len() }, last))
     }
 
     /// Append one record and flush it to disk before returning.
@@ -179,6 +250,8 @@ mod tests {
             demand_faults: 3,
             page_hits: 8,
             readahead_hits: 5,
+            retries: 2,
+            degraded: 1,
             bytes_requested: 2048,
             read_s: 0.001,
             stall_s: 0.0005,
@@ -188,7 +261,45 @@ mod tests {
         assert_eq!(fields[0], "4096");
         assert_eq!(fields[3], "3");
         assert_eq!(fields[5], "5");
-        assert_eq!(fields[6], "2.0000"); // 4096 / 2048
-        assert_eq!(fields[8], "0.000500");
+        assert_eq!(fields[6], "2"); // retries
+        assert_eq!(fields[7], "1"); // degraded
+        assert_eq!(fields[8], "2.0000"); // 4096 / 2048
+        assert_eq!(fields[10], "0.000500");
+    }
+
+    #[test]
+    fn append_or_create_drops_torn_tail_and_resumes() {
+        let p = std::env::temp_dir().join(format!("append_{}.csv", std::process::id()));
+        std::fs::remove_file(&p).ok();
+        // fresh path behaves like create
+        let (mut w, last) = CsvWriter::append_or_create(&p, &["a", "b"]).unwrap();
+        assert!(last.is_none());
+        w.record(&["1".into(), "x".into()]).unwrap();
+        drop(w);
+        // simulate a kill mid-record: trailing bytes with no newline
+        let mut raw = std::fs::read_to_string(&p).unwrap();
+        raw.push_str("2,y");
+        std::fs::write(&p, &raw).unwrap();
+        let (mut w, last) = CsvWriter::append_or_create(&p, &["a", "b"]).unwrap();
+        assert_eq!(last.unwrap(), vec!["1".to_string(), "x".to_string()]);
+        w.record(&["2".into(), "y".into()]).unwrap();
+        drop(w);
+        assert_eq!(std::fs::read_to_string(&p).unwrap(), "a,b\n1,x\n2,y\n");
+        // a complete line with the wrong arity is torn too
+        std::fs::write(&p, "a,b\n1,x\n2\n").unwrap();
+        let (w, last) = CsvWriter::append_or_create(&p, &["a", "b"]).unwrap();
+        drop(w);
+        assert_eq!(last.unwrap()[0], "1");
+        assert_eq!(std::fs::read_to_string(&p).unwrap(), "a,b\n1,x\n");
+        // '#' preamble lines survive the reopen
+        std::fs::write(&p, "# provenance\na,b\n1,x\n").unwrap();
+        let (w, last) = CsvWriter::append_or_create(&p, &["a", "b"]).unwrap();
+        drop(w);
+        assert!(std::fs::read_to_string(&p).unwrap().starts_with("# provenance\n"));
+        assert!(last.is_some());
+        // a different header is a typed refusal, not silent corruption
+        std::fs::write(&p, "c,d\n1,x\n").unwrap();
+        assert!(CsvWriter::append_or_create(&p, &["a", "b"]).is_err());
+        std::fs::remove_file(p).ok();
     }
 }

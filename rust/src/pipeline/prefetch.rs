@@ -367,7 +367,16 @@ fn reader_loop(
                         epoch_base = seq;
                     }
                 }
-                ra.wait_ready(epoch_base + j as u64);
+                if let Err(e) = ra.wait_ready(epoch_base + j as u64) {
+                    // stalled or dead readahead: consume the window for
+                    // this and every later published batch so accounting
+                    // stays aligned, then surface the typed error
+                    for pages in batch_pages.iter().skip(j) {
+                        ra.mark_consumed(*pages);
+                    }
+                    let _ = tx.send(BatchMsg::Failed(e));
+                    continue 'serve;
+                }
             }
             let t0 = std::time::Instant::now();
             let rows = sel.len();

@@ -7,8 +7,11 @@
 
 /// One round of the SplitMix64 output finalizer (Steele et al.): a strong
 /// 64-bit mixer with no weak inputs — in particular `splitmix64(0) != 0`.
+/// Also the mixer behind the fault-injection schedule
+/// (`testing::faults`) and the retry backoff jitter (`storage::retry`),
+/// which need a deterministic per-index hash rather than a stream.
 #[inline]
-fn splitmix64(z: u64) -> u64 {
+pub(crate) fn splitmix64(z: u64) -> u64 {
     let mut z = z.wrapping_add(0x9E37_79B9_7F4A_7C15);
     z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
     z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);

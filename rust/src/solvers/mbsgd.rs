@@ -27,7 +27,7 @@
 use crate::backend::{ComputeBackend, FusedStep};
 use crate::data::batch::BatchView;
 use crate::error::Result;
-use crate::solvers::{GradScratch, Solver};
+use crate::solvers::{copy_vec, expect_vecs, GradScratch, Solver};
 
 /// Smallest scale before `v` is re-materialized (guards f32 underflow).
 const MIN_SCALE: f32 = 1e-3;
@@ -131,6 +131,21 @@ impl Solver for Mbsgd {
         }
         be.grad_into(&self.w, batch, self.c, &mut self.scratch.g)?;
         crate::math::axpy(-lr, &self.scratch.g, &mut self.w);
+        Ok(())
+    }
+
+    // Folding the lazy scale here is safe for resume determinism: the
+    // driver checkpoints right after the objective record, which already
+    // synced the iterate at this exact boundary.
+    fn export_state(&mut self) -> Vec<Vec<f32>> {
+        self.materialize();
+        vec![self.w.to_vec()]
+    }
+
+    fn import_state(&mut self, state: &[Vec<f32>]) -> Result<()> {
+        expect_vecs("MBSGD", state, 1)?;
+        copy_vec("MBSGD w", &mut self.w, &state[0])?;
+        self.scale = 1.0;
         Ok(())
     }
 }

@@ -133,6 +133,44 @@ pub trait Solver: Send {
         j: usize,
         lr: f32,
     ) -> Result<()>;
+
+    /// Serialize the solver's resumable state as a list of f32 vectors,
+    /// the (synced) iterate first. Captured at an *epoch boundary* this is
+    /// complete: anything not exported (SVRG's snapshot and μ, SAAG-II's
+    /// accumulator) is rebuilt by [`Solver::epoch_start`] exactly as an
+    /// uninterrupted run would rebuild it at the same boundary.
+    /// Implementations fold lazily-scaled state first (`&mut self`).
+    fn export_state(&mut self) -> Vec<Vec<f32>>;
+
+    /// Restore state captured by [`Solver::export_state`] into a
+    /// freshly-built solver of the same geometry. `Error::Config` on a
+    /// shape mismatch (checkpoint from a different solver or problem).
+    fn import_state(&mut self, state: &[Vec<f32>]) -> Result<()>;
+}
+
+/// Shape check shared by the `import_state` impls: the checkpoint must
+/// hold exactly the vector count this solver exports.
+pub(crate) fn expect_vecs(name: &str, state: &[Vec<f32>], want: usize) -> Result<()> {
+    if state.len() != want {
+        return Err(Error::Config(format!(
+            "{name} checkpoint holds {} state vectors, this solver needs {want}",
+            state.len()
+        )));
+    }
+    Ok(())
+}
+
+/// Length-checked state-vector restore shared by the `import_state` impls.
+pub(crate) fn copy_vec(what: &str, dst: &mut [f32], src: &[f32]) -> Result<()> {
+    if dst.len() != src.len() {
+        return Err(Error::Config(format!(
+            "{what}: checkpoint vector has {} elements, solver expects {}",
+            src.len(),
+            dst.len()
+        )));
+    }
+    dst.copy_from_slice(src);
+    Ok(())
 }
 
 /// Shared fallback: gradient + host algebra scratch (64-byte aligned for
@@ -168,6 +206,25 @@ mod tests {
             let s = k.build(4, 3);
             assert_eq!(s.w(), &[0.0; 4]);
             assert_eq!(s.name(), k.label());
+        }
+    }
+
+    #[test]
+    fn export_import_roundtrips_for_every_solver() {
+        for k in SolverKind::all() {
+            let mut a = k.build(4, 3);
+            a.set_reg(0.01);
+            let state = a.export_state();
+            assert!(!state.is_empty(), "{}", k.label());
+            assert_eq!(state[0].len(), 4, "{}: iterate first", k.label());
+            let mut b = k.build(4, 3);
+            b.set_reg(0.01);
+            b.import_state(&state).unwrap();
+            assert_eq!(a.w(), b.w(), "{}", k.label());
+            // wrong shapes are typed config errors, not panics
+            assert!(b.import_state(&[]).is_err(), "{}", k.label());
+            let bad = vec![vec![0f32; 5]; state.len()];
+            assert!(b.import_state(&bad).is_err(), "{}", k.label());
         }
     }
 

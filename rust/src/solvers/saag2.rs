@@ -18,7 +18,7 @@ use crate::aligned::AlignedVec;
 use crate::backend::{ComputeBackend, FusedStep};
 use crate::data::batch::BatchView;
 use crate::error::Result;
-use crate::solvers::{GradScratch, Solver};
+use crate::solvers::{copy_vec, expect_vecs, GradScratch, Solver};
 
 /// SAAG-II state: iterate + epoch gradient accumulator, in 64-byte-aligned
 /// buffers for the SIMD kernels.
@@ -90,6 +90,17 @@ impl Solver for Saag2 {
             self.acc[k] += g[k];
         }
         Ok(())
+    }
+
+    // The accumulator resets at every `epoch_start`, so at an epoch
+    // boundary the iterate is the whole resumable state.
+    fn export_state(&mut self) -> Vec<Vec<f32>> {
+        vec![self.w.to_vec()]
+    }
+
+    fn import_state(&mut self, state: &[Vec<f32>]) -> Result<()> {
+        expect_vecs("SAAG-II", state, 1)?;
+        copy_vec("SAAG-II w", &mut self.w, &state[0])
     }
 }
 

@@ -13,7 +13,7 @@ use crate::aligned::AlignedVec;
 use crate::backend::{ComputeBackend, FusedStep};
 use crate::data::batch::BatchView;
 use crate::error::Result;
-use crate::solvers::{GradScratch, Solver};
+use crate::solvers::{copy_vec, expect_vecs, GradScratch, Solver};
 
 /// SAG state: iterate + `m` stored batch gradients + running average, all
 /// in 64-byte-aligned buffers for the SIMD kernels.
@@ -83,6 +83,24 @@ impl Solver for Sag {
             yj[k] = self.scratch.g[k];
         }
         crate::math::axpy(-lr, &self.avg, &mut self.w);
+        Ok(())
+    }
+
+    fn export_state(&mut self) -> Vec<Vec<f32>> {
+        let mut out = Vec::with_capacity(2 + self.memory.len());
+        out.push(self.w.to_vec());
+        out.push(self.avg.to_vec());
+        out.extend(self.memory.iter().map(|y| y.to_vec()));
+        out
+    }
+
+    fn import_state(&mut self, state: &[Vec<f32>]) -> Result<()> {
+        expect_vecs("SAG", state, 2 + self.memory.len())?;
+        copy_vec("SAG w", &mut self.w, &state[0])?;
+        copy_vec("SAG avg", &mut self.avg, &state[1])?;
+        for (y, s) in self.memory.iter_mut().zip(&state[2..]) {
+            copy_vec("SAG memory", y, s)?;
+        }
         Ok(())
     }
 }

@@ -12,7 +12,7 @@ use crate::aligned::AlignedVec;
 use crate::backend::{ComputeBackend, FusedStep};
 use crate::data::batch::BatchView;
 use crate::error::Result;
-use crate::solvers::{GradScratch, Solver};
+use crate::solvers::{copy_vec, expect_vecs, GradScratch, Solver};
 
 /// SAGA state: iterate + `m` stored batch gradients + running average, all
 /// in 64-byte-aligned buffers for the SIMD kernels.
@@ -81,6 +81,24 @@ impl Solver for Saga {
             self.w[k] -= lr * (g[k] - yj[k] + self.avg[k]);
             self.avg[k] += (g[k] - yj[k]) * self.inv_m;
             yj[k] = g[k];
+        }
+        Ok(())
+    }
+
+    fn export_state(&mut self) -> Vec<Vec<f32>> {
+        let mut out = Vec::with_capacity(2 + self.memory.len());
+        out.push(self.w.to_vec());
+        out.push(self.avg.to_vec());
+        out.extend(self.memory.iter().map(|y| y.to_vec()));
+        out
+    }
+
+    fn import_state(&mut self, state: &[Vec<f32>]) -> Result<()> {
+        expect_vecs("SAGA", state, 2 + self.memory.len())?;
+        copy_vec("SAGA w", &mut self.w, &state[0])?;
+        copy_vec("SAGA avg", &mut self.avg, &state[1])?;
+        for (y, s) in self.memory.iter_mut().zip(&state[2..]) {
+            copy_vec("SAGA memory", y, s)?;
         }
         Ok(())
     }

@@ -14,7 +14,7 @@ use crate::aligned::AlignedVec;
 use crate::backend::{ComputeBackend, FusedStep};
 use crate::data::batch::BatchView;
 use crate::error::{Error, Result};
-use crate::solvers::{GradScratch, Solver};
+use crate::solvers::{copy_vec, expect_vecs, GradScratch, Solver};
 
 /// SVRG state: iterate + epoch snapshot + full gradient at the snapshot,
 /// in 64-byte-aligned buffers for the SIMD kernels.
@@ -97,6 +97,20 @@ impl Solver for Svrg {
         for k in 0..self.w.len() {
             self.w[k] -= lr * (self.scratch.g[k] - self.scratch2[k] + mu[k]);
         }
+        Ok(())
+    }
+
+    // At an epoch boundary the iterate is the whole state: the next
+    // `epoch_start` re-snapshots `w` and invalidates μ, so the driver
+    // recomputes the full gradient exactly as an uninterrupted run would.
+    fn export_state(&mut self) -> Vec<Vec<f32>> {
+        vec![self.w.to_vec()]
+    }
+
+    fn import_state(&mut self, state: &[Vec<f32>]) -> Result<()> {
+        expect_vecs("SVRG", state, 1)?;
+        copy_vec("SVRG w", &mut self.w, &state[0])?;
+        self.mu = None;
         Ok(())
     }
 }

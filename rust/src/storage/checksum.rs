@@ -1,0 +1,346 @@
+//! Per-chunk CRC32 checksums for the `.sxb`/`.sxc` feature region.
+//!
+//! A dataset file may carry an optional **"SXK1" footer** after its
+//! payload: a table of IEEE CRC32 values, one per fixed-size chunk of the
+//! feature region (the byte range the page store serves). The writers
+//! ([`crate::data::dense::DenseDataset::save`] /
+//! [`crate::data::csr::CsrDataset::save`]) append it; the loaders accept
+//! files with or without it (hand-written test files and pre-footer files
+//! keep working); the page store verifies every faulted page run against
+//! it **before** the bytes are decoded, so a torn or bit-flipped read is
+//! detected, quarantined and refetched instead of silently training on
+//! garbage (INVARIANTS.md: *checksum-before-decode*).
+//!
+//! Footer layout (little-endian, appended at `payload_end`):
+//!
+//! ```text
+//! "SXK1"            magic           (4 bytes)
+//! chunk_bytes: u32  chunk size      (4 bytes)
+//! n_chunks:    u64  table length    (8 bytes)
+//! crcs: [u32; n]    one per chunk   (4 * n bytes)
+//! ```
+//!
+//! Chunk `k` covers region bytes `[k * chunk_bytes, (k+1) * chunk_bytes)`
+//! relative to the region start; the last chunk may be short. This module
+//! is pure byte-slice math — it performs no file I/O, so the storage
+//! layer's *io-discipline* rule (every raw read lives in
+//! [`crate::storage::retry`]) holds by construction.
+
+use crate::error::{Error, Result};
+use crate::storage::{le_u32, le_u64};
+
+/// Footer magic, directly after the payload.
+pub const FOOTER_MAGIC: [u8; 4] = *b"SXK1";
+
+/// Chunk granularity the writers use. Every configurable page size
+/// (`page_kib * 1024`) is a multiple of this, so page-run verification
+/// always lands on chunk boundaries for real configurations; stores with
+/// tiny test page sizes simply skip verification.
+pub const DEFAULT_CHUNK_BYTES: u32 = 1024;
+
+/// Fixed footer bytes before the CRC table.
+pub const FOOTER_HEADER_BYTES: u64 = 16;
+
+/// IEEE (reflected, poly 0xEDB88320) CRC32 lookup table, built at compile
+/// time — zero dependencies, zero startup cost.
+const fn build_table() -> [u32; 256] {
+    let mut table = [0u32; 256];
+    let mut i = 0usize;
+    while i < 256 {
+        let mut c = i as u32;
+        let mut k = 0;
+        while k < 8 {
+            c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            k += 1;
+        }
+        table[i] = c;
+        i += 1;
+    }
+    table
+}
+
+static CRC_TABLE: [u32; 256] = build_table();
+
+/// Feed `data` into a running CRC state (state is the *internal* value:
+/// start from `!0`, finish by xoring with `!0` — or use [`crc32`]).
+#[inline]
+fn crc32_update(mut state: u32, data: &[u8]) -> u32 {
+    for &b in data {
+        state = CRC_TABLE[((state ^ b as u32) & 0xFF) as usize] ^ (state >> 8);
+    }
+    state
+}
+
+/// IEEE CRC32 of `data` (the common `crc32("123456789") == 0xCBF43926`
+/// convention).
+pub fn crc32(data: &[u8]) -> u32 {
+    crc32_update(0xFFFF_FFFF, data) ^ 0xFFFF_FFFF
+}
+
+/// Streaming per-chunk hasher: feed the region bytes in any split, get one
+/// CRC per `chunk_bytes` chunk out. The writers stream the feature region
+/// through this while writing it, so no second pass over the data.
+#[derive(Debug)]
+pub struct ChunkHasher {
+    chunk_bytes: u32,
+    crcs: Vec<u32>,
+    state: u32,
+    filled: u32,
+}
+
+impl ChunkHasher {
+    /// New hasher with the given chunk granularity (must be > 0).
+    pub fn new(chunk_bytes: u32) -> Self {
+        ChunkHasher { chunk_bytes: chunk_bytes.max(1), crcs: Vec::new(), state: 0xFFFF_FFFF, filled: 0 }
+    }
+
+    /// Absorb the next `data` bytes of the region.
+    pub fn update(&mut self, mut data: &[u8]) {
+        while !data.is_empty() {
+            let room = (self.chunk_bytes - self.filled) as usize;
+            let take = room.min(data.len());
+            self.state = crc32_update(self.state, &data[..take]);
+            self.filled += take as u32;
+            data = &data[take..];
+            if self.filled == self.chunk_bytes {
+                self.crcs.push(self.state ^ 0xFFFF_FFFF);
+                self.state = 0xFFFF_FFFF;
+                self.filled = 0;
+            }
+        }
+    }
+
+    /// Close the trailing partial chunk (if any) and return the table.
+    pub fn finish(mut self) -> ChecksumTable {
+        if self.filled > 0 {
+            self.crcs.push(self.state ^ 0xFFFF_FFFF);
+        }
+        ChecksumTable { chunk_bytes: self.chunk_bytes, crcs: self.crcs }
+    }
+}
+
+/// The decoded footer: per-chunk CRCs of one file's feature region.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ChecksumTable {
+    /// Chunk granularity in bytes.
+    pub chunk_bytes: u32,
+    /// One CRC32 per chunk, in region order.
+    pub crcs: Vec<u32>,
+}
+
+impl ChecksumTable {
+    /// Table over an in-memory region (one pass; used by tests and small
+    /// writers).
+    pub fn of_region(region: &[u8], chunk_bytes: u32) -> Self {
+        let mut h = ChunkHasher::new(chunk_bytes);
+        h.update(region);
+        h.finish()
+    }
+
+    /// Encoded footer length in bytes for `n_chunks` entries.
+    pub fn encoded_len(n_chunks: u64) -> u64 {
+        FOOTER_HEADER_BYTES + 4 * n_chunks
+    }
+
+    /// Serialize to the on-disk footer bytes.
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(Self::encoded_len(self.crcs.len() as u64) as usize);
+        out.extend_from_slice(&FOOTER_MAGIC);
+        out.extend_from_slice(&self.chunk_bytes.to_le_bytes());
+        out.extend_from_slice(&(self.crcs.len() as u64).to_le_bytes());
+        for &c in &self.crcs {
+            out.extend_from_slice(&c.to_le_bytes());
+        }
+        out
+    }
+
+    /// Decode a footer from `bytes` (everything after the payload).
+    /// `base_offset` is the footer's absolute file offset, used only for
+    /// typed error reporting.
+    pub fn decode(bytes: &[u8], path: &str, base_offset: u64) -> Result<Self> {
+        let corrupt = |offset: u64, msg: String| Error::Corrupt {
+            path: path.to_string(),
+            offset,
+            msg,
+        };
+        if bytes.len() < FOOTER_HEADER_BYTES as usize {
+            return Err(corrupt(
+                base_offset,
+                format!("checksum footer truncated: {} bytes, need at least {FOOTER_HEADER_BYTES}", bytes.len()),
+            ));
+        }
+        if bytes[..4] != FOOTER_MAGIC {
+            return Err(corrupt(
+                base_offset,
+                format!("bad checksum footer magic {:?} (want {FOOTER_MAGIC:?})", &bytes[..4]),
+            ));
+        }
+        let chunk_bytes = le_u32(bytes, 4);
+        if chunk_bytes == 0 {
+            return Err(corrupt(base_offset + 4, "checksum footer chunk_bytes is 0".into()));
+        }
+        let n_chunks = le_u64(bytes, 8);
+        let want = Self::encoded_len(n_chunks);
+        if bytes.len() as u64 != want {
+            return Err(corrupt(
+                base_offset + 8,
+                format!(
+                    "checksum footer length mismatch: {} bytes for {n_chunks} chunks (want {want})",
+                    bytes.len()
+                ),
+            ));
+        }
+        let mut crcs = Vec::with_capacity(n_chunks as usize);
+        for k in 0..n_chunks as usize {
+            crcs.push(le_u32(bytes, FOOTER_HEADER_BYTES as usize + 4 * k));
+        }
+        Ok(ChecksumTable { chunk_bytes, crcs })
+    }
+
+    /// Expected chunk count for a region of `region_len` bytes.
+    pub fn chunks_for(region_len: u64, chunk_bytes: u32) -> u64 {
+        region_len.div_ceil(chunk_bytes as u64)
+    }
+
+    /// Verify the region bytes `[rel_lo, rel_lo + data.len())` (offsets
+    /// relative to the region start) against the table. `rel_lo` must be
+    /// chunk-aligned and the range must end on a chunk boundary or at
+    /// `region_len`. Returns the *relative* offset of the first bad chunk,
+    /// or `None` when everything matches.
+    pub fn verify_region(&self, rel_lo: u64, data: &[u8], region_len: u64) -> Option<u64> {
+        let cb = self.chunk_bytes as u64;
+        debug_assert_eq!(rel_lo % cb, 0, "verification range must start on a chunk boundary");
+        let rel_hi = rel_lo + data.len() as u64;
+        let first = rel_lo / cb;
+        let last = rel_hi.div_ceil(cb);
+        for k in first..last {
+            let c_lo = k * cb;
+            let c_hi = ((k + 1) * cb).min(region_len);
+            let a = (c_lo - rel_lo) as usize;
+            let b = (c_hi - rel_lo) as usize;
+            if b > data.len() {
+                return Some(c_lo);
+            }
+            match self.crcs.get(k as usize) {
+                Some(&want) if crc32(&data[a..b]) == want => {}
+                _ => return Some(c_lo),
+            }
+        }
+        None
+    }
+}
+
+/// Split a file of `file_len` bytes whose payload ends at `payload_end`
+/// into "no footer" (`Ok(false)`) or "footer present" (`Ok(true)`), with a
+/// typed error when the tail can't be a well-formed footer. Callers that
+/// get `true` read `[payload_end, file_len)` and hand it to
+/// [`ChecksumTable::decode`].
+pub fn footer_present(file_len: u64, payload_end: u64, path: &str) -> Result<bool> {
+    if file_len == payload_end {
+        return Ok(false);
+    }
+    if file_len < payload_end || file_len - payload_end < FOOTER_HEADER_BYTES {
+        return Err(Error::Corrupt {
+            path: path.to_string(),
+            offset: payload_end.min(file_len),
+            msg: format!(
+                "file length mismatch: {file_len} bytes, payload ends at {payload_end} \
+                 and the tail is no checksum footer"
+            ),
+        });
+    }
+    Ok(true)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn crc32_known_vector() {
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+    }
+
+    #[test]
+    fn chunk_hasher_matches_one_shot_any_split() {
+        let data: Vec<u8> = (0..3000u32).map(|i| (i % 251) as u8).collect();
+        let whole = ChecksumTable::of_region(&data, 1024);
+        assert_eq!(whole.crcs.len(), 3, "2 full chunks + 1 short tail");
+        // feed in awkward splits: table must be identical
+        let mut h = ChunkHasher::new(1024);
+        for piece in data.chunks(7) {
+            h.update(piece);
+        }
+        assert_eq!(h.finish(), whole);
+        // per-chunk CRCs equal direct CRCs of the chunk bytes
+        assert_eq!(whole.crcs[0], crc32(&data[..1024]));
+        assert_eq!(whole.crcs[2], crc32(&data[2048..]));
+    }
+
+    #[test]
+    fn encode_decode_roundtrip() {
+        let data = vec![0xA5u8; 2500];
+        let t = ChecksumTable::of_region(&data, 1024);
+        let enc = t.encode();
+        assert_eq!(enc.len() as u64, ChecksumTable::encoded_len(3));
+        let back = ChecksumTable::decode(&enc, "t.sxb", 100).unwrap();
+        assert_eq!(back, t);
+    }
+
+    #[test]
+    fn decode_rejects_malformed_footers_typed() {
+        let t = ChecksumTable::of_region(&[1u8, 2, 3], 2);
+        let enc = t.encode();
+        // bad magic
+        let mut bad = enc.clone();
+        bad[0] = b'Z';
+        match ChecksumTable::decode(&bad, "t.sxb", 40) {
+            Err(Error::Corrupt { offset, .. }) => assert_eq!(offset, 40),
+            other => panic!("expected Corrupt, got {other:?}"),
+        }
+        // truncated table
+        match ChecksumTable::decode(&enc[..enc.len() - 1], "t.sxb", 40) {
+            Err(Error::Corrupt { offset, msg, .. }) => {
+                assert_eq!(offset, 48);
+                assert!(msg.contains("length mismatch"), "{msg}");
+            }
+            other => panic!("expected Corrupt, got {other:?}"),
+        }
+        // zero chunk size
+        let mut zeroed = enc.clone();
+        zeroed[4..8].copy_from_slice(&0u32.to_le_bytes());
+        assert!(ChecksumTable::decode(&zeroed, "t.sxb", 40).is_err());
+    }
+
+    #[test]
+    fn verify_region_catches_flips_and_accepts_clean_ranges() {
+        let mut data: Vec<u8> = (0..4096u32 + 100).map(|i| (i % 253) as u8).collect();
+        let region_len = data.len() as u64;
+        let t = ChecksumTable::of_region(&data, 1024);
+        assert_eq!(t.crcs.len(), 5);
+        // clean: full region, aligned sub-range, and the short tail
+        assert_eq!(t.verify_region(0, &data, region_len), None);
+        assert_eq!(t.verify_region(1024, &data[1024..3072], region_len), None);
+        assert_eq!(t.verify_region(4096, &data[4096..], region_len), None);
+        // flip one byte in chunk 2: exactly that chunk must be reported
+        data[2048 + 17] ^= 0x40;
+        assert_eq!(t.verify_region(0, &data, region_len), Some(2048));
+        assert_eq!(t.verify_region(2048, &data[2048..3072], region_len), Some(2048));
+        // untouched chunks still verify
+        assert_eq!(t.verify_region(0, &data[..2048], region_len), None);
+    }
+
+    #[test]
+    fn footer_present_distinguishes_absent_present_and_garbage() {
+        assert!(!footer_present(100, 100, "t").unwrap());
+        assert!(footer_present(100 + 16 + 4, 100, "t").unwrap());
+        // a tail too short to be a footer is a typed corruption
+        match footer_present(105, 100, "t") {
+            Err(Error::Corrupt { offset, .. }) => assert_eq!(offset, 100),
+            other => panic!("expected Corrupt, got {other:?}"),
+        }
+        // file shorter than the payload claim
+        assert!(footer_present(90, 100, "t").is_err());
+    }
+}

@@ -85,13 +85,17 @@ pub(crate) fn le_u64(buf: &[u8], at: usize) -> u64 {
 
 pub mod blockmap;
 pub mod cache;
+pub mod checksum;
 pub mod pagestore;
 pub mod profile;
 pub mod reader;
+pub mod retry;
 pub mod simulator;
 
 pub use blockmap::BlockMap;
 pub use cache::LruCache;
+pub use checksum::ChecksumTable;
 pub use pagestore::{IoStats, PageStore};
 pub use profile::DeviceProfile;
+pub use retry::RetryPolicy;
 pub use simulator::{AccessCost, AccessSimulator};

@@ -58,12 +58,37 @@
 //! what the consumer actually waited for; `readahead_hits` tell you how
 //! many page touches were served by prefetched pages.
 //!
+//! ## Fault tolerance: retry, checksum, degrade
+//!
+//! Real devices interrupt reads, return short, hang, and flip bits. The
+//! store treats all four as first-class events rather than assumptions:
+//!
+//! * every raw read goes through [`crate::storage::retry::read_exact_at`]
+//!   — bounded attempts, deterministic exponential backoff, per-op
+//!   deadline surfacing as [`Error::IoTimeout`] — and recovered transient
+//!   faults are counted in [`IoStats::retries`];
+//! * when the backing file carries a `"SXK1"` per-chunk CRC32 footer
+//!   ([`crate::storage::checksum`]), every faulted run is verified
+//!   **before decode**, outside the file lock and outside the timed read
+//!   block; a mismatching run is quarantined (dropped) and refetched, and
+//!   only persistent corruption surfaces as [`Error::Corrupt`];
+//! * a dead readahead thread (I/O failure, panic, or injected kill)
+//!   degrades the experiment to demand paging: [`Readahead::wait_ready`]
+//!   reports [`RaWait::Degraded`] (counted once in [`IoStats::degraded`])
+//!   and the demand path self-serves — the trajectory is unchanged
+//!   because readahead never alters delivered bytes;
+//! * the whole layer is exercised by the seeded fault schedules of
+//!   [`crate::testing::faults`] (`SAMPLEX_FAULTS=<spec>`), which are off
+//!   by default and cost one `Option` check when off.
+//!
 //! ## Machine-checked invariants
 //!
 //! `samplex-lint` (see `INVARIANTS.md` at the repo root) enforces this
 //! module's discipline on every build: **lock-discipline** (R2) — no file
 //! seek/read or page decode inside a shard-lock scope and no nested lock
-//! acquisition; **atomics-audit** (R4) — every `Ordering::Relaxed` here
+//! acquisition; **io-discipline** (R7) — no raw `.read_exact(`/`.seek(`
+//! anywhere in `storage/` outside the retry wrapper module;
+//! **atomics-audit** (R4) — every `Ordering::Relaxed` here
 //! is an annotated stats counter, while cross-thread signals
 //! (`idx_bound`, `completed_atomic`) carry Acquire/Release with their
 //! happens-before edges documented; **no-panic-plane** (R1) — the store
@@ -71,9 +96,8 @@
 
 use std::collections::HashMap;
 use std::fs::File;
-use std::io::{Read, Seek, SeekFrom};
 use std::path::Path;
-use std::sync::atomic::{AtomicU32, AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Condvar, Mutex, MutexGuard};
 use std::thread::JoinHandle;
@@ -82,6 +106,9 @@ use std::time::Duration;
 use crate::aligned::AlignedVec;
 use crate::error::{Error, Result};
 use crate::storage::cache::{LruCache, Touch};
+use crate::storage::checksum::ChecksumTable;
+use crate::storage::retry::{self, RetryPolicy};
+use crate::testing::faults::{FaultSpec, FaultyFile};
 
 /// Upper bound on pool shards (the actual count never exceeds the pool's
 /// page capacity, so a 1-page budget degenerates to a single shard with
@@ -108,6 +135,15 @@ pub struct IoStats {
     /// prefetched page is credited at most once, on its first demand
     /// touch) — the authoritative "did readahead do useful work?" counter.
     pub readahead_hits: u64,
+    /// Recovered I/O faults: transient read errors absorbed by the retry
+    /// policy plus checksum-quarantined runs that were refetched. Zero on
+    /// a healthy device; nonzero here with a clean trajectory is the
+    /// *retry-transparency* invariant working.
+    pub retries: u64,
+    /// Times the experiment downgraded from readahead to demand paging
+    /// because the readahead thread died (at most 1 per readahead handle;
+    /// the trajectory is unchanged, only overlap is lost).
+    pub degraded: u64,
     /// Bytes actually delivered to callers (the useful payload).
     pub bytes_requested: u64,
     /// Wall seconds spent inside read syscalls (all threads).
@@ -152,6 +188,8 @@ impl IoStats {
             demand_faults: self.demand_faults - base.demand_faults,
             page_hits: self.page_hits - base.page_hits,
             readahead_hits: self.readahead_hits - base.readahead_hits,
+            retries: self.retries - base.retries,
+            degraded: self.degraded - base.degraded,
             bytes_requested: self.bytes_requested - base.bytes_requested,
             read_s: self.read_s - base.read_s,
             stall_s: self.stall_s - base.stall_s,
@@ -167,6 +205,8 @@ impl std::ops::AddAssign for IoStats {
         self.demand_faults += rhs.demand_faults;
         self.page_hits += rhs.page_hits;
         self.readahead_hits += rhs.readahead_hits;
+        self.retries += rhs.retries;
+        self.degraded += rhs.degraded;
         self.bytes_requested += rhs.bytes_requested;
         self.read_s += rhs.read_s;
         self.stall_s += rhs.stall_s;
@@ -183,6 +223,8 @@ struct AtomicIoStats {
     demand_faults: AtomicU64,
     page_hits: AtomicU64,
     readahead_hits: AtomicU64,
+    retries: AtomicU64,
+    degraded: AtomicU64,
     bytes_requested: AtomicU64,
     read_ns: AtomicU64,
     stall_ns: AtomicU64,
@@ -200,6 +242,8 @@ impl AtomicIoStats {
             demand_faults: self.demand_faults.load(Ordering::Relaxed),
             page_hits: self.page_hits.load(Ordering::Relaxed),
             readahead_hits: self.readahead_hits.load(Ordering::Relaxed),
+            retries: self.retries.load(Ordering::Relaxed),
+            degraded: self.degraded.load(Ordering::Relaxed),
             bytes_requested: self.bytes_requested.load(Ordering::Relaxed),
             read_s: self.read_ns.load(Ordering::Relaxed) as f64 * 1e-9,
             stall_s: self.stall_ns.load(Ordering::Relaxed) as f64 * 1e-9,
@@ -323,9 +367,36 @@ fn lock_recovering<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
     m.lock().unwrap_or_else(|poisoned| poisoned.into_inner())
 }
 
+/// Construction-time fault-tolerance options for a [`PageStore`]. All of
+/// them are immutable once the store is built — no lock is ever taken to
+/// consult them, which keeps the hot path free of interior mutability and
+/// the lock-discipline tracker free of phantom scopes.
+#[derive(Debug, Clone, Default)]
+pub struct StoreOptions {
+    /// Retry/backoff/timeout policy for every raw read.
+    pub retry: RetryPolicy,
+    /// Fault-injection schedule (testing only; `None` in production).
+    pub faults: Option<FaultSpec>,
+    /// Per-chunk CRCs of the feature region, decoded from the file's
+    /// `"SXK1"` footer. `None` = no verification (footer-less file).
+    pub checksums: Option<ChecksumTable>,
+    /// Watchdog deadline for [`Readahead::wait_ready`], milliseconds;
+    /// 0 disables the watchdog. Defaults to the retry policy's per-op
+    /// timeout.
+    pub io_timeout_ms: Option<u64>,
+}
+
+impl StoreOptions {
+    /// Default options plus the fault schedule from `SAMPLEX_FAULTS`
+    /// (if set) — what [`PageStore::new`] uses.
+    pub fn from_env() -> Result<StoreOptions> {
+        Ok(StoreOptions { faults: FaultSpec::from_env()?, ..StoreOptions::default() })
+    }
+}
+
 #[derive(Debug)]
 struct StoreInner {
-    file: Mutex<File>,
+    file: Mutex<FaultyFile>,
     path: String,
     layout: PageLayout,
     region_base: u64,
@@ -335,6 +406,16 @@ struct StoreInner {
     budget_bytes: u64,
     /// Total pool capacity in pages (sum of the shard capacity slices).
     capacity_pages: usize,
+    /// Retry policy applied to every raw read (see [`StoreOptions`]).
+    retry: RetryPolicy,
+    /// Per-chunk CRCs of the feature region; present only when the file
+    /// carries a footer *and* the page size is chunk-aligned, so run
+    /// verification always lands on chunk boundaries.
+    checksums: Option<ChecksumTable>,
+    /// Readahead-wait watchdog deadline (ms; 0 = disabled).
+    io_timeout_ms: u64,
+    /// Injected readahead-death threshold (`kill_ra=N` in the fault spec).
+    kill_ra: Option<u64>,
     /// Exclusive upper bound for decoded `col_idx` values (pairs layout
     /// only; `u32::MAX` = unchecked). Catches payload corruption at fault
     /// time with a typed error instead of an out-of-bounds panic deep in
@@ -365,7 +446,10 @@ impl PageStore {
     /// Build over the region `[region_base, region_base + n_elems * elem)`
     /// of `file`. `page_bytes` must be a positive multiple of the layout's
     /// element size; `budget_bytes` caps the resident pool (a budget below
-    /// one page keeps nothing resident — every access faults).
+    /// one page keeps nothing resident — every access faults). Fault
+    /// injection follows `SAMPLEX_FAULTS` (off by default); retry and
+    /// watchdog knobs take their defaults — use [`PageStore::with_options`]
+    /// to set them explicitly.
     pub fn new(
         file: File,
         path: impl AsRef<Path>,
@@ -374,6 +458,23 @@ impl PageStore {
         n_elems: u64,
         page_bytes: u64,
         budget_bytes: u64,
+    ) -> Result<Self> {
+        let opts = StoreOptions::from_env()?;
+        Self::with_options(file, path, layout, region_base, n_elems, page_bytes, budget_bytes, opts)
+    }
+
+    /// [`PageStore::new`] with explicit [`StoreOptions`] (retry policy,
+    /// fault schedule, checksum table, readahead watchdog).
+    #[allow(clippy::too_many_arguments)]
+    pub fn with_options(
+        file: File,
+        path: impl AsRef<Path>,
+        layout: PageLayout,
+        region_base: u64,
+        n_elems: u64,
+        page_bytes: u64,
+        budget_bytes: u64,
+        opts: StoreOptions,
     ) -> Result<Self> {
         if page_bytes == 0 || page_bytes % layout.elem_bytes() != 0 {
             return Err(Error::Config(format!(
@@ -392,9 +493,17 @@ impl PageStore {
                 Mutex::new(Shard { resident: HashMap::new(), lru: LruCache::new(cap) })
             })
             .collect();
+        // Verification needs every page boundary to land on a chunk
+        // boundary (run extents are page-aligned); a misaligned table is
+        // dropped rather than half-applied.
+        let checksums = opts
+            .checksums
+            .filter(|t| t.chunk_bytes > 0 && page_bytes % t.chunk_bytes as u64 == 0);
+        let kill_ra = opts.faults.as_ref().and_then(|s| s.kill_ra);
+        let io_timeout_ms = opts.io_timeout_ms.unwrap_or(opts.retry.op_timeout_ms);
         Ok(PageStore {
             inner: Arc::new(StoreInner {
-                file: Mutex::new(file),
+                file: Mutex::new(FaultyFile::with_spec(file, opts.faults)),
                 path: path.as_ref().display().to_string(),
                 layout,
                 region_base,
@@ -403,11 +512,27 @@ impl PageStore {
                 page_bytes,
                 budget_bytes,
                 capacity_pages,
+                retry: opts.retry,
+                checksums,
+                io_timeout_ms,
+                kill_ra,
                 idx_bound: AtomicU32::new(u32::MAX),
                 shards,
                 stats: AtomicIoStats::default(),
             }),
         })
+    }
+
+    /// True when faulted runs are verified against a `"SXK1"` checksum
+    /// footer before decode.
+    pub fn verifies_checksums(&self) -> bool {
+        self.inner.checksums.is_some()
+    }
+
+    /// The injected readahead-death threshold, if the active fault spec
+    /// carries one (`kill_ra=N`).
+    pub(crate) fn kill_ra_threshold(&self) -> Option<u64> {
+        self.inner.kill_ra
     }
 
     /// Validate every decoded `col_idx` against `bound` (exclusive) from
@@ -492,35 +617,87 @@ impl PageStore {
     /// into the pool — the caller decides residency. `demand` charges the
     /// fault to the consumer-visible counters (`demand_faults`/`stall_s`);
     /// the readahead thread passes `false`.
+    ///
+    /// Recovery path: the raw read runs under the store's [`RetryPolicy`]
+    /// (transient faults restart it; recovered attempts are counted in
+    /// [`IoStats::retries`]), and when the file carries a checksum footer
+    /// the run is verified *before* decode — a mismatching run is
+    /// quarantined and refetched up to the retry budget, after which it
+    /// surfaces as [`Error::Corrupt`] at the first bad chunk's offset.
+    /// Verification happens outside the file lock and outside the timed
+    /// read block, so `read_s` (and MB/s) keep measuring the device.
     fn read_run(&self, lo: u64, hi: u64, demand: bool) -> Result<Vec<Arc<Page>>> {
         let inner = &*self.inner;
+        let eb = inner.layout.elem_bytes();
         let first_elem = lo * inner.elems_per_page;
         let last_elem = ((hi + 1) * inner.elems_per_page).min(inner.n_elems);
-        let byte_lo = inner.region_base + first_elem * inner.layout.elem_bytes();
-        let nbytes = (last_elem - first_elem) * inner.layout.elem_bytes();
+        let byte_lo = inner.region_base + first_elem * eb;
+        let nbytes = (last_elem - first_elem) * eb;
+        let rel_lo = first_elem * eb;
+        let region_len = inner.n_elems * eb;
         let mut raw = vec![0u8; nbytes as usize];
-        let elapsed = {
-            let mut file = lock_recovering(&inner.file);
-            let sw = std::time::Instant::now();
-            file.seek(SeekFrom::Start(byte_lo))?;
-            file.read_exact(&mut raw).map_err(|e| Error::Corrupt {
-                path: inner.path.clone(),
-                offset: byte_lo,
-                msg: format!("short read of {nbytes} bytes: {e}"),
-            })?;
-            sw.elapsed()
-        };
-        let ns = elapsed.as_nanos() as u64;
-        // relaxed-ok: monotonic stats counters; nothing synchronizes on
-        // them and the snapshot tolerates torn cross-counter views.
-        inner.stats.read_ns.fetch_add(ns, Ordering::Relaxed);
-        inner.stats.read_calls.fetch_add(1, Ordering::Relaxed);
-        inner.stats.bytes_read.fetch_add(nbytes, Ordering::Relaxed);
+        let mut fetches_left = inner.retry.max_attempts.max(1);
+        loop {
+            let elapsed = {
+                let mut file = lock_recovering(&inner.file);
+                let sw = std::time::Instant::now();
+                let outcome =
+                    retry::read_exact_at(&mut file, byte_lo, &mut raw, &inner.retry, byte_lo, "page run read")
+                        .map_err(|e| match e {
+                            Error::Io(ioe) if ioe.kind() == std::io::ErrorKind::UnexpectedEof => {
+                                Error::Corrupt {
+                                    path: inner.path.clone(),
+                                    offset: byte_lo,
+                                    msg: format!("short read of {nbytes} bytes: {ioe}"),
+                                }
+                            }
+                            other => other,
+                        })?;
+                if outcome.retries > 0 {
+                    // relaxed-ok: pure stats counter (recovered transients).
+                    inner.stats.retries.fetch_add(outcome.retries as u64, Ordering::Relaxed);
+                }
+                sw.elapsed()
+            };
+            let ns = elapsed.as_nanos() as u64;
+            // relaxed-ok: monotonic stats counters; nothing synchronizes on
+            // them and the snapshot tolerates torn cross-counter views.
+            inner.stats.read_ns.fetch_add(ns, Ordering::Relaxed);
+            inner.stats.read_calls.fetch_add(1, Ordering::Relaxed);
+            inner.stats.bytes_read.fetch_add(nbytes, Ordering::Relaxed);
+            if demand {
+                // relaxed-ok: same stats-counter argument as above.
+                inner.stats.stall_ns.fetch_add(ns, Ordering::Relaxed);
+            }
+            match inner
+                .checksums
+                .as_ref()
+                .and_then(|t| t.verify_region(rel_lo, &raw, region_len))
+            {
+                None => break,
+                Some(bad_rel) => {
+                    fetches_left -= 1;
+                    // relaxed-ok: pure stats counter (quarantined refetches).
+                    inner.stats.retries.fetch_add(1, Ordering::Relaxed);
+                    if fetches_left == 0 {
+                        return Err(Error::Corrupt {
+                            path: inner.path.clone(),
+                            offset: inner.region_base + bad_rel,
+                            msg: format!(
+                                "page checksum mismatch persisting across {} fetches",
+                                inner.retry.max_attempts.max(1)
+                            ),
+                        });
+                    }
+                }
+            }
+        }
+        // relaxed-ok: monotonic stats counters (faults counted once per
+        // run, not per quarantine refetch).
         inner.stats.page_faults.fetch_add(hi - lo + 1, Ordering::Relaxed);
         if demand {
             // relaxed-ok: same stats-counter argument as above.
             inner.stats.demand_faults.fetch_add(hi - lo + 1, Ordering::Relaxed);
-            inner.stats.stall_ns.fetch_add(ns, Ordering::Relaxed);
         }
         // Acquire pairs with the Release store in `set_idx_bound`, so a
         // bound published before this fault is seen by its validation.
@@ -798,6 +975,19 @@ struct RaShared {
     completed_atomic: AtomicU64,
 }
 
+/// What [`Readahead::wait_ready`] observed about the awaited batch.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RaWait {
+    /// The batch's prefault completed; its pages are in the pool.
+    Ready,
+    /// The readahead thread is gone (I/O failure, panic, or injected
+    /// kill) without completing the batch: the experiment has degraded to
+    /// demand paging. The demand path faults the same pages itself, so
+    /// the trajectory is unchanged — only the overlap is lost. Counted
+    /// once per handle in [`IoStats::degraded`].
+    Degraded,
+}
+
 /// Handle to the asynchronous page-readahead thread (see the module docs).
 ///
 /// Protocol, per mini-batch, from a single consumer thread:
@@ -809,9 +999,9 @@ struct RaShared {
 ///    the batch's page count, which opens window room for the thread.
 ///
 /// Dropping the handle shuts the thread down and joins it. If the thread
-/// dies (I/O error after I/O error, or a panic), waiters unblock and the
-/// demand path simply faults for itself — readahead is an overlap
-/// optimization, never a correctness dependency.
+/// dies (I/O error, a panic, or an injected `kill_ra` fault), waiters get
+/// [`RaWait::Degraded`] and the demand path simply faults for itself —
+/// readahead is an overlap optimization, never a correctness dependency.
 #[derive(Debug)]
 pub struct Readahead {
     store: PageStore,
@@ -819,6 +1009,9 @@ pub struct Readahead {
     tx: Option<Sender<ElemRuns>>,
     handle: Option<JoinHandle<()>>,
     published: u64,
+    /// Once-flag for the `IoStats::degraded` credit (single consumer, but
+    /// atomic keeps the handle `Sync`).
+    degraded_noted: AtomicBool,
 }
 
 impl Readahead {
@@ -856,7 +1049,14 @@ impl Readahead {
         if handle.is_none() {
             lock_recovering(&shared.state).dead = true;
         }
-        Readahead { store, shared, tx: Some(tx), handle, published: 0 }
+        Readahead {
+            store,
+            shared,
+            tx: Some(tx),
+            handle,
+            published: 0,
+            degraded_noted: AtomicBool::new(false),
+        }
     }
 
     /// Queue one batch's element runs; returns the batch's sequence number
@@ -873,20 +1073,55 @@ impl Readahead {
         seq
     }
 
-    /// Block until batch `batch_seq` has been prefaulted (or the thread is
-    /// gone). The wait time is charged to [`IoStats::stall_s`] — it is
-    /// access time the consumer could not hide.
-    pub fn wait_ready(&self, batch_seq: u64) {
+    /// Block until batch `batch_seq` has been prefaulted, the thread dies
+    /// ([`RaWait::Degraded`] — the caller self-serves via the demand
+    /// path), or the store's watchdog deadline elapses (a hung read on
+    /// the readahead thread surfaces as [`Error::IoTimeout`] instead of
+    /// blocking the experiment forever). The wait time is charged to
+    /// [`IoStats::stall_s`] — it is access time the consumer could not
+    /// hide.
+    pub fn wait_ready(&self, batch_seq: u64) -> Result<RaWait> {
         // Acquire pairs with the Release store in `readahead_loop`: seeing
         // `completed > batch_seq` means the batch's page installs (done
         // under the shard locks before the store) happen-before this read,
         // so the fast path may skip the mutex entirely.
         if self.shared.completed_atomic.load(Ordering::Acquire) > batch_seq {
-            return;
+            return Ok(RaWait::Ready);
         }
+        let timeout_ms = self.store.inner.io_timeout_ms;
+        let deadline = (timeout_ms > 0).then(|| Duration::from_millis(timeout_ms));
         let sw = std::time::Instant::now();
         let mut st = lock_recovering(&self.shared.state);
-        while st.completed <= batch_seq && !st.dead {
+        loop {
+            if st.completed > batch_seq {
+                drop(st);
+                self.store.add_stall(sw.elapsed());
+                return Ok(RaWait::Ready);
+            }
+            if st.dead {
+                drop(st);
+                self.store.add_stall(sw.elapsed());
+                // relaxed-ok: once-flag feeding the `degraded` stats
+                // counter; single consumer, nothing synchronizes on it.
+                if !self.degraded_noted.swap(true, Ordering::Relaxed) {
+                    // relaxed-ok: pure stats counter.
+                    self.store.inner.stats.degraded.fetch_add(1, Ordering::Relaxed);
+                }
+                return Ok(RaWait::Degraded);
+            }
+            if let Some(d) = deadline {
+                let waited = sw.elapsed();
+                if waited >= d {
+                    drop(st);
+                    self.store.add_stall(waited);
+                    return Err(Error::IoTimeout {
+                        op: format!("waiting for readahead of batch {batch_seq}"),
+                        waited_s: waited.as_secs_f64(),
+                    });
+                }
+            }
+            // poll granularity: re-check liveness/deadline every 100 ms
+            // even if no notification arrives
             let (guard, _) = self
                 .shared
                 .completed_cv
@@ -894,8 +1129,6 @@ impl Readahead {
                 .unwrap_or_else(|poisoned| poisoned.into_inner());
             st = guard;
         }
-        drop(st);
-        self.store.add_stall(sw.elapsed());
     }
 
     /// Record that one published batch (spanning `pages` pages) has been
@@ -973,22 +1206,35 @@ fn readahead_loop(store: PageStore, shared: Arc<RaShared>, rx: Receiver<ElemRuns
         }
         for &(lo, hi) in &runs {
             if let Err(e) = store.prefault_range(lo, hi) {
+                // an erroring readahead thread *dies* (DeadGuard flips
+                // `dead`): the consumer degrades to demand paging and
+                // surfaces the same bytes' error typed, instead of this
+                // thread half-completing batches forever
                 let mut st = lock_recovering(&shared.state);
                 if st.failed.is_none() {
                     st.failed = Some(e.to_string());
                 }
-                break;
+                return;
             }
         }
-        let mut st = lock_recovering(&shared.state);
-        st.prefaulted_pages += pages;
-        st.completed += 1;
-        // Release publishes this batch's page installs to the consumer's
-        // Acquire fast path in `wait_ready` — a cross-thread signal, so R4
-        // (atomics-audit) requires a real ordering here, not Relaxed.
-        shared.completed_atomic.store(st.completed, Ordering::Release);
-        drop(st);
+        let completed = {
+            let mut st = lock_recovering(&shared.state);
+            st.prefaulted_pages += pages;
+            st.completed += 1;
+            // Release publishes this batch's page installs to the consumer's
+            // Acquire fast path in `wait_ready` — a cross-thread signal, so R4
+            // (atomics-audit) requires a real ordering here, not Relaxed.
+            shared.completed_atomic.store(st.completed, Ordering::Release);
+            st.completed
+        };
         shared.completed_cv.notify_all();
+        // deterministic fault injection: `kill_ra=N` terminates the thread
+        // after N completed batches, exercising the degradation path
+        if let Some(n) = store.kill_ra_threshold() {
+            if completed >= n {
+                return;
+            }
+        }
     }
 }
 
@@ -1320,7 +1566,7 @@ mod tests {
             ra.publish(vec![(lo, hi)]);
         }
         for (j, &(lo, hi)) in batches.iter().enumerate() {
-            ra.wait_ready(j as u64);
+            assert_eq!(ra.wait_ready(j as u64).unwrap(), RaWait::Ready);
             let mut got = Vec::new();
             s.with_range(lo, hi, |pg, a, b| got.extend_from_slice(&pg.dense()[a..b]))
                 .unwrap();
@@ -1347,7 +1593,7 @@ mod tests {
             ra.publish(vec![(j * 16, (j + 1) * 16)]);
         }
         for j in 0..4u64 {
-            ra.wait_ready(j);
+            assert_eq!(ra.wait_ready(j).unwrap(), RaWait::Ready);
             ra.mark_consumed(4);
         }
         assert_eq!(ra.completed_batches(), 4);
@@ -1355,17 +1601,165 @@ mod tests {
     }
 
     #[test]
-    fn readahead_io_error_marks_failed_but_consumer_proceeds() {
+    fn readahead_io_error_degrades_to_demand_paging() {
         // region claims 32 elems, file holds 8: the readahead thread must
-        // record the failure and still complete the batch so wait_ready
-        // returns; the demand path then surfaces the same error typed
+        // record the failure and die; the consumer observes Degraded
+        // (counted once) and the demand path surfaces the same error typed
         let (p, f) = dense_file(0, 8);
         let s = PageStore::new(f, &p, PageLayout::DenseF32, 0, 32, 16, 1024).unwrap();
         let mut ra = Readahead::spawn(s.clone(), 8);
         let seq = ra.publish(vec![(0, 32)]);
-        ra.wait_ready(seq);
+        assert_eq!(ra.wait_ready(seq).unwrap(), RaWait::Degraded);
         assert!(ra.failed().is_some(), "readahead must record the I/O failure");
         assert!(matches!(s.with_range(0, 32, |_, _, _| {}), Err(Error::Corrupt { .. })));
+        // the degradation is credited exactly once, even across many waits
+        assert_eq!(ra.wait_ready(seq + 1).unwrap(), RaWait::Degraded);
+        assert_eq!(s.stats().degraded, 1);
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn transient_faults_recovered_with_identical_bytes() {
+        use crate::testing::faults::FaultSpec;
+        // a fault-free baseline and a heavily faulted store over the same
+        // file must deliver identical bytes; the faulted one counts retries
+        let (p, f) = dense_file(0, 64);
+        let clean = PageStore::new(f, &p, PageLayout::DenseF32, 0, 64, 16, 16 * 16).unwrap();
+        let mut base = Vec::new();
+        clean
+            .with_range(0, 64, |pg, a, b| base.extend_from_slice(&pg.dense()[a..b]))
+            .unwrap();
+        let f2 = std::fs::File::open(&p).unwrap();
+        let opts = StoreOptions {
+            faults: Some(FaultSpec::parse("seed=11,eintr=0.3,short=0.3").unwrap()),
+            retry: RetryPolicy { max_attempts: 20, base_backoff_us: 1, max_backoff_us: 4, op_timeout_ms: 30_000 },
+            ..StoreOptions::default()
+        };
+        let faulty =
+            PageStore::with_options(f2, &p, PageLayout::DenseF32, 0, 64, 16, 16 * 16, opts)
+                .unwrap();
+        let mut got = Vec::new();
+        faulty
+            .with_range(0, 64, |pg, a, b| got.extend_from_slice(&pg.dense()[a..b]))
+            .unwrap();
+        assert_eq!(got, base, "retry-transparency: recovered reads deliver clean bytes");
+        assert!(faulty.stats().retries > 0, "the schedule should have injected faults");
+        assert_eq!(clean.stats().retries, 0);
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn checksums_quarantine_corrupt_reads_and_recover() {
+        use crate::storage::checksum::ChecksumTable;
+        use crate::testing::faults::FaultSpec;
+        // in-flight corruption (bad bytes off the wire, clean on disk):
+        // CRC verification must quarantine + refetch, delivering clean data
+        let (p, f) = dense_file(0, 64);
+        let region: Vec<u8> = (0..64u64).flat_map(|i| (i as f32).to_le_bytes()).collect();
+        let table = ChecksumTable::of_region(&region, 16);
+        let opts = StoreOptions {
+            faults: Some(FaultSpec::parse("seed=5,corrupt=0.4").unwrap()),
+            retry: RetryPolicy { max_attempts: 20, base_backoff_us: 1, max_backoff_us: 4, op_timeout_ms: 30_000 },
+            checksums: Some(table),
+            ..StoreOptions::default()
+        };
+        let s = PageStore::with_options(f, &p, PageLayout::DenseF32, 0, 64, 16, 16 * 16, opts)
+            .unwrap();
+        assert!(s.verifies_checksums());
+        let mut got = Vec::new();
+        s.with_range(0, 64, |pg, a, b| got.extend_from_slice(&pg.dense()[a..b]))
+            .unwrap();
+        let want: Vec<f32> = (0..64).map(|v| v as f32).collect();
+        assert_eq!(got, want, "checksum-before-decode: corrupt reads never reach the caller");
+        assert!(s.stats().retries > 0, "corrupt draws should have forced refetches");
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn persistent_corruption_surfaces_typed_not_silent() {
+        use crate::storage::checksum::ChecksumTable;
+        // corruption *on disk* (table disagrees with the stored bytes)
+        // cannot be refetched away: typed Corrupt at the bad chunk offset
+        let (p, f) = dense_file(0, 64);
+        let mut region: Vec<u8> = (0..64u64).flat_map(|i| (i as f32).to_le_bytes()).collect();
+        let table = ChecksumTable::of_region(&region, 16);
+        // flip a byte in page 2 (region offset 32..48) on disk
+        region[33] ^= 0x10;
+        std::fs::write(&p, &region).unwrap();
+        drop(f);
+        let f = std::fs::File::open(&p).unwrap();
+        let opts = StoreOptions { checksums: Some(table), ..StoreOptions::default() };
+        let s = PageStore::with_options(f, &p, PageLayout::DenseF32, 0, 64, 16, 16 * 16, opts)
+            .unwrap();
+        match s.with_range(0, 64, |_, _, _| {}) {
+            Err(Error::Corrupt { offset, msg, .. }) => {
+                assert_eq!(offset, 32, "first bad chunk's byte offset");
+                assert!(msg.contains("checksum mismatch"), "{msg}");
+            }
+            other => panic!("expected Corrupt, got {other:?}"),
+        }
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn misaligned_checksum_table_is_dropped_not_misapplied() {
+        use crate::storage::checksum::ChecksumTable;
+        let (p, f) = dense_file(0, 64);
+        // chunk 24 does not divide the 16-byte page: verification skipped
+        let table = ChecksumTable { chunk_bytes: 24, crcs: vec![0; 11] };
+        let opts = StoreOptions { checksums: Some(table), ..StoreOptions::default() };
+        let s = PageStore::with_options(f, &p, PageLayout::DenseF32, 0, 64, 16, 16 * 16, opts)
+            .unwrap();
+        assert!(!s.verifies_checksums());
+        s.with_range(0, 64, |_, _, _| {}).unwrap();
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn kill_ra_fault_kills_readahead_deterministically() {
+        use crate::testing::faults::FaultSpec;
+        let (p, f) = dense_file(0, 64);
+        let opts = StoreOptions {
+            faults: Some(FaultSpec::parse("kill_ra=2").unwrap()),
+            ..StoreOptions::default()
+        };
+        let s = PageStore::with_options(f, &p, PageLayout::DenseF32, 0, 64, 16, 16 * 16, opts)
+            .unwrap();
+        let mut ra = Readahead::spawn(s.clone(), 8);
+        for j in 0..4u64 {
+            ra.publish(vec![(j * 16, (j + 1) * 16)]);
+        }
+        // batches 0 and 1 complete; the thread dies before batch 2
+        assert_eq!(ra.wait_ready(0).unwrap(), RaWait::Ready);
+        ra.mark_consumed(4);
+        assert_eq!(ra.wait_ready(1).unwrap(), RaWait::Ready);
+        ra.mark_consumed(4);
+        assert_eq!(ra.wait_ready(2).unwrap(), RaWait::Degraded);
+        assert_eq!(s.stats().degraded, 1);
+        // demand paging still delivers everything
+        let mut got = Vec::new();
+        s.with_range(0, 64, |pg, a, b| got.extend_from_slice(&pg.dense()[a..b]))
+            .unwrap();
+        assert_eq!(got.len(), 64);
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn wait_ready_watchdog_times_out_typed() {
+        let (p, f) = dense_file(0, 64);
+        let opts = StoreOptions { io_timeout_ms: Some(50), ..StoreOptions::default() };
+        let s = PageStore::with_options(f, &p, PageLayout::DenseF32, 0, 64, 16, 16 * 16, opts)
+            .unwrap();
+        let ra = Readahead::spawn(s.clone(), 8);
+        // batch 0 was never published: the wait can only time out
+        match ra.wait_ready(0) {
+            Err(Error::IoTimeout { op, waited_s }) => {
+                assert!(op.contains("batch 0"), "{op}");
+                assert!(waited_s >= 0.05, "waited_s={waited_s}");
+            }
+            other => panic!("expected IoTimeout, got {other:?}"),
+        }
+        assert!(s.stats().stall_s >= 0.05, "the timed-out wait is charged as stall");
         std::fs::remove_file(p).ok();
     }
 }

@@ -5,19 +5,28 @@
 //! (b) the real syscall/copy cost of scattered vs contiguous access on this
 //! machine can be measured (EXPERIMENTS.md reports both). Labels are tiny
 //! (4 bytes/row) and kept resident; feature rows are read per batch.
+//!
+//! Every byte read here flows through [`crate::storage::retry`] over a
+//! [`FaultyFile`] handle (lint rule **io-discipline**): transient faults —
+//! injected or real EINTR/short reads — are retried with deterministic
+//! backoff and counted in [`DiskSource::retries`], so a flaky device
+//! degrades to a slower run instead of a failed one.
 
 use std::fs::File;
-use std::io::{Read, Seek, SeekFrom};
 use std::path::Path;
 
 use crate::data::batch::RowSelection;
 use crate::data::dense::HEADER_BYTES;
 use crate::error::{Error, Result};
+use crate::storage::checksum;
+use crate::storage::retry::{self, RetryPolicy};
+use crate::testing::faults::FaultyFile;
 
 /// Disk-backed feature source over one `.sxb` file.
 #[derive(Debug)]
 pub struct DiskSource {
-    file: File,
+    file: FaultyFile,
+    retry: RetryPolicy,
     rows: usize,
     cols: usize,
     x_base: u64,
@@ -27,6 +36,8 @@ pub struct DiskSource {
     pub bytes_read: u64,
     /// Read syscalls issued (lifetime) — the real-IO analogue of "seeks".
     pub read_calls: u64,
+    /// Transient read faults absorbed by the retry layer (lifetime).
+    pub retries: u64,
 }
 
 impl DiskSource {
@@ -35,15 +46,20 @@ impl DiskSource {
     /// arithmetic) and loading labels. Every corruption mode — bad magic,
     /// truncated header, lying dims, truncated body — yields a typed
     /// [`Error::Corrupt`] carrying the byte offset where the inconsistency
-    /// was detected.
+    /// was detected. A trailing `"SXK1"` checksum footer (appended by
+    /// [`crate::data::dense::DenseDataset::save`]) is accepted and skipped.
     pub fn open(path: impl AsRef<Path>) -> Result<Self> {
         let pstr = path.as_ref().display().to_string();
         let corrupt = |offset: u64, msg: String| Error::Corrupt { path: pstr.clone(), offset, msg };
-        let mut file = File::open(path.as_ref())?;
+        let file = File::open(path.as_ref())?;
         let file_len = file.metadata()?.len();
+        if file_len < HEADER_BYTES {
+            return Err(corrupt(0, format!("file shorter than the 24-byte header ({file_len})")));
+        }
+        let mut file = FaultyFile::from_env(file)?;
+        let policy = RetryPolicy::default();
         let mut hdr = [0u8; 24];
-        file.read_exact(&mut hdr)
-            .map_err(|e| corrupt(0, format!("file shorter than the 24-byte header: {e}")))?;
+        retry::read_exact_at(&mut file, 0, &mut hdr, &policy, 0, ".sxb header read")?;
         if &hdr[0..4] != b"SXB1" {
             return Err(corrupt(0, format!("bad .sxb magic {:?}", &hdr[0..4])));
         }
@@ -53,25 +69,24 @@ impl DiskSource {
             return Err(corrupt(8, format!("bad .sxb dims {rows64} x {cols64}")));
         }
         // validate the claimed geometry against the real file length BEFORE
-        // allocating anything — a lying header must fail typed, never OOM
-        let expected = (|| {
+        // allocating anything — a lying header must fail typed, never OOM;
+        // the file may end at the payload or carry a checksum footer
+        let payload_end = (|| {
             let labels = 4u64.checked_mul(rows64)?;
             let feats = 4u64.checked_mul(rows64.checked_mul(cols64)?)?;
             HEADER_BYTES.checked_add(labels)?.checked_add(feats)
-        })();
-        if expected != Some(file_len) {
-            return Err(corrupt(
-                file_len.min(expected.unwrap_or(u64::MAX)),
-                format!(
-                    ".sxb length mismatch: header {rows64} x {cols64} expects \
-                     {expected:?} bytes, file has {file_len}"
-                ),
-            ));
-        }
+        })()
+        .ok_or_else(|| {
+            corrupt(
+                file_len,
+                format!(".sxb length mismatch: header {rows64} x {cols64} overflows u64"),
+            )
+        })?;
+        checksum::footer_present(file_len, payload_end, &pstr)?;
         let rows = rows64 as usize;
         let cols = cols64 as usize;
         let mut yraw = vec![0u8; rows * 4];
-        file.read_exact(&mut yraw)
+        retry::read_exact_at(&mut file, HEADER_BYTES, &mut yraw, &policy, HEADER_BYTES, "label block read")
             .map_err(|e| corrupt(HEADER_BYTES, format!("truncated label block: {e}")))?;
         let y = yraw
             .chunks_exact(4)
@@ -79,12 +94,14 @@ impl DiskSource {
             .collect();
         Ok(DiskSource {
             file,
+            retry: policy,
             rows,
             cols,
             x_base: HEADER_BYTES + rows as u64 * 4,
             y,
             bytes_read: 0,
             read_calls: 0,
+            retries: 0,
         })
     }
 
@@ -101,6 +118,19 @@ impl DiskSource {
     /// Resident labels.
     pub fn labels(&self) -> &[f32] {
         &self.y
+    }
+
+    /// Attach (or clear) a fault-injection schedule on the live handle —
+    /// the chaos tests' way to exercise the retry path without touching
+    /// the process environment.
+    pub fn set_fault_spec(&mut self, spec: Option<crate::testing::faults::FaultSpec>) {
+        self.file.set_spec(spec);
+    }
+
+    /// Override the retry policy (config threading; fault-heavy tests
+    /// raise the attempt budget so injected storms always drain).
+    pub fn set_retry_policy(&mut self, policy: RetryPolicy) {
+        self.retry = policy;
     }
 
     /// Read the selected feature rows into `x_out` (cleared first) and the
@@ -126,9 +156,16 @@ impl DiskSource {
                 }
                 let nrows = end - start;
                 let mut raw = vec![0u8; nrows * row_bytes];
-                self.file
-                    .seek(SeekFrom::Start(self.x_base + (*start * row_bytes) as u64))?;
-                self.file.read_exact(&mut raw)?;
+                let offset = self.x_base + (*start * row_bytes) as u64;
+                let out = retry::read_exact_at(
+                    &mut self.file,
+                    offset,
+                    &mut raw,
+                    &self.retry,
+                    offset,
+                    "contiguous batch read",
+                )?;
+                self.retries += out.retries as u64;
                 self.read_calls += 1;
                 self.bytes_read += raw.len() as u64;
                 push_f32s(&raw, x_out);
@@ -141,9 +178,16 @@ impl DiskSource {
                     if r >= self.rows {
                         return Err(Error::Other(format!("row {r} out of bounds")));
                     }
-                    self.file
-                        .seek(SeekFrom::Start(self.x_base + (r * row_bytes) as u64))?;
-                    self.file.read_exact(&mut raw)?;
+                    let offset = self.x_base + (r * row_bytes) as u64;
+                    let out = retry::read_exact_at(
+                        &mut self.file,
+                        offset,
+                        &mut raw,
+                        &self.retry,
+                        offset,
+                        "scattered row read",
+                    )?;
+                    self.retries += out.retries as u64;
                     self.read_calls += 1;
                     self.bytes_read += raw.len() as u64;
                     push_f32s(&raw, x_out);
@@ -251,7 +295,9 @@ mod tests {
         let valid = std::fs::read(&p).unwrap();
 
         // (1) truncated mid-body: length check fires at the end of the file
-        let truncated = &valid[..valid.len() - 10];
+        // (cut into the payload, past the trailing checksum footer)
+        let payload_end = (HEADER_BYTES + 20 * 4 + 20 * 3 * 4) as usize;
+        let truncated = &valid[..payload_end - 10];
         std::fs::write(&p, truncated).unwrap();
         match DiskSource::open(&p) {
             Err(Error::Corrupt { offset, msg, .. }) => {
@@ -292,6 +338,41 @@ mod tests {
         // restore and confirm the file still opens (the corruption was ours)
         std::fs::write(&p, &valid).unwrap();
         assert!(DiskSource::open(&p).is_ok());
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn transient_faults_are_retried_with_identical_bytes() {
+        use crate::testing::faults::FaultSpec;
+        let (p, ds) = setup();
+        let mut clean = DiskSource::open(&p).unwrap();
+        let mut faulty = DiskSource::open(&p).unwrap();
+        faulty.set_fault_spec(Some(FaultSpec::parse("seed=11,eintr=0.35,short=0.3").unwrap()));
+        // raise the attempt budget so this storm always drains (backoffs in
+        // the low microseconds keep the test fast)
+        faulty.set_retry_policy(RetryPolicy {
+            max_attempts: 64,
+            base_backoff_us: 1,
+            max_backoff_us: 4,
+            op_timeout_ms: 30_000,
+        });
+        let sels = [
+            RowSelection::Contiguous { start: 0, end: 20 },
+            RowSelection::Scattered(vec![19, 0, 7, 7, 3]),
+        ];
+        let (mut xa, mut ya) = (Vec::new(), Vec::new());
+        let (mut xb, mut yb) = (Vec::new(), Vec::new());
+        for _ in 0..3 {
+            for sel in &sels {
+                clean.read_selection(sel, &mut xa, &mut ya).unwrap();
+                faulty.read_selection(sel, &mut xb, &mut yb).unwrap();
+                assert_eq!(xa, xb, "retried reads must deliver identical bytes");
+                assert_eq!(ya, yb);
+            }
+        }
+        assert_eq!(clean.retries, 0);
+        assert!(faulty.retries > 0, "the schedule injects transient faults");
+        assert_eq!(&xb[xb.len() - 3..], ds.row(3));
         std::fs::remove_file(p).ok();
     }
 }

@@ -1,0 +1,298 @@
+//! Bounded, deterministic retry around every raw storage read.
+//!
+//! This module is the **only** place in `storage/` allowed to call
+//! `.seek(`/`.read` on a file (samplex-lint rule R7 `io-discipline`):
+//! every byte the page store or the streaming reader pulls off disk goes
+//! through [`read_exact_at`], which
+//!
+//! * restarts the whole positioned read on *transient* errors
+//!   (`Interrupted`, `TimedOut`, `WouldBlock`) and short reads, up to
+//!   [`RetryPolicy::max_attempts`];
+//! * sleeps a **deterministic** exponential backoff between attempts —
+//!   the jitter is `splitmix64(seed ^ attempt)`, not wall-clock or
+//!   thread-id derived, so a fault-injected run schedules the same
+//!   sleeps every time;
+//! * converts "still failing at the deadline" into the typed
+//!   [`Error::IoTimeout`] instead of blocking forever;
+//! * reports how many retries it burned so `IoStats::retries` can count
+//!   recovered faults (INVARIANTS.md: *retry-transparency* — a retried
+//!   read returns exactly the bytes a clean first-attempt read would).
+//!
+//! Note `std::io::Read::read_exact` swallows `ErrorKind::Interrupted`
+//! internally — injected EINTRs would vanish before the policy ever saw
+//! them. The attempt loop below therefore drives raw `read_some` calls
+//! itself and classifies every error.
+
+use std::time::{Duration, Instant};
+
+use crate::error::{Error, Result};
+use crate::rng::splitmix64;
+use crate::testing::faults::FaultyFile;
+
+/// Retry/backoff/timeout knobs for one storage handle. Construction-time
+/// immutable: the page store copies it once and never locks to read it.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RetryPolicy {
+    /// Total attempts per operation (first try included). Minimum 1.
+    pub max_attempts: u32,
+    /// Backoff before the second attempt, microseconds; doubles per retry.
+    pub base_backoff_us: u64,
+    /// Ceiling on a single backoff sleep, microseconds.
+    pub max_backoff_us: u64,
+    /// Per-operation deadline, milliseconds; 0 disables the watchdog.
+    pub op_timeout_ms: u64,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        RetryPolicy {
+            max_attempts: 4,
+            base_backoff_us: 50,
+            max_backoff_us: 5_000,
+            op_timeout_ms: 30_000,
+        }
+    }
+}
+
+impl RetryPolicy {
+    /// Backoff before attempt `attempt + 1`, where `attempt >= 1` is the
+    /// attempt that just failed. Pure function of `(policy, seed,
+    /// attempt)`: exponential base plus a small seeded jitter so two
+    /// handles hammering the same device desynchronize, yet identically
+    /// seeded runs sleep identically.
+    pub fn backoff_us(&self, attempt: u32, seed: u64) -> u64 {
+        let exp = self
+            .base_backoff_us
+            .saturating_mul(1u64 << (attempt - 1).min(32))
+            .min(self.max_backoff_us);
+        let jitter_span = (self.base_backoff_us / 4).max(1);
+        let jitter = splitmix64(seed ^ attempt as u64) % jitter_span;
+        (exp + jitter).min(self.max_backoff_us)
+    }
+
+    /// The full backoff schedule a maximally unlucky operation would
+    /// sleep (one entry per retry). Used by the determinism property
+    /// tests and handy for logging.
+    pub fn backoff_schedule(&self, seed: u64) -> Vec<u64> {
+        (1..self.max_attempts).map(|a| self.backoff_us(a, seed)).collect()
+    }
+
+    /// The watchdog deadline, if any.
+    fn deadline(&self) -> Option<Duration> {
+        (self.op_timeout_ms > 0).then(|| Duration::from_millis(self.op_timeout_ms))
+    }
+}
+
+/// What a successful retried read reports back.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ReadOutcome {
+    /// Attempts beyond the first that were needed (0 = clean read).
+    pub retries: u32,
+}
+
+/// Is this error kind worth retrying? Short reads are handled separately
+/// (they surface as `UnexpectedEof` only when the file really ends).
+fn is_transient(kind: std::io::ErrorKind) -> bool {
+    matches!(
+        kind,
+        std::io::ErrorKind::Interrupted
+            | std::io::ErrorKind::TimedOut
+            | std::io::ErrorKind::WouldBlock
+    )
+}
+
+/// One full attempt: position at `offset`, fill `buf` completely. A read
+/// that delivers fewer bytes than asked simply loops (the next `read_some`
+/// continues where the file position is); `Ok(0)` before the buffer is
+/// full means the file genuinely ends → `UnexpectedEof` (permanent).
+/// Transient errors abort the attempt so the caller restarts it from the
+/// original offset.
+fn try_read_exact(f: &mut FaultyFile, offset: u64, buf: &mut [u8]) -> std::io::Result<()> {
+    f.seek_to(offset)?;
+    let mut filled = 0usize;
+    while filled < buf.len() {
+        match f.read_some(&mut buf[filled..]) {
+            Ok(0) => {
+                return Err(std::io::Error::new(
+                    std::io::ErrorKind::UnexpectedEof,
+                    format!("file ended after {filled} of {} bytes", buf.len()),
+                ));
+            }
+            Ok(n) => filled += n,
+            Err(e) => return Err(e),
+        }
+    }
+    Ok(())
+}
+
+/// Read exactly `buf.len()` bytes at absolute `offset`, retrying
+/// transient failures under `policy`. `op` names the operation for the
+/// timeout error; `seed` keys the backoff jitter.
+///
+/// Errors: transient faults that outlive `max_attempts` come back as
+/// `Error::Io` (the last underlying error); a blown deadline is
+/// `Error::IoTimeout`; permanent errors (including `UnexpectedEof` on a
+/// truncated file) pass through as `Error::Io` immediately so the caller
+/// can map them to its own typed corruption error.
+pub fn read_exact_at(
+    f: &mut FaultyFile,
+    offset: u64,
+    buf: &mut [u8],
+    policy: &RetryPolicy,
+    seed: u64,
+    op: &str,
+) -> Result<ReadOutcome> {
+    let start = Instant::now();
+    let deadline = policy.deadline();
+    let max_attempts = policy.max_attempts.max(1);
+    let mut attempt = 1u32;
+    loop {
+        match try_read_exact(f, offset, buf) {
+            Ok(()) => return Ok(ReadOutcome { retries: attempt - 1 }),
+            Err(e) if is_transient(e.kind()) => {
+                if let Some(d) = deadline {
+                    let waited = start.elapsed();
+                    if waited >= d {
+                        return Err(Error::IoTimeout {
+                            op: format!("{op} at byte {offset}"),
+                            waited_s: waited.as_secs_f64(),
+                        });
+                    }
+                }
+                if attempt >= max_attempts {
+                    return Err(Error::Io(std::io::Error::new(
+                        e.kind(),
+                        format!("{op} at byte {offset}: still failing after {max_attempts} attempts: {e}"),
+                    )));
+                }
+                std::thread::sleep(Duration::from_micros(policy.backoff_us(attempt, seed)));
+                attempt += 1;
+            }
+            Err(e) => return Err(Error::Io(e)),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::faults::FaultSpec;
+    use std::io::Write as _;
+
+    fn temp_file(bytes: &[u8]) -> (String, std::fs::File) {
+        use std::sync::atomic::{AtomicU32, Ordering};
+        static UNIQ: AtomicU32 = AtomicU32::new(0);
+        let path = std::env::temp_dir().join(format!(
+            "samplex_retry_{}_{}.bin",
+            std::process::id(),
+            UNIQ.fetch_add(1, Ordering::Relaxed)
+        ));
+        let path = path.to_string_lossy().into_owned();
+        std::fs::File::create(&path).unwrap().write_all(bytes).unwrap();
+        (path.clone(), std::fs::File::open(&path).unwrap())
+    }
+
+    // Fast policy so fault-heavy tests don't sleep for real.
+    fn quick() -> RetryPolicy {
+        RetryPolicy { max_attempts: 20, base_backoff_us: 1, max_backoff_us: 4, op_timeout_ms: 30_000 }
+    }
+
+    #[test]
+    fn clean_read_has_zero_retries() {
+        let data: Vec<u8> = (0..64).collect();
+        let (_p, f) = temp_file(&data);
+        let mut ff = FaultyFile::passthrough(f);
+        let mut buf = [0u8; 16];
+        let out = read_exact_at(&mut ff, 8, &mut buf, &RetryPolicy::default(), 1, "test read").unwrap();
+        assert_eq!(out.retries, 0);
+        assert_eq!(&buf[..], &data[8..24]);
+    }
+
+    #[test]
+    fn transient_faults_are_absorbed_and_counted() {
+        let data: Vec<u8> = (0..256).map(|i| i as u8).collect();
+        let (_p, f) = temp_file(&data);
+        // heavy but not certain faults: with 20 attempts every read succeeds
+        let spec = FaultSpec::parse("seed=3,eintr=0.4,short=0.3").unwrap();
+        let mut ff = FaultyFile::with_spec(f, Some(spec));
+        let mut total_retries = 0;
+        for k in 0..16u64 {
+            let mut buf = [0u8; 16];
+            let out = read_exact_at(&mut ff, k * 16, &mut buf, &quick(), k, "test read").unwrap();
+            assert_eq!(&buf[..], &data[(k * 16) as usize..(k * 16 + 16) as usize],
+                "retried read must return the clean bytes");
+            total_retries += out.retries;
+        }
+        assert!(total_retries > 0, "the schedule should have injected something");
+    }
+
+    #[test]
+    fn exhausted_attempts_return_io_error() {
+        let (_p, f) = temp_file(&[0u8; 32]);
+        let spec = FaultSpec { eintr: 1.0, ..FaultSpec::default() };
+        let mut ff = FaultyFile::with_spec(f, Some(spec));
+        let mut buf = [0u8; 8];
+        let policy = RetryPolicy { max_attempts: 3, base_backoff_us: 1, max_backoff_us: 2, op_timeout_ms: 0 };
+        match read_exact_at(&mut ff, 0, &mut buf, &policy, 0, "doomed read") {
+            Err(Error::Io(e)) => {
+                assert_eq!(e.kind(), std::io::ErrorKind::Interrupted);
+                assert!(e.to_string().contains("after 3 attempts"), "{e}");
+            }
+            other => panic!("expected Io error, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn deadline_surfaces_as_typed_timeout() {
+        let (_p, f) = temp_file(&[0u8; 32]);
+        let spec = FaultSpec { eintr: 1.0, ..FaultSpec::default() };
+        let mut ff = FaultyFile::with_spec(f, Some(spec));
+        let mut buf = [0u8; 8];
+        // unbounded attempts, 1 ms deadline, 1 ms sleeps → timeout wins
+        let policy = RetryPolicy {
+            max_attempts: u32::MAX,
+            base_backoff_us: 1_000,
+            max_backoff_us: 1_000,
+            op_timeout_ms: 1,
+        };
+        match read_exact_at(&mut ff, 0, &mut buf, &policy, 0, "hung read") {
+            Err(Error::IoTimeout { op, waited_s }) => {
+                assert!(op.contains("hung read"), "{op}");
+                assert!(waited_s >= 0.001, "waited_s={waited_s}");
+            }
+            other => panic!("expected IoTimeout, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn truncated_file_is_permanent_unexpected_eof() {
+        let (_p, f) = temp_file(&[1, 2, 3, 4]);
+        let mut ff = FaultyFile::passthrough(f);
+        let mut buf = [0u8; 8];
+        match read_exact_at(&mut ff, 0, &mut buf, &quick(), 0, "tail read") {
+            Err(Error::Io(e)) => assert_eq!(e.kind(), std::io::ErrorKind::UnexpectedEof),
+            other => panic!("expected Io(UnexpectedEof), got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn backoff_schedule_is_deterministic_monotone_and_capped() {
+        let policy = RetryPolicy { max_attempts: 6, base_backoff_us: 50, max_backoff_us: 5_000, op_timeout_ms: 0 };
+        for seed in [0u64, 1, 42, u64::MAX] {
+            let a = policy.backoff_schedule(seed);
+            let b = policy.backoff_schedule(seed);
+            assert_eq!(a, b, "seed {seed}: schedule must be pure");
+            assert_eq!(a.len(), 5);
+            for (i, &us) in a.iter().enumerate() {
+                assert!(us <= policy.max_backoff_us, "attempt {i}: {us}us over cap");
+                let exp = (policy.base_backoff_us << i).min(policy.max_backoff_us);
+                assert!(us >= exp, "attempt {i}: {us}us under exponential floor {exp}");
+            }
+        }
+        assert_ne!(policy.backoff_schedule(1), policy.backoff_schedule(2), "jitter should vary by seed");
+        // huge attempt counts must not overflow the shift
+        let wide = RetryPolicy { max_attempts: 64, ..policy };
+        let sched = wide.backoff_schedule(9);
+        assert!(sched.iter().all(|&us| us <= wide.max_backoff_us));
+    }
+}

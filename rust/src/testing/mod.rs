@@ -1,0 +1,10 @@
+//! Test-oriented infrastructure that ships in the library proper.
+//!
+//! The fault-injection layer ([`faults`]) lives here rather than under
+//! `#[cfg(test)]` because the chaos suite (`tests/faults_e2e.rs`), the CI
+//! `chaos` job and ad-hoc CLI runs all enable it from *outside* the crate
+//! via the `SAMPLEX_FAULTS` environment variable. It is off by default:
+//! with no spec configured, every wrapper is a passthrough and the hot
+//! path pays a single `Option` check per I/O operation.
+
+pub mod faults;

@@ -1,0 +1,401 @@
+//! Crash-consistent epoch-boundary checkpoints (`.ckpt`).
+//!
+//! The trainer writes one checkpoint per epoch boundary: solver state
+//! (via [`crate::solvers::Solver::export_state`]) plus the convergence
+//! trace recorded so far. Two properties make resume safe:
+//!
+//! * **Atomicity** — the image is written to `<name>.ckpt.tmp`, synced,
+//!   then renamed over `<name>.ckpt`. A kill at any instant leaves the
+//!   final name pointing at either the previous or the new fully-written
+//!   image, never a torn one.
+//! * **Integrity** — the image ends in a CRC32 of everything before it
+//!   (the same polynomial as the dataset footers). A torn or bit-flipped
+//!   file decodes to a typed [`Error::Corrupt`], never a wrong resume.
+//!
+//! A fingerprint over (dataset, solver, sampling, step, batch, seed, reg,
+//! geometry) binds each checkpoint to the exact arm that wrote it, so
+//! resuming under a different configuration is a typed `Error::Config`
+//! instead of a silently divergent trajectory. Epoch schedules are pure
+//! functions of `(seed, epoch)`, which is what makes the resumed
+//! trajectory bit-identical to an uninterrupted run.
+//!
+//! ## Layout (all little-endian)
+//!
+//! ```text
+//! "SXP1" | version u32 | epochs_done u64 | seed u64 | fingerprint u64
+//!        | solver_tag u32 | n_vecs u32 | trace_len u32
+//!        | trace_len × (epoch u64, train_time_s f64, objective f64)
+//!        | n_vecs   × (len u64, len × f32)
+//!        | crc32 u32  (over every preceding byte)
+//! ```
+
+use std::path::{Path, PathBuf};
+
+use crate::config::ExperimentConfig;
+use crate::error::{Error, Result};
+use crate::metrics::Trace;
+use crate::solvers::SolverKind;
+use crate::storage::checksum::crc32;
+
+/// Magic prefix of a checkpoint image.
+pub const MAGIC: [u8; 4] = *b"SXP1";
+
+/// Current image version.
+pub const VERSION: u32 = 1;
+
+/// Fixed-size prefix: magic + version + epochs + seed + fingerprint +
+/// solver tag + vector count + trace length.
+const HEADER_BYTES: usize = 4 + 4 + 8 + 8 + 8 + 4 + 4 + 4;
+
+/// One resumable training state at an epoch boundary.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Checkpoint {
+    /// Epochs fully completed when this state was captured.
+    pub epochs_done: u64,
+    /// The arm's master seed (informational; the fingerprint covers it).
+    pub seed: u64,
+    /// Arm fingerprint from [`fingerprint`]; validated before resume.
+    pub fingerprint: u64,
+    /// Solver discriminant from [`solver_tag`]; validated before resume.
+    pub solver_tag: u32,
+    /// Convergence trace recorded so far: (epoch, train_time_s, objective).
+    pub trace: Vec<(u64, f64, f64)>,
+    /// Solver state vectors, iterate first (see `Solver::export_state`).
+    pub vecs: Vec<Vec<f32>>,
+}
+
+impl Checkpoint {
+    /// Rebuild the trainer's [`Trace`] from the recorded points.
+    pub fn to_trace(&self) -> Trace {
+        let mut t = Trace::default();
+        for &(epoch, time_s, obj) in &self.trace {
+            t.push(epoch as usize, time_s, obj);
+        }
+        t
+    }
+
+    /// Serialize to the on-disk image (including the trailing CRC).
+    pub fn encode(&self) -> Vec<u8> {
+        let vec_bytes: usize = self.vecs.iter().map(|v| 8 + 4 * v.len()).sum();
+        let mut out = Vec::with_capacity(HEADER_BYTES + 24 * self.trace.len() + vec_bytes + 4);
+        out.extend_from_slice(&MAGIC);
+        out.extend_from_slice(&VERSION.to_le_bytes());
+        out.extend_from_slice(&self.epochs_done.to_le_bytes());
+        out.extend_from_slice(&self.seed.to_le_bytes());
+        out.extend_from_slice(&self.fingerprint.to_le_bytes());
+        out.extend_from_slice(&self.solver_tag.to_le_bytes());
+        out.extend_from_slice(&(self.vecs.len() as u32).to_le_bytes());
+        out.extend_from_slice(&(self.trace.len() as u32).to_le_bytes());
+        for &(epoch, time_s, obj) in &self.trace {
+            out.extend_from_slice(&epoch.to_le_bytes());
+            out.extend_from_slice(&time_s.to_bits().to_le_bytes());
+            out.extend_from_slice(&obj.to_bits().to_le_bytes());
+        }
+        for v in &self.vecs {
+            out.extend_from_slice(&(v.len() as u64).to_le_bytes());
+            for &x in v {
+                out.extend_from_slice(&x.to_le_bytes());
+            }
+        }
+        out.extend_from_slice(&crc32(&out).to_le_bytes());
+        out
+    }
+
+    /// Parse an on-disk image. Any inconsistency — bad magic, unknown
+    /// version, CRC mismatch, truncation, trailing garbage — is a typed
+    /// [`Error::Corrupt`] at the offending byte offset.
+    pub fn decode(bytes: &[u8], path: &str) -> Result<Self> {
+        let corrupt = |offset: usize, msg: String| Error::Corrupt {
+            path: path.to_string(),
+            offset: offset as u64,
+            msg,
+        };
+        if bytes.len() < HEADER_BYTES + 4 {
+            return Err(corrupt(
+                bytes.len(),
+                format!("checkpoint of {} bytes is shorter than the fixed header", bytes.len()),
+            ));
+        }
+        if bytes[..4] != MAGIC {
+            return Err(corrupt(0, "bad checkpoint magic (expected SXP1)".into()));
+        }
+        let u32_at = |o: usize| u32::from_le_bytes(bytes[o..o + 4].try_into().expect("4 bytes"));
+        let u64_at = |o: usize| u64::from_le_bytes(bytes[o..o + 8].try_into().expect("8 bytes"));
+        let version = u32_at(4);
+        if version != VERSION {
+            return Err(corrupt(4, format!("unsupported checkpoint version {version}")));
+        }
+        // integrity gate before any field is trusted: flips anywhere in
+        // the image surface here
+        let body_end = bytes.len() - 4;
+        let stored = u32_at(body_end);
+        let actual = crc32(&bytes[..body_end]);
+        if stored != actual {
+            return Err(corrupt(
+                body_end,
+                format!("checkpoint checksum mismatch (stored {stored:#010x}, computed {actual:#010x})"),
+            ));
+        }
+        let epochs_done = u64_at(8);
+        let seed = u64_at(16);
+        let fingerprint = u64_at(24);
+        let solver_tag = u32_at(32);
+        let n_vecs = u32_at(36) as usize;
+        let trace_len = u32_at(40) as usize;
+        let mut pos = HEADER_BYTES;
+        let mut need = |n: usize, what: &str| -> Result<usize> {
+            if body_end - pos < n {
+                return Err(corrupt(pos, format!("truncated checkpoint: {what} needs {n} bytes")));
+            }
+            let at = pos;
+            pos += n;
+            Ok(at)
+        };
+        let mut trace = Vec::with_capacity(trace_len);
+        for _ in 0..trace_len {
+            let at = need(24, "trace point")?;
+            trace.push((
+                u64_at(at),
+                f64::from_bits(u64_at(at + 8)),
+                f64::from_bits(u64_at(at + 16)),
+            ));
+        }
+        let mut vecs = Vec::with_capacity(n_vecs);
+        for _ in 0..n_vecs {
+            let at = need(8, "state vector length")?;
+            let len = u64_at(at) as usize;
+            let at = need(len.checked_mul(4).ok_or_else(|| {
+                corrupt(at, format!("state vector length {len} overflows the image"))
+            })?, "state vector payload")?;
+            let v: Vec<f32> = bytes[at..at + 4 * len]
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes(c.try_into().expect("4 bytes")))
+                .collect();
+            vecs.push(v);
+        }
+        if pos != body_end {
+            return Err(corrupt(
+                pos,
+                format!("{} trailing bytes after the last state vector", body_end - pos),
+            ));
+        }
+        Ok(Checkpoint { epochs_done, seed, fingerprint, solver_tag, trace, vecs })
+    }
+}
+
+/// Trace points in the checkpoint's wire representation.
+pub fn trace_entries(t: &Trace) -> Vec<(u64, f64, f64)> {
+    t.points.iter().map(|p| (p.epoch as u64, p.train_time_s, p.objective)).collect()
+}
+
+/// Stable discriminant for the solver that wrote a checkpoint.
+pub fn solver_tag(kind: SolverKind) -> u32 {
+    match kind {
+        SolverKind::Sag => 1,
+        SolverKind::Saga => 2,
+        SolverKind::Svrg => 3,
+        SolverKind::Saag2 => 4,
+        SolverKind::Mbsgd => 5,
+    }
+}
+
+/// FNV-1a hash binding a checkpoint to one experiment arm: dataset,
+/// solver, sampling, step rule, batch size, seed, regularization and
+/// problem geometry. Epoch count is deliberately excluded — resuming with
+/// *more* epochs is the whole point.
+pub fn fingerprint(cfg: &ExperimentConfig, reg_c: f32, rows: usize, cols: usize) -> u64 {
+    let ident = format!(
+        "{}|{}|{}|{}|{}|{}|{:08x}|{}|{}",
+        cfg.dataset,
+        cfg.solver.label(),
+        cfg.sampling.label(),
+        cfg.step.label(),
+        cfg.batch_size,
+        cfg.seed,
+        reg_c.to_bits(),
+        rows,
+        cols
+    );
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in ident.as_bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Refuse to resume from a checkpoint written by a different arm.
+pub fn validate(ck: &Checkpoint, cfg: &ExperimentConfig, fp: u64, tag: u32) -> Result<()> {
+    if ck.fingerprint != fp {
+        return Err(Error::Config(format!(
+            "checkpoint fingerprint {:#018x} does not match this experiment's {:#018x}; \
+             it was written by a different (dataset, solver, sampling, step, batch, seed, reg) \
+             arm — refusing to resume",
+            ck.fingerprint, fp
+        )));
+    }
+    if ck.solver_tag != tag {
+        return Err(Error::Config(format!(
+            "checkpoint solver tag {} does not match this experiment's {tag}",
+            ck.solver_tag
+        )));
+    }
+    if ck.epochs_done as usize > cfg.epochs {
+        return Err(Error::Config(format!(
+            "checkpoint has {} epochs done but the config asks for only {}",
+            ck.epochs_done, cfg.epochs
+        )));
+    }
+    Ok(())
+}
+
+/// `<dir>/<name>.ckpt`, with the arm name sanitized to a safe file stem.
+pub fn checkpoint_path(dir: &Path, name: &str) -> PathBuf {
+    let safe: String = name
+        .chars()
+        .map(|c| if c.is_ascii_alphanumeric() || c == '-' || c == '_' || c == '.' { c } else { '_' })
+        .collect();
+    dir.join(format!("{safe}.ckpt"))
+}
+
+/// Atomically persist `ck` as `<dir>/<name>.ckpt` (temp file + fsync +
+/// rename). Creates `dir` if needed.
+pub fn save(dir: &Path, name: &str, ck: &Checkpoint) -> Result<()> {
+    std::fs::create_dir_all(dir)?;
+    let path = checkpoint_path(dir, name);
+    let tmp = path.with_extension("ckpt.tmp");
+    let bytes = ck.encode();
+    {
+        use std::io::Write;
+        let mut f = std::fs::File::create(&tmp)?;
+        f.write_all(&bytes)?;
+        f.sync_all()?;
+    }
+    std::fs::rename(&tmp, &path)?;
+    Ok(())
+}
+
+/// Load `<dir>/<name>.ckpt` if present. `Ok(None)` when no checkpoint
+/// exists yet (a `--resume` first run); decode errors are typed.
+pub fn load(dir: &Path, name: &str) -> Result<Option<Checkpoint>> {
+    let path = checkpoint_path(dir, name);
+    let bytes = match std::fs::read(&path) {
+        Ok(b) => b,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(None),
+        Err(e) => return Err(e.into()),
+    };
+    Checkpoint::decode(&bytes, &path.display().to_string()).map(Some)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Checkpoint {
+        Checkpoint {
+            epochs_done: 3,
+            seed: 42,
+            fingerprint: 0xDEAD_BEEF_CAFE_F00D,
+            solver_tag: 2,
+            trace: vec![(0, 0.0, 0.6931), (1, 0.25, 0.41), (3, 1.5, f64::MIN_POSITIVE)],
+            vecs: vec![vec![1.0, -2.5, 3.25], vec![], vec![f32::MIN_POSITIVE, 0.0]],
+        }
+    }
+
+    #[test]
+    fn encode_decode_roundtrip_is_bit_exact() {
+        let ck = sample();
+        let bytes = ck.encode();
+        let back = Checkpoint::decode(&bytes, "t.ckpt").unwrap();
+        assert_eq!(ck, back);
+    }
+
+    #[test]
+    fn every_single_bit_flip_is_detected() {
+        let bytes = sample().encode();
+        // flip one bit in each byte region: magic, header, trace, vecs, crc
+        for &at in &[0usize, 9, HEADER_BYTES + 3, bytes.len() - 6, bytes.len() - 1] {
+            let mut bad = bytes.clone();
+            bad[at] ^= 0x40;
+            let err = Checkpoint::decode(&bad, "t.ckpt").unwrap_err();
+            assert!(
+                matches!(err, Error::Corrupt { .. }),
+                "flip at {at}: {err}"
+            );
+        }
+    }
+
+    #[test]
+    fn truncation_and_trailing_garbage_are_typed() {
+        let bytes = sample().encode();
+        for cut in [0, 3, HEADER_BYTES - 1, HEADER_BYTES + 4, bytes.len() - 1] {
+            let err = Checkpoint::decode(&bytes[..cut], "t.ckpt").unwrap_err();
+            assert!(matches!(err, Error::Corrupt { .. }), "cut at {cut}: {err}");
+        }
+        let mut padded = bytes.clone();
+        let crc_at = padded.len() - 4;
+        padded.splice(crc_at..crc_at, [0u8; 8]);
+        // re-seal so only the structure (not the CRC) is wrong
+        let body_end = padded.len() - 4;
+        let crc = crate::storage::checksum::crc32(&padded[..body_end]).to_le_bytes();
+        padded[body_end..].copy_from_slice(&crc);
+        let err = Checkpoint::decode(&padded, "t.ckpt").unwrap_err();
+        assert!(matches!(err, Error::Corrupt { .. }), "{err}");
+        assert!(err.to_string().contains("trailing"), "{err}");
+    }
+
+    #[test]
+    fn save_load_is_atomic_and_missing_is_none() {
+        let dir = std::env::temp_dir().join(format!("sx_ckpt_{}", std::process::id()));
+        assert!(load(&dir, "arm").unwrap().is_none(), "missing dir reads as None");
+        let ck = sample();
+        save(&dir, "arm", &ck).unwrap();
+        assert_eq!(load(&dir, "arm").unwrap().unwrap(), ck);
+        assert!(
+            !checkpoint_path(&dir, "arm").with_extension("ckpt.tmp").exists(),
+            "temp image must be renamed away"
+        );
+        // names with path-hostile characters are sanitized, not traversed
+        save(&dir, "a/b c", &ck).unwrap();
+        assert!(checkpoint_path(&dir, "a/b c").ends_with("a_b_c.ckpt"));
+        assert_eq!(load(&dir, "a/b c").unwrap().unwrap(), ck);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn validate_rejects_foreign_checkpoints() {
+        let cfg = ExperimentConfig::default();
+        let mut ck = sample();
+        let fp = fingerprint(&cfg, 1e-4, 100, 8);
+        ck.fingerprint = fp;
+        ck.solver_tag = solver_tag(cfg.solver);
+        ck.epochs_done = 3;
+        validate(&ck, &cfg, fp, solver_tag(cfg.solver)).unwrap();
+        assert!(validate(&ck, &cfg, fp ^ 1, solver_tag(cfg.solver)).is_err());
+        let mut wrong_solver = ck.clone();
+        wrong_solver.solver_tag = 1;
+        assert!(validate(&wrong_solver, &cfg, fp, solver_tag(cfg.solver)).is_err());
+        let mut too_far = ck.clone();
+        too_far.epochs_done = cfg.epochs as u64 + 1;
+        assert!(validate(&too_far, &cfg, fp, solver_tag(cfg.solver)).is_err());
+    }
+
+    #[test]
+    fn fingerprint_separates_arms() {
+        let base = ExperimentConfig::default();
+        let fp0 = fingerprint(&base, 1e-4, 100, 8);
+        assert_eq!(fp0, fingerprint(&base, 1e-4, 100, 8), "deterministic");
+        let mut other = base.clone();
+        other.seed += 1;
+        assert_ne!(fp0, fingerprint(&other, 1e-4, 100, 8));
+        let mut other = base.clone();
+        other.solver = SolverKind::Sag;
+        assert_ne!(fp0, fingerprint(&other, 1e-4, 100, 8));
+        assert_ne!(fp0, fingerprint(&base, 1e-3, 100, 8));
+        assert_ne!(fp0, fingerprint(&base, 1e-4, 101, 8));
+        // epochs are excluded by design: resuming with more must match
+        let mut longer = base.clone();
+        longer.epochs += 10;
+        assert_eq!(fp0, fingerprint(&longer, 1e-4, 100, 8));
+    }
+}

@@ -15,6 +15,7 @@
 //! zero feature bytes copied, and SVRG's full-gradient sweep streams
 //! through the same reader.
 
+pub mod checkpoint;
 pub mod optimum;
 pub mod parallel;
 
@@ -177,9 +178,33 @@ pub fn run_experiment_with_backend(
     // paged stores are shared across arms; report this arm's IO as a delta
     let io_base = ds.io_stats();
 
-    // initial objective (outside the clock)
+    // crash-consistent resume: restore solver + trace at the last epoch
+    // boundary a checkpoint captured. Epoch schedules are pure (seed,
+    // epoch) functions, so a resumed run replays the exact batches an
+    // uninterrupted run would see from that boundary on.
+    let ckpt_dir = cfg.checkpoint_dir.as_ref().map(std::path::PathBuf::from);
+    let solver_tag = checkpoint::solver_tag(cfg.solver);
+    let fp = checkpoint::fingerprint(cfg, c, rows, n);
+    let mut start_epoch = 0usize;
+    let mut time_base = 0.0f64;
+    if cfg.resume {
+        if let Some(dir) = ckpt_dir.as_deref() {
+            if let Some(ck) = checkpoint::load(dir, &cfg.name)? {
+                checkpoint::validate(&ck, cfg, fp, solver_tag)?;
+                solver.import_state(&ck.vecs)?;
+                start_epoch = ck.epochs_done as usize;
+                trace = ck.to_trace();
+                time_base = trace.points.last().map_or(0.0, |p| p.train_time_s);
+            }
+        }
+    }
+
+    // initial objective (outside the clock); a resumed trace already
+    // starts at its own epoch-0 point
     let obj0 = be.full_objective(solver.w(), ds, c)?;
-    trace.push(0, 0.0, obj0);
+    if start_epoch == 0 {
+        trace.push(0, 0.0, obj0);
+    }
 
     let wall = Stopwatch::start();
 
@@ -212,7 +237,7 @@ pub fn run_experiment_with_backend(
         }
     }
 
-    for epoch in 0..cfg.epochs {
+    for epoch in start_epoch..cfg.epochs {
         solver.epoch_start(epoch);
 
         // SVRG: full gradient at the snapshot — a sequential, charged sweep
@@ -295,7 +320,9 @@ pub fn run_experiment_with_backend(
                     time.bytes_copied += ds.payload_bytes(&sel);
                 }
                 if let Some((ra, seq)) = sync_ra.as_mut() {
-                    ra.wait_ready(*seq);
+                    // Degraded just means the batch self-serves through
+                    // demand paging; only a typed I/O error aborts
+                    ra.wait_ready(*seq)?;
                     *seq += 1;
                 }
                 let mut sw = Stopwatch::start();
@@ -322,7 +349,22 @@ pub fn run_experiment_with_backend(
         if last || (cfg.record_every > 0 && (epoch + 1) % cfg.record_every == 0) {
             solver.sync_w();
             let obj = be.full_objective(solver.w(), ds, c)?;
-            trace.push(epoch + 1, time.training_time_s(), obj);
+            trace.push(epoch + 1, time_base + time.training_time_s(), obj);
+        }
+
+        // epoch boundary: persist atomically (outside the clock) so a
+        // kill at any instant leaves either the previous or the new
+        // fully-checksummed image
+        if let Some(dir) = ckpt_dir.as_deref() {
+            let ck = checkpoint::Checkpoint {
+                epochs_done: (epoch + 1) as u64,
+                seed: cfg.seed,
+                fingerprint: fp,
+                solver_tag,
+                trace: checkpoint::trace_entries(&trace),
+                vecs: solver.export_state(),
+            };
+            checkpoint::save(dir, &cfg.name, &ck)?;
         }
     }
     solver.sync_w();
@@ -692,6 +734,48 @@ mod tests {
         cfg.backend = crate::config::BackendKind::Pjrt;
         assert!(run_experiment(&cfg, &paged).is_err(), "device backends must be rejected");
         std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn checkpoint_resume_is_bit_identical() {
+        let ds = tiny_ds();
+        let dir = std::env::temp_dir().join(format!("sx_resume_{}", std::process::id()));
+        for solver in [SolverKind::Saga, SolverKind::Mbsgd, SolverKind::Svrg] {
+            let plain = run_experiment(&quick_cfg(solver, SamplingKind::Ss), &ds).unwrap();
+            // checkpointing on, never killed: the trajectory is untouched
+            let mut cfg = quick_cfg(solver, SamplingKind::Ss);
+            cfg.name = format!("resume-{}", solver.label());
+            cfg.checkpoint_dir = Some(dir.display().to_string());
+            let full = run_experiment(&cfg, &ds).unwrap();
+            assert_eq!(plain.w, full.w, "{}", solver.label());
+            // "kill" after 2 of 4 epochs, then resume to the end
+            let mut head = cfg.clone();
+            head.epochs = 2;
+            run_experiment(&head, &ds).unwrap();
+            let mut tail = cfg.clone();
+            tail.resume = true;
+            let resumed = run_experiment(&tail, &ds).unwrap();
+            assert_eq!(full.w, resumed.w, "{}", solver.label());
+            assert_eq!(
+                full.final_objective.to_bits(),
+                resumed.final_objective.to_bits(),
+                "{}",
+                solver.label()
+            );
+            assert_eq!(resumed.trace.points.len(), full.trace.points.len());
+            // resuming an already-finished arm is a no-op with the same w
+            let again = run_experiment(&tail, &ds).unwrap();
+            assert_eq!(resumed.w, again.w, "{}", solver.label());
+            // a different arm must refuse the checkpoint, not diverge
+            let mut wrong = tail.clone();
+            wrong.seed += 1;
+            assert!(
+                matches!(run_experiment(&wrong, &ds), Err(crate::error::Error::Config(_))),
+                "{}: foreign checkpoint must be rejected",
+                solver.label()
+            );
+        }
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

@@ -1,0 +1,273 @@
+//! Chaos suite: the fault-injected, self-healing data plane must be
+//! **invisible** to training. Every test here compares solver iterates
+//! bit-for-bit against a fault-free reference:
+//!
+//! * transient read faults (EINTR / short reads / detected corruption)
+//!   are absorbed by the retry + checksum layer — all five solvers
+//!   finish with bit-identical `w` and objective;
+//! * killing the process at **every** epoch boundary and resuming from
+//!   the crash-consistent checkpoint reproduces the uninterrupted
+//!   trajectory exactly;
+//! * a readahead thread that dies mid-run degrades the experiment to
+//!   demand paging (`IoStats::degraded`) without changing a byte;
+//! * *persistent* corruption surfaces as the typed [`Error::Corrupt`] —
+//!   never a panic, never a silently bad batch.
+//!
+//! Fault schedules are injected through explicit [`StoreOptions`] (not
+//! the `SAMPLEX_FAULTS` env var): tests in one binary run in parallel,
+//! and ambient env state would leak between them.
+//!
+//! The CI chaos job runs exactly this file:
+//! `cargo test --release --test faults_e2e`.
+
+use samplex::config::ExperimentConfig;
+use samplex::data::synth::{self, FeatureDist, SynthSpec};
+use samplex::data::{Dataset, PagedDataset};
+use samplex::error::Error;
+use samplex::sampling::SamplingKind;
+use samplex::solvers::SolverKind;
+use samplex::storage::pagestore::StoreOptions;
+use samplex::storage::retry::RetryPolicy;
+use samplex::testing::faults::FaultSpec;
+use samplex::train::run_experiment;
+
+static UNIQ: std::sync::atomic::AtomicUsize = std::sync::atomic::AtomicUsize::new(0);
+
+fn tmp_path(ext: &str) -> std::path::PathBuf {
+    let uniq = UNIQ.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+    std::env::temp_dir().join(format!("faults_e2e_{}_{uniq}.{ext}", std::process::id()))
+}
+
+fn dense_ds(rows: usize, cols: usize, seed: u64) -> Dataset {
+    synth::generate(
+        &SynthSpec {
+            name: "chaos",
+            rows,
+            cols,
+            dist: FeatureDist::Gaussian,
+            flip_prob: 0.05,
+            margin_noise: 0.3,
+            pos_fraction: 0.5,
+        },
+        seed,
+    )
+    .unwrap()
+    .into()
+}
+
+/// A retry policy generous enough that probabilistic fault schedules
+/// cannot exhaust it, with microsecond backoffs so tests don't sleep.
+fn generous_retry() -> RetryPolicy {
+    RetryPolicy { max_attempts: 30, base_backoff_us: 1, max_backoff_us: 4, op_timeout_ms: 30_000 }
+}
+
+/// Save `ds` once and reopen it paged with an injected fault schedule.
+/// `page_bytes` stays a multiple of the checksum chunk (1024), so the
+/// saved `"SXK1"` footer arms per-chunk verification on every fault.
+fn faulty_copy(
+    ds: &Dataset,
+    budget_bytes: u64,
+    spec: Option<FaultSpec>,
+    retry: RetryPolicy,
+) -> (std::path::PathBuf, Dataset) {
+    let p = tmp_path("sxb");
+    ds.save(&p).unwrap();
+    let opts = StoreOptions { retry, faults: spec, ..StoreOptions::default() };
+    let paged: Dataset = PagedDataset::open_with(&p, budget_bytes, 2048, opts).unwrap().into();
+    (p, paged)
+}
+
+fn cfg(solver: SolverKind, batch: usize) -> ExperimentConfig {
+    let mut c = ExperimentConfig::quick("chaos", solver, SamplingKind::Ss, batch);
+    c.epochs = 2;
+    c.reg_c = Some(1e-3);
+    c.record_every = 1;
+    c
+}
+
+/// Tentpole acceptance (transient arm): with EINTR, short reads and
+/// detectable bit-flips injected on every code path, all five solvers
+/// finish **bit-identical** to the fault-free in-core run — and the
+/// store proves it actually recovered something (`IoStats::retries`).
+#[test]
+fn transient_faults_are_invisible_to_all_five_solvers() {
+    let ds = dense_ds(2400, 6, 21);
+    let spec = FaultSpec::parse("seed=5,eintr=0.05,short=0.08,corrupt=0.02").unwrap();
+    let (path, faulted) =
+        faulty_copy(&ds, ds.file_bytes() / 4, Some(spec), generous_retry());
+    for solver in SolverKind::all() {
+        let mut c = cfg(solver, 100);
+        c.prefetch_depth = 2;
+        let clean = run_experiment(&c, &ds).unwrap();
+        let hurt = run_experiment(&c, &faulted).unwrap();
+        assert_eq!(clean.w, hurt.w, "{}: iterates must survive faults", solver.label());
+        assert_eq!(
+            clean.final_objective.to_bits(),
+            hurt.final_objective.to_bits(),
+            "{}: objective must survive faults",
+            solver.label()
+        );
+    }
+    let io = faulted.io_stats();
+    assert!(io.retries > 0, "the schedule should have injected recoverable faults: {io:?}");
+    std::fs::remove_file(path).ok();
+}
+
+/// Retry accounting is deterministic: two runs with the *same* fault
+/// schedule, single-threaded reads (no readahead, synchronous driver,
+/// one pool thread) recover the same faults in the same places — equal
+/// iterates, equal objectives, equal `IoStats::retries`.
+#[test]
+fn identically_seeded_fault_runs_recover_identically() {
+    let ds = dense_ds(1200, 6, 3);
+    let run = || {
+        let spec = FaultSpec::parse("seed=11,eintr=0.1,short=0.1").unwrap();
+        let (path, faulted) =
+            faulty_copy(&ds, ds.file_bytes() / 4, Some(spec), generous_retry());
+        let mut c = cfg(SolverKind::Saga, 100);
+        c.prefetch_depth = 0;
+        c.storage.readahead_pages = 0;
+        c.pool_threads = 1;
+        let report = run_experiment(&c, &faulted).unwrap();
+        let io = faulted.io_stats();
+        std::fs::remove_file(path).ok();
+        (report.w.clone(), report.final_objective.to_bits(), io.retries)
+    };
+    let (w_a, obj_a, retries_a) = run();
+    let (w_b, obj_b, retries_b) = run();
+    assert_eq!(w_a, w_b);
+    assert_eq!(obj_a, obj_b);
+    assert_eq!(retries_a, retries_b, "retry counts must replay exactly");
+    assert!(retries_a > 0, "the schedule should have injected something");
+}
+
+/// Tentpole acceptance (crash arm): for every solver, killing the run at
+/// **every** epoch boundary and resuming from the checkpoint — on the
+/// fault-injected paged plane — lands on exactly the uninterrupted
+/// trajectory: same `w` bits, same objective bits, same trace length.
+#[test]
+fn kill_and_resume_at_every_epoch_boundary_is_bit_identical() {
+    let ds = dense_ds(2400, 6, 17);
+    let epochs = 4usize;
+    for solver in SolverKind::all() {
+        let mut full_cfg = cfg(solver, 100);
+        full_cfg.epochs = epochs;
+        let full = run_experiment(&full_cfg, &ds).unwrap();
+        let spec = FaultSpec::parse("seed=7,eintr=0.04,short=0.04").unwrap();
+        let (path, faulted) =
+            faulty_copy(&ds, ds.file_bytes() / 4, Some(spec), generous_retry());
+        for kill_after in 1..epochs {
+            let dir = tmp_path(&format!("ckpt_{}_{kill_after}", solver.label()));
+            let mut head = full_cfg.clone();
+            head.epochs = kill_after;
+            head.checkpoint_dir = Some(dir.to_string_lossy().into_owned());
+            run_experiment(&head, &faulted).unwrap();
+            let mut tail = full_cfg.clone();
+            tail.checkpoint_dir = head.checkpoint_dir.clone();
+            tail.resume = true;
+            let resumed = run_experiment(&tail, &faulted).unwrap();
+            let tag = format!("{} killed after epoch {kill_after}", solver.label());
+            assert_eq!(full.w, resumed.w, "{tag}: iterates");
+            assert_eq!(
+                full.final_objective.to_bits(),
+                resumed.final_objective.to_bits(),
+                "{tag}: objective"
+            );
+            assert_eq!(
+                full.trace.points.len(),
+                resumed.trace.points.len(),
+                "{tag}: restored trace must splice seamlessly"
+            );
+            std::fs::remove_dir_all(&dir).ok();
+        }
+        std::fs::remove_file(path).ok();
+    }
+}
+
+/// Tentpole acceptance (degradation arm): an injected readahead-thread
+/// death (`kill_ra=2`) downgrades the run to demand paging — counted in
+/// `IoStats::degraded` — while the trajectory stays bit-identical on
+/// both the synchronous and the pipelined driver.
+#[test]
+fn readahead_death_degrades_but_never_diverges() {
+    let ds = dense_ds(2400, 6, 29);
+    let clean = run_experiment(&cfg(SolverKind::Saga, 100), &ds).unwrap();
+    for depth in [0usize, 2] {
+        let spec = FaultSpec::parse("kill_ra=2").unwrap();
+        let (path, faulted) =
+            faulty_copy(&ds, ds.file_bytes() / 4, Some(spec), generous_retry());
+        let mut c = cfg(SolverKind::Saga, 100);
+        c.prefetch_depth = depth;
+        c.storage.readahead_pages = 32;
+        let hurt = run_experiment(&c, &faulted).unwrap();
+        assert_eq!(clean.w, hurt.w, "depth={depth}: degradation must not change bytes");
+        assert_eq!(
+            clean.final_objective.to_bits(),
+            hurt.final_objective.to_bits(),
+            "depth={depth}: objective"
+        );
+        let io = faulted.io_stats();
+        assert!(io.degraded >= 1, "depth={depth}: the downgrade must be counted ({io:?})");
+        std::fs::remove_file(path).ok();
+    }
+}
+
+/// Tentpole acceptance (permanent-corruption arm): a bit-flip on *every*
+/// fetch exhausts the quarantine/refetch budget and surfaces as the
+/// typed [`Error::Corrupt`] — through both drivers, never a panic and
+/// never a silently corrupted batch.
+#[test]
+fn persistent_corruption_is_a_typed_error_not_a_panic() {
+    let ds = dense_ds(1200, 6, 5);
+    for depth in [0usize, 2] {
+        let spec = FaultSpec::parse("seed=1,corrupt=1.0").unwrap();
+        let fast = RetryPolicy {
+            max_attempts: 3,
+            base_backoff_us: 1,
+            max_backoff_us: 2,
+            op_timeout_ms: 30_000,
+        };
+        let (path, faulted) = faulty_copy(&ds, ds.file_bytes() / 4, Some(spec), fast);
+        let mut c = cfg(SolverKind::Mbsgd, 100);
+        c.prefetch_depth = depth;
+        match run_experiment(&c, &faulted) {
+            Err(Error::Corrupt { msg, .. }) => {
+                assert!(msg.contains("checksum"), "depth={depth}: {msg}");
+            }
+            other => panic!("depth={depth}: expected Error::Corrupt, got {other:?}"),
+        }
+        std::fs::remove_file(path).ok();
+    }
+}
+
+/// Satellite property test: the retry backoff schedule is a pure
+/// function of `(policy, seed)` — bit-equal on replay, capped by
+/// `max_backoff_us`, never below the exponential floor — across a grid
+/// of policies and seeds. This is what makes fault-injected runs
+/// deterministic enough to diff.
+#[test]
+fn backoff_schedule_is_pure_capped_and_floored_across_policies() {
+    for base in [1u64, 50, 400] {
+        for cap in [base, base * 8, 5_000] {
+            for attempts in [1u32, 2, 6, 40] {
+                let policy = RetryPolicy {
+                    max_attempts: attempts,
+                    base_backoff_us: base,
+                    max_backoff_us: cap,
+                    op_timeout_ms: 0,
+                };
+                for seed in [0u64, 1, 42, 0xdead_beef, u64::MAX] {
+                    let a = policy.backoff_schedule(seed);
+                    let b = policy.backoff_schedule(seed);
+                    assert_eq!(a, b, "base={base} cap={cap} attempts={attempts} seed={seed}");
+                    assert_eq!(a.len(), attempts.saturating_sub(1) as usize);
+                    for (i, &us) in a.iter().enumerate() {
+                        assert!(us <= cap, "sleep {us}us over cap {cap}");
+                        let floor = (base << i.min(32)).min(cap);
+                        assert!(us >= floor, "sleep {us}us under floor {floor}");
+                    }
+                }
+            }
+        }
+    }
+}

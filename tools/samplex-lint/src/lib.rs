@@ -30,6 +30,11 @@
 //!   `KernelSet` function table. This is the one cross-file rule: pass 1
 //!   collects every `#[target_feature]` function name in the linted set,
 //!   pass 2 flags out-of-module definitions and direct calls.
+//! - **io-discipline** (R7): raw `.read_exact(` / `.seek(` calls are
+//!   forbidden in `storage/` modules outside `storage/retry.rs` — every
+//!   byte pulled off disk must pass through the bounded-retry + checksum
+//!   recovery wrapper (`retry::read_exact_at`), so transient faults,
+//!   deadlines and corruption are handled in exactly one place.
 //!
 //! Violations are suppressible only via an explicit
 //! `// samplex-lint: allow(<rule>) -- <reason>` annotation on the same
@@ -64,6 +69,8 @@ pub enum Rule {
     /// R6: `#[target_feature]` kernels live in `math/simd/` and are
     /// reached only through the dispatched `KernelSet` table.
     SimdDispatch,
+    /// R7: raw file reads in `storage/` only inside the retry wrapper.
+    IoDiscipline,
     /// Meta: malformed `samplex-lint:` annotation.
     BadAllow,
     /// Meta: an allow annotation that suppressed nothing.
@@ -80,6 +87,7 @@ impl Rule {
             Rule::AtomicsAudit => "atomics-audit",
             Rule::SafetyComments => "safety-comments",
             Rule::SimdDispatch => "simd-dispatch",
+            Rule::IoDiscipline => "io-discipline",
             Rule::BadAllow => "bad-allow",
             Rule::UnusedAllow => "unused-allow",
         }
@@ -95,6 +103,7 @@ impl Rule {
             "atomics-audit" => Some(Rule::AtomicsAudit),
             "safety-comments" => Some(Rule::SafetyComments),
             "simd-dispatch" => Some(Rule::SimdDispatch),
+            "io-discipline" => Some(Rule::IoDiscipline),
             _ => None,
         }
     }
@@ -342,6 +351,10 @@ pub struct FileClass {
     /// R6 home: under `math/simd/`, where `#[target_feature]` kernels
     /// (and direct calls to them) are legitimate.
     pub simd_home: bool,
+    /// R7 applies: under a `storage/` directory, except the retry
+    /// wrapper module itself (`storage/retry.rs`), which is the one
+    /// sanctioned home of raw file reads.
+    pub storage_io: bool,
 }
 
 /// Classify a path (forward or back slashes) into rule families.
@@ -354,6 +367,7 @@ pub fn classify(path: &str) -> FileClass {
         .iter()
         .take(ndirs)
         .any(|s| *s == "data" || *s == "storage" || *s == "pipeline");
+    let storage_dir = segs.iter().take(ndirs).any(|s| *s == "storage");
     FileClass {
         data_plane: dir_hit || p.ends_with("math/chunked.rs"),
         determinism: p.ends_with("math/chunked.rs")
@@ -361,6 +375,7 @@ pub fn classify(path: &str) -> FileClass {
             || p.ends_with("backend/native.rs"),
         pagestore: p.ends_with("storage/pagestore.rs"),
         simd_home: p.contains("math/simd/"),
+        storage_io: storage_dir && !p.ends_with("storage/retry.rs"),
     }
 }
 
@@ -863,6 +878,22 @@ fn lint_one(file: &str, lines: &[Line], mask: &[bool], tf_names: &[String]) -> V
                     .to_string(),
             });
         }
+        if class.storage_io {
+            for tok in [".read_exact(", ".seek("] {
+                for _ in 0..occurrences(code, tok) {
+                    raw.push(Finding {
+                        file: file.to_string(),
+                        line: ln,
+                        rule: Rule::IoDiscipline,
+                        msg: format!(
+                            "{tok} in storage/ outside the retry module — route the read \
+                             through retry::read_exact_at so it gets bounded retries, the \
+                             watchdog deadline and checksum verification"
+                        ),
+                    });
+                }
+            }
+        }
         if !class.simd_home {
             if code.contains("#[target_feature") {
                 raw.push(Finding {
@@ -996,6 +1027,11 @@ mod tests {
         assert!(classify("rust/src/math/simd/avx2.rs").simd_home);
         assert!(classify("rust/src/math/simd/mod.rs").simd_home);
         assert!(!classify("rust/src/math/dense.rs").simd_home);
+        assert!(classify("rust/src/storage/pagestore.rs").storage_io);
+        assert!(classify("rust/src/storage/reader.rs").storage_io);
+        assert!(!classify("rust/src/storage/retry.rs").storage_io);
+        assert!(!classify("rust/src/testing/faults.rs").storage_io);
+        assert!(!classify("rust/src/data/paged.rs").storage_io);
     }
 
     #[test]
@@ -1080,13 +1116,29 @@ mod tests {
 
     #[test]
     fn lock_scope_tracks_bindings_and_drop() {
+        // the `.seek(` lines additionally violate R7 now that raw reads
+        // in storage/ must route through the retry module
         let src = "fn bad(&self) {\n    \
                    let mut shard = lock_recovering(self.shard(id));\n    \
                    self.file.seek(SeekFrom::Start(0));\n    \
                    drop(shard);\n    \
                    self.file.seek(SeekFrom::Start(0));\n}\n";
         let f = lint_source("src/storage/pagestore.rs", src);
-        assert_eq!(rules_of(&f), vec![(3, "lock-discipline")]);
+        assert_eq!(
+            rules_of(&f),
+            vec![(3, "lock-discipline"), (3, "io-discipline"), (5, "io-discipline")]
+        );
+    }
+
+    #[test]
+    fn r7_raw_reads_flagged_everywhere_in_storage_but_retry() {
+        let src = "fn pull(&mut self) -> io::Result<()> {\n    \
+                   self.file.seek(SeekFrom::Start(8))?;\n    \
+                   self.file.read_exact(&mut self.buf)\n}\n";
+        let f = lint_source("src/storage/reader.rs", src);
+        assert_eq!(rules_of(&f), vec![(2, "io-discipline"), (3, "io-discipline")]);
+        assert!(lint_source("src/storage/retry.rs", src).is_empty(), "retry.rs is exempt");
+        assert!(lint_source("src/testing/faults.rs", src).is_empty(), "outside storage/");
     }
 
     #[test]

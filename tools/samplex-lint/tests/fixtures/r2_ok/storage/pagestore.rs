@@ -1,8 +1,7 @@
 pub fn read_page(&self, id: u32) -> Page {
     {
         let mut f = lock_recovering(&self.file);
-        f.seek(SeekFrom::Start(self.offset(id)));
-        f.read_exact(&mut self.buf);
+        retry::read_exact_at(&mut f, self.offset(id), &mut self.buf, &self.retry, id as u64, "page read");
     }
     let page = self.buf.decode(id);
     let mut shard = lock_recovering(self.shard(id));

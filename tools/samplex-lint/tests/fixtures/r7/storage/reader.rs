@@ -1,0 +1,4 @@
+pub fn pull(&mut self) -> io::Result<()> {
+    self.file.seek(SeekFrom::Start(8))?;
+    self.file.read_exact(&mut self.buf)
+}

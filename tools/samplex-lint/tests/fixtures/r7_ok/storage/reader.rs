@@ -1,0 +1,4 @@
+pub fn pull(&mut self, policy: &RetryPolicy) -> Result<()> {
+    retry::read_exact_at(&mut self.file, 8, &mut self.buf, policy, 0, "header read")?;
+    Ok(())
+}

@@ -1,0 +1,4 @@
+pub fn read_exact_at(f: &mut File, offset: u64, buf: &mut [u8]) -> io::Result<()> {
+    f.seek(SeekFrom::Start(offset))?;
+    f.read_exact(buf)
+}

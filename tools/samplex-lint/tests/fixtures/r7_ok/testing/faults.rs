@@ -1,0 +1,4 @@
+pub fn read_some(&mut self, buf: &mut [u8]) -> io::Result<usize> {
+    self.file.seek(SeekFrom::Start(self.at))?;
+    self.file.read(buf)
+}

@@ -1,5 +1,5 @@
 //! Fixture-backed tests: one violating + one conforming fixture per
-//! rule (R1-R6), exact `line rule` diagnostics, allow suppression, and
+//! rule (R1-R7), exact `line rule` diagnostics, allow suppression, and
 //! the binary's exit-code contract.
 
 use std::path::{Path, PathBuf};
@@ -51,12 +51,16 @@ fn r1_allow_suppresses_precisely_one_finding() {
 
 #[test]
 fn r2_violating_exact_diagnostics() {
+    // the raw `.seek(`/`.read_exact(` lines violate both the lock scope
+    // (R2) and the storage read discipline (R7)
     assert_eq!(
         lint_fixture("r2/storage/pagestore.rs"),
         vec![
             (3, "lock-discipline"),
             (4, "lock-discipline"),
+            (4, "io-discipline"),
             (5, "lock-discipline"),
+            (5, "io-discipline"),
             (6, "lock-discipline"),
             (6, "lock-discipline"),
         ]
@@ -131,6 +135,22 @@ fn r6_violating_exact_diagnostics_cross_file() {
 fn r6_conforming_is_clean() {
     // same kernels, but the caller goes through the KernelSet table
     let findings = samplex_lint::lint_paths(&[fixture_path("r6_ok")]).unwrap();
+    assert!(findings.is_empty(), "{findings:?}");
+}
+
+#[test]
+fn r7_violating_exact_diagnostics() {
+    assert_eq!(
+        lint_fixture("r7/storage/reader.rs"),
+        vec![(2, "io-discipline"), (3, "io-discipline")]
+    );
+}
+
+#[test]
+fn r7_conforming_tree_is_clean() {
+    // the retry module's own raw reads are exempt, reads routed through
+    // retry::read_exact_at are clean, and testing/ is out of scope
+    let findings = samplex_lint::lint_paths(&[fixture_path("r7_ok")]).unwrap();
     assert!(findings.is_empty(), "{findings:?}");
 }
 
