@@ -5,10 +5,15 @@
 //!   synthetic and a sparse (CSR) synthetic; plus a scalar-vs-SIMD
 //!   kernel arm (ns/row per sweep with the dispatch table forced each
 //!   way) that asserts the SIMD table is never slower than the portable
-//!   scalar kernels on the dense sweeps.
+//!   scalar kernels on the dense sweeps; plus a tracing-overhead arm —
+//!   the identical small training run with the `obs` trace plane armed
+//!   vs disarmed, best wall of 3 reps each — asserting the armed run
+//!   stays within a few percent of the untraced twin (tracing must be
+//!   effectively free when it *is* on, and literally free when off).
 //! * `BENCH_io.json` — the paged store under CS vs SS vs RS epochs at
 //!   resident-pool budgets of 10% / 50% / 100% of the file size: page
-//!   faults, read syscalls, achieved MB/s and read amplification. The
+//!   faults, read syscalls, delivered MB/s over the read spans plus
+//!   wall-window MB/s, and read amplification. The
 //!   paper's contiguous-vs-dispersed gap, measured on real file I/O —
 //!   CS/SS must show strictly fewer faults and higher MB/s than RS at
 //!   every budget below 100%. Plus a checksum-overhead arm: the same
@@ -29,6 +34,7 @@
 
 use samplex::backend::{ComputeBackend, NativeBackend};
 use samplex::bench_harness::timing::bench;
+use samplex::config::ExperimentConfig;
 use samplex::data::batch::BatchAssembler;
 use samplex::data::synth::{self, FeatureDist, SparseSynthSpec, SynthSpec};
 use samplex::data::{Dataset, PagedDataset};
@@ -36,6 +42,7 @@ use samplex::math::chunked::{self, GradScratch};
 use samplex::math::simd;
 use samplex::runtime::pool;
 use samplex::sampling::{Sampler, SamplingKind};
+use samplex::solvers::SolverKind;
 
 struct SweepTimes {
     /// Nanoseconds per row, full objective.
@@ -233,9 +240,55 @@ fn main() -> samplex::Result<()> {
         );
     }
 
+    // Tracing-overhead arm: the identical small training run with the
+    // obs trace plane armed vs disarmed, best wall of 3 reps each. The
+    // disarmed run is the shipped default (begin() returns None before
+    // any clock read); the armed run pays one monotonic read per span
+    // boundary plus a ring push, and its wall time must stay within a
+    // few percent — ≤2% on the full profile, relaxed to 10% on the tiny
+    // CI profile where a single stray page fault outweighs the
+    // instrumentation. The two trajectories must also be bit-identical:
+    // tracing may never perturb the science.
+    let mut cfg = ExperimentConfig::quick("bench-trace", SolverKind::Mbsgd, SamplingKind::Cs, 500);
+    cfg.epochs = if small { 2 } else { 4 };
+    cfg.reg_c = Some(1e-3);
+    let mut arm_wall = [f64::INFINITY; 2];
+    let mut arm_bits: [Vec<u32>; 2] = [Vec::new(), Vec::new()];
+    for (arm, armed) in [(0usize, false), (1, true)] {
+        for _rep in 0..3 {
+            if armed {
+                samplex::obs::arm();
+            }
+            let report = samplex::train::run_experiment(&cfg, &dense)?;
+            samplex::obs::disarm();
+            arm_wall[arm] = arm_wall[arm].min(report.time.wall_s.max(1e-9));
+            arm_bits[arm] = report.w.iter().map(|v| v.to_bits()).collect();
+        }
+    }
+    assert_eq!(
+        arm_bits[0], arm_bits[1],
+        "traced and untraced trajectories diverged — tracing perturbed the solver"
+    );
+    let (off_wall, armed_wall) = (arm_wall[0], arm_wall[1]);
+    let trace_ratio = off_wall / armed_wall.max(1e-12);
+    let trace_floor = if small { 0.90 } else { 0.98 };
+    println!(
+        "\ntracing overhead: disarmed {off_wall:.4}s vs armed {armed_wall:.4}s best wall \
+         (ratio {trace_ratio:.3}, floor {trace_floor:.2})"
+    );
+    assert!(
+        trace_ratio >= trace_floor,
+        "tracing overhead too high: armed {armed_wall:.4}s vs disarmed {off_wall:.4}s \
+         (ratio {trace_ratio:.3} < {trace_floor:.2})"
+    );
+
     let json = format!(
-        "{{\n  \"bench\": \"compute_plane_sweeps\",\n  \"threads_default\": {},\n  \"sweeps\": [\n{}\n  ],\n  \"kernel_arms\": [\n{}\n  ]\n}}\n",
+        "{{\n  \"bench\": \"compute_plane_sweeps\",\n  \"threads_default\": {},\n  \"tracing_overhead\": {{\n    \"disarmed_wall_s\": {:.6},\n    \"armed_wall_s\": {:.6},\n    \"ratio\": {:.4},\n    \"floor\": {:.2}\n  }},\n  \"sweeps\": [\n{}\n  ],\n  \"kernel_arms\": [\n{}\n  ]\n}}\n",
         n_threads,
+        off_wall,
+        armed_wall,
+        trace_ratio,
+        trace_floor,
         entries.join(",\n"),
         arm_entries.join(",\n")
     );
@@ -346,6 +399,7 @@ fn io_snapshot(dense: &Dataset) -> samplex::Result<()> {
                         "      \"bytes_read\": {},\n",
                         "      \"read_amplification\": {:.4},\n",
                         "      \"mb_per_s\": {:.2},\n",
+                        "      \"wall_mbps\": {:.2},\n",
                         "      \"stall_s\": {:.6},\n",
                         "      \"wall_s\": {:.6}\n",
                         "    }}"
@@ -362,6 +416,7 @@ fn io_snapshot(dense: &Dataset) -> samplex::Result<()> {
                     io.bytes_read,
                     io.read_amplification(),
                     io.mb_per_s(),
+                    io.wall_mbps(wall_s),
                     io.stall_s,
                     wall_s,
                 ));

@@ -12,7 +12,11 @@
 //! technique — the paper's experimental design.
 
 pub mod ablation;
-pub mod timing;
+// The micro-benchmark timing helpers used to live here as a near-copy of
+// `metrics/timer.rs`; they are now folded into that module (one monotonic
+// clock seam for stopwatches, benches and `obs` spans). The alias keeps
+// the established `bench_harness::timing::bench` import path working.
+pub use crate::metrics::timer as timing;
 
 use std::collections::BTreeMap;
 
@@ -40,6 +44,12 @@ pub struct TableRow {
     pub objective: f64,
     /// Simulated device access seconds (the paper's modeled access time).
     pub sim_access_s: f64,
+    /// Measured wall-clock of the arm's training loop (denominator of the
+    /// wall-window MB/s comparison column).
+    pub wall_s: f64,
+    /// Traced access / compute / overlap attribution totals (seconds)
+    /// from the `obs` span plane — all-zero when tracing was not armed.
+    pub attr: crate::obs::Attribution,
     /// Real file I/O of the arm (all-zero for in-core runs) — printed in
     /// the CSV next to the simulated access time.
     pub io: crate::storage::pagestore::IoStats,
@@ -55,6 +65,8 @@ impl From<&TrainReport> for TableRow {
             time_s: r.time.training_time_s(),
             objective: r.final_objective,
             sim_access_s: r.time.sim_access_s,
+            wall_s: r.time.wall_s,
+            attr: r.attr,
             io: r.time.io,
         }
     }

@@ -252,6 +252,13 @@ pub struct ExperimentConfig {
     /// Schedules are pure functions of (seed, epoch), so the resumed
     /// trajectory is bit-identical to an uninterrupted run.
     pub resume: bool,
+    /// Arm the tracing plane and write a Chrome `trace_event` JSON here
+    /// after the run (`--trace out.json`). None = tracing disarmed: the
+    /// hot paths take zero timestamps.
+    pub trace_path: Option<String>,
+    /// Emit a one-line progress heartbeat (epoch, objective, faults,
+    /// stall, MB/s) at most every this-many seconds (0 = off).
+    pub heartbeat_secs: f64,
 }
 
 impl Default for ExperimentConfig {
@@ -276,6 +283,8 @@ impl Default for ExperimentConfig {
             pool_threads: 0,
             checkpoint_dir: None,
             resume: false,
+            trace_path: None,
+            heartbeat_secs: 0.0,
         }
     }
 }
@@ -363,6 +372,12 @@ impl ExperimentConfig {
         if let Some(v) = doc.get_bool("", "resume")? {
             cfg.resume = v;
         }
+        if let Some(v) = doc.get_str("", "trace")? {
+            cfg.trace_path = Some(v);
+        }
+        if let Some(v) = doc.get_f64("", "heartbeat_secs")? {
+            cfg.heartbeat_secs = v;
+        }
         if let Some(v) = doc.get_str("storage", "profile")? {
             cfg.storage.profile = v;
         }
@@ -425,6 +440,12 @@ impl ExperimentConfig {
             s.push_str(&format!("checkpoint_dir = \"{d}\"\n"));
         }
         s.push_str(&format!("resume = {}\n", self.resume));
+        if let Some(t) = &self.trace_path {
+            s.push_str(&format!("trace = \"{t}\"\n"));
+        }
+        if self.heartbeat_secs > 0.0 {
+            s.push_str(&format!("heartbeat_secs = {}\n", self.heartbeat_secs));
+        }
         s.push_str("\n[storage]\n");
         s.push_str(&format!("profile = \"{}\"\n", self.storage.profile));
         s.push_str(&format!("cache_mib = {}\n", self.storage.cache_mib));
@@ -456,6 +477,12 @@ impl ExperimentConfig {
         }
         if self.storage.page_kib == 0 {
             return Err(Error::Config("storage.page_kib must be > 0".into()));
+        }
+        if !self.heartbeat_secs.is_finite() || self.heartbeat_secs < 0.0 {
+            return Err(Error::Config(format!(
+                "heartbeat_secs must be finite and >= 0, got {}",
+                self.heartbeat_secs
+            )));
         }
         self.storage.device()?;
         Ok(())
@@ -681,5 +708,27 @@ cache_mib = 16
         let d = ExperimentConfig::default();
         assert!(d.checkpoint_dir.is_none() && !d.resume);
         assert!(!d.to_toml_string().contains("checkpoint_dir"));
+    }
+
+    #[test]
+    fn trace_knobs_roundtrip_and_validate() {
+        let mut cfg = ExperimentConfig::default();
+        cfg.trace_path = Some("out/trace.json".into());
+        cfg.heartbeat_secs = 2.5;
+        let s = cfg.to_toml_string();
+        let back = ExperimentConfig::from_toml_str(&s).unwrap();
+        assert_eq!(back.trace_path.as_deref(), Some("out/trace.json"));
+        assert!((back.heartbeat_secs - 2.5).abs() < 1e-12);
+        // defaults: tracing off, heartbeat off, keys omitted
+        let d = ExperimentConfig::default();
+        assert!(d.trace_path.is_none() && d.heartbeat_secs == 0.0);
+        let ds = d.to_toml_string();
+        assert!(!ds.contains("trace") && !ds.contains("heartbeat"));
+        // negative / non-finite heartbeats are rejected
+        let mut bad = ExperimentConfig::default();
+        bad.heartbeat_secs = -1.0;
+        assert!(bad.validate().is_err());
+        bad.heartbeat_secs = f64::NAN;
+        assert!(bad.validate().is_err());
     }
 }

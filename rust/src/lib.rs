@@ -143,11 +143,33 @@
 //!   on a CPU without the feature is UB; the table is probed once);
 //! * **io-discipline** — raw `.read_exact(`/`.seek(` calls in `storage/`
 //!   live only in [`storage::retry`], so every byte off disk passes
-//!   through the bounded-retry + checksum recovery path.
+//!   through the bounded-retry + checksum recovery path;
+//! * **clock-discipline** — raw `Instant::now` / `SystemTime::now` reads
+//!   live only in `metrics/` and `obs/`: every other module measures time
+//!   through the [`metrics::timer::monotonic_ns`] seam (or not at all),
+//!   so wall-clock can never silently leak into a deterministic plane.
 //!
 //! `INVARIANTS.md` at the repo root documents each rule, the escape hatch
 //! (a per-site `allow(rule) -- reason` annotation), and the Miri /
 //! ThreadSanitizer CI jobs that test the same invariants dynamically.
+//!
+//! ## Observability (`samplex-trace`)
+//!
+//! The [`obs`] module measures eq. (1) instead of inferring it: when
+//! tracing is armed (`samplex train --trace out.json`), every phase
+//! boundary — page fault, checksum verify, decode, batch assemble,
+//! readahead prefault, prefetch stall, chunked sweep, solver step,
+//! checkpoint write — records a span into a lock-free per-thread ring
+//! buffer, timestamped through the single
+//! [`metrics::timer::monotonic_ns`] clock seam. Exporters turn the rings
+//! into a Chrome `trace_event` JSON (open in `chrome://tracing` /
+//! Perfetto), an ASCII per-thread "overlap map", log-bucketed latency
+//! histograms (fault latency, batch wait, retry backoff), and a per-epoch
+//! `access_s` / `compute_s` / `overlap_s` attribution carried in
+//! [`train::TrainReport`] and the harness CSV. Disarmed, the plane costs
+//! nothing: no timestamps, no allocation, no control-flow difference —
+//! the determinism suite pins traced vs untraced trajectories
+//! bit-identical.
 //!
 //! ## Quick start
 //!
@@ -169,6 +191,7 @@ pub mod data;
 pub mod error;
 pub mod math;
 pub mod metrics;
+pub mod obs;
 pub mod pipeline;
 pub mod rng;
 pub mod runtime;

@@ -26,6 +26,14 @@
 //!                      retries for transient read errors, and the stall
 //!                      watchdog deadline; SAMPLEX_FAULTS=<spec> injects
 //!                      deterministic faults for testing — see README)
+//!                 [--trace out.json] [--heartbeat SECS]
+//!                     (observability: arm the samplex-trace plane, write a
+//!                      Chrome trace_event JSON after the run, print the
+//!                      ASCII overlap map + latency histograms and the
+//!                      access/compute/overlap attribution; --heartbeat
+//!                      emits a one-line progress pulse every SECS seconds.
+//!                      Tracing never perturbs trajectories — traced and
+//!                      untraced runs are bit-identical)
 //! samplex table   [--dataset D | --all] [--epochs N] [--backend B]
 //!                 [--storage P] [--data-dir data] [--summary] [--csv out.csv]
 //!                 [--resume]  (reopen --csv in append mode: keep every
@@ -254,6 +262,14 @@ fn cmd_train(args: &[String]) -> Result<()> {
     cfg.storage.retry_attempts =
         f.get_u64("retry-attempts", u64::from(cfg.storage.retry_attempts))? as u32;
     cfg.storage.io_timeout_ms = f.get_u64("io-timeout-ms", cfg.storage.io_timeout_ms)?;
+    if let Some(v) = f.get("trace") {
+        cfg.trace_path = Some(v.to_string());
+    }
+    if let Some(v) = f.get("heartbeat") {
+        cfg.heartbeat_secs =
+            v.parse().map_err(|e| Error::Config(format!("--heartbeat: {e}")))?;
+    }
+    cfg.validate()?;
     cfg.name = format!(
         "{}-{}-{}",
         cfg.dataset,
@@ -272,7 +288,14 @@ fn cmd_train(args: &[String]) -> Result<()> {
     } else {
         registry::resolve(&cfg.dataset, &cfg.data_dir, cfg.seed)?
     };
-    let report = samplex::train::run_experiment(&cfg, &ds)?;
+    if cfg.trace_path.is_some() {
+        samplex::obs::arm();
+    }
+    let outcome = samplex::train::run_experiment(&cfg, &ds);
+    if cfg.trace_path.is_some() {
+        samplex::obs::disarm();
+    }
+    let report = outcome?;
     println!("{}", report.summary());
     println!(
         "  breakdown: sim-access {:.4}s | assemble {:.4}s | compute {:.4}s | wall {:.4}s",
@@ -288,14 +311,15 @@ fn cmd_train(args: &[String]) -> Result<()> {
         let io = report.time.io;
         println!(
             "  file io (real): {:.1} MiB in {} reads, {} faults / {} hits, \
-             amp {:.2}, {:.1} MB/s over {:.4}s",
+             amp {:.2}, {:.1} MB/s over {:.4}s read-span ({:.1} MB/s wall)",
             io.bytes_read as f64 / (1024.0 * 1024.0),
             io.read_calls,
             io.page_faults,
             io.page_hits,
             io.read_amplification(),
             io.mb_per_s(),
-            io.read_s
+            io.read_s,
+            io.wall_mbps(report.time.wall_s)
         );
         println!(
             "  overlap: {} demand faults / {} readahead hits, \
@@ -311,6 +335,21 @@ fn cmd_train(args: &[String]) -> Result<()> {
                 io.retries, io.degraded
             );
         }
+    }
+    if let Some(tp) = &cfg.trace_path {
+        println!(
+            "  attribution: access {:.4}s | compute {:.4}s | overlap {:.4}s \
+             (union {:.4}s of {:.4}s wall)",
+            report.attr.access_s,
+            report.attr.compute_s,
+            report.attr.overlap_s,
+            report.attr.union_s(),
+            report.time.wall_s
+        );
+        print!("{}", samplex::obs::export::overlap_map(72));
+        print!("{}", samplex::obs::export::histogram_summaries());
+        samplex::obs::export::write_chrome_trace(tp)?;
+        println!("  chrome trace -> {tp} (load in chrome://tracing or Perfetto)");
     }
     if let Some(p) = f.get("trace-csv") {
         samplex::metrics::csv::write_trace(p, &report.name, &report.trace)?;
@@ -348,8 +387,18 @@ fn cmd_table(args: &[String]) -> Result<()> {
         if let Some(p) = f.get("csv") {
             // streaming writer: each record is flushed as it is written, and
             // the simulated access time sits next to the real IoStats columns
-            let mut header =
-                vec!["solver", "sampling", "batch", "step", "time_s", "objective", "sim_access_s"];
+            let mut header = vec![
+                "solver",
+                "sampling",
+                "batch",
+                "step",
+                "time_s",
+                "objective",
+                "sim_access_s",
+                "attr_access_s",
+                "attr_compute_s",
+                "attr_overlap_s",
+            ];
             header.extend_from_slice(&samplex::metrics::csv::IO_HEADER);
             let (mut w, last) = if f.has("resume") {
                 samplex::metrics::csv::CsvWriter::append_or_create(p, &header)?
@@ -378,8 +427,11 @@ fn cmd_table(args: &[String]) -> Result<()> {
                     format!("{:.6}", r.time_s),
                     format!("{:.12}", r.objective),
                     format!("{:.6}", r.sim_access_s),
+                    format!("{:.6}", r.attr.access_s),
+                    format!("{:.6}", r.attr.compute_s),
+                    format!("{:.6}", r.attr.overlap_s),
                 ];
-                fields.extend(samplex::metrics::csv::io_fields(&r.io));
+                fields.extend(samplex::metrics::csv::io_fields(&r.io, r.wall_s));
                 w.record(&fields)?;
             }
             println!("rows -> {p}");

@@ -1,7 +1,9 @@
 //! Terminal convergence plots — the figures of the paper, in ASCII.
 //!
 //! Renders `log10(f(w) − p*)` against training time for several series
-//! (RS/CS/SS), which is exactly what Figs. 1–4 plot.
+//! (RS/CS/SS), which is exactly what Figs. 1–4 plot. Also hosts
+//! [`render_timeline`], the per-thread lane renderer behind the tracing
+//! plane's "overlap map" (`obs::export::overlap_map`).
 
 use crate::metrics::Trace;
 
@@ -63,6 +65,52 @@ pub fn render(series: &[Series<'_>], p_star: f64, width: usize, height: usize) -
     out
 }
 
+/// One lane of a per-thread timeline: a label plus glyph-tagged spans in
+/// seconds relative to the window start.
+#[derive(Debug, Clone, Default)]
+pub struct TimelineLane {
+    /// Lane label (thread name), truncated to the label column.
+    pub label: String,
+    /// `(start_s, end_s, glyph)` spans; out-of-window parts are clipped.
+    pub spans: Vec<(f64, f64, char)>,
+}
+
+/// Render lanes over a `span_s`-second window, `width` columns wide: one
+/// row per lane, `.` for idle columns, the span's glyph otherwise (the
+/// later span wins a contested column — at terminal resolution the tail
+/// of a phase is the more informative edge). NaN/negative spans are
+/// skipped rather than poisoning the projection.
+pub fn render_timeline(lanes: &[TimelineLane], span_s: f64, width: usize) -> String {
+    if lanes.iter().all(|l| l.spans.is_empty()) {
+        return "(no spans)\n".into();
+    }
+    let width = width.max(20);
+    let span_s = if span_s.is_finite() && span_s > 0.0 { span_s } else { 1e-9 };
+    let mut out = String::new();
+    out.push_str(&format!("{:<14} 0s{:>width$.3}s\n", "thread", span_s, width = width - 1));
+    for lane in lanes {
+        let mut row = vec!['.'; width];
+        for &(s, e, glyph) in &lane.spans {
+            if !s.is_finite() || !e.is_finite() || e <= s || e <= 0.0 || s >= span_s {
+                continue;
+            }
+            let c0 = ((s.max(0.0) / span_s) * width as f64).floor() as usize;
+            let c1 = ((e.min(span_s) / span_s) * width as f64).ceil() as usize;
+            for c in row.iter_mut().take(c1.min(width)).skip(c0.min(width - 1)) {
+                *c = glyph;
+            }
+        }
+        let mut label: String = lane.label.chars().take(13).collect();
+        if label.is_empty() {
+            label.push('?');
+        }
+        out.push_str(&format!("{label:<14}|"));
+        out.extend(row);
+        out.push_str("|\n");
+    }
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -96,5 +144,81 @@ mod tests {
         let t = Trace::default();
         let s = render(&[Series { label: "x".into(), glyph: 'x', trace: &t }], 0.0, 40, 8);
         assert_eq!(s, "(no data)\n");
+    }
+
+    #[test]
+    fn single_point_lands_on_the_grid() {
+        let mut t = Trace::default();
+        t.push(0, 0.0, 2.0);
+        let s = render(&[Series { label: "one".into(), glyph: '*', trace: &t }], 1.0, 20, 5);
+        // exactly one plotted glyph, top-left of the grid
+        assert_eq!(s.matches('*').count(), 2, "{s}"); // grid + legend
+        let first_grid_row = s.lines().nth(1).unwrap();
+        assert_eq!(first_grid_row, format!("|*{}", " ".repeat(19)), "{s}");
+        assert!(s.contains("*=one"), "{s}");
+    }
+
+    #[test]
+    fn nan_objectives_clamp_to_floor_instead_of_poisoning() {
+        let mut t = Trace::default();
+        t.push(0, 0.0, 2.0);
+        t.push(1, 1.0, f64::NAN); // gap clamps to 1e-15 -> log10 = -15
+        let s = render(&[Series { label: "q".into(), glyph: 'n', trace: &t }], 1.0, 30, 6);
+        assert!(!s.contains("NaN"), "{s}");
+        assert!(s.contains("bottom=-15.00"), "{s}");
+        // both points drawn: top-left (gap=1) and bottom-right (clamped)
+        assert_eq!(s.matches('n').count(), 3, "{s}"); // 2 grid + legend
+    }
+
+    #[test]
+    fn timeline_golden_two_lanes() {
+        let lanes = vec![
+            TimelineLane { label: "reader".into(), spans: vec![(0.0, 0.5, 'A')] },
+            TimelineLane { label: "driver".into(), spans: vec![(0.25, 1.0, 'C')] },
+        ];
+        let s = render_timeline(&lanes, 1.0, 20);
+        let lines: Vec<&str> = s.lines().collect();
+        assert_eq!(lines.len(), 3, "{s}");
+        assert!(lines[0].starts_with("thread"), "{s}");
+        assert!(lines[0].ends_with("1.000s"), "{s}");
+        assert_eq!(lines[1], "reader        |AAAAAAAAAA..........|", "{s}");
+        assert_eq!(lines[2], "driver        |.....CCCCCCCCCCCCCCC|", "{s}");
+    }
+
+    #[test]
+    fn timeline_empty_lanes_render_placeholder() {
+        assert_eq!(render_timeline(&[], 1.0, 40), "(no spans)\n");
+        let idle = vec![TimelineLane { label: "idle".into(), spans: vec![] }];
+        assert_eq!(render_timeline(&idle, 1.0, 40), "(no spans)\n");
+    }
+
+    #[test]
+    fn timeline_skips_nan_and_out_of_window_spans() {
+        let lanes = vec![TimelineLane {
+            label: "a-very-long-thread-name".into(),
+            spans: vec![
+                (f64::NAN, 0.5, 'X'),
+                (0.2, f64::NAN, 'X'),
+                (2.0, 3.0, 'X'),   // after the window
+                (-1.0, -0.5, 'X'), // before the window
+                (0.5, 0.75, 'G'),
+            ],
+        }];
+        let s = render_timeline(&lanes, 1.0, 20);
+        assert!(!s.contains('X'), "{s}");
+        let row = s.lines().nth(1).unwrap();
+        // label truncated to 13 chars; G paints cols 10..15
+        assert_eq!(row, "a-very-long-t |..........GGGGG.....|", "{s}");
+    }
+
+    #[test]
+    fn timeline_clips_straddling_spans_and_degenerate_window() {
+        let lanes =
+            vec![TimelineLane { label: "t".into(), spans: vec![(-0.5, 10.0, 'F')] }];
+        let s = render_timeline(&lanes, 1.0, 20);
+        assert_eq!(s.lines().nth(1).unwrap(), "t             |FFFFFFFFFFFFFFFFFFFF|", "{s}");
+        // zero/NaN window falls back without panicking
+        let z = render_timeline(&lanes, 0.0, 20);
+        assert!(z.lines().count() == 2, "{z}");
     }
 }

@@ -26,7 +26,7 @@ use crate::storage::pagestore::IoStats;
 /// `io_readahead_hits` / `io_stall_s` split access time into what stalled
 /// the consumer vs what the readahead thread absorbed off the critical
 /// path.
-pub const IO_HEADER: [&str; 11] = [
+pub const IO_HEADER: [&str; 12] = [
     "io_bytes_read",
     "io_read_calls",
     "io_page_faults",
@@ -37,11 +37,16 @@ pub const IO_HEADER: [&str; 11] = [
     "io_degraded",
     "io_read_amp",
     "io_mb_per_s",
+    "io_wall_mbps",
     "io_stall_s",
 ];
 
-/// Render an [`IoStats`] into the [`IO_HEADER`] columns.
-pub fn io_fields(io: &IoStats) -> Vec<String> {
+/// Render an [`IoStats`] into the [`IO_HEADER`] columns. `io_mb_per_s` is
+/// delivered throughput over the time actually spent inside reads;
+/// `io_wall_mbps` divides the same bytes by the arm's wall time
+/// (`wall_s`), so the two bracket how busy the device was vs how much the
+/// run demanded of it.
+pub fn io_fields(io: &IoStats, wall_s: f64) -> Vec<String> {
     vec![
         io.bytes_read.to_string(),
         io.read_calls.to_string(),
@@ -53,6 +58,7 @@ pub fn io_fields(io: &IoStats) -> Vec<String> {
         io.degraded.to_string(),
         format!("{:.4}", io.read_amplification()),
         format!("{:.2}", io.mb_per_s()),
+        format!("{:.2}", io.wall_mbps(wall_s)),
         format!("{:.6}", io.stall_s),
     ]
 }
@@ -256,7 +262,7 @@ mod tests {
             read_s: 0.001,
             stall_s: 0.0005,
         };
-        let fields = io_fields(&io);
+        let fields = io_fields(&io, 2.0);
         assert_eq!(fields.len(), IO_HEADER.len());
         assert_eq!(fields[0], "4096");
         assert_eq!(fields[3], "3");
@@ -264,7 +270,11 @@ mod tests {
         assert_eq!(fields[6], "2"); // retries
         assert_eq!(fields[7], "1"); // degraded
         assert_eq!(fields[8], "2.0000"); // 4096 / 2048
-        assert_eq!(fields[10], "0.000500");
+        assert_eq!(fields[9], "4.10"); // 4096 B / 1e6 / 0.001 s read-span
+        assert_eq!(fields[10], "0.00"); // 4096 B / 1e6 / 2 s wall
+        assert_eq!(fields[11], "0.000500");
+        // wall_mbps degrades to 0 for a zero/negative wall window
+        assert_eq!(io.wall_mbps(0.0), 0.0);
     }
 
     #[test]

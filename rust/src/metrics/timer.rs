@@ -1,5 +1,19 @@
-//! Training-time decomposition (paper eq. 1):
+//! Training-time decomposition (paper eq. 1) and the crate's **single
+//! monotonic-clock seam**.
+//!
 //! `training time = time to access data + time to process data`.
+//!
+//! Every wall-clock measurement in the crate — the [`Stopwatch`] used by
+//! the training loop, the in-tree micro-benchmark harness ([`bench`],
+//! formerly duplicated in `bench_harness/timing.rs`), and the span
+//! timestamps recorded by the tracing plane (`crate::obs`) — derives from
+//! one function, [`monotonic_ns`]: nanoseconds on the monotonic clock
+//! since a per-process base instant. One seam means one elapsed-seconds
+//! convention (ns / 1e9, no mixed `Duration` roundings), timestamps from
+//! different threads share an origin (so spans from the reader, readahead
+//! and solver threads line up on one timeline), and the `clock-discipline`
+//! lint rule (R8) can confine raw `Instant::now` / `SystemTime::now`
+//! calls to `metrics/` and `obs/`.
 
 use crate::storage::pagestore::IoStats;
 use crate::storage::simulator::AccessCost;
@@ -73,27 +87,136 @@ impl TimeBreakdown {
     }
 }
 
-/// Monotonic stopwatch with f64 seconds.
+/// The per-process base instant every [`monotonic_ns`] reading is measured
+/// from. Initialized on first use; all threads share it.
+static CLOCK_BASE: std::sync::OnceLock<std::time::Instant> = std::sync::OnceLock::new();
+
+/// Nanoseconds on the monotonic clock since the process clock base.
+///
+/// This is the crate's one sanctioned raw-clock read (besides the
+/// [`Stopwatch`] convenience below, which is built on it): `obs` span
+/// timestamps, stopwatches and bench timings all come from here, so every
+/// measurement in a process shares one origin and one unit.
+pub fn monotonic_ns() -> u64 {
+    let base = *CLOCK_BASE.get_or_init(std::time::Instant::now);
+    // u64 nanoseconds overflow after ~584 years of process uptime
+    std::time::Instant::now().duration_since(base).as_nanos() as u64
+}
+
+/// Monotonic stopwatch with f64 seconds, built on [`monotonic_ns`].
 #[derive(Debug)]
-pub struct Stopwatch(std::time::Instant);
+pub struct Stopwatch(u64);
 
 impl Stopwatch {
     /// Start now.
     pub fn start() -> Self {
-        Stopwatch(std::time::Instant::now())
+        Stopwatch(monotonic_ns())
+    }
+
+    /// Nanoseconds since start.
+    pub fn elapsed_ns(&self) -> u64 {
+        monotonic_ns().saturating_sub(self.0)
     }
 
     /// Seconds since start.
     pub fn elapsed_s(&self) -> f64 {
-        self.0.elapsed().as_secs_f64()
+        self.elapsed_ns() as f64 / 1e9
     }
 
     /// Seconds since start, and restart.
     pub fn lap_s(&mut self) -> f64 {
-        let e = self.0.elapsed().as_secs_f64();
-        self.0 = std::time::Instant::now();
+        let now = monotonic_ns();
+        let e = now.saturating_sub(self.0) as f64 / 1e9;
+        self.0 = now;
         e
     }
+}
+
+/// One benchmark measurement (in-tree micro-benchmark harness; offline
+/// build, no criterion).
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    /// Benchmark id.
+    pub name: String,
+    /// Median seconds per iteration.
+    pub median_s: f64,
+    /// Mean seconds per iteration.
+    pub mean_s: f64,
+    /// Fastest sample, seconds per iteration.
+    pub min_s: f64,
+    /// Iterations per timed sample.
+    pub iters: usize,
+}
+
+impl BenchResult {
+    /// Render one table row.
+    pub fn row(&self) -> String {
+        format!(
+            "{:<44} {:>12} {:>12} {:>12}",
+            self.name,
+            human(self.median_s),
+            human(self.mean_s),
+            human(self.min_s)
+        )
+    }
+}
+
+/// Pretty seconds.
+pub fn human(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.3}s")
+    } else if s >= 1e-3 {
+        format!("{:.3}ms", s * 1e3)
+    } else if s >= 1e-6 {
+        format!("{:.3}us", s * 1e6)
+    } else {
+        format!("{:.1}ns", s * 1e9)
+    }
+}
+
+/// Table header matching [`BenchResult::row`].
+pub fn header() -> String {
+    format!(
+        "{:<44} {:>12} {:>12} {:>12}",
+        "benchmark", "median/iter", "mean/iter", "min/iter"
+    )
+}
+
+/// Run one benchmark: `warmup` untimed runs, then `samples` samples of
+/// `iters` iterations. Median-of-samples methodology; every sample is
+/// timed through the [`monotonic_ns`] seam.
+pub fn bench(
+    name: &str,
+    warmup: usize,
+    samples: usize,
+    iters: usize,
+    mut f: impl FnMut(),
+) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut per_iter: Vec<f64> = Vec::with_capacity(samples);
+    for _ in 0..samples.max(1) {
+        let sw = Stopwatch::start();
+        for _ in 0..iters.max(1) {
+            f();
+        }
+        per_iter.push(sw.elapsed_s() / iters.max(1) as f64);
+    }
+    per_iter.sort_by(|a, b| a.total_cmp(b));
+    let median_s = per_iter[per_iter.len() / 2];
+    let mean_s = per_iter.iter().sum::<f64>() / per_iter.len() as f64;
+    let min_s = per_iter[0];
+    BenchResult { name: name.into(), median_s, mean_s, min_s, iters }
+}
+
+/// Epochs knob shared by the table/figure benches
+/// (`SAMPLEX_BENCH_EPOCHS`, default 30 — the paper's setting).
+pub fn bench_epochs() -> usize {
+    std::env::var("SAMPLEX_BENCH_EPOCHS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(30)
 }
 
 #[cfg(test)]
@@ -157,5 +280,52 @@ mod tests {
         let lap = sw.lap_s();
         assert!(lap >= 0.009, "lap={lap}");
         assert!(sw.elapsed_s() < lap, "restarted");
+    }
+
+    #[test]
+    fn monotonic_ns_never_goes_backwards() {
+        let a = monotonic_ns();
+        let b = monotonic_ns();
+        assert!(b >= a, "monotonic clock went backwards: {a} -> {b}");
+    }
+
+    #[test]
+    fn stopwatch_ns_and_s_agree() {
+        let sw = Stopwatch::start();
+        std::thread::sleep(std::time::Duration::from_millis(5));
+        let ns = sw.elapsed_ns();
+        let s = sw.elapsed_s();
+        assert!(ns >= 4_000_000, "ns={ns}");
+        // the two units read the same clock: |s - ns/1e9| is only the time
+        // between the two reads
+        assert!((s - ns as f64 / 1e9).abs() < 0.5, "s={s} ns={ns}");
+    }
+
+    #[test]
+    fn bench_measures_work() {
+        let mut acc = 0u64;
+        let r = bench("spin", 1, 3, 10, || {
+            for i in 0..1000 {
+                acc = acc.wrapping_add(i);
+            }
+        });
+        assert!(r.median_s >= 0.0);
+        assert!(r.min_s <= r.median_s);
+        assert!(r.row().contains("spin"));
+        assert!(acc > 0 || acc == 0); // keep the side effect alive
+    }
+
+    #[test]
+    fn human_units() {
+        assert!(human(2.5).ends_with('s'));
+        assert!(human(2.5e-3).ends_with("ms"));
+        assert!(human(2.5e-6).ends_with("us"));
+        assert!(human(2.5e-9).ends_with("ns"));
+    }
+
+    #[test]
+    fn epochs_default_is_paper_setting() {
+        std::env::remove_var("SAMPLEX_BENCH_EPOCHS");
+        assert_eq!(bench_epochs(), 30);
     }
 }

@@ -1,0 +1,195 @@
+//! Access / compute / overlap attribution (paper eq. 1, measured).
+//!
+//! Given the traced spans of one epoch window, classify each span as
+//! *access* (faults, checksum, decode, assembly, prefault, stalls) or
+//! *compute* (solver steps, pooled sweeps), merge each class into a
+//! disjoint interval union across all threads, and report:
+//!
+//! * `access_s`  — wall-time during which ≥1 thread was accessing data,
+//! * `compute_s` — wall-time during which ≥1 thread was computing,
+//! * `overlap_s` — wall-time during which both were happening at once
+//!   (the prefetch pipeline's win: access hidden behind compute).
+//!
+//! By construction `access_s + compute_s − overlap_s ≤ window`, which is
+//! the reconciliation the acceptance tests pin against wall time.
+
+use super::ring::{RawSpan, SpanKind};
+
+/// Per-window attribution summary, in seconds. All-zero when tracing was
+/// not armed for the window.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct Attribution {
+    /// Union of access-class span time across threads.
+    pub access_s: f64,
+    /// Union of compute-class span time across threads.
+    pub compute_s: f64,
+    /// Time both classes were active simultaneously.
+    pub overlap_s: f64,
+}
+
+impl Attribution {
+    /// Wall-time covered by either class: `access + compute − overlap`.
+    pub fn union_s(&self) -> f64 {
+        self.access_s + self.compute_s - self.overlap_s
+    }
+
+    /// Accumulate another window (e.g. across epochs).
+    pub fn merge(&mut self, other: &Attribution) {
+        self.access_s += other.access_s;
+        self.compute_s += other.compute_s;
+        self.overlap_s += other.overlap_s;
+    }
+
+    /// True if any time was attributed (i.e. tracing was armed).
+    pub fn is_traced(&self) -> bool {
+        self.access_s > 0.0 || self.compute_s > 0.0
+    }
+}
+
+/// Merge sorted-or-not intervals into a disjoint ascending union.
+fn merge_intervals(mut v: Vec<(u64, u64)>) -> Vec<(u64, u64)> {
+    v.retain(|&(s, e)| e > s);
+    v.sort_unstable();
+    let mut out: Vec<(u64, u64)> = Vec::with_capacity(v.len());
+    for (s, e) in v {
+        match out.last_mut() {
+            Some(last) if s <= last.1 => last.1 = last.1.max(e),
+            _ => out.push((s, e)),
+        }
+    }
+    out
+}
+
+/// Total length of a disjoint interval union, ns.
+fn total_ns(v: &[(u64, u64)]) -> u64 {
+    v.iter().map(|&(s, e)| e - s).sum()
+}
+
+/// Length of the intersection of two disjoint ascending unions, ns
+/// (two-pointer sweep).
+fn intersect_ns(a: &[(u64, u64)], b: &[(u64, u64)]) -> u64 {
+    let (mut i, mut j, mut acc) = (0usize, 0usize, 0u64);
+    while i < a.len() && j < b.len() {
+        let lo = a[i].0.max(b[j].0);
+        let hi = a[i].1.min(b[j].1);
+        if hi > lo {
+            acc += hi - lo;
+        }
+        if a[i].1 <= b[j].1 {
+            i += 1;
+        } else {
+            j += 1;
+        }
+    }
+    acc
+}
+
+/// Attribute the spans falling in (or overlapping) the window
+/// `[t0_ns, t1_ns]`. Spans are clamped to the window, so a sweep that
+/// straddles an epoch boundary is split fairly between both epochs.
+pub fn attribute(spans: &[RawSpan], t0_ns: u64, t1_ns: u64) -> Attribution {
+    if t1_ns <= t0_ns {
+        return Attribution::default();
+    }
+    let mut access: Vec<(u64, u64)> = Vec::new();
+    let mut compute: Vec<(u64, u64)> = Vec::new();
+    for sp in spans {
+        let s = sp.start_ns.max(t0_ns);
+        let e = sp.end_ns.min(t1_ns);
+        if e <= s {
+            continue;
+        }
+        if sp.kind.is_access() {
+            access.push((s, e));
+        } else if sp.kind.is_compute() {
+            compute.push((s, e));
+        }
+    }
+    let access = merge_intervals(access);
+    let compute = merge_intervals(compute);
+    Attribution {
+        access_s: total_ns(&access) as f64 / 1e9,
+        compute_s: total_ns(&compute) as f64 / 1e9,
+        overlap_s: intersect_ns(&access, &compute) as f64 / 1e9,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sp(kind: SpanKind, s: u64, e: u64) -> RawSpan {
+        RawSpan { kind, start_ns: s, end_ns: e }
+    }
+
+    #[test]
+    fn merge_joins_touching_and_overlapping() {
+        let m = merge_intervals(vec![(5, 10), (0, 5), (20, 30), (8, 12), (12, 12)]);
+        assert_eq!(m, vec![(0, 12), (20, 30)]);
+        assert_eq!(total_ns(&m), 22);
+    }
+
+    #[test]
+    fn intersect_two_pointer() {
+        let a = vec![(0, 10), (20, 30)];
+        let b = vec![(5, 25)];
+        assert_eq!(intersect_ns(&a, &b), 5 + 5);
+        assert_eq!(intersect_ns(&a, &[]), 0);
+    }
+
+    #[test]
+    fn attribution_classifies_and_overlaps() {
+        // access on [0,100], compute on [50,150]: overlap 50 ns
+        let spans = vec![
+            sp(SpanKind::PageFault, 0, 100),
+            sp(SpanKind::SolverStep, 50, 150),
+            sp(SpanKind::CheckpointWrite, 200, 300), // neither class
+        ];
+        let a = attribute(&spans, 0, 1_000);
+        assert!((a.access_s - 100e-9).abs() < 1e-15);
+        assert!((a.compute_s - 100e-9).abs() < 1e-15);
+        assert!((a.overlap_s - 50e-9).abs() < 1e-15);
+        assert!((a.union_s() - 150e-9).abs() < 1e-15);
+        assert!(a.is_traced());
+    }
+
+    #[test]
+    fn spans_clamp_to_window() {
+        let spans = vec![sp(SpanKind::Decode, 0, 1_000)];
+        let a = attribute(&spans, 400, 600);
+        assert!((a.access_s - 200e-9).abs() < 1e-15);
+        // outside the window entirely
+        let b = attribute(&spans, 2_000, 3_000);
+        assert_eq!(b, Attribution::default());
+        assert!(!b.is_traced());
+    }
+
+    #[test]
+    fn union_never_exceeds_window() {
+        // adversarial pile of overlapping spans on a 1000 ns window
+        let mut spans = Vec::new();
+        for k in 0..50u64 {
+            spans.push(sp(SpanKind::PageFault, k * 7 % 900, k * 7 % 900 + 200));
+            spans.push(sp(SpanKind::SolverStep, k * 13 % 900, k * 13 % 900 + 150));
+        }
+        let a = attribute(&spans, 0, 1_000);
+        assert!(a.union_s() <= 1_000e-9 + 1e-15, "union={}", a.union_s());
+    }
+
+    #[test]
+    fn degenerate_window_is_zero() {
+        let spans = vec![sp(SpanKind::PageFault, 0, 10)];
+        assert_eq!(attribute(&spans, 5, 5), Attribution::default());
+        assert_eq!(attribute(&spans, 9, 2), Attribution::default());
+    }
+
+    #[test]
+    fn merge_accumulates() {
+        let mut a = Attribution { access_s: 1.0, compute_s: 2.0, overlap_s: 0.5 };
+        a.merge(&Attribution { access_s: 0.5, compute_s: 1.0, overlap_s: 0.25 });
+        assert!((a.access_s - 1.5).abs() < 1e-12);
+        assert!((a.compute_s - 3.0).abs() < 1e-12);
+        assert!((a.overlap_s - 0.75).abs() < 1e-12);
+        assert!((a.union_s() - 3.75).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,195 @@
+//! Trace exporters: Chrome `trace_event` JSON and the ASCII overlap map.
+//!
+//! The JSON exporter emits the stable subset of the Chrome trace-event
+//! format — an object with a `traceEvents` array of `ph:"X"` (complete)
+//! events plus `ph:"M"` thread-name metadata — loadable in
+//! `chrome://tracing` and Perfetto. Timestamps are microseconds on the
+//! shared monotonic base, so spans from every thread line up.
+//!
+//! The overlap map renders one ASCII lane per thread over the traced
+//! window (via `metrics/ascii_plot`), making the paper's access/compute
+//! overlap visible at a glance: columns where an access glyph on one
+//! lane coincides with `C` (solver step) on another are access time the
+//! prefetch pipeline successfully hid.
+
+use super::{batch_wait, fault_latency, retry_backoff, snapshot_all, SpanKind};
+use crate::metrics::ascii_plot::{render_timeline, TimelineLane};
+
+/// Minimal JSON string escaping (labels are crate-chosen, but a custom
+/// thread name could contain anything).
+fn esc(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+fn category(kind: SpanKind) -> &'static str {
+    if kind.is_access() {
+        "access"
+    } else if kind.is_compute() {
+        "compute"
+    } else {
+        "other"
+    }
+}
+
+/// Serialize every recorded span as Chrome trace-event JSON.
+pub fn chrome_trace_json() -> String {
+    let threads = snapshot_all();
+    let mut events: Vec<String> = Vec::new();
+    for t in &threads {
+        events.push(format!(
+            "{{\"ph\":\"M\",\"pid\":1,\"tid\":{},\"name\":\"thread_name\",\
+             \"args\":{{\"name\":\"{}\"}}}}",
+            t.tid,
+            esc(&t.label)
+        ));
+        for sp in &t.spans {
+            events.push(format!(
+                "{{\"ph\":\"X\",\"pid\":1,\"tid\":{},\"name\":\"{}\",\"cat\":\"{}\",\
+                 \"ts\":{:.3},\"dur\":{:.3}}}",
+                t.tid,
+                sp.kind.name(),
+                category(sp.kind),
+                sp.start_ns as f64 / 1e3,
+                (sp.end_ns - sp.start_ns) as f64 / 1e3,
+            ));
+        }
+    }
+    format!("{{\"traceEvents\":[\n{}\n]}}\n", events.join(",\n"))
+}
+
+/// Write the Chrome trace to `path`.
+pub fn write_chrome_trace(path: &str) -> std::io::Result<()> {
+    std::fs::write(path, chrome_trace_json())
+}
+
+/// Render the per-thread ASCII overlap map over the full traced window,
+/// `width` columns wide. Includes a glyph legend and a truncation note
+/// when any ring wrapped.
+pub fn overlap_map(width: usize) -> String {
+    let threads = snapshot_all();
+    let mut t0 = u64::MAX;
+    let mut t1 = 0u64;
+    for t in &threads {
+        for sp in &t.spans {
+            t0 = t0.min(sp.start_ns);
+            t1 = t1.max(sp.end_ns);
+        }
+    }
+    if t1 <= t0 {
+        return "overlap map: (no spans)\n".to_string();
+    }
+    let span_s = (t1 - t0) as f64 / 1e9;
+    let lanes: Vec<TimelineLane> = threads
+        .iter()
+        .filter(|t| !t.spans.is_empty())
+        .map(|t| TimelineLane {
+            label: t.label.clone(),
+            spans: t
+                .spans
+                .iter()
+                .map(|sp| {
+                    (
+                        (sp.start_ns - t0) as f64 / 1e9,
+                        (sp.end_ns - t0) as f64 / 1e9,
+                        sp.kind.glyph(),
+                    )
+                })
+                .collect(),
+        })
+        .collect();
+    let mut out = String::new();
+    out.push_str("overlap map (access: F=fault V=verify D=decode A=assemble R=readahead \
+                  S=stall | compute: C=step G=sweep | K=checkpoint)\n");
+    out.push_str(&render_timeline(&lanes, span_s, width));
+    let dropped: u64 = threads.iter().map(|t| t.dropped).sum();
+    if dropped > 0 {
+        out.push_str(&format!(
+            "note: {dropped} span(s) lost to ring wraparound — oldest spans are missing\n"
+        ));
+    }
+    out
+}
+
+/// One-line summaries of the three latency histograms.
+pub fn histogram_summaries() -> String {
+    format!(
+        "{}\n{}\n{}\n",
+        fault_latency().summary(),
+        batch_wait().summary(),
+        retry_backoff().summary()
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::{arm, disarm, record_span, set_thread_label, test_gate};
+
+    #[test]
+    fn escape_handles_specials() {
+        assert_eq!(esc("a\"b\\c\nd"), "a\\\"b\\\\c\\nd");
+        assert_eq!(esc("\u{1}"), "\\u0001");
+        assert_eq!(esc("plain"), "plain");
+    }
+
+    #[test]
+    fn chrome_json_has_events_and_thread_names() {
+        let _g = test_gate();
+        arm();
+        std::thread::spawn(|| {
+            set_thread_label("export-test-thread");
+            record_span(SpanKind::CheckpointWrite, 5_000_000, 7_500_000);
+        })
+        .join()
+        .unwrap();
+        disarm();
+        let json = chrome_trace_json();
+        assert!(json.starts_with("{\"traceEvents\":[\n"), "{json}");
+        assert!(json.trim_end().ends_with("]}"), "{json}");
+        assert!(json.contains("\"thread_name\""), "{json}");
+        assert!(json.contains("export-test-thread"), "{json}");
+        // the recorded span: ts = 5000 us, dur = 2500 us, category "other"
+        assert!(json.contains("\"checkpoint_write\""), "{json}");
+        assert!(json.contains("\"ts\":5000.000,\"dur\":2500.000"), "{json}");
+        assert!(json.contains("\"cat\":\"other\""), "{json}");
+    }
+
+    #[test]
+    fn overlap_map_renders_lanes_and_legend() {
+        let _g = test_gate();
+        arm();
+        std::thread::spawn(|| {
+            set_thread_label("export-map-thread");
+            record_span(SpanKind::PageFault, 1_000_000, 400_000_000);
+            record_span(SpanKind::SolverStep, 500_000_000, 900_000_000);
+        })
+        .join()
+        .unwrap();
+        disarm();
+        let map = overlap_map(60);
+        assert!(map.contains("overlap map"), "{map}");
+        assert!(map.contains("export-map-thread"), "{map}");
+        assert!(map.contains('F'), "{map}");
+        assert!(map.contains('C'), "{map}");
+    }
+
+    #[test]
+    fn histogram_summaries_cover_all_three() {
+        let s = histogram_summaries();
+        assert!(s.contains("fault_latency_ns"), "{s}");
+        assert!(s.contains("batch_wait_ns"), "{s}");
+        assert!(s.contains("retry_backoff_ns"), "{s}");
+    }
+}

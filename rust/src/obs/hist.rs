@@ -1,0 +1,187 @@
+//! Log-bucketed (HDR-style) latency histograms.
+//!
+//! 64 power-of-two buckets over `u64` nanoseconds: a value `v` lands in
+//! bucket `floor(log2 v)` (bucket 0 holds 0 and 1 ns). That gives ~2x
+//! relative resolution from nanoseconds to centuries with a fixed 520-byte
+//! footprint and wait-free recording — each record is two or three relaxed
+//! atomic increments, no allocation, no locks, so the data plane can feed
+//! them from any thread.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Number of power-of-two buckets (covers the full `u64` range).
+pub const BUCKETS: usize = 64;
+
+/// A concurrent log-bucketed histogram of nanosecond values.
+pub struct LogHistogram {
+    /// Stable id, used by exporters ("fault_latency_ns", ...).
+    name: &'static str,
+    buckets: Vec<AtomicU64>,
+    count: AtomicU64,
+    sum_ns: AtomicU64,
+}
+
+/// Bucket index of a value: `floor(log2 v)`, with 0 mapping to bucket 0.
+fn bucket_of(v: u64) -> usize {
+    if v <= 1 {
+        0
+    } else {
+        63 - v.leading_zeros() as usize
+    }
+}
+
+impl LogHistogram {
+    /// Fresh empty histogram.
+    pub fn new(name: &'static str) -> LogHistogram {
+        LogHistogram {
+            name,
+            buckets: (0..BUCKETS).map(|_| AtomicU64::new(0)).collect(),
+            count: AtomicU64::new(0),
+            sum_ns: AtomicU64::new(0),
+        }
+    }
+
+    /// Stable id.
+    pub fn name(&self) -> &'static str {
+        self.name
+    }
+
+    /// Record one nanosecond value (wait-free; callers gate on
+    /// `obs::armed()` so the disarmed hot path does not even compute `ns`).
+    pub fn record(&self, ns: u64) {
+        // relaxed-ok: independent stats counters; exporters tolerate
+        // momentarily inconsistent count/sum/bucket views
+        self.buckets[bucket_of(ns)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_ns.fetch_add(ns, Ordering::Relaxed);
+    }
+
+    /// Total recorded values.
+    pub fn count(&self) -> u64 {
+        // relaxed-ok: stats counter
+        self.count.load(Ordering::Relaxed)
+    }
+
+    /// Sum of recorded values, ns.
+    pub fn sum_ns(&self) -> u64 {
+        // relaxed-ok: stats counter
+        self.sum_ns.load(Ordering::Relaxed)
+    }
+
+    /// Mean recorded value, ns (0 when empty).
+    pub fn mean_ns(&self) -> f64 {
+        let c = self.count();
+        if c == 0 {
+            0.0
+        } else {
+            self.sum_ns() as f64 / c as f64
+        }
+    }
+
+    /// Upper bound (exclusive, saturating) of the bucket holding the
+    /// `q`-quantile, `q` in [0, 1]. 0 when empty. An upper bound is what
+    /// a log-bucketed histogram can honestly report: the true quantile
+    /// lies within a factor of 2 below it.
+    pub fn quantile_upper_ns(&self, q: f64) -> u64 {
+        let total = self.count();
+        if total == 0 {
+            return 0;
+        }
+        let rank = ((q.clamp(0.0, 1.0) * total as f64).ceil() as u64).max(1);
+        let mut seen = 0u64;
+        for (i, b) in self.buckets.iter().enumerate() {
+            // relaxed-ok: stats counter scan for reporting
+            seen += b.load(Ordering::Relaxed);
+            if seen >= rank {
+                return if i >= 63 { u64::MAX } else { 2u64 << i };
+            }
+        }
+        u64::MAX
+    }
+
+    /// Reset all counters (on trace re-arm).
+    pub fn clear(&self) {
+        for b in &self.buckets {
+            // relaxed-ok: stats counter reset on the cold re-arm path
+            b.store(0, Ordering::Relaxed);
+        }
+        // relaxed-ok: stats counter reset on the cold re-arm path
+        self.count.store(0, Ordering::Relaxed);
+        // relaxed-ok: stats counter reset on the cold re-arm path
+        self.sum_ns.store(0, Ordering::Relaxed);
+    }
+
+    /// One-line human summary: `name: n=…, mean=…, p50≤…, p99≤…, max≤…`.
+    pub fn summary(&self) -> String {
+        let to_s = |ns: u64| ns as f64 / 1e9;
+        format!(
+            "{}: n={} mean={} p50<={} p99<={} max<={}",
+            self.name,
+            self.count(),
+            crate::metrics::timer::human(self.mean_ns() / 1e9),
+            crate::metrics::timer::human(to_s(self.quantile_upper_ns(0.50))),
+            crate::metrics::timer::human(to_s(self.quantile_upper_ns(0.99))),
+            crate::metrics::timer::human(to_s(self.quantile_upper_ns(1.0))),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_boundaries() {
+        assert_eq!(bucket_of(0), 0);
+        assert_eq!(bucket_of(1), 0);
+        assert_eq!(bucket_of(2), 1);
+        assert_eq!(bucket_of(3), 1);
+        assert_eq!(bucket_of(4), 2);
+        assert_eq!(bucket_of(1023), 9);
+        assert_eq!(bucket_of(1024), 10);
+        assert_eq!(bucket_of(u64::MAX), 63);
+    }
+
+    #[test]
+    fn count_sum_mean() {
+        let h = LogHistogram::new("t");
+        h.record(100);
+        h.record(300);
+        assert_eq!(h.count(), 2);
+        assert_eq!(h.sum_ns(), 400);
+        assert!((h.mean_ns() - 200.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn quantiles_are_upper_bounds() {
+        let h = LogHistogram::new("t");
+        for _ in 0..99 {
+            h.record(1_000); // bucket 9 ([512, 1024)) -> upper bound 1024
+        }
+        h.record(1_000_000); // bucket 19 -> upper bound 2^20
+        let p50 = h.quantile_upper_ns(0.50);
+        assert!(p50 >= 1_000 && p50 <= 1_024, "p50={p50}");
+        let p100 = h.quantile_upper_ns(1.0);
+        assert!(p100 >= 1_000_000, "max={p100}");
+        assert_eq!(LogHistogram::new("e").quantile_upper_ns(0.99), 0);
+    }
+
+    #[test]
+    fn clear_resets() {
+        let h = LogHistogram::new("t");
+        h.record(5);
+        h.clear();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.sum_ns(), 0);
+        assert_eq!(h.quantile_upper_ns(0.5), 0);
+    }
+
+    #[test]
+    fn summary_mentions_name_and_count() {
+        let h = LogHistogram::new("fault_latency_ns");
+        h.record(2_000);
+        let s = h.summary();
+        assert!(s.contains("fault_latency_ns"), "{s}");
+        assert!(s.contains("n=1"), "{s}");
+    }
+}

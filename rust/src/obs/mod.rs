@@ -1,0 +1,365 @@
+//! `samplex-trace`: the zero-dependency observability plane.
+//!
+//! The paper's eq. (1) says training time = data-access time + compute
+//! time; this module *measures* that split instead of inferring it from
+//! counters. It has four parts:
+//!
+//! * [`ring`] — lock-free per-thread span ring buffers. Every phase
+//!   boundary of the data and compute planes (page fault, checksum
+//!   verify, decode, batch assemble, readahead prefault, prefetch stall,
+//!   chunked sweep, solver step, checkpoint write) is bracketed by a
+//!   [`begin`]/[`SpanTimer::end`] pair that records `(kind, start_ns,
+//!   end_ns)` into the calling thread's ring.
+//! * [`hist`] — log-bucketed latency histograms (fault latency,
+//!   batch-wait, retry backoff) unifying what `IoStats` /
+//!   `PrefetchStats` / `TimeBreakdown` only expose as totals.
+//! * [`attr`] — per-epoch access / compute / overlap attribution
+//!   computed from the spans ([`Attribution`], surfaced in
+//!   `TrainReport` and the harness CSV).
+//! * [`export`] — Chrome `trace_event` JSON (`samplex train --trace
+//!   out.json`, load in `chrome://tracing` / Perfetto) and the ASCII
+//!   per-thread "overlap map".
+//!
+//! **Zero cost disarmed.** All instrumentation is gated on a single
+//! relaxed [`armed`] flag: when tracing is off, [`begin`] returns `None`
+//! before touching the clock, so hot paths take *zero* timestamps and
+//! allocate nothing (rings are created lazily on a thread's first
+//! recorded span). Tracing never influences control flow — the
+//! determinism suite pins traced vs untraced runs bit-identical.
+//!
+//! Timestamps come exclusively from the crate's single clock seam,
+//! [`crate::metrics::timer::monotonic_ns`], so spans from every thread
+//! share one origin and lint rule R8 (`clock-discipline`) can ban raw
+//! clock reads elsewhere.
+
+pub mod attr;
+pub mod export;
+pub mod hist;
+pub mod ring;
+
+pub use attr::{attribute, Attribution};
+pub use hist::LogHistogram;
+pub use ring::{RawSpan, SpanKind, SpanRing};
+
+use std::cell::RefCell;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard, OnceLock};
+
+use crate::metrics::timer::monotonic_ns;
+
+/// Global arming flag. Hot paths read it relaxed and bail before any
+/// clock or ring work when it is false.
+static ARMED: AtomicBool = AtomicBool::new(false);
+
+/// Is tracing currently armed?
+#[inline]
+pub fn armed() -> bool {
+    // relaxed-ok: an independent on/off gate for optional diagnostics;
+    // arming happens before the traced run starts and disarming after it
+    // ends, so no span payload is ordered through this flag
+    ARMED.load(Ordering::Relaxed)
+}
+
+/// Arm tracing: clears every registered ring and histogram so the new
+/// trace starts empty, then enables span recording.
+pub fn arm() {
+    for entry in registry().iter() {
+        entry.clear();
+    }
+    fault_latency().clear();
+    batch_wait().clear();
+    retry_backoff().clear();
+    ARMED.store(true, Ordering::SeqCst);
+}
+
+/// Disarm tracing. Already-recorded spans stay readable for export.
+pub fn disarm() {
+    ARMED.store(false, Ordering::SeqCst);
+}
+
+/// The process-wide ring registry: one entry per thread that has ever
+/// recorded a span (or labeled itself). Rings are never removed — a
+/// finished thread's spans remain exportable.
+fn registry() -> MutexGuard<'static, Vec<Arc<SpanRing>>> {
+    static REGISTRY: OnceLock<Mutex<Vec<Arc<SpanRing>>>> = OnceLock::new();
+    let m = REGISTRY.get_or_init(|| Mutex::new(Vec::new()));
+    match m.lock() {
+        Ok(g) => g,
+        Err(p) => p.into_inner(),
+    }
+}
+
+thread_local! {
+    /// This thread's ring, created and registered on first use.
+    static LOCAL_RING: RefCell<Option<Arc<SpanRing>>> = const { RefCell::new(None) };
+}
+
+/// Get (or lazily create + register) the calling thread's ring.
+fn local_ring() -> Option<Arc<SpanRing>> {
+    LOCAL_RING
+        .try_with(|cell| {
+            let mut slot = cell.borrow_mut();
+            if slot.is_none() {
+                let mut reg = registry();
+                let tid = reg.len() as u64 + 1;
+                let label = std::thread::current()
+                    .name()
+                    .map(str::to_string)
+                    .unwrap_or_else(|| format!("thread-{tid}"));
+                let ring = Arc::new(SpanRing::new(tid, label));
+                reg.push(ring.clone());
+                *slot = Some(ring);
+            }
+            slot.clone()
+        })
+        .ok()
+        .flatten()
+}
+
+/// Label the calling thread for traces and the overlap map ("driver",
+/// "reader", "readahead", "pool-worker-3", ...). Cheap enough to call
+/// unconditionally at thread start; registers the thread's ring as a
+/// side effect so even span-free threads appear in exports.
+pub fn set_thread_label(label: &str) {
+    if let Some(ring) = local_ring() {
+        ring.set_label(label);
+    }
+}
+
+/// An in-flight span. Dropping it without [`end`](SpanTimer::end) records
+/// nothing; ending it pushes the span into the thread's ring.
+#[derive(Debug)]
+pub struct SpanTimer {
+    kind: SpanKind,
+    start_ns: u64,
+}
+
+/// Open a span of `kind` at the current instant. Returns `None` — before
+/// reading the clock — when tracing is disarmed; call sites thread the
+/// `Option` through and call [`SpanTimer::end`] at the phase boundary.
+#[inline]
+pub fn begin(kind: SpanKind) -> Option<SpanTimer> {
+    if !armed() {
+        return None;
+    }
+    Some(SpanTimer { kind, start_ns: monotonic_ns() })
+}
+
+impl SpanTimer {
+    /// Nanoseconds elapsed since the span opened — lets a call site feed
+    /// a latency histogram without a second timing source.
+    #[inline]
+    pub fn elapsed_ns(&self) -> u64 {
+        monotonic_ns().saturating_sub(self.start_ns)
+    }
+
+    /// Close the span now and record it.
+    pub fn end(self) {
+        let end_ns = monotonic_ns();
+        if let Some(ring) = local_ring() {
+            ring.push(self.kind, self.start_ns, end_ns);
+        }
+    }
+}
+
+/// Close an optional span (the shape every instrumented call site uses:
+/// `let sp = obs::begin(..); ...; obs::end(sp);`).
+#[inline]
+pub fn end(span: Option<SpanTimer>) {
+    if let Some(sp) = span {
+        sp.end();
+    }
+}
+
+/// Record a span from timestamps the caller already holds (e.g. a
+/// latency that was measured anyway for `IoStats`). No-op when disarmed.
+#[inline]
+pub fn record_span(kind: SpanKind, start_ns: u64, end_ns: u64) {
+    if !armed() {
+        return;
+    }
+    if let Some(ring) = local_ring() {
+        ring.push(kind, start_ns, end_ns);
+    }
+}
+
+/// Histogram of demand-fault read latencies (seek + read + retry), ns.
+pub fn fault_latency() -> &'static LogHistogram {
+    static H: OnceLock<LogHistogram> = OnceLock::new();
+    H.get_or_init(|| LogHistogram::new("fault_latency_ns"))
+}
+
+/// Histogram of consumer batch-wait / prefault-wait times, ns.
+pub fn batch_wait() -> &'static LogHistogram {
+    static H: OnceLock<LogHistogram> = OnceLock::new();
+    H.get_or_init(|| LogHistogram::new("batch_wait_ns"))
+}
+
+/// Histogram of retry backoff sleeps, ns.
+pub fn retry_backoff() -> &'static LogHistogram {
+    static H: OnceLock<LogHistogram> = OnceLock::new();
+    H.get_or_init(|| LogHistogram::new("retry_backoff_ns"))
+}
+
+/// Snapshot of one thread's trace: `(tid, label, spans, dropped)`.
+pub struct ThreadTrace {
+    /// Registry-assigned thread id.
+    pub tid: u64,
+    /// Thread label at snapshot time.
+    pub label: String,
+    /// Published spans, oldest first.
+    pub spans: Vec<RawSpan>,
+    /// Spans lost to ring wraparound.
+    pub dropped: u64,
+}
+
+/// Snapshot every registered thread's ring (ordered by tid).
+pub fn snapshot_all() -> Vec<ThreadTrace> {
+    let rings: Vec<Arc<SpanRing>> = registry().clone();
+    let mut out: Vec<ThreadTrace> = rings
+        .iter()
+        .map(|r| ThreadTrace {
+            tid: r.tid(),
+            label: r.label(),
+            spans: r.snapshot(),
+            dropped: r.dropped(),
+        })
+        .collect();
+    out.sort_by_key(|t| t.tid);
+    out
+}
+
+/// Attribute all recorded spans to the window `[t0_ns, t1_ns]`, merging
+/// across every thread: the per-epoch access / compute / overlap split.
+pub fn attribute_window(t0_ns: u64, t1_ns: u64) -> Attribution {
+    let mut spans: Vec<RawSpan> = Vec::new();
+    for t in snapshot_all() {
+        spans.extend(t.spans);
+    }
+    attribute(&spans, t0_ns, t1_ns)
+}
+
+/// Serializes tests that toggle the process-global arming flag (shared
+/// by the unit tests of this module and of [`export`]).
+#[cfg(test)]
+pub(crate) fn test_gate() -> MutexGuard<'static, ()> {
+    static GATE: Mutex<()> = Mutex::new(());
+    match GATE.lock() {
+        Ok(g) => g,
+        Err(p) => p.into_inner(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn gate() -> MutexGuard<'static, ()> {
+        test_gate()
+    }
+
+    #[test]
+    fn begin_is_none_when_disarmed() {
+        let _g = gate();
+        disarm();
+        assert!(begin(SpanKind::SolverStep).is_none());
+        end(None); // harmless
+    }
+
+    #[test]
+    fn armed_spans_reach_the_snapshot() {
+        let _g = gate();
+        arm();
+        let sp = begin(SpanKind::Decode);
+        assert!(sp.is_some());
+        end(sp);
+        let marker = RawSpan { kind: SpanKind::PageFault, start_ns: 1, end_ns: 2 };
+        record_span(marker.kind, marker.start_ns, marker.end_ns);
+        disarm();
+        let all = snapshot_all();
+        // this thread's ring holds both spans
+        let mine = all
+            .iter()
+            .find(|t| t.spans.contains(&marker))
+            .expect("recording thread present in snapshot");
+        assert!(mine.spans.iter().any(|s| s.kind == SpanKind::Decode));
+        assert_eq!(mine.dropped, 0);
+        assert!(!mine.label.is_empty());
+    }
+
+    #[test]
+    fn record_span_is_noop_disarmed() {
+        let _g = gate();
+        disarm();
+        // count spans of a kind nothing else uses in this test module
+        let before: usize = snapshot_all()
+            .iter()
+            .flat_map(|t| t.spans.iter())
+            .filter(|s| s.kind == SpanKind::CheckpointWrite)
+            .count();
+        record_span(SpanKind::CheckpointWrite, 10, 20);
+        let after: usize = snapshot_all()
+            .iter()
+            .flat_map(|t| t.spans.iter())
+            .filter(|s| s.kind == SpanKind::CheckpointWrite)
+            .count();
+        assert_eq!(before, after);
+    }
+
+    #[test]
+    fn arm_clears_previous_trace() {
+        let _g = gate();
+        arm();
+        record_span(SpanKind::ChunkedSweep, 5, 9);
+        fault_latency().record(77);
+        arm(); // re-arm clears
+        let leftover: usize = snapshot_all()
+            .iter()
+            .flat_map(|t| t.spans.iter())
+            .filter(|s| s.kind == SpanKind::ChunkedSweep)
+            .count();
+        disarm();
+        assert_eq!(leftover, 0);
+        assert_eq!(fault_latency().count(), 0);
+    }
+
+    #[test]
+    fn thread_labels_show_up() {
+        let _g = gate();
+        arm();
+        std::thread::spawn(|| {
+            set_thread_label("obs-test-worker");
+            record_span(SpanKind::BatchAssemble, 1, 3);
+        })
+        .join()
+        .unwrap();
+        disarm();
+        let all = snapshot_all();
+        assert!(
+            all.iter().any(|t| t.label == "obs-test-worker"),
+            "labels: {:?}",
+            all.iter().map(|t| t.label.clone()).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn attribute_window_merges_across_threads() {
+        let _g = gate();
+        arm();
+        // use a far-future window so spans from other tests (earlier
+        // timestamps) cannot leak in
+        let t0 = u64::MAX - 1_000_000;
+        record_span(SpanKind::PageFault, t0 + 100, t0 + 300);
+        std::thread::spawn(move || {
+            set_thread_label("obs-attr-worker");
+            record_span(SpanKind::SolverStep, t0 + 200, t0 + 400);
+        })
+        .join()
+        .unwrap();
+        disarm();
+        let a = attribute_window(t0, t0 + 1_000);
+        assert!((a.access_s - 200e-9).abs() < 1e-15, "{a:?}");
+        assert!((a.compute_s - 200e-9).abs() < 1e-15, "{a:?}");
+        assert!((a.overlap_s - 100e-9).abs() < 1e-15, "{a:?}");
+    }
+}

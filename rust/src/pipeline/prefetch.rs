@@ -275,7 +275,15 @@ impl Prefetcher {
         if !self.epoch_open {
             return Ok(None);
         }
-        match self.rx.recv() {
+        // the consumer-side batch wait: how long the solver sat idle
+        // before data arrived (a span + histogram feed when traced)
+        let wait_sp = crate::obs::begin(crate::obs::SpanKind::PrefetchStall);
+        let received = self.rx.recv();
+        if let Some(sp) = wait_sp {
+            crate::obs::batch_wait().record(sp.elapsed_ns());
+            sp.end();
+        }
+        match received {
             Ok(BatchMsg::Batch(b)) => Ok(Some(b)),
             Ok(BatchMsg::EpochEnd(stats)) => {
                 self.last_epoch = stats;
@@ -338,6 +346,9 @@ fn reader_loop(
     mut readahead: Option<Readahead>,
 ) -> (AccessSimulator, PrefetchStats) {
     let mut totals = PrefetchStats::default();
+    if crate::obs::armed() {
+        crate::obs::set_thread_label("reader");
+    }
     // How many batches the reader keeps *published* ahead of consumption.
     // Bounds the readahead command channel at O(ahead) run lists even for
     // scattered epochs (one run per row), instead of O(rows) for a whole
@@ -378,7 +389,8 @@ fn reader_loop(
                     continue 'serve;
                 }
             }
-            let t0 = std::time::Instant::now();
+            let asm_sp = crate::obs::begin(crate::obs::SpanKind::BatchAssemble);
+            let t0 = crate::metrics::timer::Stopwatch::start();
             let rows = sel.len();
             let assembled: Result<BatchPayload> = match (sel, paged) {
                 (RowSelection::Contiguous { start, end }, None) => {
@@ -431,7 +443,8 @@ fn reader_loop(
                     continue 'serve;
                 }
             };
-            let assemble_s = t0.elapsed().as_secs_f64();
+            let assemble_s = t0.elapsed_s();
+            crate::obs::end(asm_sp);
             es.sim_access_s += sim_cost.time_s;
             es.assemble_s += assemble_s;
             es.batches += 1;

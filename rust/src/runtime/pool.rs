@@ -154,6 +154,12 @@ fn work(run: &Run) {
 
 fn worker_loop(rx: std::sync::mpsc::Receiver<Arc<Run>>) {
     while let Ok(run) = rx.recv() {
+        if crate::obs::armed() {
+            // register this worker in the trace registry under its OS
+            // thread name so even span-free workers appear in exports
+            let t = std::thread::current();
+            crate::obs::set_thread_label(t.name().unwrap_or("samplex-pool"));
+        }
         let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| work(&run)));
         if res.is_err() {
             run.panicked.store(true, Ordering::SeqCst);

@@ -8,6 +8,12 @@
 //! Layer-2 modules (`python/compile/model.py`); every solver first offers
 //! the step to [`ComputeBackend::fused`] and falls back to
 //! gradient-plus-host-algebra when the backend declines.
+//!
+//! When the tracing plane is armed, the training driver brackets every
+//! mini-batch step with a `SolverStep` span (and every full-dataset sweep
+//! with `ChunkedSweep`), so the compute side of the paper's eq. (1) is
+//! measured on the same clock as the access side — see [`crate::obs`].
+//! The solvers themselves never read a clock (lint rule R8).
 
 pub mod linesearch;
 pub mod mbsgd;

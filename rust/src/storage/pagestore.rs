@@ -169,12 +169,27 @@ impl IoStats {
         }
     }
 
-    /// Achieved read throughput in MB/s (0 when nothing was read).
+    /// Achieved read throughput in MB/s over the time actually spent
+    /// inside read syscalls (0 when nothing was read). This is the
+    /// honest device throughput; compare with [`IoStats::wall_mbps`].
     pub fn mb_per_s(&self) -> f64 {
         if self.read_s <= 0.0 {
             0.0
         } else {
             self.bytes_read as f64 / 1e6 / self.read_s
+        }
+    }
+
+    /// Delivered MB/s over a caller-supplied wall window — a denominator
+    /// that includes compute and idle time, so it *understates* device
+    /// throughput whenever access overlaps compute. Reported next to
+    /// [`IoStats::mb_per_s`] so the two attributions can be compared
+    /// (their gap is the overlap the prefetch pipeline bought).
+    pub fn wall_mbps(&self, wall_s: f64) -> f64 {
+        if wall_s <= 0.0 {
+            0.0
+        } else {
+            self.bytes_read as f64 / 1e6 / wall_s
         }
     }
 
@@ -637,10 +652,18 @@ impl PageStore {
         let region_len = inner.n_elems * eb;
         let mut raw = vec![0u8; nbytes as usize];
         let mut fetches_left = inner.retry.max_attempts.max(1);
+        // trace kind for the raw device read: demand faults stall the
+        // consumer, readahead prefaults overlap with compute
+        let fault_kind = if demand {
+            crate::obs::SpanKind::PageFault
+        } else {
+            crate::obs::SpanKind::ReadaheadPrefault
+        };
         loop {
-            let elapsed = {
+            let read_sp = crate::obs::begin(fault_kind);
+            let ns = {
                 let mut file = lock_recovering(&inner.file);
-                let sw = std::time::Instant::now();
+                let sw = crate::metrics::timer::Stopwatch::start();
                 let outcome =
                     retry::read_exact_at(&mut file, byte_lo, &mut raw, &inner.retry, byte_lo, "page run read")
                         .map_err(|e| match e {
@@ -657,9 +680,8 @@ impl PageStore {
                     // relaxed-ok: pure stats counter (recovered transients).
                     inner.stats.retries.fetch_add(outcome.retries as u64, Ordering::Relaxed);
                 }
-                sw.elapsed()
+                sw.elapsed_ns()
             };
-            let ns = elapsed.as_nanos() as u64;
             // relaxed-ok: monotonic stats counters; nothing synchronizes on
             // them and the snapshot tolerates torn cross-counter views.
             inner.stats.read_ns.fetch_add(ns, Ordering::Relaxed);
@@ -669,11 +691,19 @@ impl PageStore {
                 // relaxed-ok: same stats-counter argument as above.
                 inner.stats.stall_ns.fetch_add(ns, Ordering::Relaxed);
             }
-            match inner
+            crate::obs::end(read_sp);
+            if crate::obs::armed() {
+                // the latency was measured anyway for read_ns — no extra
+                // clock read on the histogram feed
+                crate::obs::fault_latency().record(ns);
+            }
+            let verify_sp = crate::obs::begin(crate::obs::SpanKind::ChecksumVerify);
+            let verdict = inner
                 .checksums
                 .as_ref()
-                .and_then(|t| t.verify_region(rel_lo, &raw, region_len))
-            {
+                .and_then(|t| t.verify_region(rel_lo, &raw, region_len));
+            crate::obs::end(verify_sp);
+            match verdict {
                 None => break,
                 Some(bad_rel) => {
                     fetches_left -= 1;
@@ -702,6 +732,7 @@ impl PageStore {
         // Acquire pairs with the Release store in `set_idx_bound`, so a
         // bound published before this fault is seen by its validation.
         let idx_bound = inner.idx_bound.load(Ordering::Acquire);
+        let decode_sp = crate::obs::begin(crate::obs::SpanKind::Decode);
         let mut out = Vec::with_capacity((hi - lo + 1) as usize);
         for id in lo..=hi {
             let a = ((id * inner.elems_per_page - first_elem) * inner.layout.elem_bytes()) as usize;
@@ -723,6 +754,7 @@ impl PageStore {
             }
             out.push(Arc::new(page));
         }
+        crate::obs::end(decode_sp);
         Ok(out)
     }
 
@@ -917,12 +949,12 @@ impl PageStore {
         Ok(faulted_pages)
     }
 
-    fn add_stall(&self, d: Duration) {
+    fn add_stall(&self, ns: u64) {
         self.inner
             .stats
             .stall_ns
             // relaxed-ok: pure stats counter.
-            .fetch_add(d.as_nanos() as u64, Ordering::Relaxed);
+            .fetch_add(ns, Ordering::Relaxed);
     }
 
     /// Drop every resident page (counters preserved) — e.g. to cold-start
@@ -1089,18 +1121,27 @@ impl Readahead {
             return Ok(RaWait::Ready);
         }
         let timeout_ms = self.store.inner.io_timeout_ms;
-        let deadline = (timeout_ms > 0).then(|| Duration::from_millis(timeout_ms));
-        let sw = std::time::Instant::now();
+        let deadline_s = (timeout_ms > 0).then(|| timeout_ms as f64 / 1e3);
+        let stall_sp = crate::obs::begin(crate::obs::SpanKind::PrefetchStall);
+        let sw = crate::metrics::timer::Stopwatch::start();
+        // close out one wait: charge the stall and feed the wait histogram
+        let settle = |waited_ns: u64, sp: Option<crate::obs::SpanTimer>| {
+            self.store.add_stall(waited_ns);
+            if crate::obs::armed() {
+                crate::obs::batch_wait().record(waited_ns);
+            }
+            crate::obs::end(sp);
+        };
         let mut st = lock_recovering(&self.shared.state);
         loop {
             if st.completed > batch_seq {
                 drop(st);
-                self.store.add_stall(sw.elapsed());
+                settle(sw.elapsed_ns(), stall_sp);
                 return Ok(RaWait::Ready);
             }
             if st.dead {
                 drop(st);
-                self.store.add_stall(sw.elapsed());
+                settle(sw.elapsed_ns(), stall_sp);
                 // relaxed-ok: once-flag feeding the `degraded` stats
                 // counter; single consumer, nothing synchronizes on it.
                 if !self.degraded_noted.swap(true, Ordering::Relaxed) {
@@ -1109,14 +1150,15 @@ impl Readahead {
                 }
                 return Ok(RaWait::Degraded);
             }
-            if let Some(d) = deadline {
-                let waited = sw.elapsed();
-                if waited >= d {
+            if let Some(d) = deadline_s {
+                let waited_ns = sw.elapsed_ns();
+                let waited_s = waited_ns as f64 / 1e9;
+                if waited_s >= d {
                     drop(st);
-                    self.store.add_stall(waited);
+                    settle(waited_ns, stall_sp);
                     return Err(Error::IoTimeout {
                         op: format!("waiting for readahead of batch {batch_seq}"),
-                        waited_s: waited.as_secs_f64(),
+                        waited_s,
                     });
                 }
             }
@@ -1182,6 +1224,9 @@ fn readahead_loop(store: PageStore, shared: Arc<RaShared>, rx: Receiver<ElemRuns
         }
     }
     let _guard = DeadGuard(Arc::clone(&shared));
+    if crate::obs::armed() {
+        crate::obs::set_thread_label("readahead");
+    }
     while let Ok(runs) = rx.recv() {
         let pages: u64 = runs
             .iter()

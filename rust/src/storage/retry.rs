@@ -23,9 +23,10 @@
 //! them. The attempt loop below therefore drives raw `read_some` calls
 //! itself and classifies every error.
 
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
 use crate::error::{Error, Result};
+use crate::metrics::timer::Stopwatch;
 use crate::rng::splitmix64;
 use crate::testing::faults::FaultyFile;
 
@@ -142,7 +143,7 @@ pub fn read_exact_at(
     seed: u64,
     op: &str,
 ) -> Result<ReadOutcome> {
-    let start = Instant::now();
+    let start = Stopwatch::start();
     let deadline = policy.deadline();
     let max_attempts = policy.max_attempts.max(1);
     let mut attempt = 1u32;
@@ -151,11 +152,11 @@ pub fn read_exact_at(
             Ok(()) => return Ok(ReadOutcome { retries: attempt - 1 }),
             Err(e) if is_transient(e.kind()) => {
                 if let Some(d) = deadline {
-                    let waited = start.elapsed();
-                    if waited >= d {
+                    let waited_s = start.elapsed_s();
+                    if waited_s >= d.as_secs_f64() {
                         return Err(Error::IoTimeout {
                             op: format!("{op} at byte {offset}"),
-                            waited_s: waited.as_secs_f64(),
+                            waited_s,
                         });
                     }
                 }
@@ -165,7 +166,13 @@ pub fn read_exact_at(
                         format!("{op} at byte {offset}: still failing after {max_attempts} attempts: {e}"),
                     )));
                 }
-                std::thread::sleep(Duration::from_micros(policy.backoff_us(attempt, seed)));
+                let backoff_us = policy.backoff_us(attempt, seed);
+                if crate::obs::armed() {
+                    // the sleep *duration* is a pure function of (policy,
+                    // seed, attempt) — recording it takes no clock read
+                    crate::obs::retry_backoff().record(backoff_us.saturating_mul(1_000));
+                }
+                std::thread::sleep(Duration::from_micros(backoff_us));
                 attempt += 1;
             }
             Err(e) => return Err(Error::Io(e)),

@@ -59,6 +59,9 @@ pub struct TrainReport {
     pub trace: Trace,
     /// Time decomposition.
     pub time: TimeBreakdown,
+    /// Traced access / compute / overlap attribution, summed over the
+    /// per-epoch windows (all-zero unless tracing was armed for the run).
+    pub attr: crate::obs::Attribution,
     /// Final full-dataset objective.
     pub final_objective: f64,
     /// The constant step size used (1/L), even under line search (reported
@@ -206,6 +209,16 @@ pub fn run_experiment_with_backend(
         trace.push(0, 0.0, obj0);
     }
 
+    // observability: label this thread in traces and accumulate per-epoch
+    // access/compute/overlap attribution. Everything here is read-only
+    // diagnostics gated on `obs::armed()` — no timestamps when disarmed,
+    // and never any influence on the trajectory.
+    if crate::obs::armed() {
+        crate::obs::set_thread_label("driver");
+    }
+    let mut attr = crate::obs::Attribution::default();
+    let mut hb_last_s = 0.0f64;
+
     let wall = Stopwatch::start();
 
     // The simulator lives in exactly one place for the whole experiment:
@@ -238,6 +251,8 @@ pub fn run_experiment_with_backend(
     }
 
     for epoch in start_epoch..cfg.epochs {
+        let epoch_t0 =
+            if crate::obs::armed() { crate::metrics::timer::monotonic_ns() } else { 0 };
         solver.epoch_start(epoch);
 
         // SVRG: full gradient at the snapshot — a sequential, charged sweep
@@ -278,6 +293,7 @@ pub fn run_experiment_with_backend(
             // as zero-copy range views
             pf.start_epoch(sampler.epoch(epoch));
             while let Some(b) = pf.next_batch()? {
+                let sp = crate::obs::begin(crate::obs::SpanKind::SolverStep);
                 let sw = Stopwatch::start();
                 let view = b.view(n);
                 let lr = match cfg.step {
@@ -289,6 +305,7 @@ pub fn run_experiment_with_backend(
                 };
                 solver.step(be, &view, b.j, lr)?;
                 time.compute_s += sw.elapsed_s();
+                crate::obs::end(sp);
             }
             charge_epoch(&mut time, &pf.last_epoch_stats());
         } else {
@@ -325,13 +342,16 @@ pub fn run_experiment_with_backend(
                     ra.wait_ready(*seq)?;
                     *seq += 1;
                 }
+                let asp = crate::obs::begin(crate::obs::SpanKind::BatchAssemble);
                 let mut sw = Stopwatch::start();
                 let view = assembler.assemble(ds, &sel)?;
                 time.assemble_s += sw.lap_s();
+                crate::obs::end(asp);
                 if let Some((ra, _)) = sync_ra.as_mut() {
                     // batch assembled: open window room for the thread
                     ra.mark_consumed(batch_pages.get(j).copied().unwrap_or(0));
                 }
+                let sp = crate::obs::begin(crate::obs::SpanKind::SolverStep);
                 let lr = match cfg.step {
                     StepKind::Constant => alpha_const,
                     StepKind::LineSearch => {
@@ -341,6 +361,7 @@ pub fn run_experiment_with_backend(
                 };
                 solver.step(be, &view, j, lr)?;
                 time.compute_s += sw.lap_s();
+                crate::obs::end(sp);
             }
         }
 
@@ -356,6 +377,7 @@ pub fn run_experiment_with_backend(
         // kill at any instant leaves either the previous or the new
         // fully-checksummed image
         if let Some(dir) = ckpt_dir.as_deref() {
+            let sp = crate::obs::begin(crate::obs::SpanKind::CheckpointWrite);
             let ck = checkpoint::Checkpoint {
                 epochs_done: (epoch + 1) as u64,
                 seed: cfg.seed,
@@ -365,6 +387,36 @@ pub fn run_experiment_with_backend(
                 vecs: solver.export_state(),
             };
             checkpoint::save(dir, &cfg.name, &ck)?;
+            crate::obs::end(sp);
+        }
+
+        // close the epoch's attribution window (armed only)
+        if crate::obs::armed() {
+            let epoch_t1 = crate::metrics::timer::monotonic_ns();
+            attr.merge(&crate::obs::attribute_window(epoch_t0, epoch_t1));
+        }
+
+        // heartbeat: a periodic one-line progress pulse on stderr, built
+        // from counters that are maintained anyway (works untraced)
+        if cfg.heartbeat_secs > 0.0 {
+            let now_s = wall.elapsed_s();
+            if now_s - hb_last_s >= cfg.heartbeat_secs || epoch + 1 == cfg.epochs {
+                hb_last_s = now_s;
+                let io = ds.io_stats().delta_since(&io_base);
+                let obj = trace.final_objective().unwrap_or(obj0);
+                eprintln!(
+                    "heartbeat arm={} epoch={}/{} obj={:.6e} faults={} stall_s={:.3} \
+                     mb_s={:.1} wall_s={:.2}",
+                    cfg.name,
+                    epoch + 1,
+                    cfg.epochs,
+                    obj,
+                    io.page_faults,
+                    io.stall_s,
+                    io.mb_per_s(),
+                    now_s
+                );
+            }
         }
     }
     solver.sync_w();
@@ -387,6 +439,7 @@ pub fn run_experiment_with_backend(
         epochs: cfg.epochs,
         trace,
         time,
+        attr,
         final_objective,
         alpha_const,
         w: solver.w().to_vec(),
@@ -440,6 +493,7 @@ fn full_gradient_sweep(
         }
         start = end;
     }
+    let sp = crate::obs::begin(crate::obs::SpanKind::ChunkedSweep);
     let sw = Stopwatch::start();
     if be.is_native_host() {
         chunked::full_grad_into_chunked(w, ds, c, chunk, out, &mut scratch.grad)?;
@@ -460,6 +514,7 @@ fn full_gradient_sweep(
         crate::math::axpy(c, w, out);
     }
     time.compute_s += sw.elapsed_s();
+    crate::obs::end(sp);
     Ok(())
 }
 
@@ -503,24 +558,28 @@ fn full_gradient_sweep_prefetched(
                 None => done = true,
             }
             if pending.len() == wave || (done && !pending.is_empty()) {
+                let sp = crate::obs::begin(crate::obs::SpanKind::ChunkedSweep);
                 let sw = Stopwatch::start();
                 {
                     let views: Vec<_> = pending.iter().map(|b| b.view(cols)).collect();
                     chunked::grad_fold_views(w, &views, rows, out, &mut scratch.grad);
                 }
                 time.compute_s += sw.elapsed_s();
+                crate::obs::end(sp);
                 pending.clear();
             }
         }
     } else {
         scratch.chunk.resize(out.len(), 0.0);
         while let Some(b) = pf.next_batch()? {
+            let sp = crate::obs::begin(crate::obs::SpanKind::ChunkedSweep);
             let sw = Stopwatch::start();
             let view = b.view(cols);
             be.grad_into(w, &view, 0.0, &mut scratch.chunk)?;
             let weight = view.rows() as f32 / rows as f32;
             crate::math::axpy(weight, &scratch.chunk, out);
             time.compute_s += sw.elapsed_s();
+            crate::obs::end(sp);
         }
     }
     charge_epoch(time, &pf.last_epoch_stats());
@@ -800,6 +859,44 @@ mod tests {
             assert!(w[1].train_time_s >= w[0].train_time_s);
             assert!(w[1].epoch > w[0].epoch);
         }
+    }
+
+    #[test]
+    fn untraced_runs_have_zero_attribution() {
+        let ds = tiny_ds();
+        let _g = crate::obs::test_gate();
+        crate::obs::disarm();
+        let r = run_experiment(&quick_cfg(SolverKind::Mbsgd, SamplingKind::Cs), &ds).unwrap();
+        assert!(!r.attr.is_traced());
+        assert_eq!(r.attr, crate::obs::Attribution::default());
+    }
+
+    #[test]
+    fn traced_attribution_reconciles_with_wall_time() {
+        let ds = tiny_ds();
+        let _g = crate::obs::test_gate();
+        crate::obs::arm();
+        let mut cfg = quick_cfg(SolverKind::Svrg, SamplingKind::Ss);
+        cfg.prefetch_depth = 2;
+        let r = run_experiment(&cfg, &ds);
+        crate::obs::disarm();
+        let r = r.unwrap();
+        assert!(r.attr.is_traced(), "{:?}", r.attr);
+        assert!(r.attr.compute_s > 0.0, "{:?}", r.attr);
+        assert!(r.attr.access_s > 0.0, "{:?}", r.attr);
+        // unions of disjoint per-epoch windows can never exceed the wall
+        // clock of the loop that contains them (the 1% acceptance bound)
+        assert!(
+            r.attr.union_s() <= r.time.wall_s * 1.01 + 1e-6,
+            "union={} wall={}",
+            r.attr.union_s(),
+            r.time.wall_s
+        );
+        assert!(
+            r.attr.overlap_s <= r.attr.access_s.min(r.attr.compute_s) + 1e-9,
+            "{:?}",
+            r.attr
+        );
     }
 
     #[test]

@@ -239,6 +239,43 @@ fn scalar_and_simd_bit_identical_solver_trajectories() {
 }
 
 #[test]
+fn traced_and_untraced_trajectories_bit_identical_all_solvers() {
+    // the observability plane's core promise: arming the tracer records
+    // spans but never perturbs a trajectory — every solver's weights are
+    // bit-identical with tracing on and off
+    let (dense, _) = dense_ds(1_200, 10, 0xC0);
+    for kind in [
+        SolverKind::Mbsgd,
+        SolverKind::Sag,
+        SolverKind::Saga,
+        SolverKind::Svrg,
+        SolverKind::Saag2,
+    ] {
+        let mut cfg = ExperimentConfig::quick("trace-parity", kind, SamplingKind::Cs, 100);
+        cfg.epochs = 3;
+        cfg.reg_c = Some(1e-3);
+        samplex::obs::disarm();
+        let plain = samplex::train::run_experiment(&cfg, &dense).unwrap();
+        samplex::obs::arm();
+        let traced = samplex::train::run_experiment(&cfg, &dense).unwrap();
+        samplex::obs::disarm();
+        assert_eq!(
+            plain.w.iter().map(|v| v.to_bits()).collect::<Vec<u32>>(),
+            traced.w.iter().map(|v| v.to_bits()).collect::<Vec<u32>>(),
+            "{kind:?}: traced vs untraced weights must be bit-identical"
+        );
+        assert_eq!(
+            plain.trace.final_objective().map(f64::to_bits),
+            traced.trace.final_objective().map(f64::to_bits),
+            "{kind:?}: traced vs untraced objectives must be bit-identical"
+        );
+        // untraced runs attribute nothing; traced runs attribute something
+        assert_eq!(plain.attr, samplex::obs::Attribution::default(), "{kind:?}");
+        assert!(traced.attr.union_s() >= 0.0, "{kind:?}");
+    }
+}
+
+#[test]
 fn pooled_objective_matches_trait_default_serial_sweep() {
     // the native override must reproduce the serial default trait method
     // (same 4096-row chunking, same fold order) bit-for-bit — pinned here

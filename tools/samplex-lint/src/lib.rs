@@ -35,6 +35,12 @@
 //!   byte pulled off disk must pass through the bounded-retry + checksum
 //!   recovery wrapper (`retry::read_exact_at`), so transient faults,
 //!   deadlines and corruption are handled in exactly one place.
+//! - **clock-discipline** (R8): raw `Instant::now` / `SystemTime::now`
+//!   reads are allowed only under a `metrics/` or `obs/` directory —
+//!   everything else measures time through the
+//!   `metrics::timer::monotonic_ns` seam (or not at all), so there is
+//!   one clock, spans from every thread share one origin, and wall-clock
+//!   can never silently leak into a deterministic plane.
 //!
 //! Violations are suppressible only via an explicit
 //! `// samplex-lint: allow(<rule>) -- <reason>` annotation on the same
@@ -71,6 +77,8 @@ pub enum Rule {
     SimdDispatch,
     /// R7: raw file reads in `storage/` only inside the retry wrapper.
     IoDiscipline,
+    /// R8: raw clock reads only under `metrics/` / `obs/` directories.
+    ClockDiscipline,
     /// Meta: malformed `samplex-lint:` annotation.
     BadAllow,
     /// Meta: an allow annotation that suppressed nothing.
@@ -88,6 +96,7 @@ impl Rule {
             Rule::SafetyComments => "safety-comments",
             Rule::SimdDispatch => "simd-dispatch",
             Rule::IoDiscipline => "io-discipline",
+            Rule::ClockDiscipline => "clock-discipline",
             Rule::BadAllow => "bad-allow",
             Rule::UnusedAllow => "unused-allow",
         }
@@ -104,6 +113,7 @@ impl Rule {
             "safety-comments" => Some(Rule::SafetyComments),
             "simd-dispatch" => Some(Rule::SimdDispatch),
             "io-discipline" => Some(Rule::IoDiscipline),
+            "clock-discipline" => Some(Rule::ClockDiscipline),
             _ => None,
         }
     }
@@ -355,6 +365,9 @@ pub struct FileClass {
     /// wrapper module itself (`storage/retry.rs`), which is the one
     /// sanctioned home of raw file reads.
     pub storage_io: bool,
+    /// R8 exempt: under a `metrics/` or `obs/` directory, the sanctioned
+    /// homes of raw clock reads (the timer seam and the tracing plane).
+    pub clock_exempt: bool,
 }
 
 /// Classify a path (forward or back slashes) into rule families.
@@ -368,6 +381,7 @@ pub fn classify(path: &str) -> FileClass {
         .take(ndirs)
         .any(|s| *s == "data" || *s == "storage" || *s == "pipeline");
     let storage_dir = segs.iter().take(ndirs).any(|s| *s == "storage");
+    let clock_home = segs.iter().take(ndirs).any(|s| *s == "metrics" || *s == "obs");
     FileClass {
         data_plane: dir_hit || p.ends_with("math/chunked.rs"),
         determinism: p.ends_with("math/chunked.rs")
@@ -376,6 +390,7 @@ pub fn classify(path: &str) -> FileClass {
         pagestore: p.ends_with("storage/pagestore.rs"),
         simd_home: p.contains("math/simd/"),
         storage_io: storage_dir && !p.ends_with("storage/retry.rs"),
+        clock_exempt: clock_home,
     }
 }
 
@@ -894,6 +909,22 @@ fn lint_one(file: &str, lines: &[Line], mask: &[bool], tf_names: &[String]) -> V
                 }
             }
         }
+        if !class.clock_exempt {
+            for tok in ["Instant::now", "SystemTime::now"] {
+                for _ in 0..occurrences(code, tok) {
+                    raw.push(Finding {
+                        file: file.to_string(),
+                        line: ln,
+                        rule: Rule::ClockDiscipline,
+                        msg: format!(
+                            "{tok} outside metrics/ and obs/ — read time through the \
+                             metrics::timer::monotonic_ns seam (Stopwatch) so the crate \
+                             has exactly one clock"
+                        ),
+                    });
+                }
+            }
+        }
         if !class.simd_home {
             if code.contains("#[target_feature") {
                 raw.push(Finding {
@@ -1032,6 +1063,12 @@ mod tests {
         assert!(!classify("rust/src/storage/retry.rs").storage_io);
         assert!(!classify("rust/src/testing/faults.rs").storage_io);
         assert!(!classify("rust/src/data/paged.rs").storage_io);
+        assert!(classify("rust/src/metrics/timer.rs").clock_exempt);
+        assert!(classify("rust/src/metrics/ascii_plot.rs").clock_exempt);
+        assert!(classify("rust/src/obs/ring.rs").clock_exempt);
+        assert!(!classify("rust/src/storage/pagestore.rs").clock_exempt);
+        assert!(!classify("rust/src/solvers/sag.rs").clock_exempt);
+        assert!(!classify("rust/src/obs.rs").clock_exempt, "file named obs.rs is not the dir");
     }
 
     #[test]
@@ -1139,6 +1176,25 @@ mod tests {
         assert_eq!(rules_of(&f), vec![(2, "io-discipline"), (3, "io-discipline")]);
         assert!(lint_source("src/storage/retry.rs", src).is_empty(), "retry.rs is exempt");
         assert!(lint_source("src/testing/faults.rs", src).is_empty(), "outside storage/");
+    }
+
+    #[test]
+    fn r8_clock_reads_flagged_outside_metrics_and_obs() {
+        let src = "fn f() {\n    \
+                   let t = std::time::Instant::now();\n    \
+                   let s = SystemTime::now();\n}\n";
+        let f = lint_source("src/solvers/stepper.rs", src);
+        assert_eq!(rules_of(&f), vec![(2, "clock-discipline"), (3, "clock-discipline")]);
+        assert!(lint_source("src/metrics/timer.rs", src).is_empty(), "metrics/ is exempt");
+        assert!(lint_source("src/obs/ring.rs", src).is_empty(), "obs/ is exempt");
+    }
+
+    #[test]
+    fn r8_allow_suppresses_one_finding() {
+        let src = "fn f() {\n    \
+                   // samplex-lint: allow(clock-discipline) -- fixture justification\n    \
+                   let t = std::time::Instant::now();\n}\n";
+        assert!(lint_source("src/runtime/pool.rs", src).is_empty());
     }
 
     #[test]

@@ -13,7 +13,7 @@ fn main() -> ExitCode {
         eprintln!("usage: samplex-lint <file-or-dir>...");
         eprintln!(
             "rules: no-panic-plane lock-discipline determinism atomics-audit safety-comments \
-             simd-dispatch io-discipline"
+             simd-dispatch io-discipline clock-discipline"
         );
         eprintln!("suppress with: // samplex-lint: allow(<rule>) -- <reason>");
         return ExitCode::from(2);

@@ -1,0 +1,4 @@
+/// The tracing plane timestamps spans through the shared seam.
+pub fn stamp() -> u64 {
+    crate::metrics::timer::monotonic_ns()
+}

@@ -1,0 +1,6 @@
+/// Non-exempt modules measure time through the Stopwatch over the seam.
+pub fn timed_epoch(work: impl FnOnce()) -> f64 {
+    let sw = crate::metrics::timer::Stopwatch::start();
+    work();
+    sw.elapsed_s()
+}

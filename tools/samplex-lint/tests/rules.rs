@@ -1,5 +1,5 @@
 //! Fixture-backed tests: one violating + one conforming fixture per
-//! rule (R1-R7), exact `line rule` diagnostics, allow suppression, and
+//! rule (R1-R8), exact `line rule` diagnostics, allow suppression, and
 //! the binary's exit-code contract.
 
 use std::path::{Path, PathBuf};
@@ -74,9 +74,11 @@ fn r2_conforming_is_clean() {
 
 #[test]
 fn r3_violating_exact_diagnostics() {
+    // line 2's Instant::now additionally violates the crate-wide clock
+    // discipline (R8) now that raw clock reads live only in metrics/obs
     assert_eq!(
         lint_fixture("r3/train/parallel.rs"),
-        vec![(2, "determinism"), (3, "determinism")]
+        vec![(2, "determinism"), (2, "clock-discipline"), (3, "determinism")]
     );
 }
 
@@ -151,6 +153,22 @@ fn r7_conforming_tree_is_clean() {
     // the retry module's own raw reads are exempt, reads routed through
     // retry::read_exact_at are clean, and testing/ is out of scope
     let findings = samplex_lint::lint_paths(&[fixture_path("r7_ok")]).unwrap();
+    assert!(findings.is_empty(), "{findings:?}");
+}
+
+#[test]
+fn r8_violating_exact_diagnostics() {
+    assert_eq!(
+        lint_fixture("r8/solvers/stepper.rs"),
+        vec![(3, "clock-discipline"), (8, "clock-discipline")]
+    );
+}
+
+#[test]
+fn r8_conforming_tree_is_clean() {
+    // metrics/ owns the raw clock read behind the monotonic seam; obs/
+    // consumes the seam — both are sanctioned homes
+    let findings = samplex_lint::lint_paths(&[fixture_path("r8_ok")]).unwrap();
     assert!(findings.is_empty(), "{findings:?}");
 }
 
