@@ -1,0 +1,48 @@
+//! # samplex-compute — the compute plane
+//!
+//! The layers that turn batches into trained models:
+//!
+//! * [`solvers`] — SAG / SAGA / SVRG / SAAG-II / MBSGD behind one
+//!   [`solvers::Solver`] trait, constant-step and backtracking line
+//!   search;
+//! * [`backend`] — the [`backend::ComputeBackend`] seam: the bit-careful
+//!   native backend and the optional PJRT artifact executor (`pjrt`
+//!   feature);
+//! * [`runtime`] — the persistent process-global worker pool
+//!   ([`runtime::pool`]) shared by every experiment in the process (and
+//!   every tenant of `samplex serve`), plus the PJRT artifact manifest;
+//! * [`math`] — re-export of the data plane's SIMD kernel set plus the
+//!   pooled [`math::chunked`] reductions (fixed chunk geometry, serial
+//!   fold ⇒ bit-identical at every thread count);
+//! * [`train`] — the experiment driver: epoch loop, prefetch/readahead
+//!   orchestration, checkpoint/resume, per-epoch progress hooks and
+//!   cooperative cancellation (the seam `samplex serve` schedules jobs
+//!   through), and [`train::TrainReport`];
+//! * [`config`] — typed experiment / grid configuration with the
+//!   hand-rolled TOML loader;
+//! * [`bench_harness`] — the table/figure harness that regenerates the
+//!   paper's results.
+//!
+//! Invariant rules that bind here (see `INVARIANTS.md`): R1
+//! no-panic-plane (`math/chunked.rs`), R3 determinism
+//! (`math/chunked.rs`, `train/parallel.rs`, `backend/native.rs`), R4
+//! atomics-audit, R5 safety-comments, R8 clock-discipline (all timing
+//! through `metrics::timer::monotonic_ns`).
+
+// Lower-layer modules re-exported at the old single-crate paths so every
+// internal `crate::data::…`-style reference — and the facade — resolves
+// unchanged across the workspace split.
+pub use samplex_data::{
+    aligned, data, error, pipeline, rng, sampling, storage, testing,
+};
+pub use samplex_obs::{metrics, obs};
+
+pub mod backend;
+pub mod bench_harness;
+pub mod config;
+pub mod math;
+pub mod runtime;
+pub mod solvers;
+pub mod train;
+
+pub use error::{Error, Result};

@@ -1,0 +1,12 @@
+//! Math kernels, as seen by the compute plane.
+//!
+//! The SIMD-dispatched kernel set (dense / logistic / sparse / simd and
+//! the view seams) lives in `samplex-data` — the data plane needs the
+//! same bit-identical `nrm2_sq` for lipschitz estimates — and is
+//! re-exported here wholesale so `math::grad_into`-style paths keep
+//! working. The pooled [`chunked`] reductions live in this crate because
+//! they run on [`crate::runtime::pool`].
+
+pub use samplex_data::math::*;
+
+pub mod chunked;

@@ -110,6 +110,18 @@ pub fn reg_for(cfg: &ExperimentConfig) -> f32 {
 
 /// Run one experiment arm over an already-resolved dataset (either layout).
 pub fn run_experiment(cfg: &ExperimentConfig, ds: &Dataset) -> Result<TrainReport> {
+    run_experiment_hooked(cfg, ds, RunHooks::default())
+}
+
+/// [`run_experiment`] with epoch-boundary [`RunHooks`] — same validation,
+/// backend construction and pre-shuffle handling, plus per-epoch progress
+/// callbacks and cooperative cancellation. The entry point `samplex
+/// serve` drives tenant jobs through.
+pub fn run_experiment_hooked(
+    cfg: &ExperimentConfig,
+    ds: &Dataset,
+    hooks: RunHooks<'_>,
+) -> Result<TrainReport> {
     cfg.validate()?;
     if ds.is_paged() {
         // the out-of-core path needs the native host kernels (a device
@@ -134,9 +146,9 @@ pub fn run_experiment(cfg: &ExperimentConfig, ds: &Dataset) -> Result<TrainRepor
         // contiguous access over a de-clustered row order
         let mut shuffled = ds.clone();
         shuffled.shuffle_rows(cfg.seed ^ 0x9E37)?;
-        return run_experiment_with_backend(cfg, &shuffled, backend.as_mut());
+        return run_experiment_with_hooks(cfg, &shuffled, backend.as_mut(), hooks);
     }
-    run_experiment_with_backend(cfg, ds, backend.as_mut())
+    run_experiment_with_hooks(cfg, ds, backend.as_mut(), hooks)
 }
 
 /// Fold one pipeline epoch's reader-side stats into the time breakdown.
@@ -147,12 +159,58 @@ fn charge_epoch(time: &mut TimeBreakdown, es: &PrefetchStats) {
     time.bytes_borrowed += es.bytes_borrowed;
 }
 
+/// One epoch boundary's progress snapshot, handed to [`RunHooks::on_epoch`]
+/// — what `samplex serve` streams back to a tenant after every epoch.
+#[derive(Debug, Clone)]
+pub struct EpochProgress {
+    /// Epochs completed (1-based; `epochs_done == epochs` on the last call).
+    pub epochs_done: usize,
+    /// Total epochs the run was asked for.
+    pub epochs: usize,
+    /// Most recently recorded full objective (epoch-0 objective until the
+    /// first recorded epoch).
+    pub objective: f64,
+    /// Cumulative training time (simulated access + assembly + compute).
+    pub train_time_s: f64,
+    /// Wall seconds since the run started.
+    pub wall_s: f64,
+    /// This run's real-I/O delta so far (per-job view when the dataset is
+    /// a `job_view`, store totals otherwise).
+    pub io: crate::storage::pagestore::IoStats,
+}
+
+/// Epoch-boundary hooks for a training run: per-epoch progress streaming
+/// and cooperative cancellation. Both fire *outside* the measured clocks
+/// and never influence the trajectory — a hooked run is bit-identical to
+/// a bare one. This is the seam `samplex serve` schedules tenant jobs
+/// through.
+#[derive(Default)]
+pub struct RunHooks<'a> {
+    /// Called after every epoch (after trace recording and checkpointing).
+    pub on_epoch: Option<&'a mut dyn FnMut(&EpochProgress)>,
+    /// Polled at every epoch boundary; when set, the run returns
+    /// [`Error::Cancelled`](crate::error::Error::Cancelled) cleanly —
+    /// shared caches, readahead threads and the worker pool stay reusable.
+    pub cancel: Option<&'a std::sync::atomic::AtomicBool>,
+}
+
 /// Like [`run_experiment`] but with a caller-provided backend (lets the
 /// harness share one PJRT runtime across arms).
 pub fn run_experiment_with_backend(
     cfg: &ExperimentConfig,
     ds: &Dataset,
     be: &mut dyn ComputeBackend,
+) -> Result<TrainReport> {
+    run_experiment_with_hooks(cfg, ds, be, RunHooks::default())
+}
+
+/// [`run_experiment_with_backend`] plus [`RunHooks`]: per-epoch progress
+/// callbacks and cooperative cancellation at epoch boundaries.
+pub fn run_experiment_with_hooks(
+    cfg: &ExperimentConfig,
+    ds: &Dataset,
+    be: &mut dyn ComputeBackend,
+    mut hooks: RunHooks<'_>,
 ) -> Result<TrainReport> {
     let c = reg_for(cfg);
     let l = ds.lipschitz(c)?;
@@ -416,6 +474,30 @@ pub fn run_experiment_with_backend(
                     io.mb_per_s(),
                     now_s
                 );
+            }
+        }
+
+        // service hooks (outside the clocks): stream progress, then honor
+        // a raised cancel flag at this epoch boundary
+        if let Some(on_epoch) = hooks.on_epoch.as_mut() {
+            on_epoch(&EpochProgress {
+                epochs_done: epoch + 1,
+                epochs: cfg.epochs,
+                objective: trace.final_objective().unwrap_or(obj0),
+                train_time_s: time_base + time.training_time_s(),
+                wall_s: wall.elapsed_s(),
+                io: ds.io_stats().delta_since(&io_base),
+            });
+        }
+        if let Some(flag) = hooks.cancel {
+            // Acquire pairs with the canceller's Release store: the epoch
+            // that observes the flag also observes everything the
+            // canceller published before raising it.
+            if flag.load(std::sync::atomic::Ordering::Acquire) {
+                return Err(crate::error::Error::Cancelled {
+                    name: cfg.name.clone(),
+                    epochs_done: epoch + 1,
+                });
             }
         }
     }

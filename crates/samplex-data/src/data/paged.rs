@@ -374,10 +374,29 @@ impl PagedDataset {
         self.store.n_pages()
     }
 
-    /// Snapshot of the store's lifetime I/O statistics (shared by every
-    /// clone of this dataset).
+    /// The I/O statistics this dataset handle is responsible for: the
+    /// per-job delta block for a [`PagedDataset::job_view`] handle, the
+    /// store's shared lifetime totals otherwise. Per-arm reporting takes
+    /// `delta_since` over this view, so concurrent jobs sharing one warm
+    /// store each see exactly their own faults, hits and delivered bytes.
     pub fn io_stats(&self) -> IoStats {
+        self.store.handle_stats()
+    }
+
+    /// Snapshot of the store's lifetime I/O statistics, shared by every
+    /// clone and every job view of this dataset.
+    pub fn shared_io_stats(&self) -> IoStats {
         self.store.stats()
+    }
+
+    /// A per-job view of this dataset: same rows, same shared resident
+    /// pool, but a private [`IoStats`] delta block fed by everything this
+    /// handle (and readahead threads spawned from it) does. `samplex
+    /// serve` hands each tenant one of these over the shared warm store.
+    pub fn job_view(&self) -> PagedDataset {
+        let mut ds = self.clone();
+        ds.store = ds.store.job_view();
+        ds
     }
 
     /// Drop every resident page (cold-start between experiment arms;

@@ -42,6 +42,11 @@ pub enum Error {
         context: String,
     },
 
+    /// A training run stopped cooperatively at an epoch boundary because
+    /// its cancellation flag was raised (e.g. `samplex serve` cancel).
+    /// The shared page cache and worker pool are left fully reusable.
+    Cancelled { name: String, epochs_done: usize },
+
     /// Anything else.
     Other(String),
 }
@@ -64,6 +69,9 @@ impl fmt::Display for Error {
             Error::Artifact(msg) => write!(f, "artifact error: {msg}"),
             Error::ShapeMismatch { expected, got, context } => {
                 write!(f, "shape mismatch: expected {expected}, got {got} ({context})")
+            }
+            Error::Cancelled { name, epochs_done } => {
+                write!(f, "job '{name}' cancelled after {epochs_done} epoch(s)")
             }
             Error::Other(msg) => write!(f, "{msg}"),
         }
@@ -126,6 +134,10 @@ mod tests {
             }
             .to_string(),
             "shape mismatch: expected 4, got 5 (t)"
+        );
+        assert_eq!(
+            Error::Cancelled { name: "job".into(), epochs_done: 2 }.to_string(),
+            "job 'job' cancelled after 2 epoch(s)"
         );
         assert_eq!(Error::Other("x".into()).to_string(), "x");
     }

@@ -1,0 +1,51 @@
+//! # samplex-data — the data plane
+//!
+//! Everything between the bytes on disk and a solver-ready batch view:
+//!
+//! * [`storage`] — the byte-budgeted, shard-locked [`storage::PageStore`]
+//!   (demand paging + exact readahead), checksum/retry recovery, the
+//!   block-device access-time simulator, and storage profiles;
+//! * [`data`] — dataset layouts (row-major dense, CSR sparse, out-of-core
+//!   [`data::PagedDataset`]), the LIBSVM parser, the benchmark-dataset
+//!   registry, and the [`data::BatchView`] seam the solvers step through;
+//! * [`pipeline`] — the zero-copy persistent batch engine (one reader
+//!   thread per experiment, borrowed range views for contiguous batches);
+//! * [`sampling`] — the paper's RS / CS / SS / stratified schedules, each
+//!   a pure function of `(seed, epoch)` so readahead can prefault the
+//!   exact upcoming pages;
+//! * [`math`] — the runtime-dispatched SIMD kernels (AVX2 / NEON /
+//!   portable scalar, bit-identical by construction) that both this
+//!   crate's lipschitz/scaling paths and the compute plane's solvers
+//!   share; the pooled `chunked` sweeps live one layer up in
+//!   `samplex-compute`, which re-exports this module alongside them;
+//! * [`aligned`], [`rng`], [`error`], [`testing`] — 64-byte aligned
+//!   buffers, the deterministic splitmix/xoshiro RNG, the workspace's
+//!   typed [`Error`], and the fault-injection harness.
+//!
+//! Invariant rules that bind here (see `INVARIANTS.md`): R1 no-panic-plane
+//! (`data/`, `storage/`, `pipeline/`), R2 lock-discipline
+//! (`storage/pagestore.rs`), R4 atomics-audit, R5 safety-comments, R6
+//! simd-dispatch (`math/simd/`), R7 io-discipline (`storage/`).
+//!
+//! The observability structs this plane fills ([`samplex_obs::stats`])
+//! live one layer *below* so reports flow without cycles; they are
+//! re-exported at their historical paths
+//! (`storage::pagestore::IoStats`, `storage::simulator::AccessCost`).
+
+// The tracing/metrics plane sits below this crate; re-exporting its
+// modules at the old single-crate paths keeps every internal
+// `crate::obs::…` / `crate::metrics::…` reference — and downstream user
+// code — compiling unchanged across the workspace split.
+pub use samplex_obs::{metrics, obs};
+
+pub mod aligned;
+pub mod data;
+pub mod error;
+pub mod math;
+pub mod pipeline;
+pub mod rng;
+pub mod sampling;
+pub mod storage;
+pub mod testing;
+
+pub use error::{Error, Result};

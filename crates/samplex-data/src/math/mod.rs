@@ -9,7 +9,6 @@
 //! 3. **Baseline** — the §Perf comparison of PJRT dispatch overhead vs a
 //!    hand-rolled hot loop.
 
-pub mod chunked;
 pub mod dense;
 pub mod logistic;
 pub mod simd;
@@ -22,11 +21,10 @@ pub use sparse::{grad_into_csr, loss_sum_csr, objective_batch_csr, sparse_dot};
 use crate::data::batch::BatchView;
 
 /// Mini-batch gradient of eq.(3) into `out`, dispatching on the batch
-/// layout — the one free-function seam shared by [`NativeBackend`]'s trait
+/// layout — the one free-function seam shared by the native backend's trait
 /// impl and the pooled chunk sweeps (which cannot thread a `&mut dyn`
 /// backend through concurrent workers).
 ///
-/// [`NativeBackend`]: crate::backend::NativeBackend
 pub fn grad_into_view(w: &[f32], batch: &BatchView<'_>, c: f32, out: &mut [f32]) {
     match batch {
         BatchView::Dense(d) => grad_into(w, d.x, d.y, d.cols, c, out),

@@ -46,7 +46,7 @@
 //! `(seed, epoch)`, the exact sequence of future pages is knowable ahead
 //! of time — so readahead here is **exact, not heuristic**. A [`Readahead`]
 //! handle owns one persistent thread (spawned once per experiment, the
-//! same discipline as [`crate::runtime::pool`] and the prefetch reader)
+//! same discipline as the compute plane's worker pool and the prefetch reader)
 //! that consumes published per-batch element runs and faults their pages
 //! into the pool with [`PageStore::prefault_range`] ahead of the demand
 //! path, pacing itself to stay at most a configured window of pages ahead.
@@ -115,118 +115,10 @@ use crate::testing::faults::{FaultSpec, FaultyFile};
 /// plain global LRU behavior).
 pub const MAX_SHARDS: usize = 8;
 
-/// Lifetime I/O statistics of one page store — the real-file analogue of
-/// [`super::simulator::AccessCost`].
-#[derive(Debug, Clone, Copy, Default, PartialEq)]
-pub struct IoStats {
-    /// Bytes physically read from the file (page granularity).
-    pub bytes_read: u64,
-    /// Read syscalls issued (one per maximal run of faulted pages).
-    pub read_calls: u64,
-    /// Pages faulted in from disk (demand + readahead).
-    pub page_faults: u64,
-    /// Pages faulted on the *demand* path — the consumer had to wait for
-    /// the disk. With readahead keeping up this drops to zero; it is the
-    /// authoritative "did access stall compute?" counter.
-    pub demand_faults: u64,
-    /// Page touches served from the resident pool.
-    pub page_hits: u64,
-    /// Hits on pages that were brought in by the readahead thread (each
-    /// prefetched page is credited at most once, on its first demand
-    /// touch) — the authoritative "did readahead do useful work?" counter.
-    pub readahead_hits: u64,
-    /// Recovered I/O faults: transient read errors absorbed by the retry
-    /// policy plus checksum-quarantined runs that were refetched. Zero on
-    /// a healthy device; nonzero here with a clean trajectory is the
-    /// *retry-transparency* invariant working.
-    pub retries: u64,
-    /// Times the experiment downgraded from readahead to demand paging
-    /// because the readahead thread died (at most 1 per readahead handle;
-    /// the trajectory is unchanged, only overlap is lost).
-    pub degraded: u64,
-    /// Bytes actually delivered to callers (the useful payload).
-    pub bytes_requested: u64,
-    /// Wall seconds spent inside read syscalls (all threads).
-    pub read_s: f64,
-    /// Wall seconds the *demand path* (the thread assembling batches)
-    /// stalled on the disk: demand-fault read time plus time spent waiting
-    /// for a batch's readahead to complete. Readahead-thread read time is
-    /// excluded. Note: under the pipelined driver the demand path is the
-    /// prefetch reader thread, whose stalls may themselves be hidden from
-    /// the solver by the channel depth — `stall_s` is an upper bound on
-    /// solver-visible stall, and exact for the synchronous driver.
-    pub stall_s: f64,
-}
-
-impl IoStats {
-    /// `bytes_read / bytes_requested` — how many bytes the page
-    /// granularity forced off the device per byte the caller wanted.
-    pub fn read_amplification(&self) -> f64 {
-        if self.bytes_requested == 0 {
-            0.0
-        } else {
-            self.bytes_read as f64 / self.bytes_requested as f64
-        }
-    }
-
-    /// Achieved read throughput in MB/s over the time actually spent
-    /// inside read syscalls (0 when nothing was read). This is the
-    /// honest device throughput; compare with [`IoStats::wall_mbps`].
-    pub fn mb_per_s(&self) -> f64 {
-        if self.read_s <= 0.0 {
-            0.0
-        } else {
-            self.bytes_read as f64 / 1e6 / self.read_s
-        }
-    }
-
-    /// Delivered MB/s over a caller-supplied wall window — a denominator
-    /// that includes compute and idle time, so it *understates* device
-    /// throughput whenever access overlaps compute. Reported next to
-    /// [`IoStats::mb_per_s`] so the two attributions can be compared
-    /// (their gap is the overlap the prefetch pipeline bought).
-    pub fn wall_mbps(&self, wall_s: f64) -> f64 {
-        if wall_s <= 0.0 {
-            0.0
-        } else {
-            self.bytes_read as f64 / 1e6 / wall_s
-        }
-    }
-
-    /// Counters accumulated since `base` was captured (page stores are
-    /// shared across experiment arms; reports want per-arm deltas).
-    pub fn delta_since(&self, base: &IoStats) -> IoStats {
-        IoStats {
-            bytes_read: self.bytes_read - base.bytes_read,
-            read_calls: self.read_calls - base.read_calls,
-            page_faults: self.page_faults - base.page_faults,
-            demand_faults: self.demand_faults - base.demand_faults,
-            page_hits: self.page_hits - base.page_hits,
-            readahead_hits: self.readahead_hits - base.readahead_hits,
-            retries: self.retries - base.retries,
-            degraded: self.degraded - base.degraded,
-            bytes_requested: self.bytes_requested - base.bytes_requested,
-            read_s: self.read_s - base.read_s,
-            stall_s: self.stall_s - base.stall_s,
-        }
-    }
-}
-
-impl std::ops::AddAssign for IoStats {
-    fn add_assign(&mut self, rhs: Self) {
-        self.bytes_read += rhs.bytes_read;
-        self.read_calls += rhs.read_calls;
-        self.page_faults += rhs.page_faults;
-        self.demand_faults += rhs.demand_faults;
-        self.page_hits += rhs.page_hits;
-        self.readahead_hits += rhs.readahead_hits;
-        self.retries += rhs.retries;
-        self.degraded += rhs.degraded;
-        self.bytes_requested += rhs.bytes_requested;
-        self.read_s += rhs.read_s;
-        self.stall_s += rhs.stall_s;
-    }
-}
+/// Real-file I/O statistics (moved to the observability crate so the
+/// metrics/CSV layer below the data plane can consume it); re-exported
+/// here at its historical path.
+pub use samplex_obs::stats::IoStats;
 
 /// Lock-free live counters (nanosecond clocks stored as integers so the
 /// whole block is atomic); snapshotted into [`IoStats`] on demand.
@@ -450,11 +342,19 @@ struct StoreInner {
 /// short).
 ///
 /// Cloning a `PageStore` clones a *handle*: all clones share the resident
-/// pool, the file and the statistics (see the module docs for the
-/// concurrency model).
+/// pool, the file and the lifetime statistics (see the module docs for
+/// the concurrency model). A handle made with [`PageStore::job_view`]
+/// additionally carries a private per-job counter block: every increment
+/// it (or any clone of it, e.g. the readahead thread's) performs is teed
+/// into both blocks, so shared totals and per-tenant attribution stay
+/// separately exact when many jobs share one warm store.
 #[derive(Debug, Clone)]
 pub struct PageStore {
     inner: Arc<StoreInner>,
+    /// Per-job delta block this handle tees every counter increment into
+    /// (`None` for the root handle — increments then land only in the
+    /// shared `inner.stats`).
+    job: Option<Arc<AtomicIoStats>>,
 }
 
 impl PageStore {
@@ -535,6 +435,7 @@ impl PageStore {
                 shards,
                 stats: AtomicIoStats::default(),
             }),
+            job: None,
         })
     }
 
@@ -596,9 +497,41 @@ impl PageStore {
             .sum()
     }
 
-    /// Snapshot of the lifetime I/O counters.
+    /// Snapshot of the lifetime I/O counters (shared across all handles).
     pub fn stats(&self) -> IoStats {
         self.inner.stats.snapshot()
+    }
+
+    /// A new handle over the same store that additionally accumulates a
+    /// private per-job delta block: everything this handle (and clones of
+    /// it — hand one to the readahead thread) faults, hits or delivers is
+    /// counted in both the shared totals and the job block. This is how
+    /// `samplex serve` attributes one warm shared cache to many tenants
+    /// without double-counting.
+    pub fn job_view(&self) -> PageStore {
+        PageStore { inner: Arc::clone(&self.inner), job: Some(Arc::new(AtomicIoStats::default())) }
+    }
+
+    /// The statistics *this handle* is responsible for: the per-job delta
+    /// block for a [`PageStore::job_view`] handle, the shared lifetime
+    /// totals for a root handle. Per-arm reporting (`delta_since`) goes
+    /// through this view, so two jobs sharing a store each see exactly
+    /// their own faults, hits and delivered bytes.
+    pub fn handle_stats(&self) -> IoStats {
+        match &self.job {
+            Some(job) => job.snapshot(),
+            None => self.inner.stats.snapshot(),
+        }
+    }
+
+    /// Apply one batch of counter increments to the shared totals and,
+    /// when this handle is a per-job view, to the job's delta block. Pure
+    /// atomics — safe to call under a shard or file lock.
+    fn tick(&self, f: impl Fn(&AtomicIoStats)) {
+        f(&self.inner.stats);
+        if let Some(job) = &self.job {
+            f(job);
+        }
     }
 
     /// Resident-pool hit rate over the store's lifetime.
@@ -678,19 +611,23 @@ impl PageStore {
                         })?;
                 if outcome.retries > 0 {
                     // relaxed-ok: pure stats counter (recovered transients).
-                    inner.stats.retries.fetch_add(outcome.retries as u64, Ordering::Relaxed);
+                    self.tick(|s| {
+                        s.retries.fetch_add(outcome.retries as u64, Ordering::Relaxed);
+                    });
                 }
                 sw.elapsed_ns()
             };
-            // relaxed-ok: monotonic stats counters; nothing synchronizes on
-            // them and the snapshot tolerates torn cross-counter views.
-            inner.stats.read_ns.fetch_add(ns, Ordering::Relaxed);
-            inner.stats.read_calls.fetch_add(1, Ordering::Relaxed);
-            inner.stats.bytes_read.fetch_add(nbytes, Ordering::Relaxed);
-            if demand {
-                // relaxed-ok: same stats-counter argument as above.
-                inner.stats.stall_ns.fetch_add(ns, Ordering::Relaxed);
-            }
+            self.tick(|s| {
+                // relaxed-ok: monotonic stats counters; nothing synchronizes
+                // on them and the snapshot tolerates torn cross-counter
+                // views.
+                s.read_ns.fetch_add(ns, Ordering::Relaxed);
+                s.read_calls.fetch_add(1, Ordering::Relaxed);
+                s.bytes_read.fetch_add(nbytes, Ordering::Relaxed);
+                if demand {
+                    s.stall_ns.fetch_add(ns, Ordering::Relaxed);
+                }
+            });
             crate::obs::end(read_sp);
             if crate::obs::armed() {
                 // the latency was measured anyway for read_ns — no extra
@@ -708,7 +645,9 @@ impl PageStore {
                 Some(bad_rel) => {
                     fetches_left -= 1;
                     // relaxed-ok: pure stats counter (quarantined refetches).
-                    inner.stats.retries.fetch_add(1, Ordering::Relaxed);
+                    self.tick(|s| {
+                        s.retries.fetch_add(1, Ordering::Relaxed);
+                    });
                     if fetches_left == 0 {
                         return Err(Error::Corrupt {
                             path: inner.path.clone(),
@@ -722,13 +661,14 @@ impl PageStore {
                 }
             }
         }
-        // relaxed-ok: monotonic stats counters (faults counted once per
-        // run, not per quarantine refetch).
-        inner.stats.page_faults.fetch_add(hi - lo + 1, Ordering::Relaxed);
-        if demand {
-            // relaxed-ok: same stats-counter argument as above.
-            inner.stats.demand_faults.fetch_add(hi - lo + 1, Ordering::Relaxed);
-        }
+        self.tick(|s| {
+            // relaxed-ok: monotonic stats counters (faults counted once per
+            // run, not per quarantine refetch).
+            s.page_faults.fetch_add(hi - lo + 1, Ordering::Relaxed);
+            if demand {
+                s.demand_faults.fetch_add(hi - lo + 1, Ordering::Relaxed);
+            }
+        });
         // Acquire pairs with the Release store in `set_idx_bound`, so a
         // bound published before this fault is seen by its validation.
         let idx_bound = inner.idx_bound.load(Ordering::Acquire);
@@ -793,11 +733,15 @@ impl PageStore {
         if entry.prefetched {
             entry.prefetched = false;
             // relaxed-ok: pure stats counter (provenance credit).
-            self.inner.stats.readahead_hits.fetch_add(1, Ordering::Relaxed);
+            self.tick(|s| {
+                s.readahead_hits.fetch_add(1, Ordering::Relaxed);
+            });
         }
         let _ = shard.lru.touch_evicting(id);
         // relaxed-ok: pure stats counter.
-        self.inner.stats.page_hits.fetch_add(1, Ordering::Relaxed);
+        self.tick(|s| {
+            s.page_hits.fetch_add(1, Ordering::Relaxed);
+        });
         Some(page)
     }
 
@@ -824,11 +768,11 @@ impl PageStore {
         if p_lo != p_hi {
             return Ok(None);
         }
-        self.inner
-            .stats
-            .bytes_requested
-            // relaxed-ok: pure stats counter.
-            .fetch_add((elem_hi - elem_lo) * self.inner.layout.elem_bytes(), Ordering::Relaxed);
+        // relaxed-ok: pure stats counter.
+        self.tick(|s| {
+            s.bytes_requested
+                .fetch_add((elem_hi - elem_lo) * self.inner.layout.elem_bytes(), Ordering::Relaxed);
+        });
         let page = match self.touch_resident(p_lo) {
             Some(p) => p,
             None => {
@@ -858,11 +802,11 @@ impl PageStore {
             return Ok(());
         }
         debug_assert!(elem_hi <= self.inner.n_elems, "range past region end");
-        self.inner
-            .stats
-            .bytes_requested
-            // relaxed-ok: pure stats counter.
-            .fetch_add((elem_hi - elem_lo) * self.inner.layout.elem_bytes(), Ordering::Relaxed);
+        // relaxed-ok: pure stats counter.
+        self.tick(|s| {
+            s.bytes_requested
+                .fetch_add((elem_hi - elem_lo) * self.inner.layout.elem_bytes(), Ordering::Relaxed);
+        });
         let epp = self.inner.elems_per_page;
         let p_lo = elem_lo / epp;
         let p_hi = (elem_hi - 1) / epp;
@@ -950,11 +894,10 @@ impl PageStore {
     }
 
     fn add_stall(&self, ns: u64) {
-        self.inner
-            .stats
-            .stall_ns
-            // relaxed-ok: pure stats counter.
-            .fetch_add(ns, Ordering::Relaxed);
+        // relaxed-ok: pure stats counter.
+        self.tick(|s| {
+            s.stall_ns.fetch_add(ns, Ordering::Relaxed);
+        });
     }
 
     /// Drop every resident page (counters preserved) — e.g. to cold-start
@@ -1146,7 +1089,9 @@ impl Readahead {
                 // counter; single consumer, nothing synchronizes on it.
                 if !self.degraded_noted.swap(true, Ordering::Relaxed) {
                     // relaxed-ok: pure stats counter.
-                    self.store.inner.stats.degraded.fetch_add(1, Ordering::Relaxed);
+                    self.store.tick(|s| {
+                        s.degraded.fetch_add(1, Ordering::Relaxed);
+                    });
                 }
                 return Ok(RaWait::Degraded);
             }
@@ -1317,6 +1262,54 @@ mod tests {
         let s = PageStore::new(f, &p, PageLayout::DenseF32, base, n, page_bytes, budget_bytes)
             .unwrap();
         (p, s)
+    }
+
+    #[test]
+    fn job_views_split_delivered_bytes_exactly() {
+        // two tenants over one warm store: every byte delivered must land
+        // in exactly one job block, and the job blocks must sum to the
+        // shared totals (bytes_requested is `delivered` payload).
+        let (p, root) = store(0, 64, 32, 1 << 20);
+        let a = root.job_view();
+        let b = root.job_view();
+        a.with_range(0, 16, |_, _, _| {}).unwrap();
+        b.with_range(16, 40, |_, _, _| {}).unwrap();
+        a.with_range(40, 64, |_, _, _| {}).unwrap();
+        let (sa, sb, tot) = (a.handle_stats(), b.handle_stats(), root.stats());
+        assert_eq!(sa.bytes_requested, (16 + 24) * 4);
+        assert_eq!(sb.bytes_requested, 24 * 4);
+        assert_eq!(sa.bytes_requested + sb.bytes_requested, tot.bytes_requested);
+        assert_eq!(sa.page_faults + sb.page_faults, tot.page_faults);
+        assert_eq!(sa.page_hits + sb.page_hits, tot.page_hits);
+        assert_eq!(sa.bytes_read + sb.bytes_read, tot.bytes_read);
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn warm_job_view_hits_what_a_cold_one_faulted() {
+        // the serve cache-sharing contract in miniature: tenant A faults
+        // the dataset in cold, tenant B walks the same range warm and must
+        // report zero demand faults of its own.
+        let (p, root) = store(0, 64, 32, 1 << 20);
+        let a = root.job_view();
+        a.with_range(0, 64, |_, _, _| {}).unwrap();
+        assert!(a.handle_stats().demand_faults > 0, "cold tenant faults");
+        let b = root.job_view();
+        b.with_range(0, 64, |_, _, _| {}).unwrap();
+        let sb = b.handle_stats();
+        assert_eq!(sb.demand_faults, 0, "warm tenant must not fault");
+        assert!(sb.page_hits >= 8, "warm tenant served from residency");
+        // the root handle's shared view still owns the union
+        assert_eq!(root.stats().demand_faults, a.handle_stats().demand_faults);
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn root_handle_stats_are_the_shared_totals() {
+        let (p, root) = store(0, 16, 32, 1 << 20);
+        root.with_range(0, 16, |_, _, _| {}).unwrap();
+        assert_eq!(root.handle_stats(), root.stats());
+        std::fs::remove_file(p).ok();
     }
 
     #[test]

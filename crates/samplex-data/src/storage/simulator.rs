@@ -15,33 +15,9 @@ use crate::storage::blockmap::BlockMap;
 use crate::storage::cache::LruCache;
 use crate::storage::profile::DeviceProfile;
 
-/// Cost breakdown of one or more fetches. Additive via `+=`.
-#[derive(Debug, Clone, Copy, Default, PartialEq)]
-pub struct AccessCost {
-    /// Simulated seconds spent accessing data.
-    pub time_s: f64,
-    /// Positioning events (seek + rotational + command issue), one per run.
-    pub seeks: u64,
-    /// Blocks actually transferred from the device.
-    pub blocks_transferred: u64,
-    /// Bytes actually transferred.
-    pub bytes_transferred: u64,
-    /// Blocks served from the page cache.
-    pub cache_hits: u64,
-    /// Blocks that had to be fetched.
-    pub cache_misses: u64,
-}
-
-impl std::ops::AddAssign for AccessCost {
-    fn add_assign(&mut self, rhs: Self) {
-        self.time_s += rhs.time_s;
-        self.seeks += rhs.seeks;
-        self.blocks_transferred += rhs.blocks_transferred;
-        self.bytes_transferred += rhs.bytes_transferred;
-        self.cache_hits += rhs.cache_hits;
-        self.cache_misses += rhs.cache_misses;
-    }
-}
+/// Simulated access-cost breakdown (moved to the observability crate);
+/// re-exported here at its historical path.
+pub use samplex_obs::stats::AccessCost;
 
 /// Device + geometry + page cache: the complete storage model for one
 /// dataset file.

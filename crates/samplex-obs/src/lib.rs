@@ -1,0 +1,31 @@
+//! # samplex-obs — observability plane
+//!
+//! Bottom layer of the samplex workspace: the shared measurement
+//! vocabulary every other member reports through.
+//!
+//! * [`stats`] — the plain-old-data access accounting structs:
+//!   [`stats::IoStats`] (real file I/O of the paged store) and
+//!   [`stats::AccessCost`] (simulated device access). They live here —
+//!   below the storage engine that fills them — so the metrics/CSV layer
+//!   and the service layer can consume them without depending on the
+//!   data plane.
+//! * [`metrics`] — the eq.(1) `training time = access + compute`
+//!   decomposition ([`metrics::TimeBreakdown`]), the crate-wide monotonic
+//!   clock seam ([`metrics::timer::monotonic_ns`]), convergence traces,
+//!   and crash-consistent CSV export.
+//! * [`obs`] — the span-tracing plane: lock-free per-thread ring buffers,
+//!   Chrome `trace_event` export, latency histograms, and the per-epoch
+//!   access/compute/overlap attribution.
+//!
+//! This crate depends on nothing. Its fallible APIs return
+//! [`std::io::Result`]; the typed domain `Error` lives in `samplex-data`,
+//! one layer up, and converts from `io::Error` at the call sites.
+//!
+//! Invariant rules that bind here (see `INVARIANTS.md`): R8
+//! clock-discipline *exempts* `metrics/` and `obs/` — they are the only
+//! modules allowed to read the raw clock, everything else measures
+//! through [`metrics::timer::monotonic_ns`].
+
+pub mod metrics;
+pub mod obs;
+pub mod stats;

@@ -18,9 +18,20 @@ use std::fs::File;
 use std::io::{BufWriter, Write};
 use std::path::Path;
 
-use crate::error::{Error, Result};
 use crate::metrics::Trace;
-use crate::storage::pagestore::IoStats;
+use crate::stats::IoStats;
+
+/// This crate sits below the workspace's typed `Error` (samplex-data), so
+/// its fallible APIs speak `std::io::Result`; callers above the data plane
+/// convert via `From<io::Error>` on the domain error.
+type Result<T> = std::io::Result<T>;
+
+/// A malformed-input refusal (header mismatch, ragged record) as an
+/// `InvalidData` I/O error, keeping the message a caller would have seen
+/// from the old `Error::Config` variant.
+fn config_err(msg: String) -> std::io::Error {
+    std::io::Error::new(std::io::ErrorKind::InvalidData, msg)
+}
 
 /// Column names for the real-I/O statistics block. `io_demand_faults` /
 /// `io_readahead_hits` / `io_stall_s` split access time into what stalled
@@ -121,7 +132,7 @@ impl CsvWriter {
                     continue;
                 }
                 if text != header_line {
-                    return Err(Error::Config(format!(
+                    return Err(config_err(format!(
                         "cannot append to '{}': its header '{text}' does not match \
                          '{header_line}'",
                         path.display()
@@ -152,7 +163,7 @@ impl CsvWriter {
     /// Append one record and flush it to disk before returning.
     pub fn record(&mut self, fields: &[String]) -> Result<()> {
         if fields.len() != self.columns {
-            return Err(Error::Config(format!(
+            return Err(config_err(format!(
                 "csv record has {} fields, header has {}",
                 fields.len(),
                 self.columns

@@ -15,8 +15,7 @@
 //! lint rule (R8) can confine raw `Instant::now` / `SystemTime::now`
 //! calls to `metrics/` and `obs/`.
 
-use crate::storage::pagestore::IoStats;
-use crate::storage::simulator::AccessCost;
+use crate::stats::{AccessCost, IoStats};
 
 /// Accumulated time breakdown for one experiment arm.
 #[derive(Debug, Clone, Copy, Default)]

@@ -240,9 +240,12 @@ pub fn attribute_window(t0_ns: u64, t1_ns: u64) -> Attribution {
 }
 
 /// Serializes tests that toggle the process-global arming flag (shared
-/// by the unit tests of this module and of [`export`]).
-#[cfg(test)]
-pub(crate) fn test_gate() -> MutexGuard<'static, ()> {
+/// by the unit tests of this module, of [`export`], and of the training
+/// driver one crate up — hence `pub` and compiled unconditionally: a
+/// `#[cfg(test)]` item would not exist when this crate is built as a
+/// dependency of another member's test target).
+#[doc(hidden)]
+pub fn test_gate() -> MutexGuard<'static, ()> {
     static GATE: Mutex<()> = Mutex::new(());
     match GATE.lock() {
         Ok(g) => g,

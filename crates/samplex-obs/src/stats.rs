@@ -1,0 +1,182 @@
+//! Access accounting structs shared across the workspace.
+//!
+//! [`IoStats`] is filled by the paged store's atomic counter block
+//! (`samplex-data::storage::pagestore`), [`AccessCost`] by the access-time
+//! simulator (`samplex-data::storage::simulator`). Both types live here —
+//! below the engines that fill them — so `metrics/`, the harness CSV, and
+//! the service layer can consume them without a dependency on the data
+//! plane. The data plane re-exports them at their historical paths.
+
+/// Lifetime I/O statistics of one page store — the real-file analogue of
+/// [`AccessCost`].
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct IoStats {
+    /// Bytes physically read from the file (page granularity).
+    pub bytes_read: u64,
+    /// Read syscalls issued (one per maximal run of faulted pages).
+    pub read_calls: u64,
+    /// Pages faulted in from disk (demand + readahead).
+    pub page_faults: u64,
+    /// Pages faulted on the *demand* path — the consumer had to wait for
+    /// the disk. With readahead keeping up this drops to zero; it is the
+    /// authoritative "did access stall compute?" counter.
+    pub demand_faults: u64,
+    /// Page touches served from the resident pool.
+    pub page_hits: u64,
+    /// Hits on pages that were brought in by the readahead thread (each
+    /// prefetched page is credited at most once, on its first demand
+    /// touch) — the authoritative "did readahead do useful work?" counter.
+    pub readahead_hits: u64,
+    /// Recovered I/O faults: transient read errors absorbed by the retry
+    /// policy plus checksum-quarantined runs that were refetched. Zero on
+    /// a healthy device; nonzero here with a clean trajectory is the
+    /// *retry-transparency* invariant working.
+    pub retries: u64,
+    /// Times the experiment downgraded from readahead to demand paging
+    /// because the readahead thread died (at most 1 per readahead handle;
+    /// the trajectory is unchanged, only overlap is lost).
+    pub degraded: u64,
+    /// Bytes actually delivered to callers (the useful payload).
+    pub bytes_requested: u64,
+    /// Wall seconds spent inside read syscalls (all threads).
+    pub read_s: f64,
+    /// Wall seconds the *demand path* (the thread assembling batches)
+    /// stalled on the disk: demand-fault read time plus time spent waiting
+    /// for a batch's readahead to complete. Readahead-thread read time is
+    /// excluded. Note: under the pipelined driver the demand path is the
+    /// prefetch reader thread, whose stalls may themselves be hidden from
+    /// the solver by the channel depth — `stall_s` is an upper bound on
+    /// solver-visible stall, and exact for the synchronous driver.
+    pub stall_s: f64,
+}
+
+impl IoStats {
+    /// `bytes_read / bytes_requested` — how many bytes the page
+    /// granularity forced off the device per byte the caller wanted.
+    pub fn read_amplification(&self) -> f64 {
+        if self.bytes_requested == 0 {
+            0.0
+        } else {
+            self.bytes_read as f64 / self.bytes_requested as f64
+        }
+    }
+
+    /// Achieved read throughput in MB/s over the time actually spent
+    /// inside read syscalls (0 when nothing was read). This is the
+    /// honest device throughput; compare with [`IoStats::wall_mbps`].
+    pub fn mb_per_s(&self) -> f64 {
+        if self.read_s <= 0.0 {
+            0.0
+        } else {
+            self.bytes_read as f64 / 1e6 / self.read_s
+        }
+    }
+
+    /// Delivered MB/s over a caller-supplied wall window — a denominator
+    /// that includes compute and idle time, so it *understates* device
+    /// throughput whenever access overlaps compute. Reported next to
+    /// [`IoStats::mb_per_s`] so the two attributions can be compared
+    /// (their gap is the overlap the prefetch pipeline bought).
+    pub fn wall_mbps(&self, wall_s: f64) -> f64 {
+        if wall_s <= 0.0 {
+            0.0
+        } else {
+            self.bytes_read as f64 / 1e6 / wall_s
+        }
+    }
+
+    /// Counters accumulated since `base` was captured (page stores are
+    /// shared across experiment arms; reports want per-arm deltas).
+    pub fn delta_since(&self, base: &IoStats) -> IoStats {
+        IoStats {
+            bytes_read: self.bytes_read - base.bytes_read,
+            read_calls: self.read_calls - base.read_calls,
+            page_faults: self.page_faults - base.page_faults,
+            demand_faults: self.demand_faults - base.demand_faults,
+            page_hits: self.page_hits - base.page_hits,
+            readahead_hits: self.readahead_hits - base.readahead_hits,
+            retries: self.retries - base.retries,
+            degraded: self.degraded - base.degraded,
+            bytes_requested: self.bytes_requested - base.bytes_requested,
+            read_s: self.read_s - base.read_s,
+            stall_s: self.stall_s - base.stall_s,
+        }
+    }
+}
+
+impl std::ops::AddAssign for IoStats {
+    fn add_assign(&mut self, rhs: Self) {
+        self.bytes_read += rhs.bytes_read;
+        self.read_calls += rhs.read_calls;
+        self.page_faults += rhs.page_faults;
+        self.demand_faults += rhs.demand_faults;
+        self.page_hits += rhs.page_hits;
+        self.readahead_hits += rhs.readahead_hits;
+        self.retries += rhs.retries;
+        self.degraded += rhs.degraded;
+        self.bytes_requested += rhs.bytes_requested;
+        self.read_s += rhs.read_s;
+        self.stall_s += rhs.stall_s;
+    }
+}
+
+/// Cost breakdown of one or more simulated fetches. Additive via `+=`.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct AccessCost {
+    /// Simulated seconds spent accessing data.
+    pub time_s: f64,
+    /// Positioning events (seek + rotational + command issue), one per run.
+    pub seeks: u64,
+    /// Blocks actually transferred from the device.
+    pub blocks_transferred: u64,
+    /// Bytes actually transferred.
+    pub bytes_transferred: u64,
+    /// Blocks served from the page cache.
+    pub cache_hits: u64,
+    /// Blocks that had to be fetched.
+    pub cache_misses: u64,
+}
+
+impl std::ops::AddAssign for AccessCost {
+    fn add_assign(&mut self, rhs: Self) {
+        self.time_s += rhs.time_s;
+        self.seeks += rhs.seeks;
+        self.blocks_transferred += rhs.blocks_transferred;
+        self.bytes_transferred += rhs.bytes_transferred;
+        self.cache_hits += rhs.cache_hits;
+        self.cache_misses += rhs.cache_misses;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn io_stats_delta_since_subtracts_every_counter() {
+        let base = IoStats { bytes_read: 100, page_faults: 2, read_s: 0.5, ..Default::default() };
+        let mut now = base;
+        now += IoStats { bytes_read: 50, page_faults: 1, read_s: 0.25, ..Default::default() };
+        let d = now.delta_since(&base);
+        assert_eq!(d.bytes_read, 50);
+        assert_eq!(d.page_faults, 1);
+        assert!((d.read_s - 0.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn access_cost_accumulates() {
+        let mut a = AccessCost::default();
+        a += AccessCost { seeks: 2, bytes_transferred: 64, ..Default::default() };
+        a += AccessCost { seeks: 1, bytes_transferred: 32, ..Default::default() };
+        assert_eq!(a.seeks, 3);
+        assert_eq!(a.bytes_transferred, 96);
+    }
+
+    #[test]
+    fn rates_degrade_to_zero_without_denominators() {
+        let io = IoStats::default();
+        assert_eq!(io.read_amplification(), 0.0);
+        assert_eq!(io.mb_per_s(), 0.0);
+        assert_eq!(io.wall_mbps(0.0), 0.0);
+    }
+}

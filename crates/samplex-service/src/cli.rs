@@ -1,0 +1,291 @@
+//! Hand-rolled CLI flag layer for the `samplex` binary.
+//!
+//! Extracted from `main.rs` so parsing is unit-testable per subcommand:
+//! every subcommand declares its flag vocabulary in a [`CommandSpec`]
+//! allowlist, and [`Flags::parse_for`] rejects unknown flags with a
+//! `Config` error *before* any work starts — a typo like `--epoch 5` fails
+//! fast instead of silently training with the default.
+//!
+//! Argument parsing stays hand-rolled: the workspace builds fully offline
+//! with zero external dependencies (the optional `pjrt` feature adds
+//! `xla`).
+
+use std::collections::{HashMap, HashSet};
+
+use samplex::error::{Error, Result};
+
+/// One-line usage banner; appended to `Config` errors only (see
+/// [`render_failure`]).
+pub const USAGE: &str =
+    "samplex <generate-data|train|table|figure|sweep|estimate-optimum|info|serve> [flags]
+  (see `samplex help` or README.md for flag reference)";
+
+/// Error text printed to stderr on failure. Usage is appended **only** for
+/// configuration errors (bad flags/values): an I/O or corruption failure
+/// must not bury its real message under help text.
+pub fn render_failure(e: &Error) -> String {
+    match e {
+        Error::Config(_) => format!("error: {e}\n{USAGE}"),
+        _ => format!("error: {e}"),
+    }
+}
+
+/// The flag vocabulary of one subcommand: which `--key value` flags and
+/// which boolean `--switch` flags it accepts.
+pub struct CommandSpec {
+    pub name: &'static str,
+    pub values: &'static [&'static str],
+    pub switches: &'static [&'static str],
+}
+
+/// Every subcommand's allowlist. Order matches the usage banner.
+pub const COMMANDS: &[CommandSpec] = &[
+    CommandSpec {
+        name: "generate-data",
+        values: &["dataset", "out-dir", "seed"],
+        switches: &["all"],
+    },
+    CommandSpec {
+        name: "train",
+        values: &[
+            "config", "dataset", "solver", "sampling", "step", "batch", "epochs", "backend",
+            "storage", "data-dir", "seed", "prefetch", "memory-budget", "page-kib",
+            "readahead-pages", "pool-threads", "checkpoint", "retry-attempts", "io-timeout-ms",
+            "trace", "heartbeat", "trace-csv",
+        ],
+        switches: &["pre-shuffle", "paged", "resume"],
+    },
+    CommandSpec {
+        name: "table",
+        values: &["dataset", "epochs", "backend", "storage", "data-dir", "csv"],
+        switches: &["all", "summary", "resume"],
+    },
+    CommandSpec {
+        name: "figure",
+        values: &["datasets", "epochs", "solver", "backend", "storage", "data-dir", "csv-dir"],
+        switches: &["rate-fit"],
+    },
+    CommandSpec {
+        name: "sweep",
+        values: &["dataset", "data-dir", "param", "epochs", "values", "batch", "storage"],
+        switches: &[],
+    },
+    CommandSpec {
+        name: "estimate-optimum",
+        values: &["dataset", "iters", "data-dir", "seed"],
+        switches: &[],
+    },
+    CommandSpec { name: "info", values: &["artifacts-dir"], switches: &[] },
+    CommandSpec {
+        name: "serve",
+        values: &["socket", "memory-budget", "data-dir"],
+        switches: &[],
+    },
+];
+
+/// Look up a subcommand's [`CommandSpec`].
+pub fn spec_for(cmd: &str) -> Option<&'static CommandSpec> {
+    COMMANDS.iter().find(|s| s.name == cmd)
+}
+
+/// Minimal `--key value` / `--flag` parser.
+pub struct Flags {
+    values: HashMap<String, String>,
+    switches: HashSet<String>,
+}
+
+impl Flags {
+    /// Positional parse against an explicit boolean-switch list; any
+    /// `--key` not in `boolean` takes a value. Kept for callers that build
+    /// ad-hoc flag sets (tests, tools); the binary itself goes through
+    /// [`Flags::parse_for`].
+    pub fn parse(args: &[String], boolean: &[&str]) -> Result<Flags> {
+        let mut values = HashMap::new();
+        let mut switches = HashSet::new();
+        let mut i = 0;
+        while i < args.len() {
+            let a = &args[i];
+            let key = a
+                .strip_prefix("--")
+                .ok_or_else(|| Error::Config(format!("unexpected argument '{a}'")))?;
+            if boolean.contains(&key) {
+                switches.insert(key.to_string());
+                i += 1;
+            } else {
+                let v = args
+                    .get(i + 1)
+                    .ok_or_else(|| Error::Config(format!("--{key} needs a value")))?;
+                values.insert(key.to_string(), v.clone());
+                i += 2;
+            }
+        }
+        Ok(Flags { values, switches })
+    }
+
+    /// Parse `args` against the named subcommand's allowlist. Flags may
+    /// appear in any order; a flag outside the vocabulary is a `Config`
+    /// error naming both the flag and the subcommand.
+    pub fn parse_for(cmd: &str, args: &[String]) -> Result<Flags> {
+        let spec = spec_for(cmd)
+            .ok_or_else(|| Error::Config(format!("unknown subcommand '{cmd}'")))?;
+        let f = Flags::parse(args, spec.switches)?;
+        for k in f.values.keys() {
+            if !spec.values.contains(&k.as_str()) {
+                return Err(Error::Config(format!(
+                    "unknown flag --{k} for '{}'",
+                    spec.name
+                )));
+            }
+        }
+        Ok(f)
+    }
+
+    pub fn get(&self, k: &str) -> Option<&str> {
+        self.values.get(k).map(|s| s.as_str())
+    }
+
+    pub fn get_or(&self, k: &str, default: &str) -> String {
+        self.get(k).unwrap_or(default).to_string()
+    }
+
+    pub fn get_usize(&self, k: &str, default: usize) -> Result<usize> {
+        match self.get(k) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|e| Error::Config(format!("--{k}: {e}"))),
+        }
+    }
+
+    pub fn get_u64(&self, k: &str, default: u64) -> Result<u64> {
+        match self.get(k) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|e| Error::Config(format!("--{k}: {e}"))),
+        }
+    }
+
+    pub fn has(&self, k: &str) -> bool {
+        self.switches.contains(k)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn s(v: &[&str]) -> Vec<String> {
+        v.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn flags_parse_values_and_switches() {
+        let f = Flags::parse(&s(&["--dataset", "susy-mini", "--all", "--epochs", "7"]), &["all"])
+            .unwrap();
+        assert_eq!(f.get("dataset"), Some("susy-mini"));
+        assert!(f.has("all"));
+        assert_eq!(f.get_usize("epochs", 1).unwrap(), 7);
+        assert_eq!(f.get_or("missing", "dflt"), "dflt");
+        assert_eq!(f.get_u64("seed", 99).unwrap(), 99);
+    }
+
+    #[test]
+    fn flags_reject_malformed() {
+        assert!(Flags::parse(&s(&["notflag"]), &[]).is_err());
+        assert!(Flags::parse(&s(&["--key"]), &[]).is_err());
+        let f = Flags::parse(&s(&["--epochs", "abc"]), &[]).unwrap();
+        assert!(f.get_usize("epochs", 1).is_err());
+    }
+
+    #[test]
+    fn every_subcommand_accepts_its_flags_in_both_orders() {
+        // one representative (value, switch) pair per subcommand that has
+        // both kinds; flags must parse identically in either order
+        let cases: &[(&str, &[&str], &[&str])] = &[
+            ("generate-data", &["--dataset", "x", "--all"], &["--all", "--dataset", "x"]),
+            (
+                "train",
+                &["--epochs", "3", "--paged", "--dataset", "d"],
+                &["--paged", "--dataset", "d", "--epochs", "3"],
+            ),
+            ("table", &["--csv", "o.csv", "--summary"], &["--summary", "--csv", "o.csv"]),
+            (
+                "figure",
+                &["--datasets", "a,b", "--rate-fit"],
+                &["--rate-fit", "--datasets", "a,b"],
+            ),
+            ("sweep", &["--param", "block", "--epochs", "2"], &["--epochs", "2", "--param", "block"]),
+            ("estimate-optimum", &["--iters", "9", "--dataset", "d"], &["--dataset", "d", "--iters", "9"]),
+            ("info", &["--artifacts-dir", "a"], &["--artifacts-dir", "a"]),
+            (
+                "serve",
+                &["--socket", "/tmp/s.sock", "--memory-budget", "64"],
+                &["--memory-budget", "64", "--socket", "/tmp/s.sock"],
+            ),
+        ];
+        for (cmd, fwd, rev) in cases {
+            let a = Flags::parse_for(cmd, &s(fwd)).unwrap_or_else(|e| panic!("{cmd} fwd: {e}"));
+            let b = Flags::parse_for(cmd, &s(rev)).unwrap_or_else(|e| panic!("{cmd} rev: {e}"));
+            for (k, v) in &a.values {
+                assert_eq!(b.get(k), Some(v.as_str()), "{cmd}: --{k} must be order-free");
+            }
+            for k in &a.switches {
+                assert!(b.has(k), "{cmd}: --{k} must be order-free");
+            }
+        }
+    }
+
+    #[test]
+    fn every_subcommand_rejects_unknown_flags() {
+        for spec in COMMANDS {
+            let err = Flags::parse_for(spec.name, &s(&["--frobnicate", "1"]))
+                .expect_err(&format!("{} must reject --frobnicate", spec.name));
+            let msg = err.to_string();
+            assert!(msg.contains("frobnicate"), "{}: {msg}", spec.name);
+            assert!(msg.contains(spec.name), "{}: error must name the subcommand", spec.name);
+            assert!(matches!(err, Error::Config(_)));
+        }
+    }
+
+    #[test]
+    fn unknown_switch_is_parsed_as_value_flag_and_rejected() {
+        // a switch outside the allowlist consumes the next token as its
+        // value (the parser cannot know it was meant as a boolean), then
+        // fails the allowlist check — still a clean config error
+        let err = Flags::parse_for("train", &s(&["--pagedd", "--epochs"])).unwrap_err();
+        assert!(matches!(err, Error::Config(_)));
+    }
+
+    #[test]
+    fn parse_for_rejects_unknown_subcommand() {
+        assert!(Flags::parse_for("frobnicate", &[]).is_err());
+    }
+
+    #[test]
+    fn known_switches_do_not_eat_values() {
+        let f = Flags::parse_for("train", &s(&["--paged", "--epochs", "4"])).unwrap();
+        assert!(f.has("paged"));
+        assert_eq!(f.get_usize("epochs", 0).unwrap(), 4);
+    }
+
+    #[test]
+    fn usage_is_appended_only_for_config_errors() {
+        let cfg_err = Error::Config("bad flag".into());
+        assert!(render_failure(&cfg_err).contains(USAGE));
+        let io: Error = std::io::Error::new(std::io::ErrorKind::NotFound, "gone").into();
+        assert!(!render_failure(&io).contains(USAGE), "no usage spam on I/O errors");
+    }
+
+    #[test]
+    fn spec_table_is_consistent() {
+        for spec in COMMANDS {
+            for v in spec.values {
+                assert!(!spec.switches.contains(v), "{}: --{v} is both kinds", spec.name);
+            }
+            assert!(USAGE.contains(spec.name) || spec.name == "help", "{} missing from usage", spec.name);
+        }
+        assert!(spec_for("train").is_some());
+        assert!(spec_for("nope").is_none());
+    }
+}

@@ -1,0 +1,21 @@
+//! samplex-service — the service plane of the workspace.
+//!
+//! Owns everything user-facing that is *not* the library: the hand-rolled
+//! CLI flag layer ([`cli`]), a dependency-free JSON codec ([`json`]) for
+//! the wire protocol, and the multi-tenant `samplex serve` daemon
+//! ([`serve`]) that schedules training jobs from many clients onto one
+//! shared data plane — one worker pool, one shard-locked [`PageStore`] per
+//! dataset file, per-job [`IoStats`] attribution through
+//! [`PageStore::job_view`].
+//!
+//! The `samplex` binary (`src/main.rs`) is a thin dispatcher over these
+//! modules; every piece of logic lives in the library so it is unit- and
+//! integration-testable without spawning a process.
+//!
+//! [`PageStore`]: samplex::storage::pagestore::PageStore
+//! [`PageStore::job_view`]: samplex::storage::pagestore::PageStore::job_view
+//! [`IoStats`]: samplex::storage::pagestore::IoStats
+
+pub mod cli;
+pub mod json;
+pub mod serve;

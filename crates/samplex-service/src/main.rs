@@ -43,6 +43,14 @@
 //!                 [--backend B] [--storage P] [--data-dir data] [--csv-dir d]
 //! samplex estimate-optimum [--dataset D] [--iters N] [--data-dir data]
 //! samplex info    [--artifacts-dir artifacts]
+//! samplex serve   --socket PATH [--memory-budget MIB] [--data-dir data]
+//!                     (multi-tenant daemon: newline-delimited JSON job
+//!                      requests over a Unix socket — submit/status/
+//!                      cancel/list/watch/shutdown — scheduled onto one
+//!                      shared worker pool and one shared page store per
+//!                      dataset, with per-job IoStats attribution and
+//!                      admission control against the memory budget; see
+//!                      docs/SERVE.md for the protocol)
 //!
 //! any command: [--force-scalar]
 //!                 (pin compute to the portable scalar kernels — mirror of
@@ -53,8 +61,6 @@
 //! Argument parsing is hand-rolled: the workspace builds fully offline with
 //! zero external dependencies (the optional `pjrt` feature adds `xla`).
 
-use std::collections::{HashMap, HashSet};
-
 use samplex::bench_harness;
 use samplex::config::{BackendKind, ExperimentConfig, GridConfig, StepKind};
 use samplex::data::registry;
@@ -64,79 +70,7 @@ use samplex::sampling::SamplingKind;
 use samplex::solvers::SolverKind;
 use samplex::storage::profile::DeviceProfile;
 
-/// Minimal `--key value` / `--flag` parser.
-struct Flags {
-    values: HashMap<String, String>,
-    switches: HashSet<String>,
-}
-
-impl Flags {
-    fn parse(args: &[String], boolean: &[&str]) -> Result<Flags> {
-        let mut values = HashMap::new();
-        let mut switches = HashSet::new();
-        let mut i = 0;
-        while i < args.len() {
-            let a = &args[i];
-            let key = a
-                .strip_prefix("--")
-                .ok_or_else(|| Error::Config(format!("unexpected argument '{a}'")))?;
-            if boolean.contains(&key) {
-                switches.insert(key.to_string());
-                i += 1;
-            } else {
-                let v = args
-                    .get(i + 1)
-                    .ok_or_else(|| Error::Config(format!("--{key} needs a value")))?;
-                values.insert(key.to_string(), v.clone());
-                i += 2;
-            }
-        }
-        Ok(Flags { values, switches })
-    }
-
-    fn get(&self, k: &str) -> Option<&str> {
-        self.values.get(k).map(|s| s.as_str())
-    }
-
-    fn get_or(&self, k: &str, default: &str) -> String {
-        self.get(k).unwrap_or(default).to_string()
-    }
-
-    fn get_usize(&self, k: &str, default: usize) -> Result<usize> {
-        match self.get(k) {
-            None => Ok(default),
-            Some(v) => v
-                .parse()
-                .map_err(|e| Error::Config(format!("--{k}: {e}"))),
-        }
-    }
-
-    fn get_u64(&self, k: &str, default: u64) -> Result<u64> {
-        match self.get(k) {
-            None => Ok(default),
-            Some(v) => v
-                .parse()
-                .map_err(|e| Error::Config(format!("--{k}: {e}"))),
-        }
-    }
-
-    fn has(&self, k: &str) -> bool {
-        self.switches.contains(k)
-    }
-}
-
-const USAGE: &str = "samplex <generate-data|train|table|figure|sweep|estimate-optimum|info> [flags]
-  (see `samplex help` or README.md for flag reference)";
-
-/// Error text printed to stderr on failure. Usage is appended **only** for
-/// configuration errors (bad flags/values): an I/O or corruption failure
-/// must not bury its real message under help text.
-fn render_failure(e: &Error) -> String {
-    match e {
-        Error::Config(_) => format!("error: {e}\n{USAGE}"),
-        _ => format!("error: {e}"),
-    }
-}
+use samplex_service::cli::{render_failure, Flags, USAGE};
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -173,6 +107,7 @@ fn run(args: &[String]) -> Result<()> {
         "sweep" => cmd_sweep(rest),
         "estimate-optimum" => cmd_estimate_optimum(rest),
         "info" => cmd_info(rest),
+        "serve" => cmd_serve(rest),
         "help" | "--help" | "-h" => {
             println!("{USAGE}");
             Ok(())
@@ -182,7 +117,7 @@ fn run(args: &[String]) -> Result<()> {
 }
 
 fn cmd_generate_data(args: &[String]) -> Result<()> {
-    let f = Flags::parse(args, &["all"])?;
+    let f = Flags::parse_for("generate-data", args)?;
     let out_dir = f.get_or("out-dir", "data");
     let seed = f.get_u64("seed", 42)?;
     std::fs::create_dir_all(&out_dir)?;
@@ -211,7 +146,7 @@ fn cmd_generate_data(args: &[String]) -> Result<()> {
 }
 
 fn cmd_train(args: &[String]) -> Result<()> {
-    let f = Flags::parse(args, &["pre-shuffle", "paged", "resume"])?;
+    let f = Flags::parse_for("train", args)?;
     let mut cfg = match f.get("config") {
         Some(p) => ExperimentConfig::from_toml_file(p)?,
         None => ExperimentConfig::default(),
@@ -359,7 +294,7 @@ fn cmd_train(args: &[String]) -> Result<()> {
 }
 
 fn cmd_table(args: &[String]) -> Result<()> {
-    let f = Flags::parse(args, &["all", "summary", "resume"])?;
+    let f = Flags::parse_for("table", args)?;
     let epochs = f.get_usize("epochs", 30)?;
     let backend = BackendKind::parse(&f.get_or("backend", "native"))?;
     let storage = f.get_or("storage", "hdd");
@@ -441,7 +376,7 @@ fn cmd_table(args: &[String]) -> Result<()> {
 }
 
 fn cmd_figure(args: &[String]) -> Result<()> {
-    let f = Flags::parse(args, &["rate-fit"])?;
+    let f = Flags::parse_for("figure", args)?;
     let epochs = f.get_usize("epochs", 30)?;
     let backend = BackendKind::parse(&f.get_or("backend", "native"))?;
     let storage = f.get_or("storage", "hdd");
@@ -518,7 +453,7 @@ fn glyph_for(k: SamplingKind) -> char {
 
 /// Storage-model ablations: `--param block|cache`, comma-separated values.
 fn cmd_sweep(args: &[String]) -> Result<()> {
-    let f = Flags::parse(args, &[])?;
+    let f = Flags::parse_for("sweep", args)?;
     let dataset = f.get_or("dataset", "covtype-mini");
     let data_dir = f.get_or("data-dir", "data");
     let param = f.get_or("param", "block");
@@ -556,7 +491,7 @@ fn cmd_sweep(args: &[String]) -> Result<()> {
 }
 
 fn cmd_estimate_optimum(args: &[String]) -> Result<()> {
-    let f = Flags::parse(args, &[])?;
+    let f = Flags::parse_for("estimate-optimum", args)?;
     let dataset = f.get_or("dataset", "covtype-mini");
     let iters = f.get_usize("iters", 5000)?;
     let data_dir = f.get_or("data-dir", "data");
@@ -570,7 +505,7 @@ fn cmd_estimate_optimum(args: &[String]) -> Result<()> {
 }
 
 fn cmd_info(args: &[String]) -> Result<()> {
-    let f = Flags::parse(args, &[])?;
+    let f = Flags::parse_for("info", args)?;
     let artifacts_dir = f.get_or("artifacts-dir", "artifacts");
     println!("datasets (paper Table 1 -> scaled stand-ins):");
     for p in registry::profiles() {
@@ -614,31 +549,37 @@ fn cmd_info(args: &[String]) -> Result<()> {
     Ok(())
 }
 
+/// The multi-tenant daemon: many clients, one shared data plane. Blocks
+/// until a `shutdown` request arrives, then drains every job.
+fn cmd_serve(args: &[String]) -> Result<()> {
+    let f = Flags::parse_for("serve", args)?;
+    #[cfg(unix)]
+    {
+        let socket = f
+            .get("socket")
+            .ok_or_else(|| Error::Config("serve needs --socket PATH".into()))?
+            .to_string();
+        let budget_mib = f.get_u64("memory-budget", 512)?;
+        let data_dir = f.get_or("data-dir", "data");
+        let core =
+            samplex_service::serve::ServeCore::new(budget_mib << 20, &data_dir);
+        samplex_service::serve::server::serve(std::path::Path::new(&socket), core)
+    }
+    #[cfg(not(unix))]
+    {
+        let _ = f;
+        Err(Error::Config(
+            "samplex serve needs Unix domain sockets (unsupported on this platform)".into(),
+        ))
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
 
     fn s(v: &[&str]) -> Vec<String> {
         v.iter().map(|x| x.to_string()).collect()
-    }
-
-    #[test]
-    fn flags_parse_values_and_switches() {
-        let f = Flags::parse(&s(&["--dataset", "susy-mini", "--all", "--epochs", "7"]),
-                             &["all"]).unwrap();
-        assert_eq!(f.get("dataset"), Some("susy-mini"));
-        assert!(f.has("all"));
-        assert_eq!(f.get_usize("epochs", 1).unwrap(), 7);
-        assert_eq!(f.get_or("missing", "dflt"), "dflt");
-        assert_eq!(f.get_u64("seed", 99).unwrap(), 99);
-    }
-
-    #[test]
-    fn flags_reject_malformed() {
-        assert!(Flags::parse(&s(&["notflag"]), &[]).is_err());
-        assert!(Flags::parse(&s(&["--key"]), &[]).is_err());
-        let f = Flags::parse(&s(&["--epochs", "abc"]), &[]).unwrap();
-        assert!(f.get_usize("epochs", 1).is_err());
     }
 
     #[test]
@@ -666,6 +607,14 @@ mod tests {
         assert!(!rendered.contains(USAGE), "no usage spam on I/O errors");
         let io: Error = std::io::Error::new(std::io::ErrorKind::NotFound, "gone").into();
         assert!(!render_failure(&io).contains(USAGE));
+    }
+
+    #[cfg(unix)]
+    #[test]
+    fn serve_requires_a_socket_path() {
+        let err = run(&s(&["serve"])).unwrap_err();
+        assert!(matches!(err, Error::Config(_)), "{err}");
+        assert!(err.to_string().contains("--socket"));
     }
 
     #[test]

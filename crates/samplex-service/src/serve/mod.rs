@@ -1,0 +1,1114 @@
+//! `samplex serve` — multi-tenant training jobs over one shared data plane.
+//!
+//! Many clients submit training jobs to one daemon; the daemon schedules
+//! them onto the **process-global worker pool** (`runtime::pool`) and a
+//! **shared, shard-locked [`PageStore`] per dataset file**. Every paged
+//! job attaches through [`PageStore::job_view`], so a warm second job on
+//! the same dataset is served out of the resident page cache — its
+//! per-job [`IoStats`] report `readahead_hits`/`page_hits` instead of
+//! demand faults — while the store's shared block keeps the totals.
+//!
+//! Scheduling is **admission control, not preemption**: each job's memory
+//! need (its page-store budget, or its in-core footprint) is charged
+//! against a global byte budget before the job starts. Jobs that do not
+//! fit wait in strict FIFO order — the daemon queues instead of
+//! thrashing the page cache. A job larger than the whole budget is
+//! admitted only when nothing else runs, so it cannot deadlock the queue.
+//!
+//! Job lifecycle and wire protocol live here; the Unix-socket transport
+//! (newline-delimited JSON) is the thin [`server`] module on top. The
+//! core is deliberately socket-free so every scheduling, sharing and
+//! attribution property is unit-testable in-process.
+//!
+//! Training trajectories are **bit-identical** to solo `samplex train`
+//! runs: the epoch hooks fire outside the measured clocks, the sampler
+//! schedules depend only on `(seed, epoch)`, and the shared pool's
+//! reductions are deterministic at every thread count (pinned by
+//! `tests/serve_concurrency.rs`).
+//!
+//! [`PageStore`]: samplex::storage::pagestore::PageStore
+//! [`PageStore::job_view`]: samplex::storage::pagestore::PageStore::job_view
+//! [`IoStats`]: samplex::storage::pagestore::IoStats
+
+#[cfg(unix)]
+pub mod server;
+
+use std::collections::{BTreeMap, HashMap, VecDeque};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+
+use samplex::config::{BackendKind, ExperimentConfig, StepKind};
+use samplex::data::{registry, CsrDataset, Dataset, DenseDataset, PagedDataset};
+use samplex::error::{Error, Result};
+use samplex::sampling::SamplingKind;
+use samplex::solvers::SolverKind;
+use samplex::storage::pagestore::IoStats;
+use samplex::train::{self, EpochProgress, RunHooks};
+
+use crate::json::{self, Value};
+
+/// One tenant's job request: the `train` flag surface that makes sense
+/// per-job (backend is pinned to native — the daemon owns the process).
+#[derive(Debug, Clone)]
+pub struct JobSpec {
+    /// Registry name (`covtype-mini`) or an explicit `.sxb`/`.sxc` path.
+    pub dataset: String,
+    pub data_dir: String,
+    pub solver: SolverKind,
+    pub sampling: SamplingKind,
+    pub step: StepKind,
+    pub batch: usize,
+    pub epochs: usize,
+    pub seed: u64,
+    pub reg_c: Option<f32>,
+    /// Serve the features out-of-core through the shared page store.
+    pub paged: bool,
+    pub memory_budget_mib: u64,
+    pub page_kib: u64,
+    pub readahead_pages: u64,
+    /// Simulated device profile (`hdd|ssd|ram`).
+    pub storage: String,
+    pub pool_threads: usize,
+    pub prefetch_depth: usize,
+}
+
+impl Default for JobSpec {
+    fn default() -> Self {
+        JobSpec {
+            dataset: "covtype-mini".into(),
+            data_dir: "data".into(),
+            solver: SolverKind::Mbsgd,
+            sampling: SamplingKind::Ss,
+            step: StepKind::Constant,
+            batch: 500,
+            epochs: 5,
+            seed: 42,
+            reg_c: None,
+            paged: false,
+            memory_budget_mib: 0,
+            page_kib: 64,
+            readahead_pages: 0,
+            storage: "ram".into(),
+            pool_threads: 0,
+            prefetch_depth: 0,
+        }
+    }
+}
+
+/// Keys a submit request may carry besides the envelope (`op`, `watch`).
+const SPEC_KEYS: &[&str] = &[
+    "dataset", "data_dir", "solver", "sampling", "step", "batch", "epochs", "seed", "reg_c",
+    "paged", "memory_budget_mib", "page_kib", "readahead_pages", "storage", "pool_threads",
+    "prefetch_depth",
+];
+
+impl JobSpec {
+    /// Parse a submit request object. Mirrors the CLI's allowlist
+    /// discipline: an unknown key is a `Config` error, not a silent
+    /// default — a misspelled `"epcohs"` must not train for 5 epochs.
+    pub fn from_json(v: &Value, default_data_dir: &str) -> Result<JobSpec> {
+        for k in v.keys() {
+            if k != "op" && k != "watch" && !SPEC_KEYS.contains(&k) {
+                return Err(Error::Config(format!("unknown job field '{k}'")));
+            }
+        }
+        let mut spec = JobSpec { data_dir: default_data_dir.to_string(), ..JobSpec::default() };
+        let str_field = |k: &str| -> Result<Option<String>> {
+            match v.get(k) {
+                None => Ok(None),
+                Some(x) => x
+                    .as_str()
+                    .map(|s| Some(s.to_string()))
+                    .ok_or_else(|| Error::Config(format!("job field '{k}' must be a string"))),
+            }
+        };
+        let int_field = |k: &str| -> Result<Option<u64>> {
+            match v.get(k) {
+                None => Ok(None),
+                Some(x) => x
+                    .as_u64()
+                    .map(Some)
+                    .ok_or_else(|| Error::Config(format!("job field '{k}' must be a non-negative integer"))),
+            }
+        };
+        if let Some(s) = str_field("dataset")? {
+            spec.dataset = s;
+        }
+        if let Some(s) = str_field("data_dir")? {
+            spec.data_dir = s;
+        }
+        if let Some(s) = str_field("solver")? {
+            spec.solver = SolverKind::parse(&s)?;
+        }
+        if let Some(s) = str_field("sampling")? {
+            spec.sampling = SamplingKind::parse(&s)?;
+        }
+        if let Some(s) = str_field("step")? {
+            spec.step = StepKind::parse(&s)?;
+        }
+        if let Some(s) = str_field("storage")? {
+            spec.storage = s;
+        }
+        if let Some(n) = int_field("batch")? {
+            spec.batch = n as usize;
+        }
+        if let Some(n) = int_field("epochs")? {
+            spec.epochs = n as usize;
+        }
+        if let Some(n) = int_field("seed")? {
+            spec.seed = n;
+        }
+        if let Some(n) = int_field("memory_budget_mib")? {
+            spec.memory_budget_mib = n;
+        }
+        if let Some(n) = int_field("page_kib")? {
+            spec.page_kib = n;
+        }
+        if let Some(n) = int_field("readahead_pages")? {
+            spec.readahead_pages = n;
+        }
+        if let Some(n) = int_field("pool_threads")? {
+            spec.pool_threads = n as usize;
+        }
+        if let Some(n) = int_field("prefetch_depth")? {
+            spec.prefetch_depth = n as usize;
+        }
+        if let Some(x) = v.get("reg_c") {
+            let c = x
+                .as_f64()
+                .ok_or_else(|| Error::Config("job field 'reg_c' must be a number".into()))?;
+            spec.reg_c = Some(c as f32);
+        }
+        if let Some(x) = v.get("paged") {
+            spec.paged = x
+                .as_bool()
+                .ok_or_else(|| Error::Config("job field 'paged' must be a boolean".into()))?;
+        }
+        Ok(spec)
+    }
+
+    /// Lower the spec to a validated [`ExperimentConfig`].
+    pub fn to_config(&self, id: u64) -> Result<ExperimentConfig> {
+        let mut cfg =
+            ExperimentConfig::quick(&self.dataset, self.solver, self.sampling, self.batch);
+        cfg.name = format!("job{id}-{}", cfg.name);
+        cfg.epochs = self.epochs;
+        cfg.step = self.step;
+        cfg.seed = self.seed;
+        cfg.reg_c = self.reg_c;
+        cfg.data_dir = self.data_dir.clone();
+        cfg.backend = BackendKind::Native;
+        cfg.storage.profile = self.storage.clone();
+        cfg.storage.paged = self.paged;
+        cfg.storage.memory_budget_mib = self.memory_budget_mib;
+        cfg.storage.page_kib = self.page_kib;
+        cfg.storage.readahead_pages = self.readahead_pages;
+        cfg.pool_threads = self.pool_threads;
+        cfg.prefetch_depth = self.prefetch_depth;
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// The on-disk file this spec trains from, when it is knowable
+    /// without generating data: an explicit path, or a cached
+    /// `data_dir/name.{sxb,sxc}`.
+    fn dataset_file(&self) -> Option<std::path::PathBuf> {
+        let p = std::path::Path::new(&self.dataset);
+        let is_path = self.dataset.contains('/')
+            || matches!(p.extension().and_then(|e| e.to_str()), Some("sxb" | "sxc"));
+        if is_path {
+            return Some(p.to_path_buf());
+        }
+        let dir = std::path::Path::new(&self.data_dir);
+        for ext in ["sxb", "sxc"] {
+            let cand = dir.join(format!("{}.{ext}", self.dataset));
+            if cand.is_file() {
+                return Some(cand);
+            }
+        }
+        None
+    }
+
+    /// Shared-store identity: jobs share a [`PageStore`] iff they name the
+    /// same file with the same pool geometry (budget + page size).
+    ///
+    /// [`PageStore`]: samplex::storage::pagestore::PageStore
+    fn store_key(&self) -> String {
+        let file = self
+            .dataset_file()
+            .map(|p| p.to_string_lossy().into_owned())
+            .unwrap_or_else(|| format!("{}/{}", self.data_dir, self.dataset));
+        format!("{file}|mb{}|pk{}", self.memory_budget_mib, self.page_kib)
+    }
+
+    /// Bytes this job charges against the daemon's admission budget: the
+    /// page-pool budget for paged jobs (the whole file when the budget is
+    /// 0 = unbounded), the resident file footprint for in-core jobs.
+    fn mem_need_bytes(&self) -> u64 {
+        const FALLBACK: u64 = 64 << 20; // file not yet generated: assume 64 MiB
+        let file_len = self.dataset_file().and_then(|p| std::fs::metadata(p).ok().map(|m| m.len()));
+        if self.paged {
+            let budget = self.memory_budget_mib << 20;
+            match (budget, file_len) {
+                (0, Some(len)) => len,
+                (0, None) => FALLBACK,
+                (b, Some(len)) => b.min(len),
+                (b, None) => b,
+            }
+        } else {
+            file_len.unwrap_or(FALLBACK)
+        }
+    }
+}
+
+/// Where a job is in its lifecycle.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Phase {
+    /// Waiting for admission (memory budget) in FIFO order.
+    Queued,
+    Running,
+    Done,
+    Failed,
+    /// Cancelled cooperatively at an epoch boundary (or while queued).
+    Cancelled,
+}
+
+impl Phase {
+    pub fn label(&self) -> &'static str {
+        match self {
+            Phase::Queued => "queued",
+            Phase::Running => "running",
+            Phase::Done => "done",
+            Phase::Failed => "failed",
+            Phase::Cancelled => "cancelled",
+        }
+    }
+
+    pub fn is_terminal(&self) -> bool {
+        matches!(self, Phase::Done | Phase::Failed | Phase::Cancelled)
+    }
+}
+
+/// One epoch-boundary progress snapshot, as streamed to a watching client.
+#[derive(Debug, Clone)]
+pub struct EpochEvent {
+    /// 1-based epochs completed.
+    pub epoch: usize,
+    pub epochs: usize,
+    pub objective: f64,
+    pub train_time_s: f64,
+    pub wall_s: f64,
+    /// This job's real-I/O delta so far (per-job view, not store totals).
+    pub io: IoStats,
+}
+
+/// A finished job's outcome, kept until the daemon shuts down.
+#[derive(Debug, Clone)]
+pub struct JobResult {
+    /// Final iterate — pinned bit-identical to a solo run by the
+    /// concurrency tests.
+    pub w: Vec<f32>,
+    pub final_objective: f64,
+    pub summary: String,
+    /// Per-job I/O attribution for the whole run.
+    pub io: IoStats,
+}
+
+struct JobState {
+    phase: Phase,
+    events: Vec<EpochEvent>,
+    error: Option<String>,
+    result: Option<JobResult>,
+    /// Bytes currently charged against the admission budget on this job's
+    /// behalf (zeroed when the charge transfers to a shared store entry).
+    mem_charged: u64,
+}
+
+/// Shared handle to one job: the scheduler, the job's own run thread and
+/// any number of watching connections all hold this.
+pub struct JobShared {
+    pub id: u64,
+    pub spec: JobSpec,
+    cancel: AtomicBool,
+    state: Mutex<JobState>,
+    cv: Condvar,
+}
+
+/// Point-in-time public view of a job, for `status`/`list` responses.
+#[derive(Debug, Clone)]
+pub struct JobStatus {
+    pub id: u64,
+    pub name: String,
+    pub phase: Phase,
+    pub epochs_done: usize,
+    pub epochs: usize,
+    pub objective: Option<f64>,
+    pub error: Option<String>,
+    /// Per-job I/O: live delta while running, final attribution once done.
+    pub io: Option<IoStats>,
+    pub final_objective: Option<f64>,
+}
+
+/// One shared page store, kept warm for the daemon's lifetime: later jobs
+/// on the same dataset hit the resident cache instead of re-faulting.
+struct StoreEntry {
+    base: PagedDataset,
+    /// Bytes this store holds against the admission budget.
+    mem_bytes: u64,
+}
+
+struct CoreState {
+    next_id: u64,
+    jobs: BTreeMap<u64, Arc<JobShared>>,
+    queue: VecDeque<u64>,
+    running: usize,
+    mem_used: u64,
+    stores: HashMap<String, StoreEntry>,
+    draining: bool,
+    threads: Vec<std::thread::JoinHandle<()>>,
+}
+
+struct CoreInner {
+    mem_budget: u64,
+    default_data_dir: String,
+    state: Mutex<CoreState>,
+    /// Signaled on every job completion (shutdown/wait_idle block on it).
+    sched: Condvar,
+}
+
+/// The daemon core: job table, FIFO admission queue, shared-store
+/// registry. `Clone` is a cheap `Arc` clone — the socket layer hands one
+/// to every connection thread.
+#[derive(Clone)]
+pub struct ServeCore {
+    inner: Arc<CoreInner>,
+}
+
+impl ServeCore {
+    /// A core admitting jobs against `mem_budget_bytes` of data-plane
+    /// memory. `default_data_dir` fills in submit requests that omit one.
+    pub fn new(mem_budget_bytes: u64, default_data_dir: &str) -> ServeCore {
+        ServeCore {
+            inner: Arc::new(CoreInner {
+                mem_budget: mem_budget_bytes,
+                default_data_dir: default_data_dir.to_string(),
+                state: Mutex::new(CoreState {
+                    next_id: 1,
+                    jobs: BTreeMap::new(),
+                    queue: VecDeque::new(),
+                    running: 0,
+                    mem_used: 0,
+                    stores: HashMap::new(),
+                    draining: false,
+                    threads: Vec::new(),
+                }),
+                sched: Condvar::new(),
+            }),
+        }
+    }
+
+    pub fn default_data_dir(&self) -> &str {
+        &self.inner.default_data_dir
+    }
+
+    /// Validate and enqueue a job; returns its id. The job starts
+    /// immediately if it fits the memory budget, else waits in FIFO order.
+    pub fn submit(&self, spec: JobSpec) -> Result<u64> {
+        spec.to_config(0)?; // reject bad specs at submit time, not run time
+        let mut st = lock_recovering(&self.inner.state);
+        if st.draining {
+            return Err(Error::Config("server is shutting down".into()));
+        }
+        let id = st.next_id;
+        st.next_id += 1;
+        let job = Arc::new(JobShared {
+            id,
+            spec,
+            cancel: AtomicBool::new(false),
+            state: Mutex::new(JobState {
+                phase: Phase::Queued,
+                events: Vec::new(),
+                error: None,
+                result: None,
+                mem_charged: 0,
+            }),
+            cv: Condvar::new(),
+        });
+        st.jobs.insert(id, job);
+        st.queue.push_back(id);
+        self.pump(&mut st);
+        Ok(id)
+    }
+
+    /// Admit queued jobs in strict FIFO order while they fit the budget.
+    /// The head job never gets overtaken (no starvation). Warm stores
+    /// keep their charge for the daemon's lifetime — cache warmth is the
+    /// product — so a head job that cannot fit beside them is admitted
+    /// alone once the plane is idle (`running == 0`) rather than
+    /// deadlocking; each store's own byte budget still bounds its pool.
+    fn pump(&self, st: &mut CoreState) {
+        if st.draining {
+            return;
+        }
+        while let Some(&id) = st.queue.front() {
+            let job = st.jobs.get(&id).expect("queued job must exist").clone();
+            let need = {
+                let spec = &job.spec;
+                if spec.paged && st.stores.contains_key(&spec.store_key()) {
+                    0 // attaching to an already-charged warm store
+                } else {
+                    spec.mem_need_bytes()
+                }
+            };
+            if st.running > 0 && st.mem_used.saturating_add(need) > self.inner.mem_budget {
+                break;
+            }
+            st.queue.pop_front();
+            st.mem_used += need;
+            st.running += 1;
+            {
+                let mut js = lock_recovering(&job.state);
+                js.phase = Phase::Running;
+                js.mem_charged = need;
+            }
+            job.cv.notify_all();
+            let core = self.clone();
+            let j = job.clone();
+            st.threads.push(std::thread::spawn(move || core.run_job(j)));
+        }
+    }
+
+    /// Resolve the job's dataset. Paged jobs go through the shared-store
+    /// registry: same file + same pool geometry ⇒ same [`PageStore`],
+    /// attached via a per-job stats view.
+    ///
+    /// [`PageStore`]: samplex::storage::pagestore::PageStore
+    fn open_dataset(&self, job: &JobShared, cfg: &ExperimentConfig) -> Result<Dataset> {
+        let spec = &job.spec;
+        if !spec.paged {
+            return match spec.dataset_file() {
+                Some(p) if p.is_file() => {
+                    if p.extension().and_then(|e| e.to_str()) == Some("sxc") {
+                        Ok(Dataset::Csr(CsrDataset::load(&p)?))
+                    } else {
+                        Ok(Dataset::Dense(DenseDataset::load(&p)?))
+                    }
+                }
+                _ => registry::resolve(&spec.dataset, &spec.data_dir, cfg.seed),
+            };
+        }
+        let key = spec.store_key();
+        {
+            let st = lock_recovering(&self.inner.state);
+            if let Some(entry) = st.stores.get(&key) {
+                return Ok(Dataset::Paged(entry.base.job_view()));
+            }
+        }
+        // open outside the core lock (touches the filesystem, may generate)
+        let opts = cfg.storage.store_options()?;
+        let budget = cfg.storage.memory_budget_bytes();
+        let page = cfg.storage.page_bytes();
+        let base = match spec.dataset_file() {
+            Some(p) if p.is_file() => PagedDataset::open_with(&p, budget, page, opts)?,
+            _ => match registry::resolve_paged_with(
+                &spec.dataset,
+                &spec.data_dir,
+                cfg.seed,
+                budget,
+                page,
+                opts,
+            )? {
+                Dataset::Paged(p) => p,
+                _ => unreachable!("resolve_paged_with returns a paged dataset"),
+            },
+        };
+        let mut st = lock_recovering(&self.inner.state);
+        if let Some(entry) = st.stores.get(&key) {
+            // lost an open race: use the winner's store, refund our charge
+            let refund = {
+                let mut js = lock_recovering(&job.state);
+                std::mem::take(&mut js.mem_charged)
+            };
+            st.mem_used -= refund;
+            return Ok(Dataset::Paged(entry.base.job_view()));
+        }
+        // the admission charge now belongs to the (long-lived) store
+        let charged = {
+            let mut js = lock_recovering(&job.state);
+            std::mem::take(&mut js.mem_charged)
+        };
+        st.stores.insert(key, StoreEntry { base: base.clone(), mem_bytes: charged });
+        Ok(Dataset::Paged(base.job_view()))
+    }
+
+    /// The job thread body: open the dataset, run the experiment with
+    /// epoch hooks + cancellation wired, record the outcome, release the
+    /// admission charge and pump the queue.
+    fn run_job(&self, job: Arc<JobShared>) {
+        let outcome = (|| -> Result<train::TrainReport> {
+            let cfg = job.spec.to_config(job.id)?;
+            let ds = self.open_dataset(&job, &cfg)?;
+            let mut on_epoch = |p: &EpochProgress| {
+                {
+                    let mut js = lock_recovering(&job.state);
+                    js.events.push(EpochEvent {
+                        epoch: p.epochs_done,
+                        epochs: p.epochs,
+                        objective: p.objective,
+                        train_time_s: p.train_time_s,
+                        wall_s: p.wall_s,
+                        io: p.io,
+                    });
+                }
+                job.cv.notify_all();
+            };
+            let hooks = RunHooks { on_epoch: Some(&mut on_epoch), cancel: Some(&job.cancel) };
+            train::run_experiment_hooked(&cfg, &ds, hooks)
+        })();
+        let released = {
+            let mut js = lock_recovering(&job.state);
+            match outcome {
+                Ok(r) => {
+                    let summary = r.summary();
+                    js.result = Some(JobResult {
+                        w: r.w,
+                        final_objective: r.final_objective,
+                        summary,
+                        io: r.time.io,
+                    });
+                    js.phase = Phase::Done;
+                }
+                Err(e @ Error::Cancelled { .. }) => {
+                    js.error = Some(e.to_string());
+                    js.phase = Phase::Cancelled;
+                }
+                Err(e) => {
+                    js.error = Some(e.to_string());
+                    js.phase = Phase::Failed;
+                }
+            }
+            std::mem::take(&mut js.mem_charged)
+        };
+        job.cv.notify_all();
+        let mut st = lock_recovering(&self.inner.state);
+        st.mem_used -= released;
+        st.running -= 1;
+        self.pump(&mut st);
+        drop(st);
+        self.inner.sched.notify_all();
+    }
+
+    fn job(&self, id: u64) -> Option<Arc<JobShared>> {
+        lock_recovering(&self.inner.state).jobs.get(&id).cloned()
+    }
+
+    /// Snapshot one job's public state.
+    pub fn status(&self, id: u64) -> Option<JobStatus> {
+        self.job(id).map(|j| snapshot(&j))
+    }
+
+    /// Snapshot every job, in submission (id) order.
+    pub fn list(&self) -> Vec<JobStatus> {
+        let jobs: Vec<Arc<JobShared>> =
+            lock_recovering(&self.inner.state).jobs.values().cloned().collect();
+        jobs.iter().map(|j| snapshot(j)).collect()
+    }
+
+    /// Request cooperative cancellation. A queued job cancels immediately;
+    /// a running one stops at its next epoch boundary, leaving the shared
+    /// cache, readahead threads and worker pool fully reusable. Returns
+    /// `false` for unknown ids.
+    pub fn cancel(&self, id: u64) -> bool {
+        let mut st = lock_recovering(&self.inner.state);
+        let Some(job) = st.jobs.get(&id).cloned() else {
+            return false;
+        };
+        job.cancel.store(true, Ordering::Release);
+        if let Some(pos) = st.queue.iter().position(|&q| q == id) {
+            st.queue.remove(pos);
+            {
+                let mut js = lock_recovering(&job.state);
+                js.phase = Phase::Cancelled;
+                js.error = Some("cancelled while queued".into());
+            }
+            job.cv.notify_all();
+            self.pump(&mut st);
+        }
+        true
+    }
+
+    /// Block until the job reaches a terminal phase; `None` for unknown
+    /// ids. Test and CLI convenience.
+    pub fn wait(&self, id: u64) -> Option<JobStatus> {
+        let job = self.job(id)?;
+        let mut js = lock_recovering(&job.state);
+        while !js.phase.is_terminal() {
+            js = job.cv.wait(js).expect("job state poisoned");
+        }
+        drop(js);
+        Some(snapshot(&job))
+    }
+
+    /// Block until event index `from` exists or the job is terminal.
+    /// Returns the event (if one materialised) and the phase at that
+    /// moment — the streaming loop of a watching connection.
+    pub fn next_event(&self, id: u64, from: usize) -> Option<(Option<EpochEvent>, Phase)> {
+        let job = self.job(id)?;
+        let mut js = lock_recovering(&job.state);
+        loop {
+            if js.events.len() > from {
+                return Some((Some(js.events[from].clone()), js.phase));
+            }
+            if js.phase.is_terminal() {
+                return Some((None, js.phase));
+            }
+            js = job.cv.wait(js).expect("job state poisoned");
+        }
+    }
+
+    /// A finished job's result (final iterate + per-job I/O), if any.
+    pub fn result_of(&self, id: u64) -> Option<JobResult> {
+        let job = self.job(id)?;
+        let js = lock_recovering(&job.state);
+        js.result.clone()
+    }
+
+    /// Number of warm shared stores currently held open.
+    pub fn stores_open(&self) -> usize {
+        lock_recovering(&self.inner.state).stores.len()
+    }
+
+    /// Bytes currently charged against the admission budget.
+    pub fn mem_used(&self) -> u64 {
+        lock_recovering(&self.inner.state).mem_used
+    }
+
+    /// Shared I/O totals of the warm store a spec would attach to, if one
+    /// is open — the cross-job counters next to each job's own view.
+    pub fn store_totals(&self, spec: &JobSpec) -> Option<IoStats> {
+        let st = lock_recovering(&self.inner.state);
+        st.stores.get(&spec.store_key()).map(|e| e.base.shared_io_stats())
+    }
+
+    /// Drain: reject new submits, cancel everything queued or running,
+    /// and join every job thread. Warm stores are dropped with the core.
+    pub fn shutdown(&self) {
+        let mut st = lock_recovering(&self.inner.state);
+        st.draining = true;
+        while let Some(id) = st.queue.pop_front() {
+            if let Some(job) = st.jobs.get(&id).cloned() {
+                let mut js = lock_recovering(&job.state);
+                js.phase = Phase::Cancelled;
+                js.error = Some("server shut down".into());
+                drop(js);
+                job.cv.notify_all();
+            }
+        }
+        for job in st.jobs.values() {
+            job.cancel.store(true, Ordering::Release);
+        }
+        loop {
+            let threads = std::mem::take(&mut st.threads);
+            if threads.is_empty() {
+                break;
+            }
+            drop(st);
+            for t in threads {
+                let _ = t.join();
+            }
+            st = lock_recovering(&self.inner.state);
+        }
+    }
+}
+
+/// Mutex lock that shrugs off poisoning: a panicked job thread must not
+/// take the daemon (or its other tenants) down with it.
+fn lock_recovering<T>(m: &Mutex<T>) -> std::sync::MutexGuard<'_, T> {
+    match m.lock() {
+        Ok(g) => g,
+        Err(poisoned) => poisoned.into_inner(),
+    }
+}
+
+fn snapshot(job: &JobShared) -> JobStatus {
+    let js = lock_recovering(&job.state);
+    let last = js.events.last();
+    JobStatus {
+        id: job.id,
+        name: format!(
+            "{}-{}-{}",
+            job.spec.dataset,
+            job.spec.solver.label(),
+            job.spec.sampling.label()
+        ),
+        phase: js.phase,
+        epochs_done: last.map_or(0, |e| e.epoch),
+        epochs: job.spec.epochs,
+        objective: last.map(|e| e.objective),
+        error: js.error.clone(),
+        io: js.result.as_ref().map(|r| r.io).or_else(|| last.map(|e| e.io)),
+        final_objective: js.result.as_ref().map(|r| r.final_objective),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Wire protocol: newline-delimited JSON requests/responses.
+// ---------------------------------------------------------------------------
+
+/// What the transport should do with one request line.
+pub enum Response {
+    /// Write this one line.
+    One(Value),
+    /// Write `first`, then stream the job's epoch events until terminal.
+    Stream { first: Value, job: u64 },
+    /// Write this line, then stop the listener and drain.
+    Shutdown(Value),
+}
+
+fn err_json(msg: &str) -> Value {
+    Value::obj(vec![("ok", Value::Bool(false)), ("error", Value::str(msg))])
+}
+
+/// Per-job I/O counters as a JSON object.
+pub fn io_json(io: &IoStats) -> Value {
+    Value::obj(vec![
+        ("bytes_read", Value::int(io.bytes_read)),
+        ("read_calls", Value::int(io.read_calls)),
+        ("page_faults", Value::int(io.page_faults)),
+        ("demand_faults", Value::int(io.demand_faults)),
+        ("page_hits", Value::int(io.page_hits)),
+        ("readahead_hits", Value::int(io.readahead_hits)),
+        ("retries", Value::int(io.retries)),
+        ("degraded", Value::int(io.degraded)),
+        ("bytes_requested", Value::int(io.bytes_requested)),
+        ("read_s", Value::num(io.read_s)),
+        ("stall_s", Value::num(io.stall_s)),
+    ])
+}
+
+/// `status`/`list` entry for one job.
+pub fn status_json(s: &JobStatus) -> Value {
+    let mut pairs = vec![
+        ("id", Value::int(s.id)),
+        ("name", Value::str(s.name.clone())),
+        ("state", Value::str(s.phase.label())),
+        ("epochs_done", Value::int(s.epochs_done as u64)),
+        ("epochs", Value::int(s.epochs as u64)),
+    ];
+    if let Some(o) = s.objective {
+        pairs.push(("objective", Value::num(o)));
+    }
+    if let Some(o) = s.final_objective {
+        pairs.push(("final_objective", Value::num(o)));
+    }
+    if let Some(io) = &s.io {
+        pairs.push(("io", io_json(io)));
+    }
+    if let Some(e) = &s.error {
+        pairs.push(("error", Value::str(e.clone())));
+    }
+    Value::obj(pairs)
+}
+
+/// One epoch event as streamed to a watching client.
+pub fn event_json(id: u64, e: &EpochEvent) -> Value {
+    Value::obj(vec![
+        ("event", Value::str("epoch")),
+        ("id", Value::int(id)),
+        ("epoch", Value::int(e.epoch as u64)),
+        ("epochs", Value::int(e.epochs as u64)),
+        ("objective", Value::num(e.objective)),
+        ("train_time_s", Value::num(e.train_time_s)),
+        ("wall_s", Value::num(e.wall_s)),
+        ("io", io_json(&e.io)),
+    ])
+}
+
+/// Terminal line closing a watch stream.
+pub fn end_json(s: &JobStatus) -> Value {
+    let mut pairs = vec![
+        ("event", Value::str("end")),
+        ("id", Value::int(s.id)),
+        ("state", Value::str(s.phase.label())),
+    ];
+    if let Some(o) = s.final_objective {
+        pairs.push(("final_objective", Value::num(o)));
+    }
+    if let Some(io) = &s.io {
+        pairs.push(("io", io_json(io)));
+    }
+    if let Some(e) = &s.error {
+        pairs.push(("error", Value::str(e.clone())));
+    }
+    Value::obj(pairs)
+}
+
+/// Handle one request line against the core. Transport-agnostic: the Unix
+/// socket server and the protocol tests call exactly this.
+pub fn handle_request(core: &ServeCore, line: &str) -> Response {
+    let v = match json::parse(line) {
+        Ok(v) => v,
+        Err(e) => return Response::One(err_json(&format!("bad request: {e}"))),
+    };
+    let Some(op) = v.get("op").and_then(|o| o.as_str()) else {
+        return Response::One(err_json("request needs an 'op' field"));
+    };
+    match op {
+        "ping" => Response::One(Value::obj(vec![("ok", Value::Bool(true))])),
+        "submit" => {
+            let spec = match JobSpec::from_json(&v, core.default_data_dir()) {
+                Ok(s) => s,
+                Err(e) => return Response::One(err_json(&e.to_string())),
+            };
+            let watch = v.get("watch").and_then(|w| w.as_bool()).unwrap_or(false);
+            match core.submit(spec) {
+                Ok(id) => {
+                    let state = core
+                        .status(id)
+                        .map_or("queued", |s| s.phase.label());
+                    let first = Value::obj(vec![
+                        ("ok", Value::Bool(true)),
+                        ("id", Value::int(id)),
+                        ("state", Value::str(state)),
+                    ]);
+                    if watch {
+                        Response::Stream { first, job: id }
+                    } else {
+                        Response::One(first)
+                    }
+                }
+                Err(e) => Response::One(err_json(&e.to_string())),
+            }
+        }
+        "status" | "watch" | "cancel" => {
+            let Some(id) = v.get("id").and_then(|i| i.as_u64()) else {
+                return Response::One(err_json(&format!("'{op}' needs a numeric 'id'")));
+            };
+            match op {
+                "status" => match core.status(id) {
+                    Some(s) => {
+                        let mut out = status_json(&s);
+                        if let Value::Obj(pairs) = &mut out {
+                            pairs.insert(0, ("ok".into(), Value::Bool(true)));
+                        }
+                        Response::One(out)
+                    }
+                    None => Response::One(err_json(&format!("no job {id}"))),
+                },
+                "watch" => match core.status(id) {
+                    Some(_) => Response::Stream {
+                        first: Value::obj(vec![
+                            ("ok", Value::Bool(true)),
+                            ("id", Value::int(id)),
+                        ]),
+                        job: id,
+                    },
+                    None => Response::One(err_json(&format!("no job {id}"))),
+                },
+                _ => {
+                    if core.cancel(id) {
+                        Response::One(Value::obj(vec![
+                            ("ok", Value::Bool(true)),
+                            ("id", Value::int(id)),
+                        ]))
+                    } else {
+                        Response::One(err_json(&format!("no job {id}")))
+                    }
+                }
+            }
+        }
+        "list" => {
+            let jobs: Vec<Value> = core.list().iter().map(status_json).collect();
+            Response::One(Value::obj(vec![
+                ("ok", Value::Bool(true)),
+                ("jobs", Value::Arr(jobs)),
+            ]))
+        }
+        "shutdown" => Response::Shutdown(Value::obj(vec![("ok", Value::Bool(true))])),
+        other => Response::One(err_json(&format!("unknown op '{other}'"))),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn job_spec_parses_the_full_field_set() {
+        let line = r#"{"op":"submit","dataset":"susy-mini","solver":"saga","sampling":"cs",
+            "step":"ls","batch":250,"epochs":3,"seed":7,"reg_c":0.001,"paged":true,
+            "memory_budget_mib":16,"page_kib":4,"readahead_pages":32,"storage":"ssd",
+            "pool_threads":2,"prefetch_depth":1,"data_dir":"/tmp/d","watch":true}"#
+            .replace('\n', " ");
+        let v = json::parse(&line).unwrap();
+        let spec = JobSpec::from_json(&v, "data").unwrap();
+        assert_eq!(spec.dataset, "susy-mini");
+        assert_eq!(spec.solver.label(), "saga");
+        assert_eq!(spec.sampling.label(), "cs");
+        assert_eq!(spec.batch, 250);
+        assert_eq!(spec.epochs, 3);
+        assert_eq!(spec.seed, 7);
+        assert_eq!(spec.reg_c, Some(0.001));
+        assert!(spec.paged);
+        assert_eq!(spec.memory_budget_mib, 16);
+        assert_eq!(spec.page_kib, 4);
+        assert_eq!(spec.readahead_pages, 32);
+        assert_eq!(spec.storage, "ssd");
+        assert_eq!(spec.pool_threads, 2);
+        assert_eq!(spec.prefetch_depth, 1);
+        assert_eq!(spec.data_dir, "/tmp/d");
+    }
+
+    #[test]
+    fn job_spec_rejects_unknown_and_mistyped_fields() {
+        let v = json::parse(r#"{"op":"submit","epcohs":5}"#).unwrap();
+        let err = JobSpec::from_json(&v, "data").unwrap_err();
+        assert!(err.to_string().contains("epcohs"), "{err}");
+        let v = json::parse(r#"{"op":"submit","epochs":"five"}"#).unwrap();
+        assert!(JobSpec::from_json(&v, "data").is_err());
+        let v = json::parse(r#"{"op":"submit","paged":"yes"}"#).unwrap();
+        assert!(JobSpec::from_json(&v, "data").is_err());
+        let v = json::parse(r#"{"op":"submit","batch":-3}"#).unwrap();
+        assert!(JobSpec::from_json(&v, "data").is_err());
+    }
+
+    #[test]
+    fn job_spec_defaults_use_the_daemon_data_dir() {
+        let v = json::parse(r#"{"op":"submit"}"#).unwrap();
+        let spec = JobSpec::from_json(&v, "/srv/data").unwrap();
+        assert_eq!(spec.data_dir, "/srv/data");
+        assert_eq!(spec.dataset, "covtype-mini");
+        assert!(!spec.paged);
+    }
+
+    #[test]
+    fn store_key_separates_geometry_and_dataset() {
+        let a = JobSpec { paged: true, ..JobSpec::default() };
+        let mut b = a.clone();
+        assert_eq!(a.store_key(), b.store_key(), "same spec, same store");
+        b.page_kib = 128;
+        assert_ne!(a.store_key(), b.store_key(), "page size is store identity");
+        let mut c = a.clone();
+        c.dataset = "susy-mini".into();
+        assert_ne!(a.store_key(), c.store_key());
+        // a readahead difference does NOT split the store: readahead is a
+        // per-job access pattern, not pool geometry
+        let mut d = a.clone();
+        d.readahead_pages = 64;
+        assert_eq!(a.store_key(), d.store_key());
+    }
+
+    #[test]
+    fn submit_rejects_invalid_specs_up_front() {
+        let core = ServeCore::new(1 << 30, "data");
+        let bad = JobSpec { epochs: 0, ..JobSpec::default() };
+        assert!(core.submit(bad).is_err());
+        let bad = JobSpec { batch: 0, ..JobSpec::default() };
+        assert!(core.submit(bad).is_err());
+        assert!(core.list().is_empty(), "rejected specs never enter the job table");
+    }
+
+    #[test]
+    fn unknown_ids_are_not_found() {
+        let core = ServeCore::new(1 << 30, "data");
+        assert!(core.status(99).is_none());
+        assert!(core.wait(99).is_none());
+        assert!(!core.cancel(99));
+        assert!(core.result_of(99).is_none());
+    }
+
+    #[test]
+    fn protocol_rejects_malformed_lines() {
+        let core = ServeCore::new(1 << 30, "data");
+        for (line, needle) in [
+            ("{not json", "bad request"),
+            (r#"{"id":1}"#, "op"),
+            (r#"{"op":"frobnicate"}"#, "unknown op"),
+            (r#"{"op":"status"}"#, "id"),
+            (r#"{"op":"status","id":42}"#, "no job 42"),
+            (r#"{"op":"cancel","id":7}"#, "no job 7"),
+            (r#"{"op":"submit","epochs":0}"#, "epochs"),
+        ] {
+            match handle_request(&core, line) {
+                Response::One(v) => {
+                    assert_eq!(v.get("ok").unwrap().as_bool(), Some(false), "{line}");
+                    let msg = v.get("error").unwrap().as_str().unwrap();
+                    assert!(msg.contains(needle), "{line}: {msg}");
+                }
+                _ => panic!("{line}: expected a one-line error"),
+            }
+        }
+    }
+
+    #[test]
+    fn ping_and_shutdown_round_trip() {
+        let core = ServeCore::new(1 << 30, "data");
+        match handle_request(&core, r#"{"op":"ping"}"#) {
+            Response::One(v) => assert_eq!(v.to_string(), r#"{"ok":true}"#),
+            _ => panic!("ping is a one-liner"),
+        }
+        match handle_request(&core, r#"{"op":"shutdown"}"#) {
+            Response::Shutdown(v) => assert_eq!(v.get("ok").unwrap().as_bool(), Some(true)),
+            _ => panic!("shutdown must be routed to the transport"),
+        }
+    }
+
+    #[test]
+    fn status_json_carries_io_and_error_fields() {
+        let s = JobStatus {
+            id: 3,
+            name: "d-mbsgd-ss".into(),
+            phase: Phase::Failed,
+            epochs_done: 2,
+            epochs: 5,
+            objective: Some(0.5),
+            error: Some("boom".into()),
+            io: Some(IoStats { bytes_read: 1024, demand_faults: 2, ..IoStats::default() }),
+            final_objective: None,
+        };
+        let v = status_json(&s);
+        assert_eq!(v.get("state").unwrap().as_str(), Some("failed"));
+        assert_eq!(v.get("io").unwrap().get("bytes_read").unwrap().as_u64(), Some(1024));
+        assert_eq!(v.get("io").unwrap().get("demand_faults").unwrap().as_u64(), Some(2));
+        assert_eq!(v.get("error").unwrap().as_str(), Some("boom"));
+        // round-trips through the codec
+        assert_eq!(json::parse(&v.to_string()).unwrap(), v);
+    }
+
+    #[test]
+    fn mem_need_prefers_real_file_sizes() {
+        let dir = std::env::temp_dir().join(format!("serve_need_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let file = dir.join("tiny.sxb");
+        std::fs::write(&file, vec![0u8; 4096]).unwrap();
+        let spec = JobSpec {
+            dataset: file.to_string_lossy().into_owned(),
+            paged: true,
+            memory_budget_mib: 1,
+            ..JobSpec::default()
+        };
+        // paged with a budget: min(budget, file) — the pool can never
+        // outgrow the file
+        assert_eq!(spec.mem_need_bytes(), 4096);
+        let unbounded = JobSpec { memory_budget_mib: 0, ..spec.clone() };
+        assert_eq!(unbounded.mem_need_bytes(), 4096, "budget 0 = whole file");
+        let incore = JobSpec { paged: false, ..spec };
+        assert_eq!(incore.mem_need_bytes(), 4096);
+        std::fs::remove_file(&file).ok();
+        std::fs::remove_dir(&dir).ok();
+    }
+
+    #[test]
+    fn phase_labels_are_stable_protocol_tokens() {
+        for (p, s) in [
+            (Phase::Queued, "queued"),
+            (Phase::Running, "running"),
+            (Phase::Done, "done"),
+            (Phase::Failed, "failed"),
+            (Phase::Cancelled, "cancelled"),
+        ] {
+            assert_eq!(p.label(), s);
+            assert_eq!(p.is_terminal(), matches!(p, Phase::Done | Phase::Failed | Phase::Cancelled));
+        }
+    }
+}

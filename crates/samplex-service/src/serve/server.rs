@@ -1,0 +1,112 @@
+//! Unix-socket transport for `samplex serve`.
+//!
+//! Newline-delimited JSON: one request object per line in, one response
+//! object per line out. `submit` with `"watch":true` (or a `watch` op)
+//! keeps the connection open and streams one `{"event":"epoch",...}` line
+//! per completed epoch, closed by a final `{"event":"end",...}` line.
+//!
+//! The transport is deliberately thin: every request is handled by
+//! [`handle_request`] on the socket-free [`ServeCore`], so the scheduling
+//! and sharing semantics are tested without this module. Connection
+//! threads hold only a [`ServeCore`] clone (an `Arc`); a client that
+//! disconnects mid-stream kills nothing but its own thread.
+
+use std::io::{BufRead, BufReader, Write};
+use std::os::unix::net::{UnixListener, UnixStream};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+use samplex::error::Result;
+
+use super::{end_json, event_json, handle_request, Response, ServeCore};
+
+/// Bind `socket` and serve requests until a `shutdown` op arrives.
+/// A stale socket file from a previous run is replaced. On return the
+/// core is drained (all jobs joined) and the socket file removed.
+pub fn serve(socket: &Path, core: ServeCore) -> Result<()> {
+    let _ = std::fs::remove_file(socket);
+    let listener = UnixListener::bind(socket)?;
+    eprintln!(
+        "samplex serve: listening on {} (data dir '{}')",
+        socket.display(),
+        core.default_data_dir()
+    );
+    let stop = Arc::new(AtomicBool::new(false));
+    let mut conns: Vec<std::thread::JoinHandle<()>> = Vec::new();
+    for stream in listener.incoming() {
+        if stop.load(Ordering::Acquire) {
+            break;
+        }
+        let Ok(stream) = stream else { continue };
+        let core = core.clone();
+        let stop = stop.clone();
+        let sock = socket.to_path_buf();
+        conns.push(std::thread::spawn(move || {
+            // a broken pipe / parse failure on one connection must not
+            // affect the daemon or its other tenants
+            let _ = handle_conn(&core, stream, &stop, &sock);
+        }));
+    }
+    core.shutdown();
+    for c in conns {
+        let _ = c.join();
+    }
+    let _ = std::fs::remove_file(socket);
+    eprintln!("samplex serve: drained, bye");
+    Ok(())
+}
+
+/// Serve one connection: read request lines, write response lines.
+fn handle_conn(
+    core: &ServeCore,
+    stream: UnixStream,
+    stop: &AtomicBool,
+    socket: &PathBuf,
+) -> std::io::Result<()> {
+    let reader = BufReader::new(stream.try_clone()?);
+    let mut out = stream;
+    for line in reader.lines() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        match handle_request(core, &line) {
+            Response::One(v) => writeln!(out, "{v}")?,
+            Response::Stream { first, job } => {
+                writeln!(out, "{first}")?;
+                stream_events(core, job, &mut out)?;
+            }
+            Response::Shutdown(v) => {
+                writeln!(out, "{v}")?;
+                stop.store(true, Ordering::Release);
+                // the accept loop is blocked in `incoming()`; a throwaway
+                // connection wakes it so it can observe the stop flag
+                let _ = UnixStream::connect(socket);
+                return Ok(());
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Stream a job's epoch events until it reaches a terminal phase, then
+/// write the closing `end` line. Blocks on the job's condvar — no polling.
+fn stream_events(core: &ServeCore, job: u64, out: &mut UnixStream) -> std::io::Result<()> {
+    let mut from = 0usize;
+    loop {
+        match core.next_event(job, from) {
+            None => return Ok(()), // job vanished (cannot happen: jobs are never dropped)
+            Some((Some(e), _)) => {
+                writeln!(out, "{}", event_json(job, &e))?;
+                from += 1;
+            }
+            Some((None, _)) => {
+                if let Some(s) = core.status(job) {
+                    writeln!(out, "{}", end_json(&s))?;
+                }
+                return Ok(());
+            }
+        }
+    }
+}

@@ -1,0 +1,381 @@
+//! Multi-tenant determinism and attribution: `samplex serve` jobs that
+//! share one worker pool and one page cache must be **bit-identical** to
+//! solo `samplex train` runs, a warm tenant must hit the cache a cold one
+//! faulted, admission control must queue (not thrash), and a mid-epoch
+//! cancellation must leave the shared data plane fully reusable.
+//!
+//! The CI serve-smoke job additionally exercises the same properties
+//! through the real binary and Unix socket; these tests pin the core
+//! semantics in-process where they are deterministic and debuggable.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use samplex::data::synth::{self, FeatureDist, SynthSpec};
+use samplex::data::Dataset;
+use samplex::sampling::SamplingKind;
+use samplex::solvers::SolverKind;
+use samplex::train::run_experiment;
+use samplex_service::serve::{JobSpec, Phase, ServeCore};
+
+static UNIQ: AtomicUsize = AtomicUsize::new(0);
+
+/// Write a fresh synthetic dense dataset to a unique temp `.sxb` file.
+fn dataset_file(rows: usize, cols: usize, seed: u64) -> (std::path::PathBuf, Dataset) {
+    let ds: Dataset = synth::generate(
+        &SynthSpec {
+            name: "serve",
+            rows,
+            cols,
+            dist: FeatureDist::Gaussian,
+            flip_prob: 0.05,
+            margin_noise: 0.3,
+            pos_fraction: 0.5,
+        },
+        seed,
+    )
+    .unwrap()
+    .into();
+    let uniq = UNIQ.fetch_add(1, Ordering::Relaxed);
+    let path = std::env::temp_dir()
+        .join(format!("serve_conc_{}_{uniq}.sxb", std::process::id()));
+    ds.save(&path).unwrap();
+    (path, ds)
+}
+
+fn spec_for(path: &std::path::Path, solver: SolverKind, paged: bool) -> JobSpec {
+    JobSpec {
+        dataset: path.to_string_lossy().into_owned(),
+        solver,
+        sampling: SamplingKind::Ss,
+        batch: 100,
+        epochs: 2,
+        seed: 11,
+        reg_c: Some(1e-3),
+        paged,
+        memory_budget_mib: 0, // whole file resident
+        page_kib: 2,
+        storage: "ram".into(),
+        ..JobSpec::default()
+    }
+}
+
+/// Tentpole acceptance: two tenants running **concurrently** on the shared
+/// worker pool — one in-core, one through the shared page store — produce
+/// iterates and objectives bit-identical to solo runs, for all five
+/// solvers at once (ten concurrent jobs total).
+#[test]
+fn concurrent_tenants_bit_identical_to_solo_for_all_five_solvers() {
+    let (path, ds) = dataset_file(2400, 6, 3);
+    let core = ServeCore::new(1 << 30, "data");
+    // solo baselines first (serial, untouched by the daemon)
+    let baselines: Vec<_> = SolverKind::all()
+        .into_iter()
+        .map(|solver| {
+            let cfg = spec_for(&path, solver, false).to_config(0).unwrap();
+            (solver, run_experiment(&cfg, &ds).unwrap())
+        })
+        .collect();
+    // now all ten jobs at once: five solvers × {in-core, paged}
+    let ids: Vec<(SolverKind, bool, u64)> = SolverKind::all()
+        .into_iter()
+        .flat_map(|solver| [false, true].map(|paged| (solver, paged)))
+        .map(|(solver, paged)| {
+            let id = core.submit(spec_for(&path, solver, paged)).unwrap();
+            (solver, paged, id)
+        })
+        .collect();
+    for (solver, paged, id) in ids {
+        let status = core.wait(id).unwrap();
+        assert_eq!(
+            status.phase,
+            Phase::Done,
+            "{}/paged={paged}: {:?}",
+            solver.label(),
+            status.error
+        );
+        let result = core.result_of(id).unwrap();
+        let (_, base) = baselines.iter().find(|(s, _)| *s == solver).unwrap();
+        assert_eq!(
+            result.w,
+            base.w,
+            "{}/paged={paged}: concurrent tenant iterates must be bit-identical to solo",
+            solver.label()
+        );
+        assert_eq!(
+            result.final_objective.to_bits(),
+            base.final_objective.to_bits(),
+            "{}/paged={paged}: objective must be bit-identical",
+            solver.label()
+        );
+        if paged {
+            assert!(result.io.bytes_requested > 0, "paged tenants really use the store");
+        }
+    }
+    // the five paged jobs shared one store (same file, same geometry)
+    assert_eq!(core.stores_open(), 1, "one warm store for one dataset");
+    core.shutdown();
+    std::fs::remove_file(&path).ok();
+}
+
+/// Acceptance criterion: a warm second tenant is served from the resident
+/// cache — **zero** demand faults where the cold first tenant faulted
+/// every page — and the shared store totals are exactly the sum of the
+/// per-job views (per-job attribution loses nothing).
+#[test]
+fn warm_tenant_hits_where_the_cold_tenant_faulted() {
+    let (path, _ds) = dataset_file(2400, 6, 5);
+    let core = ServeCore::new(1 << 30, "data");
+    let spec = spec_for(&path, SolverKind::Mbsgd, true);
+
+    let cold_id = core.submit(spec.clone()).unwrap();
+    assert_eq!(core.wait(cold_id).unwrap().phase, Phase::Done);
+    let cold = core.result_of(cold_id).unwrap().io;
+    assert!(cold.demand_faults > 0, "cold tenant must fault its pages in: {cold:?}");
+    assert_eq!(cold.page_faults, cold.demand_faults, "no readahead configured");
+
+    let warm_id = core.submit(spec.clone()).unwrap();
+    assert_eq!(core.wait(warm_id).unwrap().phase, Phase::Done);
+    let warm = core.result_of(warm_id).unwrap().io;
+    assert_eq!(
+        warm.demand_faults, 0,
+        "warm tenant must be served out of the resident cache: {warm:?}"
+    );
+    assert!(warm.demand_faults < cold.demand_faults, "strictly fewer faults when warm");
+    assert!(warm.page_hits > 0, "hits, not faults: {warm:?}");
+    assert_eq!(warm.bytes_read, 0, "nothing read from disk on the warm path");
+    assert_eq!(
+        warm.bytes_requested, cold.bytes_requested,
+        "same schedule ⇒ same delivered bytes, whatever the cache state"
+    );
+
+    // attribution: the shared store's totals are exactly the per-job sums
+    let totals = core.store_totals(&spec).expect("store must be warm");
+    assert_eq!(totals.bytes_requested, cold.bytes_requested + warm.bytes_requested);
+    assert_eq!(totals.page_faults, cold.page_faults + warm.page_faults);
+    assert_eq!(totals.page_hits, cold.page_hits + warm.page_hits);
+    assert_eq!(totals.bytes_read, cold.bytes_read + warm.bytes_read);
+    core.shutdown();
+    std::fs::remove_file(&path).ok();
+}
+
+/// Admission control: a tenant that does not fit the memory budget waits
+/// in FIFO order — and a mid-epoch cancellation of the running tenant
+/// releases its charge, admits the waiter, and leaves the pool and the
+/// cancelled tenant's warm cache fully reusable for a third job.
+#[test]
+fn admission_queues_then_cancellation_frees_budget_and_cache_stays_usable() {
+    let (path_a, _a) = dataset_file(2400, 6, 7);
+    let (path_b, ds_b) = dataset_file(2400, 6, 9);
+    let file_len = std::fs::metadata(&path_a).unwrap().len();
+    // budget fits one store (either file: same dims ⇒ same size), not two
+    let core = ServeCore::new(file_len + file_len / 2, "data");
+
+    // job A runs long enough that its first epoch event observably
+    // precedes completion (200 epochs remain after the first event)
+    let slow_a = JobSpec { epochs: 201, ..spec_for(&path_a, SolverKind::Mbsgd, true) };
+    let id_a = core.submit(slow_a).unwrap();
+    let (first_event, phase_a) = core.next_event(id_a, 0).unwrap();
+    assert!(first_event.is_some(), "job A must stream an epoch event (phase {phase_a:?})");
+
+    let id_b = core.submit(spec_for(&path_b, SolverKind::Mbsgd, true)).unwrap();
+    assert_eq!(
+        core.status(id_b).unwrap().phase,
+        Phase::Queued,
+        "B exceeds the remaining budget and must queue behind A"
+    );
+
+    // cancel A mid-epoch: cooperative, at the next epoch boundary
+    assert!(core.cancel(id_a));
+    let status_a = core.wait(id_a).unwrap();
+    assert_eq!(status_a.phase, Phase::Cancelled);
+    assert!(status_a.error.unwrap().contains("cancelled"));
+    assert!(status_a.epochs_done >= 1, "A made progress before cancelling");
+    assert!(status_a.epochs_done < 201, "A must not have finished all epochs");
+
+    // B was admitted by the release and completes normally…
+    let status_b = core.wait(id_b).unwrap();
+    assert_eq!(status_b.phase, Phase::Done, "{:?}", status_b.error);
+    let base_cfg = spec_for(&path_b, SolverKind::Mbsgd, false).to_config(0).unwrap();
+    let base = run_experiment(&base_cfg, &ds_b).unwrap();
+    assert_eq!(core.result_of(id_b).unwrap().w, base.w, "queued-then-run is still bit-identical");
+
+    // …and A's warm store is intact: a third tenant on A's dataset
+    // attaches to the cached pages (charge 0: the store is already open)
+    let used_before = core.mem_used();
+    let id_c = core.submit(spec_for(&path_a, SolverKind::Mbsgd, true)).unwrap();
+    let status_c = core.wait(id_c).unwrap();
+    assert_eq!(status_c.phase, Phase::Done, "{:?}", status_c.error);
+    let warm_c = core.result_of(id_c).unwrap().io;
+    assert!(
+        warm_c.page_hits > 0,
+        "the cancelled tenant's cache serves the next one: {warm_c:?}"
+    );
+    assert_eq!(core.mem_used(), used_before, "attaching to a warm store charges nothing");
+    assert_eq!(core.stores_open(), 2);
+    core.shutdown();
+    std::fs::remove_file(&path_a).ok();
+    std::fs::remove_file(&path_b).ok();
+}
+
+/// In-core tenants charge the admission budget only while they run; the
+/// daemon's accounting returns to the warm-store baseline afterwards.
+#[test]
+fn in_core_admission_charges_are_released_on_completion() {
+    let (path, _ds) = dataset_file(2400, 6, 13);
+    let core = ServeCore::new(1 << 30, "data");
+    assert_eq!(core.mem_used(), 0);
+    let id = core.submit(spec_for(&path, SolverKind::Mbsgd, false)).unwrap();
+    assert_eq!(core.wait(id).unwrap().phase, Phase::Done);
+    assert_eq!(core.mem_used(), 0, "in-core charge released at completion");
+    assert_eq!(core.stores_open(), 0, "no page store for in-core tenants");
+    core.shutdown();
+    std::fs::remove_file(&path).ok();
+}
+
+/// Queued jobs can be cancelled before they ever run, and a draining
+/// daemon rejects new submissions.
+#[test]
+fn queued_cancellation_and_draining_rejection() {
+    let (path, _ds) = dataset_file(2400, 6, 17);
+    let file_len = std::fs::metadata(&path).unwrap().len();
+    let core = ServeCore::new(file_len + file_len / 2, "data");
+    let slow = JobSpec { epochs: 201, ..spec_for(&path, SolverKind::Mbsgd, true) };
+    let id_a = core.submit(slow).unwrap();
+    assert!(core.next_event(id_a, 0).unwrap().0.is_some());
+    // B needs a second store (different geometry ⇒ different store key)
+    let other_geom = JobSpec { page_kib: 4, ..spec_for(&path, SolverKind::Mbsgd, true) };
+    let id_b = core.submit(other_geom).unwrap();
+    assert_eq!(core.status(id_b).unwrap().phase, Phase::Queued);
+    assert!(core.cancel(id_b), "cancelling a queued job succeeds");
+    let status_b = core.wait(id_b).unwrap();
+    assert_eq!(status_b.phase, Phase::Cancelled);
+    assert!(status_b.error.unwrap().contains("queued"));
+    assert!(core.cancel(id_a));
+    assert_eq!(core.wait(id_a).unwrap().phase, Phase::Cancelled);
+    core.shutdown();
+    let err = core.submit(spec_for(&path, SolverKind::Mbsgd, false)).unwrap_err();
+    assert!(err.to_string().contains("shutting down"));
+    std::fs::remove_file(&path).ok();
+}
+
+/// A job that fails (missing dataset file) reports `failed` with the real
+/// error, releases its charge, and does not poison the daemon.
+#[test]
+fn failed_jobs_surface_their_error_and_release_memory() {
+    let core = ServeCore::new(1 << 30, "data");
+    let spec = JobSpec {
+        dataset: "/nonexistent/serve_missing.sxb".into(),
+        ..spec_for(std::path::Path::new("/nonexistent/serve_missing.sxb"), SolverKind::Mbsgd, false)
+    };
+    let id = core.submit(spec).unwrap();
+    let status = core.wait(id).unwrap();
+    assert_eq!(status.phase, Phase::Failed);
+    assert!(status.error.is_some());
+    assert_eq!(core.mem_used(), 0, "failed jobs release their admission charge");
+    // the daemon still takes work afterwards
+    let (path, _ds) = dataset_file(1200, 4, 19);
+    let ok_id = core.submit(spec_for(&path, SolverKind::Mbsgd, false)).unwrap();
+    assert_eq!(core.wait(ok_id).unwrap().phase, Phase::Done);
+    core.shutdown();
+    std::fs::remove_file(&path).ok();
+}
+
+/// End-to-end over the real Unix socket: submit with `watch`, stream one
+/// `epoch` line per epoch plus a terminal `end` line, drive `status`,
+/// `list`, `cancel` of an unknown id, and a clean `shutdown`.
+#[cfg(unix)]
+#[test]
+fn ndjson_protocol_over_a_real_unix_socket() {
+    use std::io::{BufRead, BufReader, Write};
+    use std::os::unix::net::UnixStream;
+
+    use samplex_service::json;
+
+    let (path, _ds) = dataset_file(1200, 4, 23);
+    let uniq = UNIQ.fetch_add(1, Ordering::Relaxed);
+    let sock = std::env::temp_dir()
+        .join(format!("serve_conc_{}_{uniq}.sock", std::process::id()));
+    let core = ServeCore::new(1 << 30, "data");
+    let server = {
+        let sock = sock.clone();
+        std::thread::spawn(move || samplex_service::serve::server::serve(&sock, core))
+    };
+    // the listener needs a moment to bind; connect retries cover it
+    let stream = {
+        let mut tries = 0;
+        loop {
+            match UnixStream::connect(&sock) {
+                Ok(s) => break s,
+                Err(_) if tries < 100 => {
+                    tries += 1;
+                    std::thread::sleep(std::time::Duration::from_millis(10));
+                }
+                Err(e) => panic!("cannot connect to {}: {e}", sock.display()),
+            }
+        }
+    };
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let mut w = stream;
+    let mut line = String::new();
+    let mut request = |w: &mut UnixStream, reader: &mut BufReader<UnixStream>, req: &str| {
+        writeln!(w, "{req}").unwrap();
+        line.clear();
+        reader.read_line(&mut line).unwrap();
+        json::parse(line.trim()).unwrap_or_else(|e| panic!("bad response line {line:?}: {e}"))
+    };
+
+    let pong = request(&mut w, &mut reader, r#"{"op":"ping"}"#);
+    assert_eq!(pong.get("ok").unwrap().as_bool(), Some(true));
+
+    let submit = format!(
+        r#"{{"op":"submit","watch":true,"dataset":"{}","solver":"mbsgd","sampling":"ss","batch":100,"epochs":2,"seed":11,"reg_c":0.001,"paged":true,"page_kib":2,"storage":"ram"}}"#,
+        path.display()
+    );
+    let first = request(&mut w, &mut reader, &submit);
+    assert_eq!(first.get("ok").unwrap().as_bool(), Some(true), "{first:?}");
+    let id = first.get("id").unwrap().as_u64().unwrap();
+
+    // watch stream: exactly `epochs` epoch lines, then the end line
+    let mut epochs_seen = 0;
+    loop {
+        let mut l = String::new();
+        reader.read_line(&mut l).unwrap();
+        let v = json::parse(l.trim()).unwrap();
+        match v.get("event").and_then(|e| e.as_str()) {
+            Some("epoch") => {
+                epochs_seen += 1;
+                assert_eq!(v.get("id").unwrap().as_u64(), Some(id));
+                assert!(v.get("objective").unwrap().as_f64().is_some());
+                assert!(v.get("io").unwrap().get("bytes_requested").unwrap().as_u64().unwrap() > 0);
+            }
+            Some("end") => {
+                assert_eq!(v.get("state").unwrap().as_str(), Some("done"), "{l}");
+                assert!(v.get("final_objective").unwrap().as_f64().is_some());
+                break;
+            }
+            other => panic!("unexpected stream line {other:?}: {l}"),
+        }
+    }
+    assert_eq!(epochs_seen, 2, "one epoch event per epoch");
+
+    let status =
+        request(&mut w, &mut reader, &format!(r#"{{"op":"status","id":{id}}}"#));
+    assert_eq!(status.get("state").unwrap().as_str(), Some("done"));
+    assert_eq!(
+        status.get("io").unwrap().get("demand_faults").unwrap().as_u64(),
+        Some(status.get("io").unwrap().get("page_faults").unwrap().as_u64().unwrap()),
+        "no readahead: every fault is a demand fault"
+    );
+
+    let list = request(&mut w, &mut reader, r#"{"op":"list"}"#);
+    assert_eq!(list.get("jobs").unwrap().as_arr().unwrap().len(), 1);
+
+    let missing = request(&mut w, &mut reader, r#"{"op":"cancel","id":999}"#);
+    assert_eq!(missing.get("ok").unwrap().as_bool(), Some(false));
+
+    let bye = request(&mut w, &mut reader, r#"{"op":"shutdown"}"#);
+    assert_eq!(bye.get("ok").unwrap().as_bool(), Some(true));
+    server.join().unwrap().unwrap();
+    assert!(!sock.exists(), "socket file removed on clean shutdown");
+    std::fs::remove_file(&path).ok();
+}

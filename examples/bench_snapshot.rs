@@ -21,6 +21,11 @@
 //!   run CRC32-verified) vs a footer-stripped copy (verification off),
 //!   asserting the always-on checksum+retry plumbing costs ≤2% wall
 //!   MB/s (≤10% on the small CI profile, where wall times are tiny).
+//!   Plus a serve warm-cache arm: two identical tenants submitted to one
+//!   `ServeCore` in sequence — the warm tenant must report strictly
+//!   fewer demand faults than the cold one (pure page hits, zero bytes
+//!   read) with a bit-identical final objective, pricing the shared
+//!   multi-tenant data plane.
 //!
 //! Both are recorded baselines for future PRs, and printed as tables.
 //!
@@ -43,6 +48,7 @@ use samplex::math::simd;
 use samplex::runtime::pool;
 use samplex::sampling::{Sampler, SamplingKind};
 use samplex::solvers::SolverKind;
+use samplex_service::serve::{JobSpec, Phase, ServeCore};
 
 struct SweepTimes {
     /// Nanoseconds per row, full objective.
@@ -302,10 +308,12 @@ fn main() -> samplex::Result<()> {
 /// Out-of-core I/O snapshot: CS / SS / RS epochs through the paged store at
 /// budgets of 10% / 50% / 100% of the file size, each in two modes —
 /// demand paging and asynchronous readahead (a dedicated thread prefaults
-/// the deterministic schedule ahead of assembly). Writes `BENCH_io.json`
-/// and asserts the readahead arms report strictly fewer demand faults than
-/// their demand-paged twins, and that per-page checksum verification +
-/// retry plumbing cost ≤2% wall MB/s against a verification-off copy.
+/// the deterministic schedule ahead of assembly). Writes `BENCH_io.json`,
+/// asserts the readahead arms report strictly fewer demand faults than
+/// their demand-paged twins, that per-page checksum verification + retry
+/// plumbing cost ≤2% wall MB/s against a verification-off copy, and that
+/// a warm `samplex serve` tenant faults strictly less than the cold
+/// tenant that populated the shared store.
 fn io_snapshot(dense: &Dataset) -> samplex::Result<()> {
     let dir = std::env::temp_dir().join(format!("samplex_bench_io_{}", std::process::id()));
     std::fs::create_dir_all(&dir)?;
@@ -484,12 +492,90 @@ fn io_snapshot(dense: &Dataset) -> samplex::Result<()> {
          vs verification-off {off_mb:.1} MB/s (ratio {ratio:.3} < {floor:.2})"
     );
 
+    // Serve warm-cache arm: the multi-tenant product gate, measured end
+    // to end. One `ServeCore`, two identical sequential paged tenants on
+    // the same dataset: the cold tenant faults the whole file in; the
+    // warm tenant attaches to the shared store still resident and must
+    // report strictly fewer demand faults — pure page hits, zero bytes
+    // off disk. This prices exactly what `samplex serve` sells (many
+    // tenants, one warm cache), so a regression here means the shared
+    // data plane stopped sharing.
+    let core = ServeCore::new(file_bytes * 2 + (64 << 20), &dir.to_string_lossy());
+    let serve_spec = JobSpec {
+        dataset: path.to_string_lossy().into_owned(),
+        solver: SolverKind::Mbsgd,
+        sampling: SamplingKind::Cs,
+        batch,
+        epochs,
+        seed: 7,
+        reg_c: Some(1e-3),
+        paged: true,
+        memory_budget_mib: 0, // whole file resident — warmth must persist
+        page_kib: page_bytes / 1024,
+        ..JobSpec::default()
+    };
+    let mut serve_arms = Vec::new();
+    for arm_name in ["cold", "warm"] {
+        let id = core.submit(serve_spec.clone())?;
+        let status = core.wait(id).expect("serve job vanished");
+        assert_eq!(
+            status.phase,
+            Phase::Done,
+            "serve {arm_name} tenant failed: {:?}",
+            status.error
+        );
+        let result = core.result_of(id).expect("serve job kept no result");
+        serve_arms.push((arm_name, result.io, result.final_objective));
+    }
+    core.shutdown();
+    let (cold_io, warm_io) = (serve_arms[0].1, serve_arms[1].1);
+    println!(
+        "serve warm cache: cold {} demand faults / {} bytes read, \
+         warm {} demand faults / {} page hits / {} bytes read",
+        cold_io.demand_faults,
+        cold_io.bytes_read,
+        warm_io.demand_faults,
+        warm_io.page_hits,
+        warm_io.bytes_read
+    );
+    assert_eq!(
+        serve_arms[0].2.to_bits(),
+        serve_arms[1].2.to_bits(),
+        "warm tenant's trajectory diverged from the cold tenant's"
+    );
+    assert!(
+        warm_io.demand_faults < cold_io.demand_faults,
+        "warm serve tenant must fault strictly less than the cold one: \
+         {} !< {}",
+        warm_io.demand_faults,
+        cold_io.demand_faults
+    );
+    assert!(warm_io.page_hits > 0, "warm serve tenant never hit the shared cache");
+    assert_eq!(warm_io.bytes_read, 0, "warm serve tenant read bytes off disk");
+    let serve_json = format!(
+        concat!(
+            "  \"serve_warm_cache\": {{\n",
+            "    \"cold\": {{ \"demand_faults\": {}, \"page_faults\": {}, \"page_hits\": {}, \"bytes_read\": {} }},\n",
+            "    \"warm\": {{ \"demand_faults\": {}, \"page_faults\": {}, \"page_hits\": {}, \"bytes_read\": {} }}\n",
+            "  }},"
+        ),
+        cold_io.demand_faults,
+        cold_io.page_faults,
+        cold_io.page_hits,
+        cold_io.bytes_read,
+        warm_io.demand_faults,
+        warm_io.page_faults,
+        warm_io.page_hits,
+        warm_io.bytes_read,
+    );
+
     let json = format!(
-        "{{\n  \"bench\": \"paged_io\",\n  \"file_bytes\": {},\n  \"page_bytes\": {},\n  \"rows\": {},\n  \"batch\": {},\n  \"checksum_overhead\": {{\n    \"verified_mb_per_s\": {:.2},\n    \"off_mb_per_s\": {:.2},\n    \"ratio\": {:.4},\n    \"floor\": {:.2}\n  }},\n  \"arms\": [\n{}\n  ]\n}}\n",
+        "{{\n  \"bench\": \"paged_io\",\n  \"file_bytes\": {},\n  \"page_bytes\": {},\n  \"rows\": {},\n  \"batch\": {},\n{}\n  \"checksum_overhead\": {{\n    \"verified_mb_per_s\": {:.2},\n    \"off_mb_per_s\": {:.2},\n    \"ratio\": {:.4},\n    \"floor\": {:.2}\n  }},\n  \"arms\": [\n{}\n  ]\n}}\n",
         file_bytes,
         page_bytes,
         rows,
         batch,
+        serve_json,
         verified_mb,
         off_mb,
         ratio,

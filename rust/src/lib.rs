@@ -12,9 +12,34 @@
 //! of which fetch contiguous runs of rows, preserves convergence (Theorem 1)
 //! while cutting training time by 1.5×–6×.
 //!
+//! ## The workspace
+//!
+//! This crate is a **facade**: since the workspace split the implementation
+//! lives in three layered member crates, re-exported here at their
+//! historical single-crate paths so examples, benches, tests and downstream
+//! users compile unchanged:
+//!
+//! ```text
+//!   samplex-service   the `samplex` binary: CLI + `samplex serve` daemon
+//!        │                 (multi-tenant jobs over one shared data plane)
+//!   samplex (this)    facade: old `samplex::…` paths
+//!        │
+//!   samplex-compute   solvers/ backend/ runtime/ train/ config/ math::chunked
+//!        │
+//!   samplex-data      storage/ data/ pipeline/ sampling/ math kernels,
+//!        │            aligned, rng, error, testing
+//!   samplex-obs       stats (IoStats/AccessCost), metrics/, obs/ tracing
+//! ```
+//!
+//! Each member depends only on members below it; the observability structs
+//! sit at the bottom so every layer can report through them without cycles.
+//! `README.md` ("Architecture") and `INVARIANTS.md` map the machine-checked
+//! invariant rules (R1–R8, `tools/samplex-lint`) onto the members they bind
+//! to.
+//!
 //! ## Architecture (three layers, Python never on the training path)
 //!
-//! * **Layer 3 (this crate)** — the data-pipeline coordinator: a
+//! * **Layer 3 (this workspace)** — the data-pipeline coordinator: a
 //!   **layout-polymorphic data plane** ([`data::Dataset`]: row-major
 //!   [`data::DenseDataset`] for the paper's dense sets, CSR
 //!   [`data::CsrDataset`] for high-dimensional sparse ones, with LIBSVM
@@ -80,6 +105,12 @@
 //! `stall_s`) drop to zero for contiguous access at healthy budgets while
 //! trajectories stay bit-identical with readahead on or off.
 //!
+//! Since the service split, one warm page store can be **shared by many
+//! jobs**: `samplex serve` keys stores by dataset path, hands every job a
+//! per-job stats view ([`storage::PageStore::job_view`]) so shared totals
+//! and per-tenant deltas stay separately exact, and admits jobs against a
+//! global memory budget instead of letting tenants thrash one cache.
+//!
 //! ## Reproducibility and the compute plane
 //!
 //! Pooled reductions follow one rule — chunk geometry fixed by the data,
@@ -121,7 +152,7 @@
 //!
 //! The concurrency and determinism claims above are not just prose: the
 //! workspace ships `tools/samplex-lint`, a zero-dependency static checker
-//! run in CI (`cargo run -p samplex-lint -- rust/src`) that enforces
+//! run in CI (`cargo run -p samplex-lint -- --workspace .`) that enforces
 //!
 //! * **no-panic-plane** — no `panic!` / `unwrap()` / `expect(` /
 //!   `unreachable!` in the data plane (`data/`, `storage/`, `pipeline/`,
@@ -149,9 +180,12 @@
 //!   through the [`metrics::timer::monotonic_ns`] seam (or not at all),
 //!   so wall-clock can never silently leak into a deterministic plane.
 //!
-//! `INVARIANTS.md` at the repo root documents each rule, the escape hatch
-//! (a per-site `allow(rule) -- reason` annotation), and the Miri /
-//! ThreadSanitizer CI jobs that test the same invariants dynamically.
+//! The rules match on path suffixes (`storage/pagestore.rs` under *any*
+//! member), so they survived the crate split unchanged. `INVARIANTS.md`
+//! at the repo root documents each rule, which workspace member it binds
+//! to, the escape hatch (a per-site `allow(rule) -- reason` annotation),
+//! and the Miri / ThreadSanitizer CI jobs that test the same invariants
+//! dynamically.
 //!
 //! ## Observability (`samplex-trace`)
 //!
@@ -183,23 +217,13 @@
 //! println!("{}", report.summary());
 //! ```
 
-pub mod aligned;
-pub mod backend;
-pub mod bench_harness;
-pub mod config;
-pub mod data;
-pub mod error;
-pub mod math;
-pub mod metrics;
-pub mod obs;
-pub mod pipeline;
-pub mod rng;
-pub mod runtime;
-pub mod sampling;
-pub mod solvers;
-pub mod storage;
-pub mod testing;
-pub mod train;
+pub use samplex_compute::{
+    backend, bench_harness, config, math, runtime, solvers, train,
+};
+pub use samplex_data::{
+    aligned, data, error, pipeline, rng, sampling, storage, testing,
+};
+pub use samplex_obs::{metrics, obs, stats};
 
 pub use error::{Error, Result};
 

@@ -1002,6 +1002,84 @@ pub fn lint_paths(paths: &[PathBuf]) -> std::io::Result<Vec<Finding>> {
     Ok(lint_files(&sources))
 }
 
+/// Extract the `members = [...]` array from a workspace `Cargo.toml`.
+///
+/// Hand-rolled on purpose: the lint tool stays zero-dependency, and a
+/// workspace manifest's member list is a flat string array — full TOML
+/// is not needed. Handles multi-line arrays, `#` comments, and both
+/// quote styles cargo accepts for paths. Returns an empty vector when
+/// the manifest has no member array (the caller decides whether that is
+/// an error).
+pub fn parse_workspace_members(manifest: &str) -> Vec<String> {
+    let mut out = Vec::new();
+    let mut in_array = false;
+    for raw in manifest.lines() {
+        // strip line comments before looking at anything
+        let line = raw.split('#').next().unwrap_or("");
+        let mut rest: &str = line;
+        if !in_array {
+            let Some(pos) = line.find("members") else { continue };
+            let after = &line[pos + "members".len()..];
+            let Some(eq) = after.find('=') else { continue };
+            let Some(br) = after[eq..].find('[') else { continue };
+            rest = &after[eq + br + 1..];
+            in_array = true;
+        }
+        // collect quoted entries up to the closing bracket
+        let (body, closed) = match rest.find(']') {
+            Some(end) => (&rest[..end], true),
+            None => (rest, false),
+        };
+        let mut chars = body.char_indices();
+        while let Some((start, c)) = chars.next() {
+            if c != '"' && c != '\'' {
+                continue;
+            }
+            let tail = &body[start + 1..];
+            if let Some(len) = tail.find(c) {
+                out.push(tail[..len].to_string());
+                let close = start + 1 + len; // byte index of the closing quote
+                while let Some((i, _)) = chars.next() {
+                    if i >= close {
+                        break;
+                    }
+                }
+            }
+        }
+        if closed {
+            break;
+        }
+    }
+    out
+}
+
+/// Resolve the lintable source roots of the cargo workspace rooted at
+/// `root`: each member's `src/` directory, in manifest order.
+///
+/// Members without a `src/` directory are skipped silently (a member may
+/// be a pure manifest shim); a manifest with no member array at all is
+/// an error, because "lint the workspace" silently linting nothing is
+/// exactly the failure mode this function exists to prevent.
+pub fn workspace_member_src_dirs(root: &Path) -> std::io::Result<Vec<PathBuf>> {
+    let manifest = root.join("Cargo.toml");
+    let text = std::fs::read_to_string(&manifest)?;
+    let members = parse_workspace_members(&text);
+    if members.is_empty() {
+        return Err(std::io::Error::new(
+            std::io::ErrorKind::InvalidData,
+            format!("no `members = [...]` array in {}", manifest.display()),
+        ));
+    }
+    let mut dirs = Vec::new();
+    for m in &members {
+        let src = root.join(m).join("src");
+        if src.is_dir() {
+            dirs.push(src);
+        }
+    }
+    Ok(dirs)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -1069,6 +1147,168 @@ mod tests {
         assert!(!classify("rust/src/storage/pagestore.rs").clock_exempt);
         assert!(!classify("rust/src/solvers/sag.rs").clock_exempt);
         assert!(!classify("rust/src/obs.rs").clock_exempt, "file named obs.rs is not the dir");
+    }
+
+    #[test]
+    fn classify_survives_the_workspace_split() {
+        // rule families are keyed on path suffixes and directory segment
+        // names, never on a `rust/src` prefix — the same module must
+        // classify identically at its post-split `crates/<member>/src`
+        // home. One assertion per rule family, old home next to new.
+        for prefix in ["rust/src", "crates/samplex-data/src"] {
+            assert!(classify(&format!("{prefix}/data/paged.rs")).data_plane, "{prefix}");
+            assert!(classify(&format!("{prefix}/storage/pagestore.rs")).pagestore, "{prefix}");
+            assert!(classify(&format!("{prefix}/storage/reader.rs")).storage_io, "{prefix}");
+            assert!(!classify(&format!("{prefix}/storage/retry.rs")).storage_io, "{prefix}");
+            assert!(classify(&format!("{prefix}/math/simd/avx2.rs")).simd_home, "{prefix}");
+            assert!(classify(&format!("{prefix}/pipeline/prefetch.rs")).data_plane, "{prefix}");
+        }
+        for prefix in ["rust/src", "crates/samplex-compute/src"] {
+            let c = classify(&format!("{prefix}/math/chunked.rs"));
+            assert!(c.data_plane && c.determinism, "{prefix}");
+            assert!(classify(&format!("{prefix}/train/parallel.rs")).determinism, "{prefix}");
+            assert!(classify(&format!("{prefix}/backend/native.rs")).determinism, "{prefix}");
+            assert!(!classify(&format!("{prefix}/runtime/pool.rs")).data_plane, "{prefix}");
+        }
+        for prefix in ["rust/src", "crates/samplex-obs/src"] {
+            assert!(classify(&format!("{prefix}/metrics/timer.rs")).clock_exempt, "{prefix}");
+            assert!(classify(&format!("{prefix}/obs/trace.rs")).clock_exempt, "{prefix}");
+        }
+        // the service and facade crates are in no special family
+        let svc = classify("crates/samplex-service/src/serve/mod.rs");
+        assert!(!svc.data_plane && !svc.clock_exempt && !svc.storage_io);
+        assert!(!classify("rust/src/lib.rs").data_plane);
+    }
+
+    #[test]
+    fn moved_path_fixture_still_triggers_every_path_scoped_rule() {
+        // End-to-end regression for the workspace split: feed fixture
+        // sources under their *new* crates/ paths through the real lint
+        // pipeline and require the path-scoped rules (R1, R2, R3, R6,
+        // R7, R8) to fire exactly as they did under rust/src.
+        let pagestore_src = "fn read_page(f: &mut std::fs::File) {\n\
+                             \x20   let g = lock_recovering(&self.shards[0]);\n\
+                             \x20   f.read_exact(&mut buf).unwrap();\n\
+                             }\n";
+        let chunked_src = "fn fold() {\n\
+                           \x20   let m = std::collections::HashMap::new();\n\
+                           }\n";
+        let rogue_kernel_src = "#[target_feature(enable = \"avx2\")]\n\
+                                // SAFETY: fixture\n\
+                                unsafe fn dot_rogue(x: &[f32]) -> f32 { x[0] }\n";
+        let clock_src = "fn tick() {\n\
+                         \x20   let t = std::time::Instant::now();\n\
+                         }\n";
+        let findings = lint_files(&[
+            (
+                "crates/samplex-data/src/storage/pagestore.rs".to_string(),
+                pagestore_src.to_string(),
+            ),
+            (
+                "crates/samplex-compute/src/math/chunked.rs".to_string(),
+                chunked_src.to_string(),
+            ),
+            (
+                "crates/samplex-compute/src/solvers/sgd.rs".to_string(),
+                rogue_kernel_src.to_string(),
+            ),
+            (
+                "crates/samplex-service/src/serve/mod.rs".to_string(),
+                clock_src.to_string(),
+            ),
+        ]);
+        let hit = |file: &str, rule: &str| {
+            findings
+                .iter()
+                .any(|f| f.file == file && f.rule.name() == rule)
+        };
+        let ps = "crates/samplex-data/src/storage/pagestore.rs";
+        assert!(hit(ps, "no-panic-plane"), "R1 must survive the move: {findings:?}");
+        assert!(hit(ps, "lock-discipline"), "R2 must survive the move: {findings:?}");
+        assert!(hit(ps, "io-discipline"), "R7 must survive the move: {findings:?}");
+        assert!(
+            hit("crates/samplex-compute/src/math/chunked.rs", "determinism"),
+            "R3 must survive the move: {findings:?}"
+        );
+        assert!(
+            hit("crates/samplex-compute/src/solvers/sgd.rs", "simd-dispatch"),
+            "R6 must survive the move: {findings:?}"
+        );
+        assert!(
+            hit("crates/samplex-service/src/serve/mod.rs", "clock-discipline"),
+            "R8 must survive the move: {findings:?}"
+        );
+    }
+
+    #[test]
+    fn parse_workspace_members_handles_real_manifest_shapes() {
+        // multi-line array with comments and a trailing comma
+        let toml = "[workspace]\n\
+                    resolver = \"2\"\n\
+                    members = [\n\
+                    \x20   \"crates/samplex-obs\",  # tracing plane\n\
+                    \x20   \"crates/samplex-data\",\n\
+                    \x20   'rust',\n\
+                    \x20   \"tools/samplex-lint\",\n\
+                    ]\n";
+        assert_eq!(
+            parse_workspace_members(toml),
+            vec!["crates/samplex-obs", "crates/samplex-data", "rust", "tools/samplex-lint"]
+        );
+        // single-line array
+        assert_eq!(
+            parse_workspace_members("members = [\"a\", \"b/c\"]\n"),
+            vec!["a", "b/c"]
+        );
+        // no members array at all
+        assert!(parse_workspace_members("[package]\nname = \"x\"\n").is_empty());
+        // entries after the closing bracket are not collected
+        assert_eq!(
+            parse_workspace_members("members = [\"a\"]\nexclude = [\"zzz\"]\n"),
+            vec!["a"]
+        );
+    }
+
+    #[test]
+    fn workspace_discovery_walks_all_members() {
+        // fixture workspace on disk: two members, one with a violation in
+        // a data-plane module, one clean — lint_paths over the discovered
+        // src dirs must see both and flag exactly the violation
+        let root = std::env::temp_dir().join(format!("sxlint_ws_{}", std::process::id()));
+        let member_src = root.join("crates/fix-data/src/storage");
+        let facade_src = root.join("rust/src");
+        std::fs::create_dir_all(&member_src).unwrap();
+        std::fs::create_dir_all(&facade_src).unwrap();
+        std::fs::write(
+            root.join("Cargo.toml"),
+            "[workspace]\nmembers = [\n  \"crates/fix-data\",\n  \"rust\",\n  \"gone/member\",\n]\n",
+        )
+        .unwrap();
+        std::fs::write(
+            member_src.join("pagestore.rs"),
+            "fn f() { let v: Option<u32> = None; v.unwrap(); }\n",
+        )
+        .unwrap();
+        std::fs::write(facade_src.join("lib.rs"), "pub fn ok() {}\n").unwrap();
+
+        let dirs = workspace_member_src_dirs(&root).unwrap();
+        // the member without a src dir is skipped, the others found in order
+        assert_eq!(dirs.len(), 2);
+        assert!(dirs[0].ends_with("crates/fix-data/src"));
+        assert!(dirs[1].ends_with("rust/src"));
+
+        let findings = lint_paths(&dirs).unwrap();
+        assert_eq!(findings.len(), 1, "{findings:?}");
+        assert_eq!(findings[0].rule.name(), "no-panic-plane");
+        assert!(findings[0].file.ends_with("storage/pagestore.rs"));
+
+        // a root without a workspace manifest is a hard error, not a
+        // silent empty lint
+        let empty = root.join("rust");
+        std::fs::write(empty.join("Cargo.toml"), "[package]\nname = \"x\"\n").unwrap();
+        assert!(workspace_member_src_dirs(&empty).is_err());
+
+        let _ = std::fs::remove_dir_all(&root);
     }
 
     #[test]

@@ -1,4 +1,6 @@
-//! CLI entry point: `cargo run -p samplex-lint -- rust/src`.
+//! CLI entry point: `cargo run -p samplex-lint -- --workspace` lints every
+//! workspace member's `src/` tree; explicit paths are still accepted
+//! (`cargo run -p samplex-lint -- crates/samplex-data/src rust/src`).
 //!
 //! Prints one `file:line rule message` diagnostic per violation on
 //! stdout (machine-readable, sorted), a summary on stderr, and exits
@@ -11,6 +13,7 @@ fn main() -> ExitCode {
     let args: Vec<String> = std::env::args().skip(1).collect();
     if args.is_empty() || args.iter().any(|a| a == "-h" || a == "--help") {
         eprintln!("usage: samplex-lint <file-or-dir>...");
+        eprintln!("       samplex-lint --workspace [WORKSPACE_ROOT]");
         eprintln!(
             "rules: no-panic-plane lock-discipline determinism atomics-audit safety-comments \
              simd-dispatch io-discipline clock-discipline"
@@ -18,7 +21,29 @@ fn main() -> ExitCode {
         eprintln!("suppress with: // samplex-lint: allow(<rule>) -- <reason>");
         return ExitCode::from(2);
     }
-    let paths: Vec<PathBuf> = args.iter().map(PathBuf::from).collect();
+    let paths: Vec<PathBuf> = if args[0] == "--workspace" {
+        if args.len() > 2 {
+            eprintln!("samplex-lint: --workspace takes at most one root argument");
+            return ExitCode::from(2);
+        }
+        let root = PathBuf::from(args.get(1).map(|s| s.as_str()).unwrap_or("."));
+        match samplex_lint::workspace_member_src_dirs(&root) {
+            Ok(dirs) => {
+                eprintln!(
+                    "samplex-lint: linting {} workspace member src tree(s) under {}",
+                    dirs.len(),
+                    root.display()
+                );
+                dirs
+            }
+            Err(e) => {
+                eprintln!("samplex-lint: cannot resolve workspace at {}: {e}", root.display());
+                return ExitCode::from(2);
+            }
+        }
+    } else {
+        args.iter().map(PathBuf::from).collect()
+    };
     for p in &paths {
         if !p.exists() {
             eprintln!("samplex-lint: path not found: {}", p.display());
